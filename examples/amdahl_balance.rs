@@ -1,0 +1,44 @@
+//! §4: revisit Amdahl's law — how many Atom cores would balance a blade?
+//! Also runs the hypothetical N-core ablation the paper argues for.
+//!
+//! Run: `cargo run --release --example amdahl_balance`
+
+use amdahl_hadoop::conf::{ClusterPreset, HadoopConf};
+use amdahl_hadoop::report;
+use amdahl_hadoop::zones::{run_app, App, ZonesConfig};
+
+fn main() {
+    print!("{}", report::balance());
+    println!();
+    // Ablation: the same Neighbor Searching run on hypothetical blades
+    // with 2..8 Atom cores (§4: "an Amdahl blade needs four cores").
+    let conf = HadoopConf {
+        buffered_output: true,
+        direct_io_write: true,
+        reduce_slots: 2,
+        ..Default::default()
+    };
+    let zcfg = ZonesConfig {
+        seed: 42,
+        scale: 0.02,
+        theta_arcsec: 60.0,
+        block_theta_mult: 10.0,
+        partition_cells: 4,
+        kernel_every: usize::MAX,
+        kernels: None,
+    };
+    println!("cores  search θ=60\" (simulated s)   speedup vs 2-core");
+    let run_cores = |cores: usize| {
+        // Slots scale with cores, as a real deployment would tune them.
+        let c = HadoopConf { map_slots: 3 * cores / 2, reduce_slots: cores, ..conf.clone() };
+        let preset =
+            if cores == 2 { ClusterPreset::Amdahl } else { ClusterPreset::AmdahlNCore(cores) };
+        run_app(preset, &c, &zcfg, App::Search).total_seconds
+    };
+    let base = run_cores(2);
+    for cores in [2usize, 4, 6, 8] {
+        let t = if cores == 2 { base } else { run_cores(cores) };
+        println!("{cores:>5}  {t:>10.1}                 {:>5.2}x", base / t);
+    }
+    println!("\n(diminishing returns past ~4 cores = the paper's conclusion)");
+}

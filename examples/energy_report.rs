@@ -1,0 +1,25 @@
+//! §3.6 energy comparison: run Table 3 and derive the efficiency ratios.
+//!
+//! Run: `cargo run --release --example energy_report [-- --scale 0.06]`
+
+use amdahl_hadoop::conf::cli::Args;
+use amdahl_hadoop::report;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let scale = args.get_f64("scale", 0.06)?;
+    let t3 = report::table3(42, scale, None);
+    print!("{}", report::render_table3(&t3));
+    print!("{}", report::render_energy(&report::energy(&t3)));
+    for (label, o) in [("Amdahl search 30\"", &t3.outcomes_amdahl[1]), ("OCC search 30\"", &t3.outcomes_occ[0])] {
+        println!(
+            "{label}: {:.0}s, {} nodes, mean cpu util {:.0}%, energy {:.0} kJ (scaled model {:.0} kJ)",
+            o.total_seconds,
+            o.energy.nodes,
+            o.energy.mean_cpu_utilization * 100.0,
+            o.energy.total_joules / 1e3,
+            o.energy.scaled_joules / 1e3
+        );
+    }
+    Ok(())
+}

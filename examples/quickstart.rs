@@ -1,0 +1,29 @@
+//! Quickstart: simulate one Amdahl blade's disk + network microbenchmarks
+//! (the paper's §3.2) and one small HDFS write — in a few lines.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use amdahl_hadoop::conf::HadoopConf;
+use amdahl_hadoop::hdfs::testdfsio;
+use amdahl_hadoop::hw::MIB;
+use amdahl_hadoop::report;
+
+fn main() {
+    // Fig 1: why direct I/O matters on an Atom.
+    println!("{}", report::render_fig1(&report::fig1(42)));
+    // Table 2: why the network eats the CPU.
+    println!("{}", report::render_table2(&report::table2(42)));
+    // A taste of HDFS: 2 writers/node, 256 MB each, replication 3.
+    let conf = HadoopConf::default();
+    let r = testdfsio::write_test(42, 2, 256.0 * MIB, &conf);
+    println!(
+        "HDFS write (r=3, buffered): {:.1} MB/s per node, makespan {:.1}s",
+        r.per_node_mbps, r.makespan
+    );
+    let direct = HadoopConf { direct_io_write: true, ..conf };
+    let r = testdfsio::write_test(42, 2, 256.0 * MIB, &direct);
+    println!(
+        "HDFS write (r=3, direct):   {:.1} MB/s per node, makespan {:.1}s",
+        r.per_node_mbps, r.makespan
+    );
+}

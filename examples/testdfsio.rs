@@ -1,0 +1,17 @@
+//! TestDFSIO walkthrough: the paper's Fig 2 experiment at full size
+//! (3 GB per mapper) on all three hardware configurations.
+//!
+//! Run: `cargo run --release --example testdfsio [-- --gb 3]`
+
+use amdahl_hadoop::conf::{cli::Args, HadoopConf};
+use amdahl_hadoop::hw::MIB;
+use amdahl_hadoop::report;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let gb = args.get_f64("gb", 3.0)?;
+    let bytes = gb * 1024.0 * MIB;
+    println!("{}", report::render_fig2(&report::fig2a(42, bytes), true));
+    println!("{}", report::render_fig2(&report::fig2b(42, bytes), false));
+    Ok(())
+}

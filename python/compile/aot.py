@@ -1,0 +1,87 @@
+"""AOT lowering: JAX/Pallas → HLO text artifacts for the Rust runtime.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (from python/).
+Produces one artifact per (entry point, size variant) plus manifest.txt.
+Python never runs again after this; the Rust binary is self-contained.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Block-size variants compiled ahead of time. The Rust runtime picks the
+# smallest variant that fits and pads. TILE=128 divides all of them.
+SIZE_VARIANTS = (256, 1024, 4096)
+# θ-bins for the statistics kernel (paper: 1″..60″).
+HIST_BINS = 60
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_pair_count(n: int) -> str:
+    spec = lambda *shape_dtype: jax.ShapeDtypeStruct(*shape_dtype)
+    lowered = jax.jit(model.pair_count_entry).lower(
+        spec((n, 2), jnp.float32),
+        spec((n, 2), jnp.float32),
+        spec((1,), jnp.int32),
+        spec((1,), jnp.int32),
+        spec((1,), jnp.float32),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_pair_histogram(n: int, k: int) -> str:
+    spec = lambda *shape_dtype: jax.ShapeDtypeStruct(*shape_dtype)
+    lowered = jax.jit(model.pair_histogram_entry).lower(
+        spec((n, 2), jnp.float32),
+        spec((n, 2), jnp.float32),
+        spec((1,), jnp.int32),
+        spec((1,), jnp.int32),
+        spec((k,), jnp.float32),
+    )
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = []
+    for n in SIZE_VARIANTS:
+        path = os.path.join(args.out_dir, f"pair_count_{n}.hlo.txt")
+        text = lower_pair_count(n)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"pair_count {n} {os.path.basename(path)}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+        path = os.path.join(args.out_dir, f"pair_hist_{n}_{HIST_BINS}.hlo.txt")
+        text = lower_pair_histogram(n, HIST_BINS)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"pair_hist {n} {os.path.basename(path)}")
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote manifest with {len(manifest)} entries")
+
+
+if __name__ == "__main__":
+    main()

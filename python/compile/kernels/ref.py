@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Everything here is straight-line jax.numpy with no Pallas, no tiling, no
+masks-by-iota — the simplest possible statement of the math, used by
+pytest/hypothesis to check the kernels bit-for-bit (integer outputs, so
+``assert_array_equal`` applies; the f32 dot products are computed the
+same way on both sides).
+"""
+
+import jax.numpy as jnp
+
+
+def _sqdist(x, y):
+    return ((x[:, None, :] - y[None, :, :]) ** 2).sum(-1)
+
+
+def pair_count_ref(x, y, nx, ny, theta_sq):
+    """Reference for ``kernels.pairs.pair_count``."""
+    d2 = _sqdist(x, y)
+    rows = jnp.arange(x.shape[0])[:, None] < nx[0]
+    cols = jnp.arange(y.shape[0])[None, :] < ny[0]
+    hit = rows & cols & (d2 <= theta_sq[0])
+    return jnp.sum(hit, axis=1, dtype=jnp.int32)
+
+
+def pair_histogram_ref(x, y, nx, ny, theta_sqs):
+    """Reference for ``kernels.pairs.pair_histogram``."""
+    d2 = _sqdist(x, y)
+    rows = jnp.arange(x.shape[0])[:, None] < nx[0]
+    cols = jnp.arange(y.shape[0])[None, :] < ny[0]
+    ok = rows & cols
+    return jnp.array(
+        [jnp.sum(ok & (d2 <= t), dtype=jnp.int32) for t in theta_sqs],
+        dtype=jnp.int32,
+    )

@@ -1,0 +1,32 @@
+"""Layer-2 JAX model: the Zones reducer's compute graph.
+
+The reducer processes one zone block against itself and each neighboring
+block. The exported entry points wrap the Layer-1 Pallas kernels
+(``kernels.pairs``) in the fixed-shape signatures the Rust runtime loads:
+
+* ``pair_count_entry`` — per-row neighbor counts + total, one (X, Y)
+  block pair, one θ (Neighbor Searching).
+* ``pair_histogram_entry`` — cumulative counts over K θ-bins (Neighbor
+  Statistics; the paper uses θ = 1″..60″, K = 60).
+
+Shapes are static per artifact (PJRT AOT requirement); the Rust side
+pads blocks to the nearest compiled variant and passes true counts in
+``nx``/``ny``. All outputs are wrapped in a tuple (``return_tuple=True``
+at lowering) so the Rust loader can unwrap uniformly.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import pairs
+
+
+def pair_count_entry(x, y, nx, ny, theta_sq):
+    """(N,2),(M,2),(1,)i32,(1,)i32,(1,)f32 → ((N,)i32 rows, (1,)i32 total)."""
+    rows = pairs.pair_count(x, y, nx, ny, theta_sq)
+    total = jnp.sum(rows, dtype=jnp.int32)[None]
+    return rows, total
+
+
+def pair_histogram_entry(x, y, nx, ny, theta_sqs):
+    """(N,2),(M,2),(1,)i32,(1,)i32,(K,)f32 → ((K,)i32 cumulative counts,)."""
+    return (pairs.pair_histogram(x, y, nx, ny, theta_sqs),)

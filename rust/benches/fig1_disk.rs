@@ -1,0 +1,10 @@
+//! Bench: regenerate the paper's Fig 1 (disk I/O throughput + CPU).
+use amdahl_hadoop::{benchkit, report};
+
+fn main() {
+    let mut rows = Vec::new();
+    benchkit::bench("fig1: 12 disk microbenchmarks (sim)", 1, 5, || {
+        rows = report::fig1(42);
+    });
+    print!("{}", report::render_fig1(&rows));
+}

@@ -1,0 +1,17 @@
+//! Bench: regenerate the paper's Fig 2 (TestDFSIO, 3 GB per mapper).
+use amdahl_hadoop::hw::MIB;
+use amdahl_hadoop::{benchkit, report};
+
+fn main() {
+    let bytes = 3.0 * 1024.0 * MIB; // the paper's 3 GB per mapper
+    let mut wa = Vec::new();
+    benchkit::bench("fig2a: 18 TestDFSIO write runs (sim)", 0, 3, || {
+        wa = report::fig2a(42, bytes);
+    });
+    print!("{}", report::render_fig2(&wa, true));
+    let mut rb = Vec::new();
+    benchkit::bench("fig2b: 18 TestDFSIO read runs (sim)", 0, 3, || {
+        rb = report::fig2b(42, bytes);
+    });
+    print!("{}", report::render_fig2(&rb, false));
+}

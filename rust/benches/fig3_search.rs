@@ -1,0 +1,10 @@
+//! Bench: regenerate the paper's Fig 3 (Neighbor Searching improvements).
+use amdahl_hadoop::{benchkit, report};
+
+fn main() {
+    let mut rows = Vec::new();
+    benchkit::bench("fig3: 10 neighbor-search runs (sim)", 0, 3, || {
+        rows = report::fig3(42, 0.02);
+    });
+    print!("{}", report::render_fig3(&rows));
+}

@@ -1,0 +1,39 @@
+//! Bench: the simulation engine itself (events/second) — the §Perf
+//! hot-path metric for Layer 3.
+use amdahl_hadoop::sim::engine::shared;
+use amdahl_hadoop::sim::{Engine, FlowSpec};
+use amdahl_hadoop::{benchkit, conf::HadoopConf, hdfs::testdfsio, hw::MIB};
+
+fn main() {
+    // Raw engine throughput: many contending flows on shared resources.
+    let events = shared(0u64);
+    let ev = events.clone();
+    let mean = benchkit::bench("sim_core: 2k flows on 32 resources", 1, 5, move || {
+        let mut e = Engine::new(7);
+        let c = amdahl_hadoop::sim::ResourceId::index; // silence unused-import styles
+        let _ = c;
+        let res: Vec<_> = (0..32).map(|i| e.add_resource(&format!("r{i}"), 100.0)).collect();
+        let cls = e.class("x");
+        for i in 0..2000u64 {
+            let r1 = res[(i % 32) as usize];
+            let r2 = res[((i * 7 + 3) % 32) as usize];
+            let sz = 10.0 + (i % 17) as f64;
+            e.after(i as f64 * 0.01, move |e| {
+                e.start_flow(
+                    FlowSpec::new(sz, "f").demand(r1, 1.0, cls).demand(r2, 0.5, cls),
+                    |_| {},
+                );
+            });
+        }
+        e.run();
+        *ev.borrow_mut() = e.events_processed();
+    });
+    let n = *events.borrow();
+    println!("  {} events -> {:.0} events/s", n, n as f64 / mean);
+
+    // End-to-end scenario throughput: a full TestDFSIO write round.
+    benchkit::bench("sim_core: TestDFSIO write 8x2x256MB", 0, 5, || {
+        let conf = HadoopConf::default();
+        let _ = testdfsio::write_test(3, 2, 256.0 * MIB, &conf);
+    });
+}

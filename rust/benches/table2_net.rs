@@ -1,0 +1,10 @@
+//! Bench: regenerate the paper's Table 2 (network throughput + CPU).
+use amdahl_hadoop::{benchkit, report};
+
+fn main() {
+    let mut rows = Vec::new();
+    benchkit::bench("table2: local + remote TCP (sim)", 1, 5, || {
+        rows = report::table2(42);
+    });
+    print!("{}", report::render_table2(&rows));
+}

@@ -1,0 +1,14 @@
+//! Bench: regenerate the paper's Table 3 + §3.6 energy ratios.
+use amdahl_hadoop::{benchkit, report};
+
+fn main() {
+    let mut t3 = None;
+    benchkit::bench("table3: 7 end-to-end app runs (sim)", 0, 3, || {
+        t3 = Some(report::table3(42, 0.06, None));
+    });
+    let t3 = t3.unwrap();
+    print!("{}", report::render_table3(&t3));
+    print!("{}", report::render_energy(&report::energy(&t3)));
+    print!("{}", report::render_table4(&report::table4(42, 0.06)));
+    print!("{}", report::balance());
+}

@@ -1,0 +1,53 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! `harness = false` benches call [`bench`] with a closure; we warm up,
+//! sample N times, and print mean / median / stddev in a criterion-like
+//! format so `cargo bench` output is comparable run to run.
+
+use std::time::Instant;
+
+/// Run `f` `samples` times after `warmup` runs; print timing stats.
+/// Returns the mean seconds per iteration.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.total_cmp(b));
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let median = times[times.len() / 2];
+    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / times.len() as f64;
+    println!(
+        "{name:<44} mean {:>10}  median {:>10}  sd {:>9}  (n={samples})",
+        fmt(mean),
+        fmt(median),
+        fmt(var.sqrt())
+    );
+    mean
+}
+
+fn fmt(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn bench_returns_mean() {
+        let m = super::bench("noop", 1, 5, || {});
+        assert!(m >= 0.0 && m < 0.1);
+    }
+}

@@ -1,0 +1,170 @@
+//! Cluster assembly: turn [`NodeSpec`]s into engine resources and expose
+//! the primitive I/O operations (local file read/write, TCP streams) that
+//! the HDFS and MapReduce layers compose into protocols.
+
+pub mod ops;
+
+use crate::hw::{DiskKind, NodeSpec};
+use crate::sim::{Engine, ResourceId};
+
+/// Index of a node within a cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub usize);
+
+/// One instantiated node: its spec plus the engine resources it owns.
+#[derive(Debug)]
+pub struct Node {
+    pub spec: NodeSpec,
+    /// CPU run queue; capacity in core-units ([`crate::hw::CpuSpec::capacity`]).
+    pub cpu: ResourceId,
+    /// Data disk, normalized: capacity 1.0 = the full device; a byte of
+    /// read demands `1/read_bps`, a byte of write `1/write_bps`, so mixed
+    /// workloads share the spindle correctly.
+    pub disk: ResourceId,
+    /// NIC transmit direction, bytes/s payload.
+    pub nic_tx: ResourceId,
+    /// NIC receive direction, bytes/s payload.
+    pub nic_rx: ResourceId,
+    /// Memory-bus copy capacity, bytes/s.
+    pub membus: ResourceId,
+    /// Live sequential read streams on the disk (drives the HDD
+    /// seek-efficiency capacity adjustment).
+    pub disk_read_streams: usize,
+    /// Live sequential write streams on the disk.
+    pub disk_write_streams: usize,
+}
+
+/// A set of nodes wired into one engine.
+#[derive(Debug)]
+pub struct Cluster {
+    pub nodes: Vec<Node>,
+}
+
+impl Cluster {
+    /// Instantiate `n` identical nodes.
+    pub fn build(engine: &mut Engine, spec: &NodeSpec, n: usize) -> Cluster {
+        let mut nodes = Vec::with_capacity(n);
+        for i in 0..n {
+            let cpu = engine.add_resource(&format!("n{i}.cpu"), spec.cpu.capacity);
+            let disk = engine.add_resource(&format!("n{i}.disk"), 1.0);
+            let nic_tx = engine.add_resource(&format!("n{i}.tx"), spec.net.nic_bps);
+            let nic_rx = engine.add_resource(&format!("n{i}.rx"), spec.net.nic_bps);
+            let membus = engine.add_resource(&format!("n{i}.membus"), spec.net.membus_copy_bps);
+            nodes.push(Node {
+                spec: spec.clone(),
+                cpu,
+                disk,
+                nic_tx,
+                nic_rx,
+                membus,
+                disk_read_streams: 0,
+                disk_write_streams: 0,
+            });
+        }
+        Cluster { nodes }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.0]
+    }
+
+    /// Register the start of a sequential disk stream on `node` and apply
+    /// the HDD concurrency-efficiency capacity adjustment (paper §3.3 /
+    /// Fig 2(b): single-HDD read throughput declines with concurrent
+    /// mappers because of seeks).
+    pub fn disk_stream_start(&mut self, engine: &mut Engine, node: NodeId, read: bool) {
+        let n = &mut self.nodes[node.0];
+        if read {
+            n.disk_read_streams += 1;
+        } else {
+            n.disk_write_streams += 1;
+        }
+        let eff = n.spec.data_disk.capacity_eff(n.disk_read_streams, n.disk_write_streams);
+        engine.set_capacity(n.disk, eff);
+    }
+
+    /// Register the end of a disk stream (inverse of
+    /// [`Cluster::disk_stream_start`]).
+    pub fn disk_stream_end(&mut self, engine: &mut Engine, node: NodeId, read: bool) {
+        let n = &mut self.nodes[node.0];
+        if read {
+            assert!(n.disk_read_streams > 0, "unbalanced disk_stream_end (read)");
+            n.disk_read_streams -= 1;
+        } else {
+            assert!(n.disk_write_streams > 0, "unbalanced disk_stream_end (write)");
+            n.disk_write_streams -= 1;
+        }
+        let eff = n.spec.data_disk.capacity_eff(n.disk_read_streams, n.disk_write_streams);
+        engine.set_capacity(n.disk, eff);
+    }
+
+    /// Swap every node's data disk (Fig 1 / Fig 2 iterate hardware
+    /// configurations on the same cluster).
+    pub fn set_data_disk(&mut self, kind: DiskKind) {
+        for n in &mut self.nodes {
+            n.spec.data_disk = crate::hw::disk::spec_for(kind);
+        }
+    }
+
+    /// Mean CPU utilization of a node over the whole run, as a fraction of
+    /// one core (the paper's reporting convention).
+    pub fn cpu_core_utilization(&self, engine: &Engine, node: NodeId) -> f64 {
+        let r = engine.resource(self.nodes[node.0].cpu);
+        if r.capacity_integral <= 0.0 {
+            return 0.0;
+        }
+        // busy core-seconds / elapsed seconds = busy cores on average.
+        r.busy_integral / (r.capacity_integral / r.capacity)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::{amdahl_blade, DiskKind};
+
+    #[test]
+    fn build_creates_resources() {
+        let mut e = Engine::new(1);
+        let spec = amdahl_blade(DiskKind::Raid0);
+        let c = Cluster::build(&mut e, &spec, 3);
+        assert_eq!(c.len(), 3);
+        assert!((e.resource(c.node(NodeId(0)).cpu).capacity - 2.5).abs() < 1e-12);
+        assert!((e.resource(c.node(NodeId(2)).disk).capacity - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disk_stream_accounting_adjusts_capacity() {
+        let mut e = Engine::new(1);
+        let spec = amdahl_blade(DiskKind::Hdd); // read eff [1.0, 0.62, 0.45]
+        let mut c = Cluster::build(&mut e, &spec, 1);
+        let d = c.node(NodeId(0)).disk;
+        c.disk_stream_start(&mut e, NodeId(0), true);
+        assert!((e.resource(d).capacity - 1.0).abs() < 1e-12);
+        c.disk_stream_start(&mut e, NodeId(0), true);
+        assert!((e.resource(d).capacity - 0.62).abs() < 1e-12);
+        c.disk_stream_start(&mut e, NodeId(0), true);
+        assert!((e.resource(d).capacity - 0.45).abs() < 1e-12);
+        c.disk_stream_end(&mut e, NodeId(0), true);
+        c.disk_stream_end(&mut e, NodeId(0), true);
+        assert!((e.resource(d).capacity - 1.0).abs() < 1e-12);
+        c.disk_stream_end(&mut e, NodeId(0), true);
+    }
+
+    #[test]
+    #[should_panic]
+    fn unbalanced_stream_end_panics() {
+        let mut e = Engine::new(1);
+        let spec = amdahl_blade(DiskKind::Hdd);
+        let mut c = Cluster::build(&mut e, &spec, 1);
+        c.disk_stream_end(&mut e, NodeId(0), true);
+    }
+}

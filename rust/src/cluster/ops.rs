@@ -1,0 +1,287 @@
+//! Primitive I/O operations as flow builders.
+//!
+//! These encode the microbenchmark semantics of paper §3.2 (Fig 1 and
+//! Table 2); the HDFS layer composes them into protocol pipelines.
+//!
+//! Usage-class naming convention: `"<task>:<op>"`, e.g.
+//! `"hdfs-write:flush"`, `"mapper:net-recv"`. The `amdahl` module
+//! aggregates CPU-seconds by `<task>` prefix for Table 4; the `report`
+//! module reads individual `<op>` components for Fig 1's CPU breakdown.
+
+use super::{Cluster, NodeId};
+use crate::sim::{Engine, FlowSpec, SerialStage};
+
+/// Local file write of `bytes` on `node`'s data disk (Fig 1(c)/(d)).
+///
+/// Buffered path: user copy into the page cache (single-threaded, caps at
+/// one core) plus the kernel flush thread (its own thread, also capped at
+/// one core — it is the bottleneck on RAID0, which is exactly Fig 1's
+/// direct-I/O headroom). Direct path: one large request to the driver.
+pub fn file_write(
+    engine: &mut Engine,
+    cluster: &Cluster,
+    node: NodeId,
+    bytes: f64,
+    direct: bool,
+    task: &str,
+) -> FlowSpec {
+    let n = cluster.node(node);
+    let costs = &n.spec.cpu.costs;
+    let write_bps = n.spec.data_disk.write_bps;
+    if direct {
+        let c_user = engine.class(&format!("{task}:write-user"));
+        FlowSpec::new(bytes, format!("{task}:direct-write@n{}", node.0))
+            .demand(n.disk, 1.0 / write_bps, c_user)
+            .demand(n.cpu, costs.direct_write, c_user)
+            .cap(1.0 / costs.direct_write) // single writer thread
+    } else {
+        let c_user = engine.class(&format!("{task}:write-user"));
+        let c_flush = engine.class(&format!("{task}:flush"));
+        let c_copy = engine.class(&format!("{task}:memcpy"));
+        FlowSpec::new(bytes, format!("{task}:buffered-write@n{}", node.0))
+            .demand(n.disk, 1.0 / write_bps, c_user)
+            .demand(n.cpu, costs.buffered_write_user, c_user)
+            .demand(n.cpu, costs.buffered_write_flush, c_flush)
+            .demand(n.membus, 1.0, c_copy)
+            // writer thread and flush thread are each single threads:
+            .cap(1.0 / costs.buffered_write_user)
+            .cap(1.0 / costs.buffered_write_flush)
+    }
+}
+
+/// Local file read of `bytes` on `node`'s data disk (Fig 1(a)/(b)).
+pub fn file_read(
+    engine: &mut Engine,
+    cluster: &Cluster,
+    node: NodeId,
+    bytes: f64,
+    direct: bool,
+    task: &str,
+) -> FlowSpec {
+    let n = cluster.node(node);
+    let costs = &n.spec.cpu.costs;
+    let read_bps = n.spec.data_disk.read_bps;
+    let c_user = engine.class(&format!("{task}:read-user"));
+    let c_copy = engine.class(&format!("{task}:memcpy"));
+    let cost = if direct { costs.direct_read } else { costs.buffered_read };
+    let mut f = FlowSpec::new(bytes, format!("{task}:read@n{}", node.0))
+        .demand(n.disk, 1.0 / read_bps, c_user)
+        .demand(n.cpu, cost, c_user)
+        .cap(1.0 / cost);
+    if !direct {
+        f = f.demand(n.membus, 1.0, c_copy);
+    }
+    f
+}
+
+/// One TCP stream from `src` to `dst` (different nodes): Table 2 "remote".
+pub fn tcp_remote(
+    engine: &mut Engine,
+    cluster: &Cluster,
+    src: NodeId,
+    dst: NodeId,
+    bytes: f64,
+    task: &str,
+) -> FlowSpec {
+    assert_ne!(src, dst, "use tcp_local for same-node streams");
+    let s = cluster.node(src);
+    let d = cluster.node(dst);
+    let c_send = engine.class(&format!("{task}:net-send"));
+    let c_recv = engine.class(&format!("{task}:net-recv"));
+    FlowSpec::new(bytes, format!("{task}:tcp n{}->n{}", src.0, dst.0))
+        .demand(s.nic_tx, 1.0, c_send)
+        .demand(d.nic_rx, 1.0, c_recv)
+        .demand(s.cpu, s.spec.cpu.costs.net_send_remote, c_send)
+        .demand(d.cpu, d.spec.cpu.costs.net_recv_remote, c_recv)
+        // sender and receiver are each one thread:
+        .cap(1.0 / s.spec.cpu.costs.net_send_remote)
+        .cap(1.0 / d.spec.cpu.costs.net_recv_remote)
+}
+
+/// Loopback TCP between two processes on `node`: Table 2 "local".
+/// Three memory copies per byte (§3.2), CPU-heavy on both sides.
+pub fn tcp_local(
+    engine: &mut Engine,
+    cluster: &Cluster,
+    node: NodeId,
+    bytes: f64,
+    task: &str,
+) -> FlowSpec {
+    let n = cluster.node(node);
+    let c_send = engine.class(&format!("{task}:net-send"));
+    let c_recv = engine.class(&format!("{task}:net-recv"));
+    let c_copy = engine.class(&format!("{task}:memcpy"));
+    FlowSpec::new(bytes, format!("{task}:loopback@n{}", node.0))
+        .demand(n.membus, n.spec.net.loopback_copies, c_copy)
+        .demand(n.cpu, n.spec.cpu.costs.net_send_local, c_send)
+        .demand(n.cpu, n.spec.cpu.costs.net_recv_local, c_recv)
+        .cap(1.0 / n.spec.cpu.costs.net_send_local)
+        .cap(1.0 / n.spec.cpu.costs.net_recv_local)
+}
+
+/// Pure compute of `core_seconds` on `node`, single-threaded.
+pub fn compute(
+    engine: &mut Engine,
+    cluster: &Cluster,
+    node: NodeId,
+    core_seconds: f64,
+    task: &str,
+    op: &str,
+) -> FlowSpec {
+    let n = cluster.node(node);
+    let c = engine.class(&format!("{task}:{op}"));
+    // total = core_seconds, demand 1 core per unit → rate ≤ 1 unit/s.
+    FlowSpec::new(core_seconds.max(1e-12), format!("{task}:{op}@n{}", node.0))
+        .demand(n.cpu, 1.0, c)
+        .cap(1.0)
+}
+
+/// The HDFS v0.20 *read-and-send* path on a DataNode: disk read and socket
+/// send are serialized, not pipelined (paper §3.3 — this is why local
+/// reads beat remote reads). `dst == src` means the client is local
+/// (loopback socket); otherwise the stream crosses the wire.
+pub fn datanode_send(
+    engine: &mut Engine,
+    cluster: &Cluster,
+    src: NodeId,
+    dst: NodeId,
+    bytes: f64,
+    task: &str,
+) -> FlowSpec {
+    let n = cluster.node(src);
+    let costs = n.spec.cpu.costs.clone();
+    let read_bps = n.spec.data_disk.read_bps;
+    let c_read = engine.class(&format!("{task}:read-user"));
+    let c_send = engine.class(&format!("{task}:net-send"));
+    let c_recv = engine.class(&format!("{task}:net-recv"));
+    let c_copy = engine.class(&format!("{task}:memcpy"));
+    let disk_stage = SerialStage(0);
+    let net_stage = SerialStage(1);
+    let mut f = FlowSpec::new(bytes, format!("{task}:dn-send n{}->n{}", src.0, dst.0))
+        // Stage 0: read the packet from disk (buffered).
+        .demand_staged(n.disk, 1.0 / read_bps, c_read, disk_stage)
+        .demand(n.cpu, costs.buffered_read, c_read)
+        .demand(n.membus, 1.0, c_copy);
+    if src == dst {
+        f = f
+            .demand_staged(n.membus, n.spec.net.loopback_copies, c_copy, net_stage)
+            .demand(n.cpu, costs.net_send_local, c_send)
+            .demand(n.cpu, costs.net_recv_local, c_recv)
+            .cap(1.0 / (costs.buffered_read + costs.net_send_local));
+    } else {
+        let d = cluster.node(dst);
+        f = f
+            .demand_staged(n.nic_tx, 1.0, c_send, net_stage)
+            .demand(d.nic_rx, 1.0, c_recv)
+            .demand(n.cpu, costs.net_send_remote, c_send)
+            .demand(d.cpu, d.spec.cpu.costs.net_recv_remote, c_recv)
+            .cap(1.0 / (costs.buffered_read + costs.net_send_remote))
+            .cap(1.0 / d.spec.cpu.costs.net_recv_remote);
+    }
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::{amdahl_blade, DiskKind, MIB};
+    use crate::sim::engine::shared;
+
+    fn setup(disk: DiskKind, n: usize) -> (Engine, Cluster) {
+        let mut e = Engine::new(7);
+        let c = Cluster::build(&mut e, &amdahl_blade(disk), n);
+        (e, c)
+    }
+
+    /// Run one flow to completion, return (duration, MB/s).
+    fn run_flow(e: &mut Engine, spec: FlowSpec, bytes: f64) -> (f64, f64) {
+        let t = shared(0.0f64);
+        let tt = t.clone();
+        e.start_flow(spec, move |e| *tt.borrow_mut() = e.now());
+        e.run();
+        let dur = *t.borrow();
+        (dur, bytes / dur / MIB)
+    }
+
+    #[test]
+    fn fig1_raid0_buffered_write_is_flush_bound() {
+        let (mut e, c) = setup(DiskKind::Raid0, 1);
+        let bytes = 64.0 * MIB;
+        let spec = file_write(&mut e, &c, NodeId(0), bytes, false, "bench");
+        let (_, mbps) = run_flow(&mut e, spec, bytes);
+        // Flush cap = 1/5.7ns ≈ 167 MB/s < media 272 MB/s.
+        assert!(mbps < 180.0 && mbps > 150.0, "buffered RAID0 write {mbps} MB/s");
+    }
+
+    #[test]
+    fn fig1_raid0_direct_write_hits_media_rate() {
+        let (mut e, c) = setup(DiskKind::Raid0, 1);
+        let bytes = 64.0 * MIB;
+        let spec = file_write(&mut e, &c, NodeId(0), bytes, true, "bench");
+        let (_, mbps) = run_flow(&mut e, spec, bytes);
+        assert!((mbps - 272.0).abs() < 5.0, "direct RAID0 write {mbps} MB/s");
+    }
+
+    #[test]
+    fn fig1_direct_read_no_improvement() {
+        let (mut e, c) = setup(DiskKind::Raid0, 1);
+        let bytes = 64.0 * MIB;
+        let s1 = file_read(&mut e, &c, NodeId(0), bytes, false, "bench");
+        let (_, buffered) = run_flow(&mut e, s1, bytes);
+        let (mut e2, c2) = setup(DiskKind::Raid0, 1);
+        let s2 = file_read(&mut e2, &c2, NodeId(0), bytes, true, "bench");
+        let (_, direct) = run_flow(&mut e2, s2, bytes);
+        assert!((buffered - direct).abs() / buffered < 0.02);
+    }
+
+    #[test]
+    fn table2_remote_throughput_and_cpu() {
+        let (mut e, c) = setup(DiskKind::Raid0, 2);
+        let bytes = 1024.0 * MIB;
+        let spec = tcp_remote(&mut e, &c, NodeId(0), NodeId(1), bytes, "bench");
+        let (dur, mbps) = run_flow(&mut e, spec, bytes);
+        assert!((mbps - 112.0).abs() < 2.0, "remote {mbps} MB/s");
+        // CPU: send ~36.76% of a core, recv ~88.1%.
+        let cs = e.class("bench:net-send");
+        let cr = e.class("bench:net-recv");
+        let send = e.busy_for(c.node(NodeId(0)).cpu, cs);
+        let recv = e.busy_for(c.node(NodeId(1)).cpu, cr);
+        assert!((send / dur - 0.3676).abs() < 0.01, "send {}", send / dur);
+        assert!((recv / dur - 0.881).abs() < 0.01, "recv {}", recv / dur);
+    }
+
+    #[test]
+    fn table2_local_throughput() {
+        let (mut e, c) = setup(DiskKind::Raid0, 1);
+        let bytes = 1024.0 * MIB;
+        let spec = tcp_local(&mut e, &c, NodeId(0), bytes, "bench");
+        let (_, mbps) = run_flow(&mut e, spec, bytes);
+        assert!((mbps - 343.0).abs() < 5.0, "local {mbps} MB/s");
+    }
+
+    #[test]
+    fn datanode_send_local_beats_remote() {
+        let bytes = 256.0 * MIB;
+        let (mut e, c) = setup(DiskKind::Raid0, 2);
+        let spec = datanode_send(&mut e, &c, NodeId(0), NodeId(0), bytes, "hdfs-read");
+        let (_, local) = run_flow(&mut e, spec, bytes);
+        let (mut e2, c2) = setup(DiskKind::Raid0, 2);
+        let spec = datanode_send(&mut e2, &c2, NodeId(0), NodeId(1), bytes, "hdfs-read");
+        let (_, remote) = run_flow(&mut e2, spec, bytes);
+        assert!(
+            local > remote * 1.3,
+            "local {local} MB/s should clearly beat remote {remote} MB/s"
+        );
+    }
+
+    #[test]
+    fn compute_takes_core_seconds() {
+        let (mut e, c) = setup(DiskKind::Raid0, 1);
+        let spec = compute(&mut e, &c, NodeId(0), 2.5, "bench", "app");
+        let t = shared(0.0f64);
+        let tt = t.clone();
+        e.start_flow(spec, move |e| *tt.borrow_mut() = e.now());
+        e.run();
+        assert!((*t.borrow() - 2.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,205 @@
+//! LZO-class compression (paper §3.4.2).
+//!
+//! Hadoop v0.20.2 ships Gzip and Bzip2, both too CPU-hungry for the
+//! Atom; the paper uses LZO, which "favors speed over compression ratio"
+//! and still cuts the reducer output by ~60%. This module provides a
+//! real LZO-style byte-oriented LZ77 codec (greedy hash-chain matcher,
+//! raw-literal runs, 2-byte match tokens) so the data path is exercised
+//! for real, plus the cost-model hooks the simulator uses (ratio and
+//! per-byte CPU cost live in `conf`/`hw`).
+//!
+//! The simulated Fig 3 experiments use the calibrated ratio 0.4; this
+//! codec's job is to *exist and be correct* (the substitution rule:
+//! build the substrate, don't stub it) and to sanity-check that an
+//! LZO-class ratio on Zones-like record data is in that ballpark.
+
+/// Compress `input`. Format: sequence of ops —
+/// `0x00 len u8, literals...` (raw run, len 1-255) or
+/// `0x01 off u16le, len u8` (match at distance off ≥ 1, len 4-255).
+pub fn compress(input: &[u8]) -> Vec<u8> {
+    const MIN_MATCH: usize = 4;
+    const MAX_LEN: usize = 255;
+    const WINDOW: usize = 0xFFFF;
+    let mut out = Vec::with_capacity(input.len() / 2 + 16);
+    let mut head: Vec<i32> = vec![-1; 1 << 16];
+    let mut lit_start = 0usize;
+    let mut i = 0usize;
+
+    fn hash(b: &[u8]) -> usize {
+        ((b[0] as usize) << 8 ^ (b[1] as usize) << 4 ^ (b[2] as usize) ^ (b[3] as usize) << 12)
+            & 0xFFFF
+    }
+    fn flush_literals(out: &mut Vec<u8>, lits: &[u8]) {
+        for chunk in lits.chunks(255) {
+            out.push(0x00);
+            out.push(chunk.len() as u8);
+            out.extend_from_slice(chunk);
+        }
+    }
+
+    while i + MIN_MATCH <= input.len() {
+        let h = hash(&input[i..]);
+        let cand = head[h];
+        head[h] = i as i32;
+        let mut best_len = 0usize;
+        if cand >= 0 {
+            let c = cand as usize;
+            if i - c <= WINDOW {
+                let mut l = 0usize;
+                let max = (input.len() - i).min(MAX_LEN);
+                while l < max && input[c + l] == input[i + l] {
+                    l += 1;
+                }
+                if l >= MIN_MATCH {
+                    best_len = l;
+                }
+            }
+        }
+        if best_len > 0 {
+            flush_literals(&mut out, &input[lit_start..i]);
+            let off = i - cand as usize;
+            out.push(0x01);
+            out.extend_from_slice(&(off as u16).to_le_bytes());
+            out.push(best_len as u8);
+            i += best_len;
+            lit_start = i;
+        } else {
+            i += 1;
+        }
+    }
+    flush_literals(&mut out, &input[lit_start..]);
+    out
+}
+
+/// Decompress; inverse of [`compress`].
+pub fn decompress(input: &[u8]) -> Result<Vec<u8>, &'static str> {
+    let mut out = Vec::with_capacity(input.len() * 2);
+    let mut i = 0usize;
+    while i < input.len() {
+        match input[i] {
+            0x00 => {
+                if i + 2 > input.len() {
+                    return Err("truncated literal header");
+                }
+                let len = input[i + 1] as usize;
+                if i + 2 + len > input.len() {
+                    return Err("truncated literal run");
+                }
+                out.extend_from_slice(&input[i + 2..i + 2 + len]);
+                i += 2 + len;
+            }
+            0x01 => {
+                if i + 4 > input.len() {
+                    return Err("truncated match token");
+                }
+                let off = u16::from_le_bytes([input[i + 1], input[i + 2]]) as usize;
+                let len = input[i + 3] as usize;
+                if off == 0 || off > out.len() {
+                    return Err("bad match offset");
+                }
+                let start = out.len() - off;
+                for k in 0..len {
+                    let b = out[start + k];
+                    out.push(b);
+                }
+                i += 4;
+            }
+            _ => return Err("bad op byte"),
+        }
+    }
+    Ok(out)
+}
+
+/// Achieved ratio (compressed/original) on a byte string.
+pub fn ratio(input: &[u8]) -> f64 {
+    if input.is_empty() {
+        return 1.0;
+    }
+    compress(input).len() as f64 / input.len() as f64
+}
+
+/// Synthesize Zones-reducer-like output records (24-byte pair records
+/// with correlated object ids, §3.4.1) for ratio sanity checks.
+pub fn synthetic_pair_records(n: usize, seed: u64) -> Vec<u8> {
+    let mut rng = crate::sim::Rng::new(seed);
+    let mut out = Vec::with_capacity(n * 24);
+    let mut id = 1_000_000u64;
+    for _ in 0..n {
+        // Two clustered object ids + a small distance: ids move slowly,
+        // giving LZ77 plenty of shared prefixes (like real sky data).
+        id += rng.below(4);
+        let a = id;
+        let b = id + 1 + rng.below(64);
+        let d = (rng.f64() * 60.0) as u32;
+        out.extend_from_slice(&a.to_le_bytes());
+        out.extend_from_slice(&b.to_le_bytes());
+        out.extend_from_slice(&d.to_le_bytes());
+        out.extend_from_slice(&[0u8; 4]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_simple() {
+        let data = b"hello hello hello hello world world world".to_vec();
+        let c = compress(&data);
+        assert_eq!(decompress(&c).unwrap(), data);
+        assert!(c.len() < data.len());
+    }
+
+    #[test]
+    fn roundtrip_empty_and_tiny() {
+        for data in [&b""[..], &b"a"[..], &b"abc"[..]] {
+            let c = compress(data);
+            assert_eq!(decompress(&c).unwrap(), data);
+        }
+    }
+
+    #[test]
+    fn roundtrip_random_seeded() {
+        // Randomized property test (seeded, offline proptest stand-in).
+        let mut rng = crate::sim::Rng::new(99);
+        for trial in 0..50 {
+            let len = (rng.below(5000) + 1) as usize;
+            let data: Vec<u8> = if trial % 2 == 0 {
+                (0..len).map(|_| rng.below(256) as u8).collect()
+            } else {
+                // Compressible: small alphabet.
+                (0..len).map(|_| (rng.below(4) as u8) * 17).collect()
+            };
+            let c = compress(&data);
+            assert_eq!(decompress(&c).unwrap(), data, "trial {trial} len {len}");
+        }
+    }
+
+    #[test]
+    fn pair_records_compress_near_paper_ratio() {
+        // §3.4.2: LZO cuts reducer output by ~60% (ratio ≈ 0.4).
+        let data = synthetic_pair_records(20_000, 7);
+        let r = ratio(&data);
+        // Our greedy single-candidate matcher is weaker than real LZO's
+        // (the simulator uses the paper's calibrated 0.4 via conf); this
+        // checks the codec finds the records' heavy redundancy at all.
+        assert!(r > 0.25 && r < 0.72, "ratio {r:.2} (paper's real LZO: 0.4)");
+    }
+
+    #[test]
+    fn incompressible_data_does_not_explode() {
+        let mut rng = crate::sim::Rng::new(5);
+        let data: Vec<u8> = (0..10_000).map(|_| rng.below(256) as u8).collect();
+        let r = ratio(&data);
+        assert!(r < 1.05, "worst-case expansion bounded: {r:.3}");
+    }
+
+    #[test]
+    fn decompress_rejects_garbage() {
+        assert!(decompress(&[0x01, 0x00]).is_err());
+        assert!(decompress(&[0x02]).is_err());
+        assert!(decompress(&[0x00, 10, 1, 2]).is_err());
+        assert!(decompress(&[0x01, 9, 0, 4]).is_err()); // offset beyond output
+    }
+}

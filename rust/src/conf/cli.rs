@@ -1,0 +1,109 @@
+//! Minimal argument parser for the `amdahl-hadoop` binary and the bench
+//! harnesses. (clap is unavailable in this offline environment; this
+//! supports `--key value`, `--key=value`, `--flag`, and positionals.)
+
+use std::collections::HashMap;
+
+/// Parsed command line: subcommand, flags, options, positionals.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Parse an iterator of tokens. The first non-flag token becomes the
+    /// subcommand; later non-flag tokens are positionals.
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("fig3 extra --replication 3 --seed=42 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("fig3"));
+        assert_eq!(a.get("replication"), Some("3"));
+        assert_eq!(a.get("seed"), Some("42"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["extra".to_string()]);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("run --fast");
+        assert!(a.flag("fast"));
+        assert!(a.get("fast").is_none());
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse("x --n 5 --scale 0.25");
+        assert_eq!(a.get_usize("n", 1).unwrap(), 5);
+        assert!((a.get_f64("scale", 1.0).unwrap() - 0.25).abs() < 1e-12);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!(parse("x --n five").get_usize("n", 1).is_err());
+    }
+}

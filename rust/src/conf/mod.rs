@@ -1,0 +1,282 @@
+//! Hadoop configuration (paper Table 1) plus the application-level knobs
+//! the paper's §3.4 experiments toggle, and cluster presets.
+//!
+//! The key names mirror Hadoop v0.20.2's XML keys so the config prints
+//! exactly like the paper's Table 1.
+
+pub mod cli;
+
+use crate::hw::{DiskKind, MIB};
+
+/// Hadoop + experiment configuration.
+#[derive(Debug, Clone)]
+pub struct HadoopConf {
+    /// `dfs.replication` — 1 or 3 in the paper's experiments.
+    pub dfs_replication: usize,
+    /// `dfs.block.size` in bytes (64 MB).
+    pub dfs_block_size: f64,
+    /// `mapred.child.java.opts` heap (-Xmx512m).
+    pub child_heap_mb: usize,
+    /// `mapred.job.reuse.jvm.num.tasks` == -1 (always reuse). When false,
+    /// each task pays a JVM start cost (~1.5 s on Atom).
+    pub reuse_jvm: bool,
+    /// `io.sort.mb` — map-side sort buffer (125 MB; §3.1 sizes it so most
+    /// mappers spill exactly once).
+    pub io_sort_mb: usize,
+    /// `io.sort.record.percent` — fraction of the sort buffer reserved
+    /// for per-record metadata (0.2; 16 bytes ≈ 4 ints per record).
+    pub io_sort_record_percent: f64,
+    /// `io.sort.spill.percent` — buffer fill threshold that triggers a
+    /// spill (0.8).
+    pub io_sort_spill_percent: f64,
+    /// `io.bytes.per.checksum` (512 default, 4096 tuned).
+    pub io_bytes_per_checksum: usize,
+    /// `mapred.tasktracker.reduce.tasks.maximum` (2 for Neighbor
+    /// Searching — the DataNode needs CPU — and 3 for Neighbor Statistics).
+    pub reduce_slots: usize,
+    /// `mapred.tasktracker.map.tasks.maximum` (3).
+    pub map_slots: usize,
+
+    // ---- application-level knobs from §3.4 ----
+    /// Reducers wrap their OutputStream in a BufferedOutputStream (§3.4.1
+    /// fix). When false, every tiny write crosses JNI for the CRC32.
+    pub buffered_output: bool,
+    /// Bytes per application-level write when NOT buffered (the paper's
+    /// Neighbor Searching reducer wrote 8 bytes at a time).
+    pub app_write_bytes: usize,
+    /// BufferedOutputStream size when buffered.
+    pub output_buffer_bytes: usize,
+    /// LZO compression of reducer output (§3.4.2).
+    pub lzo_output: bool,
+    /// LZO compression ratio (output/input ≈ 0.4: "reduces the output
+    /// size from the reducers by 60%").
+    pub lzo_ratio: f64,
+    /// Direct I/O for HDFS DataNode writes (§3.4.3; reads stay buffered —
+    /// §3.3: direct reads lack prefetch and regress badly).
+    pub direct_io_write: bool,
+    /// HDFS data directory device.
+    pub data_disk: DiskKind,
+}
+
+impl Default for HadoopConf {
+    /// The paper's tuned Table 1 configuration.
+    fn default() -> Self {
+        HadoopConf {
+            dfs_replication: 3,
+            dfs_block_size: 64.0 * MIB,
+            child_heap_mb: 512,
+            reuse_jvm: true,
+            io_sort_mb: 125,
+            io_sort_record_percent: 0.2,
+            io_sort_spill_percent: 0.8,
+            io_bytes_per_checksum: 4096,
+            reduce_slots: 2,
+            map_slots: 3,
+            buffered_output: true,
+            app_write_bytes: 8,
+            output_buffer_bytes: 64 * 1024,
+            lzo_output: false,
+            lzo_ratio: 0.4,
+            direct_io_write: false,
+            data_disk: DiskKind::Raid0,
+        }
+    }
+}
+
+impl HadoopConf {
+    /// The untuned baseline the paper's Fig 3 "original" bars use:
+    /// unbuffered 8-byte writes, 512-byte checksums, no LZO, no direct I/O.
+    pub fn fig3_baseline(replication: usize) -> Self {
+        HadoopConf {
+            dfs_replication: replication,
+            io_bytes_per_checksum: 512,
+            buffered_output: false,
+            lzo_output: false,
+            direct_io_write: false,
+            ..HadoopConf::default()
+        }
+    }
+
+    /// Effective bytes moved per JNI checksum crossing on the reducer
+    /// output path (§3.4.1): unbuffered, every `app_write_bytes` write
+    /// crosses JNI; buffered, one crossing per checksum chunk.
+    pub fn jni_call_stride(&self) -> f64 {
+        if self.buffered_output {
+            self.io_bytes_per_checksum as f64
+        } else {
+            self.app_write_bytes as f64
+        }
+    }
+
+    /// Render as the paper's Table 1.
+    pub fn render_table1(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("{:<38} {}\n", "dfs.replication", self.dfs_replication));
+        s.push_str(&format!(
+            "{:<38} {}MB\n",
+            "dfs.block.size",
+            (self.dfs_block_size / MIB) as u64
+        ));
+        s.push_str(&format!(
+            "{:<38} -Xmx{}m\n",
+            "mapred.child.java.opts", self.child_heap_mb
+        ));
+        s.push_str(&format!(
+            "{:<38} {}\n",
+            "mapred.job.reuse.jvm.num.tasks",
+            if self.reuse_jvm { "-1" } else { "1" }
+        ));
+        s.push_str(&format!("{:<38} {}\n", "io.sort.mb", self.io_sort_mb));
+        s.push_str(&format!(
+            "{:<38} {}\n",
+            "io.sort.record.percent", self.io_sort_record_percent
+        ));
+        s.push_str(&format!(
+            "{:<38} {}\n",
+            "io.sort.spill.percent", self.io_sort_spill_percent
+        ));
+        s.push_str(&format!(
+            "{:<38} {}\n",
+            "io.bytes.per.checksum", self.io_bytes_per_checksum
+        ));
+        s.push_str(&format!(
+            "{:<38} {}\n",
+            "mapred.tasktracker.reduce.tasks.maximum", self.reduce_slots
+        ));
+        s.push_str(&format!(
+            "{:<38} {}\n",
+            "mapred.tasktracker.map.tasks.maximum", self.map_slots
+        ));
+        s
+    }
+
+    /// Apply a `key=value` override using Hadoop key names (for the CLI).
+    pub fn set(&mut self, key: &str, value: &str) -> anyhow::Result<()> {
+        match key {
+            "dfs.replication" => self.dfs_replication = value.parse()?,
+            "dfs.block.size" => self.dfs_block_size = value.parse::<f64>()?,
+            "io.sort.mb" => self.io_sort_mb = value.parse()?,
+            "io.sort.record.percent" => self.io_sort_record_percent = value.parse()?,
+            "io.sort.spill.percent" => self.io_sort_spill_percent = value.parse()?,
+            "io.bytes.per.checksum" => self.io_bytes_per_checksum = value.parse()?,
+            "mapred.tasktracker.reduce.tasks.maximum" => self.reduce_slots = value.parse()?,
+            "mapred.tasktracker.map.tasks.maximum" => self.map_slots = value.parse()?,
+            "mapred.job.reuse.jvm.num.tasks" => self.reuse_jvm = value == "-1",
+            "app.buffered.output" => self.buffered_output = value.parse()?,
+            "app.lzo" => self.lzo_output = value.parse()?,
+            "app.direct.io" => self.direct_io_write = value.parse()?,
+            "app.data.disk" => {
+                self.data_disk = match value {
+                    "hdd" => DiskKind::Hdd,
+                    "ssd" => DiskKind::Ssd,
+                    "raid0" => DiskKind::Raid0,
+                    other => anyhow::bail!("unknown disk kind {other}"),
+                }
+            }
+            other => anyhow::bail!("unknown configuration key {other}"),
+        }
+        Ok(())
+    }
+}
+
+/// Which physical cluster a scenario runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterPreset {
+    /// Nine Amdahl blades: one master + eight slaves (paper §3.1).
+    Amdahl,
+    /// Four OCC nodes: one master + three data nodes (paper §3.5).
+    Occ,
+    /// Hypothetical N-core-Atom blades (paper §4 ablation).
+    AmdahlNCore(usize),
+}
+
+impl ClusterPreset {
+    pub fn node_count(self) -> usize {
+        match self {
+            ClusterPreset::Amdahl | ClusterPreset::AmdahlNCore(_) => 9,
+            ClusterPreset::Occ => 4,
+        }
+    }
+
+    /// Worker (slave) node count — node 0 is always the master.
+    pub fn slave_count(self) -> usize {
+        self.node_count() - 1
+    }
+
+    pub fn node_spec(self, disk: DiskKind) -> crate::hw::NodeSpec {
+        match self {
+            ClusterPreset::Amdahl => crate::hw::amdahl_blade(disk),
+            ClusterPreset::AmdahlNCore(n) => crate::hw::presets::amdahl_blade_ncore(disk, n),
+            ClusterPreset::Occ => crate::hw::occ_node(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper_table1() {
+        let c = HadoopConf::default();
+        assert_eq!(c.dfs_replication, 3);
+        assert!((c.dfs_block_size / MIB - 64.0).abs() < 1e-9);
+        assert_eq!(c.io_sort_mb, 125);
+        assert_eq!(c.io_bytes_per_checksum, 4096);
+        assert_eq!(c.map_slots, 3);
+    }
+
+    #[test]
+    fn table1_render_contains_all_keys() {
+        let s = HadoopConf::default().render_table1();
+        for key in [
+            "dfs.replication",
+            "dfs.block.size",
+            "mapred.child.java.opts",
+            "mapred.job.reuse.jvm.num.tasks",
+            "io.sort.mb",
+            "io.sort.record.percent",
+            "io.sort.spill.percent",
+            "io.bytes.per.checksum",
+            "mapred.tasktracker.reduce.tasks.maximum",
+            "mapred.tasktracker.map.tasks.maximum",
+        ] {
+            assert!(s.contains(key), "missing {key}");
+        }
+    }
+
+    #[test]
+    fn jni_stride_buffered_vs_not() {
+        let mut c = HadoopConf::default();
+        c.buffered_output = true;
+        assert_eq!(c.jni_call_stride(), 4096.0);
+        c.buffered_output = false;
+        assert_eq!(c.jni_call_stride(), 8.0);
+    }
+
+    #[test]
+    fn fig3_baseline_is_untuned() {
+        let c = HadoopConf::fig3_baseline(1);
+        assert_eq!(c.dfs_replication, 1);
+        assert_eq!(c.io_bytes_per_checksum, 512);
+        assert!(!c.buffered_output && !c.lzo_output && !c.direct_io_write);
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut c = HadoopConf::default();
+        c.set("dfs.replication", "1").unwrap();
+        c.set("app.data.disk", "ssd").unwrap();
+        assert_eq!(c.dfs_replication, 1);
+        assert_eq!(c.data_disk, DiskKind::Ssd);
+        assert!(c.set("bogus.key", "1").is_err());
+    }
+
+    #[test]
+    fn presets_node_counts() {
+        assert_eq!(ClusterPreset::Amdahl.node_count(), 9);
+        assert_eq!(ClusterPreset::Occ.node_count(), 4);
+        assert_eq!(ClusterPreset::Amdahl.slave_count(), 8);
+        assert_eq!(ClusterPreset::Occ.slave_count(), 3);
+    }
+}

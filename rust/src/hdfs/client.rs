@@ -1,0 +1,441 @@
+//! HDFS client operations: whole-file write and read.
+//!
+//! A file is written block by block, sequentially, exactly like the v0.20
+//! DFSClient (one pipeline at a time per writer). Reads stream block by
+//! block from the chosen replica, preferring the client's own copy
+//! (MapReduce locality, §3.3).
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use super::namenode::BlockMeta;
+use super::pipeline::{account_block_write, write_block_flow};
+use super::WorldHandle;
+use crate::cluster::NodeId;
+use crate::conf::HadoopConf;
+use crate::sim::{Engine, FlowSpec, SerialStage};
+
+/// Options for [`read_file`].
+#[derive(Debug, Clone, Default)]
+pub struct ReadOpts {
+    /// Force reads from a non-local replica (Fig 2(b)'s "read from
+    /// another node" series).
+    pub force_remote: bool,
+}
+
+struct WriteCtx {
+    world: WorldHandle,
+    client: NodeId,
+    name: String,
+    sizes: Vec<f64>,
+    idx: usize,
+    conf: HadoopConf,
+    task: String,
+    on_done: Option<Box<dyn FnOnce(&mut Engine)>>,
+}
+
+/// Write `bytes` to HDFS as `name` from `client`, then call `on_done`.
+///
+/// Splits into `dfs.block.size` blocks, runs one replication pipeline per
+/// block (sequentially), registers disk streams on every replica for the
+/// HDD seek model, commits metadata to the NameNode, and feeds the Table 4
+/// byte counters under `task`.
+pub fn write_file(
+    engine: &mut Engine,
+    world: &WorldHandle,
+    client: NodeId,
+    name: impl Into<String>,
+    bytes: f64,
+    conf: &HadoopConf,
+    task: &str,
+    on_done: impl FnOnce(&mut Engine) + 'static,
+) {
+    assert!(bytes > 0.0);
+    let mut sizes = Vec::new();
+    let mut left = bytes;
+    while left > 0.0 {
+        let b = left.min(conf.dfs_block_size);
+        sizes.push(b);
+        left -= b;
+    }
+    let ctx = Rc::new(RefCell::new(WriteCtx {
+        world: world.clone(),
+        client,
+        name: name.into(),
+        sizes,
+        idx: 0,
+        conf: conf.clone(),
+        task: task.to_string(),
+        on_done: Some(Box::new(on_done)),
+    }));
+    write_next(engine, ctx);
+}
+
+fn write_next(engine: &mut Engine, ctx: Rc<RefCell<WriteCtx>>) {
+    let (spec, replicas, size) = {
+        let c = ctx.borrow();
+        if c.idx == c.sizes.len() {
+            drop(c);
+            let cb = ctx.borrow_mut().on_done.take();
+            if let Some(cb) = cb {
+                cb(engine);
+            }
+            return;
+        }
+        let size = c.sizes[c.idx];
+        let mut w = c.world.borrow_mut();
+        let mut rng = engine.rng.fork(c.idx as u64);
+        let replicas = w.namenode.place_replicas(&mut rng, c.client, c.conf.dfs_replication);
+        account_block_write(&mut w.counters, c.client, &replicas, size, &c.conf, &c.task);
+        let spec = write_block_flow(engine, &w.cluster, c.client, &replicas, size, &c.conf, &c.task);
+        (spec, replicas, size)
+    };
+    // Register disk streams on every replica for the HDD seek model.
+    {
+        let c = ctx.borrow();
+        let mut w = c.world.borrow_mut();
+        for &r in &replicas {
+            w.cluster.disk_stream_start(engine, r, false);
+        }
+    }
+    let ctx2 = ctx.clone();
+    engine.start_flow(spec, move |engine| {
+        {
+            let c = ctx2.borrow();
+            let mut w = c.world.borrow_mut();
+            for &r in &replicas {
+                w.cluster.disk_stream_end(engine, r, false);
+            }
+            let lambda = if c.conf.lzo_output { c.conf.lzo_ratio } else { 1.0 };
+            let id = w.namenode.alloc_block();
+            let name = c.name.clone();
+            w.namenode.commit_block(
+                &name,
+                BlockMeta { id, size, stored_size: size * lambda, replicas: replicas.clone() },
+            );
+        }
+        ctx2.borrow_mut().idx += 1;
+        write_next(engine, ctx2.clone());
+    });
+}
+
+/// Build the read flow for one block: the DataNode's serialized
+/// disk-read-then-socket-send (§3.3) plus client-side checksum
+/// verification and optional LZO decompression.
+fn read_block_flow(
+    engine: &mut Engine,
+    world: &WorldHandle,
+    client: NodeId,
+    src: NodeId,
+    block: &BlockMeta,
+    conf: &HadoopConf,
+    task: &str,
+) -> FlowSpec {
+    let w = world.borrow();
+    let cluster = &w.cluster;
+    let n = cluster.node(src);
+    let costs = n.spec.cpu.costs.clone();
+    let lambda = block.stored_size / block.size; // <1 when stored compressed
+    let c_read = engine.class(&format!("{task}:read-user"));
+    let c_send = engine.class(&format!("{task}:net-send"));
+    let c_recv = engine.class(&format!("{task}:net-recv"));
+    let c_copy = engine.class(&format!("{task}:memcpy"));
+    let c_crc = engine.class(&format!("{task}:checksum"));
+    let c_lzo = engine.class(&format!("{task}:compress"));
+    let disk_stage = SerialStage(0);
+    let net_stage = SerialStage(1);
+
+    let c_stream = engine.class(&format!("{task}:stream"));
+    // Flow total = logical bytes; device demands scale by λ.
+    let mut f = FlowSpec::new(block.size, format!("{task}:read blk{}", block.id))
+        .demand_staged(n.disk, lambda / n.spec.data_disk.read_bps, c_read, disk_stage)
+        .demand(n.cpu, costs.buffered_read * lambda, c_read)
+        .demand(n.cpu, costs.hadoop_stream * lambda, c_stream)
+        .demand(n.membus, lambda, c_copy);
+    let mut dn_cost = (costs.buffered_read + costs.hadoop_stream) * lambda;
+    let cl = cluster.node(client);
+    let clcosts = cl.spec.cpu.costs.clone();
+    // Client side: verify checksums + DFSClient stream stack.
+    let mut client_cost = (clcosts.crc32 + clcosts.hadoop_stream) * lambda;
+    if src == client {
+        f = f
+            .demand_staged(n.membus, n.spec.net.loopback_copies * lambda, c_copy, net_stage)
+            .demand(n.cpu, costs.net_send_local * lambda, c_send)
+            .demand(cl.cpu, clcosts.net_recv_local * lambda, c_recv);
+        dn_cost += costs.net_send_local * lambda;
+        client_cost += clcosts.net_recv_local * lambda;
+    } else {
+        f = f
+            .demand_staged(n.nic_tx, lambda, c_send, net_stage)
+            .demand(cl.nic_rx, lambda, c_recv)
+            .demand(n.cpu, costs.net_send_remote * lambda, c_send)
+            .demand(cl.cpu, clcosts.net_recv_remote * lambda, c_recv);
+        dn_cost += costs.net_send_remote * lambda;
+        client_cost += clcosts.net_recv_remote * lambda;
+    }
+    f = f.demand(cl.cpu, clcosts.crc32 * lambda, c_crc);
+    f = f.demand(cl.cpu, clcosts.hadoop_stream * lambda, c_stream);
+    if lambda < 1.0 {
+        f = f.demand(cl.cpu, clcosts.lzo_decompress, c_lzo);
+        client_cost += clcosts.lzo_decompress;
+    }
+    let _ = conf;
+    // DataNode xceiver and client reader are each single threads.
+    f.cap(1.0 / dn_cost).cap(1.0 / client_cost)
+}
+
+struct ReadCtx {
+    world: WorldHandle,
+    client: NodeId,
+    blocks: Vec<BlockMeta>,
+    idx: usize,
+    conf: HadoopConf,
+    opts: ReadOpts,
+    task: String,
+    on_done: Option<Box<dyn FnOnce(&mut Engine)>>,
+}
+
+/// Read the whole of `name` from HDFS at `client`, then call `on_done`.
+pub fn read_file(
+    engine: &mut Engine,
+    world: &WorldHandle,
+    client: NodeId,
+    name: &str,
+    conf: &HadoopConf,
+    opts: ReadOpts,
+    task: &str,
+    on_done: impl FnOnce(&mut Engine) + 'static,
+) {
+    let blocks = {
+        let w = world.borrow();
+        w.namenode
+            .get_file(name)
+            .unwrap_or_else(|| panic!("HDFS file not found: {name}"))
+            .blocks
+            .clone()
+    };
+    assert!(!blocks.is_empty(), "empty HDFS file {name}");
+    read_blocks_opts(engine, world, client, blocks, conf, opts, task, on_done);
+}
+
+/// Read an explicit list of blocks at `client` (used by MapReduce input
+/// splits, which address single blocks rather than whole files).
+pub fn read_blocks(
+    engine: &mut Engine,
+    world: &WorldHandle,
+    client: NodeId,
+    blocks: Vec<BlockMeta>,
+    conf: &HadoopConf,
+    task: &str,
+    on_done: impl FnOnce(&mut Engine) + 'static,
+) {
+    read_blocks_opts(engine, world, client, blocks, conf, ReadOpts::default(), task, on_done);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn read_blocks_opts(
+    engine: &mut Engine,
+    world: &WorldHandle,
+    client: NodeId,
+    blocks: Vec<BlockMeta>,
+    conf: &HadoopConf,
+    opts: ReadOpts,
+    task: &str,
+    on_done: impl FnOnce(&mut Engine) + 'static,
+) {
+    assert!(!blocks.is_empty());
+    let ctx = Rc::new(RefCell::new(ReadCtx {
+        world: world.clone(),
+        client,
+        blocks,
+        idx: 0,
+        conf: conf.clone(),
+        opts,
+        task: task.to_string(),
+        on_done: Some(Box::new(on_done)),
+    }));
+    read_next(engine, ctx);
+}
+
+fn read_next(engine: &mut Engine, ctx: Rc<RefCell<ReadCtx>>) {
+    let (spec, src) = {
+        let c = ctx.borrow();
+        if c.idx == c.blocks.len() {
+            drop(c);
+            let cb = ctx.borrow_mut().on_done.take();
+            if let Some(cb) = cb {
+                cb(engine);
+            }
+            return;
+        }
+        let block = &c.blocks[c.idx];
+        let mut rng = engine.rng.fork(0xBEEF ^ c.idx as u64);
+        let src = {
+            let w = c.world.borrow();
+            if c.opts.force_remote {
+                // Pick any replica that is not the client.
+                let remote: Vec<_> =
+                    block.replicas.iter().copied().filter(|&r| r != c.client).collect();
+                if remote.is_empty() {
+                    block.replicas[0]
+                } else {
+                    remote[rng.below(remote.len() as u64) as usize]
+                }
+            } else {
+                w.namenode.pick_replica(&mut rng, block, c.client)
+            }
+        };
+        {
+            let mut w = c.world.borrow_mut();
+            w.counters.add_disk(&c.task, block.stored_size);
+            w.counters.add_net(&c.task, 2.0 * block.stored_size);
+        }
+        let spec = read_block_flow(engine, &c.world, c.client, src, block, &c.conf, &c.task);
+        (spec, src)
+    };
+    {
+        let c = ctx.borrow();
+        let mut w = c.world.borrow_mut();
+        w.cluster.disk_stream_start(engine, src, true);
+    }
+    let ctx2 = ctx.clone();
+    engine.start_flow(spec, move |engine| {
+        {
+            let c = ctx2.borrow();
+            let mut w = c.world.borrow_mut();
+            w.cluster.disk_stream_end(engine, src, true);
+        }
+        ctx2.borrow_mut().idx += 1;
+        read_next(engine, ctx2.clone());
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::hdfs::World;
+    use crate::hw::{amdahl_blade, DiskKind, MIB};
+    use crate::sim::engine::shared;
+
+    fn setup(n: usize) -> (Engine, WorldHandle) {
+        let mut e = Engine::new(21);
+        let cluster = Cluster::build(&mut e, &amdahl_blade(DiskKind::Raid0), n);
+        let mut world = World::new(cluster);
+        world.namenode.set_datanodes((1..n).map(NodeId).collect());
+        (e, shared(world))
+    }
+
+    #[test]
+    fn write_then_read_roundtrip() {
+        let (mut e, w) = setup(9);
+        let conf = HadoopConf::default();
+        let bytes = 160.0 * MIB; // 3 blocks: 64+64+32
+        let t_write = shared(0.0f64);
+        let tw = t_write.clone();
+        write_file(&mut e, &w, NodeId(1), "f", bytes, &conf, "hdfs-write", move |e| {
+            *tw.borrow_mut() = e.now();
+        });
+        e.run();
+        assert!(*t_write.borrow() > 0.0);
+        {
+            let wb = w.borrow();
+            let f = wb.namenode.get_file("f").unwrap();
+            assert_eq!(f.blocks.len(), 3);
+            assert!((f.size() - bytes).abs() < 1.0);
+            for b in &f.blocks {
+                assert_eq!(b.replicas.len(), 3);
+                assert_eq!(b.replicas[0], NodeId(1), "first replica local");
+            }
+        }
+        let t_read = shared(0.0f64);
+        let tr = t_read.clone();
+        let start = e.now();
+        read_file(&mut e, &w, NodeId(1), "f", &conf, ReadOpts::default(), "hdfs-read", move |e| {
+            *tr.borrow_mut() = e.now();
+        });
+        e.run();
+        assert!(*t_read.borrow() > start);
+    }
+
+    #[test]
+    fn local_read_faster_than_remote() {
+        let (mut e, w) = setup(9);
+        let conf = HadoopConf::default();
+        let bytes = 128.0 * MIB;
+        write_file(&mut e, &w, NodeId(1), "f", bytes, &conf, "hdfs-write", |_| {});
+        e.run();
+        let t0 = e.now();
+        let t_local = shared(0.0f64);
+        let tl = t_local.clone();
+        read_file(&mut e, &w, NodeId(1), "f", &conf, ReadOpts::default(), "hdfs-read", move |e| {
+            *tl.borrow_mut() = e.now();
+        });
+        e.run();
+        let local_dur = *t_local.borrow() - t0;
+
+        let t1 = e.now();
+        let t_remote = shared(0.0f64);
+        let tr = t_remote.clone();
+        read_file(
+            &mut e,
+            &w,
+            NodeId(1),
+            "f",
+            &conf,
+            ReadOpts { force_remote: true },
+            "hdfs-read",
+            move |e| {
+                *tr.borrow_mut() = e.now();
+            },
+        );
+        e.run();
+        let remote_dur = *t_remote.borrow() - t1;
+        assert!(
+            local_dur < remote_dur,
+            "local {local_dur:.2}s should beat remote {remote_dur:.2}s"
+        );
+    }
+
+    #[test]
+    fn replication_one_single_replica() {
+        let (mut e, w) = setup(9);
+        let conf = HadoopConf { dfs_replication: 1, ..Default::default() };
+        write_file(&mut e, &w, NodeId(2), "g", 64.0 * MIB, &conf, "hdfs-write", |_| {});
+        e.run();
+        let wb = w.borrow();
+        let f = wb.namenode.get_file("g").unwrap();
+        assert_eq!(f.blocks[0].replicas, vec![NodeId(2)]);
+    }
+
+    #[test]
+    fn lzo_stored_size_smaller() {
+        let (mut e, w) = setup(9);
+        let conf = HadoopConf { lzo_output: true, ..Default::default() };
+        write_file(&mut e, &w, NodeId(1), "c", 64.0 * MIB, &conf, "hdfs-write", |_| {});
+        e.run();
+        let wb = w.borrow();
+        let f = wb.namenode.get_file("c").unwrap();
+        assert!((f.blocks[0].stored_size / f.blocks[0].size - 0.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn counters_fed() {
+        let (mut e, w) = setup(9);
+        let conf = HadoopConf::default();
+        write_file(&mut e, &w, NodeId(1), "f", 64.0 * MIB, &conf, "hdfs-write", |_| {});
+        e.run();
+        let wb = w.borrow();
+        let t = wb.counters.tally("hdfs-write");
+        assert!((t.disk_bytes - 3.0 * 64.0 * MIB).abs() < 1.0);
+        assert!((t.net_bytes - 6.0 * 64.0 * MIB).abs() < 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn read_missing_file_panics() {
+        let (mut e, w) = setup(3);
+        let conf = HadoopConf::default();
+        read_file(&mut e, &w, NodeId(1), "nope", &conf, ReadOpts::default(), "hdfs-read", |_| {});
+    }
+}

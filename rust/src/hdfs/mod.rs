@@ -1,0 +1,56 @@
+//! HDFS (Hadoop Distributed Filesystem) v0.20-architecture simulation.
+//!
+//! The paper's data-intensive results hinge on HDFS mechanics:
+//!
+//! * every write streams through a **replication pipeline** (client →
+//!   DN1 → DN2 → DN3) of TCP hops, each of which is CPU-expensive on
+//!   Atom (§3.2-3.3);
+//! * the client checksums every `io.bytes.per.checksum` bytes through a
+//!   **JNI** crossing (§3.4.1), and DataNodes verify on receipt;
+//! * DataNode reads are **serialized** disk-then-socket (§3.3), which is
+//!   why local reads beat remote reads in Fig 2(b);
+//! * DataNode writes can use **direct I/O** (§3.4.3), dropping the flush
+//!   thread from the CPU bill;
+//! * reducer output can be **LZO-compressed** (§3.4.2), shrinking every
+//!   downstream disk/net byte to `lzo_ratio` of the original.
+//!
+//! I/O byte accounting convention (feeds Table 4, see `amdahl`): disk
+//! bytes are counted once per device touch; network bytes are counted
+//! once per *socket endpoint event* (a loopback byte counts twice — send
+//! and receive; a wire byte counts twice — sender NIC and receiver NIC).
+//! This is the convention under which the paper's Table 4 ADN/AD ratios
+//! (1/3 for HDFS ops at r=3, 1/2 for mappers) come out exactly.
+
+pub mod client;
+pub mod namenode;
+pub mod pipeline;
+pub mod testdfsio;
+
+pub use client::{read_file, write_file, ReadOpts};
+pub use namenode::{BlockMeta, FileMeta, NameNode};
+
+use crate::amdahl::Counters;
+use crate::cluster::Cluster;
+use crate::sim::engine::Shared;
+
+/// Shared simulation world: the cluster plus HDFS metadata plus the I/O
+/// accounting the Amdahl analysis reads. Engine callbacks capture a
+/// `Shared<World>`.
+pub struct World {
+    pub cluster: Cluster,
+    pub namenode: NameNode,
+    pub counters: Counters,
+}
+
+/// Handle type captured by engine callbacks.
+pub type WorldHandle = Shared<World>;
+
+impl World {
+    pub fn new(cluster: Cluster) -> World {
+        World {
+            cluster,
+            namenode: NameNode::new(),
+            counters: Counters::new(),
+        }
+    }
+}

@@ -1,0 +1,246 @@
+//! NameNode: file → block → replica metadata and placement policy.
+//!
+//! Hadoop v0.20 placement (paper's cluster is a single rack): first
+//! replica on the writing client if it is a DataNode, remaining replicas
+//! on distinct random DataNodes. The master (node 0) runs the NameNode
+//! and JobTracker only — it stores no blocks (paper §3.1: "one as the
+//! master, and the rest as slaves").
+
+use std::collections::HashMap;
+
+use crate::cluster::NodeId;
+use crate::sim::Rng;
+
+/// One HDFS block.
+#[derive(Debug, Clone)]
+pub struct BlockMeta {
+    pub id: u64,
+    /// Logical (uncompressed) size in bytes.
+    pub size: f64,
+    /// On-disk size (differs from `size` when the writer compressed).
+    pub stored_size: f64,
+    /// Replica locations, pipeline order.
+    pub replicas: Vec<NodeId>,
+}
+
+/// One HDFS file.
+#[derive(Debug, Clone, Default)]
+pub struct FileMeta {
+    pub blocks: Vec<BlockMeta>,
+}
+
+impl FileMeta {
+    pub fn size(&self) -> f64 {
+        self.blocks.iter().map(|b| b.size).sum()
+    }
+}
+
+/// The NameNode's namespace plus the placement policy.
+#[derive(Debug, Default)]
+pub struct NameNode {
+    files: HashMap<String, FileMeta>,
+    next_block: u64,
+    /// DataNode ids (everything but the master).
+    datanodes: Vec<NodeId>,
+}
+
+impl NameNode {
+    pub fn new() -> NameNode {
+        NameNode::default()
+    }
+
+    /// Declare which nodes run DataNodes (call once at cluster setup).
+    pub fn set_datanodes(&mut self, nodes: Vec<NodeId>) {
+        self.datanodes = nodes;
+    }
+
+    pub fn datanodes(&self) -> &[NodeId] {
+        &self.datanodes
+    }
+
+    pub fn is_datanode(&self, n: NodeId) -> bool {
+        self.datanodes.contains(&n)
+    }
+
+    /// Allocate a block id.
+    pub fn alloc_block(&mut self) -> u64 {
+        self.next_block += 1;
+        self.next_block
+    }
+
+    /// v0.20 placement: client-local first (if the client is a DataNode),
+    /// then distinct random DataNodes.
+    pub fn place_replicas(&mut self, rng: &mut Rng, client: NodeId, replication: usize) -> Vec<NodeId> {
+        assert!(!self.datanodes.is_empty(), "no datanodes registered");
+        let r = replication.min(self.datanodes.len());
+        let mut chosen: Vec<NodeId> = Vec::with_capacity(r);
+        if self.is_datanode(client) {
+            chosen.push(client);
+        }
+        let mut pool: Vec<NodeId> = self
+            .datanodes
+            .iter()
+            .copied()
+            .filter(|n| !chosen.contains(n))
+            .collect();
+        rng.shuffle(&mut pool);
+        while chosen.len() < r {
+            chosen.push(pool.pop().expect("not enough datanodes"));
+        }
+        chosen
+    }
+
+    /// Record a completed block of `file`.
+    pub fn commit_block(&mut self, file: &str, block: BlockMeta) {
+        self.files.entry(file.to_string()).or_default().blocks.push(block);
+    }
+
+    /// Register a whole file's metadata at once (used to pre-populate
+    /// datasets without simulating their ingest).
+    pub fn put_file(&mut self, name: &str, meta: FileMeta) {
+        self.files.insert(name.to_string(), meta);
+    }
+
+    pub fn get_file(&self, name: &str) -> Option<&FileMeta> {
+        self.files.get(name)
+    }
+
+    pub fn exists(&self, name: &str) -> bool {
+        self.files.contains_key(name)
+    }
+
+    pub fn files(&self) -> impl Iterator<Item = (&str, &FileMeta)> {
+        self.files.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// Pick the replica to read: the client's own copy when present
+    /// (MapReduce locality, §3.3), otherwise a deterministic-random one.
+    pub fn pick_replica(&self, rng: &mut Rng, block: &BlockMeta, client: NodeId) -> NodeId {
+        if block.replicas.contains(&client) {
+            client
+        } else {
+            block.replicas[rng.below(block.replicas.len() as u64) as usize]
+        }
+    }
+
+    /// Total logical bytes under a path prefix (e.g. a job output dir).
+    pub fn bytes_under(&self, prefix: &str) -> f64 {
+        self.files
+            .iter()
+            .filter(|(k, _)| k.starts_with(prefix))
+            .map(|(_, v)| v.size())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nn(n: usize) -> NameNode {
+        let mut nn = NameNode::new();
+        nn.set_datanodes((1..=n).map(NodeId).collect());
+        nn
+    }
+
+    #[test]
+    fn placement_local_first() {
+        let mut n = nn(8);
+        let mut rng = Rng::new(1);
+        let reps = n.place_replicas(&mut rng, NodeId(3), 3);
+        assert_eq!(reps.len(), 3);
+        assert_eq!(reps[0], NodeId(3));
+        // All distinct.
+        let mut sorted = reps.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 3);
+    }
+
+    #[test]
+    fn placement_non_datanode_client() {
+        let mut n = nn(8);
+        let mut rng = Rng::new(1);
+        // Node 0 (master) is not a datanode.
+        let reps = n.place_replicas(&mut rng, NodeId(0), 3);
+        assert!(!reps.contains(&NodeId(0)));
+        assert_eq!(reps.len(), 3);
+    }
+
+    #[test]
+    fn placement_spreads_over_datanodes() {
+        let mut n = nn(8);
+        let mut rng = Rng::new(2);
+        let mut second_counts = std::collections::HashMap::new();
+        for _ in 0..400 {
+            let reps = n.place_replicas(&mut rng, NodeId(1), 3);
+            *second_counts.entry(reps[1]).or_insert(0) += 1;
+        }
+        // Remaining 7 datanodes should all appear as second replica.
+        assert!(second_counts.len() >= 6, "placement too concentrated: {second_counts:?}");
+    }
+
+    #[test]
+    fn replication_clamped_to_cluster() {
+        let mut n = nn(2);
+        let mut rng = Rng::new(1);
+        let reps = n.place_replicas(&mut rng, NodeId(1), 3);
+        assert_eq!(reps.len(), 2);
+    }
+
+    #[test]
+    fn commit_and_lookup() {
+        let mut n = nn(3);
+        n.commit_block(
+            "f",
+            BlockMeta { id: 1, size: 10.0, stored_size: 10.0, replicas: vec![NodeId(1)] },
+        );
+        n.commit_block(
+            "f",
+            BlockMeta { id: 2, size: 5.0, stored_size: 5.0, replicas: vec![NodeId(2)] },
+        );
+        assert_eq!(n.get_file("f").unwrap().blocks.len(), 2);
+        assert_eq!(n.get_file("f").unwrap().size(), 15.0);
+        assert!(n.exists("f"));
+        assert!(!n.exists("g"));
+    }
+
+    #[test]
+    fn pick_replica_prefers_local() {
+        let n = nn(4);
+        let mut rng = Rng::new(3);
+        let b = BlockMeta {
+            id: 1,
+            size: 1.0,
+            stored_size: 1.0,
+            replicas: vec![NodeId(2), NodeId(3)],
+        };
+        assert_eq!(n.pick_replica(&mut rng, &b, NodeId(3)), NodeId(3));
+        let far = n.pick_replica(&mut rng, &b, NodeId(1));
+        assert!(b.replicas.contains(&far));
+    }
+
+    #[test]
+    fn bytes_under_prefix() {
+        let mut n = nn(2);
+        n.put_file(
+            "out/part-0",
+            FileMeta {
+                blocks: vec![BlockMeta { id: 1, size: 7.0, stored_size: 7.0, replicas: vec![NodeId(1)] }],
+            },
+        );
+        n.put_file(
+            "out/part-1",
+            FileMeta {
+                blocks: vec![BlockMeta { id: 2, size: 5.0, stored_size: 5.0, replicas: vec![NodeId(2)] }],
+            },
+        );
+        n.put_file(
+            "in/data",
+            FileMeta {
+                blocks: vec![BlockMeta { id: 3, size: 100.0, stored_size: 100.0, replicas: vec![NodeId(1)] }],
+            },
+        );
+        assert_eq!(n.bytes_under("out/"), 12.0);
+    }
+}

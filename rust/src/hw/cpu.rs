@@ -1,0 +1,336 @@
+//! CPU cost model: Atom 330 and Opteron 2212.
+//!
+//! The paper's central finding is that kernel I/O paths are CPU-expensive
+//! on the Atom (in-order core, small caches, shared FP/SIMD units — see
+//! paper §4 and [Gerosa et al. 2009]). We capture this with a per-byte /
+//! per-call cost table for every kernel-path operation Hadoop exercises,
+//! calibrated so that the paper's own microbenchmarks come out right:
+//!
+//! * Table 2: local TCP 343 MB/s at ~99% of a core on each side; remote
+//!   TCP 112 MB/s at 36.76% (send) and 88.1% (receive) of a core.
+//! * Fig 1: buffered writes are flush-thread-bound (direct I/O drops the
+//!   flush CPU to 0 and raises RAID0 writes toward media rate ~270 MB/s);
+//!   reads are disk-bound with moderate CPU.
+//!
+//! Costs are in **cpu-seconds per byte** (equivalently, seconds per byte of
+//! one core) or cpu-seconds per call. CPU *utilization percentages* in all
+//! reports follow the paper's convention: 100% = one core fully busy.
+
+use super::MIB;
+
+/// Task classes used for instruction accounting (paper Table 4 rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TaskClass {
+    HdfsRead,
+    HdfsWrite,
+    Mapper,
+    ReducerStat,
+    ReducerSearch,
+    Other,
+}
+
+impl TaskClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            TaskClass::HdfsRead => "HDFS read",
+            TaskClass::HdfsWrite => "HDFS write",
+            TaskClass::Mapper => "Mapper",
+            TaskClass::ReducerStat => "Reducer (stat)",
+            TaskClass::ReducerSearch => "Reducer (search)",
+            TaskClass::Other => "Other",
+        }
+    }
+}
+
+/// Per-operation CPU cost table (cpu-seconds per byte unless noted).
+#[derive(Debug, Clone)]
+pub struct IoCosts {
+    /// Buffered write: user-space → page-cache copy + VFS bookkeeping.
+    pub buffered_write_user: f64,
+    /// Buffered write: kernel flush thread (per-page request submission;
+    /// paper §3.2: "the overhead of VFS becomes surprisingly high").
+    pub buffered_write_flush: f64,
+    /// Direct I/O write: single large request straight to the driver.
+    pub direct_write: f64,
+    /// Buffered read (page cache fill + copy-out).
+    pub buffered_read: f64,
+    /// Direct I/O read (no page cache, but app must manage alignment;
+    /// paper §3.2: "provides little improvement for data reads").
+    pub direct_read: f64,
+    /// TCP send to another host (per byte, paper Table 2).
+    pub net_send_remote: f64,
+    /// TCP receive from another host (per byte, paper Table 2).
+    pub net_recv_remote: f64,
+    /// Loopback TCP, sender side (3 memory copies, paper §3.2).
+    pub net_send_local: f64,
+    /// Loopback TCP, receiver side.
+    pub net_recv_local: f64,
+    /// CRC32 checksum (Hadoop generates on write, verifies on read).
+    pub crc32: f64,
+    /// One JNI crossing (seconds per call; paper §3.4.1: "JNI is very
+    /// expensive on the Atom processor").
+    pub jni_call: f64,
+    /// LZO-class compression (paper §3.4.2: favors speed over ratio).
+    pub lzo_compress: f64,
+    /// LZO-class decompression.
+    pub lzo_decompress: f64,
+    /// Plain memcpy (paper §3.2: max memory copy rate 1.3 GB/s measured).
+    pub memcpy: f64,
+    /// Hadoop user-space stream stack, per byte per process touch: Java
+    /// stream decode/encode, packet framing, DFSClient/DataNode buffer
+    /// copies, object churn (§3.3: "HDFS has significant CPU overhead"
+    /// beyond raw sockets and checksums; §4: "Java itself increases the
+    /// number of memory operations").
+    pub hadoop_stream: f64,
+    /// Record parse / serialize in Java (mapper input, reducer output).
+    pub record_codec: f64,
+    /// Comparison-sort cost per byte (map-side sort of 63-byte records
+    /// via indirect metadata sort, paper §3.1).
+    pub sort: f64,
+}
+
+/// A CPU: core count, clock, and its I/O cost table.
+#[derive(Debug, Clone)]
+pub struct CpuSpec {
+    pub name: String,
+    pub cores: usize,
+    /// Nominal clock in Hz.
+    pub freq_hz: f64,
+    /// Effective capacity in core-units exposed to the scheduler.
+    /// Hyperthreading on Atom 330 adds ~25% throughput (4 hw threads on
+    /// 2 cores), so capacity = 2.5; the Opteron 2212 has no SMT.
+    pub capacity: f64,
+    pub costs: IoCosts,
+    /// Instructions-per-cycle per core by task class (paper Table 4 "IPC"
+    /// column for Atom; used to convert cpu-seconds → instructions).
+    pub ipc_hdfs_read: f64,
+    pub ipc_hdfs_write: f64,
+    pub ipc_mapper: f64,
+    pub ipc_reducer_stat: f64,
+    pub ipc_reducer_search: f64,
+    /// DVFS governor model: observed freq / nominal freq by class (paper
+    /// Table 4 "Freq" column; ondemand drops the clock on I/O waits).
+    pub freq_ratio_hdfs_read: f64,
+    pub freq_ratio_hdfs_write: f64,
+    pub freq_ratio_mapper: f64,
+    pub freq_ratio_reducer_stat: f64,
+    pub freq_ratio_reducer_search: f64,
+}
+
+impl CpuSpec {
+    pub fn ipc(&self, class: TaskClass) -> f64 {
+        match class {
+            TaskClass::HdfsRead => self.ipc_hdfs_read,
+            TaskClass::HdfsWrite => self.ipc_hdfs_write,
+            TaskClass::Mapper => self.ipc_mapper,
+            TaskClass::ReducerStat => self.ipc_reducer_stat,
+            TaskClass::ReducerSearch => self.ipc_reducer_search,
+            TaskClass::Other => 0.5,
+        }
+    }
+
+    pub fn freq_ratio(&self, class: TaskClass) -> f64 {
+        match class {
+            TaskClass::HdfsRead => self.freq_ratio_hdfs_read,
+            TaskClass::HdfsWrite => self.freq_ratio_hdfs_write,
+            TaskClass::Mapper => self.freq_ratio_mapper,
+            TaskClass::ReducerStat => self.freq_ratio_reducer_stat,
+            TaskClass::ReducerSearch => self.freq_ratio_reducer_search,
+            TaskClass::Other => 1.0,
+        }
+    }
+
+    /// Convert cpu-seconds of class work into executed instructions
+    /// (paper Table 4: InstrRate = 2 cores × freq × IPC; our accounting is
+    /// per consumed core-second, so instructions = core-seconds × freq ×
+    /// freq_ratio × IPC).
+    pub fn instructions(&self, class: TaskClass, core_seconds: f64) -> f64 {
+        core_seconds * self.freq_hz * self.freq_ratio(class) * self.ipc(class)
+    }
+}
+
+/// Intel Atom 330 @1.6 GHz (Zotac IONITX-A, paper §3.1).
+///
+/// Calibration detail (per byte, one 1.6 GHz Atom core):
+/// * `net_send_local` / `net_recv_local`: Table 2 — 343 MB/s at 98.96% /
+///   99.27% of a core ⇒ 0.9896 / (343 MiB/s) ≈ 2.75 ns/B.
+/// * `net_send_remote`: 0.3676 / 112 MiB/s ≈ 3.13 ns/B;
+///   `net_recv_remote`: 0.881 / 112 MiB/s ≈ 7.50 ns/B.
+/// * Buffered-write flush cost chosen so the flush thread saturates one
+///   core near 160-170 MB/s, reproducing Fig 1's "direct I/O improves
+///   write performance, especially for RAID 0" (media rate 270 MB/s).
+pub fn atom330_costs() -> IoCosts {
+    IoCosts {
+        buffered_write_user: 2.0e-9,
+        buffered_write_flush: 5.7e-9,
+        direct_write: 0.6e-9,
+        buffered_read: 1.7e-9,
+        direct_read: 1.5e-9,
+        net_send_remote: 0.3676 / (112.0 * MIB),
+        net_recv_remote: 0.881 / (112.0 * MIB),
+        net_send_local: 0.9896 / (343.0 * MIB),
+        net_recv_local: 0.9927 / (343.0 * MIB),
+        crc32: 0.9e-9,
+        jni_call: 1.0e-6,
+        lzo_compress: 2.6e-9,
+        lzo_decompress: 0.9e-9,
+        memcpy: 1.0 / (1300.0 * MIB),
+        hadoop_stream: 12.0e-9,
+        record_codec: 1.1e-9,
+        sort: 1.6e-9,
+    }
+}
+
+/// AMD Opteron 2212 @2.0 GHz (OCC node, paper §3.5): out-of-order cores,
+/// big caches, ~6.4 GB/s memory bus. Kernel-path costs are ~4-6× cheaper
+/// per byte than Atom (Reddi et al. report 4-5× single-thread advantage
+/// for server cores on kernel-heavy work).
+pub fn opteron2212_costs() -> IoCosts {
+    IoCosts {
+        buffered_write_user: 0.42e-9,
+        buffered_write_flush: 1.1e-9,
+        direct_write: 0.15e-9,
+        buffered_read: 0.35e-9,
+        direct_read: 0.32e-9,
+        net_send_remote: 0.62e-9,
+        net_recv_remote: 1.5e-9,
+        net_send_local: 0.55e-9,
+        net_recv_local: 0.55e-9,
+        crc32: 0.18e-9,
+        jni_call: 4.5e-8,
+        lzo_compress: 0.55e-9,
+        lzo_decompress: 0.2e-9,
+        memcpy: 1.0 / (6400.0 * MIB),
+        hadoop_stream: 2.4e-9,
+        record_codec: 0.22e-9,
+        sort: 0.33e-9,
+    }
+}
+
+/// Full Atom 330 spec (paper §3.1 + Table 4).
+pub fn atom330() -> CpuSpec {
+    CpuSpec {
+        name: "Intel Atom 330".into(),
+        cores: 2,
+        freq_hz: 1.6e9,
+        capacity: 2.5, // 2 cores + ~25% from hyperthreading (paper §3.1)
+        costs: atom330_costs(),
+        // Paper Table 4, IPC column.
+        ipc_hdfs_read: 0.27,
+        ipc_hdfs_write: 0.22,
+        ipc_mapper: 0.56,
+        ipc_reducer_stat: 0.69,
+        ipc_reducer_search: 0.48,
+        // Paper Table 4, Freq column.
+        freq_ratio_hdfs_read: 0.48,
+        freq_ratio_hdfs_write: 0.79,
+        freq_ratio_mapper: 0.98,
+        freq_ratio_reducer_stat: 1.0,
+        freq_ratio_reducer_search: 0.98,
+    }
+}
+
+/// Full Opteron 2212 spec (paper §3.5). IPC values are typical for an
+/// out-of-order core on the same task mix (~2.5-3× Atom's).
+pub fn opteron2212() -> CpuSpec {
+    CpuSpec {
+        name: "AMD Opteron 2212".into(),
+        cores: 2,
+        freq_hz: 2.0e9,
+        capacity: 2.0, // no SMT
+        costs: opteron2212_costs(),
+        ipc_hdfs_read: 0.8,
+        ipc_hdfs_write: 0.7,
+        ipc_mapper: 1.4,
+        ipc_reducer_stat: 1.7,
+        ipc_reducer_search: 1.3,
+        freq_ratio_hdfs_read: 0.6,
+        freq_ratio_hdfs_write: 0.85,
+        freq_ratio_mapper: 1.0,
+        freq_ratio_reducer_stat: 1.0,
+        freq_ratio_reducer_search: 1.0,
+    }
+}
+
+/// Hypothetical N-core Atom used by the paper's §4 balance analysis
+/// ("we estimate that a quad-core Atom processor should be enough").
+pub fn atom_ncore(n: usize) -> CpuSpec {
+    let base = atom330();
+    CpuSpec {
+        name: format!("Hypothetical Atom x{n}"),
+        cores: n,
+        capacity: n as f64 * 1.25,
+        ..base
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_send_cost_matches_paper() {
+        let c = atom330_costs();
+        // 112 MB/s × cost = 36.76% of a core.
+        let util = 112.0 * MIB * c.net_send_remote;
+        assert!((util - 0.3676).abs() < 1e-6);
+    }
+
+    #[test]
+    fn table2_local_costs_match_paper() {
+        let c = atom330_costs();
+        assert!((343.0 * MIB * c.net_send_local - 0.9896).abs() < 1e-6);
+        assert!((343.0 * MIB * c.net_recv_local - 0.9927).abs() < 1e-6);
+    }
+
+    #[test]
+    fn flush_thread_saturates_before_raid0_media_rate() {
+        // One core / flush cost must be below the 270 MB/s RAID0 direct
+        // write rate — this is what makes Fig 1's direct-I/O win appear.
+        let c = atom330_costs();
+        let flush_cap_bps = 1.0 / c.buffered_write_flush;
+        assert!(flush_cap_bps < 270.0 * MIB);
+        assert!(flush_cap_bps > 120.0 * MIB, "flush cap unreasonably low");
+    }
+
+    #[test]
+    fn direct_write_much_cheaper_than_buffered() {
+        let c = atom330_costs();
+        assert!(c.direct_write * 5.0 < c.buffered_write_user + c.buffered_write_flush);
+    }
+
+    #[test]
+    fn instruction_rates_match_table4() {
+        // Paper Table 4 InstrRate (Minstr/s) = 2 cores × freq × ratio × IPC.
+        let cpu = atom330();
+        let cases = [
+            (TaskClass::HdfsRead, 421.43),
+            (TaskClass::HdfsWrite, 548.75),
+            (TaskClass::Mapper, 1751.72),
+            (TaskClass::ReducerStat, 2196.1),
+            (TaskClass::ReducerSearch, 1493.87),
+        ];
+        for (class, minstr) in cases {
+            let got = cpu.instructions(class, 2.0) / 1e6; // 2 core-seconds ≈ both cores for 1s
+            let rel = (got - minstr).abs() / minstr;
+            assert!(rel < 0.03, "{}: got {got:.1} want {minstr}", class.name());
+        }
+    }
+
+    #[test]
+    fn opteron_cheaper_everywhere() {
+        let a = atom330_costs();
+        let o = opteron2212_costs();
+        assert!(o.buffered_write_user < a.buffered_write_user);
+        assert!(o.net_recv_remote < a.net_recv_remote);
+        assert!(o.crc32 < a.crc32);
+        assert!(o.jni_call < a.jni_call);
+    }
+
+    #[test]
+    fn ncore_scales_capacity() {
+        let q = atom_ncore(4);
+        assert_eq!(q.cores, 4);
+        assert!((q.capacity - 5.0).abs() < 1e-12);
+    }
+}

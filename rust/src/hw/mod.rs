@@ -1,0 +1,25 @@
+//! Calibrated hardware models.
+//!
+//! Every constant in this module is traceable to a measurement or
+//! specification in the paper (section references in the doc comments).
+//! The models are deliberately *cost models*, not microarchitectural
+//! simulators: the paper's findings are about where CPU-seconds go, so a
+//! per-byte / per-call CPU cost table calibrated against the paper's own
+//! microbenchmarks (Fig 1, Table 2) reproduces the system-level behaviour.
+
+pub mod cpu;
+pub mod disk;
+pub mod net;
+pub mod presets;
+
+pub use cpu::{CpuSpec, IoCosts, TaskClass};
+pub use disk::{DiskKind, DiskSpec};
+pub use net::NetSpec;
+pub use presets::{amdahl_blade, occ_node, NodeSpec};
+
+/// Bytes in a megabyte as the paper uses it (MiB for buffers; device
+/// throughputs are quoted in MB/s and we keep MiB/s uniformly, noting the
+/// ≈5% slack is far below calibration tolerance).
+pub const MIB: f64 = 1024.0 * 1024.0;
+/// 64 MB HDFS block (paper Table 1, `dfs.block.size`).
+pub const HDFS_BLOCK: f64 = 64.0 * MIB;

@@ -1,0 +1,89 @@
+//! Node presets: the Amdahl blade and the OCC node (paper §3.1 and §3.5).
+
+use super::cpu::{atom330, atom_ncore, opteron2212, CpuSpec};
+use super::disk::{spec_for, DiskKind, DiskSpec};
+use super::net::{amdahl_net, occ_net, NetSpec};
+
+/// Everything needed to instantiate one cluster node in the simulator.
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    pub name: String,
+    pub cpu: CpuSpec,
+    /// The disk HDFS data dirs live on (Fig 1/2 vary this).
+    pub data_disk: DiskSpec,
+    pub net: NetSpec,
+    /// Memory in bytes (Amdahl 4 GB, OCC 12 GB). Bounds the page cache
+    /// and the map-side sort buffers the conf layer hands out.
+    pub memory_bytes: f64,
+    /// Full-load node power draw in watts (paper §3.6: ~40 W blade,
+    /// 290 W OCC node).
+    pub power_full_w: f64,
+    /// Idle power draw in watts (blade ~28 W, OCC ~200 W — typical for
+    /// the platforms; §3.6 uses full-load for its ratios, which `energy`
+    /// reproduces by default).
+    pub power_idle_w: f64,
+}
+
+/// An Amdahl blade (Zotac IONITX-A, paper §3.1) with the chosen HDFS
+/// data-disk configuration.
+pub fn amdahl_blade(disk: DiskKind) -> NodeSpec {
+    NodeSpec {
+        name: format!("amdahl-blade[{}]", disk.name()),
+        cpu: atom330(),
+        data_disk: spec_for(disk),
+        net: amdahl_net(),
+        memory_bytes: 4.0 * 1024.0 * 1024.0 * 1024.0,
+        power_full_w: 40.0,
+        power_idle_w: 28.0,
+    }
+}
+
+/// A hypothetical N-core Amdahl blade (paper §4's balance analysis).
+pub fn amdahl_blade_ncore(disk: DiskKind, cores: usize) -> NodeSpec {
+    let mut n = amdahl_blade(disk);
+    n.name = format!("amdahl-blade-{cores}core[{}]", disk.name());
+    n.cpu = atom_ncore(cores);
+    // §4: more cores alone won't lift memory-bound paths; the bus model
+    // stays put unless the caller also upgrades `net.membus_copy_bps`.
+    n
+}
+
+/// An OCC node (paper §3.5).
+pub fn occ_node() -> NodeSpec {
+    NodeSpec {
+        name: "occ-node".into(),
+        cpu: opteron2212(),
+        data_disk: spec_for(DiskKind::HitachiA7K1000),
+        net: occ_net(),
+        memory_bytes: 12.0 * 1024.0 * 1024.0 * 1024.0,
+        power_full_w: 290.0,
+        power_idle_w: 200.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn power_ratio_is_paper_seven_to_one() {
+        // §3.6: "one OCC node consumes the same amount of power as seven
+        // Amdahl blades".
+        let blade = amdahl_blade(DiskKind::Raid0);
+        let occ = occ_node();
+        let ratio = occ.power_full_w / blade.power_full_w;
+        assert!((ratio - 7.25).abs() < 0.5, "ratio={ratio}");
+    }
+
+    #[test]
+    fn blade_memory_4gb() {
+        let b = amdahl_blade(DiskKind::Hdd);
+        assert!((b.memory_bytes / (1 << 30) as f64 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ncore_preset() {
+        let b = amdahl_blade_ncore(DiskKind::Raid0, 4);
+        assert_eq!(b.cpu.cores, 4);
+    }
+}

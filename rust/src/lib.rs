@@ -1,0 +1,47 @@
+//! # amdahl-hadoop
+//!
+//! A full-system reproduction of **"Hadoop in Low-Power Processors"**
+//! (Da Zheng, Alexander Szalay, Andreas Terzis; 2014).
+//!
+//! The paper measures Hadoop v0.20.2 on *Amdahl blades* (dual-core Atom 330
+//! microservers with SSD + GPU) against an Open Cloud Consortium cluster,
+//! shows the blades are CPU-bound because disk and network I/O are
+//! CPU-heavy on Atom, demonstrates three HDFS fixes (output buffering to
+//! cut JNI checksum overhead, LZO compression, direct I/O), and closes with
+//! an Amdahl-number analysis concluding a balanced blade needs four cores.
+//!
+//! This crate rebuilds that entire system as a calibrated discrete-event
+//! simulation plus a real compute path:
+//!
+//! * [`sim`] — fluid-flow discrete-event engine (max-min fair rate sharing).
+//! * [`hw`] — calibrated device models: Atom/Opteron CPUs, HDD/SSD/RAID0,
+//!   NIC + switch, memory bus. Constants carry paper citations.
+//! * [`cluster`] — node assembly, cluster presets (Amdahl, OCC), power.
+//! * [`hdfs`] — NameNode/DataNode, replication pipeline, checksums,
+//!   buffered vs direct I/O write paths, TestDFSIO.
+//! * [`mapreduce`] — JobTracker/TaskTracker, splits, map-side sort/spill,
+//!   shuffle, merge, reduce; Hadoop config keys from the paper's Table 1.
+//! * [`conf`] — typed configuration (Table 1) and cluster presets.
+//! * [`zones`] — the Zones algorithm applications: synthetic sky catalog,
+//!   Neighbor Searching and Neighbor Statistics jobs.
+//! * [`compress`] — LZO-class LZ77 codec used by the Fig 3 experiments.
+//! * [`runtime`] — PJRT runtime loading the AOT-compiled JAX/Pallas pair
+//!   kernels from `artifacts/` (the hot compute path).
+//! * [`amdahl`] — instruction accounting → the paper's Table 4 numbers.
+//! * [`energy`] — power integration → the paper's §3.6 efficiency ratios.
+//! * [`report`] — regenerates every figure and table in the paper.
+
+pub mod amdahl;
+pub mod cluster;
+pub mod compress;
+pub mod conf;
+pub mod energy;
+pub mod hdfs;
+pub mod hw;
+pub mod mapreduce;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod zones;
+
+pub mod benchkit;

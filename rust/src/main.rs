@@ -1,0 +1,149 @@
+//! `amdahl-hadoop`: the leader binary.
+//!
+//! Subcommands regenerate each of the paper's exhibits (see DESIGN.md §5)
+//! or run the applications directly:
+//!
+//! ```text
+//! amdahl-hadoop table1|fig1|table2|fig2a|fig2b|fig3|table3|table4|energy|balance|all
+//! amdahl-hadoop search --theta 60 --scale 0.002 [--kernels] [--preset occ]
+//! amdahl-hadoop stat   --scale 0.002 [--kernels]
+//! amdahl-hadoop dfsio  --op write|read --workers 2 --gb 3
+//! ```
+//!
+//! Common options: `--seed N` (default 42), `--scale F` (fraction of the
+//! paper's 25 GB dataset, default 0.002), `--kernels` (load the AOT
+//! Pallas kernels from `artifacts/` and compute real pair counts).
+
+use std::rc::Rc;
+
+use amdahl_hadoop::conf::cli::Args;
+use amdahl_hadoop::conf::{ClusterPreset, HadoopConf};
+use amdahl_hadoop::hw::MIB;
+use amdahl_hadoop::report;
+use amdahl_hadoop::runtime::PairKernels;
+use amdahl_hadoop::zones::{run_app, App, ZonesConfig};
+
+fn zcfg(args: &Args, kernels: Option<Rc<PairKernels>>) -> anyhow::Result<ZonesConfig> {
+    Ok(ZonesConfig {
+        seed: args.get_u64("seed", 42)?,
+        scale: args.get_f64("scale", 0.002)?,
+        theta_arcsec: args.get_f64("theta", 60.0)?,
+        block_theta_mult: 10.0,
+        partition_cells: 4,
+        kernel_every: args.get_usize("kernel-every", 1)?,
+        kernels,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let seed = args.get_u64("seed", 42)?;
+    let scale = args.get_f64("scale", 0.002)?;
+    let kernels = if args.flag("kernels") {
+        Some(Rc::new(PairKernels::load_default()?))
+    } else {
+        None
+    };
+    let cmd = args.subcommand.as_deref().unwrap_or("all");
+    match cmd {
+        "table1" => print!("{}", report::table1()),
+        "fig1" => print!("{}", report::render_fig1(&report::fig1(seed))),
+        "table2" => print!("{}", report::render_table2(&report::table2(seed))),
+        "fig2a" => {
+            let gb = args.get_f64("gb", 0.75)?;
+            print!("{}", report::render_fig2(&report::fig2a(seed, gb * 1024.0 * MIB), true));
+        }
+        "fig2b" => {
+            let gb = args.get_f64("gb", 0.75)?;
+            print!("{}", report::render_fig2(&report::fig2b(seed, gb * 1024.0 * MIB), false));
+        }
+        "fig3" => print!("{}", report::render_fig3(&report::fig3(seed, scale))),
+        "table3" => {
+            let t3 = report::table3(seed, scale, kernels);
+            print!("{}", report::render_table3(&t3));
+            print!("{}", report::render_energy(&report::energy(&t3)));
+        }
+        "table4" => print!("{}", report::render_table4(&report::table4(seed, scale))),
+        "energy" => {
+            let t3 = report::table3(seed, scale, kernels);
+            print!("{}", report::render_energy(&report::energy(&t3)));
+        }
+        "balance" => print!("{}", report::balance()),
+        "search" | "stat" => {
+            let app = if cmd == "search" { App::Search } else { App::Stat };
+            let preset = match args.get("preset") {
+                Some("occ") => ClusterPreset::Occ,
+                Some(other) if other.starts_with("amdahl-") => {
+                    ClusterPreset::AmdahlNCore(other[7..].parse()?)
+                }
+                _ => ClusterPreset::Amdahl,
+            };
+            let conf = HadoopConf {
+                buffered_output: true,
+                direct_io_write: true,
+                reduce_slots: if app == App::Stat { 3 } else { 2 },
+                ..Default::default()
+            };
+            let z = zcfg(&args, kernels)?;
+            let out = run_app(preset, &conf, &z, app);
+            println!(
+                "{cmd} θ={}\" scale={} on {preset:?}: {:.0} simulated s \
+                 (map {:.0}s, reduce {:.0}s), locality {:.0}%",
+                z.theta_arcsec,
+                z.scale,
+                out.total_seconds,
+                out.job.map_phase,
+                out.job.reduce_phase,
+                out.job.map_locality * 100.0
+            );
+            println!(
+                "energy {:.0} kJ ({} nodes), output {:.1} MB, pairs found {}, kernel calls {}",
+                out.energy.total_joules / 1e3,
+                out.energy.nodes,
+                out.job.hdfs_output_bytes / MIB,
+                out.pairs_found,
+                out.kernel_calls
+            );
+        }
+        "dfsio" => {
+            let workers = args.get_usize("workers", 2)?;
+            let gb = args.get_f64("gb", 3.0)?;
+            let conf = HadoopConf::default();
+            let r = match args.get("op").unwrap_or("write") {
+                "read" => amdahl_hadoop::hdfs::testdfsio::read_test(
+                    seed, workers, gb * 1024.0 * MIB, &conf, args.flag("remote")),
+                _ => amdahl_hadoop::hdfs::testdfsio::write_test(
+                    seed, workers, gb * 1024.0 * MIB, &conf),
+            };
+            println!(
+                "TestDFSIO: {:.1} MB/s per node ({:.1} aggregate), makespan {:.1}s",
+                r.per_node_mbps, r.aggregate_mbps, r.makespan
+            );
+        }
+        "all" => {
+            print!("{}", report::table1());
+            println!();
+            print!("{}", report::render_fig1(&report::fig1(seed)));
+            println!();
+            print!("{}", report::render_table2(&report::table2(seed)));
+            println!();
+            let gb = 0.375;
+            print!("{}", report::render_fig2(&report::fig2a(seed, gb * 1024.0 * MIB), true));
+            println!();
+            print!("{}", report::render_fig2(&report::fig2b(seed, gb * 1024.0 * MIB), false));
+            println!();
+            print!("{}", report::render_fig3(&report::fig3(seed, scale)));
+            println!();
+            let t3 = report::table3(seed, scale, kernels);
+            print!("{}", report::render_table3(&t3));
+            println!();
+            print!("{}", report::render_energy(&report::energy(&t3)));
+            println!();
+            print!("{}", report::render_table4(&report::table4(seed, scale)));
+            println!();
+            print!("{}", report::balance());
+        }
+        other => anyhow::bail!("unknown subcommand {other}; see --help in README"),
+    }
+    Ok(())
+}

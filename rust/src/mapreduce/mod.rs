@@ -1,0 +1,26 @@
+//! MapReduce engine: Hadoop v0.20 JobTracker/TaskTracker architecture.
+//!
+//! A job runs in the simulated cluster with the Table 1 configuration:
+//! slot-limited TaskTrackers (`mapred.tasktracker.{map,reduce}.tasks.maximum`),
+//! data-local map scheduling, the map-side sort/spill machinery
+//! (`io.sort.mb` / `io.sort.record.percent` / `io.sort.spill.percent`,
+//! §3.1), a shuffle phase, and reducers that write to HDFS through the
+//! full replication pipeline with the paper's §3.4 output-path options.
+//!
+//! Application logic plugs in through [`MapFn`] / [`ReduceFn`]: the map
+//! function maps split metadata to output volume plus *application* CPU
+//! cost; the reduce function may do real compute (the Zones reducers
+//! invoke the AOT-compiled Pallas pair kernel through
+//! [`crate::runtime`]) and reports its HDFS output volume.
+//!
+//! Simplifications vs stock Hadoop, documented per DESIGN.md: reducers
+//! launch when the map phase completes (no slow-start overlap), there is
+//! no speculative execution (the simulator has no stragglers to hedge),
+//! and the combiner is folded into [`MapFn`] output modeling.
+
+pub mod scheduler;
+pub mod sortspill;
+pub mod tasks;
+
+pub use scheduler::{run_job, JobResult, JobSpec};
+pub use tasks::{MapFn, MapOutput, ReduceFn, ReduceOutput, SplitMeta};

@@ -1,0 +1,493 @@
+//! JobTracker: slot-based, locality-aware task scheduling (Hadoop v0.20).
+//!
+//! Node 0 is the master (JobTracker + NameNode, no tasks); every other
+//! node runs a TaskTracker with `mapred.tasktracker.map.tasks.maximum`
+//! map slots and `mapred.tasktracker.reduce.tasks.maximum` reduce slots
+//! (paper Table 1: 3 map slots; 2 reduce slots for Neighbor Searching —
+//! the DataNode needs CPU — and 3 for Neighbor Statistics).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+#[cfg(test)]
+use super::tasks::ReduceOutput;
+use super::tasks::{
+    run_map_task, run_reduce_task, MapFn, MapOutput, ReduceFn, ReduceInput, SplitMeta,
+};
+use crate::cluster::NodeId;
+use crate::conf::HadoopConf;
+use crate::hdfs::WorldHandle;
+use crate::sim::Engine;
+
+/// A MapReduce job description.
+pub struct JobSpec {
+    pub name: String,
+    /// HDFS input files; each block becomes one split.
+    pub input_files: Vec<String>,
+    pub map: Rc<dyn MapFn>,
+    pub reduce: Rc<RefCell<dyn ReduceFn>>,
+    pub n_reducers: usize,
+    pub conf: HadoopConf,
+    /// Usage-class prefix for map tasks (`"mapper"`).
+    pub map_class: String,
+    /// Usage-class prefix for reduce tasks (`"reducer-search"` /
+    /// `"reducer-stat"`).
+    pub reduce_class: String,
+    /// HDFS prefix for reducer output files.
+    pub output_prefix: String,
+    /// Fraction of split `i`'s map output that goes to reducer `r`.
+    /// Defaults to uniform 1/n_reducers (hash partitioning).
+    pub partition: Rc<dyn Fn(usize, usize) -> f64>,
+    /// Average records per byte of reduce input (to size ReduceInput).
+    pub reduce_records_per_byte: f64,
+}
+
+impl JobSpec {
+    /// Uniform hash partitioner.
+    pub fn uniform_partition(n_reducers: usize) -> Rc<dyn Fn(usize, usize) -> f64> {
+        Rc::new(move |_split, _r| 1.0 / n_reducers as f64)
+    }
+}
+
+/// Completed-job statistics.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub duration: f64,
+    pub map_phase: f64,
+    pub reduce_phase: f64,
+    pub map_tasks: usize,
+    pub reduce_tasks: usize,
+    pub input_bytes: f64,
+    pub map_output_bytes: f64,
+    pub hdfs_output_bytes: f64,
+    /// Fraction of map tasks that read their split from the local node.
+    pub map_locality: f64,
+}
+
+struct JobState {
+    spec: JobSpec,
+    world: WorldHandle,
+    splits: Vec<SplitMeta>,
+    pending_maps: Vec<usize>,
+    running_maps: usize,
+    map_outputs: Vec<Option<(NodeId, MapOutput)>>,
+    maps_done: usize,
+    local_maps: usize,
+    free_map_slots: HashMap<NodeId, usize>,
+    free_reduce_slots: HashMap<NodeId, usize>,
+    pending_reduces: Vec<usize>,
+    running_reduces: usize,
+    reduces_done: usize,
+    hdfs_output_bytes: f64,
+    t_start: f64,
+    t_maps_done: f64,
+    reduce_started: bool,
+    on_done: Option<Box<dyn FnOnce(&mut Engine, JobResult)>>,
+}
+
+/// Build splits (one per block) from the job's input files.
+fn plan_splits(world: &WorldHandle, files: &[String]) -> Vec<SplitMeta> {
+    let w = world.borrow();
+    let mut splits = Vec::new();
+    for f in files {
+        let meta = w
+            .namenode
+            .get_file(f)
+            .unwrap_or_else(|| panic!("job input {f} not in HDFS"));
+        for (i, b) in meta.blocks.iter().enumerate() {
+            splits.push(SplitMeta {
+                file: f.clone(),
+                block_idx: i,
+                bytes: b.size,
+                // Input records are 57 bytes in the paper's dataset; jobs
+                // can override by adjusting costs in their MapFn.
+                records: b.size / 57.0,
+                replicas: b.replicas.clone(),
+            });
+        }
+    }
+    splits
+}
+
+/// Run a job; `on_done` receives the [`JobResult`].
+pub fn run_job(
+    engine: &mut Engine,
+    world: &WorldHandle,
+    spec: JobSpec,
+    on_done: impl FnOnce(&mut Engine, JobResult) + 'static,
+) {
+    let splits = plan_splits(world, &spec.input_files);
+    assert!(!splits.is_empty(), "job {} has no input splits", spec.name);
+    let slaves: Vec<NodeId> = {
+        let w = world.borrow();
+        w.namenode.datanodes().to_vec()
+    };
+    let mut free_map_slots = HashMap::new();
+    let mut free_reduce_slots = HashMap::new();
+    for &s in &slaves {
+        free_map_slots.insert(s, spec.conf.map_slots);
+        free_reduce_slots.insert(s, spec.conf.reduce_slots);
+    }
+    let n_splits = splits.len();
+    let n_reducers = spec.n_reducers;
+    let state = Rc::new(RefCell::new(JobState {
+        spec,
+        world: world.clone(),
+        splits,
+        pending_maps: (0..n_splits).collect(),
+        running_maps: 0,
+        map_outputs: vec![None; n_splits],
+        maps_done: 0,
+        local_maps: 0,
+        free_map_slots,
+        free_reduce_slots,
+        pending_reduces: (0..n_reducers).collect(),
+        running_reduces: 0,
+        reduces_done: 0,
+        hdfs_output_bytes: 0.0,
+        t_start: engine.now(),
+        t_maps_done: 0.0,
+        reduce_started: false,
+        on_done: Some(Box::new(on_done)),
+    }));
+    pump(engine, state);
+}
+
+/// Scheduling pump: assign tasks to free slots until nothing fits.
+fn pump(engine: &mut Engine, state: Rc<RefCell<JobState>>) {
+    loop {
+        let action = next_action(&state.borrow());
+        match action {
+            Action::StartMap { split_idx, node, local } => {
+                start_map(engine, state.clone(), split_idx, node, local)
+            }
+            Action::StartReduce { reducer, node } => {
+                start_reduce(engine, state.clone(), reducer, node)
+            }
+            Action::Wait => return,
+        }
+    }
+}
+
+enum Action {
+    StartMap { split_idx: usize, node: NodeId, local: bool },
+    StartReduce { reducer: usize, node: NodeId },
+    Wait,
+}
+
+fn next_action(s: &JobState) -> Action {
+    // Map phase.
+    if !s.pending_maps.is_empty() {
+        // Locality first: find (node with free slot, split with replica).
+        for (pos, &si) in s.pending_maps.iter().enumerate() {
+            for &r in &s.splits[si].replicas {
+                if s.free_map_slots.get(&r).copied().unwrap_or(0) > 0 {
+                    let _ = pos;
+                    return Action::StartMap { split_idx: si, node: r, local: true };
+                }
+            }
+        }
+        // Otherwise first pending split on any free node.
+        if let Some((&node, _)) = s.free_map_slots.iter().filter(|(_, &v)| v > 0).min_by_key(|(n, _)| n.0)
+        {
+            let si = s.pending_maps[0];
+            return Action::StartMap { split_idx: si, node, local: false };
+        }
+    }
+    // Reduce phase (strictly after all maps).
+    if s.maps_done == s.splits.len() && !s.pending_reduces.is_empty() {
+        if let Some((&node, _)) =
+            s.free_reduce_slots.iter().filter(|(_, &v)| v > 0).min_by_key(|(n, _)| n.0)
+        {
+            let reducer = s.pending_reduces[0];
+            return Action::StartReduce { reducer, node };
+        }
+    }
+    Action::Wait
+}
+
+fn start_map(
+    engine: &mut Engine,
+    state: Rc<RefCell<JobState>>,
+    split_idx: usize,
+    node: NodeId,
+    local: bool,
+) {
+    let (split, map_fn, conf, class, world) = {
+        let mut s = state.borrow_mut();
+        s.pending_maps.retain(|&i| i != split_idx);
+        *s.free_map_slots.get_mut(&node).unwrap() -= 1;
+        s.running_maps += 1;
+        if local {
+            s.local_maps += 1;
+        }
+        (
+            s.splits[split_idx].clone(),
+            s.spec.map.clone(),
+            s.spec.conf.clone(),
+            s.spec.map_class.clone(),
+            s.world.clone(),
+        )
+    };
+    let state2 = state.clone();
+    run_map_task(engine, &world, node, split, map_fn, &conf, &class, move |engine, out| {
+        {
+            let mut s = state2.borrow_mut();
+            s.map_outputs[split_idx] = Some((node, out));
+            s.maps_done += 1;
+            s.running_maps -= 1;
+            *s.free_map_slots.get_mut(&node).unwrap() += 1;
+            if s.maps_done == s.splits.len() {
+                s.t_maps_done = engine.now();
+                s.reduce_started = true;
+            }
+        }
+        pump(engine, state2.clone());
+    });
+}
+
+fn start_reduce(engine: &mut Engine, state: Rc<RefCell<JobState>>, reducer: usize, node: NodeId) {
+    let (sources, input, reduce_fn, conf, class, world, output_name) = {
+        let mut s = state.borrow_mut();
+        s.pending_reduces.retain(|&r| r != reducer);
+        *s.free_reduce_slots.get_mut(&node).unwrap() -= 1;
+        s.running_reduces += 1;
+        // Aggregate shuffle bytes per map host.
+        let mut per_host: HashMap<NodeId, f64> = HashMap::new();
+        let mut total = 0.0;
+        for (si, slot) in s.map_outputs.iter().enumerate() {
+            let (host, out) = slot.as_ref().expect("map output missing");
+            let frac = (s.spec.partition)(si, reducer);
+            let b = out.bytes * frac;
+            if b > 0.0 {
+                *per_host.entry(*host).or_insert(0.0) += b;
+                total += b;
+            }
+        }
+        let mut sources: Vec<(NodeId, f64)> = per_host.into_iter().collect();
+        sources.sort_by_key(|(n, _)| n.0);
+        let input = ReduceInput {
+            reducer,
+            bytes: total,
+            records: total * s.spec.reduce_records_per_byte,
+        };
+        (
+            sources,
+            input,
+            s.spec.reduce.clone(),
+            s.spec.conf.clone(),
+            s.spec.reduce_class.clone(),
+            s.world.clone(),
+            format!("{}/part-{:05}", s.spec.output_prefix, reducer),
+        )
+    };
+    let state2 = state.clone();
+    run_reduce_task(
+        engine,
+        &world,
+        node,
+        sources,
+        input,
+        reduce_fn,
+        &conf,
+        &class,
+        output_name,
+        move |engine, out| {
+            let finished = {
+                let mut s = state2.borrow_mut();
+                s.reduces_done += 1;
+                s.running_reduces -= 1;
+                s.hdfs_output_bytes += out.hdfs_bytes;
+                *s.free_reduce_slots.get_mut(&node).unwrap() += 1;
+                s.reduces_done == s.spec.n_reducers
+            };
+            if finished {
+                finish(engine, &state2);
+            } else {
+                pump(engine, state2.clone());
+            }
+        },
+    );
+}
+
+fn finish(engine: &mut Engine, state: &Rc<RefCell<JobState>>) {
+    let (result, cb) = {
+        let mut s = state.borrow_mut();
+        let input_bytes: f64 = s.splits.iter().map(|sp| sp.bytes).sum();
+        let map_output_bytes: f64 =
+            s.map_outputs.iter().map(|m| m.as_ref().unwrap().1.bytes).sum();
+        let result = JobResult {
+            duration: engine.now() - s.t_start,
+            map_phase: s.t_maps_done - s.t_start,
+            reduce_phase: engine.now() - s.t_maps_done,
+            map_tasks: s.splits.len(),
+            reduce_tasks: s.spec.n_reducers,
+            input_bytes,
+            map_output_bytes,
+            hdfs_output_bytes: s.hdfs_output_bytes,
+            map_locality: s.local_maps as f64 / s.splits.len() as f64,
+        };
+        (result, s.on_done.take().unwrap())
+    };
+    cb(engine, result);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::hdfs::testdfsio::preplace_file;
+    use crate::hdfs::World;
+    use crate::hw::{amdahl_blade, DiskKind, MIB};
+    use crate::sim::engine::shared;
+
+    struct IdentityMap;
+    impl MapFn for IdentityMap {
+        fn run(&self, split: &SplitMeta) -> MapOutput {
+            MapOutput { bytes: split.bytes * 1.1, records: split.records, app_cpu: 0.05 }
+        }
+    }
+
+    struct FixedReduce {
+        out_per_reducer: f64,
+    }
+    impl ReduceFn for FixedReduce {
+        fn run(&mut self, input: &ReduceInput) -> ReduceOutput {
+            ReduceOutput { hdfs_bytes: self.out_per_reducer.max(input.bytes * 0.0), app_cpu: 0.1 }
+        }
+    }
+
+    fn setup(seed: u64) -> (Engine, WorldHandle) {
+        let mut e = Engine::new(seed);
+        let cluster = Cluster::build(&mut e, &amdahl_blade(DiskKind::Raid0), 9);
+        let mut world = World::new(cluster);
+        world.namenode.set_datanodes((1..9).map(NodeId).collect());
+        (e, shared(world))
+    }
+
+    fn basic_job(world: &WorldHandle, conf: HadoopConf, n_reducers: usize) -> JobSpec {
+        JobSpec {
+            name: "test".into(),
+            input_files: vec!["in/data".into()],
+            map: Rc::new(IdentityMap),
+            reduce: Rc::new(RefCell::new(FixedReduce { out_per_reducer: 8.0 * MIB })),
+            n_reducers,
+            conf,
+            map_class: "mapper".into(),
+            reduce_class: "reducer-search".into(),
+            output_prefix: "out".into(),
+            partition: JobSpec::uniform_partition(n_reducers),
+            reduce_records_per_byte: 1.0 / 63.0,
+        }
+        .tap_check(world)
+    }
+
+    trait Tap: Sized {
+        fn tap_check(self, _w: &WorldHandle) -> Self {
+            self
+        }
+    }
+    impl Tap for JobSpec {}
+
+    fn place_input(e: &mut Engine, world: &WorldHandle, bytes: f64) {
+        let mut rng = e.rng.fork(77);
+        // Spread blocks across nodes: one file, replicas rotate by block.
+        let conf = HadoopConf::default();
+        // Round-robin local node per 64 MB chunk for block-level spread.
+        let mut left = bytes;
+        let mut i = 0;
+        while left > 0.0 {
+            let b = left.min(conf.dfs_block_size);
+            preplace_file(
+                world,
+                &mut rng,
+                &format!("in/data/part{i}"),
+                NodeId(1 + (i % 8)),
+                b,
+                &conf,
+            );
+            left -= b;
+            i += 1;
+        }
+    }
+
+    #[test]
+    fn job_runs_to_completion() {
+        let (mut e, w) = setup(5);
+        place_input(&mut e, &w, 512.0 * MIB);
+        let files: Vec<String> = (0..8).map(|i| format!("in/data/part{i}")).collect();
+        let mut spec = basic_job(&w, HadoopConf::default(), 4);
+        spec.input_files = files;
+        let result = shared(None);
+        let r2 = result.clone();
+        run_job(&mut e, &w, spec, move |_, res| *r2.borrow_mut() = Some(res));
+        e.run();
+        let res = result.borrow().clone().unwrap();
+        assert_eq!(res.map_tasks, 8);
+        assert_eq!(res.reduce_tasks, 4);
+        assert!(res.duration > 0.0);
+        assert!(res.map_phase > 0.0 && res.reduce_phase > 0.0);
+        assert!((res.input_bytes - 512.0 * MIB).abs() < 1.0);
+        assert!((res.map_output_bytes - 512.0 * MIB * 1.1).abs() / res.map_output_bytes < 1e-9);
+        assert!((res.hdfs_output_bytes - 4.0 * 8.0 * MIB).abs() < 1.0);
+    }
+
+    #[test]
+    fn map_locality_is_high() {
+        let (mut e, w) = setup(6);
+        place_input(&mut e, &w, 512.0 * MIB);
+        let files: Vec<String> = (0..8).map(|i| format!("in/data/part{i}")).collect();
+        let mut spec = basic_job(&w, HadoopConf::default(), 2);
+        spec.input_files = files;
+        let result = shared(None);
+        let r2 = result.clone();
+        run_job(&mut e, &w, spec, move |_, res| *r2.borrow_mut() = Some(res));
+        e.run();
+        let res = result.borrow().clone().unwrap();
+        assert!(res.map_locality > 0.9, "locality {}", res.map_locality);
+    }
+
+    #[test]
+    fn outputs_registered_in_hdfs() {
+        let (mut e, w) = setup(7);
+        place_input(&mut e, &w, 128.0 * MIB);
+        let files: Vec<String> = (0..2).map(|i| format!("in/data/part{i}")).collect();
+        let mut spec = basic_job(&w, HadoopConf::default(), 3);
+        spec.input_files = files;
+        run_job(&mut e, &w, spec, |_, _| {});
+        e.run();
+        let wb = w.borrow();
+        assert!(wb.namenode.exists("out/part-00000"));
+        assert!(wb.namenode.exists("out/part-00002"));
+        assert!(wb.namenode.bytes_under("out/") > 0.0);
+    }
+
+    #[test]
+    fn slots_limit_parallelism() {
+        // With 1 map slot per node and 16 splits on 8 slaves, the map
+        // phase needs at least two waves; with 3 slots, one.
+        let (mut e1, w1) = setup(8);
+        place_input(&mut e1, &w1, 1024.0 * MIB);
+        let files: Vec<String> = (0..16).map(|i| format!("in/data/part{i}")).collect();
+        let mut spec = basic_job(&w1, HadoopConf { map_slots: 1, ..Default::default() }, 2);
+        spec.input_files = files.clone();
+        let r1 = shared(None);
+        let rr = r1.clone();
+        run_job(&mut e1, &w1, spec, move |_, res| *rr.borrow_mut() = Some(res));
+        e1.run();
+
+        let (mut e3, w3) = setup(8);
+        place_input(&mut e3, &w3, 1024.0 * MIB);
+        let mut spec3 = basic_job(&w3, HadoopConf { map_slots: 3, ..Default::default() }, 2);
+        spec3.input_files = files;
+        let r3 = shared(None);
+        let rr = r3.clone();
+        run_job(&mut e3, &w3, spec3, move |_, res| *rr.borrow_mut() = Some(res));
+        e3.run();
+
+        let m1 = r1.borrow().clone().unwrap().map_phase;
+        let m3 = r3.borrow().clone().unwrap().map_phase;
+        assert!(m1 > m3, "1-slot map phase {m1:.1}s should exceed 3-slot {m3:.1}s");
+    }
+}

@@ -1,0 +1,91 @@
+//! Map-side sort/spill arithmetic (paper §3.1).
+//!
+//! Hadoop v0.17+ collects map output in two buffers inside `io.sort.mb`:
+//! a data buffer (1 − `io.sort.record.percent` of the space) and a
+//! metadata buffer (`io.sort.record.percent`; 16 bytes = 4 ints per
+//! record). When either passes `io.sort.spill.percent`, the contents are
+//! sorted and spilled to local disk; at close, remaining data is sorted
+//! and written, and if there were multiple spills a merge pass re-reads
+//! and re-writes everything.
+//!
+//! The paper sizes the buffer (125 MB, record% 0.2, spill% 0.8) so its
+//! 77 MB / 20 MB mapper output fits in one spill — "most mappers only
+//! need to write data to the disk once".
+
+use crate::conf::HadoopConf;
+use crate::hw::MIB;
+
+/// Per-record metadata: four ints (paper §3.1: "Hadoop keeps four
+/// integers as metadata for a record").
+pub const METADATA_PER_RECORD: f64 = 16.0;
+
+/// Result of the spill plan for one map task.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpillPlan {
+    /// Number of spill files written before/at close.
+    pub spills: usize,
+    /// Total bytes written to local disk across spills (data + metadata
+    /// is sorted in place; only data bytes hit the disk).
+    pub spill_write_bytes: f64,
+    /// Bytes read + written again by the final merge (0 when spills == 1).
+    pub merge_bytes: f64,
+}
+
+/// Compute the spill plan for a map task emitting `out_bytes` across
+/// `out_records` records.
+pub fn plan(conf: &HadoopConf, out_bytes: f64, out_records: f64) -> SpillPlan {
+    let buffer = conf.io_sort_mb as f64 * MIB;
+    let data_cap = buffer * (1.0 - conf.io_sort_record_percent) * conf.io_sort_spill_percent;
+    let meta_cap = buffer * conf.io_sort_record_percent * conf.io_sort_spill_percent;
+    let meta_bytes = out_records * METADATA_PER_RECORD;
+    // Spills triggered by whichever buffer fills first; the final close
+    // always writes whatever remains, so the count is a ceiling with a
+    // minimum of one.
+    let by_data = (out_bytes / data_cap).ceil();
+    let by_meta = (meta_bytes / meta_cap).ceil();
+    let spills = by_data.max(by_meta).max(1.0) as usize;
+    let merge_bytes = if spills > 1 { out_bytes } else { 0.0 };
+    SpillPlan { spills, spill_write_bytes: out_bytes, merge_bytes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_sizing_single_spill() {
+        // §3.1: 77 MB output data + 20 MB metadata fit the 125 MB buffer
+        // with record% 0.2, spill% 0.8 → one spill.
+        let conf = HadoopConf::default();
+        let records = 77.0 * MIB / 63.0; // 63-byte output records
+        let p = plan(&conf, 77.0 * MIB, records);
+        assert_eq!(p.spills, 1, "{p:?}");
+        assert_eq!(p.merge_bytes, 0.0);
+    }
+
+    #[test]
+    fn small_buffer_multi_spill() {
+        let conf = HadoopConf { io_sort_mb: 16, ..Default::default() };
+        let records = 77.0 * MIB / 63.0;
+        let p = plan(&conf, 77.0 * MIB, records);
+        assert!(p.spills > 1, "{p:?}");
+        assert_eq!(p.merge_bytes, 77.0 * MIB);
+    }
+
+    #[test]
+    fn metadata_can_trigger_first() {
+        // Tiny records: metadata dominates (this is why record% matters).
+        let conf = HadoopConf { io_sort_record_percent: 0.01, ..Default::default() };
+        let out_bytes = 20.0 * MIB;
+        let records = out_bytes / 8.0; // 8-byte records → lots of metadata
+        let p = plan(&conf, out_bytes, records);
+        assert!(p.spills > 1, "{p:?}");
+    }
+
+    #[test]
+    fn zero_output_one_spill() {
+        let p = plan(&HadoopConf::default(), 0.0, 0.0);
+        assert_eq!(p.spills, 1);
+        assert_eq!(p.spill_write_bytes, 0.0);
+    }
+}

@@ -1,0 +1,335 @@
+//! Map and reduce task execution: phase chains over the fluid engine.
+//!
+//! A map task: HDFS split read (locality-aware) → map function (framework
+//! record codec + application CPU) → sort/spill to local disk → optional
+//! merge pass. A reduce task: shuffle fetches from every map host → merge
+//! → reduce function (the Zones apps do real pair computation here via
+//! the PJRT kernel) → HDFS output through the §3.4-configurable pipeline.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use super::sortspill;
+use crate::cluster::{ops, NodeId};
+use crate::conf::HadoopConf;
+use crate::hdfs::{self, WorldHandle};
+use crate::sim::engine::shared;
+use crate::sim::{Engine, FlowSpec};
+
+/// One input split (= one HDFS block, as in stock Hadoop).
+#[derive(Debug, Clone)]
+pub struct SplitMeta {
+    pub file: String,
+    pub block_idx: usize,
+    pub bytes: f64,
+    pub records: f64,
+    /// Replica locations (for locality-aware scheduling).
+    pub replicas: Vec<NodeId>,
+}
+
+/// What a map task produces.
+#[derive(Debug, Clone)]
+pub struct MapOutput {
+    /// Serialized map-output bytes (key+value).
+    pub bytes: f64,
+    pub records: f64,
+    /// Application CPU beyond the framework costs, core-seconds.
+    pub app_cpu: f64,
+}
+
+/// Application map logic: split metadata → output volume + app CPU.
+pub trait MapFn {
+    fn run(&self, split: &SplitMeta) -> MapOutput;
+}
+
+/// What one reducer receives.
+#[derive(Debug, Clone)]
+pub struct ReduceInput {
+    pub reducer: usize,
+    pub bytes: f64,
+    pub records: f64,
+}
+
+/// What one reducer does: HDFS output volume + app CPU (possibly from a
+/// real kernel execution).
+#[derive(Debug, Clone)]
+pub struct ReduceOutput {
+    pub hdfs_bytes: f64,
+    pub app_cpu: f64,
+}
+
+/// Application reduce logic.
+pub trait ReduceFn {
+    fn run(&mut self, input: &ReduceInput) -> ReduceOutput;
+}
+
+/// Read one HDFS block at `client` (helper shared by map input and other
+/// single-block readers). Wraps the namenode metadata lookup.
+pub fn read_split(
+    engine: &mut Engine,
+    world: &WorldHandle,
+    client: NodeId,
+    split: &SplitMeta,
+    conf: &HadoopConf,
+    task: &str,
+    on_done: impl FnOnce(&mut Engine) + 'static,
+) {
+    // Single-block file view: reuse the whole-file reader on a synthetic
+    // one-block file name registered at plan time, or read inline. We
+    // read inline using the client read machinery via hdfs::read_file on
+    // the per-split file (the planner registers one file per split when
+    // needed). For standard inputs the split's file has many blocks, so
+    // we read just this block through a dedicated one-shot path.
+    hdfs::client::read_blocks(engine, world, client, vec![split_block(world, split)], conf, task, on_done);
+}
+
+fn split_block(world: &WorldHandle, split: &SplitMeta) -> crate::hdfs::BlockMeta {
+    let w = world.borrow();
+    let f = w
+        .namenode
+        .get_file(&split.file)
+        .unwrap_or_else(|| panic!("input file {} missing", split.file));
+    f.blocks[split.block_idx].clone()
+}
+
+/// Run a full map task on `node`; calls `on_done` with the output record.
+pub fn run_map_task(
+    engine: &mut Engine,
+    world: &WorldHandle,
+    node: NodeId,
+    split: SplitMeta,
+    map_fn: Rc<dyn MapFn>,
+    conf: &HadoopConf,
+    class: &str,
+    on_done: impl FnOnce(&mut Engine, MapOutput) + 'static,
+) {
+    let conf = conf.clone();
+    let world2 = world.clone();
+    let class = class.to_string();
+    let split2 = split.clone();
+    let conf_in = conf.clone();
+    let class_in = class.clone();
+    // Phase 1: read the split from HDFS.
+    read_split(engine, world, node, &split, &conf_in, &class_in, move |engine| {
+        let out = map_fn.run(&split2);
+        // Phase 2: map function compute (record decode + app logic).
+        let (spec, sort_then) = {
+            let w = world2.borrow();
+            let n = w.cluster.node(node);
+            let costs = &n.spec.cpu.costs;
+            let cpu_s = costs.record_codec * (split2.bytes + out.bytes) + out.app_cpu;
+            let spec = ops::compute(engine, &w.cluster, node, cpu_s, &class, "app");
+            (spec, out.clone())
+        };
+        let world3 = world2.clone();
+        let class3 = class.clone();
+        engine.start_flow(spec, move |engine| {
+            // Phase 3: sort + spill to local disk.
+            let plan = sortspill::plan(&conf, sort_then.bytes, sort_then.records);
+            let spill = {
+                let mut w = world3.borrow_mut();
+                w.counters.add_disk(&class3, plan.spill_write_bytes + 2.0 * plan.merge_bytes);
+                let costs = w.cluster.node(node).spec.cpu.costs.clone();
+                let cpu_res = w.cluster.node(node).cpu;
+                // Sorting is comparison sort over records (indirect via
+                // the metadata buffer); log factor folded into the cost.
+                let sort_cpu = costs.sort * sort_then.bytes * (plan.spills as f64).max(1.0);
+                w.cluster.disk_stream_start(engine, node, false);
+                let mut f = if plan.spill_write_bytes > 0.0 {
+                    ops::file_write(engine, &w.cluster, node, plan.spill_write_bytes, false, &class3)
+                } else {
+                    FlowSpec::new(1.0, format!("{class3}:empty-spill"))
+                };
+                if sort_cpu > 0.0 {
+                    let c_sort = engine.class(&format!("{class3}:sort"));
+                    f = f.demand(cpu_res, sort_cpu / plan.spill_write_bytes.max(1.0), c_sort);
+                }
+                f
+            };
+            let world4 = world3.clone();
+            let class4 = class3.clone();
+            engine.start_flow(spill, move |engine| {
+                {
+                    let mut w = world4.borrow_mut();
+                    w.cluster.disk_stream_end(engine, node, false);
+                }
+                // Phase 4: merge pass when more than one spill.
+                if plan.merge_bytes > 0.0 {
+                    let spec = {
+                        let mut w = world4.borrow_mut();
+                        w.cluster.disk_stream_start(engine, node, false);
+                        let n = w.cluster.node(node);
+                        let costs = n.spec.cpu.costs.clone();
+                        let c_merge = engine.class(&format!("{class4}:merge"));
+                        let rbps = n.spec.data_disk.read_bps;
+                        let wbps = n.spec.data_disk.write_bps;
+                        FlowSpec::new(plan.merge_bytes, format!("{class4}:merge@n{}", node.0))
+                            .demand(n.disk, 1.0 / rbps + 1.0 / wbps, c_merge)
+                            .demand(n.cpu, costs.buffered_read + costs.buffered_write_user + costs.sort, c_merge)
+                            .cap(1.0 / (costs.buffered_read + costs.buffered_write_user + costs.sort))
+                    };
+                    let world5 = world4.clone();
+                    engine.start_flow(spec, move |engine| {
+                        {
+                            let mut w = world5.borrow_mut();
+                            w.cluster.disk_stream_end(engine, node, false);
+                        }
+                        on_done(engine, sort_then);
+                    });
+                } else {
+                    on_done(engine, sort_then);
+                }
+            });
+        });
+    });
+}
+
+/// Run a full reduce task on `node`.
+///
+/// `sources` lists (map host, bytes to fetch from that host). `input`
+/// describes the merged reduce input; `reduce_fn` runs the real
+/// application logic (kernel calls happen here); output goes to HDFS
+/// under `output_name`.
+#[allow(clippy::too_many_arguments)]
+pub fn run_reduce_task(
+    engine: &mut Engine,
+    world: &WorldHandle,
+    node: NodeId,
+    sources: Vec<(NodeId, f64)>,
+    input: ReduceInput,
+    reduce_fn: Rc<RefCell<dyn ReduceFn>>,
+    conf: &HadoopConf,
+    class: &str,
+    output_name: String,
+    on_done: impl FnOnce(&mut Engine, ReduceOutput) + 'static,
+) {
+    let conf = conf.clone();
+    let world2 = world.clone();
+    let class = class.to_string();
+    let class_shuffle = class.clone();
+    // Phase 1: shuffle — parallel fetches from every map host.
+    let live: Vec<(NodeId, f64)> = sources.into_iter().filter(|(_, b)| *b > 0.0).collect();
+    let fetch_count = live.len();
+    let done_ctr = shared(0usize);
+    let after_shuffle = Rc::new(RefCell::new(Some(Box::new(move |engine: &mut Engine| {
+        // Phase 2: merge (disk round trip when input exceeds ~70% of the
+        // child heap, as the in-memory merger overflows).
+        let heap = conf.child_heap_mb as f64 * crate::hw::MIB;
+        let needs_disk_merge = input.bytes > 0.7 * heap;
+        let world3 = world2.clone();
+        let class3 = class.clone();
+        let conf3 = conf.clone();
+        let reduce_fn3 = reduce_fn.clone();
+        let output_name3 = output_name.clone();
+        let input3 = input.clone();
+        let run_reduce = move |engine: &mut Engine| {
+            // Phase 3: the reduce function itself (real compute).
+            let out = reduce_fn3.borrow_mut().run(&input3);
+            let spec = {
+                let w = world3.borrow();
+                let n = w.cluster.node(node);
+                let cpu_s =
+                    n.spec.cpu.costs.record_codec * (input3.bytes + out.hdfs_bytes) + out.app_cpu;
+                ops::compute(engine, &w.cluster, node, cpu_s, &class3, "app")
+            };
+            let world4 = world3.clone();
+            let class4 = class3.clone();
+            let conf4 = conf3.clone();
+            engine.start_flow(spec, move |engine| {
+                // Phase 4: write output to HDFS (the §3.4 battleground).
+                if out.hdfs_bytes > 0.0 {
+                    let out2 = out.clone();
+                    hdfs::write_file(
+                        engine,
+                        &world4,
+                        node,
+                        output_name3,
+                        out.hdfs_bytes,
+                        &conf4,
+                        &class4,
+                        move |engine| on_done(engine, out2),
+                    );
+                } else {
+                    on_done(engine, out);
+                }
+            });
+        };
+        if needs_disk_merge {
+            let spec = {
+                let mut w = world2.borrow_mut();
+                w.cluster.disk_stream_start(engine, node, false);
+                w.counters.add_disk(&class, 2.0 * input.bytes);
+                let n = w.cluster.node(node);
+                let costs = n.spec.cpu.costs.clone();
+                let c_merge = engine.class(&format!("{class}:merge"));
+                FlowSpec::new(input.bytes, format!("{class}:reduce-merge@n{}", node.0))
+                    .demand(n.disk, 1.0 / n.spec.data_disk.read_bps + 1.0 / n.spec.data_disk.write_bps, c_merge)
+                    .demand(n.cpu, costs.buffered_read + costs.buffered_write_user + costs.sort, c_merge)
+                    .cap(1.0 / (costs.buffered_read + costs.buffered_write_user + costs.sort))
+            };
+            let world3 = world2.clone();
+            engine.start_flow(spec, move |engine| {
+                {
+                    let mut w = world3.borrow_mut();
+                    w.cluster.disk_stream_end(engine, node, false);
+                }
+                run_reduce(engine);
+            });
+        } else {
+            run_reduce(engine);
+        }
+    }) as Box<dyn FnOnce(&mut Engine)>)));
+
+    if fetch_count == 0 {
+        let cb = after_shuffle.borrow_mut().take().unwrap();
+        cb(engine);
+        return;
+    }
+    for (src, bytes) in live {
+        let spec = {
+            let mut w = world.borrow_mut();
+            w.counters.add_disk(&class_shuffle, bytes);
+            w.counters.add_net(&class_shuffle, 2.0 * bytes);
+            w.cluster.disk_stream_start(engine, src, true);
+            let cluster = &w.cluster;
+            let n = cluster.node(src);
+            let costs = n.spec.cpu.costs.clone();
+            let c_shuffle = engine.class(&format!("{class_shuffle}:shuffle"));
+            let c_send = engine.class(&format!("{class_shuffle}:net-send"));
+            let c_recv = engine.class(&format!("{class_shuffle}:net-recv"));
+            // Map-output serving: local-disk read + HTTP-ish socket.
+            let mut f = FlowSpec::new(bytes, format!("{class_shuffle}:shuffle n{}->n{}", src.0, node.0))
+                .demand(n.disk, 1.0 / n.spec.data_disk.read_bps, c_shuffle)
+                .demand(n.cpu, costs.buffered_read + costs.hadoop_stream, c_shuffle);
+            if src == node {
+                f = f
+                    .demand(n.membus, n.spec.net.loopback_copies, c_shuffle)
+                    .demand(n.cpu, costs.net_send_local + costs.net_recv_local, c_send)
+                    .cap(1.0 / (costs.net_send_local + costs.buffered_read))
+            } else {
+                let d = cluster.node(node);
+                f = f
+                    .demand(n.nic_tx, 1.0, c_send)
+                    .demand(d.nic_rx, 1.0, c_recv)
+                    .demand(n.cpu, costs.net_send_remote, c_send)
+                    .demand(d.cpu, d.spec.cpu.costs.net_recv_remote + d.spec.cpu.costs.hadoop_stream, c_recv)
+                    .cap(1.0 / (d.spec.cpu.costs.net_recv_remote + d.spec.cpu.costs.hadoop_stream))
+            }
+            f
+        };
+        let world_f = world.clone();
+        let ctr = done_ctr.clone();
+        let after = after_shuffle.clone();
+        engine.start_flow(spec, move |engine| {
+            {
+                let mut w = world_f.borrow_mut();
+                w.cluster.disk_stream_end(engine, src, true);
+            }
+            *ctr.borrow_mut() += 1;
+            if *ctr.borrow() == fetch_count {
+                let cb = after.borrow_mut().take().unwrap();
+                cb(engine);
+            }
+        });
+    }
+}

@@ -1,0 +1,588 @@
+//! Regeneration of every table and figure in the paper's evaluation.
+//!
+//! One function per exhibit; each returns structured rows plus a
+//! rendered table whose layout mirrors the paper. Absolute numbers come
+//! from the calibrated simulator (DESIGN.md §2 lists the substitutions);
+//! the *shapes* — who wins, by what factor, where crossovers fall — are
+//! the reproduction targets and are asserted by `rust/tests/`.
+
+use std::rc::Rc;
+
+use crate::amdahl::{amdahl_row, task_cpu_seconds, AmdahlRow};
+use crate::cluster::{ops, Cluster, NodeId};
+use crate::conf::{ClusterPreset, HadoopConf};
+use crate::hdfs::testdfsio;
+use crate::hw::cpu::atom330;
+use crate::hw::{amdahl_blade, DiskKind, TaskClass, MIB};
+use crate::sim::engine::shared;
+use crate::sim::Engine;
+use crate::zones::{run_app, App, RunOutcome, ZonesConfig};
+
+// ---------------------------------------------------------------- Fig 1
+
+/// One bar of Fig 1: a single-threaded 100×64 MB file read or write.
+#[derive(Debug, Clone)]
+pub struct Fig1Row {
+    pub disk: DiskKind,
+    pub write: bool,
+    pub direct: bool,
+    pub mbps: f64,
+    /// CPU of the user thread, % of one core (paper convention).
+    pub cpu_user_pct: f64,
+    /// CPU of the kernel flush thread, % of one core.
+    pub cpu_flush_pct: f64,
+}
+
+/// Fig 1: disk I/O throughput and CPU utilization on one blade.
+pub fn fig1(seed: u64) -> Vec<Fig1Row> {
+    let mut rows = Vec::new();
+    for disk in [DiskKind::Hdd, DiskKind::Ssd, DiskKind::Raid0] {
+        for write in [false, true] {
+            for direct in [false, true] {
+                let mut e = Engine::new(seed);
+                let mut cluster = Cluster::build(&mut e, &amdahl_blade(disk), 1);
+                let bytes = 100.0 * 64.0 * MIB; // §3.2: 100 × 64 MB files
+                cluster.disk_stream_start(&mut e, NodeId(0), !write);
+                let spec = if write {
+                    ops::file_write(&mut e, &cluster, NodeId(0), bytes, direct, "bench")
+                } else {
+                    ops::file_read(&mut e, &cluster, NodeId(0), bytes, direct, "bench")
+                };
+                let t = shared(0.0f64);
+                let tt = t.clone();
+                e.start_flow(spec, move |e| *tt.borrow_mut() = e.now());
+                e.run();
+                let dur = *t.borrow();
+                let cpu = cluster.node(NodeId(0)).cpu;
+                let user_cls = if write { "bench:write-user" } else { "bench:read-user" };
+                let cu = e.class(user_cls);
+                let cf = e.class("bench:flush");
+                rows.push(Fig1Row {
+                    disk,
+                    write,
+                    direct,
+                    mbps: bytes / dur / MIB,
+                    cpu_user_pct: e.busy_for(cpu, cu) / dur * 100.0,
+                    cpu_flush_pct: e.busy_for(cpu, cf) / dur * 100.0,
+                });
+            }
+        }
+    }
+    rows
+}
+
+pub fn render_fig1(rows: &[Fig1Row]) -> String {
+    let mut s = String::from(
+        "Fig 1: disk I/O performance and CPU utilization (one blade)\n\
+         disk              op     mode      MB/s   user%  flush%\n",
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "{:<17} {:<6} {:<8} {:>6.1}  {:>5.1}  {:>6.1}\n",
+            r.disk.name(),
+            if r.write { "write" } else { "read" },
+            if r.direct { "direct" } else { "normal" },
+            r.mbps,
+            r.cpu_user_pct,
+            r.cpu_flush_pct,
+        ));
+    }
+    s
+}
+
+// -------------------------------------------------------------- Table 2
+
+#[derive(Debug, Clone)]
+pub struct Table2Row {
+    pub traffic: &'static str,
+    pub mbps: f64,
+    pub cpu_send_pct: f64,
+    pub cpu_recv_pct: f64,
+}
+
+/// Table 2: network throughput and CPU cost, local vs remote.
+pub fn table2(seed: u64) -> Vec<Table2Row> {
+    let bytes = 4096.0 * MIB;
+    // Local (loopback).
+    let mut e = Engine::new(seed);
+    let cluster = Cluster::build(&mut e, &amdahl_blade(DiskKind::Raid0), 2);
+    let spec = ops::tcp_local(&mut e, &cluster, NodeId(0), bytes, "bench");
+    let t = shared(0.0f64);
+    let tt = t.clone();
+    e.start_flow(spec, move |e| *tt.borrow_mut() = e.now());
+    e.run();
+    let dur = *t.borrow();
+    let cpu0 = cluster.node(NodeId(0)).cpu;
+    let cs = e.class("bench:net-send");
+    let cr = e.class("bench:net-recv");
+    let local = Table2Row {
+        traffic: "local",
+        mbps: bytes / dur / MIB,
+        cpu_send_pct: e.busy_for(cpu0, cs) / dur * 100.0,
+        cpu_recv_pct: e.busy_for(cpu0, cr) / dur * 100.0,
+    };
+    // Remote.
+    let mut e = Engine::new(seed + 1);
+    let cluster = Cluster::build(&mut e, &amdahl_blade(DiskKind::Raid0), 2);
+    let spec = ops::tcp_remote(&mut e, &cluster, NodeId(0), NodeId(1), bytes, "bench");
+    let t = shared(0.0f64);
+    let tt = t.clone();
+    e.start_flow(spec, move |e| *tt.borrow_mut() = e.now());
+    e.run();
+    let dur = *t.borrow();
+    let cs = e.class("bench:net-send");
+    let cr = e.class("bench:net-recv");
+    let remote = Table2Row {
+        traffic: "remote",
+        mbps: bytes / dur / MIB,
+        cpu_send_pct: e.busy_for(cluster.node(NodeId(0)).cpu, cs) / dur * 100.0,
+        cpu_recv_pct: e.busy_for(cluster.node(NodeId(1)).cpu, cr) / dur * 100.0,
+    };
+    vec![local, remote]
+}
+
+pub fn render_table2(rows: &[Table2Row]) -> String {
+    let mut s = String::from(
+        "Table 2: network I/O on the Amdahl blades\n\
+         traffic  max throughput  CPU(send)  CPU(receive)\n",
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "{:<8} {:>9.0} MB/s  {:>8.2}%  {:>10.2}%\n",
+            r.traffic, r.mbps, r.cpu_send_pct, r.cpu_recv_pct
+        ));
+    }
+    s
+}
+
+// ---------------------------------------------------------------- Fig 2
+
+#[derive(Debug, Clone)]
+pub struct Fig2Row {
+    pub disk: DiskKind,
+    pub workers: usize,
+    /// Write: direct I/O? Read: local reads?
+    pub variant: bool,
+    pub per_node_mbps: f64,
+}
+
+/// Fig 2(a): HDFS write throughput per node (TestDFSIO, r = 3).
+pub fn fig2a(seed: u64, bytes_per_writer: f64) -> Vec<Fig2Row> {
+    let mut rows = Vec::new();
+    for disk in [DiskKind::Hdd, DiskKind::Raid0, DiskKind::Ssd] {
+        for direct in [false, true] {
+            for workers in 1..=3 {
+                let conf =
+                    HadoopConf { data_disk: disk, direct_io_write: direct, ..Default::default() };
+                let r = testdfsio::write_test(seed, workers, bytes_per_writer, &conf);
+                rows.push(Fig2Row { disk, workers, variant: direct, per_node_mbps: r.per_node_mbps });
+            }
+        }
+    }
+    rows
+}
+
+/// Fig 2(b): HDFS read throughput per node, local vs remote.
+pub fn fig2b(seed: u64, bytes_per_reader: f64) -> Vec<Fig2Row> {
+    let mut rows = Vec::new();
+    for disk in [DiskKind::Hdd, DiskKind::Raid0, DiskKind::Ssd] {
+        for local in [false, true] {
+            for workers in 1..=3 {
+                let conf = HadoopConf { data_disk: disk, ..Default::default() };
+                let r = testdfsio::read_test(seed, workers, bytes_per_reader, &conf, !local);
+                rows.push(Fig2Row { disk, workers, variant: local, per_node_mbps: r.per_node_mbps });
+            }
+        }
+    }
+    rows
+}
+
+pub fn render_fig2(rows: &[Fig2Row], write: bool) -> String {
+    let mut s = if write {
+        String::from("Fig 2(a): HDFS write MB/s per node (TestDFSIO, r=3)\ndisk              mode    1 mapper  2 mappers  3 mappers\n")
+    } else {
+        String::from("Fig 2(b): HDFS read MB/s per node (TestDFSIO)\ndisk              mode    1 mapper  2 mappers  3 mappers\n")
+    };
+    for disk in [DiskKind::Hdd, DiskKind::Raid0, DiskKind::Ssd] {
+        for variant in [false, true] {
+            let vals: Vec<f64> = (1..=3)
+                .map(|w| {
+                    rows.iter()
+                        .find(|r| r.disk == disk && r.workers == w && r.variant == variant)
+                        .map(|r| r.per_node_mbps)
+                        .unwrap_or(f64::NAN)
+                })
+                .collect();
+            let mode = match (write, variant) {
+                (true, false) => "normal",
+                (true, true) => "direct",
+                (false, false) => "remote",
+                (false, true) => "local",
+            };
+            s.push_str(&format!(
+                "{:<17} {:<7} {:>8.1}  {:>9.1}  {:>9.1}\n",
+                disk.name(),
+                mode,
+                vals[0],
+                vals[1],
+                vals[2]
+            ));
+        }
+    }
+    s
+}
+
+// ---------------------------------------------------------------- Fig 3
+
+#[derive(Debug, Clone)]
+pub struct Fig3Row {
+    pub label: &'static str,
+    pub replication: usize,
+    pub seconds: f64,
+}
+
+/// Fig 3: Neighbor Searching under the §3.4 output-path improvements.
+/// `scale` sizes the synthetic catalog (the shape, not the absolute
+/// seconds, is the target).
+pub fn fig3(seed: u64, scale: f64) -> Vec<Fig3Row> {
+    let mut rows = Vec::new();
+    for replication in [1usize, 3] {
+        let cases: [(&'static str, HadoopConf); 5] = [
+            ("original (8B writes)", HadoopConf::fig3_baseline(replication)),
+            ("buffer", HadoopConf {
+                buffered_output: true,
+                io_bytes_per_checksum: 4096,
+                ..HadoopConf::fig3_baseline(replication)
+            }),
+            ("buffer+lzo", HadoopConf {
+                buffered_output: true,
+                io_bytes_per_checksum: 4096,
+                lzo_output: true,
+                ..HadoopConf::fig3_baseline(replication)
+            }),
+            ("buffer+direct", HadoopConf {
+                buffered_output: true,
+                io_bytes_per_checksum: 4096,
+                direct_io_write: true,
+                ..HadoopConf::fig3_baseline(replication)
+            }),
+            ("buffer+lzo+direct", HadoopConf {
+                buffered_output: true,
+                io_bytes_per_checksum: 4096,
+                lzo_output: true,
+                direct_io_write: true,
+                ..HadoopConf::fig3_baseline(replication)
+            }),
+        ];
+        for (label, conf) in cases {
+            let zcfg = ZonesConfig {
+                seed,
+                scale,
+                theta_arcsec: 60.0,
+                block_theta_mult: 10.0,
+                partition_cells: 4,
+                kernel_every: usize::MAX, // cost model only; kernels in e2e example
+                kernels: None,
+            };
+            let out = run_app(ClusterPreset::Amdahl, &conf, &zcfg, App::Search);
+            rows.push(Fig3Row { label, replication, seconds: out.total_seconds });
+        }
+    }
+    rows
+}
+
+pub fn render_fig3(rows: &[Fig3Row]) -> String {
+    let mut s = String::from(
+        "Fig 3: Neighbor Searching improvements (simulated seconds, scaled dataset)\n\
+         configuration            r=1        r=3\n",
+    );
+    for label in ["original (8B writes)", "buffer", "buffer+lzo", "buffer+direct", "buffer+lzo+direct"] {
+        let v1 = rows.iter().find(|r| r.label == label && r.replication == 1).map(|r| r.seconds);
+        let v3 = rows.iter().find(|r| r.label == label && r.replication == 3).map(|r| r.seconds);
+        s.push_str(&format!(
+            "{:<22} {:>8.1}s  {:>8.1}s\n",
+            label,
+            v1.unwrap_or(f64::NAN),
+            v3.unwrap_or(f64::NAN)
+        ));
+    }
+    s
+}
+
+// -------------------------------------------------------------- Table 3
+
+#[derive(Debug, Clone)]
+pub struct Table3 {
+    /// Seconds for [θ=60, θ=30, θ=15, stat] on the Amdahl cluster.
+    pub amdahl: [f64; 4],
+    /// Seconds for [θ=30, θ=15, stat] on the OCC cluster (θ=60 does not
+    /// fit its disks — N/A in the paper too).
+    pub occ: [f64; 3],
+    pub outcomes_amdahl: Vec<RunOutcome>,
+    pub outcomes_occ: Vec<RunOutcome>,
+}
+
+/// Table 3: end-to-end runtimes. `scale` sizes the catalog; LZO is off
+/// (§3.5: the OCC cluster could not build LZO, so neither side uses it).
+pub fn table3(seed: u64, scale: f64, kernels: Option<Rc<crate::runtime::PairKernels>>) -> Table3 {
+    let zc = |theta: f64| ZonesConfig {
+        seed,
+        scale,
+        theta_arcsec: theta,
+        block_theta_mult: 10.0,
+        partition_cells: 4,
+        kernel_every: if kernels.is_some() { 16 } else { usize::MAX },
+        kernels: kernels.clone(),
+    };
+    // §3.4/§3.5 configuration: buffered output + direct I/O, no LZO;
+    // 2 reducers/node for search, 3 for stat.
+    let search_conf = HadoopConf {
+        buffered_output: true,
+        direct_io_write: true,
+        lzo_output: false,
+        reduce_slots: 2,
+        ..Default::default()
+    };
+    let stat_conf = HadoopConf { reduce_slots: 3, ..search_conf.clone() };
+
+    let mut amdahl = Vec::new();
+    for theta in [60.0, 30.0, 15.0] {
+        amdahl.push(run_app(ClusterPreset::Amdahl, &search_conf, &zc(theta), App::Search));
+    }
+    amdahl.push(run_app(ClusterPreset::Amdahl, &stat_conf, &zc(60.0), App::Stat));
+
+    let mut occ = Vec::new();
+    for theta in [30.0, 15.0] {
+        occ.push(run_app(ClusterPreset::Occ, &search_conf, &zc(theta), App::Search));
+    }
+    occ.push(run_app(ClusterPreset::Occ, &stat_conf, &zc(60.0), App::Stat));
+
+    Table3 {
+        amdahl: [
+            amdahl[0].total_seconds,
+            amdahl[1].total_seconds,
+            amdahl[2].total_seconds,
+            amdahl[3].total_seconds,
+        ],
+        occ: [occ[0].total_seconds, occ[1].total_seconds, occ[2].total_seconds],
+        outcomes_amdahl: amdahl,
+        outcomes_occ: occ,
+    }
+}
+
+pub fn render_table3(t: &Table3) -> String {
+    format!(
+        "Table 3: running time in seconds (simulated, scaled dataset)\n\
+         {:<8} {:>8} {:>8} {:>8} {:>8}\n\
+         {:<8} {:>8.0} {:>8.0} {:>8.0} {:>8.0}\n\
+         {:<8} {:>8} {:>8.0} {:>8.0} {:>8.0}\n",
+        "", "60\"", "30\"", "15\"", "stat",
+        "Amdahl", t.amdahl[0], t.amdahl[1], t.amdahl[2], t.amdahl[3],
+        "OCC", "N/A", t.occ[0], t.occ[1], t.occ[2],
+    )
+}
+
+// -------------------------------------------------------------- Table 4
+
+/// Table 4: Amdahl numbers per task class, measured from scenario runs.
+pub fn table4(seed: u64, scale: f64) -> Vec<AmdahlRow> {
+    let cpu = atom330();
+    let mut rows = Vec::new();
+
+    // HDFS read/write rows: TestDFSIO-shaped scenarios with counters.
+    {
+        let conf = HadoopConf::default();
+        let mut engine = Engine::new(seed);
+        let (world, files) = crate::zones::setup_world(
+            &mut engine,
+            ClusterPreset::Amdahl,
+            &conf,
+            512.0 * MIB,
+        );
+        // Write phase.
+        let t0 = engine.now();
+        for (i, _) in files.iter().enumerate().take(8) {
+            crate::hdfs::write_file(
+                &mut engine,
+                &world,
+                NodeId(1 + (i % 8)),
+                format!("t4/w{i}"),
+                64.0 * MIB,
+                &conf,
+                "hdfs-write",
+                |_| {},
+            );
+        }
+        engine.run();
+        let wall_w = engine.now() - t0;
+        // Read phase (local).
+        let t1 = engine.now();
+        for i in 0..8 {
+            crate::hdfs::read_file(
+                &mut engine,
+                &world,
+                NodeId(1 + (i % 8)),
+                &format!("t4/w{i}"),
+                &conf,
+                crate::hdfs::ReadOpts::default(),
+                "hdfs-read",
+                |_| {},
+            );
+        }
+        engine.run();
+        let wall_r = engine.now() - t1;
+        let w = world.borrow();
+        let cpu_w = task_cpu_seconds(&engine, &w.cluster, "hdfs-write");
+        let cpu_r = task_cpu_seconds(&engine, &w.cluster, "hdfs-read");
+        rows.push(amdahl_row(&cpu, TaskClass::HdfsRead, &w.counters.tally("hdfs-read"), cpu_r, wall_r * 8.0));
+        rows.push(amdahl_row(&cpu, TaskClass::HdfsWrite, &w.counters.tally("hdfs-write"), cpu_w, wall_w * 8.0));
+    }
+
+    // Mapper / reducer rows from application runs.
+    let zcfg = ZonesConfig {
+        seed,
+        scale,
+        theta_arcsec: 60.0,
+        block_theta_mult: 10.0,
+        partition_cells: 4,
+        kernel_every: usize::MAX,
+        kernels: None,
+    };
+    let conf = HadoopConf {
+        buffered_output: true,
+        direct_io_write: true,
+        reduce_slots: 2,
+        ..Default::default()
+    };
+    let search = run_app_with_stats(&conf, &zcfg, App::Search);
+    rows.push(search.mapper_row(&cpu));
+    let stat_conf = HadoopConf { reduce_slots: 3, ..conf.clone() };
+    let stat = run_app_with_stats(&stat_conf, &zcfg, App::Stat);
+    rows.push(stat.reducer_row(&cpu, TaskClass::ReducerStat));
+    rows.push(search.reducer_row(&cpu, TaskClass::ReducerSearch));
+    rows
+}
+
+/// Class-resolved stats of one app run (internal to Table 4).
+struct AppStats {
+    mapper_cpu: f64,
+    mapper_tally: crate::amdahl::IoTally,
+    map_wall: f64,
+    reducer_cpu: f64,
+    reducer_tally: crate::amdahl::IoTally,
+    reduce_wall: f64,
+    reduce_class: String,
+}
+
+impl AppStats {
+    fn mapper_row(&self, cpu: &crate::hw::CpuSpec) -> AmdahlRow {
+        amdahl_row(cpu, TaskClass::Mapper, &self.mapper_tally, self.mapper_cpu, self.map_wall * 8.0)
+    }
+    fn reducer_row(&self, cpu: &crate::hw::CpuSpec, class: TaskClass) -> AmdahlRow {
+        let _ = &self.reduce_class;
+        amdahl_row(cpu, class, &self.reducer_tally, self.reducer_cpu, self.reduce_wall * 8.0)
+    }
+}
+
+fn run_app_with_stats(conf: &HadoopConf, zcfg: &ZonesConfig, app: App) -> AppStats {
+    let mut engine = Engine::new(zcfg.seed);
+    let cat = zcfg.catalog();
+    let (world, files) = crate::zones::setup_world(
+        &mut engine,
+        ClusterPreset::Amdahl,
+        conf,
+        cat.input_bytes(),
+    );
+    let cpu = atom330();
+    let n_reducers = 8 * conf.reduce_slots;
+    let (spec, _reduce) = match app {
+        App::Search => crate::zones::apps::neighbor_search_job(zcfg, &cpu, conf, files, n_reducers),
+        App::Stat => crate::zones::apps::neighbor_stat_job(zcfg, &cpu, conf, files, n_reducers),
+    };
+    let reduce_class = spec.reduce_class.clone();
+    let result = shared(None::<crate::mapreduce::JobResult>);
+    let r2 = result.clone();
+    crate::mapreduce::run_job(&mut engine, &world, spec, move |_, res| {
+        *r2.borrow_mut() = Some(res)
+    });
+    engine.run();
+    let job = result.borrow().clone().unwrap();
+    let w = world.borrow();
+    AppStats {
+        mapper_cpu: task_cpu_seconds(&engine, &w.cluster, "mapper"),
+        mapper_tally: w.counters.tally("mapper"),
+        map_wall: job.map_phase.max(1e-9),
+        reducer_cpu: task_cpu_seconds(&engine, &w.cluster, &reduce_class),
+        reducer_tally: w.counters.tally(&reduce_class),
+        reduce_wall: job.reduce_phase.max(1e-9),
+        reduce_class,
+    }
+}
+
+pub fn render_table4(rows: &[AmdahlRow]) -> String {
+    let mut s = String::from(
+        "Table 4: Amdahl numbers for Hadoop tasks\n\
+         task              Freq   IPC   InstrRate      AD     ADN\n",
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "{:<17} {:>4.2} {:>5.2}  {:>9.2}  {}  {}\n",
+            r.task,
+            r.freq,
+            r.ipc,
+            r.instr_rate_mips,
+            r.ad.map(|v| format!("{v:>6.2}")).unwrap_or_else(|| "   N/A".into()),
+            r.adn.map(|v| format!("{v:>6.2}")).unwrap_or_else(|| "   N/A".into()),
+        ));
+    }
+    s
+}
+
+// ------------------------------------------------------------ §3.6 energy
+
+#[derive(Debug, Clone)]
+pub struct EnergyComparison {
+    /// OCC/Amdahl energy ratio, data-intensive (θ=30″; paper: 7.7×).
+    pub search_ratio: f64,
+    /// Compute-intensive ratio (paper: 3.4×).
+    pub stat_ratio: f64,
+}
+
+/// §3.6: energy-efficiency ratios from a Table 3 run.
+pub fn energy(t3: &Table3) -> EnergyComparison {
+    let a30 = &t3.outcomes_amdahl[1].energy;
+    let o30 = &t3.outcomes_occ[0].energy;
+    let astat = &t3.outcomes_amdahl[3].energy;
+    let ostat = &t3.outcomes_occ[2].energy;
+    EnergyComparison {
+        search_ratio: crate::energy::efficiency_ratio(a30, o30),
+        stat_ratio: crate::energy::efficiency_ratio(astat, ostat),
+    }
+}
+
+pub fn render_energy(e: &EnergyComparison) -> String {
+    format!(
+        "§3.6 energy efficiency (OCC energy / Amdahl energy, same work)\n\
+         data-intensive (search θ=30\"): {:.1}x   (paper: 7.7x)\n\
+         compute-intensive (stat):      {:.1}x   (paper: 3.4x)\n",
+        e.search_ratio, e.stat_ratio
+    )
+}
+
+// ------------------------------------------------------------ §4 balance
+
+/// §4: the core-count balance estimate.
+pub fn balance() -> String {
+    let est = crate::amdahl::balance::estimate(&crate::amdahl::balance::BalanceInputs {
+        cpu: atom330(),
+        disk: crate::hw::disk::raid0_f1(),
+        net: crate::hw::net::amdahl_net(),
+        mean_ipc: 0.5,
+    });
+    format!("§4 Amdahl-law balance estimate\n{}\n", crate::amdahl::balance::render(&est))
+}
+
+/// Table 1: the configuration echo.
+pub fn table1() -> String {
+    format!("Table 1: Hadoop configuration parameters\n{}", HadoopConf::default().render_table1())
+}

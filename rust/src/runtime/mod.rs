@@ -1,0 +1,285 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas kernels.
+//!
+//! Build-time Python (`make artifacts`) lowers the Layer-2 model to HLO
+//! text in `artifacts/`; this module loads the text with
+//! `HloModuleProto::from_text_file`, compiles each variant once on the
+//! PJRT CPU client, and exposes typed entry points the Zones reducers
+//! call on the hot path. Python is never on the request path.
+//!
+//! Artifacts are compiled per block-size variant (256/1024/4096 rows,
+//! see `python/compile/aot.py`); calls pad to the smallest fitting
+//! variant and pass true row counts for in-kernel masking.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Number of θ bins the histogram artifacts were compiled with.
+pub const HIST_BINS: usize = 60;
+
+/// A loaded, compiled kernel library.
+pub struct PairKernels {
+    _client: xla::PjRtClient,
+    count: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    hist: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+}
+
+/// Default artifacts directory: `$AMDAHL_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("AMDAHL_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+impl PairKernels {
+    /// Load every artifact listed in `manifest.txt` under `dir`.
+    pub fn load(dir: &Path) -> Result<PairKernels> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {manifest:?} — run `make artifacts` first"))?;
+        let client = xla::PjRtClient::cpu().map_err(wrap)?;
+        let mut count = BTreeMap::new();
+        let mut hist = BTreeMap::new();
+        for line in text.lines() {
+            let mut parts = line.split_whitespace();
+            let (kind, n, file) = (
+                parts.next().ok_or_else(|| anyhow!("bad manifest line: {line}"))?,
+                parts.next().ok_or_else(|| anyhow!("bad manifest line: {line}"))?,
+                parts.next().ok_or_else(|| anyhow!("bad manifest line: {line}"))?,
+            );
+            let n: usize = n.parse()?;
+            let path = dir.join(file);
+            let proto =
+                xla::HloModuleProto::from_text_file(path.to_str().unwrap()).map_err(wrap)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(wrap)?;
+            match kind {
+                "pair_count" => {
+                    count.insert(n, exe);
+                }
+                "pair_hist" => {
+                    hist.insert(n, exe);
+                }
+                other => bail!("unknown artifact kind {other}"),
+            }
+        }
+        if count.is_empty() || hist.is_empty() {
+            bail!("manifest {manifest:?} missing kernel variants");
+        }
+        Ok(PairKernels { _client: client, count, hist })
+    }
+
+    /// Load from [`default_artifacts_dir`].
+    pub fn load_default() -> Result<PairKernels> {
+        Self::load(&default_artifacts_dir())
+    }
+
+    /// Smallest compiled variant with capacity ≥ `n`.
+    fn variant<'a>(
+        table: &'a BTreeMap<usize, xla::PjRtLoadedExecutable>,
+        n: usize,
+    ) -> Result<(usize, &'a xla::PjRtLoadedExecutable)> {
+        table
+            .range(n.max(1)..)
+            .next()
+            .map(|(&k, v)| (k, v))
+            .ok_or_else(|| anyhow!("block of {n} rows exceeds largest compiled variant"))
+    }
+
+    fn pack(points: &[[f32; 2]], n: usize) -> Result<xla::Literal> {
+        let mut flat = vec![0.0f32; n * 2];
+        for (i, p) in points.iter().enumerate() {
+            flat[i * 2] = p[0];
+            flat[i * 2 + 1] = p[1];
+        }
+        xla::Literal::vec1(&flat).reshape(&[n as i64, 2]).map_err(wrap)
+    }
+
+    /// Count pairs with separation ≤ θ between `x` and `y`, given as
+    /// block-local tangent-plane points in radians (zero-padding is
+    /// masked via the true counts). `theta_sq` is θ² in radians².
+    ///
+    /// Returns per-row neighbor counts for `x` plus the total. For a
+    /// self-block call (`x == y`), the caller subtracts the `x.len()`
+    /// self-matches.
+    pub fn pair_count(
+        &self,
+        x: &[[f32; 2]],
+        y: &[[f32; 2]],
+        theta_sq: f32,
+    ) -> Result<(Vec<i32>, i64)> {
+        let need = x.len().max(y.len());
+        let (n, exe) = Self::variant(&self.count, need)?;
+        let args = [
+            Self::pack(x, n)?,
+            Self::pack(y, n)?,
+            xla::Literal::vec1(&[x.len() as i32]),
+            xla::Literal::vec1(&[y.len() as i32]),
+            xla::Literal::vec1(&[theta_sq]),
+        ];
+        let result = exe.execute::<xla::Literal>(&args).map_err(wrap)?[0][0]
+            .to_literal_sync()
+            .map_err(wrap)?;
+        let (rows_lit, total_lit) = result.to_tuple2().map_err(wrap)?;
+        let rows: Vec<i32> = rows_lit.to_vec().map_err(wrap)?;
+        let total: i32 = total_lit.to_vec::<i32>().map_err(wrap)?[0];
+        Ok((rows[..x.len()].to_vec(), total as i64))
+    }
+
+    /// Cumulative pair counts for squared θ-bin radii `theta_sqs`
+    /// (must have exactly [`HIST_BINS`] entries — the compiled shape).
+    pub fn pair_histogram(
+        &self,
+        x: &[[f32; 2]],
+        y: &[[f32; 2]],
+        theta_sqs: &[f32],
+    ) -> Result<Vec<i64>> {
+        if theta_sqs.len() != HIST_BINS {
+            bail!(
+                "histogram artifacts are compiled for {HIST_BINS} bins, got {}",
+                theta_sqs.len()
+            );
+        }
+        let need = x.len().max(y.len());
+        let (n, exe) = Self::variant(&self.hist, need)?;
+        let args = [
+            Self::pack(x, n)?,
+            Self::pack(y, n)?,
+            xla::Literal::vec1(&[x.len() as i32]),
+            xla::Literal::vec1(&[y.len() as i32]),
+            xla::Literal::vec1(theta_sqs),
+        ];
+        let result = exe.execute::<xla::Literal>(&args).map_err(wrap)?[0][0]
+            .to_literal_sync()
+            .map_err(wrap)?;
+        let hist_lit = result.to_tuple1().map_err(wrap)?;
+        let hist: Vec<i32> = hist_lit.to_vec().map_err(wrap)?;
+        Ok(hist.into_iter().map(|v| v as i64).collect())
+    }
+}
+
+fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}
+
+/// θ² in radians² for θ given in arcseconds (the paper's unit).
+pub fn arcsec_sq(theta_arcsec: f64) -> f32 {
+    let r = theta_arcsec * std::f64::consts::PI / 180.0 / 3600.0;
+    (r * r) as f32
+}
+
+/// The paper's θ bins for Neighbor Statistics: 1″..=60″, squared.
+pub fn stat_bins() -> Vec<f32> {
+    (1..=HIST_BINS).map(|a| arcsec_sq(a as f64)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// CPU-side brute force for validation (explicit differences — a
+    /// different formulation than the kernel's matmul expansion, so this
+    /// cross-checks the expansion's stability at block-local magnitudes).
+    fn brute(x: &[[f32; 2]], y: &[[f32; 2]], t2: f32) -> i64 {
+        let mut n = 0i64;
+        for a in x {
+            for b in y {
+                let du = a[0] - b[0];
+                let dv = a[1] - b[1];
+                if du * du + dv * dv <= t2 {
+                    n += 1;
+                }
+            }
+        }
+        n
+    }
+
+    fn sky(seed: u64, n: usize) -> Vec<[f32; 2]> {
+        let mut rng = crate::sim::Rng::new(seed);
+        (0..n)
+            .map(|_| [rng.range(0.0, 3e-3) as f32, rng.range(0.0, 3e-3) as f32])
+            .collect()
+    }
+
+    fn kernels() -> Option<PairKernels> {
+        // Skip gracefully when artifacts have not been built (raw
+        // `cargo test` without `make artifacts`).
+        PairKernels::load(&default_artifacts_dir()).ok()
+    }
+
+    #[test]
+    fn pair_count_matches_brute_force() {
+        let Some(k) = kernels() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let x = sky(1, 200);
+        let y = sky(2, 150);
+        let t2 = arcsec_sq(120.0); // generous radius: plenty of matches
+        let (rows, total) = k.pair_count(&x, &y, t2).unwrap();
+        assert_eq!(rows.len(), 200);
+        assert_eq!(total, brute(&x, &y, t2));
+        assert_eq!(rows.iter().map(|&r| r as i64).sum::<i64>(), total);
+    }
+
+    #[test]
+    fn pair_count_picks_larger_variant() {
+        let Some(k) = kernels() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let x = sky(3, 700); // needs the 1024 variant
+        let t2 = arcsec_sq(300.0);
+        let (rows, total) = k.pair_count(&x, &x, t2).unwrap();
+        assert_eq!(rows.len(), 700);
+        assert_eq!(total, brute(&x, &x, t2));
+    }
+
+    #[test]
+    fn histogram_matches_brute_force_and_is_cumulative() {
+        let Some(k) = kernels() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let x = sky(4, 300);
+        // Spread bins so the counts are non-trivial at this density.
+        let bins: Vec<f32> = (1..=HIST_BINS).map(|a| arcsec_sq(a as f64 * 10.0)).collect();
+        let hist = k.pair_histogram(&x, &x, &bins).unwrap();
+        assert_eq!(hist.len(), HIST_BINS);
+        for w in hist.windows(2) {
+            assert!(w[0] <= w[1], "cumulative counts must be monotone");
+        }
+        assert_eq!(hist[HIST_BINS - 1], brute(&x, &x, bins[HIST_BINS - 1]));
+    }
+
+    #[test]
+    fn wrong_bin_count_rejected() {
+        let Some(k) = kernels() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let x = sky(5, 10);
+        assert!(k.pair_histogram(&x, &x, &[0.5; 3]).is_err());
+    }
+
+    #[test]
+    fn oversized_block_rejected() {
+        let Some(k) = kernels() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let x = sky(6, 5000);
+        assert!(k.pair_count(&x, &x, 0.5).is_err());
+    }
+
+    #[test]
+    fn arcsec_sq_sane() {
+        assert!(arcsec_sq(0.0) == 0.0);
+        assert!(arcsec_sq(60.0) > 0.0);
+        assert!(arcsec_sq(60.0) < arcsec_sq(3600.0));
+        let bins = stat_bins();
+        assert_eq!(bins.len(), HIST_BINS);
+        assert!(bins.windows(2).all(|w| w[0] < w[1]), "ascending squared bins");
+    }
+}

@@ -1,0 +1,27 @@
+//! Discrete-event simulation core.
+//!
+//! The paper's phenomena are *resource contention* phenomena: disk and
+//! network I/O on Atom processors are CPU-heavy, so the whole Hadoop stack
+//! becomes CPU-bound. We model every hardware device (CPU run queue, disk,
+//! NIC, memory bus) as a fluid resource with a capacity in units/second,
+//! and every ongoing activity (a file write, a TCP stream, an HDFS
+//! replication pipeline, a map task's sort phase) as a **flow** that demands
+//! capacity from one or more resources simultaneously.
+//!
+//! Rates are assigned by progressive-filling max-min fairness (the classic
+//! bottleneck algorithm), which reproduces the saturation and crossover
+//! behaviour the paper measures. Events fire when flows complete or timers
+//! expire; continuations are plain `FnOnce(&mut Engine)` closures.
+//!
+//! Everything is deterministic given a seed: there is no wall-clock input
+//! and the engine uses a seeded [`rng::Rng`].
+
+pub mod engine;
+pub mod flow;
+pub mod resource;
+pub mod rng;
+
+pub use engine::{Engine, FlowId, TimerId};
+pub use flow::{FlowSpec, SerialStage};
+pub use resource::{ResourceId, UsageClass};
+pub use rng::Rng;

@@ -1,0 +1,493 @@
+//! The two astronomy MapReduce applications (paper §2).
+//!
+//! **Neighbor Searching** (§2.1, data-intensive): mappers partition
+//! objects into grid blocks and replicate θ-wide border strips to the
+//! neighboring blocks; each reducer takes whole blocks and emits every
+//! neighbor of every object (24-byte records). The pair test is the
+//! compute hot-spot — here it runs for real through the AOT-compiled
+//! Pallas `pair_count` kernel ([`crate::runtime`]).
+//!
+//! **Neighbor Statistics** (§2.2, compute-intensive): same partitioning;
+//! reducers histogram pair separations over θ ∈ {1″..60″} (the Pallas
+//! `pair_histogram` kernel) and emit tiny per-block text statistics; a
+//! second trivial MapReduce step aggregates them.
+//!
+//! Simulated CPU cost uses the paper's *Java* cost model (the system
+//! under study), while the kernels compute the actual science output —
+//! see DESIGN.md §4. `kernel_every` samples the kernel on every k-th
+//! block to bound host compute at large scales (k = 1 in the e2e
+//! example; sampled blocks calibrate the per-object pair rate used for
+//! the modeled remainder).
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use super::catalog::{Catalog, MAP_RECORD_BYTES, PAIR_BYTES, RECORD_BYTES};
+use crate::hw::cpu::CpuSpec;
+use crate::mapreduce::{JobSpec, MapFn, MapOutput, ReduceFn, ReduceOutput, SplitMeta};
+use crate::runtime::{arcsec_sq, stat_bins, PairKernels};
+
+/// Java-model instructions per tested pair in the reducer inner loop.
+/// Back-calculated from the paper's Neighbor Statistics runtime (2157 s
+/// across 24 reducers ≈ 4e13 instructions over ~6e10 tested pairs):
+/// double-precision distance, acos/bin bookkeeping, bounds checks — the
+/// v0.20-era Java inner loop is expensive.
+pub const PAIR_INSTR: f64 = 650.0;
+/// Java-model instructions per object for block bookkeeping.
+pub const OBJ_INSTR: f64 = 220.0;
+/// Java-model instructions per record in the mapper (parse + zone
+/// assignment + emit).
+pub const MAP_RECORD_INSTR: f64 = 260.0;
+
+/// Sub-block neighborhood multiplier: the §2.1 optimization tests each
+/// object only against its own and adjacent θ-sized sub-blocks (9 cells).
+pub const SUBBLOCK_CELLS: f64 = 9.0;
+
+/// Configuration for a Zones application run.
+#[derive(Clone)]
+pub struct ZonesConfig {
+    pub seed: u64,
+    /// Fraction of the paper's 25 GB dataset.
+    pub scale: f64,
+    /// Search radius, arcseconds (paper: 60, 30, 15).
+    pub theta_arcsec: f64,
+    /// Grid-cell side in units of θ (kernel working-set granularity).
+    pub block_theta_mult: f64,
+    /// Zones partition block = `partition_cells` × `partition_cells`
+    /// grid cells (the implementation "always favors larger blocks";
+    /// 4×4 cells of 10θ ≈ the paper's ~10% border-copy overhead).
+    pub partition_cells: usize,
+    /// Run the real kernel on every k-th block (1 = all blocks).
+    pub kernel_every: usize,
+    /// Kernel library; None = pure cost model (no science output).
+    pub kernels: Option<Rc<PairKernels>>,
+}
+
+impl ZonesConfig {
+    pub fn theta_rad(&self) -> f64 {
+        self.theta_arcsec * std::f64::consts::PI / 180.0 / 3600.0
+    }
+
+    pub fn catalog(&self) -> Catalog {
+        Catalog::generate(self.seed, self.scale, self.theta_rad(), self.block_theta_mult)
+    }
+}
+
+/// Convert Java-model instructions to core-seconds on `cpu` for the
+/// reducer class.
+fn instr_to_cpu(cpu: &CpuSpec, class: crate::hw::TaskClass, instr: f64) -> f64 {
+    instr / (cpu.freq_hz * cpu.freq_ratio(class) * cpu.ipc(class))
+}
+
+/// Zones mapper: parse, assign block ids, emit + border copies (§2.1).
+pub struct ZonesMap {
+    pub catalog: Catalog,
+    pub theta: f64,
+    pub cpu: CpuSpec,
+    /// Partition block side in grid cells (border copies cross
+    /// *partition* borders, not cell borders).
+    pub partition_cells: usize,
+}
+
+impl MapFn for ZonesMap {
+    fn run(&self, split: &SplitMeta) -> MapOutput {
+        let records = split.bytes / RECORD_BYTES;
+        let border = self.catalog.border_fraction_for(self.theta, self.partition_cells);
+        let out_records = records * (1.0 + border);
+        MapOutput {
+            bytes: out_records * MAP_RECORD_BYTES,
+            records: out_records,
+            app_cpu: instr_to_cpu(
+                &self.cpu,
+                crate::hw::TaskClass::Mapper,
+                records * MAP_RECORD_INSTR,
+            ),
+        }
+    }
+}
+
+/// Shared state of the searching/statistics reducers.
+pub struct ZonesReduce {
+    pub cfg: ZonesConfig,
+    pub catalog: Catalog,
+    pub cpu: CpuSpec,
+    pub n_reducers: usize,
+    /// Statistics mode (histogram) vs searching mode (pair emission).
+    pub stat_mode: bool,
+    /// Accumulated science results.
+    pub pairs_found: i64,
+    pub histogram: Vec<i64>,
+    /// Calibration: mean listed-neighbors per object from sampled blocks.
+    sampled_rate: Option<f64>,
+    kernel_calls: u64,
+}
+
+impl ZonesReduce {
+    pub fn new(cfg: ZonesConfig, cpu: CpuSpec, n_reducers: usize, stat_mode: bool) -> Self {
+        let catalog = cfg.catalog();
+        ZonesReduce {
+            cfg,
+            catalog,
+            cpu,
+            n_reducers,
+            stat_mode,
+            pairs_found: 0,
+            histogram: vec![0; crate::runtime::HIST_BINS],
+            sampled_rate: None,
+            kernel_calls: 0,
+        }
+    }
+
+    pub fn kernel_calls(&self) -> u64 {
+        self.kernel_calls
+    }
+
+    /// Blocks handled by reducer `r` (round-robin, the job's partitioner).
+    fn blocks_of(&self, r: usize) -> impl Iterator<Item = (usize, usize)> + '_ {
+        let g = self.catalog.grid;
+        (0..g * g).filter(move |b| b % self.n_reducers == r).map(move |b| (b / g, b % g))
+    }
+
+    /// Gather a block's objects plus its neighbors' θ-border strips, as
+    /// f32 offsets from the block corner (kernel-safe magnitudes).
+    fn gather(&self, bi: usize, bj: usize) -> (Vec<[f32; 2]>, Vec<[f32; 2]>) {
+        let theta = self.cfg.theta_rad();
+        let ou = bi as f64 * self.catalog.block;
+        let ov = bj as f64 * self.catalog.block;
+        let x = self.catalog.block_local(bi, bj, ou, ov);
+        let mut y = x.clone();
+        let g = self.catalog.grid as i64;
+        for di in -1i64..=1 {
+            for dj in -1i64..=1 {
+                if di == 0 && dj == 0 {
+                    continue;
+                }
+                let (ni, nj) = (bi as i64 + di, bj as i64 + dj);
+                if ni < 0 || nj < 0 || ni >= g || nj >= g {
+                    continue;
+                }
+                // The neighbor's strip facing us: offset is the direction
+                // from the neighbor back toward this block.
+                y.extend(
+                    self.catalog
+                        .border_objects(ni as usize, nj as usize, -di, -dj, theta)
+                        .into_iter()
+                        .map(|(u, v)| [(u - ou) as f32, (v - ov) as f32]),
+                );
+            }
+        }
+        (x, y)
+    }
+
+    /// Process one block; returns (listed-neighbor records, tested pairs
+    /// for the Java cost model).
+    fn process_block(&mut self, bi: usize, bj: usize, block_idx: usize) -> (f64, f64) {
+        let n = self.catalog.count(bi, bj) as f64;
+        if n == 0.0 {
+            return (0.0, 0.0);
+        }
+        let theta = self.cfg.theta_rad();
+        // Java model: each object is tested against its 3×3 θ-sized
+        // sub-block neighborhood (§2.1 optimization).
+        let local_density = super::catalog::DENSITY;
+        let tested = n * (local_density * SUBBLOCK_CELLS * theta * theta).max(1.0);
+
+        let run_kernel = self.cfg.kernels.is_some() && block_idx % self.cfg.kernel_every == 0;
+        if run_kernel {
+            let (x, y) = self.gather(bi, bj);
+            if x.is_empty() {
+                return (0.0, tested);
+            }
+            let kernels = self.cfg.kernels.as_ref().unwrap().clone();
+            self.kernel_calls += 1;
+            if self.stat_mode {
+                let bins = stat_bins();
+                let hist = kernels
+                    .pair_histogram(&x, &y, &bins)
+                    .expect("pair_histogram kernel failed");
+                // Remove self-matches (every valid x row matches itself
+                // in every cumulative bin).
+                for (h, out) in hist.iter().zip(self.histogram.iter_mut()) {
+                    *out += h - x.len() as i64;
+                }
+                let listed = (hist[hist.len() - 1] - x.len() as i64).max(0) as f64;
+                self.update_rate(listed, x.len());
+                (listed, tested)
+            } else {
+                let t2 = arcsec_sq(self.cfg.theta_arcsec);
+                let (_rows, total) =
+                    kernels.pair_count(&x, &y, t2).expect("pair_count kernel failed");
+                let listed = (total - x.len() as i64).max(0) as f64;
+                self.pairs_found += listed as i64;
+                self.update_rate(listed, x.len());
+                (listed, tested)
+            }
+        } else {
+            // Modeled block: use the kernel-calibrated per-object rate,
+            // falling back to the uniform-density expectation.
+            let rate = self.sampled_rate.unwrap_or_else(|| {
+                local_density * std::f64::consts::PI * theta * theta
+            });
+            let listed = n * rate;
+            if !self.stat_mode {
+                self.pairs_found += listed as i64;
+            }
+            (listed, tested)
+        }
+    }
+
+    fn update_rate(&mut self, listed: f64, n: usize) {
+        let r = listed / n as f64;
+        self.sampled_rate = Some(match self.sampled_rate {
+            None => r,
+            Some(old) => 0.7 * old + 0.3 * r,
+        });
+    }
+}
+
+impl ReduceFn for ZonesReduce {
+    fn run(&mut self, input: &crate::mapreduce::tasks::ReduceInput) -> ReduceOutput {
+        let blocks: Vec<(usize, usize)> = self.blocks_of(input.reducer).collect();
+        let mut listed_total = 0.0;
+        let mut tested_total = 0.0;
+        let mut n_objects = 0.0;
+        let g = self.catalog.grid;
+        for &(bi, bj) in &blocks {
+            let (listed, tested) = self.process_block(bi, bj, bi * g + bj);
+            listed_total += listed;
+            tested_total += tested;
+            n_objects += self.catalog.count(bi, bj) as f64;
+        }
+        let class = if self.stat_mode {
+            crate::hw::TaskClass::ReducerStat
+        } else {
+            crate::hw::TaskClass::ReducerSearch
+        };
+        let app_cpu = instr_to_cpu(
+            &self.cpu,
+            class,
+            tested_total * PAIR_INSTR + n_objects * OBJ_INSTR,
+        );
+        let hdfs_bytes = if self.stat_mode {
+            // Per-block text statistics: 60 bins × ~16 chars (§2.2:
+            // "reducers produce text output for simplicity").
+            blocks.len() as f64 * 960.0
+        } else {
+            listed_total * PAIR_BYTES
+        };
+        ReduceOutput { hdfs_bytes: hdfs_bytes.max(1.0), app_cpu }
+    }
+}
+
+/// Build the Neighbor Searching job over an ingested catalog.
+pub fn neighbor_search_job(
+    cfg: &ZonesConfig,
+    cpu: &CpuSpec,
+    conf: &crate::conf::HadoopConf,
+    input_files: Vec<String>,
+    n_reducers: usize,
+) -> (JobSpec, Rc<RefCell<ZonesReduce>>) {
+    let catalog = cfg.catalog();
+    let reduce = Rc::new(RefCell::new(ZonesReduce::new(
+        cfg.clone(),
+        cpu.clone(),
+        n_reducers,
+        false,
+    )));
+    let theta = cfg.theta_rad();
+    let spec = JobSpec {
+        name: format!("neighbor-search-{}as", cfg.theta_arcsec),
+        input_files,
+        map: Rc::new(ZonesMap {
+            catalog,
+            theta,
+            cpu: cpu.clone(),
+            partition_cells: cfg.partition_cells,
+        }),
+        reduce: reduce.clone(),
+        n_reducers,
+        conf: conf.clone(),
+        map_class: "mapper".into(),
+        reduce_class: "reducer-search".into(),
+        output_prefix: format!("out/search-{}as", cfg.theta_arcsec),
+        partition: JobSpec::uniform_partition(n_reducers),
+        reduce_records_per_byte: 1.0 / MAP_RECORD_BYTES,
+    };
+    (spec, reduce)
+}
+
+/// Build step 1 of Neighbor Statistics (per-block histograms).
+pub fn neighbor_stat_job(
+    cfg: &ZonesConfig,
+    cpu: &CpuSpec,
+    conf: &crate::conf::HadoopConf,
+    input_files: Vec<String>,
+    n_reducers: usize,
+) -> (JobSpec, Rc<RefCell<ZonesReduce>>) {
+    let catalog = cfg.catalog();
+    let reduce = Rc::new(RefCell::new(ZonesReduce::new(
+        cfg.clone(),
+        cpu.clone(),
+        n_reducers,
+        true,
+    )));
+    let theta = cfg.theta_rad();
+    let spec = JobSpec {
+        name: "neighbor-stat".into(),
+        input_files,
+        map: Rc::new(ZonesMap {
+            catalog,
+            theta,
+            cpu: cpu.clone(),
+            partition_cells: cfg.partition_cells,
+        }),
+        reduce: reduce.clone(),
+        n_reducers,
+        conf: conf.clone(),
+        map_class: "mapper".into(),
+        reduce_class: "reducer-stat".into(),
+        output_prefix: "out/stat-step1".into(),
+        partition: JobSpec::uniform_partition(n_reducers),
+        reduce_records_per_byte: 1.0 / MAP_RECORD_BYTES,
+    };
+    (spec, reduce)
+}
+
+/// Trivial aggregator for Neighbor Statistics step 2 (§2.2: "mappers
+/// parse the data from the previous step and a single reducer combines
+/// all data").
+pub struct StatAggregateMap;
+impl MapFn for StatAggregateMap {
+    fn run(&self, split: &SplitMeta) -> MapOutput {
+        MapOutput { bytes: split.bytes, records: split.bytes / 16.0, app_cpu: 0.01 }
+    }
+}
+
+pub struct StatAggregateReduce;
+impl ReduceFn for StatAggregateReduce {
+    fn run(&mut self, _input: &crate::mapreduce::tasks::ReduceInput) -> ReduceOutput {
+        ReduceOutput { hdfs_bytes: 960.0, app_cpu: 0.05 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conf::HadoopConf;
+    use crate::hw::cpu::atom330;
+
+    fn cfg(scale: f64) -> ZonesConfig {
+        ZonesConfig {
+            seed: 9,
+            scale,
+            theta_arcsec: 60.0,
+            block_theta_mult: 10.0,
+            partition_cells: 4,
+            kernel_every: 1,
+            kernels: PairKernels::load_default().ok().map(Rc::new),
+        }
+    }
+
+    #[test]
+    fn mapper_output_slightly_exceeds_input() {
+        // §3.1: map output records ≈ input + border copies (<10% extra).
+        let c = cfg(0.0005);
+        let catalog = c.catalog();
+        let m = ZonesMap { catalog, theta: c.theta_rad(), cpu: atom330(), partition_cells: 4 };
+        let split = SplitMeta {
+            file: "x".into(),
+            block_idx: 0,
+            bytes: 64.0 * crate::hw::MIB,
+            records: 64.0 * crate::hw::MIB / RECORD_BYTES,
+            replicas: vec![],
+        };
+        let out = m.run(&split);
+        let ratio = out.bytes / split.bytes;
+        assert!(ratio > 63.0 / 57.0, "key adds 6 bytes: {ratio}");
+        assert!(ratio < 1.35, "border copies should be modest: {ratio}");
+    }
+
+    #[test]
+    fn search_reducer_emits_pairs() {
+        let c = cfg(0.0003);
+        if c.kernels.is_none() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut red = ZonesReduce::new(c, atom330(), 4, false);
+        let input = crate::mapreduce::tasks::ReduceInput { reducer: 0, bytes: 1e6, records: 1e4 };
+        let out = red.run(&input);
+        assert!(out.hdfs_bytes > 0.0);
+        assert!(out.app_cpu > 0.0);
+        assert!(red.pairs_found > 0, "dense catalog must produce neighbors");
+        assert!(red.kernel_calls() > 0);
+    }
+
+    #[test]
+    fn search_output_ratio_near_paper() {
+        // §2.1: 25 GB in → 540 GB out at θ=60″ (ratio ≈ 21.6). Catalog
+        // density was chosen to match; verify the pipeline reproduces it.
+        let c = cfg(0.0005);
+        if c.kernels.is_none() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let catalog = c.catalog();
+        let n_red = 4;
+        let mut total_out = 0.0;
+        for r in 0..n_red {
+            let mut red = ZonesReduce::new(c.clone(), atom330(), n_red, false);
+            let input =
+                crate::mapreduce::tasks::ReduceInput { reducer: r, bytes: 1.0, records: 1.0 };
+            total_out += red.run(&input).hdfs_bytes;
+        }
+        let ratio = total_out / catalog.input_bytes();
+        assert!(
+            ratio > 8.0 && ratio < 45.0,
+            "output ratio {ratio:.1} should be near the paper's 21.6"
+        );
+    }
+
+    #[test]
+    fn stat_reducer_histogram_monotone_and_small_output() {
+        let c = cfg(0.0003);
+        if c.kernels.is_none() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut red = ZonesReduce::new(c, atom330(), 2, true);
+        let input = crate::mapreduce::tasks::ReduceInput { reducer: 1, bytes: 1e6, records: 1e4 };
+        let out = red.run(&input);
+        assert!(out.hdfs_bytes < 1e6, "stat output must be tiny");
+        let h = &red.histogram;
+        assert!(h.iter().any(|&v| v > 0));
+        for w in h.windows(2) {
+            assert!(w[0] <= w[1], "cumulative histogram must be monotone");
+        }
+    }
+
+    #[test]
+    fn sampled_mode_still_counts() {
+        let mut c = cfg(0.0005);
+        if c.kernels.is_none() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        c.kernel_every = 4;
+        let mut red = ZonesReduce::new(c, atom330(), 2, false);
+        let input = crate::mapreduce::tasks::ReduceInput { reducer: 0, bytes: 1.0, records: 1.0 };
+        let out = red.run(&input);
+        assert!(out.hdfs_bytes > 0.0);
+        assert!(red.kernel_calls() > 0, "sampled mode must still sample");
+    }
+
+    #[test]
+    fn jobs_construct() {
+        let c = cfg(0.0003);
+        let conf = HadoopConf::default();
+        let (search, _) = neighbor_search_job(&c, &atom330(), &conf, vec!["in".into()], 16);
+        assert_eq!(search.n_reducers, 16);
+        let (stat, _) = neighbor_stat_job(&c, &atom330(), &conf, vec!["in".into()], 24);
+        assert_eq!(stat.reduce_class, "reducer-stat");
+    }
+}

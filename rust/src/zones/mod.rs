@@ -1,0 +1,190 @@
+//! The Zones astronomy applications, end to end: catalog ingest, job
+//! construction, cluster setup, and the §3.5/§3.6 comparison harness.
+
+pub mod apps;
+pub mod catalog;
+
+pub use apps::{ZonesConfig, ZonesReduce};
+pub use catalog::Catalog;
+
+use std::rc::Rc;
+
+use crate::cluster::{Cluster, NodeId};
+use crate::conf::{ClusterPreset, HadoopConf};
+use crate::energy::EnergyReport;
+use crate::hdfs::testdfsio::preplace_file;
+use crate::hdfs::{World, WorldHandle};
+use crate::mapreduce::{run_job, JobResult};
+use crate::sim::engine::shared;
+use crate::sim::Engine;
+
+/// Which application to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum App {
+    /// Neighbor Searching (data-intensive).
+    Search,
+    /// Neighbor Statistics (compute-intensive, two MR steps).
+    Stat,
+}
+
+/// Everything a Table 3 cell needs.
+#[derive(Debug, Clone)]
+pub struct RunOutcome {
+    pub job: JobResult,
+    /// Second-step job for Neighbor Statistics.
+    pub step2: Option<JobResult>,
+    /// Total wall time (both steps).
+    pub total_seconds: f64,
+    pub energy: EnergyReport,
+    /// Science output: pairs found (search) or the 60-bin cumulative
+    /// histogram (stat). Zero/empty when kernels were disabled.
+    pub pairs_found: i64,
+    pub histogram: Vec<i64>,
+    pub kernel_calls: u64,
+}
+
+/// Build a cluster world for `preset` and ingest the catalog.
+pub fn setup_world(
+    engine: &mut Engine,
+    preset: ClusterPreset,
+    conf: &HadoopConf,
+    input_bytes: f64,
+) -> (WorldHandle, Vec<String>) {
+    let spec = preset.node_spec(conf.data_disk);
+    let n = preset.node_count();
+    let cluster = Cluster::build(engine, &spec, n);
+    let mut world = World::new(cluster);
+    world.namenode.set_datanodes((1..n).map(NodeId).collect());
+    let world = shared(world);
+    // Ingest: pre-place the catalog across the slaves round-robin (the
+    // paper's dataset was loaded before the timed runs).
+    let mut rng = engine.rng.fork(0xCA7A106);
+    let mut files = Vec::new();
+    let mut left = input_bytes;
+    let mut i = 0usize;
+    while left > 0.0 {
+        let b = left.min(conf.dfs_block_size);
+        let name = format!("in/catalog/part-{i:05}");
+        preplace_file(&world, &mut rng, &name, NodeId(1 + (i % (n - 1))), b, conf);
+        files.push(name);
+        left -= b;
+        i += 1;
+    }
+    (world, files)
+}
+
+/// Run one application on one cluster preset; the paper's Table 3 cells.
+pub fn run_app(preset: ClusterPreset, conf: &HadoopConf, zcfg: &ZonesConfig, app: App) -> RunOutcome {
+    let mut engine = Engine::new(zcfg.seed);
+    let cat = zcfg.catalog();
+    let (world, files) = setup_world(&mut engine, preset, conf, cat.input_bytes());
+    let cpu = preset.node_spec(conf.data_disk).cpu;
+    let slaves = preset.slave_count();
+    let n_reducers = slaves * conf.reduce_slots;
+
+    let (spec, reduce) = match app {
+        App::Search => apps::neighbor_search_job(zcfg, &cpu, conf, files, n_reducers),
+        App::Stat => apps::neighbor_stat_job(zcfg, &cpu, conf, files, n_reducers),
+    };
+    let result = shared(None::<JobResult>);
+    let r2 = result.clone();
+    run_job(&mut engine, &world, spec, move |_, res| *r2.borrow_mut() = Some(res));
+    engine.run();
+    let job = result.borrow().clone().expect("job did not complete");
+
+    // Neighbor Statistics step 2: aggregate the tiny per-block outputs.
+    let step2 = if app == App::Stat {
+        let step1_files: Vec<String> = {
+            let w = world.borrow();
+            w.namenode
+                .files()
+                .filter(|(name, _)| name.starts_with("out/stat-step1"))
+                .map(|(name, _)| name.to_string())
+                .collect()
+        };
+        let spec2 = crate::mapreduce::JobSpec {
+            name: "neighbor-stat-step2".into(),
+            input_files: step1_files,
+            map: Rc::new(apps::StatAggregateMap),
+            reduce: Rc::new(std::cell::RefCell::new(apps::StatAggregateReduce)),
+            n_reducers: 1,
+            conf: conf.clone(),
+            map_class: "mapper".into(),
+            reduce_class: "reducer-stat".into(),
+            output_prefix: "out/stat-final".into(),
+            partition: crate::mapreduce::JobSpec::uniform_partition(1),
+            reduce_records_per_byte: 1.0 / 16.0,
+        };
+        let result2 = shared(None::<JobResult>);
+        let r2 = result2.clone();
+        run_job(&mut engine, &world, spec2, move |_, res| *r2.borrow_mut() = Some(res));
+        engine.run();
+        let v = result2.borrow().clone();
+        v
+    } else {
+        None
+    };
+
+    let total = job.duration + step2.as_ref().map(|j| j.duration).unwrap_or(0.0);
+    let energy = {
+        let w = world.borrow();
+        crate::energy::measure(&engine, &w.cluster, total)
+    };
+    let red = reduce.borrow();
+    RunOutcome {
+        job,
+        step2,
+        total_seconds: total,
+        energy,
+        pairs_found: red.pairs_found,
+        histogram: red.histogram.clone(),
+        kernel_calls: red.kernel_calls(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::PairKernels;
+
+    fn zcfg(scale: f64) -> ZonesConfig {
+        ZonesConfig {
+            seed: 17,
+            scale,
+            theta_arcsec: 60.0,
+            block_theta_mult: 10.0,
+            partition_cells: 4,
+            kernel_every: 8,
+            kernels: PairKernels::load_default().ok().map(Rc::new),
+        }
+    }
+
+    #[test]
+    fn search_runs_on_amdahl() {
+        let conf = HadoopConf::default();
+        let out = run_app(ClusterPreset::Amdahl, &conf, &zcfg(0.0008), App::Search);
+        assert!(out.total_seconds > 0.0);
+        assert!(out.job.hdfs_output_bytes > out.job.input_bytes, "data-intensive: output >> input");
+        assert!(out.energy.total_joules > 0.0);
+    }
+
+    #[test]
+    fn stat_runs_two_steps() {
+        let conf = HadoopConf { reduce_slots: 3, ..Default::default() };
+        let out = run_app(ClusterPreset::Amdahl, &conf, &zcfg(0.0008), App::Stat);
+        assert!(out.step2.is_some());
+        assert!(
+            out.job.hdfs_output_bytes < out.job.input_bytes / 20.0,
+            "compute-intensive: tiny output ({} vs input {})",
+            out.job.hdfs_output_bytes,
+            out.job.input_bytes
+        );
+    }
+
+    #[test]
+    fn search_runs_on_occ() {
+        let conf = HadoopConf::default();
+        let out = run_app(ClusterPreset::Occ, &conf, &zcfg(0.0008), App::Search);
+        assert!(out.total_seconds > 0.0);
+    }
+}

@@ -1,0 +1,117 @@
+//! Integration: HDFS behaviour across the paper's Fig 1 / Fig 2 axes.
+
+use amdahl_hadoop::conf::HadoopConf;
+use amdahl_hadoop::hdfs::testdfsio;
+use amdahl_hadoop::hw::{DiskKind, MIB};
+use amdahl_hadoop::report;
+
+const SZ: f64 = 256.0 * MIB;
+
+#[test]
+fn fig1_direct_io_write_wins_most_on_raid0() {
+    let rows = report::fig1(42);
+    let get = |disk, write, direct| {
+        rows.iter()
+            .find(|r| r.disk == disk && r.write == write && r.direct == direct)
+            .unwrap()
+            .mbps
+    };
+    // Fig 1(c): direct write >> buffered write on RAID0.
+    let raid_gain = get(DiskKind::Raid0, true, true) / get(DiskKind::Raid0, true, false);
+    let hdd_gain = get(DiskKind::Hdd, true, true) / get(DiskKind::Hdd, true, false);
+    assert!(raid_gain > 1.4, "raid0 direct write gain {raid_gain:.2}");
+    assert!(raid_gain > hdd_gain, "direct helps RAID0 the most");
+    // Fig 1(a): reads unchanged.
+    let read_gain = get(DiskKind::Raid0, false, true) / get(DiskKind::Raid0, false, false);
+    assert!((read_gain - 1.0).abs() < 0.02, "direct read gain {read_gain:.2}");
+}
+
+#[test]
+fn fig1_direct_io_kills_flush_cpu() {
+    let rows = report::fig1(42);
+    for r in &rows {
+        if r.write && r.direct {
+            assert_eq!(r.cpu_flush_pct, 0.0, "{:?}: flush must be 0% under direct I/O", r.disk);
+        }
+        if r.write && !r.direct {
+            assert!(r.cpu_flush_pct > 50.0, "{:?}: buffered flush is CPU-heavy", r.disk);
+        }
+    }
+}
+
+#[test]
+fn table2_matches_paper_numbers() {
+    let rows = report::table2(42);
+    let local = &rows[0];
+    let remote = &rows[1];
+    assert!((local.mbps - 343.0).abs() < 10.0, "local {:.0} MB/s", local.mbps);
+    assert!((remote.mbps - 112.0).abs() < 3.0, "remote {:.0} MB/s", remote.mbps);
+    assert!((remote.cpu_send_pct - 36.76).abs() < 2.0);
+    assert!((remote.cpu_recv_pct - 88.1).abs() < 3.0);
+    assert!(local.cpu_send_pct > 95.0 && local.cpu_recv_pct > 95.0);
+}
+
+#[test]
+fn fig2a_shapes() {
+    // Direct beats buffered; hardware barely matters; writers 1→2 help.
+    let conf = HadoopConf::default();
+    let b = testdfsio::write_test(7, 2, SZ, &conf);
+    let d = testdfsio::write_test(7, 2, SZ, &HadoopConf { direct_io_write: true, ..conf });
+    assert!(d.per_node_mbps > b.per_node_mbps * 1.1, "direct {:.1} vs buffered {:.1}", d.per_node_mbps, b.per_node_mbps);
+
+    let base = HadoopConf { direct_io_write: true, ..Default::default() };
+    let raid = testdfsio::write_test(7, 2, SZ, &base);
+    let hdd = testdfsio::write_test(7, 2, SZ, &HadoopConf { data_disk: DiskKind::Hdd, ..base.clone() });
+    assert!(raid.per_node_mbps / hdd.per_node_mbps < 1.3, "hardware indifference (CPU-bound)");
+
+    let w1 = testdfsio::write_test(7, 1, SZ, &base);
+    assert!(raid.per_node_mbps > w1.per_node_mbps, "2 writers beat 1");
+}
+
+#[test]
+fn fig2b_shapes() {
+    let conf = HadoopConf::default();
+    // Local >> remote.
+    let local = testdfsio::read_test(7, 2, SZ, &conf, false);
+    let remote = testdfsio::read_test(7, 2, SZ, &conf, true);
+    assert!(local.per_node_mbps > remote.per_node_mbps * 1.2);
+    // Single HDD clearly worst at 3 readers, and declining.
+    let hdd_conf = HadoopConf { data_disk: DiskKind::Hdd, ..conf.clone() };
+    let hdd3 = testdfsio::read_test(7, 3, SZ, &hdd_conf, false);
+    let raid3 = testdfsio::read_test(7, 3, SZ, &conf, false);
+    assert!(hdd3.per_node_mbps < raid3.per_node_mbps * 0.85, "hdd {:.1} vs raid {:.1}", hdd3.per_node_mbps, raid3.per_node_mbps);
+}
+
+#[test]
+fn replication_conservation() {
+    // Every committed block has exactly r distinct replicas on datanodes.
+    use amdahl_hadoop::cluster::{Cluster, NodeId};
+    use amdahl_hadoop::hdfs::{write_file, World};
+    use amdahl_hadoop::hw::amdahl_blade;
+    use amdahl_hadoop::sim::engine::shared;
+    use amdahl_hadoop::sim::Engine;
+
+    let mut e = Engine::new(11);
+    let cluster = Cluster::build(&mut e, &amdahl_blade(DiskKind::Raid0), 9);
+    let mut world = World::new(cluster);
+    world.namenode.set_datanodes((1..9).map(NodeId).collect());
+    let world = shared(world);
+    let conf = HadoopConf::default();
+    for i in 0..4 {
+        write_file(&mut e, &world, NodeId(1 + i), format!("f{i}"), 200.0 * MIB, &conf, "hdfs-write", |_| {});
+    }
+    e.run();
+    let w = world.borrow();
+    for i in 0..4 {
+        let f = w.namenode.get_file(&format!("f{i}")).unwrap();
+        assert_eq!(f.blocks.len(), 4); // 200 MB / 64 MB
+        for b in &f.blocks {
+            assert_eq!(b.replicas.len(), 3);
+            let mut sorted = b.replicas.clone();
+            sorted.sort();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 3, "replicas distinct");
+            assert!(sorted.iter().all(|n| n.0 >= 1 && n.0 <= 8), "replicas on datanodes");
+        }
+    }
+}

@@ -1,0 +1,80 @@
+//! Integration: every paper exhibit regenerates with the right shape.
+
+use amdahl_hadoop::report;
+
+#[test]
+fn fig3_improvement_shapes() {
+    let rows = report::fig3(42, 0.02);
+    let get = |label: &str, r: usize| {
+        rows.iter().find(|x| x.label == label && x.replication == r).unwrap().seconds
+    };
+    // §3.4.1: buffering ≈ 2× at r=1, ~47% at r=3.
+    let buf1 = get("original (8B writes)", 1) / get("buffer", 1);
+    let buf3 = get("original (8B writes)", 3) / get("buffer", 3);
+    assert!(buf1 > 1.5 && buf1 < 2.6, "r=1 buffer gain {buf1:.2} (paper ~2.0)");
+    assert!(buf3 > 1.25 && buf3 < 1.8, "r=3 buffer gain {buf3:.2} (paper ~1.47)");
+    // §3.4.2/3: LZO and direct I/O help at r=3...
+    let lzo3 = get("buffer", 3) / get("buffer+lzo", 3);
+    let dio3 = get("buffer", 3) / get("buffer+direct", 3);
+    assert!(lzo3 > 1.15, "r=3 LZO gain {lzo3:.2} (paper 1.61)");
+    assert!(dio3 > 1.05, "r=3 direct gain {dio3:.2} (paper 1.37)");
+    // ...and much less at r=1 (paper: ~nothing).
+    let lzo1 = get("buffer", 1) / get("buffer+lzo", 1);
+    let dio1 = get("buffer", 1) / get("buffer+direct", 1);
+    assert!(lzo1 < lzo3, "LZO r=1 {lzo1:.2} must trail r=3 {lzo3:.2}");
+    assert!(dio1 < dio3, "direct r=1 {dio1:.2} must trail r=3 {dio3:.2}");
+}
+
+#[test]
+fn table3_and_energy_shapes() {
+    let t3 = report::table3(42, 0.03, None);
+    // Runtime orderings.
+    assert!(t3.amdahl[0] > t3.amdahl[1] && t3.amdahl[1] > t3.amdahl[2], "θ ordering");
+    assert!(t3.occ[0] > t3.amdahl[1], "OCC slower at θ=30 (paper 3901 vs 1628)");
+    assert!(t3.occ[1] > t3.amdahl[2], "OCC slower at θ=15 (paper 1760 vs 1069)");
+    // Energy ratios in the paper's neighborhood.
+    let e = report::energy(&t3);
+    assert!(
+        e.search_ratio > 4.0 && e.search_ratio < 16.0,
+        "search energy ratio {:.1} (paper 7.7)",
+        e.search_ratio
+    );
+    assert!(
+        e.stat_ratio > 1.5 && e.stat_ratio < 10.0,
+        "stat energy ratio {:.1} (paper 3.4)",
+        e.stat_ratio
+    );
+    assert!(e.search_ratio > e.stat_ratio, "data-intensive advantage is larger");
+}
+
+#[test]
+fn table4_shapes() {
+    let rows = report::table4(42, 0.03);
+    let get = |task: &str| rows.iter().find(|r| r.task == task).unwrap();
+    let hr = get("HDFS read");
+    let hw = get("HDFS write");
+    // Paper: HDFS rows have AD ≈ 1 and ADN ≈ AD/3.
+    assert!((hr.ad.unwrap() - 1.15).abs() < 0.4, "HDFS read AD {:?}", hr.ad);
+    let ratio = hr.adn.unwrap() / hr.ad.unwrap();
+    assert!((ratio - 1.0 / 3.0).abs() < 0.08, "ADN/AD {ratio:.2} (paper 0.33)");
+    assert!(hw.ad.unwrap() > 0.4 && hw.ad.unwrap() < 2.0);
+    // InstrRate ballparks (Minstr/s, paper column 2-cores basis).
+    let m = get("Mapper");
+    assert!(m.instr_rate_mips > 800.0 && m.instr_rate_mips < 3200.0, "mapper {:.0}", m.instr_rate_mips);
+    let rs = get("Reducer (search)");
+    assert!(rs.instr_rate_mips > 700.0 && rs.instr_rate_mips < 3000.0, "search {:.0}", rs.instr_rate_mips);
+}
+
+#[test]
+fn table1_echo() {
+    let s = report::table1();
+    assert!(s.contains("io.sort.mb") && s.contains("125"));
+    assert!(s.contains("dfs.block.size") && s.contains("64MB"));
+}
+
+#[test]
+fn balance_renders_paper_numbers() {
+    let s = report::balance();
+    assert!(s.contains("-> 6 (paper: ~6)"), "{s}");
+    assert!(s.contains("-> 4 (paper: ~4)"), "{s}");
+}

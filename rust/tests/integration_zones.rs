@@ -1,0 +1,114 @@
+//! Integration: the Zones applications end to end, kernels included.
+
+use std::rc::Rc;
+
+use amdahl_hadoop::conf::{ClusterPreset, HadoopConf};
+use amdahl_hadoop::runtime::PairKernels;
+use amdahl_hadoop::zones::{run_app, App, ZonesConfig};
+
+fn zcfg(scale: f64, theta: f64, kernels: Option<Rc<PairKernels>>) -> ZonesConfig {
+    ZonesConfig {
+        seed: 42,
+        scale,
+        theta_arcsec: theta,
+        block_theta_mult: 10.0,
+        partition_cells: 4,
+        kernel_every: 4,
+        kernels,
+    }
+}
+
+fn search_conf() -> HadoopConf {
+    HadoopConf {
+        buffered_output: true,
+        direct_io_write: true,
+        reduce_slots: 2,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn theta_scaling_matches_paper_ordering() {
+    // Table 3: runtime grows with θ (more output + more pairs).
+    let t: Vec<f64> = [15.0, 30.0, 60.0]
+        .iter()
+        .map(|&th| {
+            run_app(ClusterPreset::Amdahl, &search_conf(), &zcfg(0.01, th, None), App::Search)
+                .total_seconds
+        })
+        .collect();
+    assert!(t[0] < t[1] && t[1] < t[2], "θ=15/30/60 → {t:?}");
+    // Paper 60″/30″ ratio is 2.4; accept a broad band around it.
+    let ratio = t[2] / t[1];
+    assert!(ratio > 1.5 && ratio < 6.0, "60/30 ratio {ratio:.2} (paper 2.42)");
+}
+
+#[test]
+fn amdahl_beats_occ_on_data_intensive() {
+    let a = run_app(ClusterPreset::Amdahl, &search_conf(), &zcfg(0.01, 30.0, None), App::Search);
+    let o = run_app(ClusterPreset::Occ, &search_conf(), &zcfg(0.01, 30.0, None), App::Search);
+    let ratio = o.total_seconds / a.total_seconds;
+    assert!(ratio > 1.5, "OCC/Amdahl {ratio:.2} (paper 2.4)");
+}
+
+#[test]
+fn stat_is_closer_race() {
+    // §3.5: "The Amdahl cluster has slightly better performance in the
+    // compute-intensive application" — the gap must be much smaller than
+    // the data-intensive one.
+    let conf = HadoopConf { reduce_slots: 3, ..search_conf() };
+    let a = run_app(ClusterPreset::Amdahl, &conf, &zcfg(0.01, 60.0, None), App::Stat);
+    let o = run_app(ClusterPreset::Occ, &conf, &zcfg(0.01, 60.0, None), App::Stat);
+    let stat_ratio = o.total_seconds / a.total_seconds;
+    let a2 = run_app(ClusterPreset::Amdahl, &search_conf(), &zcfg(0.01, 30.0, None), App::Search);
+    let o2 = run_app(ClusterPreset::Occ, &search_conf(), &zcfg(0.01, 30.0, None), App::Search);
+    let search_ratio = o2.total_seconds / a2.total_seconds;
+    assert!(stat_ratio > 0.8, "Amdahl should not lose badly: {stat_ratio:.2}");
+    assert!(
+        stat_ratio < search_ratio,
+        "compute-intensive gap {stat_ratio:.2} must be smaller than data-intensive {search_ratio:.2}"
+    );
+}
+
+#[test]
+fn kernel_pairs_match_between_presets() {
+    // The science output is a function of the catalog, not the cluster.
+    let Some(k) = PairKernels::load_default().ok().map(Rc::new) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut z = zcfg(0.0008, 60.0, Some(k.clone()));
+    z.kernel_every = 1; // every block computed → totals independent of partitioning
+    let a = run_app(ClusterPreset::Amdahl, &search_conf(), &z, App::Search);
+    let o = run_app(ClusterPreset::Occ, &search_conf(), &z, App::Search);
+    assert!(a.pairs_found > 0);
+    assert_eq!(a.pairs_found, o.pairs_found, "identical catalog → identical pairs");
+}
+
+#[test]
+fn quad_core_ablation_helps() {
+    // §4: a 4-core Atom blade should clearly beat the 2-core one on the
+    // CPU-bound search, with diminishing returns after. Slots scale with
+    // cores (a real deployment would raise the Table 1 maxima).
+    let z = zcfg(0.01, 60.0, None);
+    let run_cores = |cores: usize| {
+        let conf = HadoopConf {
+            map_slots: 3 * cores / 2,
+            reduce_slots: cores,
+            ..search_conf()
+        };
+        let preset = if cores == 2 {
+            ClusterPreset::Amdahl
+        } else {
+            ClusterPreset::AmdahlNCore(cores)
+        };
+        run_app(preset, &conf, &z, App::Search).total_seconds
+    };
+    let t2 = run_cores(2);
+    let t4 = run_cores(4);
+    let t8 = run_cores(8);
+    assert!(t4 < t2 * 0.8, "4-core {t4:.0}s vs 2-core {t2:.0}s");
+    let gain_24 = t2 / t4;
+    let gain_48 = t4 / t8;
+    assert!(gain_48 < gain_24, "diminishing returns: {gain_24:.2} then {gain_48:.2}");
+}
