@@ -3,12 +3,60 @@
 //! `harness = false` benches call [`bench`] with a closure; we warm up,
 //! sample N times, and print mean / median / stddev in a criterion-like
 //! format so `cargo bench` output is comparable run to run.
+//!
+//! Machine-readable trail: every [`bench`] call also produces a
+//! [`BenchRecord`]; when the `BENCH_JSON` environment variable names a
+//! file (e.g. `BENCH_kit.json`), the record is appended to it as one
+//! JSON object per line, so the perf trajectory is trackable across PRs
+//! without parsing the human table.
 
+use std::io::Write as _;
 use std::time::Instant;
 
-/// Run `f` `samples` times after `warmup` runs; print timing stats.
-/// Returns the mean seconds per iteration.
-pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> f64 {
+/// One benchmark's summary statistics, in seconds per iteration.
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    pub name: String,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub sd_s: f64,
+    pub samples: usize,
+}
+
+impl BenchRecord {
+    /// One-line JSON object with fixed key order and deterministic float
+    /// formatting (nanosecond precision — bench times are much smaller
+    /// than the sweep's simulated seconds).
+    pub fn to_json_line(&self) -> String {
+        let esc: String = self
+            .name
+            .chars()
+            .flat_map(|c| match c {
+                '"' | '\\' => vec!['\\', c],
+                c if (c as u32) < 0x20 => vec![' '],
+                c => vec![c],
+            })
+            .collect();
+        format!(
+            "{{\"bench\": \"{}\", \"mean_s\": {:.9}, \"median_s\": {:.9}, \
+             \"sd_s\": {:.9}, \"samples\": {}}}",
+            esc, self.mean_s, self.median_s, self.sd_s, self.samples
+        )
+    }
+}
+
+/// Append records to `path` as JSON lines (creating the file if needed).
+pub fn append_json(path: &str, records: &[BenchRecord]) -> std::io::Result<()> {
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    for r in records {
+        writeln!(f, "{}", r.to_json_line())?;
+    }
+    Ok(())
+}
+
+/// Run `f` `samples` times after `warmup` runs; print timing stats and
+/// return the full record. Appends the record to `$BENCH_JSON` when set.
+pub fn bench_record<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> BenchRecord {
     for _ in 0..warmup {
         f();
     }
@@ -28,7 +76,27 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) ->
         fmt(median),
         fmt(var.sqrt())
     );
-    mean
+    let record = BenchRecord {
+        name: name.to_string(),
+        mean_s: mean,
+        median_s: median,
+        sd_s: var.sqrt(),
+        samples,
+    };
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        if !path.is_empty() {
+            if let Err(e) = append_json(&path, std::slice::from_ref(&record)) {
+                eprintln!("benchkit: could not append to {path}: {e}");
+            }
+        }
+    }
+    record
+}
+
+/// Run `f` `samples` times after `warmup` runs; print timing stats.
+/// Returns the mean seconds per iteration.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, f: F) -> f64 {
+    bench_record(name, warmup, samples, f).mean_s
 }
 
 fn fmt(s: f64) -> String {
@@ -49,5 +117,27 @@ mod tests {
     fn bench_returns_mean() {
         let m = super::bench("noop", 1, 5, || {});
         assert!(m >= 0.0 && m < 0.1);
+    }
+
+    #[test]
+    fn record_has_all_stats() {
+        let r = super::bench_record("noop2", 0, 7, || {});
+        assert_eq!(r.samples, 7);
+        assert!(r.mean_s >= 0.0 && r.median_s >= 0.0 && r.sd_s >= 0.0);
+    }
+
+    #[test]
+    fn json_line_shape() {
+        let r = super::BenchRecord {
+            name: "x\"y".into(),
+            mean_s: 0.5,
+            median_s: 0.5,
+            sd_s: 0.0,
+            samples: 3,
+        };
+        let j = r.to_json_line();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\"samples\": 3"));
+        assert!(j.contains("x\\\"y"), "quote must be backslash-escaped: {j}");
     }
 }

@@ -180,7 +180,7 @@ impl HadoopConf {
 }
 
 /// Which physical cluster a scenario runs on.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ClusterPreset {
     /// Nine Amdahl blades: one master + eight slaves (paper §3.1).
     Amdahl,
@@ -188,6 +188,10 @@ pub enum ClusterPreset {
     Occ,
     /// Hypothetical N-core-Atom blades (paper §4 ablation).
     AmdahlNCore(usize),
+    /// Fully parameterized Amdahl cluster: total node count (including
+    /// the master) and Atom cores per blade — the sweep grid's cluster
+    /// axes (§4 generalized across the whole design space).
+    AmdahlSized { nodes: usize, cores: usize },
 }
 
 impl ClusterPreset {
@@ -195,6 +199,7 @@ impl ClusterPreset {
         match self {
             ClusterPreset::Amdahl | ClusterPreset::AmdahlNCore(_) => 9,
             ClusterPreset::Occ => 4,
+            ClusterPreset::AmdahlSized { nodes, .. } => nodes,
         }
     }
 
@@ -203,10 +208,22 @@ impl ClusterPreset {
         self.node_count() - 1
     }
 
+    /// CPU cores per node in this preset.
+    pub fn core_count(self) -> usize {
+        match self {
+            ClusterPreset::Amdahl | ClusterPreset::Occ => 2,
+            ClusterPreset::AmdahlNCore(cores) => cores,
+            ClusterPreset::AmdahlSized { cores, .. } => cores,
+        }
+    }
+
     pub fn node_spec(self, disk: DiskKind) -> crate::hw::NodeSpec {
         match self {
             ClusterPreset::Amdahl => crate::hw::amdahl_blade(disk),
             ClusterPreset::AmdahlNCore(n) => crate::hw::presets::amdahl_blade_ncore(disk, n),
+            ClusterPreset::AmdahlSized { cores, .. } => {
+                crate::hw::presets::amdahl_blade_ncore(disk, cores)
+            }
             ClusterPreset::Occ => crate::hw::occ_node(),
         }
     }
@@ -278,5 +295,16 @@ mod tests {
         assert_eq!(ClusterPreset::Occ.node_count(), 4);
         assert_eq!(ClusterPreset::Amdahl.slave_count(), 8);
         assert_eq!(ClusterPreset::Occ.slave_count(), 3);
+    }
+
+    #[test]
+    fn sized_preset_parameterizes_both_axes() {
+        let p = ClusterPreset::AmdahlSized { nodes: 5, cores: 4 };
+        assert_eq!(p.node_count(), 5);
+        assert_eq!(p.slave_count(), 4);
+        assert_eq!(p.core_count(), 4);
+        assert_eq!(p.node_spec(DiskKind::Raid0).cpu.cores, 4);
+        assert_eq!(ClusterPreset::Amdahl.core_count(), 2);
+        assert_eq!(ClusterPreset::AmdahlNCore(6).core_count(), 6);
     }
 }

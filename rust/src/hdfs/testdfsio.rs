@@ -10,10 +10,11 @@ use super::client::{read_file, write_file, ReadOpts};
 use super::namenode::{BlockMeta, FileMeta};
 use super::{World, WorldHandle};
 use crate::cluster::{Cluster, NodeId};
-use crate::conf::HadoopConf;
-use crate::hw::{amdahl_blade, MIB};
+use crate::conf::{ClusterPreset, HadoopConf};
+use crate::energy::EnergyReport;
+use crate::hw::MIB;
 use crate::sim::engine::shared;
-use crate::sim::{Engine, Rng};
+use crate::sim::{Engine, Rng, UsageSnapshot};
 
 /// Result of one TestDFSIO run.
 #[derive(Debug, Clone)]
@@ -30,6 +31,15 @@ pub struct DfsioResult {
     pub utilization: Vec<(String, f64)>,
 }
 
+/// A TestDFSIO run plus the engine-level measurements the sweep engine
+/// consumes (energy, raw per-resource usage).
+#[derive(Debug, Clone)]
+pub struct DfsioRun {
+    pub result: DfsioResult,
+    pub energy: EnergyReport,
+    pub usage: Vec<UsageSnapshot>,
+}
+
 fn utilization(engine: &Engine) -> Vec<(String, f64)> {
     let mut v: Vec<(String, f64)> = engine
         .resources()
@@ -39,25 +49,47 @@ fn utilization(engine: &Engine) -> Vec<(String, f64)> {
     v
 }
 
-fn build_world(seed: u64, conf: &HadoopConf) -> (Engine, WorldHandle) {
+fn build_world(preset: ClusterPreset, seed: u64, conf: &HadoopConf) -> (Engine, WorldHandle) {
     let mut engine = Engine::new(seed);
-    let spec = amdahl_blade(conf.data_disk);
-    let cluster = Cluster::build(&mut engine, &spec, 9);
+    let spec = preset.node_spec(conf.data_disk);
+    let n = preset.node_count();
+    let cluster = Cluster::build(&mut engine, &spec, n);
     let mut world = World::new(cluster);
-    world.namenode.set_datanodes((1..9).map(NodeId).collect());
+    world.namenode.set_datanodes((1..n).map(NodeId).collect());
     (engine, shared(world))
 }
 
-/// TestDFSIO write (Fig 2(a)).
+fn finish(engine: &Engine, world: &WorldHandle, result: DfsioResult) -> DfsioRun {
+    let energy = {
+        let w = world.borrow();
+        crate::energy::measure(engine, &w.cluster, result.makespan)
+    };
+    DfsioRun { result, energy, usage: engine.usage_snapshot() }
+}
+
+/// TestDFSIO write (Fig 2(a)) on the paper's nine-blade Amdahl cluster.
 pub fn write_test(
     seed: u64,
     writers_per_node: usize,
     bytes_per_writer: f64,
     conf: &HadoopConf,
 ) -> DfsioResult {
-    let (mut engine, world) = build_world(seed, conf);
+    write_test_on(ClusterPreset::Amdahl, seed, writers_per_node, bytes_per_writer, conf).result
+}
+
+/// TestDFSIO write on an arbitrary cluster preset (the sweep engine's
+/// dfsio-write workload).
+pub fn write_test_on(
+    preset: ClusterPreset,
+    seed: u64,
+    writers_per_node: usize,
+    bytes_per_writer: f64,
+    conf: &HadoopConf,
+) -> DfsioRun {
+    let (mut engine, world) = build_world(preset, seed, conf);
+    let n = preset.node_count();
     let done_times = shared(Vec::<f64>::new());
-    for node in 1..9 {
+    for node in 1..n {
         for wid in 0..writers_per_node {
             let dt = done_times.clone();
             write_file(
@@ -74,7 +106,14 @@ pub fn write_test(
     }
     engine.run();
     let times = done_times.borrow().clone();
-    summarize(&times, writers_per_node, bytes_per_writer, utilization(&engine))
+    let result = summarize(
+        &times,
+        writers_per_node,
+        bytes_per_writer,
+        preset.slave_count(),
+        utilization(&engine),
+    );
+    finish(&engine, &world, result)
 }
 
 /// Pre-place a file of `bytes` whose blocks all have a replica on
@@ -111,8 +150,9 @@ pub fn preplace_file(
     w.namenode.put_file(name, FileMeta { blocks });
 }
 
-/// TestDFSIO read (Fig 2(b)). `force_remote` selects the "reading from
-/// another node" series; otherwise every read is node-local.
+/// TestDFSIO read (Fig 2(b)) on the paper's nine-blade Amdahl cluster.
+/// `force_remote` selects the "reading from another node" series;
+/// otherwise every read is node-local.
 pub fn read_test(
     seed: u64,
     readers_per_node: usize,
@@ -120,9 +160,24 @@ pub fn read_test(
     conf: &HadoopConf,
     force_remote: bool,
 ) -> DfsioResult {
-    let (mut engine, world) = build_world(seed, conf);
+    read_test_on(ClusterPreset::Amdahl, seed, readers_per_node, bytes_per_reader, conf, force_remote)
+        .result
+}
+
+/// TestDFSIO read on an arbitrary cluster preset (the sweep engine's
+/// dfsio-read workload).
+pub fn read_test_on(
+    preset: ClusterPreset,
+    seed: u64,
+    readers_per_node: usize,
+    bytes_per_reader: f64,
+    conf: &HadoopConf,
+    force_remote: bool,
+) -> DfsioRun {
+    let (mut engine, world) = build_world(preset, seed, conf);
+    let n = preset.node_count();
     let mut rng = engine.rng.fork(0xD5F10);
-    for node in 1..9 {
+    for node in 1..n {
         for rid in 0..readers_per_node {
             preplace_file(
                 &world,
@@ -135,7 +190,7 @@ pub fn read_test(
         }
     }
     let done_times = shared(Vec::<f64>::new());
-    for node in 1..9 {
+    for node in 1..n {
         for rid in 0..readers_per_node {
             let dt = done_times.clone();
             read_file(
@@ -152,13 +207,21 @@ pub fn read_test(
     }
     engine.run();
     let times = done_times.borrow().clone();
-    summarize(&times, readers_per_node, bytes_per_reader, utilization(&engine))
+    let result = summarize(
+        &times,
+        readers_per_node,
+        bytes_per_reader,
+        preset.slave_count(),
+        utilization(&engine),
+    );
+    finish(&engine, &world, result)
 }
 
 fn summarize(
     done_times: &[f64],
     workers_per_node: usize,
     bytes_each: f64,
+    slaves: usize,
     utilization: Vec<(String, f64)>,
 ) -> DfsioResult {
     let makespan = done_times.iter().cloned().fold(0.0, f64::max);
@@ -166,7 +229,7 @@ fn summarize(
     DfsioResult {
         per_node_mbps: per_node,
         makespan,
-        aggregate_mbps: per_node * 8.0,
+        aggregate_mbps: per_node * slaves as f64,
         utilization,
     }
 }

@@ -45,6 +45,15 @@ pub fn amdahl_blade_ncore(disk: DiskKind, cores: usize) -> NodeSpec {
     n.cpu = atom_ncore(cores);
     // §4: more cores alone won't lift memory-bound paths; the bus model
     // stays put unless the caller also upgrades `net.membus_copy_bps`.
+    //
+    // Power scales with the die count: the Atom 330 is an 8 W dual-core
+    // part in a ~40 W platform, so each core added/removed moves the
+    // full-load envelope by ~4 W and idle by ~1 W. This is what makes the
+    // sweep's MB/s/W frontier peak at the balanced core count instead of
+    // monotonically tracking throughput.
+    let delta = cores as f64 - 2.0;
+    n.power_full_w += 4.0 * delta;
+    n.power_idle_w += 1.0 * delta;
     n
 }
 
@@ -85,5 +94,11 @@ mod tests {
     fn ncore_preset() {
         let b = amdahl_blade_ncore(DiskKind::Raid0, 4);
         assert_eq!(b.cpu.cores, 4);
+        // Two extra cores ≈ one extra Atom 330 die: +8 W full load.
+        assert!((b.power_full_w - 48.0).abs() < 1e-9);
+        assert!((b.power_idle_w - 30.0).abs() < 1e-9);
+        // The 2-core hypothetical blade matches the real one.
+        let b2 = amdahl_blade_ncore(DiskKind::Raid0, 2);
+        assert!((b2.power_full_w - 40.0).abs() < 1e-9);
     }
 }

@@ -30,6 +30,11 @@
 //! * [`amdahl`] — instruction accounting → the paper's Table 4 numbers.
 //! * [`energy`] — power integration → the paper's §3.6 efficiency ratios.
 //! * [`report`] — regenerates every figure and table in the paper.
+//! * [`sweep`] — parallel scenario-sweep engine: Cartesian design-space
+//!   grids (cores × write path × LZO × workload), a multithreaded
+//!   work-queue runner (one `sim::Engine` per thread), and the
+//!   core-count frontier analysis generalizing the paper's §5 four-core
+//!   conclusion (`amdahl-hadoop sweep`).
 
 pub mod amdahl;
 pub mod cluster;
@@ -42,6 +47,7 @@ pub mod mapreduce;
 pub mod report;
 pub mod runtime;
 pub mod sim;
+pub mod sweep;
 pub mod zones;
 
 pub mod benchkit;

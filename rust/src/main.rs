@@ -8,7 +8,14 @@
 //! amdahl-hadoop search --theta 60 --scale 0.002 [--kernels] [--preset occ]
 //! amdahl-hadoop stat   --scale 0.002 [--kernels]
 //! amdahl-hadoop dfsio  --op write|read --workers 2 --gb 3
+//! amdahl-hadoop sweep  [--cores 1..8] [--nodes 9] [--threads N] [--gb 0.125]
+//!                      [--workers 4] [--out BENCH_sweep.json] [--quiet]
 //! ```
+//!
+//! `sweep` expands the design-space grid (cores × write path × LZO ×
+//! workload), runs every scenario in parallel across OS threads, writes
+//! the per-scenario records to `--out` as JSON, and prints the §5
+//! core-count frontier table with the balanced-core estimate.
 //!
 //! Common options: `--seed N` (default 42), `--scale F` (fraction of the
 //! paper's 25 GB dataset, default 0.002), `--kernels` (load the AOT
@@ -104,6 +111,33 @@ fn main() -> anyhow::Result<()> {
                 out.pairs_found,
                 out.kernel_calls
             );
+        }
+        "sweep" => {
+            let (core_lo, core_hi) =
+                amdahl_hadoop::sweep::parse_core_range(args.get("cores").unwrap_or("1..8"))?;
+            let nodes = args.get_usize("nodes", 9)?;
+            anyhow::ensure!(nodes >= 2, "--nodes needs a master and at least one slave (got {nodes})");
+            let mut grid = amdahl_hadoop::sweep::SweepGrid::paper_default(seed, core_lo, core_hi);
+            grid.nodes = vec![nodes];
+            let opts = amdahl_hadoop::sweep::SweepOptions {
+                threads: args.get_usize("threads", 0)?,
+                scale: args.get_f64("scale", 0.0008)?,
+                dfsio_bytes_per_worker: args.get_f64("gb", 0.125)? * 1024.0 * MIB,
+                dfsio_workers: args.get_usize("workers", 4)?,
+                progress: !args.flag("quiet"),
+            };
+            eprintln!(
+                "[sweep] {} scenarios (cores {core_lo}..={core_hi} x {} write paths x lzo \
+                 on/off x {} workloads), seed {seed}",
+                grid.len(),
+                grid.write_paths.len(),
+                grid.workloads.len()
+            );
+            let results = amdahl_hadoop::sweep::run_sweep(&grid, &opts);
+            let out_path = args.get("out").unwrap_or("BENCH_sweep.json");
+            std::fs::write(out_path, results.to_json())?;
+            eprintln!("[sweep] wrote {} records to {out_path}", results.records.len());
+            print!("{}", report::render_frontier(&results.frontier()));
         }
         "dfsio" => {
             let workers = args.get_usize("workers", 2)?;

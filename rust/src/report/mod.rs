@@ -586,3 +586,39 @@ pub fn balance() -> String {
 pub fn table1() -> String {
     format!("Table 1: Hadoop configuration parameters\n{}", HadoopConf::default().render_table1())
 }
+
+// ------------------------------------------------------------ §5 frontier
+
+/// Render the sweep's core-count frontier (the §5 generalization): one
+/// row per swept core count at the baseline configuration, plus the
+/// three balance estimates (empirical knee, energy optimum, analytic §4).
+pub fn render_frontier(f: &crate::sweep::FrontierAnalysis) -> String {
+    let mut s = format!(
+        "§5 core-count frontier ({} workload, {} write path, no LZO)\n\
+         cores   MB/s/node   speedup   marginal     cpu%   bottleneck   MB/s/W\n",
+        f.workload, f.write_path
+    );
+    for r in &f.rows {
+        s.push_str(&format!(
+            "{:>5}   {:>9.1}   {:>6.2}x   {:>+7.1}%   {:>5.0}%   {:<10}   {:>6.2}\n",
+            r.cores,
+            r.per_node_mbps,
+            r.speedup,
+            r.marginal_gain * 100.0,
+            r.cpu_util * 100.0,
+            r.bottleneck,
+            r.mbps_per_watt,
+        ));
+    }
+    s.push_str(&format!(
+        "empirical balance point (bottleneck leaves CPU): {}\n\
+         energy-optimal cores (max MB/s/W):               {}\n\
+         analytic §4 estimate (Amdahl's I/O law):         {}\n\
+         balanced-core estimate: {} (paper §5: 4 Atom cores)\n",
+        f.empirical_cores.map(|c| c.to_string()).unwrap_or_else(|| "not reached".into()),
+        f.efficiency_cores.map(|c| c.to_string()).unwrap_or_else(|| "n/a".into()),
+        f.analytic_cores,
+        f.balanced_cores(),
+    ));
+    s
+}

@@ -15,6 +15,21 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+// With the `xla` feature enabled, `xla` resolves to the real PJRT
+// bindings crate (which must be vendored into Cargo.toml). Without it —
+// the offline default — this in-tree stub provides the same API and
+// fails cleanly at kernel-load time.
+#[cfg(not(feature = "xla"))]
+#[path = "xla_stub.rs"]
+mod xla;
+
+#[cfg(feature = "xla")]
+compile_error!(
+    "the `xla` feature marks the seam for the real PJRT bindings: vendor the \
+     `xla` crate into rust/Cargo.toml [dependencies] and delete this guard. \
+     The offline build must use the default feature set."
+);
+
 /// Number of θ bins the histogram artifacts were compiled with.
 pub const HIST_BINS: usize = 60;
 

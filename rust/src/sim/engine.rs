@@ -372,6 +372,26 @@ impl Engine {
     pub fn busy_for(&self, resource: ResourceId, class: UsageClass) -> f64 {
         self.resources[resource.index()].busy_for(class)
     }
+
+    /// Total busy unit-seconds on `resource` across all classes.
+    pub fn busy_total(&self, resource: ResourceId) -> f64 {
+        self.resources[resource.index()].busy_integral
+    }
+
+    /// Owned per-resource usage snapshot (name, busy time, mean
+    /// utilization), in registration order. Lets reporting layers keep
+    /// utilization data after the engine is dropped.
+    pub fn usage_snapshot(&self) -> Vec<super::resource::UsageSnapshot> {
+        self.resources
+            .iter()
+            .map(|r| super::resource::UsageSnapshot {
+                name: r.name.clone(),
+                capacity: r.capacity,
+                busy_unit_seconds: r.busy_integral,
+                mean_utilization: r.mean_utilization(),
+            })
+            .collect()
+    }
 }
 
 /// Convenience: shared mutable world handle used by the domain layers.

@@ -23,5 +23,5 @@ pub mod rng;
 
 pub use engine::{Engine, FlowId, TimerId};
 pub use flow::{FlowSpec, SerialStage};
-pub use resource::{ResourceId, UsageClass};
+pub use resource::{ResourceId, UsageClass, UsageSnapshot};
 pub use rng::Rng;

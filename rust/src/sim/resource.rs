@@ -110,6 +110,20 @@ impl Resource {
     }
 }
 
+/// Owned snapshot of one resource's lifetime usage, for reporting layers
+/// (e.g. the sweep engine) that outlive the engine that produced it.
+#[derive(Debug, Clone)]
+pub struct UsageSnapshot {
+    /// Resource name as registered (`"n3.cpu"`, `"n0.tx"`, ...).
+    pub name: String,
+    /// Current capacity in units/second.
+    pub capacity: f64,
+    /// Total integrated busy unit-seconds across all usage classes.
+    pub busy_unit_seconds: f64,
+    /// Mean utilization over the whole run, as a fraction of capacity.
+    pub mean_utilization: f64,
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,352 @@
+//! Declarative scenario axes with Cartesian expansion.
+//!
+//! A [`SweepGrid`] names the design-space axes the paper's §5 argument
+//! ranges over — cluster family, node count, Atom cores per blade, HDFS
+//! write path, LZO, workload — and expands them into concrete
+//! [`Scenario`]s with **stable ids** (pure functions of the axis values)
+//! and **deterministic per-scenario seeds** (derived from the base seed
+//! and the id, so adding or removing an axis value never perturbs the
+//! seeds of the surviving scenarios).
+
+use crate::conf::{ClusterPreset, HadoopConf};
+
+/// Cluster hardware family (the paper's two testbeds).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ClusterFamily {
+    /// Atom-based Amdahl blades; honors the node/core axes.
+    Amdahl,
+    /// The Open Cloud Consortium comparison cluster (fixed 4 × Opteron
+    /// nodes; the node/core axes are ignored but still keyed into the
+    /// scenario id so expansion stays a pure Cartesian product).
+    Occ,
+}
+
+impl ClusterFamily {
+    pub const ALL: [ClusterFamily; 2] = [ClusterFamily::Amdahl, ClusterFamily::Occ];
+
+    pub fn key(self) -> &'static str {
+        match self {
+            ClusterFamily::Amdahl => "amdahl",
+            ClusterFamily::Occ => "occ",
+        }
+    }
+}
+
+/// HDFS write-path variants (paper §3.4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WritePath {
+    /// Stock v0.20 path: unbuffered application writes, a JNI CRC32
+    /// crossing every 8 bytes, 512 B checksum chunks (§3.4.1's villain).
+    BufferedJni,
+    /// §3.4.1 fix: BufferedOutputStream + 4 KB checksum chunks.
+    OutputBuffered,
+    /// §3.4.3 fix: output buffering plus direct I/O on the DataNode.
+    DirectIo,
+}
+
+impl WritePath {
+    pub const ALL: [WritePath; 3] =
+        [WritePath::BufferedJni, WritePath::OutputBuffered, WritePath::DirectIo];
+
+    pub fn key(self) -> &'static str {
+        match self {
+            WritePath::BufferedJni => "jni",
+            WritePath::OutputBuffered => "buf",
+            WritePath::DirectIo => "direct",
+        }
+    }
+
+    /// Apply this write path to a Hadoop configuration.
+    pub fn apply(self, conf: &mut HadoopConf) {
+        match self {
+            WritePath::BufferedJni => {
+                conf.buffered_output = false;
+                conf.io_bytes_per_checksum = 512;
+                conf.direct_io_write = false;
+            }
+            WritePath::OutputBuffered => {
+                conf.buffered_output = true;
+                conf.io_bytes_per_checksum = 4096;
+                conf.direct_io_write = false;
+            }
+            WritePath::DirectIo => {
+                conf.buffered_output = true;
+                conf.io_bytes_per_checksum = 4096;
+                conf.direct_io_write = true;
+            }
+        }
+    }
+}
+
+/// Workloads the sweep can schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Workload {
+    /// TestDFSIO write (Fig 2a shape): the HDFS write path under test.
+    DfsioWrite,
+    /// TestDFSIO read, node-local replicas (Fig 2b shape).
+    DfsioRead,
+    /// Neighbor Searching MapReduce job (data-intensive, §2.1).
+    Search,
+    /// Neighbor Statistics MapReduce job (compute-intensive, §2.2).
+    Stat,
+}
+
+impl Workload {
+    pub const ALL: [Workload; 4] =
+        [Workload::DfsioWrite, Workload::DfsioRead, Workload::Search, Workload::Stat];
+
+    pub fn key(self) -> &'static str {
+        match self {
+            Workload::DfsioWrite => "dfsio-write",
+            Workload::DfsioRead => "dfsio-read",
+            Workload::Search => "search",
+            Workload::Stat => "stat",
+        }
+    }
+}
+
+/// One fully-specified point of the design space.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// Stable id: a pure function of the axis values.
+    pub id: String,
+    pub family: ClusterFamily,
+    /// Total node count including the master (Amdahl family only).
+    pub nodes: usize,
+    /// Atom cores per blade (Amdahl family only).
+    pub cores: usize,
+    pub write_path: WritePath,
+    pub lzo: bool,
+    pub workload: Workload,
+    /// Deterministic per-scenario seed derived from the grid's base seed
+    /// and the scenario id.
+    pub seed: u64,
+}
+
+impl Scenario {
+    /// The cluster preset this scenario runs on.
+    pub fn preset(&self) -> ClusterPreset {
+        match self.family {
+            ClusterFamily::Amdahl => {
+                ClusterPreset::AmdahlSized { nodes: self.nodes, cores: self.cores }
+            }
+            ClusterFamily::Occ => ClusterPreset::Occ,
+        }
+    }
+
+    /// Map the scenario axes onto a Hadoop configuration (everything not
+    /// named by an axis keeps the paper's tuned Table 1 defaults).
+    pub fn conf(&self) -> HadoopConf {
+        let mut c = HadoopConf::default();
+        self.write_path.apply(&mut c);
+        c.lzo_output = self.lzo;
+        c
+    }
+}
+
+/// The declarative grid: one `Vec` per axis; `expand` takes the
+/// Cartesian product.
+#[derive(Debug, Clone)]
+pub struct SweepGrid {
+    pub base_seed: u64,
+    pub families: Vec<ClusterFamily>,
+    /// Total node counts (master + slaves); every entry must be ≥ 2.
+    pub nodes: Vec<usize>,
+    pub cores: Vec<usize>,
+    pub write_paths: Vec<WritePath>,
+    pub lzo: Vec<bool>,
+    pub workloads: Vec<Workload>,
+}
+
+impl SweepGrid {
+    /// The paper-shaped default grid: the nine-blade Amdahl cluster with
+    /// `core_lo..=core_hi` Atom cores, all three §3.4 write paths, LZO
+    /// on/off, all four workloads.
+    pub fn paper_default(base_seed: u64, core_lo: usize, core_hi: usize) -> SweepGrid {
+        SweepGrid {
+            base_seed,
+            families: vec![ClusterFamily::Amdahl],
+            nodes: vec![9],
+            cores: (core_lo..=core_hi).collect(),
+            write_paths: WritePath::ALL.to_vec(),
+            lzo: vec![false, true],
+            workloads: Workload::ALL.to_vec(),
+        }
+    }
+
+    /// Number of scenarios `expand` will produce (axis counts multiply).
+    pub fn len(&self) -> usize {
+        self.families.len()
+            * self.nodes.len()
+            * self.cores.len()
+            * self.write_paths.len()
+            * self.lzo.len()
+            * self.workloads.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Expand the Cartesian product, in a fixed axis-major order
+    /// (family, nodes, cores, write path, lzo, workload).
+    pub fn expand(&self) -> Vec<Scenario> {
+        let mut out = Vec::with_capacity(self.len());
+        for &family in &self.families {
+            for &nodes in &self.nodes {
+                assert!(nodes >= 2, "a cluster needs a master and at least one slave");
+                for &cores in &self.cores {
+                    assert!(cores >= 1, "at least one core per blade");
+                    for &write_path in &self.write_paths {
+                        for &lzo in &self.lzo {
+                            for &workload in &self.workloads {
+                                let id = scenario_id(family, nodes, cores, write_path, lzo, workload);
+                                let seed = derive_seed(self.base_seed, &id);
+                                out.push(Scenario {
+                                    id,
+                                    family,
+                                    nodes,
+                                    cores,
+                                    write_path,
+                                    lzo,
+                                    workload,
+                                    seed,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Stable scenario id, e.g. `amdahl-n9-c4-direct-nolzo-dfsio-write`.
+pub fn scenario_id(
+    family: ClusterFamily,
+    nodes: usize,
+    cores: usize,
+    write_path: WritePath,
+    lzo: bool,
+    workload: Workload,
+) -> String {
+    format!(
+        "{}-n{}-c{}-{}-{}-{}",
+        family.key(),
+        nodes,
+        cores,
+        write_path.key(),
+        if lzo { "lzo" } else { "nolzo" },
+        workload.key()
+    )
+}
+
+/// Deterministic seed for a scenario: splitmix64 over the id bytes,
+/// keyed by the base seed. Stable across runs, platforms, and grid
+/// reshapes (it depends only on the id string).
+pub fn derive_seed(base_seed: u64, id: &str) -> u64 {
+    let mut h = base_seed ^ 0x9E37_79B9_7F4A_7C15;
+    for &b in id.as_bytes() {
+        h = splitmix64(h ^ b as u64);
+    }
+    // Avoid the degenerate all-zero seed some RNGs dislike.
+    splitmix64(h) | 1
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Parse a `--cores` range argument: `"1..8"` (inclusive) or `"4"`.
+pub fn parse_core_range(s: &str) -> anyhow::Result<(usize, usize)> {
+    if let Some((lo, hi)) = s.split_once("..") {
+        let lo: usize = lo.trim().parse()?;
+        let hi: usize = hi.trim().trim_start_matches('=').trim().parse()?;
+        anyhow::ensure!(lo >= 1 && hi >= lo, "bad core range {s}");
+        Ok((lo, hi))
+    } else {
+        let v: usize = s.trim().parse()?;
+        anyhow::ensure!(v >= 1, "bad core count {s}");
+        Ok((v, v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axis_counts_multiply() {
+        let g = SweepGrid::paper_default(42, 1, 8);
+        assert_eq!(g.len(), 1 * 1 * 8 * 3 * 2 * 4);
+        assert_eq!(g.expand().len(), g.len());
+    }
+
+    #[test]
+    fn ids_are_stable_and_unique() {
+        let g = SweepGrid::paper_default(42, 1, 4);
+        let a: Vec<String> = g.expand().into_iter().map(|s| s.id).collect();
+        let b: Vec<String> = g.expand().into_iter().map(|s| s.id).collect();
+        assert_eq!(a, b);
+        let mut uniq = a.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), a.len(), "duplicate scenario ids");
+        assert!(a.contains(&"amdahl-n9-c4-direct-nolzo-dfsio-write".to_string()));
+    }
+
+    #[test]
+    fn seeds_deterministic_and_distinct() {
+        let g = SweepGrid::paper_default(7, 1, 4);
+        let s1: Vec<u64> = g.expand().into_iter().map(|s| s.seed).collect();
+        let s2: Vec<u64> = g.expand().into_iter().map(|s| s.seed).collect();
+        assert_eq!(s1, s2);
+        let mut uniq = s1.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), s1.len(), "seed collision");
+        // A different base seed moves every scenario seed.
+        let g9 = SweepGrid::paper_default(9, 1, 4);
+        let s9: Vec<u64> = g9.expand().into_iter().map(|s| s.seed).collect();
+        assert!(s1.iter().zip(&s9).all(|(a, b)| a != b));
+    }
+
+    #[test]
+    fn scenario_conf_mapping() {
+        let g = SweepGrid::paper_default(42, 2, 2);
+        for sc in g.expand() {
+            let c = sc.conf();
+            match sc.write_path {
+                WritePath::BufferedJni => {
+                    assert!(!c.buffered_output && !c.direct_io_write);
+                    assert_eq!(c.io_bytes_per_checksum, 512);
+                }
+                WritePath::OutputBuffered => {
+                    assert!(c.buffered_output && !c.direct_io_write);
+                    assert_eq!(c.io_bytes_per_checksum, 4096);
+                }
+                WritePath::DirectIo => {
+                    assert!(c.buffered_output && c.direct_io_write);
+                }
+            }
+            assert_eq!(c.lzo_output, sc.lzo);
+            assert_eq!(sc.preset().node_count(), 9);
+            assert_eq!(sc.preset().core_count(), 2);
+        }
+    }
+
+    #[test]
+    fn core_range_parsing() {
+        assert_eq!(parse_core_range("1..8").unwrap(), (1, 8));
+        assert_eq!(parse_core_range("2..=6").unwrap(), (2, 6));
+        assert_eq!(parse_core_range("4").unwrap(), (4, 4));
+        assert!(parse_core_range("0..3").is_err());
+        assert!(parse_core_range("5..2").is_err());
+        assert!(parse_core_range("x").is_err());
+    }
+}

@@ -1,0 +1,29 @@
+//! Parallel scenario-sweep engine for design-space exploration.
+//!
+//! The paper closes (§5) with a single hand-derived point: "Amdahl
+//! blades need four Atom cores to be balanced for Hadoop". This
+//! subsystem turns that one point into a sweepable design space:
+//!
+//! * [`grid`] — declarative axes (cluster family, node count, cores per
+//!   blade, HDFS write path, LZO, workload) expanded into scenarios with
+//!   stable ids and deterministic per-scenario seeds;
+//! * [`runner`] — a work-queue executor that runs scenarios in parallel
+//!   across OS threads (each thread owns its own `sim::Engine`, so the
+//!   single-threaded simulation world is never shared);
+//! * [`results`] — per-scenario records (runtime, per-device
+//!   utilization, joules, MB/s/W), the core-count **frontier analysis**
+//!   that reproduces and generalizes the four-core estimate, and the
+//!   byte-stable `BENCH_sweep.json` emission.
+//!
+//! Entry point: `amdahl-hadoop sweep --cores 1..8`.
+
+pub mod grid;
+pub mod results;
+pub mod runner;
+
+pub use grid::{parse_core_range, ClusterFamily, Scenario, SweepGrid, Workload, WritePath};
+pub use results::{
+    aggregate_usage, analytic_balanced_cores, FrontierAnalysis, FrontierRow, KindUtils,
+    ScenarioRecord, SweepResults,
+};
+pub use runner::{run_scenario, run_sweep, SweepOptions};

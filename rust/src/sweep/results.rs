@@ -1,0 +1,380 @@
+//! Per-scenario records, the core-count frontier analysis, and JSON
+//! emission (`BENCH_sweep.json`).
+//!
+//! The frontier generalizes the paper's §5 conclusion: sweep cores at the
+//! baseline configuration (tuned write path, no LZO, the dfsio-write
+//! workload whose traffic pattern is exactly the §4 arithmetic), watch
+//! per-node throughput climb while the CPU is the bottleneck, and call
+//! the smallest core count at which the bottleneck moves off the CPU the
+//! **balanced** blade. The analytic §4 estimate (Amdahl's I/O law) is
+//! computed alongside as a cross-check; both land on four Atom cores.
+
+use crate::hw::MIB;
+use crate::sim::UsageSnapshot;
+
+use super::grid::{Scenario, Workload, WritePath};
+
+/// Utilization aggregated by device kind: for each kind, the **maximum**
+/// per-node mean utilization (the master idles; a mean over all nodes
+/// would dilute the bottleneck signal).
+#[derive(Debug, Clone, Default)]
+pub struct KindUtils {
+    pub cpu: f64,
+    pub disk: f64,
+    pub net: f64,
+    pub membus: f64,
+}
+
+impl KindUtils {
+    /// The most-utilized device kind ("cpu" | "disk" | "net" | "membus").
+    pub fn bottleneck(&self) -> &'static str {
+        let mut best = ("cpu", self.cpu);
+        for (k, v) in [("disk", self.disk), ("net", self.net), ("membus", self.membus)] {
+            if v > best.1 {
+                best = (k, v);
+            }
+        }
+        best.0
+    }
+}
+
+/// Fold a raw per-resource snapshot into per-kind maxima. Resource names
+/// follow the `Cluster::build` convention: `n<i>.cpu`, `n<i>.disk`,
+/// `n<i>.tx`, `n<i>.rx`, `n<i>.membus`.
+pub fn aggregate_usage(usage: &[UsageSnapshot]) -> KindUtils {
+    let mut k = KindUtils::default();
+    for u in usage {
+        let kind = u.name.rsplit('.').next().unwrap_or("");
+        let v = u.mean_utilization;
+        match kind {
+            "cpu" => k.cpu = k.cpu.max(v),
+            "disk" => k.disk = k.disk.max(v),
+            "tx" | "rx" => k.net = k.net.max(v),
+            "membus" => k.membus = k.membus.max(v),
+            _ => {}
+        }
+    }
+    k
+}
+
+/// One completed scenario.
+#[derive(Debug, Clone)]
+pub struct ScenarioRecord {
+    pub id: String,
+    pub family: &'static str,
+    pub nodes: usize,
+    pub cores: usize,
+    pub write_path: &'static str,
+    pub lzo: bool,
+    pub workload: &'static str,
+    pub seed: u64,
+    /// Simulated makespan, seconds.
+    pub seconds: f64,
+    /// Application bytes moved (workload-defined; see the runner).
+    pub bytes_moved: f64,
+    /// Per-node application throughput, MB/s (bytes over the slaves).
+    pub per_node_mbps: f64,
+    /// Paper-method energy: nodes × full-load watts × makespan.
+    pub joules: f64,
+    /// Cluster-level energy efficiency: aggregate MB/s per watt.
+    pub mbps_per_watt: f64,
+    pub cpu_util: f64,
+    pub disk_util: f64,
+    pub net_util: f64,
+    pub membus_util: f64,
+    pub bottleneck: &'static str,
+}
+
+impl ScenarioRecord {
+    /// Assemble a record from raw measurements (shared by every workload
+    /// arm of the runner).
+    pub fn new(
+        sc: &Scenario,
+        seconds: f64,
+        bytes_moved: f64,
+        joules: f64,
+        usage: &[UsageSnapshot],
+    ) -> ScenarioRecord {
+        let k = aggregate_usage(usage);
+        let slaves = (sc.preset().slave_count()).max(1) as f64;
+        let per_node_mbps = if seconds > 0.0 { bytes_moved / seconds / MIB / slaves } else { 0.0 };
+        let watts = if seconds > 0.0 { joules / seconds } else { 0.0 };
+        let mbps_per_watt = if watts > 0.0 { bytes_moved / seconds / MIB / watts } else { 0.0 };
+        ScenarioRecord {
+            id: sc.id.clone(),
+            family: sc.family.key(),
+            nodes: sc.preset().node_count(),
+            cores: sc.preset().core_count(),
+            write_path: sc.write_path.key(),
+            lzo: sc.lzo,
+            workload: sc.workload.key(),
+            seed: sc.seed,
+            seconds,
+            bytes_moved,
+            per_node_mbps,
+            joules,
+            mbps_per_watt,
+            cpu_util: k.cpu,
+            disk_util: k.disk,
+            net_util: k.net,
+            membus_util: k.membus,
+            bottleneck: k.bottleneck(),
+        }
+    }
+}
+
+/// One core count of the frontier.
+#[derive(Debug, Clone)]
+pub struct FrontierRow {
+    pub cores: usize,
+    pub per_node_mbps: f64,
+    /// Throughput relative to the first (smallest) core count.
+    pub speedup: f64,
+    /// Relative gain over the previous core count (0 for the first row).
+    pub marginal_gain: f64,
+    pub cpu_util: f64,
+    pub bottleneck: &'static str,
+    pub mbps_per_watt: f64,
+}
+
+/// The §5-generalizing frontier analysis.
+#[derive(Debug, Clone)]
+pub struct FrontierAnalysis {
+    /// Workload the frontier was cut along.
+    pub workload: &'static str,
+    /// Write path held fixed (the paper's tuned baseline).
+    pub write_path: &'static str,
+    pub rows: Vec<FrontierRow>,
+    /// Empirical balance point: smallest swept core count whose
+    /// bottleneck is no longer the CPU (None if the CPU binds at every
+    /// swept count).
+    pub empirical_cores: Option<usize>,
+    /// Energy-optimal core count: argmax of MB/s/W over the sweep.
+    pub efficiency_cores: Option<usize>,
+    /// The paper's §4 analytic estimate (Amdahl's I/O law): 4.
+    pub analytic_cores: usize,
+}
+
+impl FrontierAnalysis {
+    /// The headline balanced-core estimate: the empirical knee when the
+    /// sweep reached it, else the analytic §4 number.
+    pub fn balanced_cores(&self) -> usize {
+        self.empirical_cores.unwrap_or(self.analytic_cores)
+    }
+}
+
+/// A full sweep: every scenario record, in grid expansion order.
+#[derive(Debug, Clone)]
+pub struct SweepResults {
+    pub base_seed: u64,
+    pub records: Vec<ScenarioRecord>,
+}
+
+impl SweepResults {
+    /// Cut the core-count frontier at the paper's baseline configuration:
+    /// dfsio-write (the §4 traffic pattern), tuned write path
+    /// (output-buffered + direct I/O), no LZO, on the Amdahl family.
+    pub fn frontier(&self) -> FrontierAnalysis {
+        self.frontier_for(Workload::DfsioWrite, WritePath::DirectIo)
+    }
+
+    /// Frontier along an arbitrary workload / write-path cut.
+    pub fn frontier_for(&self, workload: Workload, write_path: WritePath) -> FrontierAnalysis {
+        let mut base: Vec<&ScenarioRecord> = self
+            .records
+            .iter()
+            .filter(|r| {
+                r.family == "amdahl"
+                    && r.workload == workload.key()
+                    && r.write_path == write_path.key()
+                    && !r.lzo
+            })
+            .collect();
+        base.sort_by_key(|r| (r.cores, r.nodes));
+        // One row per core count (first node-count variant wins).
+        base.dedup_by_key(|r| r.cores);
+
+        let first_mbps = base.first().map(|r| r.per_node_mbps).unwrap_or(0.0);
+        let mut rows = Vec::with_capacity(base.len());
+        let mut prev_mbps = first_mbps;
+        for (i, r) in base.iter().enumerate() {
+            let marginal =
+                if i == 0 || prev_mbps <= 0.0 { 0.0 } else { r.per_node_mbps / prev_mbps - 1.0 };
+            rows.push(FrontierRow {
+                cores: r.cores,
+                per_node_mbps: r.per_node_mbps,
+                speedup: if first_mbps > 0.0 { r.per_node_mbps / first_mbps } else { 0.0 },
+                marginal_gain: marginal,
+                cpu_util: r.cpu_util,
+                bottleneck: r.bottleneck,
+                mbps_per_watt: r.mbps_per_watt,
+            });
+            prev_mbps = r.per_node_mbps;
+        }
+
+        let empirical = rows.iter().find(|r| r.bottleneck != "cpu").map(|r| r.cores);
+        let efficiency = rows
+            .iter()
+            .max_by(|a, b| a.mbps_per_watt.total_cmp(&b.mbps_per_watt))
+            .map(|r| r.cores);
+        FrontierAnalysis {
+            workload: workload.key(),
+            write_path: write_path.key(),
+            rows,
+            empirical_cores: empirical,
+            efficiency_cores: efficiency,
+            analytic_cores: analytic_balanced_cores(),
+        }
+    }
+
+    /// Serialize everything (records + frontier) as JSON. The output is
+    /// byte-stable for a given grid and seed: fixed key order, fixed
+    /// float formatting, records in grid expansion order.
+    pub fn to_json(&self) -> String {
+        let f = self.frontier();
+        let mut s = String::with_capacity(256 + self.records.len() * 360);
+        s.push_str("{\n");
+        s.push_str("  \"bench\": \"sweep\",\n");
+        s.push_str(&format!("  \"base_seed\": {},\n", self.base_seed));
+        s.push_str(&format!("  \"scenarios\": {},\n", self.records.len()));
+        s.push_str("  \"records\": [\n");
+        for (i, r) in self.records.iter().enumerate() {
+            s.push_str("    {");
+            s.push_str(&format!("\"id\": \"{}\", ", esc(&r.id)));
+            s.push_str(&format!("\"family\": \"{}\", ", r.family));
+            s.push_str(&format!("\"nodes\": {}, ", r.nodes));
+            s.push_str(&format!("\"cores\": {}, ", r.cores));
+            s.push_str(&format!("\"write_path\": \"{}\", ", r.write_path));
+            s.push_str(&format!("\"lzo\": {}, ", r.lzo));
+            s.push_str(&format!("\"workload\": \"{}\", ", r.workload));
+            s.push_str(&format!("\"seed\": {}, ", r.seed));
+            s.push_str(&format!("\"seconds\": {}, ", num(r.seconds)));
+            s.push_str(&format!("\"bytes_moved\": {}, ", num(r.bytes_moved)));
+            s.push_str(&format!("\"per_node_mbps\": {}, ", num(r.per_node_mbps)));
+            s.push_str(&format!("\"joules\": {}, ", num(r.joules)));
+            s.push_str(&format!("\"mbps_per_watt\": {}, ", num(r.mbps_per_watt)));
+            s.push_str(&format!("\"cpu_util\": {}, ", num(r.cpu_util)));
+            s.push_str(&format!("\"disk_util\": {}, ", num(r.disk_util)));
+            s.push_str(&format!("\"net_util\": {}, ", num(r.net_util)));
+            s.push_str(&format!("\"membus_util\": {}, ", num(r.membus_util)));
+            s.push_str(&format!("\"bottleneck\": \"{}\"", r.bottleneck));
+            s.push_str(if i + 1 == self.records.len() { "}\n" } else { "},\n" });
+        }
+        s.push_str("  ],\n");
+        s.push_str("  \"frontier\": {\n");
+        s.push_str(&format!("    \"workload\": \"{}\",\n", f.workload));
+        s.push_str(&format!("    \"write_path\": \"{}\",\n", f.write_path));
+        s.push_str("    \"rows\": [\n");
+        for (i, r) in f.rows.iter().enumerate() {
+            s.push_str(&format!(
+                "      {{\"cores\": {}, \"per_node_mbps\": {}, \"speedup\": {}, \
+                 \"marginal_gain\": {}, \"cpu_util\": {}, \"bottleneck\": \"{}\", \
+                 \"mbps_per_watt\": {}}}{}\n",
+                r.cores,
+                num(r.per_node_mbps),
+                num(r.speedup),
+                num(r.marginal_gain),
+                num(r.cpu_util),
+                r.bottleneck,
+                num(r.mbps_per_watt),
+                if i + 1 == f.rows.len() { "" } else { "," }
+            ));
+        }
+        s.push_str("    ],\n");
+        s.push_str(&format!(
+            "    \"empirical_cores\": {},\n",
+            f.empirical_cores.map(|c| c.to_string()).unwrap_or_else(|| "null".into())
+        ));
+        s.push_str(&format!(
+            "    \"efficiency_cores\": {},\n",
+            f.efficiency_cores.map(|c| c.to_string()).unwrap_or_else(|| "null".into())
+        ));
+        s.push_str(&format!("    \"analytic_cores\": {},\n", f.analytic_cores));
+        s.push_str(&format!("    \"balanced_cores\": {}\n", f.balanced_cores()));
+        s.push_str("  }\n");
+        s.push_str("}\n");
+        s
+    }
+}
+
+/// The paper's §4 analytic estimate on the baseline blade: 4 cores.
+pub fn analytic_balanced_cores() -> usize {
+    let est = crate::amdahl::balance::estimate(&crate::amdahl::balance::BalanceInputs {
+        cpu: crate::hw::cpu::atom330(),
+        disk: crate::hw::disk::raid0_f1(),
+        net: crate::hw::net::amdahl_net(),
+        mean_ipc: 0.5,
+    });
+    est.cores_hadoop_balanced.ceil() as usize
+}
+
+/// Deterministic float formatting for the JSON output: fixed six
+/// decimals, non-finite values become `null`.
+fn num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.6}")
+    } else {
+        "null".into()
+    }
+}
+
+fn esc(s: &str) -> String {
+    // Scenario ids are `[a-z0-9.-]`; escape defensively anyway.
+    s.chars()
+        .flat_map(|c| match c {
+            '"' | '\\' => vec!['\\', c],
+            c if (c as u32) < 0x20 => vec![' '],
+            c => vec![c],
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(name: &str, util: f64) -> UsageSnapshot {
+        UsageSnapshot {
+            name: name.into(),
+            capacity: 1.0,
+            busy_unit_seconds: util,
+            mean_utilization: util,
+        }
+    }
+
+    #[test]
+    fn aggregation_takes_per_kind_max() {
+        let usage = vec![
+            snap("n0.cpu", 0.05),
+            snap("n1.cpu", 0.91),
+            snap("n1.disk", 0.30),
+            snap("n1.tx", 0.55),
+            snap("n2.rx", 0.72),
+            snap("n1.membus", 0.11),
+        ];
+        let k = aggregate_usage(&usage);
+        assert!((k.cpu - 0.91).abs() < 1e-12);
+        assert!((k.disk - 0.30).abs() < 1e-12);
+        assert!((k.net - 0.72).abs() < 1e-12);
+        assert!((k.membus - 0.11).abs() < 1e-12);
+        assert_eq!(k.bottleneck(), "cpu");
+    }
+
+    #[test]
+    fn analytic_estimate_is_four() {
+        assert_eq!(analytic_balanced_cores(), 4);
+    }
+
+    #[test]
+    fn num_formatting_is_fixed_width_stable() {
+        assert_eq!(num(1.5), "1.500000");
+        assert_eq!(num(f64::NAN), "null");
+        assert_eq!(num(f64::INFINITY), "null");
+    }
+
+    #[test]
+    fn esc_passthrough_and_quotes() {
+        assert_eq!(esc("amdahl-n9-c4"), "amdahl-n9-c4");
+        assert_eq!(esc("a\"b"), "a\\\"b");
+    }
+}

@@ -41,6 +41,8 @@ pub struct RunOutcome {
     pub pairs_found: i64,
     pub histogram: Vec<i64>,
     pub kernel_calls: u64,
+    /// Per-resource usage over the whole run (sweep/bottleneck analysis).
+    pub usage: Vec<crate::sim::UsageSnapshot>,
 }
 
 /// Build a cluster world for `preset` and ingest the catalog.
@@ -139,6 +141,7 @@ pub fn run_app(preset: ClusterPreset, conf: &HadoopConf, zcfg: &ZonesConfig, app
         pairs_found: red.pairs_found,
         histogram: red.histogram.clone(),
         kernel_calls: red.kernel_calls(),
+        usage: engine.usage_snapshot(),
     }
 }
 

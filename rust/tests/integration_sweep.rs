@@ -1,0 +1,152 @@
+//! Integration tests for the scenario-sweep engine: grid expansion,
+//! stable ids, cross-run determinism, and the core-count frontier.
+
+use amdahl_hadoop::hw::MIB;
+use amdahl_hadoop::sweep::{
+    run_sweep, ClusterFamily, SweepGrid, SweepOptions, Workload, WritePath,
+};
+
+fn small_opts() -> SweepOptions {
+    SweepOptions {
+        threads: 2,
+        scale: 0.0008,
+        dfsio_bytes_per_worker: 48.0 * MIB,
+        dfsio_workers: 4,
+        progress: false,
+    }
+}
+
+#[test]
+fn grid_axis_counts_multiply() {
+    let g = SweepGrid {
+        base_seed: 1,
+        families: vec![ClusterFamily::Amdahl],
+        nodes: vec![5, 9],
+        cores: vec![1, 2, 4],
+        write_paths: vec![WritePath::OutputBuffered, WritePath::DirectIo],
+        lzo: vec![false, true],
+        workloads: vec![Workload::DfsioWrite, Workload::Search],
+    };
+    assert_eq!(g.len(), 2 * 3 * 2 * 2 * 2);
+    let scenarios = g.expand();
+    assert_eq!(scenarios.len(), g.len());
+    // Every id unique.
+    let mut ids: Vec<&str> = scenarios.iter().map(|s| s.id.as_str()).collect();
+    ids.sort();
+    ids.dedup();
+    assert_eq!(ids.len(), scenarios.len());
+}
+
+#[test]
+fn scenario_ids_and_seeds_are_stable_functions_of_the_axes() {
+    let g = SweepGrid::paper_default(42, 1, 8);
+    let a = g.expand();
+    let b = g.expand();
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.seed, y.seed);
+    }
+    // The acceptance grid: cores 1..8 expands to ≥ 48 scenarios.
+    assert!(a.len() >= 48, "paper_default(1..8) = {} scenarios", a.len());
+    // Spot-check the id scheme never drifts silently.
+    assert!(a.iter().any(|s| s.id == "amdahl-n9-c1-jni-nolzo-dfsio-write"));
+    assert!(a.iter().any(|s| s.id == "amdahl-n9-c8-direct-lzo-stat"));
+}
+
+#[test]
+fn two_sweeps_same_seed_are_byte_identical() {
+    let g = SweepGrid {
+        base_seed: 42,
+        families: vec![ClusterFamily::Amdahl],
+        nodes: vec![5],
+        cores: vec![1, 4],
+        write_paths: vec![WritePath::DirectIo],
+        lzo: vec![false],
+        workloads: vec![Workload::DfsioWrite, Workload::DfsioRead],
+    };
+    let a = run_sweep(&g, &small_opts());
+    let b = run_sweep(&g, &small_opts());
+    assert_eq!(a.to_json(), b.to_json(), "sweep output must be deterministic");
+    // And a different seed must actually change the measurements' seeds.
+    let g2 = SweepGrid { base_seed: 43, ..g.clone() };
+    let c = run_sweep(&g2, &small_opts());
+    assert_ne!(a.to_json(), c.to_json());
+}
+
+#[test]
+fn frontier_reproduces_the_papers_four_core_estimate() {
+    // The baseline cut of the §5 analysis: dfsio-write, tuned write path,
+    // no LZO, nine blades, cores 1..=6.
+    let g = SweepGrid {
+        base_seed: 42,
+        families: vec![ClusterFamily::Amdahl],
+        nodes: vec![9],
+        cores: (1..=6).collect(),
+        write_paths: vec![WritePath::DirectIo],
+        lzo: vec![false],
+        workloads: vec![Workload::DfsioWrite],
+    };
+    let opts = SweepOptions {
+        threads: 0,
+        dfsio_bytes_per_worker: 96.0 * MIB,
+        dfsio_workers: 4,
+        ..SweepOptions::default()
+    };
+    let results = run_sweep(&g, &opts);
+    let f = results.frontier();
+    assert_eq!(f.rows.len(), 6);
+
+    // Throughput must be non-decreasing in cores (more CPU never hurts).
+    for w in f.rows.windows(2) {
+        assert!(
+            w[1].per_node_mbps >= w[0].per_node_mbps * 0.99,
+            "throughput regressed {:.1} -> {:.1} MB/s at {} cores",
+            w[0].per_node_mbps,
+            w[1].per_node_mbps,
+            w[1].cores
+        );
+    }
+    // At one core the blade is CPU-bound — the paper's whole premise.
+    assert_eq!(f.rows[0].bottleneck, "cpu", "1-core blade must be CPU-bound");
+
+    // The analytic §4 estimate is exactly the paper's four cores.
+    assert_eq!(f.analytic_cores, 4);
+    // The empirical knee lands in the same neighborhood; the headline
+    // estimate (empirical, cross-checked analytic) is four.
+    if let Some(e) = f.empirical_cores {
+        assert!((3..=5).contains(&e), "empirical balance point {e} implausible");
+    }
+    assert!(
+        (3..=5).contains(&f.balanced_cores()),
+        "balanced-core estimate {} should be ~4",
+        f.balanced_cores()
+    );
+}
+
+#[test]
+fn lzo_and_write_path_axes_change_outcomes() {
+    // Sanity: the grid axes actually steer the simulation — the stock
+    // JNI write path must be slower than the tuned direct-I/O path for
+    // the write-heavy workload.
+    let g = SweepGrid {
+        base_seed: 42,
+        families: vec![ClusterFamily::Amdahl],
+        nodes: vec![9],
+        cores: vec![2],
+        write_paths: vec![WritePath::BufferedJni, WritePath::DirectIo],
+        lzo: vec![false],
+        workloads: vec![Workload::Search],
+    };
+    let r = run_sweep(&g, &small_opts());
+    assert_eq!(r.records.len(), 2);
+    let jni = &r.records[0];
+    let direct = &r.records[1];
+    assert_eq!(jni.write_path, "jni");
+    assert_eq!(direct.write_path, "direct");
+    assert!(
+        jni.seconds > direct.seconds,
+        "stock write path {:.1}s should be slower than tuned {:.1}s",
+        jni.seconds,
+        direct.seconds
+    );
+}
