@@ -18,15 +18,7 @@ fn main() {
         reduce_slots: 2,
         ..Default::default()
     };
-    let zcfg = ZonesConfig {
-        seed: 42,
-        scale: 0.02,
-        theta_arcsec: 60.0,
-        block_theta_mult: 10.0,
-        partition_cells: 4,
-        kernel_every: usize::MAX,
-        kernels: None,
-    };
+    let zcfg = ZonesConfig { scale: 0.02, ..Default::default() };
     println!("cores  search θ=60\" (simulated s)   speedup vs 2-core");
     let run_cores = |cores: usize| {
         // Slots scale with cores, as a real deployment would tune them.

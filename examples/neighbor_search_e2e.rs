@@ -20,13 +20,10 @@ use amdahl_hadoop::zones::{run_app, App, ZonesConfig};
 fn main() -> anyhow::Result<()> {
     let kernels = Rc::new(PairKernels::load_default()?);
     let zcfg = ZonesConfig {
-        seed: 42,
         scale: 0.001, // ~440k objects, every block through the kernel
-        theta_arcsec: 60.0,
-        block_theta_mult: 10.0,
-        partition_cells: 4,
         kernel_every: 1,
         kernels: Some(kernels.clone()),
+        ..Default::default()
     };
     let conf = HadoopConf {
         buffered_output: true,

@@ -30,7 +30,7 @@ pub fn file_write(
     let write_bps = n.spec.data_disk.write_bps;
     if direct {
         let c_user = engine.class(&format!("{task}:write-user"));
-        FlowSpec::new(bytes, format!("{task}:direct-write@n{}", node.0))
+        FlowSpec::with_capacity(bytes, format!("{task}:direct-write@n{}", node.0), 2)
             .demand(n.disk, 1.0 / write_bps, c_user)
             .demand(n.cpu, costs.direct_write, c_user)
             .cap(1.0 / costs.direct_write) // single writer thread
@@ -38,7 +38,7 @@ pub fn file_write(
         let c_user = engine.class(&format!("{task}:write-user"));
         let c_flush = engine.class(&format!("{task}:flush"));
         let c_copy = engine.class(&format!("{task}:memcpy"));
-        FlowSpec::new(bytes, format!("{task}:buffered-write@n{}", node.0))
+        FlowSpec::with_capacity(bytes, format!("{task}:buffered-write@n{}", node.0), 4)
             .demand(n.disk, 1.0 / write_bps, c_user)
             .demand(n.cpu, costs.buffered_write_user, c_user)
             .demand(n.cpu, costs.buffered_write_flush, c_flush)
@@ -64,7 +64,7 @@ pub fn file_read(
     let c_user = engine.class(&format!("{task}:read-user"));
     let c_copy = engine.class(&format!("{task}:memcpy"));
     let cost = if direct { costs.direct_read } else { costs.buffered_read };
-    let mut f = FlowSpec::new(bytes, format!("{task}:read@n{}", node.0))
+    let mut f = FlowSpec::with_capacity(bytes, format!("{task}:read@n{}", node.0), 3)
         .demand(n.disk, 1.0 / read_bps, c_user)
         .demand(n.cpu, cost, c_user)
         .cap(1.0 / cost);
@@ -88,7 +88,7 @@ pub fn tcp_remote(
     let d = cluster.node(dst);
     let c_send = engine.class(&format!("{task}:net-send"));
     let c_recv = engine.class(&format!("{task}:net-recv"));
-    FlowSpec::new(bytes, format!("{task}:tcp n{}->n{}", src.0, dst.0))
+    FlowSpec::with_capacity(bytes, format!("{task}:tcp n{}->n{}", src.0, dst.0), 4)
         .demand(s.nic_tx, 1.0, c_send)
         .demand(d.nic_rx, 1.0, c_recv)
         .demand(s.cpu, s.spec.cpu.costs.net_send_remote, c_send)
@@ -111,7 +111,7 @@ pub fn tcp_local(
     let c_send = engine.class(&format!("{task}:net-send"));
     let c_recv = engine.class(&format!("{task}:net-recv"));
     let c_copy = engine.class(&format!("{task}:memcpy"));
-    FlowSpec::new(bytes, format!("{task}:loopback@n{}", node.0))
+    FlowSpec::with_capacity(bytes, format!("{task}:loopback@n{}", node.0), 3)
         .demand(n.membus, n.spec.net.loopback_copies, c_copy)
         .demand(n.cpu, n.spec.cpu.costs.net_send_local, c_send)
         .demand(n.cpu, n.spec.cpu.costs.net_recv_local, c_recv)
@@ -157,7 +157,7 @@ pub fn datanode_send(
     let c_copy = engine.class(&format!("{task}:memcpy"));
     let disk_stage = SerialStage(0);
     let net_stage = SerialStage(1);
-    let mut f = FlowSpec::new(bytes, format!("{task}:dn-send n{}->n{}", src.0, dst.0))
+    let mut f = FlowSpec::with_capacity(bytes, format!("{task}:dn-send n{}->n{}", src.0, dst.0), 8)
         // Stage 0: read the packet from disk (buffered).
         .demand_staged(n.disk, 1.0 / read_bps, c_read, disk_stage)
         .demand(n.cpu, costs.buffered_read, c_read)

@@ -192,6 +192,11 @@ pub enum ClusterPreset {
     /// the master) and Atom cores per blade — the sweep grid's cluster
     /// axes (§4 generalized across the whole design space).
     AmdahlSized { nodes: usize, cores: usize },
+    /// Fully parameterized OCC cluster: total node count (including the
+    /// master) and Opteron cores per node, so OCC-family sweeps honor
+    /// the node/core axes symmetrically with [`ClusterPreset::AmdahlSized`].
+    /// `OccSized { nodes: 4, cores: 2 }` is the paper's §3.5 testbed.
+    OccSized { nodes: usize, cores: usize },
 }
 
 impl ClusterPreset {
@@ -200,6 +205,7 @@ impl ClusterPreset {
             ClusterPreset::Amdahl | ClusterPreset::AmdahlNCore(_) => 9,
             ClusterPreset::Occ => 4,
             ClusterPreset::AmdahlSized { nodes, .. } => nodes,
+            ClusterPreset::OccSized { nodes, .. } => nodes,
         }
     }
 
@@ -214,6 +220,7 @@ impl ClusterPreset {
             ClusterPreset::Amdahl | ClusterPreset::Occ => 2,
             ClusterPreset::AmdahlNCore(cores) => cores,
             ClusterPreset::AmdahlSized { cores, .. } => cores,
+            ClusterPreset::OccSized { cores, .. } => cores,
         }
     }
 
@@ -225,6 +232,7 @@ impl ClusterPreset {
                 crate::hw::presets::amdahl_blade_ncore(disk, cores)
             }
             ClusterPreset::Occ => crate::hw::occ_node(),
+            ClusterPreset::OccSized { cores, .. } => crate::hw::presets::occ_node_ncore(cores),
         }
     }
 }
@@ -295,6 +303,22 @@ mod tests {
         assert_eq!(ClusterPreset::Occ.node_count(), 4);
         assert_eq!(ClusterPreset::Amdahl.slave_count(), 8);
         assert_eq!(ClusterPreset::Occ.slave_count(), 3);
+    }
+
+    #[test]
+    fn occ_sized_preset_parameterizes_both_axes() {
+        let p = ClusterPreset::OccSized { nodes: 6, cores: 4 };
+        assert_eq!(p.node_count(), 6);
+        assert_eq!(p.slave_count(), 5);
+        assert_eq!(p.core_count(), 4);
+        assert_eq!(p.node_spec(DiskKind::Raid0).cpu.cores, 4);
+        // The 4-node 2-core OccSized is exactly the paper's fixed OCC rig.
+        let fixed = ClusterPreset::Occ.node_spec(DiskKind::Raid0);
+        let sized = ClusterPreset::OccSized { nodes: 4, cores: 2 }.node_spec(DiskKind::Raid0);
+        assert_eq!(sized.cpu.cores, fixed.cpu.cores);
+        assert!((sized.cpu.capacity - fixed.cpu.capacity).abs() < 1e-12);
+        assert!((sized.power_full_w - fixed.power_full_w).abs() < 1e-9);
+        assert!((sized.power_idle_w - fixed.power_idle_w).abs() < 1e-9);
     }
 
     #[test]

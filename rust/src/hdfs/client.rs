@@ -90,32 +90,38 @@ fn write_next(engine: &mut Engine, ctx: Rc<RefCell<WriteCtx>>) {
         let spec = write_block_flow(engine, &w.cluster, c.client, &replicas, size, &c.conf, &c.task);
         (spec, replicas, size)
     };
-    // Register disk streams on every replica for the HDD seek model.
-    {
-        let c = ctx.borrow();
-        let mut w = c.world.borrow_mut();
-        for &r in &replicas {
-            w.cluster.disk_stream_start(engine, r, false);
-        }
-    }
+    // Register disk streams on every replica for the HDD seek model and
+    // start the pipeline in one solve (r capacity adjustments + the new
+    // flow would otherwise each re-solve the component).
     let ctx2 = ctx.clone();
-    engine.start_flow(spec, move |engine| {
+    engine.batch(move |engine| {
         {
-            let c = ctx2.borrow();
+            let c = ctx.borrow();
             let mut w = c.world.borrow_mut();
             for &r in &replicas {
-                w.cluster.disk_stream_end(engine, r, false);
+                w.cluster.disk_stream_start(engine, r, false);
             }
-            let lambda = if c.conf.lzo_output { c.conf.lzo_ratio } else { 1.0 };
-            let id = w.namenode.alloc_block();
-            let name = c.name.clone();
-            w.namenode.commit_block(
-                &name,
-                BlockMeta { id, size, stored_size: size * lambda, replicas: replicas.clone() },
-            );
         }
-        ctx2.borrow_mut().idx += 1;
-        write_next(engine, ctx2.clone());
+        engine.start_flow(spec, move |engine| {
+            engine.batch(|engine| {
+                {
+                    let c = ctx2.borrow();
+                    let mut w = c.world.borrow_mut();
+                    for &r in &replicas {
+                        w.cluster.disk_stream_end(engine, r, false);
+                    }
+                    let lambda = if c.conf.lzo_output { c.conf.lzo_ratio } else { 1.0 };
+                    let id = w.namenode.alloc_block();
+                    let name = c.name.clone();
+                    w.namenode.commit_block(
+                        &name,
+                        BlockMeta { id, size, stored_size: size * lambda, replicas: replicas.clone() },
+                    );
+                }
+                ctx2.borrow_mut().idx += 1;
+                write_next(engine, ctx2.clone());
+            });
+        });
     });
 }
 
@@ -147,7 +153,7 @@ fn read_block_flow(
 
     let c_stream = engine.class(&format!("{task}:stream"));
     // Flow total = logical bytes; device demands scale by λ.
-    let mut f = FlowSpec::new(block.size, format!("{task}:read blk{}", block.id))
+    let mut f = FlowSpec::with_capacity(block.size, format!("{task}:read blk{}", block.id), 12)
         .demand_staged(n.disk, lambda / n.spec.data_disk.read_bps, c_read, disk_stage)
         .demand(n.cpu, costs.buffered_read * lambda, c_read)
         .demand(n.cpu, costs.hadoop_stream * lambda, c_stream)
@@ -293,20 +299,24 @@ fn read_next(engine: &mut Engine, ctx: Rc<RefCell<ReadCtx>>) {
         let spec = read_block_flow(engine, &c.world, c.client, src, block, &c.conf, &c.task);
         (spec, src)
     };
-    {
-        let c = ctx.borrow();
-        let mut w = c.world.borrow_mut();
-        w.cluster.disk_stream_start(engine, src, true);
-    }
     let ctx2 = ctx.clone();
-    engine.start_flow(spec, move |engine| {
+    engine.batch(move |engine| {
         {
-            let c = ctx2.borrow();
+            let c = ctx.borrow();
             let mut w = c.world.borrow_mut();
-            w.cluster.disk_stream_end(engine, src, true);
+            w.cluster.disk_stream_start(engine, src, true);
         }
-        ctx2.borrow_mut().idx += 1;
-        read_next(engine, ctx2.clone());
+        engine.start_flow(spec, move |engine| {
+            engine.batch(|engine| {
+                {
+                    let c = ctx2.borrow();
+                    let mut w = c.world.borrow_mut();
+                    w.cluster.disk_stream_end(engine, src, true);
+                }
+                ctx2.borrow_mut().idx += 1;
+                read_next(engine, ctx2.clone());
+            });
+        });
     });
 }
 

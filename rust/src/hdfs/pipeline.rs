@@ -59,7 +59,11 @@ pub fn write_block_flow(
     let c_dn = engine.class(&format!("{task}:datanode"));
 
     let c_stream = engine.class(&format!("{task}:stream"));
-    let mut f = FlowSpec::new(bytes, format!("{task}:pipeline@n{}", client.0));
+    // Pre-size the demand list: ~6 client-side demands plus ~8 per hop
+    // (this builder runs once per block of every HDFS write — the
+    // realloc churn is measurable at sweep scale).
+    let mut f =
+        FlowSpec::with_capacity(bytes, format!("{task}:pipeline@n{}", client.0), 6 + 8 * replicas.len());
     // Per-byte service time along the whole chain, for the v0.20 pipeline
     // serialization cap (see below).
     let mut chain_cost = 0.0;

@@ -14,7 +14,7 @@ use crate::conf::{ClusterPreset, HadoopConf};
 use crate::energy::EnergyReport;
 use crate::hw::MIB;
 use crate::sim::engine::shared;
-use crate::sim::{Engine, Rng, UsageSnapshot};
+use crate::sim::{Engine, EngineStats, Rng, SimConfig, UsageSnapshot};
 
 /// Result of one TestDFSIO run.
 #[derive(Debug, Clone)]
@@ -32,12 +32,14 @@ pub struct DfsioResult {
 }
 
 /// A TestDFSIO run plus the engine-level measurements the sweep engine
-/// consumes (energy, raw per-resource usage).
+/// consumes (energy, raw per-resource usage, solver perf counters).
 #[derive(Debug, Clone)]
 pub struct DfsioRun {
     pub result: DfsioResult,
     pub energy: EnergyReport,
     pub usage: Vec<UsageSnapshot>,
+    /// Engine perf counters for the whole run (solver work, heap churn).
+    pub stats: EngineStats,
 }
 
 fn utilization(engine: &Engine) -> Vec<(String, f64)> {
@@ -49,8 +51,8 @@ fn utilization(engine: &Engine) -> Vec<(String, f64)> {
     v
 }
 
-fn build_world(preset: ClusterPreset, seed: u64, conf: &HadoopConf) -> (Engine, WorldHandle) {
-    let mut engine = Engine::new(seed);
+fn build_world(preset: ClusterPreset, sim: SimConfig, conf: &HadoopConf) -> (Engine, WorldHandle) {
+    let mut engine = Engine::from_config(sim);
     let spec = preset.node_spec(conf.data_disk);
     let n = preset.node_count();
     let cluster = Cluster::build(&mut engine, &spec, n);
@@ -64,7 +66,7 @@ fn finish(engine: &Engine, world: &WorldHandle, result: DfsioResult) -> DfsioRun
         let w = world.borrow();
         crate::energy::measure(engine, &w.cluster, result.makespan)
     };
-    DfsioRun { result, energy, usage: engine.usage_snapshot() }
+    DfsioRun { result, energy, usage: engine.usage_snapshot(), stats: engine.stats() }
 }
 
 /// TestDFSIO write (Fig 2(a)) on the paper's nine-blade Amdahl cluster.
@@ -78,32 +80,36 @@ pub fn write_test(
 }
 
 /// TestDFSIO write on an arbitrary cluster preset (the sweep engine's
-/// dfsio-write workload).
+/// dfsio-write workload). `sim` accepts a bare seed or a full
+/// [`SimConfig`] (solver mode).
 pub fn write_test_on(
     preset: ClusterPreset,
-    seed: u64,
+    sim: impl Into<SimConfig>,
     writers_per_node: usize,
     bytes_per_writer: f64,
     conf: &HadoopConf,
 ) -> DfsioRun {
-    let (mut engine, world) = build_world(preset, seed, conf);
+    let (mut engine, world) = build_world(preset, sim.into(), conf);
     let n = preset.node_count();
     let done_times = shared(Vec::<f64>::new());
-    for node in 1..n {
-        for wid in 0..writers_per_node {
-            let dt = done_times.clone();
-            write_file(
-                &mut engine,
-                &world,
-                NodeId(node),
-                format!("dfsio/write/n{node}/{wid}"),
-                bytes_per_writer,
-                conf,
-                "hdfs-write",
-                move |e| dt.borrow_mut().push(e.now()),
-            );
+    // One solve for the whole worker fan-out instead of one per writer.
+    engine.batch(|engine| {
+        for node in 1..n {
+            for wid in 0..writers_per_node {
+                let dt = done_times.clone();
+                write_file(
+                    engine,
+                    &world,
+                    NodeId(node),
+                    format!("dfsio/write/n{node}/{wid}"),
+                    bytes_per_writer,
+                    conf,
+                    "hdfs-write",
+                    move |e| dt.borrow_mut().push(e.now()),
+                );
+            }
         }
-    }
+    });
     engine.run();
     let times = done_times.borrow().clone();
     let result = summarize(
@@ -165,16 +171,17 @@ pub fn read_test(
 }
 
 /// TestDFSIO read on an arbitrary cluster preset (the sweep engine's
-/// dfsio-read workload).
+/// dfsio-read workload). `sim` accepts a bare seed or a full
+/// [`SimConfig`] (solver mode).
 pub fn read_test_on(
     preset: ClusterPreset,
-    seed: u64,
+    sim: impl Into<SimConfig>,
     readers_per_node: usize,
     bytes_per_reader: f64,
     conf: &HadoopConf,
     force_remote: bool,
 ) -> DfsioRun {
-    let (mut engine, world) = build_world(preset, seed, conf);
+    let (mut engine, world) = build_world(preset, sim.into(), conf);
     let n = preset.node_count();
     let mut rng = engine.rng.fork(0xD5F10);
     for node in 1..n {
@@ -190,21 +197,24 @@ pub fn read_test_on(
         }
     }
     let done_times = shared(Vec::<f64>::new());
-    for node in 1..n {
-        for rid in 0..readers_per_node {
-            let dt = done_times.clone();
-            read_file(
-                &mut engine,
-                &world,
-                NodeId(node),
-                &format!("dfsio/read/n{node}/{rid}"),
-                conf,
-                ReadOpts { force_remote },
-                "hdfs-read",
-                move |e| dt.borrow_mut().push(e.now()),
-            );
+    // One solve for the whole reader fan-out instead of one per reader.
+    engine.batch(|engine| {
+        for node in 1..n {
+            for rid in 0..readers_per_node {
+                let dt = done_times.clone();
+                read_file(
+                    engine,
+                    &world,
+                    NodeId(node),
+                    &format!("dfsio/read/n{node}/{rid}"),
+                    conf,
+                    ReadOpts { force_remote },
+                    "hdfs-read",
+                    move |e| dt.borrow_mut().push(e.now()),
+                );
+            }
         }
-    }
+    });
     engine.run();
     let times = done_times.borrow().clone();
     let result = summarize(

@@ -264,6 +264,19 @@ pub fn atom_ncore(n: usize) -> CpuSpec {
     }
 }
 
+/// A hypothetical N-core Opteron node CPU (the `OccSized` preset's core
+/// axis — the OCC counterpart of [`atom_ncore`]). No SMT: capacity
+/// equals the core count.
+pub fn opteron_ncore(n: usize) -> CpuSpec {
+    let base = opteron2212();
+    CpuSpec {
+        name: format!("Hypothetical Opteron x{n}"),
+        cores: n,
+        capacity: n as f64,
+        ..base
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -70,6 +70,24 @@ pub fn occ_node() -> NodeSpec {
     }
 }
 
+/// A hypothetical N-core OCC node (the `OccSized` preset's core axis,
+/// symmetric with [`amdahl_blade_ncore`]).
+///
+/// Power scales with the socket count: the Opteron 2212 is a ~95 W
+/// dual-core part in a ~290 W server, so each core added/removed moves
+/// the full-load envelope by ~45 W and idle by ~15 W — the same
+/// per-core bookkeeping that makes the Amdahl MB/s/W frontier peak at
+/// the balanced count.
+pub fn occ_node_ncore(cores: usize) -> NodeSpec {
+    let mut n = occ_node();
+    n.name = format!("occ-node-{cores}core");
+    n.cpu = opteron_ncore(cores);
+    let delta = cores as f64 - 2.0;
+    n.power_full_w += 45.0 * delta;
+    n.power_idle_w += 15.0 * delta;
+    n
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -8,14 +8,19 @@
 //! amdahl-hadoop search --theta 60 --scale 0.002 [--kernels] [--preset occ]
 //! amdahl-hadoop stat   --scale 0.002 [--kernels]
 //! amdahl-hadoop dfsio  --op write|read --workers 2 --gb 3
-//! amdahl-hadoop sweep  [--cores 1..8] [--nodes 9] [--threads N] [--gb 0.125]
-//!                      [--workers 4] [--out BENCH_sweep.json] [--quiet]
+//! amdahl-hadoop sweep  [--cores 1..8] [--nodes 9] [--family amdahl|occ|both]
+//!                      [--threads N] [--gb 0.125] [--workers 4]
+//!                      [--solver incremental|whole-set]
+//!                      [--baseline old.json] [--out BENCH_sweep.json] [--quiet]
 //! ```
 //!
 //! `sweep` expands the design-space grid (cores × write path × LZO ×
 //! workload), runs every scenario in parallel across OS threads, writes
-//! the per-scenario records to `--out` as JSON, and prints the §5
-//! core-count frontier table with the balanced-core estimate.
+//! the per-scenario records to `--out` as JSON (including the engine's
+//! solver perf counters), and prints the §5 core-count frontier table
+//! with the balanced-core estimate. `--baseline old.json` diffs the run
+//! against an earlier `BENCH_sweep.json` and exits nonzero when any
+//! scenario's throughput regressed more than 5%.
 //!
 //! Common options: `--seed N` (default 42), `--scale F` (fraction of the
 //! paper's 25 GB dataset, default 0.002), `--kernels` (load the AOT
@@ -35,10 +40,9 @@ fn zcfg(args: &Args, kernels: Option<Rc<PairKernels>>) -> anyhow::Result<ZonesCo
         seed: args.get_u64("seed", 42)?,
         scale: args.get_f64("scale", 0.002)?,
         theta_arcsec: args.get_f64("theta", 60.0)?,
-        block_theta_mult: 10.0,
-        partition_cells: 4,
         kernel_every: args.get_usize("kernel-every", 1)?,
         kernels,
+        ..Default::default()
     })
 }
 
@@ -113,31 +117,65 @@ fn main() -> anyhow::Result<()> {
             );
         }
         "sweep" => {
+            use amdahl_hadoop::sim::SolverMode;
+            use amdahl_hadoop::sweep::ClusterFamily;
             let (core_lo, core_hi) =
                 amdahl_hadoop::sweep::parse_core_range(args.get("cores").unwrap_or("1..8"))?;
             let nodes = args.get_usize("nodes", 9)?;
             anyhow::ensure!(nodes >= 2, "--nodes needs a master and at least one slave (got {nodes})");
             let mut grid = amdahl_hadoop::sweep::SweepGrid::paper_default(seed, core_lo, core_hi);
             grid.nodes = vec![nodes];
+            grid.families = match args.get("family").unwrap_or("amdahl") {
+                "amdahl" => vec![ClusterFamily::Amdahl],
+                "occ" => vec![ClusterFamily::Occ],
+                "both" => vec![ClusterFamily::Amdahl, ClusterFamily::Occ],
+                other => anyhow::bail!("unknown --family {other} (amdahl|occ|both)"),
+            };
+            let solver = match args.get("solver") {
+                None => SolverMode::Incremental,
+                Some(s) => SolverMode::parse(s)
+                    .ok_or_else(|| anyhow::anyhow!("unknown --solver {s} (incremental|whole-set)"))?,
+            };
             let opts = amdahl_hadoop::sweep::SweepOptions {
                 threads: args.get_usize("threads", 0)?,
                 scale: args.get_f64("scale", 0.0008)?,
                 dfsio_bytes_per_worker: args.get_f64("gb", 0.125)? * 1024.0 * MIB,
                 dfsio_workers: args.get_usize("workers", 4)?,
+                solver,
                 progress: !args.flag("quiet"),
+                ..Default::default()
             };
             eprintln!(
                 "[sweep] {} scenarios (cores {core_lo}..={core_hi} x {} write paths x lzo \
-                 on/off x {} workloads), seed {seed}",
+                 on/off x {} workloads), seed {seed}, solver {}",
                 grid.len(),
                 grid.write_paths.len(),
-                grid.workloads.len()
+                grid.workloads.len(),
+                solver.key()
             );
+            // Read the baseline BEFORE writing --out: pointing --baseline
+            // at the default out path ("diff against my last run") must
+            // compare against the previous contents, not the new ones.
+            let baseline_text = match args.get("baseline") {
+                Some(p) => Some(std::fs::read_to_string(p)?),
+                None => None,
+            };
             let results = amdahl_hadoop::sweep::run_sweep(&grid, &opts);
             let out_path = args.get("out").unwrap_or("BENCH_sweep.json");
             std::fs::write(out_path, results.to_json())?;
             eprintln!("[sweep] wrote {} records to {out_path}", results.records.len());
             print!("{}", report::render_frontier(&results.frontier()));
+            if let Some(text) = baseline_text {
+                let cmp = amdahl_hadoop::sweep::compare_baseline(
+                    &results,
+                    &text,
+                    amdahl_hadoop::sweep::DEFAULT_TOLERANCE,
+                );
+                eprint!("{}", cmp.render());
+                if cmp.has_regressions() {
+                    std::process::exit(2);
+                }
+            }
         }
         "dfsio" => {
             let workers = args.get_usize("workers", 2)?;

@@ -154,9 +154,12 @@ pub fn run_job(
     pump(engine, state);
 }
 
-/// Scheduling pump: assign tasks to free slots until nothing fits.
+/// Scheduling pump: assign tasks to free slots until nothing fits. The
+/// whole wave is batched so the engine re-solves rates once per pump,
+/// not once per task launch (a slot wave on a big cluster starts dozens
+/// of flows at the same instant).
 fn pump(engine: &mut Engine, state: Rc<RefCell<JobState>>) {
-    loop {
+    engine.batch(|engine| loop {
         let action = next_action(&state.borrow());
         match action {
             Action::StartMap { split_idx, node, local } => {
@@ -167,7 +170,7 @@ fn pump(engine: &mut Engine, state: Rc<RefCell<JobState>>) {
             }
             Action::Wait => return,
         }
-    }
+    })
 }
 
 enum Action {

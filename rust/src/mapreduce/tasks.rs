@@ -285,7 +285,9 @@ pub fn run_reduce_task(
         cb(engine);
         return;
     }
-    for (src, bytes) in live {
+    // All fetches start at the same instant; batch them into one solve.
+    engine.batch(|engine| {
+        for (src, bytes) in live {
         let spec = {
             let mut w = world.borrow_mut();
             w.counters.add_disk(&class_shuffle, bytes);
@@ -321,15 +323,18 @@ pub fn run_reduce_task(
         let ctr = done_ctr.clone();
         let after = after_shuffle.clone();
         engine.start_flow(spec, move |engine| {
-            {
-                let mut w = world_f.borrow_mut();
-                w.cluster.disk_stream_end(engine, src, true);
-            }
-            *ctr.borrow_mut() += 1;
-            if *ctr.borrow() == fetch_count {
-                let cb = after.borrow_mut().take().unwrap();
-                cb(engine);
-            }
+            engine.batch(|engine| {
+                {
+                    let mut w = world_f.borrow_mut();
+                    w.cluster.disk_stream_end(engine, src, true);
+                }
+                *ctr.borrow_mut() += 1;
+                if *ctr.borrow() == fetch_count {
+                    let cb = after.borrow_mut().take().unwrap();
+                    cb(engine);
+                }
+            });
         });
-    }
+        }
+    });
 }

@@ -275,15 +275,9 @@ pub fn fig3(seed: u64, scale: f64) -> Vec<Fig3Row> {
             }),
         ];
         for (label, conf) in cases {
-            let zcfg = ZonesConfig {
-                seed,
-                scale,
-                theta_arcsec: 60.0,
-                block_theta_mult: 10.0,
-                partition_cells: 4,
-                kernel_every: usize::MAX, // cost model only; kernels in e2e example
-                kernels: None,
-            };
+            // Cost model only (kernels run in the e2e example); everything
+            // else is the paper-shaped default.
+            let zcfg = ZonesConfig { seed, scale, ..Default::default() };
             let out = run_app(ClusterPreset::Amdahl, &conf, &zcfg, App::Search);
             rows.push(Fig3Row { label, replication, seconds: out.total_seconds });
         }
@@ -329,10 +323,9 @@ pub fn table3(seed: u64, scale: f64, kernels: Option<Rc<crate::runtime::PairKern
         seed,
         scale,
         theta_arcsec: theta,
-        block_theta_mult: 10.0,
-        partition_cells: 4,
         kernel_every: if kernels.is_some() { 16 } else { usize::MAX },
         kernels: kernels.clone(),
+        ..Default::default()
     };
     // §3.4/§3.5 configuration: buffered output + direct I/O, no LZO;
     // 2 reducers/node for search, 3 for stat.
@@ -439,15 +432,7 @@ pub fn table4(seed: u64, scale: f64) -> Vec<AmdahlRow> {
     }
 
     // Mapper / reducer rows from application runs.
-    let zcfg = ZonesConfig {
-        seed,
-        scale,
-        theta_arcsec: 60.0,
-        block_theta_mult: 10.0,
-        partition_cells: 4,
-        kernel_every: usize::MAX,
-        kernels: None,
-    };
+    let zcfg = ZonesConfig { seed, scale, ..Default::default() };
     let conf = HadoopConf {
         buffered_output: true,
         direct_io_write: true,

@@ -4,16 +4,41 @@
 //! cluster, HDFS namespace, job trackers...) lives behind `Rc<RefCell<_>>`
 //! handles captured by the closures — the engine itself is domain-agnostic.
 //!
-//! Flow completions use lazy invalidation: whenever the flow set changes,
-//! all rates are re-solved and fresh predicted-completion events are pushed
-//! with a bumped per-flow version; stale heap entries are skipped on pop.
+//! # Incremental solving
+//!
+//! Flows connected through shared resources form components of a sharing
+//! graph; only flows inside one component can influence each other's
+//! max-min rates. The engine maintains a per-resource index of live flows
+//! (`res_flows`) and, on every flow-set or capacity change, marks the
+//! changed flows/resources *dirty*. The next [`Engine::reschedule`] walks
+//! the sharing graph from the dirty seeds, re-solves exactly the affected
+//! component(s), and re-pushes predicted-completion events only for flows
+//! whose rate actually moved — untouched components keep their rates,
+//! their pending predictions, and their event versions.
+//!
+//! Invariants (see `sim` module docs for the full contract):
+//!
+//! * a flow's `rate` and `last_update` are only written while its
+//!   component is being re-solved, and `settle_flow` integrates progress
+//!   at the old rate up to `now` immediately before the write;
+//! * a heap `FlowDone` entry is live iff its `version` equals the flow's
+//!   current version; every re-push bumps the version, so stale entries
+//!   are skipped on pop (counted in [`EngineStats::stale_events_skipped`]);
+//! * `res_flows[r]` contains exactly the live flows demanding `r`, so a
+//!   graph walk from any dirty seed visits a superset of the flows whose
+//!   rates can change.
+//!
+//! [`SolverMode::WholeSet`] preserves the historical lazy-whole-set
+//! behaviour (every change re-solves every live flow) and exists as the
+//! baseline for the solver-count benchmarks and the byte-identical
+//! regression test.
 
 use std::cell::RefCell;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 use std::rc::Rc;
 
-use super::flow::{solve_rates, FlowSpec, FlowState};
+use super::flow::{solve_rates, FlowSpec, FlowState, SolveScratch};
 use super::resource::{ClassTable, Resource, ResourceId, UsageClass};
 use super::rng::Rng;
 
@@ -24,6 +49,81 @@ pub struct FlowId(usize);
 /// Handle to a pending timer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct TimerId(u64);
+
+/// How the engine re-solves flow rates when the flow set changes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SolverMode {
+    /// Historical baseline: every change re-solves every live flow.
+    WholeSet,
+    /// Component-partitioned: only the component(s) reachable from the
+    /// changed flows/resources re-solve (the default).
+    Incremental,
+}
+
+impl SolverMode {
+    /// Stable key for JSON / CLI use.
+    pub fn key(self) -> &'static str {
+        match self {
+            SolverMode::WholeSet => "whole-set",
+            SolverMode::Incremental => "incremental",
+        }
+    }
+
+    /// Parse a CLI key (`"whole-set"` / `"incremental"`).
+    pub fn parse(s: &str) -> Option<SolverMode> {
+        match s {
+            "whole-set" | "wholeset" | "baseline" => Some(SolverMode::WholeSet),
+            "incremental" => Some(SolverMode::Incremental),
+            _ => None,
+        }
+    }
+}
+
+/// Engine construction parameters, threaded from the top-level drivers
+/// (sweep runner, TestDFSIO, the Zones apps) down to [`Engine::from_config`].
+/// `impl Into<SimConfig>` on the driver entry points lets a bare seed keep
+/// working: `write_test_on(preset, 42, ...)`.
+#[derive(Debug, Clone, Copy)]
+pub struct SimConfig {
+    pub seed: u64,
+    pub solver: SolverMode,
+}
+
+impl SimConfig {
+    pub fn new(seed: u64) -> Self {
+        SimConfig { seed, solver: SolverMode::Incremental }
+    }
+
+    pub fn with_solver(mut self, solver: SolverMode) -> Self {
+        self.solver = solver;
+        self
+    }
+}
+
+impl From<u64> for SimConfig {
+    fn from(seed: u64) -> Self {
+        SimConfig::new(seed)
+    }
+}
+
+/// Engine performance counters, exposed so the sweep layer can track the
+/// solver's work across PRs (`BENCH_sweep.json` "perf" section).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EngineStats {
+    /// Rate-solver invocations (one per dirty component batch).
+    pub solves: u64,
+    /// Total flow-rate computations: Σ component size over all solves.
+    /// The headline incremental-vs-whole-set metric.
+    pub flows_resolved: u64,
+    /// Stale predicted-completion events skipped on pop.
+    pub stale_events_skipped: u64,
+    /// Timer + flow-completion events actually processed.
+    pub events_processed: u64,
+    /// High-water mark of concurrently live flows.
+    pub peak_live_flows: usize,
+    /// High-water mark of the event-heap size (heap churn proxy).
+    pub peak_heap: usize,
+}
 
 type Callback = Box<dyn FnOnce(&mut Engine)>;
 
@@ -68,20 +168,54 @@ pub struct Engine {
     heap: BinaryHeap<HeapEntry>,
     cancelled_timers: std::collections::HashSet<u64>,
     resources: Vec<Resource>,
+    /// Live flow slots demanding each resource (the sharing-graph index).
+    res_flows: Vec<Vec<usize>>,
     flows: Vec<Option<FlowState>>,
     free_flow_slots: Vec<usize>,
     flow_done: Vec<Option<Callback>>,
     classes: ClassTable,
     /// Global RNG; fork per-subsystem streams from it.
     pub rng: Rng,
+    mode: SolverMode,
     /// Set when the flow set / capacities changed and rates are stale.
     rates_dirty: bool,
+    /// Flow slots whose membership changed since the last solve (seeds).
+    dirty_flows: Vec<usize>,
+    /// Resources whose capacity or flow membership changed (seeds).
+    dirty_res: Vec<usize>,
+    /// Nesting depth of [`Engine::batch`]; reschedule is deferred while > 0.
+    batch_depth: u32,
+    /// Epoch-stamped visit marks for the component walk (no per-walk
+    /// clearing: a slot is visited iff its mark equals the current epoch).
+    flow_mark: Vec<u64>,
+    res_mark: Vec<u64>,
+    epoch: u64,
+    /// Affected flow slots of the current solve, ascending (doubles as
+    /// the walk queue). Persistent scratch.
+    comp_flows: Vec<usize>,
+    /// Resources touched by the current solve, ascending. Persistent scratch.
+    comp_res: Vec<usize>,
+    /// Pending (time, slot, version) prediction pushes. Persistent scratch.
+    pushes: Vec<(f64, usize, u64)>,
+    /// Per-flow unique-resource dedup buffer for (un)indexing.
+    tmp_res: Vec<usize>,
+    scratch: SolveScratch,
     live_flow_count: usize,
-    events_processed: u64,
+    stats: EngineStats,
 }
 
 impl Engine {
     pub fn new(seed: u64) -> Self {
+        Engine::from_config(SimConfig::new(seed))
+    }
+
+    /// Engine with an explicit solver mode (the whole-set baseline is
+    /// only interesting for benchmarks and regression tests).
+    pub fn with_mode(seed: u64, mode: SolverMode) -> Self {
+        Engine::from_config(SimConfig::new(seed).with_solver(mode))
+    }
+
+    pub fn from_config(cfg: SimConfig) -> Self {
         Engine {
             now: 0.0,
             seq: 0,
@@ -89,14 +223,27 @@ impl Engine {
             heap: BinaryHeap::new(),
             cancelled_timers: std::collections::HashSet::new(),
             resources: Vec::new(),
+            res_flows: Vec::new(),
             flows: Vec::new(),
             free_flow_slots: Vec::new(),
             flow_done: Vec::new(),
             classes: ClassTable::default(),
-            rng: Rng::new(seed),
+            rng: Rng::new(cfg.seed),
+            mode: cfg.solver,
             rates_dirty: false,
+            dirty_flows: Vec::new(),
+            dirty_res: Vec::new(),
+            batch_depth: 0,
+            flow_mark: Vec::new(),
+            res_mark: Vec::new(),
+            epoch: 0,
+            comp_flows: Vec::new(),
+            comp_res: Vec::new(),
+            pushes: Vec::new(),
+            tmp_res: Vec::new(),
+            scratch: SolveScratch::default(),
             live_flow_count: 0,
-            events_processed: 0,
+            stats: EngineStats::default(),
         }
     }
 
@@ -107,7 +254,22 @@ impl Engine {
 
     /// Number of events processed so far (for perf accounting).
     pub fn events_processed(&self) -> u64 {
-        self.events_processed
+        self.stats.events_processed
+    }
+
+    /// Solver performance counters.
+    pub fn stats(&self) -> EngineStats {
+        self.stats
+    }
+
+    /// The solver mode this engine runs with.
+    pub fn solver_mode(&self) -> SolverMode {
+        self.mode
+    }
+
+    /// Currently live flows.
+    pub fn live_flows(&self) -> usize {
+        self.live_flow_count
     }
 
     /// Intern a usage class name.
@@ -125,10 +287,14 @@ impl Engine {
         let mut r = Resource::new(name, capacity);
         r.last_settle = self.now;
         self.resources.push(r);
+        self.res_flows.push(Vec::new());
+        self.res_mark.push(0);
         ResourceId(self.resources.len() - 1)
     }
 
-    /// Read-only access to a resource (for reporting).
+    /// Read-only access to a resource (for reporting). Usage integrals
+    /// are current as of the last event that touched the resource; call
+    /// after [`Engine::run`] for final numbers.
     pub fn resource(&self, id: ResourceId) -> &Resource {
         &self.resources[id.index()]
     }
@@ -139,13 +305,20 @@ impl Engine {
     }
 
     /// Change a resource's capacity (e.g. HDD seek penalty under
-    /// concurrency). Takes effect immediately; rates re-solve.
+    /// concurrency). Takes effect immediately; the resource's component
+    /// re-solves.
     pub fn set_capacity(&mut self, id: ResourceId, capacity: f64) {
         assert!(capacity > 0.0);
-        self.settle();
-        self.resources[id.index()].capacity = capacity;
-        self.rates_dirty = true;
-        self.reschedule();
+        let r = &mut self.resources[id.index()];
+        // Integrate the old capacity up to now before the value changes.
+        let dt = self.now - r.last_settle;
+        if dt > 0.0 {
+            r.capacity_integral += r.capacity * dt;
+        }
+        r.last_settle = self.now;
+        r.capacity = capacity;
+        self.dirty_res.push(id.index());
+        self.mark_dirty();
     }
 
     /// Schedule `cb` to run after `dt` seconds.
@@ -159,12 +332,29 @@ impl Engine {
             seq: self.seq,
             kind: EventKind::Timer { id, cb: Box::new(cb) },
         });
+        self.note_heap_size();
         id
     }
 
     /// Cancel a pending timer (no-op if already fired).
     pub fn cancel_timer(&mut self, id: TimerId) {
         self.cancelled_timers.insert(id.0);
+    }
+
+    /// Group several flow-set mutations (starts, cancels, capacity
+    /// changes) into one solve: rates re-resolve once when the outermost
+    /// batch closes instead of after every call. Semantically neutral —
+    /// simulated time cannot advance inside a batch, so intermediate
+    /// rates could never integrate any progress — but it keeps a k-flow
+    /// fan-out from costing k component solves.
+    pub fn batch<R>(&mut self, f: impl FnOnce(&mut Engine) -> R) -> R {
+        self.batch_depth += 1;
+        let out = f(self);
+        self.batch_depth -= 1;
+        if self.batch_depth == 0 {
+            self.reschedule();
+        }
+        out
     }
 
     /// Start a flow; `on_done` runs when it completes.
@@ -176,7 +366,6 @@ impl Engine {
         for d in &spec.demands {
             assert!(d.resource.index() < self.resources.len(), "unknown resource");
         }
-        self.settle();
         let state = FlowState {
             remaining: spec.total,
             spec,
@@ -192,33 +381,41 @@ impl Engine {
         } else {
             self.flows.push(Some(state));
             self.flow_done.push(Some(Box::new(on_done)));
+            self.flow_mark.push(0);
             self.flows.len() - 1
         };
+        self.index_flow(slot);
         self.live_flow_count += 1;
-        self.rates_dirty = true;
-        self.reschedule();
+        if self.live_flow_count > self.stats.peak_live_flows {
+            self.stats.peak_live_flows = self.live_flow_count;
+        }
+        self.dirty_flows.push(slot);
+        self.mark_dirty();
         FlowId(slot)
     }
 
     /// Cancel a live flow; its completion callback never runs.
     pub fn cancel_flow(&mut self, id: FlowId) {
-        self.settle();
-        if let Some(f) = self.flows[id.0].as_mut() {
-            if f.alive {
-                f.alive = false;
-                self.flows[id.0] = None;
-                self.flow_done[id.0] = None;
-                self.free_flow_slots.push(id.0);
-                self.live_flow_count -= 1;
-                self.rates_dirty = true;
-                self.reschedule();
-            }
+        let alive = self.flows[id.0].as_ref().map(|f| f.alive).unwrap_or(false);
+        if alive {
+            // Attribute progress at the old rate before removal.
+            self.settle_flow(id.0);
+            self.remove_flow(id.0);
+            self.mark_dirty();
         }
     }
 
     /// Remaining units of a live flow (None if finished/cancelled).
+    /// Accounts for progress since the flow's last settle point.
     pub fn flow_remaining(&self, id: FlowId) -> Option<f64> {
-        self.flows.get(id.0).and_then(|f| f.as_ref()).map(|f| f.remaining)
+        self.flows.get(id.0).and_then(|f| f.as_ref()).map(|f| {
+            let dt = self.now - f.last_update;
+            if dt > 0.0 && f.rate > 0.0 {
+                (f.remaining - f.rate * dt).max(0.0)
+            } else {
+                f.remaining
+            }
+        })
     }
 
     /// Current rate of a live flow.
@@ -226,97 +423,275 @@ impl Engine {
         self.flows.get(id.0).and_then(|f| f.as_ref()).map(|f| f.rate)
     }
 
-    /// Integrate resource usage from the last settle point to `now` and
-    /// decrement flow remainders.
-    fn settle(&mut self) {
+    /// Size of the sharing-graph component containing `id` (diagnostic;
+    /// 0 if the flow is gone). Walks the same index `reschedule` uses.
+    pub fn component_size(&mut self, id: FlowId) -> usize {
+        let live = self.flows.get(id.0).and_then(|f| f.as_ref()).map(|f| f.alive).unwrap_or(false);
+        if !live {
+            return 0;
+        }
+        self.epoch += 1;
+        let epoch = self.epoch;
+        self.comp_flows.clear();
+        self.comp_res.clear();
+        self.flow_mark[id.0] = epoch;
+        self.comp_flows.push(id.0);
+        self.expand_component(epoch, 0);
+        self.comp_flows.len()
+    }
+
+    fn mark_dirty(&mut self) {
+        self.rates_dirty = true;
+        if self.batch_depth == 0 {
+            self.reschedule();
+        }
+    }
+
+    fn note_heap_size(&mut self) {
+        if self.heap.len() > self.stats.peak_heap {
+            self.stats.peak_heap = self.heap.len();
+        }
+    }
+
+    /// Collect `slot`'s unique demanded resources into `tmp_res` (the
+    /// single source of dedup truth for both index maintenance paths —
+    /// index and unindex MUST agree or the sharing graph leaks slots).
+    fn collect_flow_resources(&mut self, slot: usize) -> Vec<usize> {
+        let mut tmp = std::mem::take(&mut self.tmp_res);
+        tmp.clear();
+        let f = self.flows[slot].as_ref().expect("collecting resources of empty slot");
+        for d in &f.spec.demands {
+            let r = d.resource.index();
+            if !tmp.contains(&r) {
+                tmp.push(r);
+            }
+        }
+        tmp
+    }
+
+    /// Add `slot` to the per-resource flow index (each resource once).
+    fn index_flow(&mut self, slot: usize) {
+        let tmp = self.collect_flow_resources(slot);
+        for &r in &tmp {
+            self.res_flows[r].push(slot);
+        }
+        self.tmp_res = tmp;
+    }
+
+    /// Remove `slot` from the index and mark its resources dirty (their
+    /// remaining flows inherit the freed capacity).
+    fn unindex_flow(&mut self, slot: usize) {
+        let tmp = self.collect_flow_resources(slot);
+        for &r in &tmp {
+            self.res_flows[r].retain(|&s| s != slot);
+            self.dirty_res.push(r);
+        }
+        self.tmp_res = tmp;
+    }
+
+    /// Tear down a live flow (shared by cancel and completion).
+    fn remove_flow(&mut self, slot: usize) {
+        self.unindex_flow(slot);
+        self.flows[slot] = None;
+        self.flow_done[slot] = None;
+        self.free_flow_slots.push(slot);
+        self.live_flow_count -= 1;
+    }
+
+    /// Integrate one flow's progress at its current rate up to `now` and
+    /// attribute resource usage. Exact for any interval over which the
+    /// rate was constant — which reschedule guarantees by settling a
+    /// flow exactly when its rate is about to change (or it is removed).
+    fn settle_flow(&mut self, slot: usize) {
+        let now = self.now;
+        let f = match self.flows[slot].as_mut() {
+            Some(f) => f,
+            None => return,
+        };
+        let dt = now - f.last_update;
+        if dt > 0.0 && f.rate > 0.0 {
+            let progressed = (f.rate * dt).min(f.remaining);
+            f.remaining -= progressed;
+            for d in &f.spec.demands {
+                let used = d.coeff * progressed;
+                let r = &mut self.resources[d.resource.index()];
+                r.busy_integral += used;
+                *r.busy_by_class.entry(d.class).or_insert(0.0) += used;
+            }
+        }
+        f.last_update = now;
+    }
+
+    /// Bring every resource's capacity integral up to `now` (end-of-run
+    /// bookkeeping; capacities are constant between `set_capacity` calls
+    /// so the lazy integral is exact).
+    fn finalize_integrals(&mut self) {
         for r in &mut self.resources {
             let dt = self.now - r.last_settle;
             if dt > 0.0 {
                 r.capacity_integral += r.capacity * dt;
-                r.last_settle = self.now;
-            } else {
-                r.last_settle = self.now;
             }
-        }
-        // Flow progress + usage attribution.
-        for f in self.flows.iter_mut().flatten() {
-            let dt = self.now - f.last_update;
-            if dt > 0.0 && f.rate > 0.0 {
-                let progressed = (f.rate * dt).min(f.remaining);
-                f.remaining -= progressed;
-                for d in &f.spec.demands {
-                    let used = d.coeff * progressed;
-                    let r = &mut self.resources[d.resource.index()];
-                    r.busy_integral += used;
-                    *r.busy_by_class.entry(d.class).or_insert(0.0) += used;
-                }
-            }
-            f.last_update = self.now;
+            r.last_settle = self.now;
         }
     }
 
-    /// Re-solve rates and push fresh completion predictions.
+    /// Walk the sharing graph from `comp_flows[qi..]`, appending every
+    /// reachable live flow to `comp_flows` and every reachable resource
+    /// to `comp_res`.
+    fn expand_component(&mut self, epoch: u64, mut qi: usize) {
+        while qi < self.comp_flows.len() {
+            let s = self.comp_flows[qi];
+            qi += 1;
+            let nd = self.flows[s].as_ref().expect("queued slot empty").spec.demands.len();
+            for di in 0..nd {
+                let r = self.flows[s].as_ref().unwrap().spec.demands[di].resource.index();
+                if self.res_mark[r] != epoch {
+                    self.res_mark[r] = epoch;
+                    self.comp_res.push(r);
+                    for j in 0..self.res_flows[r].len() {
+                        let s2 = self.res_flows[r][j];
+                        if self.flow_mark[s2] != epoch {
+                            self.flow_mark[s2] = epoch;
+                            self.comp_flows.push(s2);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Re-solve rates for the dirty component(s) and push fresh
+    /// completion predictions.
     ///
     /// Perf-critical (see EXPERIMENTS.md §Perf): predictions are
     /// re-pushed ONLY for flows whose rate actually changed (or that
     /// never had a prediction). Re-pushing every live flow on every
     /// change floods the heap with stale entries — profiling showed 71%
     /// of wall time in `BinaryHeap::pop` on shuffle-heavy scenarios
-    /// before this guard.
+    /// before this guard. The component walk strengthens it further:
+    /// flows outside the affected component are not even examined.
     fn reschedule(&mut self) {
-        if !self.rates_dirty {
+        if !self.rates_dirty || self.batch_depth > 0 {
             return;
         }
         self.rates_dirty = false;
-        let old_rates: Vec<Option<f64>> = self
-            .flows
-            .iter()
-            .map(|f| f.as_ref().filter(|f| f.alive).map(|f| f.rate))
-            .collect();
-        {
-            let resources = &self.resources;
-            let mut refs: Vec<&mut FlowState> =
-                self.flows.iter_mut().flatten().filter(|f| f.alive).collect();
-            solve_rates(&mut refs, resources);
-        }
-        // Push new predictions only where the rate moved.
-        let mut pushes: Vec<(f64, usize, u64)> = Vec::new();
-        for (i, f) in self.flows.iter_mut().enumerate() {
-            if let Some(f) = f {
-                if !f.alive {
-                    continue;
+        self.epoch += 1;
+        let epoch = self.epoch;
+        self.comp_flows.clear();
+        self.comp_res.clear();
+        match self.mode {
+            SolverMode::WholeSet => {
+                for i in 0..self.flows.len() {
+                    let live = self.flows[i].as_ref().map(|f| f.alive).unwrap_or(false);
+                    if live {
+                        self.flow_mark[i] = epoch;
+                        self.comp_flows.push(i);
+                    }
                 }
-                let unchanged = matches!(old_rates[i], Some(r) if {
-                    let scale = r.abs().max(f.rate.abs()).max(1e-300);
-                    (r - f.rate).abs() <= 1e-12 * scale
-                } && f.version > 0);
-                if unchanged {
-                    continue;
-                }
-                f.version += 1;
-                let eta = if f.rate > 0.0 {
-                    f.remaining / f.rate
-                } else {
-                    f64::INFINITY
-                };
-                if eta.is_finite() {
-                    pushes.push((self.now + eta, i, f.version));
+                for k in 0..self.comp_flows.len() {
+                    let s = self.comp_flows[k];
+                    let nd = self.flows[s].as_ref().unwrap().spec.demands.len();
+                    for di in 0..nd {
+                        let r = self.flows[s].as_ref().unwrap().spec.demands[di].resource.index();
+                        if self.res_mark[r] != epoch {
+                            self.res_mark[r] = epoch;
+                            self.comp_res.push(r);
+                        }
+                    }
                 }
             }
+            SolverMode::Incremental => {
+                // Seed with directly-changed flows...
+                for k in 0..self.dirty_flows.len() {
+                    let s = self.dirty_flows[k];
+                    let live =
+                        self.flows.get(s).and_then(|f| f.as_ref()).map(|f| f.alive).unwrap_or(false);
+                    if live && self.flow_mark[s] != epoch {
+                        self.flow_mark[s] = epoch;
+                        self.comp_flows.push(s);
+                    }
+                }
+                // ...and every flow on a changed resource.
+                for k in 0..self.dirty_res.len() {
+                    let r = self.dirty_res[k];
+                    if self.res_mark[r] != epoch {
+                        self.res_mark[r] = epoch;
+                        self.comp_res.push(r);
+                        for j in 0..self.res_flows[r].len() {
+                            let s = self.res_flows[r][j];
+                            if self.flow_mark[s] != epoch {
+                                self.flow_mark[s] = epoch;
+                                self.comp_flows.push(s);
+                            }
+                        }
+                    }
+                }
+                self.expand_component(epoch, 0);
+            }
         }
-        for (t, i, v) in pushes {
+        self.dirty_flows.clear();
+        self.dirty_res.clear();
+        if self.comp_flows.is_empty() {
+            return;
+        }
+        // Ascending order keeps freeze/summation order identical to the
+        // historical whole-set scan, so both modes produce bit-identical
+        // rates for the same component.
+        self.comp_flows.sort_unstable();
+        self.comp_res.sort_unstable();
+        self.stats.solves += 1;
+        self.stats.flows_resolved += self.comp_flows.len() as u64;
+        solve_rates(
+            &self.flows,
+            &self.comp_flows,
+            &self.comp_res,
+            &self.resources,
+            &mut self.scratch,
+        );
+        // Commit changed rates (settling progress at the OLD rate first)
+        // and push new predictions only where the rate moved. Unchanged
+        // flows keep their stored rate, settle point, version, and
+        // pending prediction bit-for-bit — this is what makes the two
+        // solver modes produce identical trajectories: a flow's settle
+        // boundaries are exactly its rate-change points in either mode.
+        let mut pushes = std::mem::take(&mut self.pushes);
+        pushes.clear();
+        for k in 0..self.comp_flows.len() {
+            let s = self.comp_flows[k];
+            let new_rate = self.scratch.solved_rate(k);
+            let f = self.flows[s].as_ref().unwrap();
+            let unchanged = f.version > 0 && {
+                let scale = f.rate.abs().max(new_rate.abs()).max(1e-300);
+                (f.rate - new_rate).abs() <= 1e-12 * scale
+            };
+            if unchanged {
+                continue;
+            }
+            self.settle_flow(s);
+            let f = self.flows[s].as_mut().unwrap();
+            f.rate = new_rate;
+            f.version += 1;
+            let eta = if new_rate > 0.0 { f.remaining / new_rate } else { f64::INFINITY };
+            if eta.is_finite() {
+                pushes.push((self.now + eta, s, f.version));
+            }
+        }
+        for &(t, s, v) in &pushes {
             self.seq += 1;
             self.heap.push(HeapEntry {
                 time: t,
                 seq: self.seq,
-                kind: EventKind::FlowDone { flow: FlowId(i), version: v },
+                kind: EventKind::FlowDone { flow: FlowId(s), version: v },
             });
         }
+        self.note_heap_size();
+        self.pushes = pushes;
     }
 
     /// Run until no events remain. Panics if flows are live but stalled
     /// (rate 0 with no pending event), which would indicate a modeling bug.
     pub fn run(&mut self) {
+        assert_eq!(self.batch_depth, 0, "run() inside batch()");
         while let Some(entry) = self.heap.pop() {
             debug_assert!(entry.time >= self.now - 1e-9, "time went backwards");
             match entry.kind {
@@ -325,8 +700,7 @@ impl Engine {
                         continue;
                     }
                     self.now = self.now.max(entry.time);
-                    self.settle();
-                    self.events_processed += 1;
+                    self.stats.events_processed += 1;
                     cb(self);
                 }
                 EventKind::FlowDone { flow, version } => {
@@ -335,32 +709,45 @@ impl Engine {
                         None => true,
                     };
                     if stale {
+                        self.stats.stale_events_skipped += 1;
                         continue;
                     }
                     self.now = self.now.max(entry.time);
-                    self.settle();
+                    self.settle_flow(flow.0);
                     // Guard against float drift: treat ≤ epsilon as done.
-                    let rem = self.flows[flow.0].as_ref().unwrap().remaining;
-                    if rem > 1e-6 * self.flows[flow.0].as_ref().unwrap().spec.total.max(1.0) {
-                        // Rate changed between push and pop in a way that
-                        // left residual work; re-push.
-                        self.rates_dirty = true;
-                        self.reschedule();
+                    let f = self.flows[flow.0].as_ref().unwrap();
+                    if f.remaining > 1e-6 * f.spec.total.max(1.0) {
+                        // The prediction undershot; re-predict at the
+                        // current rate.
+                        let f = self.flows[flow.0].as_mut().unwrap();
+                        f.version += 1;
+                        if f.rate > 0.0 {
+                            let (t, v) = (self.now + f.remaining / f.rate, f.version);
+                            self.seq += 1;
+                            self.heap.push(HeapEntry {
+                                time: t,
+                                seq: self.seq,
+                                kind: EventKind::FlowDone { flow, version: v },
+                            });
+                            self.note_heap_size();
+                        } else {
+                            // Rate collapsed to zero: re-solve its component.
+                            self.dirty_flows.push(flow.0);
+                            self.mark_dirty();
+                        }
                         continue;
                     }
-                    self.events_processed += 1;
-                    self.flows[flow.0] = None;
+                    self.stats.events_processed += 1;
                     let cb = self.flow_done[flow.0].take();
-                    self.free_flow_slots.push(flow.0);
-                    self.live_flow_count -= 1;
-                    self.rates_dirty = true;
-                    self.reschedule();
+                    self.remove_flow(flow.0);
+                    self.mark_dirty();
                     if let Some(cb) = cb {
                         cb(self);
                     }
                 }
             }
         }
+        self.finalize_integrals();
         assert_eq!(
             self.live_flow_count, 0,
             "simulation ended with {} stalled flows",
@@ -588,5 +975,153 @@ mod tests {
         e.start_flow(FlowSpec::new(1.0, "free"), move |_| *h.borrow_mut() = true);
         e.run();
         assert!(*hit.borrow());
+    }
+
+    /// Run the same staggered-flow scenario in both solver modes and
+    /// require bit-identical completion times: the incremental solver
+    /// must be an optimization, not a behaviour change.
+    #[test]
+    fn modes_agree_bit_for_bit() {
+        fn run(mode: SolverMode) -> Vec<u64> {
+            let mut e = Engine::with_mode(9, mode);
+            // Two independent links plus one bridging resource exercised
+            // mid-run, so components merge and split while flows churn.
+            let a = e.add_resource("a", 10.0);
+            let b = e.add_resource("b", 8.0);
+            let cpu = e.add_resource("cpu", 1.0);
+            let c = e.class("x");
+            let log = shared(Vec::new());
+            for i in 0..12u32 {
+                let l = log.clone();
+                let sz = 20.0 + (i as f64) * 5.0;
+                let (r1, r2) = if i % 2 == 0 { (a, b) } else { (b, a) };
+                e.after(i as f64 * 0.7, move |e| {
+                    let mut spec = FlowSpec::new(sz, "f").demand(r1, 1.0, c);
+                    if i % 3 == 0 {
+                        // Bridge: touches both links and the cpu.
+                        spec = spec.demand(r2, 0.5, c).demand(cpu, 0.01, c);
+                    }
+                    e.start_flow(spec, move |e| l.borrow_mut().push(e.now().to_bits()));
+                });
+            }
+            e.after(3.0, move |e| e.set_capacity(a, 6.0));
+            e.run();
+            let v = log.borrow().clone();
+            v
+        }
+        assert_eq!(run(SolverMode::WholeSet), run(SolverMode::Incremental));
+    }
+
+    #[test]
+    fn disjoint_components_solved_independently() {
+        // Two flows on unrelated links: starting the second must not
+        // re-resolve the first (incremental), while the whole-set
+        // baseline re-solves everything on every change.
+        fn resolved(mode: SolverMode) -> u64 {
+            let mut e = Engine::with_mode(3, mode);
+            let a = e.add_resource("a", 10.0);
+            let b = e.add_resource("b", 10.0);
+            let c = e.class("x");
+            e.start_flow(FlowSpec::new(100.0, "A").demand(a, 1.0, c), |_| {});
+            e.start_flow(FlowSpec::new(50.0, "B").demand(b, 1.0, c), |_| {});
+            e.run();
+            e.stats().flows_resolved
+        }
+        // Incremental: 1 (start A) + 1 (start B) + nothing on completions
+        // (each component empties). Whole-set: 1 + 2 (+1 when B completes
+        // and A is still live).
+        let inc = resolved(SolverMode::Incremental);
+        let whole = resolved(SolverMode::WholeSet);
+        assert_eq!(inc, 2, "incremental flow-resolutions");
+        assert!(whole > inc, "whole-set {whole} should exceed incremental {inc}");
+    }
+
+    #[test]
+    fn components_merge_on_shared_resource() {
+        let mut e = Engine::new(4);
+        let a = e.add_resource("a", 10.0);
+        let b = e.add_resource("b", 10.0);
+        let c = e.class("x");
+        let fa = e.start_flow(FlowSpec::new(1000.0, "A").demand(a, 1.0, c), |_| {});
+        let fb = e.start_flow(FlowSpec::new(1000.0, "B").demand(b, 1.0, c), |_| {});
+        assert_eq!(e.component_size(fa), 1);
+        assert_eq!(e.component_size(fb), 1);
+        // A bridge flow touching both resources merges the components.
+        let bridge =
+            e.start_flow(FlowSpec::new(1000.0, "AB").demand(a, 0.5, c).demand(b, 0.5, c), |_| {});
+        assert_eq!(e.component_size(fa), 3);
+        assert_eq!(e.component_size(fb), 3);
+        assert_eq!(e.component_size(bridge), 3);
+        // Removing the bridge splits them again.
+        e.cancel_flow(bridge);
+        assert_eq!(e.component_size(fa), 1);
+        assert_eq!(e.component_size(fb), 1);
+        // Rates reflect the merge arithmetic: while the bridge is live,
+        // a and b each split between one full flow and the half-demand
+        // bridge; afterwards A and B get the full link again.
+        assert_eq!(e.flow_rate(fa), Some(10.0));
+        assert_eq!(e.flow_rate(fb), Some(10.0));
+    }
+
+    #[test]
+    fn batch_defers_to_one_solve() {
+        let mut e = Engine::new(5);
+        let link = e.add_resource("link", 10.0);
+        let c = e.class("x");
+        e.batch(|e| {
+            for i in 0..8 {
+                e.start_flow(FlowSpec::new(10.0 + i as f64, "f").demand(link, 1.0, c), |_| {});
+            }
+        });
+        // One solve over the 8-flow component, not 1+2+...+8.
+        assert_eq!(e.stats().solves, 1);
+        assert_eq!(e.stats().flows_resolved, 8);
+        e.run();
+    }
+
+    #[test]
+    fn batched_and_unbatched_agree() {
+        fn run(batched: bool) -> u64 {
+            let mut e = Engine::new(6);
+            let link = e.add_resource("link", 10.0);
+            let c = e.class("x");
+            let t = shared(0.0f64);
+            let tt = t.clone();
+            let starts = move |e: &mut Engine| {
+                for i in 0..5 {
+                    let tt2 = tt.clone();
+                    e.start_flow(
+                        FlowSpec::new(10.0 + i as f64 * 2.0, "f").demand(link, 1.0, c),
+                        move |e| *tt2.borrow_mut() = e.now(),
+                    );
+                }
+            };
+            if batched {
+                e.batch(starts);
+            } else {
+                starts(&mut e);
+            }
+            e.run();
+            let v = t.borrow().to_bits();
+            v
+        }
+        assert_eq!(run(true), run(false));
+    }
+
+    #[test]
+    fn stats_counters_populate() {
+        let mut e = Engine::new(7);
+        let link = e.add_resource("link", 10.0);
+        let c = e.class("x");
+        for i in 0..4 {
+            e.start_flow(FlowSpec::new(10.0 * (i + 1) as f64, "f").demand(link, 1.0, c), |_| {});
+        }
+        e.run();
+        let s = e.stats();
+        assert_eq!(s.peak_live_flows, 4);
+        assert_eq!(s.events_processed, 4);
+        assert!(s.solves >= 4, "solves {}", s.solves);
+        assert!(s.stale_events_skipped > 0, "shared link must shed stale predictions");
+        assert!(s.peak_heap >= 4);
     }
 }

@@ -68,6 +68,16 @@ impl FlowSpec {
         }
     }
 
+    /// Like [`FlowSpec::new`] but with the demand list pre-sized, for
+    /// builders that know how many demands they will add (the HDFS
+    /// replication pipeline adds ~7 per hop — repeated reallocation in
+    /// the per-block hot path shows up at sweep scale).
+    pub fn with_capacity(total: f64, label: impl Into<String>, demands: usize) -> Self {
+        let mut f = FlowSpec::new(total, label);
+        f.demands.reserve_exact(demands);
+        f
+    }
+
     /// Add a pipelined demand.
     pub fn demand(mut self, resource: ResourceId, coeff: f64, class: UsageClass) -> Self {
         assert!(coeff >= 0.0);
@@ -132,80 +142,153 @@ pub(crate) struct FlowState {
     pub last_update: f64,
 }
 
-/// Solve max-min fair rates for all live flows. `resources` supplies
-/// capacities; results are written into each flow's `rate`.
+/// Persistent scratch buffers for [`solve_rates`]: the per-resource
+/// tables (residual capacity, aggregate load, touch counts) plus the
+/// per-flow tables (effective caps, freeze flags, rates) and the
+/// serial-stage burst list. Owned by the engine and reused across every
+/// solve so the hot path performs no allocation once the buffers have
+/// grown to the high-water mark.
 ///
-/// Runs in O(rounds × flows × demands); rounds ≤ resources + 1. Flow counts
-/// in this simulator are tens-to-hundreds, so this is microseconds.
-pub(crate) fn solve_rates(flows: &mut [&mut FlowState], resources: &[Resource]) {
-    let n = flows.len();
+/// The per-resource vectors are sized to the full resource table but only
+/// the entries named by the solve's `touched` list are ever read or
+/// written, so a component solve costs O(component), not O(resources).
+#[derive(Debug, Default)]
+pub(crate) struct SolveScratch {
+    // Per-resource (full table size, touched entries reset per solve).
+    touch_count: Vec<usize>,
+    residual: Vec<f64>,
+    load: Vec<f64>,
+    // Per-flow (component size, truncated + refilled per solve).
+    caps: Vec<f64>,
+    frozen: Vec<bool>,
+    rate: Vec<f64>,
+    // Serial-stage bursts of the flow currently being capped.
+    stages: Vec<(SerialStage, f64)>,
+}
+
+impl SolveScratch {
+    /// Grow the per-resource tables to cover `n` resources.
+    pub(crate) fn ensure_resources(&mut self, n: usize) {
+        if self.touch_count.len() < n {
+            self.touch_count.resize(n, 0);
+            self.residual.resize(n, 0.0);
+            self.load.resize(n, 0.0);
+        }
+    }
+
+    /// Rate computed for the k-th component flow by the last
+    /// [`solve_rates`] call.
+    pub(crate) fn solved_rate(&self, k: usize) -> f64 {
+        self.rate[k].max(0.0)
+    }
+}
+
+/// Solve max-min fair rates for the flow component `comp` (slot indices
+/// into `flows`, ascending). `touched` lists every resource demanded by a
+/// component flow (ascending, deduplicated); `resources` supplies
+/// capacities. Results are left in the scratch (read them back with
+/// [`SolveScratch::solved_rate`]): the engine settles a flow's progress
+/// at its *old* rate before committing a changed rate, and flows whose
+/// rate did not move keep their stored rate bit-for-bit — that is what
+/// makes the incremental and whole-set modes produce identical
+/// trajectories.
+///
+/// Correctness requires `comp` to be closed under resource sharing: no
+/// flow outside `comp` may demand a resource in `touched` (otherwise the
+/// residual-capacity accounting would hand out capacity twice). The
+/// engine guarantees this by construction — `comp` is a union of
+/// connected components of the flow/resource sharing graph.
+///
+/// Runs in O(rounds × comp × demands); rounds ≤ touched + 1.
+pub(crate) fn solve_rates(
+    flows: &[Option<FlowState>],
+    comp: &[usize],
+    touched: &[usize],
+    resources: &[Resource],
+    scratch: &mut SolveScratch,
+) {
+    let n = comp.len();
     if n == 0 {
         return;
+    }
+    scratch.ensure_resources(resources.len());
+    for &r in touched {
+        scratch.touch_count[r] = 0;
+        scratch.residual[r] = resources[r].capacity;
     }
     // Effective cap per flow: explicit cap ∧ serial-stage harmonic cap.
     // Burst rate of a stage = min over its demands of (resource equal-share
     // capacity / coeff), where equal share counts flows touching the
-    // resource in ANY role (pipelined or staged).
-    let mut touch_count = vec![0usize; resources.len()];
-    for f in flows.iter() {
-        let mut touched: Vec<usize> = f.spec.demands.iter().map(|d| d.resource.0).collect();
-        touched.sort_unstable();
-        touched.dedup();
-        for r in touched {
-            touch_count[r] += 1;
+    // resource in ANY role (pipelined or staged). Each (flow, resource)
+    // pair counts once even when the flow places several demands on the
+    // resource (cpu appears once per cost class).
+    for &s in comp {
+        let demands = &flows[s].as_ref().expect("component slot empty").spec.demands;
+        for (j, d) in demands.iter().enumerate() {
+            if demands[..j].iter().all(|e| e.resource.0 != d.resource.0) {
+                scratch.touch_count[d.resource.0] += 1;
+            }
         }
     }
-    let mut caps: Vec<f64> = Vec::with_capacity(n);
-    for f in flows.iter() {
+    scratch.caps.clear();
+    for &s in comp {
+        let f = flows[s].as_ref().expect("component slot empty");
         let mut cap = f.spec.max_rate;
         // Group demands by stage.
-        let mut stages: Vec<(SerialStage, f64)> = Vec::new(); // (stage, burst)
+        scratch.stages.clear();
         for d in &f.spec.demands {
-            if let Some(s) = d.stage {
+            if let Some(st) = d.stage {
                 let share = resources[d.resource.0].capacity
-                    / touch_count[d.resource.0].max(1) as f64;
+                    / scratch.touch_count[d.resource.0].max(1) as f64;
                 let burst = share / d.coeff;
-                match stages.iter_mut().find(|(st, _)| *st == s) {
+                match scratch.stages.iter_mut().find(|(g, _)| *g == st) {
                     Some((_, b)) => *b = b.min(burst),
-                    None => stages.push((s, burst)),
+                    None => scratch.stages.push((st, burst)),
                 }
             }
         }
-        if !stages.is_empty() {
-            let inv: f64 = stages.iter().map(|(_, b)| 1.0 / b.max(1e-30)).sum();
+        if !scratch.stages.is_empty() {
+            let inv: f64 = scratch.stages.iter().map(|(_, b)| 1.0 / b.max(1e-30)).sum();
             if inv > 0.0 {
                 cap = cap.min(1.0 / inv);
             }
         }
-        caps.push(cap);
+        scratch.caps.push(cap);
     }
 
-    let mut frozen = vec![false; n];
-    let mut rate = vec![0.0f64; n];
-    let mut residual: Vec<f64> = resources.iter().map(|r| r.capacity).collect();
+    scratch.frozen.clear();
+    scratch.frozen.resize(n, false);
+    scratch.rate.clear();
+    scratch.rate.resize(n, 0.0);
 
     loop {
-        // Aggregate unfrozen demand per resource.
-        let mut load = vec![0.0f64; resources.len()];
+        // Aggregate unfrozen demand per touched resource.
+        for &r in touched {
+            scratch.load[r] = 0.0;
+        }
         let mut any_unfrozen = false;
-        for (i, f) in flows.iter().enumerate() {
-            if frozen[i] {
+        for (i, &s) in comp.iter().enumerate() {
+            if scratch.frozen[i] {
                 continue;
             }
             any_unfrozen = true;
+            let f = flows[s].as_ref().expect("component slot empty");
             for d in &f.spec.demands {
-                load[d.resource.0] += d.coeff;
+                scratch.load[d.resource.0] += d.coeff;
             }
         }
         if !any_unfrozen {
             break;
         }
-        // Water level λ at which the first constraint binds.
+        // Water level λ at which the first constraint binds. `touched` is
+        // ascending, so resource ties break toward the lowest id exactly
+        // as the historical full-table scan did.
         let mut lambda = f64::INFINITY;
         let mut bind_resource: Option<usize> = None;
-        for (r, &l) in load.iter().enumerate() {
+        for &r in touched {
+            let l = scratch.load[r];
             if l > 1e-30 {
-                let lam = residual[r].max(0.0) / l;
+                let lam = scratch.residual[r].max(0.0) / l;
                 if lam < lambda {
                     lambda = lam;
                     bind_resource = Some(r);
@@ -213,10 +296,9 @@ pub(crate) fn solve_rates(flows: &mut [&mut FlowState], resources: &[Resource]) 
             }
         }
         let mut bind_cap = false;
-        for (i, f) in flows.iter().enumerate() {
-            let _ = f;
-            if !frozen[i] && caps[i] < lambda {
-                lambda = caps[i];
+        for i in 0..n {
+            if !scratch.frozen[i] && scratch.caps[i] < lambda {
+                lambda = scratch.caps[i];
                 bind_cap = true;
                 bind_resource = None;
             }
@@ -224,10 +306,10 @@ pub(crate) fn solve_rates(flows: &mut [&mut FlowState], resources: &[Resource]) 
         if lambda.is_infinite() {
             // No binding constraint: flows with no demands — give them a
             // huge finite rate so they complete "instantly".
-            for (i, _f) in flows.iter().enumerate() {
-                if !frozen[i] {
-                    rate[i] = 1e18;
-                    frozen[i] = true;
+            for i in 0..n {
+                if !scratch.frozen[i] {
+                    scratch.rate[i] = 1e18;
+                    scratch.frozen[i] = true;
                 }
             }
             break;
@@ -235,40 +317,62 @@ pub(crate) fn solve_rates(flows: &mut [&mut FlowState], resources: &[Resource]) 
         // Freeze flows bound by this constraint.
         let mut froze_any = false;
         for i in 0..n {
-            if frozen[i] {
+            if scratch.frozen[i] {
                 continue;
             }
+            let demands = &flows[comp[i]].as_ref().expect("component slot empty").spec.demands;
             let bound = if bind_cap {
-                caps[i] <= lambda + 1e-12
+                scratch.caps[i] <= lambda + 1e-12
             } else {
                 let r = bind_resource.unwrap();
-                flows[i].spec.demands.iter().any(|d| d.resource.0 == r)
+                demands.iter().any(|d| d.resource.0 == r)
             };
             if bound {
-                rate[i] = lambda;
-                frozen[i] = true;
+                scratch.rate[i] = lambda;
+                scratch.frozen[i] = true;
                 froze_any = true;
-                for d in &flows[i].spec.demands {
-                    residual[d.resource.0] -= d.coeff * lambda;
+                for d in demands {
+                    scratch.residual[d.resource.0] -= d.coeff * lambda;
                 }
             }
         }
         if !froze_any {
             // Numerical corner: freeze everything at λ to guarantee progress.
             for i in 0..n {
-                if !frozen[i] {
-                    rate[i] = lambda;
-                    frozen[i] = true;
-                    for d in &flows[i].spec.demands {
-                        residual[d.resource.0] -= d.coeff * lambda;
+                if !scratch.frozen[i] {
+                    scratch.rate[i] = lambda;
+                    scratch.frozen[i] = true;
+                    for d in &flows[comp[i]].as_ref().expect("component slot empty").spec.demands {
+                        scratch.residual[d.resource.0] -= d.coeff * lambda;
                     }
                 }
             }
         }
     }
 
-    for (i, f) in flows.iter_mut().enumerate() {
-        f.rate = rate[i].max(0.0);
+}
+
+/// Solve every live flow in `flows` as one set and write the rates back
+/// (test helper): computes the component/touched lists itself and uses a
+/// fresh scratch.
+#[cfg(test)]
+pub(crate) fn solve_all(flows: &mut [Option<FlowState>], resources: &[Resource]) {
+    let comp: Vec<usize> = flows
+        .iter()
+        .enumerate()
+        .filter(|(_, f)| f.as_ref().map(|f| f.alive).unwrap_or(false))
+        .map(|(i, _)| i)
+        .collect();
+    let mut touched: Vec<usize> = comp
+        .iter()
+        .flat_map(|&s| flows[s].as_ref().unwrap().spec.demands.iter().map(|d| d.resource.0))
+        .collect();
+    touched.sort_unstable();
+    touched.dedup();
+    let mut scratch = SolveScratch::default();
+    solve_rates(flows, &comp, &touched, resources, &mut scratch);
+    for (k, &s) in comp.iter().enumerate() {
+        flows[s].as_mut().unwrap().rate = scratch.solved_rate(k);
     }
 }
 
@@ -298,21 +402,25 @@ mod tests {
         t.intern("x")
     }
 
+    fn rates(flows: &[Option<FlowState>]) -> Vec<f64> {
+        flows.iter().map(|f| f.as_ref().unwrap().rate).collect()
+    }
+
     #[test]
     fn single_flow_gets_bottleneck() {
         let res = vec![Resource::new("disk", 100.0), Resource::new("cpu", 2.0)];
         let c = class();
-        let mut f = mk(
+        let mut flows = vec![Some(mk(
             1000.0,
             vec![
                 Demand { resource: ResourceId(0), coeff: 1.0, class: c, stage: None },
                 Demand { resource: ResourceId(1), coeff: 0.005, class: c, stage: None },
             ],
             f64::INFINITY,
-        );
-        let mut flows = [&mut f];
-        solve_rates(&mut flows, &res);
-        assert!((flows[0].rate - 100.0).abs() < 1e-9, "rate={}", flows[0].rate);
+        ))];
+        solve_all(&mut flows, &res);
+        let r = rates(&flows);
+        assert!((r[0] - 100.0).abs() < 1e-9, "rate={}", r[0]);
     }
 
     #[test]
@@ -321,17 +429,16 @@ mod tests {
         // though the disk could do 100.
         let res = vec![Resource::new("disk", 100.0), Resource::new("cpu", 1.0)];
         let c = class();
-        let mut f = mk(
+        let mut flows = vec![Some(mk(
             1000.0,
             vec![
                 Demand { resource: ResourceId(0), coeff: 1.0, class: c, stage: None },
                 Demand { resource: ResourceId(1), coeff: 0.05, class: c, stage: None },
             ],
             f64::INFINITY,
-        );
-        let mut flows = [&mut f];
-        solve_rates(&mut flows, &res);
-        assert!((flows[0].rate - 20.0).abs() < 1e-9);
+        ))];
+        solve_all(&mut flows, &res);
+        assert!((rates(&flows)[0] - 20.0).abs() < 1e-9);
     }
 
     #[test]
@@ -339,12 +446,12 @@ mod tests {
         let res = vec![Resource::new("link", 100.0)];
         let c = class();
         let d = vec![Demand { resource: ResourceId(0), coeff: 1.0, class: c, stage: None }];
-        let mut f1 = mk(10.0, d.clone(), f64::INFINITY);
-        let mut f2 = mk(10.0, d, f64::INFINITY);
-        let mut flows = [&mut f1, &mut f2];
-        solve_rates(&mut flows, &res);
-        assert!((flows[0].rate - 50.0).abs() < 1e-9);
-        assert!((flows[1].rate - 50.0).abs() < 1e-9);
+        let mut flows =
+            vec![Some(mk(10.0, d.clone(), f64::INFINITY)), Some(mk(10.0, d, f64::INFINITY))];
+        solve_all(&mut flows, &res);
+        let r = rates(&flows);
+        assert!((r[0] - 50.0).abs() < 1e-9);
+        assert!((r[1] - 50.0).abs() < 1e-9);
     }
 
     #[test]
@@ -353,12 +460,11 @@ mod tests {
         let res = vec![Resource::new("link", 100.0)];
         let c = class();
         let d = vec![Demand { resource: ResourceId(0), coeff: 1.0, class: c, stage: None }];
-        let mut f1 = mk(10.0, d.clone(), 20.0);
-        let mut f2 = mk(10.0, d, f64::INFINITY);
-        let mut flows = [&mut f1, &mut f2];
-        solve_rates(&mut flows, &res);
-        assert!((flows[0].rate - 20.0).abs() < 1e-9);
-        assert!((flows[1].rate - 80.0).abs() < 1e-9);
+        let mut flows = vec![Some(mk(10.0, d.clone(), 20.0)), Some(mk(10.0, d, f64::INFINITY))];
+        solve_all(&mut flows, &res);
+        let r = rates(&flows);
+        assert!((r[0] - 20.0).abs() < 1e-9);
+        assert!((r[1] - 80.0).abs() < 1e-9);
     }
 
     #[test]
@@ -367,20 +473,22 @@ mod tests {
         // Max-min in *rates*: both grow to λ where 2λ+λ=90 → λ=30.
         let res = vec![Resource::new("r", 90.0)];
         let c = class();
-        let mut f1 = mk(
-            10.0,
-            vec![Demand { resource: ResourceId(0), coeff: 2.0, class: c, stage: None }],
-            f64::INFINITY,
-        );
-        let mut f2 = mk(
-            10.0,
-            vec![Demand { resource: ResourceId(0), coeff: 1.0, class: c, stage: None }],
-            f64::INFINITY,
-        );
-        let mut flows = [&mut f1, &mut f2];
-        solve_rates(&mut flows, &res);
-        assert!((flows[0].rate - 30.0).abs() < 1e-9);
-        assert!((flows[1].rate - 30.0).abs() < 1e-9);
+        let mut flows = vec![
+            Some(mk(
+                10.0,
+                vec![Demand { resource: ResourceId(0), coeff: 2.0, class: c, stage: None }],
+                f64::INFINITY,
+            )),
+            Some(mk(
+                10.0,
+                vec![Demand { resource: ResourceId(0), coeff: 1.0, class: c, stage: None }],
+                f64::INFINITY,
+            )),
+        ];
+        solve_all(&mut flows, &res);
+        let r = rates(&flows);
+        assert!((r[0] - 30.0).abs() < 1e-9);
+        assert!((r[1] - 30.0).abs() < 1e-9);
     }
 
     #[test]
@@ -388,34 +496,33 @@ mod tests {
         // One flow, disk 100 and net 100, serialized: rate ≈ 50.
         let res = vec![Resource::new("disk", 100.0), Resource::new("net", 100.0)];
         let c = class();
-        let mut f = mk(
+        let mut flows = vec![Some(mk(
             10.0,
             vec![
                 Demand { resource: ResourceId(0), coeff: 1.0, class: c, stage: Some(SerialStage(0)) },
                 Demand { resource: ResourceId(1), coeff: 1.0, class: c, stage: Some(SerialStage(1)) },
             ],
             f64::INFINITY,
-        );
-        let mut flows = [&mut f];
-        solve_rates(&mut flows, &res);
-        assert!((flows[0].rate - 50.0).abs() < 1e-6, "rate={}", flows[0].rate);
+        ))];
+        solve_all(&mut flows, &res);
+        let r = rates(&flows);
+        assert!((r[0] - 50.0).abs() < 1e-6, "rate={}", r[0]);
     }
 
     #[test]
     fn pipelined_beats_serial() {
         let res = vec![Resource::new("disk", 100.0), Resource::new("net", 100.0)];
         let c = class();
-        let mut fp = mk(
+        let mut flows = vec![Some(mk(
             10.0,
             vec![
                 Demand { resource: ResourceId(0), coeff: 1.0, class: c, stage: None },
                 Demand { resource: ResourceId(1), coeff: 1.0, class: c, stage: None },
             ],
             f64::INFINITY,
-        );
-        let mut flows = [&mut fp];
-        solve_rates(&mut flows, &res);
-        assert!((flows[0].rate - 100.0).abs() < 1e-6);
+        ))];
+        solve_all(&mut flows, &res);
+        assert!((rates(&flows)[0] - 100.0).abs() < 1e-6);
     }
 
     #[test]
@@ -423,9 +530,9 @@ mod tests {
         // Many flows on one resource: total allocated == capacity.
         let res = vec![Resource::new("r", 77.0)];
         let c = class();
-        let mut fs: Vec<FlowState> = (0..13)
+        let mut flows: Vec<Option<FlowState>> = (0..13)
             .map(|i| {
-                mk(
+                Some(mk(
                     10.0,
                     vec![Demand {
                         resource: ResourceId(0),
@@ -434,15 +541,16 @@ mod tests {
                         stage: None,
                     }],
                     f64::INFINITY,
-                )
+                ))
             })
             .collect();
-        let res_ref = &res;
-        let mut refs: Vec<&mut FlowState> = fs.iter_mut().collect();
-        solve_rates(&mut refs, res_ref);
-        let used: f64 = refs
+        solve_all(&mut flows, &res);
+        let used: f64 = flows
             .iter()
-            .map(|f| f.rate * f.spec.demands[0].coeff)
+            .map(|f| {
+                let f = f.as_ref().unwrap();
+                f.rate * f.spec.demands[0].coeff
+            })
             .sum();
         assert!((used - 77.0).abs() < 1e-6, "used={used}");
     }
@@ -450,9 +558,33 @@ mod tests {
     #[test]
     fn no_demands_completes_fast() {
         let res = vec![Resource::new("r", 1.0)];
-        let mut f = mk(10.0, vec![], f64::INFINITY);
-        let mut flows = [&mut f];
-        solve_rates(&mut flows, &res);
-        assert!(flows[0].rate > 1e12);
+        let mut flows = vec![Some(mk(10.0, vec![], f64::INFINITY))];
+        solve_all(&mut flows, &res);
+        assert!(rates(&flows)[0] > 1e12);
+    }
+
+    #[test]
+    fn disjoint_components_solve_to_the_same_rates_as_a_joint_solve() {
+        // Two flows on unrelated links: solving each as its own component
+        // must give exactly the rates of a whole-set solve.
+        let res = vec![Resource::new("a", 100.0), Resource::new("b", 60.0)];
+        let c = class();
+        let mk2 = |r: usize, coeff: f64| {
+            Some(mk(
+                10.0,
+                vec![Demand { resource: ResourceId(r), coeff, class: c, stage: None }],
+                f64::INFINITY,
+            ))
+        };
+        let mut joint = vec![mk2(0, 1.0), mk2(1, 2.0)];
+        solve_all(&mut joint, &res);
+        let mut split = vec![mk2(0, 1.0), mk2(1, 2.0)];
+        let mut scratch = SolveScratch::default();
+        solve_rates(&split, &[0], &[0], &res, &mut scratch);
+        split[0].as_mut().unwrap().rate = scratch.solved_rate(0);
+        solve_rates(&split, &[1], &[1], &res, &mut scratch);
+        split[1].as_mut().unwrap().rate = scratch.solved_rate(0);
+        assert_eq!(rates(&joint), rates(&split));
+        assert_eq!(rates(&split), vec![100.0, 30.0]);
     }
 }

@@ -15,13 +15,53 @@
 //!
 //! Everything is deterministic given a seed: there is no wall-clock input
 //! and the engine uses a seeded [`rng::Rng`].
+//!
+//! # Incremental-solve invariants
+//!
+//! The engine solves rates **incrementally, per component** of the
+//! flow/resource sharing graph (two flows are connected iff they demand a
+//! common resource). The contract every layer above relies on:
+//!
+//! 1. **Dirtiness.** A component is *dirty* iff, since the last solve, a
+//!    flow in it started or ended, or a resource it touches changed
+//!    capacity. Mutating calls ([`Engine::start_flow`],
+//!    [`Engine::cancel_flow`], [`Engine::set_capacity`], flow completion)
+//!    record dirty seeds; the next reschedule re-solves exactly the
+//!    components reachable from those seeds. Clean components are not
+//!    examined at all — their rates are unchanged by max-min locality.
+//! 2. **Settle-before-rewrite.** A flow's progress is integrated lazily:
+//!    `remaining` is exact as of `last_update`, and its true value at
+//!    `now` is `remaining - rate·(now - last_update)` (rates are constant
+//!    between the writes that change them). A flow is settled up to `now`
+//!    exactly when its rate is about to change (or it is removed), so
+//!    lazy integration is exact, never an approximation — and because a
+//!    flow's settle boundaries are precisely its rate-change points, the
+//!    two solver modes integrate identical chunks and stay bit-for-bit
+//!    equal.
+//! 3. **Event versioning.** Each flow carries a version counter; a
+//!    predicted-completion heap entry is live iff its version matches.
+//!    A solve bumps the version (and pushes a fresh prediction) only for
+//!    flows whose rate actually moved; flows in untouched components keep
+//!    their versions and their pending predictions. Stale entries are
+//!    skipped on pop and counted in
+//!    [`EngineStats::stale_events_skipped`].
+//! 4. **Batching.** [`Engine::batch`] defers the solve across a group of
+//!    mutations at one simulated instant (a task fan-out, a replication
+//!    pipeline's stream registrations). This is semantically neutral —
+//!    time cannot advance inside a batch — and bounds a k-change burst to
+//!    one solve.
+//!
+//! [`SolverMode::WholeSet`] retains the pre-refactor behaviour (every
+//! change re-solves every live flow) as a baseline; both modes produce
+//! bit-identical trajectories, which `tests/integration_sweep.rs` pins
+//! down to byte-identical `BENCH_sweep.json` records on the seed grid.
 
 pub mod engine;
 pub mod flow;
 pub mod resource;
 pub mod rng;
 
-pub use engine::{Engine, FlowId, TimerId};
+pub use engine::{Engine, EngineStats, FlowId, SimConfig, SolverMode, TimerId};
 pub use flow::{FlowSpec, SerialStage};
 pub use resource::{ResourceId, UsageClass, UsageSnapshot};
 pub use rng::Rng;

@@ -1,0 +1,233 @@
+//! `sweep --baseline old.json`: diff a sweep against a previous
+//! `BENCH_sweep.json` and flag per-scenario throughput regressions.
+//!
+//! The parser is deliberately tiny and format-bound: it reads only the
+//! files this crate itself emits ([`super::SweepResults::to_json`]),
+//! whose "records" section is one JSON object per line with a fixed key
+//! order — no general JSON machinery needed (serde is unavailable
+//! offline). Scenario ids are stable functions of the axis values, so a
+//! baseline from any earlier PR lines up by id even if the grid grew.
+
+use super::results::SweepResults;
+
+/// Throughput drop (relative) beyond which a scenario counts as a
+/// regression: >5% slower than baseline.
+pub const DEFAULT_TOLERANCE: f64 = 0.05;
+
+/// One scenario's throughput as read from a baseline file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BaselineEntry {
+    pub id: String,
+    pub per_node_mbps: f64,
+}
+
+/// One flagged regression.
+#[derive(Debug, Clone)]
+pub struct Regression {
+    pub id: String,
+    pub baseline_mbps: f64,
+    pub current_mbps: f64,
+    /// Relative drop, e.g. 0.12 = 12% slower than baseline.
+    pub drop_frac: f64,
+}
+
+/// Outcome of a baseline comparison.
+#[derive(Debug, Clone)]
+pub struct BaselineComparison {
+    /// Scenarios present in both runs (the comparable set).
+    pub compared: usize,
+    /// Current scenario ids the baseline file does not know (new axis
+    /// values — informational, never a failure).
+    pub missing_in_baseline: Vec<String>,
+    /// Baseline ids the current sweep did not produce (shrunk grid —
+    /// informational).
+    pub missing_in_current: Vec<String>,
+    /// Scenarios whose throughput dropped beyond the tolerance.
+    pub regressions: Vec<Regression>,
+    pub tolerance: f64,
+}
+
+impl BaselineComparison {
+    pub fn has_regressions(&self) -> bool {
+        !self.regressions.is_empty()
+    }
+
+    /// Human-readable report (one line per regression, then a summary).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for r in &self.regressions {
+            s.push_str(&format!(
+                "REGRESSION {:<44} {:>8.2} -> {:>8.2} MB/s/node  ({:+.1}%)\n",
+                r.id,
+                r.baseline_mbps,
+                r.current_mbps,
+                -100.0 * r.drop_frac
+            ));
+        }
+        s.push_str(&format!(
+            "baseline: {} compared, {} regressions (tolerance {:.0}%), {} new, {} dropped\n",
+            self.compared,
+            self.regressions.len(),
+            self.tolerance * 100.0,
+            self.missing_in_baseline.len(),
+            self.missing_in_current.len()
+        ));
+        s
+    }
+}
+
+/// Extract `"key": value` from one record line of our own JSON format.
+fn field<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\": ");
+    let i = line.find(&pat)? + pat.len();
+    let rest = &line[i..];
+    let end = rest.find([',', '}']).unwrap_or(rest.len());
+    Some(rest[..end].trim())
+}
+
+fn unquote(v: &str) -> Option<&str> {
+    v.strip_prefix('"')?.strip_suffix('"')
+}
+
+/// Parse the "records" lines of a `BENCH_sweep.json`. Lines carrying
+/// both an `id` and a `per_node_mbps` are scenario records; frontier
+/// rows (no id) and perf lines (no throughput) are skipped.
+pub fn parse_baseline(text: &str) -> Vec<BaselineEntry> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let (Some(id), Some(mbps)) = (field(line, "id"), field(line, "per_node_mbps")) else {
+            continue;
+        };
+        let Some(id) = unquote(id) else { continue };
+        let Ok(mbps) = mbps.parse::<f64>() else { continue };
+        out.push(BaselineEntry { id: id.to_string(), per_node_mbps: mbps });
+    }
+    out
+}
+
+/// Compare a finished sweep against the text of a baseline
+/// `BENCH_sweep.json`. A scenario regresses when its per-node throughput
+/// falls more than `tolerance` below the baseline value.
+pub fn compare(current: &SweepResults, baseline_text: &str, tolerance: f64) -> BaselineComparison {
+    let baseline = parse_baseline(baseline_text);
+    let mut compared = 0usize;
+    let mut missing_in_baseline = Vec::new();
+    let mut regressions = Vec::new();
+    for rec in &current.records {
+        match baseline.iter().find(|b| b.id == rec.id) {
+            None => missing_in_baseline.push(rec.id.clone()),
+            Some(b) => {
+                compared += 1;
+                if b.per_node_mbps > 0.0 && rec.per_node_mbps < b.per_node_mbps * (1.0 - tolerance)
+                {
+                    regressions.push(Regression {
+                        id: rec.id.clone(),
+                        baseline_mbps: b.per_node_mbps,
+                        current_mbps: rec.per_node_mbps,
+                        drop_frac: 1.0 - rec.per_node_mbps / b.per_node_mbps,
+                    });
+                }
+            }
+        }
+    }
+    let missing_in_current = baseline
+        .iter()
+        .filter(|b| !current.records.iter().any(|r| r.id == b.id))
+        .map(|b| b.id.clone())
+        .collect();
+    BaselineComparison {
+        compared,
+        missing_in_baseline,
+        missing_in_current,
+        regressions,
+        tolerance,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{EngineStats, SolverMode};
+    use crate::sweep::grid::{ClusterFamily, SweepGrid, Workload, WritePath};
+    use crate::sweep::results::ScenarioRecord;
+
+    fn synthetic_results(mbps_scale: f64) -> SweepResults {
+        let g = SweepGrid {
+            base_seed: 1,
+            families: vec![ClusterFamily::Amdahl],
+            nodes: vec![9],
+            cores: vec![1, 2],
+            write_paths: vec![WritePath::DirectIo],
+            lzo: vec![false],
+            workloads: vec![Workload::DfsioWrite],
+        };
+        let records = g
+            .expand()
+            .iter()
+            .enumerate()
+            .map(|(i, sc)| {
+                let seconds = 100.0 / mbps_scale;
+                let bytes = (1.0 + i as f64) * 8.0 * 100.0 * crate::hw::MIB;
+                ScenarioRecord::new(sc, seconds, bytes, 1000.0, &[], EngineStats::default())
+            })
+            .collect();
+        SweepResults { base_seed: 1, solver: SolverMode::Incremental, records }
+    }
+
+    #[test]
+    fn roundtrip_has_no_regressions() {
+        let r = synthetic_results(1.0);
+        let cmp = compare(&r, &r.to_json(), DEFAULT_TOLERANCE);
+        assert_eq!(cmp.compared, r.records.len());
+        assert!(!cmp.has_regressions(), "{:?}", cmp.regressions);
+        assert!(cmp.missing_in_baseline.is_empty());
+        assert!(cmp.missing_in_current.is_empty());
+    }
+
+    #[test]
+    fn slowdown_beyond_tolerance_is_flagged() {
+        let baseline = synthetic_results(1.0).to_json();
+        let slower = synthetic_results(0.9); // 10% slower everywhere
+        let cmp = compare(&slower, &baseline, DEFAULT_TOLERANCE);
+        assert_eq!(cmp.regressions.len(), slower.records.len());
+        let r = &cmp.regressions[0];
+        assert!((r.drop_frac - 0.1).abs() < 1e-6, "drop {}", r.drop_frac);
+        assert!(cmp.render().contains("REGRESSION"));
+    }
+
+    #[test]
+    fn small_slowdown_within_tolerance_passes() {
+        let baseline = synthetic_results(1.0).to_json();
+        let slightly = synthetic_results(0.97); // 3% slower: under the 5% bar
+        let cmp = compare(&slightly, &baseline, DEFAULT_TOLERANCE);
+        assert!(!cmp.has_regressions());
+    }
+
+    #[test]
+    fn grid_reshape_is_informational() {
+        let mut current = synthetic_results(1.0);
+        let baseline = current.to_json();
+        let dropped = current.records.pop().unwrap();
+        let cmp = compare(&current, &baseline, DEFAULT_TOLERANCE);
+        assert_eq!(cmp.missing_in_current, vec![dropped.id.clone()]);
+        assert!(!cmp.has_regressions());
+        // And a record the baseline has never seen is not a failure.
+        current.records.push(ScenarioRecord {
+            id: "amdahl-n9-c99-direct-nolzo-dfsio-write".into(),
+            ..dropped
+        });
+        let cmp = compare(&current, &baseline, DEFAULT_TOLERANCE);
+        assert_eq!(cmp.missing_in_baseline.len(), 1);
+    }
+
+    #[test]
+    fn parser_skips_frontier_and_perf_lines() {
+        let r = synthetic_results(1.0);
+        let entries = parse_baseline(&r.to_json());
+        assert_eq!(entries.len(), r.records.len());
+        for (e, rec) in entries.iter().zip(&r.records) {
+            assert_eq!(e.id, rec.id);
+            assert!((e.per_node_mbps - rec.per_node_mbps).abs() < 1e-5);
+        }
+    }
+}

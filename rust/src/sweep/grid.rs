@@ -15,9 +15,10 @@ use crate::conf::{ClusterPreset, HadoopConf};
 pub enum ClusterFamily {
     /// Atom-based Amdahl blades; honors the node/core axes.
     Amdahl,
-    /// The Open Cloud Consortium comparison cluster (fixed 4 × Opteron
-    /// nodes; the node/core axes are ignored but still keyed into the
-    /// scenario id so expansion stays a pure Cartesian product).
+    /// The Open Cloud Consortium comparison cluster (Opteron nodes).
+    /// Honors the node/core axes via `ClusterPreset::OccSized`, so both
+    /// testbed families sweep symmetrically; the paper's fixed §3.5 rig
+    /// is the `nodes=4, cores=2` point.
     Occ,
 }
 
@@ -130,7 +131,7 @@ impl Scenario {
             ClusterFamily::Amdahl => {
                 ClusterPreset::AmdahlSized { nodes: self.nodes, cores: self.cores }
             }
-            ClusterFamily::Occ => ClusterPreset::Occ,
+            ClusterFamily::Occ => ClusterPreset::OccSized { nodes: self.nodes, cores: self.cores },
         }
     }
 
@@ -338,6 +339,23 @@ mod tests {
             assert_eq!(sc.preset().node_count(), 9);
             assert_eq!(sc.preset().core_count(), 2);
         }
+    }
+
+    #[test]
+    fn occ_family_honors_node_and_core_axes() {
+        let g = SweepGrid {
+            base_seed: 1,
+            families: vec![ClusterFamily::Occ],
+            nodes: vec![6],
+            cores: vec![4],
+            write_paths: vec![WritePath::DirectIo],
+            lzo: vec![false],
+            workloads: vec![Workload::DfsioWrite],
+        };
+        let sc = &g.expand()[0];
+        assert_eq!(sc.preset().node_count(), 6);
+        assert_eq!(sc.preset().core_count(), 4);
+        assert!(sc.id.starts_with("occ-n6-c4-"), "id {}", sc.id);
     }
 
     #[test]

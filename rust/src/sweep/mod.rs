@@ -13,17 +13,22 @@
 //! * [`results`] — per-scenario records (runtime, per-device
 //!   utilization, joules, MB/s/W), the core-count **frontier analysis**
 //!   that reproduces and generalizes the four-core estimate, and the
-//!   byte-stable `BENCH_sweep.json` emission.
+//!   byte-stable `BENCH_sweep.json` emission (now with an engine-perf
+//!   section: solves, flows resolved, stale events, heap high-water);
+//! * [`baseline`] — the `--baseline old.json` comparator that flags
+//!   per-scenario throughput regressions against an earlier sweep.
 //!
-//! Entry point: `amdahl-hadoop sweep --cores 1..8`.
+//! Entry point: `amdahl-hadoop sweep --cores 1..8 [--baseline old.json]`.
 
+pub mod baseline;
 pub mod grid;
 pub mod results;
 pub mod runner;
 
+pub use baseline::{compare as compare_baseline, BaselineComparison, DEFAULT_TOLERANCE};
 pub use grid::{parse_core_range, ClusterFamily, Scenario, SweepGrid, Workload, WritePath};
 pub use results::{
     aggregate_usage, analytic_balanced_cores, FrontierAnalysis, FrontierRow, KindUtils,
     ScenarioRecord, SweepResults,
 };
-pub use runner::{run_scenario, run_sweep, SweepOptions};
+pub use runner::{run_scenario, run_sweep, SweepOptions, REFERENCE_SLAVES};

@@ -10,7 +10,7 @@
 //! computed alongside as a cross-check; both land on four Atom cores.
 
 use crate::hw::MIB;
-use crate::sim::UsageSnapshot;
+use crate::sim::{EngineStats, SolverMode, UsageSnapshot};
 
 use super::grid::{Scenario, Workload, WritePath};
 
@@ -83,6 +83,11 @@ pub struct ScenarioRecord {
     pub net_util: f64,
     pub membus_util: f64,
     pub bottleneck: &'static str,
+    /// Engine perf counters for the scenario's run. Not part of the
+    /// simulation outcome (the counters differ between solver modes by
+    /// design), so they are serialized in the separate "perf" section —
+    /// the "records" section stays byte-identical across modes.
+    pub stats: EngineStats,
 }
 
 impl ScenarioRecord {
@@ -94,6 +99,7 @@ impl ScenarioRecord {
         bytes_moved: f64,
         joules: f64,
         usage: &[UsageSnapshot],
+        stats: EngineStats,
     ) -> ScenarioRecord {
         let k = aggregate_usage(usage);
         let slaves = (sc.preset().slave_count()).max(1) as f64;
@@ -119,6 +125,7 @@ impl ScenarioRecord {
             net_util: k.net,
             membus_util: k.membus,
             bottleneck: k.bottleneck(),
+            stats,
         }
     }
 }
@@ -167,6 +174,8 @@ impl FrontierAnalysis {
 #[derive(Debug, Clone)]
 pub struct SweepResults {
     pub base_seed: u64,
+    /// Engine solver mode every scenario ran with.
+    pub solver: SolverMode,
     pub records: Vec<ScenarioRecord>,
 }
 
@@ -227,10 +236,23 @@ impl SweepResults {
         }
     }
 
-    /// Serialize everything (records + frontier) as JSON. The output is
-    /// byte-stable for a given grid and seed: fixed key order, fixed
-    /// float formatting, records in grid expansion order.
+    /// Serialize everything (records + frontier + solver perf counters)
+    /// as JSON. The output is byte-stable for a given grid, seed, and
+    /// solver mode: fixed key order, fixed float formatting, records in
+    /// grid expansion order.
     pub fn to_json(&self) -> String {
+        self.to_json_with(true)
+    }
+
+    /// The simulation-outcome projection (records + frontier, no "perf"
+    /// section): exactly what the pre-refactor format emitted, and
+    /// byte-identical across solver modes — the determinism regression
+    /// test compares this across [`SolverMode`]s.
+    pub fn sim_json(&self) -> String {
+        self.to_json_with(false)
+    }
+
+    fn to_json_with(&self, include_perf: bool) -> String {
         let f = self.frontier();
         let mut s = String::with_capacity(256 + self.records.len() * 360);
         s.push_str("{\n");
@@ -291,7 +313,51 @@ impl SweepResults {
         ));
         s.push_str(&format!("    \"analytic_cores\": {},\n", f.analytic_cores));
         s.push_str(&format!("    \"balanced_cores\": {}\n", f.balanced_cores()));
-        s.push_str("  }\n");
+        if include_perf {
+            s.push_str("  },\n");
+            s.push_str("  \"perf\": {\n");
+            s.push_str(&format!("    \"solver\": \"{}\",\n", self.solver.key()));
+            let mut t = EngineStats::default();
+            for r in &self.records {
+                t.solves += r.stats.solves;
+                t.flows_resolved += r.stats.flows_resolved;
+                t.stale_events_skipped += r.stats.stale_events_skipped;
+                t.events_processed += r.stats.events_processed;
+                t.peak_live_flows = t.peak_live_flows.max(r.stats.peak_live_flows);
+                t.peak_heap = t.peak_heap.max(r.stats.peak_heap);
+            }
+            s.push_str(&format!(
+                "    \"totals\": {{\"solves\": {}, \"flows_resolved\": {}, \
+                 \"stale_events_skipped\": {}, \"events\": {}, \"peak_live_flows\": {}, \
+                 \"peak_heap\": {}}},\n",
+                t.solves,
+                t.flows_resolved,
+                t.stale_events_skipped,
+                t.events_processed,
+                t.peak_live_flows,
+                t.peak_heap
+            ));
+            s.push_str("    \"per_scenario\": [\n");
+            for (i, r) in self.records.iter().enumerate() {
+                s.push_str(&format!(
+                    "      {{\"id\": \"{}\", \"solves\": {}, \"flows_resolved\": {}, \
+                     \"stale_events_skipped\": {}, \"events\": {}, \"peak_live_flows\": {}, \
+                     \"peak_heap\": {}}}{}\n",
+                    esc(&r.id),
+                    r.stats.solves,
+                    r.stats.flows_resolved,
+                    r.stats.stale_events_skipped,
+                    r.stats.events_processed,
+                    r.stats.peak_live_flows,
+                    r.stats.peak_heap,
+                    if i + 1 == self.records.len() { "" } else { "," }
+                ));
+            }
+            s.push_str("    ]\n");
+            s.push_str("  }\n");
+        } else {
+            s.push_str("  }\n");
+        }
         s.push_str("}\n");
         s
     }

@@ -15,10 +15,17 @@ use std::thread;
 
 use crate::hdfs::testdfsio;
 use crate::hw::MIB;
+use crate::sim::{SimConfig, SolverMode};
 use crate::zones::{run_app, App, ZonesConfig};
 
 use super::grid::{Scenario, SweepGrid, Workload};
 use super::results::{ScenarioRecord, SweepResults};
+
+/// Slave count the workload knobs are calibrated for (the paper's
+/// nine-blade testbed: one master + eight slaves). With
+/// [`SweepOptions::scale_with_nodes`], per-scenario work scales by
+/// `slaves / 8` relative to this reference.
+pub const REFERENCE_SLAVES: f64 = 8.0;
 
 /// Knobs that size the per-scenario workloads (not grid axes: they are
 /// held constant across the whole sweep so scenarios stay comparable).
@@ -27,7 +34,7 @@ pub struct SweepOptions {
     /// Worker threads; 0 = one per available CPU.
     pub threads: usize,
     /// Zones catalog scale (fraction of the paper's 25 GB) for the
-    /// search/stat workloads.
+    /// search/stat workloads, at the [`REFERENCE_SLAVES`] cluster size.
     pub scale: f64,
     /// Bytes each TestDFSIO worker moves.
     pub dfsio_bytes_per_worker: f64,
@@ -37,6 +44,17 @@ pub struct SweepOptions {
     /// counts (4 × the ~15 MB/s per-stream cap clears the 56 MB/s NIC
     /// balance point).
     pub dfsio_workers: usize,
+    /// Scale per-scenario work with the node axis (default true). The
+    /// dfsio workloads already scale — workers are spawned per slave —
+    /// but the MapReduce catalog is a fixed total, which under-loads
+    /// big clusters; this scales it by `slaves / 8` so every swept
+    /// cluster size sees the same work per node. At the default 9-node
+    /// grid the factor is exactly 1, so seed results are unchanged.
+    pub scale_with_nodes: bool,
+    /// Engine rate-solver mode; [`SolverMode::WholeSet`] is the
+    /// pre-refactor baseline kept for benchmarks and the byte-identical
+    /// regression test.
+    pub solver: SolverMode,
     /// Print per-scenario progress lines to stderr.
     pub progress: bool,
 }
@@ -48,6 +66,8 @@ impl Default for SweepOptions {
             scale: 0.0008,
             dfsio_bytes_per_worker: 128.0 * MIB,
             dfsio_workers: 4,
+            scale_with_nodes: true,
+            solver: SolverMode::Incremental,
             progress: false,
         }
     }
@@ -93,7 +113,7 @@ pub fn run_sweep(grid: &SweepGrid, opts: &SweepOptions) -> SweepResults {
         .into_iter()
         .map(|m| m.into_inner().unwrap().expect("scenario slot never filled"))
         .collect();
-    SweepResults { base_seed: grid.base_seed, records }
+    SweepResults { base_seed: grid.base_seed, solver: opts.solver, records }
 }
 
 /// Run one scenario to completion on the current thread.
@@ -101,29 +121,44 @@ pub fn run_scenario(sc: &Scenario, opts: &SweepOptions) -> ScenarioRecord {
     let conf = sc.conf();
     let preset = sc.preset();
     let slaves = preset.slave_count() as f64;
+    let sim = SimConfig::new(sc.seed).with_solver(opts.solver);
     match sc.workload {
         Workload::DfsioWrite => {
             let run = testdfsio::write_test_on(
                 preset,
-                sc.seed,
+                sim,
                 opts.dfsio_workers,
                 opts.dfsio_bytes_per_worker,
                 &conf,
             );
             let bytes = opts.dfsio_workers as f64 * opts.dfsio_bytes_per_worker * slaves;
-            ScenarioRecord::new(sc, run.result.makespan, bytes, run.energy.total_joules, &run.usage)
+            ScenarioRecord::new(
+                sc,
+                run.result.makespan,
+                bytes,
+                run.energy.total_joules,
+                &run.usage,
+                run.stats,
+            )
         }
         Workload::DfsioRead => {
             let run = testdfsio::read_test_on(
                 preset,
-                sc.seed,
+                sim,
                 opts.dfsio_workers,
                 opts.dfsio_bytes_per_worker,
                 &conf,
                 false,
             );
             let bytes = opts.dfsio_workers as f64 * opts.dfsio_bytes_per_worker * slaves;
-            ScenarioRecord::new(sc, run.result.makespan, bytes, run.energy.total_joules, &run.usage)
+            ScenarioRecord::new(
+                sc,
+                run.result.makespan,
+                bytes,
+                run.energy.total_joules,
+                &run.usage,
+                run.stats,
+            )
         }
         Workload::Search | Workload::Stat => {
             let app = if sc.workload == Workload::Search { App::Search } else { App::Stat };
@@ -131,20 +166,33 @@ pub fn run_scenario(sc: &Scenario, opts: &SweepOptions) -> ScenarioRecord {
             // The paper's slot tuning: the stat reducers are pure compute,
             // so they get one more slot per node than search.
             conf.reduce_slots = if app == App::Stat { 3 } else { 2 };
+            // Keep per-node work constant across the node axis (the
+            // catalog is a fixed total otherwise).
+            let scale = if opts.scale_with_nodes {
+                opts.scale * slaves / REFERENCE_SLAVES
+            } else {
+                opts.scale
+            };
             let z = ZonesConfig {
                 seed: sc.seed,
-                scale: opts.scale,
-                theta_arcsec: 60.0,
-                block_theta_mult: 10.0,
-                partition_cells: 4,
+                scale,
                 kernel_every: usize::MAX, // cost model only on the sweep path
                 kernels: None,
+                solver: opts.solver,
+                ..ZonesConfig::default()
             };
             let out = run_app(preset, &conf, &z, app);
             let bytes = out.job.input_bytes
                 + out.job.hdfs_output_bytes
                 + out.step2.as_ref().map(|j| j.hdfs_output_bytes).unwrap_or(0.0);
-            ScenarioRecord::new(sc, out.total_seconds, bytes, out.energy.total_joules, &out.usage)
+            ScenarioRecord::new(
+                sc,
+                out.total_seconds,
+                bytes,
+                out.energy.total_joules,
+                &out.usage,
+                out.stats,
+            )
         }
     }
 }

@@ -61,6 +61,26 @@ pub struct ZonesConfig {
     pub kernel_every: usize,
     /// Kernel library; None = pure cost model (no science output).
     pub kernels: Option<Rc<PairKernels>>,
+    /// Rate-solver mode for the simulation engine (the whole-set
+    /// baseline exists for benchmarks and regression tests).
+    pub solver: crate::sim::SolverMode,
+}
+
+impl Default for ZonesConfig {
+    /// Paper-shaped defaults: θ=60″, 4×4-cell partitions, cost model
+    /// only (no kernels), incremental solver.
+    fn default() -> Self {
+        ZonesConfig {
+            seed: 42,
+            scale: 0.002,
+            theta_arcsec: 60.0,
+            block_theta_mult: 10.0,
+            partition_cells: 4,
+            kernel_every: usize::MAX,
+            kernels: None,
+            solver: crate::sim::SolverMode::Incremental,
+        }
+    }
 }
 
 impl ZonesConfig {
@@ -380,11 +400,9 @@ mod tests {
         ZonesConfig {
             seed: 9,
             scale,
-            theta_arcsec: 60.0,
-            block_theta_mult: 10.0,
-            partition_cells: 4,
             kernel_every: 1,
             kernels: PairKernels::load_default().ok().map(Rc::new),
+            ..Default::default()
         }
     }
 

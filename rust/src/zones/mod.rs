@@ -43,6 +43,8 @@ pub struct RunOutcome {
     pub kernel_calls: u64,
     /// Per-resource usage over the whole run (sweep/bottleneck analysis).
     pub usage: Vec<crate::sim::UsageSnapshot>,
+    /// Engine perf counters for the whole run (solver work, heap churn).
+    pub stats: crate::sim::EngineStats,
 }
 
 /// Build a cluster world for `preset` and ingest the catalog.
@@ -77,7 +79,8 @@ pub fn setup_world(
 
 /// Run one application on one cluster preset; the paper's Table 3 cells.
 pub fn run_app(preset: ClusterPreset, conf: &HadoopConf, zcfg: &ZonesConfig, app: App) -> RunOutcome {
-    let mut engine = Engine::new(zcfg.seed);
+    let mut engine =
+        Engine::from_config(crate::sim::SimConfig::new(zcfg.seed).with_solver(zcfg.solver));
     let cat = zcfg.catalog();
     let (world, files) = setup_world(&mut engine, preset, conf, cat.input_bytes());
     let cpu = preset.node_spec(conf.data_disk).cpu;
@@ -142,6 +145,7 @@ pub fn run_app(preset: ClusterPreset, conf: &HadoopConf, zcfg: &ZonesConfig, app
         histogram: red.histogram.clone(),
         kernel_calls: red.kernel_calls(),
         usage: engine.usage_snapshot(),
+        stats: engine.stats(),
     }
 }
 
@@ -154,11 +158,9 @@ mod tests {
         ZonesConfig {
             seed: 17,
             scale,
-            theta_arcsec: 60.0,
-            block_theta_mult: 10.0,
-            partition_cells: 4,
             kernel_every: 8,
             kernels: PairKernels::load_default().ok().map(Rc::new),
+            ..Default::default()
         }
     }
 

@@ -1,7 +1,10 @@
 //! Integration tests for the scenario-sweep engine: grid expansion,
-//! stable ids, cross-run determinism, and the core-count frontier.
+//! stable ids, cross-run determinism, the core-count frontier, and the
+//! incremental-vs-whole-set solver equivalence (the refactor's
+//! byte-identical regression gate).
 
 use amdahl_hadoop::hw::MIB;
+use amdahl_hadoop::sim::SolverMode;
 use amdahl_hadoop::sweep::{
     run_sweep, ClusterFamily, SweepGrid, SweepOptions, Workload, WritePath,
 };
@@ -12,7 +15,7 @@ fn small_opts() -> SweepOptions {
         scale: 0.0008,
         dfsio_bytes_per_worker: 48.0 * MIB,
         dfsio_workers: 4,
-        progress: false,
+        ..SweepOptions::default()
     }
 }
 
@@ -71,6 +74,88 @@ fn two_sweeps_same_seed_are_byte_identical() {
     let g2 = SweepGrid { base_seed: 43, ..g.clone() };
     let c = run_sweep(&g2, &small_opts());
     assert_ne!(a.to_json(), c.to_json());
+}
+
+/// The solver-refactor regression gate: the component-partitioned
+/// incremental solver must reproduce the whole-set baseline's seed-grid
+/// results **byte-identically** (records + frontier; the "perf" section
+/// is mode-dependent by design and excluded via `sim_json`).
+#[test]
+fn incremental_and_whole_set_solvers_are_byte_identical_on_the_seed_grid() {
+    let g = SweepGrid {
+        base_seed: 42,
+        families: vec![ClusterFamily::Amdahl, ClusterFamily::Occ],
+        nodes: vec![5],
+        cores: vec![1, 2],
+        write_paths: vec![WritePath::DirectIo],
+        lzo: vec![false, true],
+        workloads: Workload::ALL.to_vec(),
+    };
+    let baseline = run_sweep(&g, &SweepOptions { solver: SolverMode::WholeSet, ..small_opts() });
+    let incremental =
+        run_sweep(&g, &SweepOptions { solver: SolverMode::Incremental, ..small_opts() });
+    assert_eq!(
+        baseline.sim_json(),
+        incremental.sim_json(),
+        "incremental solver changed simulation outcomes"
+    );
+    // The speedup must be visible in the counters: the incremental
+    // solver performs strictly fewer flow-rate computations.
+    let sum = |r: &amdahl_hadoop::sweep::SweepResults| {
+        r.records.iter().map(|x| x.stats.flows_resolved).sum::<u64>()
+    };
+    assert!(
+        sum(&incremental) < sum(&baseline),
+        "incremental {} flow-resolves should be below whole-set {}",
+        sum(&incremental),
+        sum(&baseline)
+    );
+}
+
+#[test]
+fn perf_section_present_and_solver_tagged() {
+    let g = SweepGrid {
+        base_seed: 7,
+        families: vec![ClusterFamily::Amdahl],
+        nodes: vec![5],
+        cores: vec![1],
+        write_paths: vec![WritePath::DirectIo],
+        lzo: vec![false],
+        workloads: vec![Workload::DfsioWrite],
+    };
+    let r = run_sweep(&g, &small_opts());
+    let json = r.to_json();
+    assert!(json.contains("\"perf\": {"), "perf section missing");
+    assert!(json.contains("\"solver\": \"incremental\""));
+    assert!(json.contains("\"flows_resolved\""));
+    assert!(r.records[0].stats.solves > 0);
+    assert!(r.records[0].stats.peak_live_flows > 0);
+    // The projection used by the determinism gate has no perf section
+    // and is a prefix-compatible subset of the full document.
+    assert!(!r.sim_json().contains("\"perf\""));
+}
+
+#[test]
+fn occ_family_sweeps_the_node_axis() {
+    // Two OCC node counts must produce different absolute work (more
+    // slaves move more bytes) — the axis used to be ignored entirely.
+    let mk = |nodes: usize| SweepGrid {
+        base_seed: 11,
+        families: vec![ClusterFamily::Occ],
+        nodes: vec![nodes],
+        cores: vec![2],
+        write_paths: vec![WritePath::DirectIo],
+        lzo: vec![false],
+        workloads: vec![Workload::DfsioWrite],
+    };
+    let small = run_sweep(&mk(3), &small_opts());
+    let large = run_sweep(&mk(7), &small_opts());
+    assert_eq!(small.records[0].nodes, 3);
+    assert_eq!(large.records[0].nodes, 7);
+    assert!(
+        large.records[0].bytes_moved > small.records[0].bytes_moved * 2.0,
+        "more OCC slaves must move proportionally more bytes"
+    );
 }
 
 #[test]

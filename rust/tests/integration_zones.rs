@@ -8,13 +8,11 @@ use amdahl_hadoop::zones::{run_app, App, ZonesConfig};
 
 fn zcfg(scale: f64, theta: f64, kernels: Option<Rc<PairKernels>>) -> ZonesConfig {
     ZonesConfig {
-        seed: 42,
         scale,
         theta_arcsec: theta,
-        block_theta_mult: 10.0,
-        partition_cells: 4,
         kernel_every: 4,
         kernels,
+        ..Default::default()
     }
 }
 

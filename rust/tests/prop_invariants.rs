@@ -47,6 +47,53 @@ fn engine_conservation_random_flows() {
     }
 }
 
+/// Solver invariant: the incremental component-partitioned solver and
+/// the whole-set baseline produce bit-identical completion times on
+/// random flow churn (random resources, demands, caps, start times).
+/// Settle points are rate-change points in both modes, so even the
+/// floating-point trajectories must coincide exactly.
+#[test]
+fn solver_modes_agree_on_random_flow_churn() {
+    use amdahl_hadoop::sim::SolverMode;
+    fn run(seed: u64, mode: SolverMode) -> Vec<u64> {
+        let mut rng = Rng::new(seed ^ 0xABCD);
+        let mut e = Engine::with_mode(seed, mode);
+        let n_res = 2 + rng.below(6) as usize;
+        let res: Vec<_> = (0..n_res)
+            .map(|i| e.add_resource(&format!("r{i}"), 1.0 + rng.f64() * 99.0))
+            .collect();
+        let cls = e.class("w");
+        let log = shared(Vec::<u64>::new());
+        let n_flows = 5 + rng.below(40) as usize;
+        for _ in 0..n_flows {
+            let total = 1.0 + rng.f64() * 500.0;
+            let mut spec = FlowSpec::new(total, "f");
+            let k = 1 + rng.below(3) as usize;
+            for _ in 0..k {
+                spec = spec.demand(res[rng.below(n_res as u64) as usize], 0.1 + rng.f64(), cls);
+            }
+            if rng.f64() < 0.3 {
+                spec = spec.cap(0.5 + rng.f64() * 50.0);
+            }
+            let l = log.clone();
+            let start = rng.f64() * 10.0;
+            e.after(start, move |e| {
+                e.start_flow(spec, move |e| l.borrow_mut().push(e.now().to_bits()));
+            });
+        }
+        e.run();
+        let v = log.borrow().clone();
+        v
+    }
+    for seed in 0..15u64 {
+        assert_eq!(
+            run(seed, SolverMode::WholeSet),
+            run(seed, SolverMode::Incremental),
+            "solver modes diverged at seed {seed}"
+        );
+    }
+}
+
 /// Codec invariant: decompress ∘ compress = identity on arbitrary bytes.
 #[test]
 fn codec_roundtrip_random() {
