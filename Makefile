@@ -1,0 +1,25 @@
+# Convenience targets. The Rust crate is self-contained (`cd rust &&
+# cargo build --release`); these wrap the optional kernel-artifact
+# pipeline and the end-to-end example on top of it.
+
+.PHONY: artifacts e2e test bench-smoke
+
+# AOT-lower the JAX/Pallas pair kernels to HLO text artifacts the Rust
+# runtime loads at startup. Requires a Python with jax installed; the
+# Rust build does NOT depend on this (kernel-less builds are
+# first-class behind the `xla` feature gate).
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../artifacts
+
+# Run the neighbor-search end-to-end example against the artifacts.
+e2e:
+	cd rust && cargo run --release --example neighbor_search_e2e
+
+# Tier-1 verification.
+test:
+	cd rust && cargo build --release && cargo test -q
+
+# The CI bench-smoke gate: 10k-flow solver scaling + the recorded
+# stale-events / peak-heap baseline.
+bench-smoke:
+	cd rust && timeout 300 cargo bench --bench flow_scale

@@ -95,4 +95,62 @@ fn main() {
         "incremental solver must do >=5x fewer flow-solves than the whole-set \
          baseline at 10k flows (got {ratio:.1}x)"
     );
+
+    check_recorded_baseline(&si);
+}
+
+/// Regression gate against the recorded baseline
+/// (`benches/flow_scale_baseline.json`): `stale_events_skipped` and
+/// `peak_heap` must stay within 10% of the committed values — heap
+/// churn and stale-event floods are exactly how solver regressions
+/// manifest before wall-clock does. Set `FLOW_SCALE_WRITE_BASELINE=1`
+/// to regenerate the file after an intentional change.
+fn check_recorded_baseline(si: &EngineStats) {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/benches/flow_scale_baseline.json");
+    if std::env::var("FLOW_SCALE_WRITE_BASELINE").is_ok() {
+        let json = format!(
+            "{{\"bench\": \"flow_scale_10k\", \"solver\": \"incremental\", \
+             \"stale_events_skipped\": {}, \"peak_heap\": {}}}\n",
+            si.stale_events_skipped, si.peak_heap
+        );
+        std::fs::write(path, json).expect("write baseline");
+        println!("recorded new baseline to {path}");
+        return;
+    }
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(_) => {
+            println!("no recorded baseline at {path}; skipping the 10% gate");
+            return;
+        }
+    };
+    let field = |key: &str| -> u64 {
+        let pat = format!("\"{key}\": ");
+        let i = text.find(&pat).unwrap_or_else(|| panic!("baseline missing {key}")) + pat.len();
+        text[i..]
+            .chars()
+            .take_while(|c| c.is_ascii_digit())
+            .collect::<String>()
+            .parse()
+            .unwrap_or_else(|_| panic!("unparsable baseline {key}"))
+    };
+    let base_stale = field("stale_events_skipped");
+    let base_heap = field("peak_heap");
+    let within = |actual: u64, base: u64, label: &str| {
+        // 10% relative, with a small absolute floor so a zero baseline
+        // tolerates counting-noise-sized drift only.
+        let tol = ((base as f64) * 0.10).max(50.0);
+        let diff = (actual as f64 - base as f64).abs();
+        assert!(
+            diff <= tol,
+            "{label} drifted beyond 10% of the recorded baseline: {actual} vs {base} \
+             (tolerance {tol:.0}); if intentional, regenerate with FLOW_SCALE_WRITE_BASELINE=1"
+        );
+    };
+    within(si.stale_events_skipped, base_stale, "stale_events_skipped");
+    within(si.peak_heap as u64, base_heap as u64, "peak_heap");
+    println!(
+        "baseline gate ok: stale {} (recorded {}), peak heap {} (recorded {})",
+        si.stale_events_skipped, base_stale, si.peak_heap, base_heap
+    );
 }

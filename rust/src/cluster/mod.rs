@@ -32,6 +32,10 @@ pub struct Node {
     pub disk_read_streams: usize,
     /// Live sequential write streams on the disk.
     pub disk_write_streams: usize,
+    /// Fault-injection disk throughput multiplier (1.0 = healthy). It
+    /// composes with the stream-count efficiency adjustment, so it
+    /// survives every `disk_stream_start`/`end` recomputation.
+    pub disk_degrade: f64,
 }
 
 /// A set of nodes wired into one engine.
@@ -59,6 +63,7 @@ impl Cluster {
                 membus,
                 disk_read_streams: 0,
                 disk_write_streams: 0,
+                disk_degrade: 1.0,
             });
         }
         Cluster { nodes }
@@ -88,7 +93,7 @@ impl Cluster {
             n.disk_write_streams += 1;
         }
         let eff = n.spec.data_disk.capacity_eff(n.disk_read_streams, n.disk_write_streams);
-        engine.set_capacity(n.disk, eff);
+        engine.set_capacity(n.disk, eff * n.disk_degrade);
     }
 
     /// Register the end of a disk stream (inverse of
@@ -103,7 +108,25 @@ impl Cluster {
             n.disk_write_streams -= 1;
         }
         let eff = n.spec.data_disk.capacity_eff(n.disk_read_streams, n.disk_write_streams);
-        engine.set_capacity(n.disk, eff);
+        engine.set_capacity(n.disk, eff * n.disk_degrade);
+    }
+
+    /// Fault injection: degrade (or restore) a node's data-disk
+    /// throughput to `factor` of nominal. Applies immediately and to
+    /// every future stream-count recomputation.
+    pub fn set_disk_degrade(&mut self, engine: &mut Engine, node: NodeId, factor: f64) {
+        assert!(factor > 0.0 && factor <= 1.0, "degrade factor {factor} out of (0, 1]");
+        let n = &mut self.nodes[node.0];
+        n.disk_degrade = factor;
+        let eff = n.spec.data_disk.capacity_eff(n.disk_read_streams, n.disk_write_streams);
+        engine.set_capacity(n.disk, eff * factor);
+    }
+
+    /// Every engine resource owned by `node`, for the fault layer's
+    /// crash kill-switch (cancel all flows touching a dead node).
+    pub fn node_resources(&self, node: NodeId) -> [ResourceId; 5] {
+        let n = &self.nodes[node.0];
+        [n.cpu, n.disk, n.nic_tx, n.nic_rx, n.membus]
     }
 
     /// Swap every node's data disk (Fig 1 / Fig 2 iterate hardware

@@ -56,6 +56,11 @@ pub struct HadoopConf {
     pub direct_io_write: bool,
     /// HDFS data directory device.
     pub data_disk: DiskKind,
+    /// Memory-bus copy-capacity override in bytes/s (None = the node
+    /// preset's value). The §4 discussion argues more cores alone may
+    /// leave the blade memory-bound — this knob lets the sweep chart
+    /// the 2-D core × bus frontier.
+    pub membus_copy_bps: Option<f64>,
 }
 
 impl Default for HadoopConf {
@@ -79,6 +84,7 @@ impl Default for HadoopConf {
             lzo_ratio: 0.4,
             direct_io_write: false,
             data_disk: DiskKind::Raid0,
+            membus_copy_bps: None,
         }
     }
 }
@@ -165,6 +171,7 @@ impl HadoopConf {
             "app.buffered.output" => self.buffered_output = value.parse()?,
             "app.lzo" => self.lzo_output = value.parse()?,
             "app.direct.io" => self.direct_io_write = value.parse()?,
+            "hw.membus.bps" => self.membus_copy_bps = Some(value.parse::<f64>()?),
             "app.data.disk" => {
                 self.data_disk = match value {
                     "hdd" => DiskKind::Hdd,
@@ -222,6 +229,17 @@ impl ClusterPreset {
             ClusterPreset::AmdahlSized { cores, .. } => cores,
             ClusterPreset::OccSized { cores, .. } => cores,
         }
+    }
+
+    /// Node spec for this preset with the configuration's hardware
+    /// overrides applied (data-disk kind, optional memory-bus capacity).
+    pub fn node_spec_for(self, conf: &HadoopConf) -> crate::hw::NodeSpec {
+        let mut spec = self.node_spec(conf.data_disk);
+        if let Some(b) = conf.membus_copy_bps {
+            assert!(b > 0.0, "membus override must be positive");
+            spec.net.membus_copy_bps = b;
+        }
+        spec
     }
 
     pub fn node_spec(self, disk: DiskKind) -> crate::hw::NodeSpec {

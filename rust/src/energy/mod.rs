@@ -21,6 +21,11 @@ pub struct EnergyReport {
     /// Utilization-scaled refinement.
     pub scaled_joules: f64,
     pub mean_cpu_utilization: f64,
+    /// Marginal joules attributable to fault recovery (re-replication
+    /// transfers, `recovery:*` usage classes): busy CPU core-seconds of
+    /// those classes priced at each node's (full − idle) watts per
+    /// core. Zero on fault-free runs.
+    pub recovery_joules: f64,
 }
 
 /// Measure energy for a completed run.
@@ -29,6 +34,7 @@ pub fn measure(engine: &Engine, cluster: &Cluster, wall_seconds: f64) -> EnergyR
     let mut full = 0.0;
     let mut scaled = 0.0;
     let mut util_sum = 0.0;
+    let mut recovery = 0.0;
     for node in &cluster.nodes {
         let spec = &node.spec;
         full += spec.power_full_w * wall_seconds;
@@ -37,6 +43,21 @@ pub fn measure(engine: &Engine, cluster: &Cluster, wall_seconds: f64) -> EnergyR
         util_sum += util;
         scaled += (spec.power_idle_w + (spec.power_full_w - spec.power_idle_w) * util)
             * wall_seconds;
+        // Recovery attribution: CPU seconds burned by recovery:* classes
+        // priced at the node's marginal (full − idle) watts per core.
+        // Summation order is fixed (sorted by class id) so the result is
+        // bit-stable despite the HashMap storage.
+        let mut rec: Vec<(crate::sim::UsageClass, f64)> = r
+            .busy_by_class
+            .iter()
+            .filter(|(c, _)| engine.class_name(**c).starts_with("recovery"))
+            .map(|(c, b)| (*c, *b))
+            .collect();
+        rec.sort_by_key(|(c, _)| *c);
+        let rec_cpu_s: f64 = rec.iter().map(|(_, b)| b).sum();
+        if rec_cpu_s > 0.0 && spec.cpu.capacity > 0.0 {
+            recovery += (spec.power_full_w - spec.power_idle_w) * rec_cpu_s / spec.cpu.capacity;
+        }
     }
     EnergyReport {
         nodes,
@@ -44,6 +65,7 @@ pub fn measure(engine: &Engine, cluster: &Cluster, wall_seconds: f64) -> EnergyR
         total_joules: full,
         scaled_joules: scaled,
         mean_cpu_utilization: util_sum / nodes as f64,
+        recovery_joules: recovery,
     }
 }
 
@@ -69,6 +91,7 @@ mod tests {
             total_joules: 9.0 * 40.0 * 1628.0,
             scaled_joules: 0.0,
             mean_cpu_utilization: 1.0,
+            recovery_joules: 0.0,
         };
         let o = EnergyReport {
             nodes: 4,
@@ -76,6 +99,7 @@ mod tests {
             total_joules: 4.0 * 290.0 * 3901.0,
             scaled_joules: 0.0,
             mean_cpu_utilization: 1.0,
+            recovery_joules: 0.0,
         };
         let r = efficiency_ratio(&a, &o);
         assert!((r - 7.72).abs() < 0.05, "ratio {r:.2}");

@@ -1,0 +1,137 @@
+//! Schedules a [`FaultSchedule`]'s events into the engine as timers.
+//!
+//! Installation is the only entry point the workload drivers call:
+//! `install(engine, world, schedule)` arms the world's
+//! [`super::FaultState`], then registers one timer per fault event. An
+//! empty schedule with speculation off installs **nothing** — no
+//! timers, no state transitions — preserving the byte-identity of
+//! fault-free runs.
+
+use crate::hdfs::WorldHandle;
+use crate::sim::Engine;
+
+use super::plan::{FaultKind, FaultSchedule};
+use super::recovery;
+use crate::cluster::NodeId;
+
+/// Arm fault injection for this run. Call once, after the world is
+/// built and before the workload starts (all event times are relative
+/// to the current simulated time, normally 0).
+pub fn install(engine: &mut Engine, world: &WorldHandle, schedule: &FaultSchedule) {
+    if schedule.events.is_empty() && !schedule.speculation {
+        return;
+    }
+    {
+        let mut w = world.borrow_mut();
+        let nodes = w.cluster.len();
+        w.faults.arm(nodes, schedule.speculation);
+    }
+    for ev in &schedule.events {
+        let node = NodeId(ev.node);
+        let world = world.clone();
+        match ev.kind {
+            FaultKind::Crash => {
+                engine.after(ev.at, move |engine| {
+                    recovery::handle_crash(engine, &world, node);
+                });
+            }
+            FaultKind::Straggle { factor } => {
+                engine.after(ev.at, move |engine| {
+                    recovery::handle_straggle(engine, &world, node, factor);
+                });
+            }
+            FaultKind::DiskDegrade { factor } => {
+                engine.after(ev.at, move |engine| {
+                    recovery::handle_disk_degrade(engine, &world, node, factor);
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::faults::plan::{CrashSpec, FaultSchedule, InjectionPlan};
+    use crate::hdfs::World;
+    use crate::hw::{amdahl_blade, DiskKind};
+    use crate::sim::engine::shared;
+
+    fn world(n: usize, seed: u64) -> (Engine, WorldHandle) {
+        let mut e = Engine::new(seed);
+        let cluster = Cluster::build(&mut e, &amdahl_blade(DiskKind::Raid0), n);
+        let mut w = World::new(cluster);
+        w.namenode.set_datanodes((1..n).map(NodeId).collect());
+        (e, shared(w))
+    }
+
+    #[test]
+    fn empty_schedule_installs_nothing() {
+        let (mut e, w) = world(4, 1);
+        install(&mut e, &w, &FaultSchedule::default());
+        assert!(!w.borrow().faults.active);
+        e.run();
+        assert_eq!(e.events_processed(), 0);
+    }
+
+    #[test]
+    fn crash_event_marks_node_down_and_blacklists() {
+        let (mut e, w) = world(4, 1);
+        let plan = InjectionPlan {
+            crashes: vec![CrashSpec { node: 2, at: 3.0 }],
+            ..InjectionPlan::empty()
+        };
+        let sched = FaultSchedule::generate(&plan, 9, 4);
+        install(&mut e, &w, &sched);
+        assert!(w.borrow().faults.active);
+        e.run();
+        let wb = w.borrow();
+        assert!(!wb.faults.is_up(NodeId(2)));
+        assert!(wb.namenode.is_dead(NodeId(2)));
+        assert!(!wb.namenode.is_live(NodeId(2)));
+        assert_eq!(wb.faults.stats.crashes, 1);
+        assert!((e.now() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn straggle_event_slows_cpu() {
+        let (mut e, w) = world(3, 1);
+        let cpu = w.borrow().cluster.node(NodeId(1)).cpu;
+        let nominal = e.resource(cpu).capacity;
+        let plan = InjectionPlan { straggler_frac: 1.0, ..InjectionPlan::empty() };
+        let sched = FaultSchedule::generate(&plan, 5, 3);
+        install(&mut e, &w, &sched);
+        e.run();
+        let slowed = e.resource(cpu).capacity;
+        assert!(
+            (slowed - nominal * 0.4).abs() < 1e-9,
+            "cpu {slowed} should be 0.4 x {nominal}"
+        );
+        assert_eq!(w.borrow().faults.stats.stragglers, 2);
+    }
+
+    #[test]
+    fn disk_degrade_survives_stream_recomputation() {
+        let (mut e, w) = world(2, 1);
+        let disk = w.borrow().cluster.node(NodeId(1)).disk;
+        {
+            let mut wb = w.borrow_mut();
+            wb.faults.arm(2, false);
+            wb.cluster.set_disk_degrade(&mut e, NodeId(1), 0.5);
+        }
+        assert!((e.resource(disk).capacity - 0.5).abs() < 1e-12);
+        {
+            let mut wb = w.borrow_mut();
+            wb.cluster.disk_stream_start(&mut e, NodeId(1), true);
+        }
+        // RAID0 single-stream eff is 1.0; the degrade multiplier must
+        // persist through the recomputation.
+        assert!((e.resource(disk).capacity - 0.5).abs() < 1e-12);
+        {
+            let mut wb = w.borrow_mut();
+            wb.cluster.disk_stream_end(&mut e, NodeId(1), true);
+        }
+        assert!((e.resource(disk).capacity - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,212 @@
+//! Fault injection & recovery: datanode crashes, re-replication,
+//! stragglers, and speculative execution.
+//!
+//! The paper's efficiency numbers are measured on fault-free runs, but
+//! the whole reason HDFS triples every written byte is failure
+//! tolerance. This subsystem closes the loop: a seeded [`InjectionPlan`]
+//! schedules crashes, CPU stragglers and disk degrades into the engine;
+//! the HDFS layer reacts with dead-node detection, **write-pipeline
+//! failover mid-block** and **block re-replication** from surviving
+//! copies; the MapReduce layer reacts with TaskTracker blacklisting,
+//! re-execution of lost map outputs, and Hadoop-0.20-style speculative
+//! execution of straggling maps (progress-rate threshold, kill-loser).
+//!
+//! * [`plan`] — [`InjectionPlan`] → deterministic [`FaultSchedule`]
+//!   (all sampling on a dedicated RNG stream keyed by the scenario's
+//!   stable id, so faults are identical across thread counts and
+//!   [`crate::sim::SolverMode`]s);
+//! * [`injector`] — schedules the fault events as engine timers;
+//! * [`recovery`] — crash orchestration: mark the node dead, run the
+//!   registered protocol failover handlers, kill every remaining flow
+//!   touching the node, and re-replicate under-replicated blocks.
+//!
+//! **Identity invariant:** with an empty plan nothing is installed — no
+//! timers, no RNG draws, no extra state transitions — so fault-free
+//! output (including `BENCH_sweep.json`) is byte-identical to a build
+//! without this subsystem. `tests/integration_faults.rs` pins this.
+//!
+//! Modeling conventions (documented simplifications):
+//!
+//! * Crashed nodes never return; re-replication restores the replica
+//!   count on the survivors (Hadoop's NameNode repair path).
+//! * A v0.20 pipeline that loses a DataNode continues on the surviving
+//!   replicas for the in-flight block (stock recovery semantics); the
+//!   committed block is topped back up to the replication factor by an
+//!   immediate re-replication transfer.
+//! * Killed task attempts stop at their next phase boundary; flows
+//!   already in flight on healthy nodes run out (their time is counted
+//!   as wasted work), while flows touching the dead node are cancelled
+//!   at the instant of the crash.
+
+pub mod injector;
+pub mod plan;
+pub mod recovery;
+
+pub use injector::install;
+pub use plan::{fault_stream_seed, CrashSpec, FaultEvent, FaultKind, FaultSchedule, InjectionPlan};
+
+use crate::cluster::NodeId;
+use crate::sim::Engine;
+
+/// A protocol-layer crash reaction (in-flight HDFS write/read failover,
+/// job-scheduler blacklisting). Called once per crash with the dead
+/// node; returning `false` deregisters the handler.
+pub type FailoverHandler = Box<dyn FnMut(&mut Engine, NodeId) -> bool>;
+
+/// Counters describing what the fault subsystem did to a run. Everything
+/// here is deterministic for a given plan + stream seed.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultStats {
+    /// Nodes that crashed.
+    pub crashes: usize,
+    /// Nodes slowed by a straggler event.
+    pub stragglers: usize,
+    /// Nodes whose data disk degraded.
+    pub disk_degrades: usize,
+    /// Block re-replication transfers started / completed.
+    pub rereplications_started: usize,
+    pub rereplications_done: usize,
+    /// Bytes moved by re-replication (wire bytes, stored size).
+    pub recovery_bytes: f64,
+    /// Blocks that lost every replica (unrecoverable; counted once per
+    /// block by the post-crash namespace scan).
+    pub blocks_lost: usize,
+    /// Read attempts that hit a lost block and skipped it (one per
+    /// attempted read, so re-reads count again).
+    pub lost_block_reads: usize,
+    /// In-flight write pipelines rebuilt around a dead DataNode.
+    pub pipeline_failovers: usize,
+    /// In-flight reads re-pointed at a surviving replica.
+    pub read_failovers: usize,
+    /// Whole-file writes abandoned because the writing client died.
+    pub writes_aborted: usize,
+    /// Map / reduce attempts re-queued after a TaskTracker death.
+    pub maps_requeued: usize,
+    pub reduces_requeued: usize,
+    /// Completed map outputs lost with their host and re-executed.
+    pub map_outputs_lost: usize,
+    /// Speculative map attempts launched / won / wasted.
+    pub spec_launched: usize,
+    pub spec_wins: usize,
+    pub spec_wasted: usize,
+    /// Simulated seconds of task work thrown away (killed attempts).
+    pub wasted_task_seconds: f64,
+}
+
+/// Per-run fault state, owned by [`crate::hdfs::World`]. For fault-free
+/// runs it stays inert: `active` is false, the handler list is empty,
+/// and no code path consults anything else.
+pub struct FaultState {
+    /// Per-node liveness (index = node id). Empty until the injector
+    /// installs a schedule; [`FaultState::is_up`] treats missing entries
+    /// as up, so fault-free runs never allocate.
+    node_up: Vec<bool>,
+    /// True once a non-empty schedule was installed.
+    pub active: bool,
+    /// Speculative execution enabled (scheduler consults this).
+    pub speculation: bool,
+    /// Registered crash reactions, run in registration order.
+    pub(crate) handlers: Vec<FailoverHandler>,
+    pub stats: FaultStats,
+}
+
+impl Default for FaultState {
+    fn default() -> Self {
+        FaultState::new()
+    }
+}
+
+impl FaultState {
+    pub fn new() -> FaultState {
+        FaultState {
+            node_up: Vec::new(),
+            active: false,
+            speculation: false,
+            handlers: Vec::new(),
+            stats: FaultStats::default(),
+        }
+    }
+
+    /// Arm the state for a cluster of `nodes` nodes (all up).
+    pub(crate) fn arm(&mut self, nodes: usize, speculation: bool) {
+        if self.node_up.len() < nodes {
+            self.node_up.resize(nodes, true);
+        }
+        self.active = true;
+        self.speculation = speculation;
+    }
+
+    /// Is `node` alive? Nodes never seen by the injector are always up.
+    pub fn is_up(&self, node: NodeId) -> bool {
+        self.node_up.get(node.0).copied().unwrap_or(true)
+    }
+
+    /// Mark `node` dead; returns false if it already was.
+    pub(crate) fn set_down(&mut self, node: NodeId) -> bool {
+        if self.node_up.len() <= node.0 {
+            self.node_up.resize(node.0 + 1, true);
+        }
+        let was_up = self.node_up[node.0];
+        self.node_up[node.0] = false;
+        was_up
+    }
+
+    /// Register a crash reaction. Handlers self-deregister by returning
+    /// false (e.g. when the protocol operation they guard has finished).
+    pub fn register(&mut self, h: FailoverHandler) {
+        self.handlers.push(h);
+    }
+}
+
+/// Run every registered failover handler for a crash of `node`.
+///
+/// Handlers may borrow the world and may register *new* handlers while
+/// running (a rebuilt pipeline re-arms its guard), so the list is taken
+/// out of the world for the duration and merged back afterwards.
+pub fn dispatch_crash(
+    engine: &mut Engine,
+    world: &crate::hdfs::WorldHandle,
+    node: NodeId,
+) {
+    let mut handlers = std::mem::take(&mut world.borrow_mut().faults.handlers);
+    let mut kept: Vec<FailoverHandler> = Vec::with_capacity(handlers.len());
+    for mut h in handlers.drain(..) {
+        if h(engine, node) {
+            kept.push(h);
+        }
+    }
+    let mut w = world.borrow_mut();
+    // Handlers registered during dispatch landed in the (emptied) world
+    // list; keep them after the surviving originals so registration
+    // order stays chronological.
+    let new = std::mem::take(&mut w.faults.handlers);
+    w.faults.handlers = kept;
+    w.faults.handlers.extend(new);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_state_is_inert() {
+        let s = FaultState::new();
+        assert!(!s.active);
+        assert!(!s.speculation);
+        assert!(s.is_up(NodeId(0)));
+        assert!(s.is_up(NodeId(99)));
+        assert_eq!(s.stats, FaultStats::default());
+    }
+
+    #[test]
+    fn arm_and_down_tracking() {
+        let mut s = FaultState::new();
+        s.arm(4, true);
+        assert!(s.active && s.speculation);
+        assert!(s.is_up(NodeId(3)));
+        assert!(s.set_down(NodeId(3)));
+        assert!(!s.is_up(NodeId(3)));
+        assert!(!s.set_down(NodeId(3)), "second down is a no-op");
+        assert!(s.is_up(NodeId(1)));
+    }
+}

@@ -1,0 +1,321 @@
+//! Fault injection plans and their expansion into concrete schedules.
+//!
+//! An [`InjectionPlan`] is declarative: fixed crash entries, an optional
+//! per-node MTBF, straggler and disk-degrade distributions, and the
+//! speculative-execution switch. [`FaultSchedule::generate`] expands it
+//! into a sorted list of timestamped [`FaultEvent`]s using a dedicated
+//! RNG stream, so the *same plan + same stream seed* always produces the
+//! same faults — independent of thread count, solver mode, or the order
+//! scenarios were inserted into a sweep grid.
+
+use crate::sim::Rng;
+
+/// One fixed crash entry: node `node` dies at simulated time `at`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CrashSpec {
+    /// Node index (must be a slave: the master never crashes — a master
+    /// failure is a whole-job failure, out of scope for this model).
+    pub node: usize,
+    /// Simulated seconds after engine start.
+    pub at: f64,
+}
+
+/// Declarative fault-injection plan. The default plan is **empty**: no
+/// events are generated, no timers are scheduled, and simulation output
+/// is byte-identical to a build without the subsystem.
+#[derive(Debug, Clone)]
+pub struct InjectionPlan {
+    /// Fixed crash schedule (applied verbatim, before MTBF sampling).
+    pub crashes: Vec<CrashSpec>,
+    /// Mean time between failures per slave node, seconds. When set,
+    /// each slave's first crash time is sampled exponentially; crashes
+    /// landing inside `crash_horizon_s` become events, earliest-first,
+    /// capped at `max_crashes`.
+    pub mtbf_s: Option<f64>,
+    /// Cap on MTBF-sampled crashes (default 2: with `dfs.replication`
+    /// 3, two dead nodes can never lose a block outright).
+    pub max_crashes: usize,
+    /// Sampling window for MTBF crashes, seconds.
+    pub crash_horizon_s: f64,
+    /// Fraction of slave nodes that become stragglers.
+    pub straggler_frac: f64,
+    /// CPU capacity multiplier applied to a straggler (0 < f < 1).
+    pub straggler_slowdown: f64,
+    /// Uniform window for straggler onset times, seconds.
+    pub straggler_onset_s: (f64, f64),
+    /// Fraction of slave nodes whose data disk degrades.
+    pub disk_degrade_frac: f64,
+    /// Disk throughput multiplier applied to a degraded disk.
+    pub disk_degrade_factor: f64,
+    /// Uniform window for disk-degrade onset times, seconds.
+    pub disk_degrade_onset_s: (f64, f64),
+    /// Hadoop-0.20-style speculative execution of straggling map tasks.
+    pub speculation: bool,
+}
+
+impl Default for InjectionPlan {
+    fn default() -> Self {
+        InjectionPlan {
+            crashes: Vec::new(),
+            mtbf_s: None,
+            max_crashes: 2,
+            crash_horizon_s: 600.0,
+            straggler_frac: 0.0,
+            straggler_slowdown: 0.4,
+            straggler_onset_s: (5.0, 50.0),
+            disk_degrade_frac: 0.0,
+            disk_degrade_factor: 0.3,
+            disk_degrade_onset_s: (5.0, 50.0),
+            speculation: false,
+        }
+    }
+}
+
+impl InjectionPlan {
+    /// The identity plan: injects nothing.
+    pub fn empty() -> InjectionPlan {
+        InjectionPlan::default()
+    }
+
+    /// True when the plan generates no fault events at all.
+    pub fn is_empty(&self) -> bool {
+        self.crashes.is_empty()
+            && self.mtbf_s.is_none()
+            && self.straggler_frac <= 0.0
+            && self.disk_degrade_frac <= 0.0
+    }
+
+    /// Should this plan be installed at all? Speculation counts:
+    /// Hadoop hedges naturally slow maps on healthy clusters too, so
+    /// `speculation: true` with no fault events is still a distinct,
+    /// meaningful scenario (the scheduler's poll runs). Only an inert
+    /// plan (`!active()`) preserves the byte-identity invariant.
+    pub fn active(&self) -> bool {
+        !self.is_empty() || self.speculation
+    }
+}
+
+/// One concrete scheduled fault.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// DataNode/TaskTracker process death (the node never returns).
+    Crash,
+    /// CPU slowdown to `factor` of nominal capacity.
+    Straggle { factor: f64 },
+    /// Data-disk throughput drop to `factor` of nominal.
+    DiskDegrade { factor: f64 },
+}
+
+/// A timestamped fault on one node.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub at: f64,
+    pub node: usize,
+    pub kind: FaultKind,
+}
+
+/// An expanded, sorted fault schedule plus the speculation switch.
+#[derive(Debug, Clone, Default)]
+pub struct FaultSchedule {
+    pub events: Vec<FaultEvent>,
+    pub speculation: bool,
+}
+
+impl FaultSchedule {
+    /// Expand `plan` for a cluster of `nodes` total nodes (node 0 is the
+    /// master and never faults). All randomness comes from `stream_seed`
+    /// — use [`fault_stream_seed`] to derive it from a scenario's stable
+    /// id so sweep results do not depend on scenario insertion order.
+    pub fn generate(plan: &InjectionPlan, stream_seed: u64, nodes: usize) -> FaultSchedule {
+        let mut events = Vec::new();
+        if plan.is_empty() || nodes < 2 {
+            return FaultSchedule { events, speculation: plan.speculation };
+        }
+        let mut rng = Rng::new(stream_seed);
+        let slaves: Vec<usize> = (1..nodes).collect();
+
+        // Fixed crashes, verbatim (clamped to slave nodes).
+        for c in &plan.crashes {
+            if c.node >= 1 && c.node < nodes {
+                events.push(FaultEvent { at: c.at.max(0.0), node: c.node, kind: FaultKind::Crash });
+            }
+        }
+
+        // MTBF-sampled crashes: one exponential draw per slave, in node
+        // order (fixed draw order keeps the stream deterministic), then
+        // keep the earliest `max_crashes` inside the horizon. The budget
+        // counts only the fixed entries that survived validation, not
+        // dropped ones (master / out-of-range nodes).
+        if let Some(mtbf) = plan.mtbf_s {
+            if mtbf > 0.0 {
+                let mut cand: Vec<(f64, usize)> = Vec::new();
+                for &n in &slaves {
+                    let t = rng.exp(mtbf);
+                    if t < plan.crash_horizon_s {
+                        cand.push((t, n));
+                    }
+                }
+                // Nodes already crash-scheduled by fixed entries must
+                // not consume budget slots (a dropped duplicate would
+                // silently under-inject).
+                cand.retain(|&(_, n)| {
+                    !events.iter().any(|e| e.node == n && e.kind == FaultKind::Crash)
+                });
+                cand.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+                let fixed = events.iter().filter(|e| e.kind == FaultKind::Crash).count();
+                let budget = plan.max_crashes.saturating_sub(fixed);
+                for &(t, n) in cand.iter().take(budget) {
+                    events.push(FaultEvent { at: t, node: n, kind: FaultKind::Crash });
+                }
+            }
+        }
+
+        // Stragglers: shuffle the slave list, slow the first k.
+        if plan.straggler_frac > 0.0 {
+            let k = ((plan.straggler_frac * slaves.len() as f64).round() as usize)
+                .clamp(1, slaves.len());
+            let mut pool = slaves.clone();
+            rng.shuffle(&mut pool);
+            let (lo, hi) = plan.straggler_onset_s;
+            for &n in pool.iter().take(k) {
+                let at = rng.range(lo, hi.max(lo + 1e-9));
+                events.push(FaultEvent {
+                    at,
+                    node: n,
+                    kind: FaultKind::Straggle { factor: plan.straggler_slowdown },
+                });
+            }
+        }
+
+        // Disk degrades: same shape as stragglers, independent draw.
+        if plan.disk_degrade_frac > 0.0 {
+            let k = ((plan.disk_degrade_frac * slaves.len() as f64).round() as usize)
+                .clamp(1, slaves.len());
+            let mut pool = slaves.clone();
+            rng.shuffle(&mut pool);
+            let (lo, hi) = plan.disk_degrade_onset_s;
+            for &n in pool.iter().take(k) {
+                let at = rng.range(lo, hi.max(lo + 1e-9));
+                events.push(FaultEvent {
+                    at,
+                    node: n,
+                    kind: FaultKind::DiskDegrade { factor: plan.disk_degrade_factor },
+                });
+            }
+        }
+
+        // Deterministic order: by time, then node, then kind rank.
+        events.sort_by(|a, b| {
+            a.at.total_cmp(&b.at).then(a.node.cmp(&b.node)).then(kind_rank(a.kind).cmp(&kind_rank(b.kind)))
+        });
+        // Never kill the whole slave set: a dead cluster can neither
+        // place replicas nor finish a job (the engine would panic or
+        // idle forever). Keep the earliest `slaves - 1` crashes, drop
+        // the rest — fixed schedules included.
+        let crash_cap = slaves.len().saturating_sub(1);
+        let mut crashed: Vec<usize> = Vec::new();
+        events.retain(|e| {
+            if e.kind != FaultKind::Crash {
+                return true;
+            }
+            if crashed.len() < crash_cap && !crashed.contains(&e.node) {
+                crashed.push(e.node);
+                true
+            } else {
+                false
+            }
+        });
+        FaultSchedule { events, speculation: plan.speculation }
+    }
+}
+
+fn kind_rank(k: FaultKind) -> u8 {
+    match k {
+        FaultKind::Crash => 0,
+        FaultKind::Straggle { .. } => 1,
+        FaultKind::DiskDegrade { .. } => 2,
+    }
+}
+
+/// Derive the fault-event RNG stream seed from a scenario's **stable id**
+/// (never from insertion order): the same scenario gets the same faults
+/// under any `--threads` value and any grid reshape.
+pub fn fault_stream_seed(scenario_seed: u64, scenario_id: &str) -> u64 {
+    crate::sweep::grid::derive_seed(scenario_seed ^ 0xFA17_FA17_FA17_FA17, scenario_id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_generates_nothing() {
+        let p = InjectionPlan::empty();
+        assert!(p.is_empty());
+        let s = FaultSchedule::generate(&p, 7, 9);
+        assert!(s.events.is_empty());
+        assert!(!s.speculation);
+    }
+
+    #[test]
+    fn fixed_crashes_pass_through() {
+        let p = InjectionPlan {
+            crashes: vec![CrashSpec { node: 3, at: 12.0 }, CrashSpec { node: 0, at: 1.0 }],
+            ..InjectionPlan::empty()
+        };
+        assert!(!p.is_empty());
+        let s = FaultSchedule::generate(&p, 7, 9);
+        // The master entry is dropped; the slave crash survives.
+        assert_eq!(s.events.len(), 1);
+        assert_eq!(s.events[0].node, 3);
+        assert_eq!(s.events[0].kind, FaultKind::Crash);
+    }
+
+    #[test]
+    fn mtbf_sampling_is_deterministic_and_capped() {
+        let p = InjectionPlan {
+            mtbf_s: Some(100.0),
+            max_crashes: 2,
+            crash_horizon_s: 1e9,
+            ..InjectionPlan::empty()
+        };
+        let a = FaultSchedule::generate(&p, 42, 9);
+        let b = FaultSchedule::generate(&p, 42, 9);
+        assert_eq!(a.events, b.events);
+        assert!(a.events.len() <= 2);
+        assert!(!a.events.is_empty());
+        for w in a.events.windows(2) {
+            assert!(w[0].at <= w[1].at, "events must be time-sorted");
+        }
+        // A different stream seed moves the schedule.
+        let c = FaultSchedule::generate(&p, 43, 9);
+        assert_ne!(a.events, c.events);
+    }
+
+    #[test]
+    fn stragglers_sampled_from_slaves_only() {
+        let p = InjectionPlan { straggler_frac: 0.5, ..InjectionPlan::empty() };
+        let s = FaultSchedule::generate(&p, 5, 9);
+        assert_eq!(s.events.len(), 4); // round(0.5 * 8)
+        for e in &s.events {
+            assert!(e.node >= 1 && e.node < 9);
+            assert!(matches!(e.kind, FaultKind::Straggle { .. }));
+            assert!(e.at >= 5.0 && e.at < 50.0);
+        }
+        // All distinct nodes.
+        let mut nodes: Vec<usize> = s.events.iter().map(|e| e.node).collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        assert_eq!(nodes.len(), 4);
+    }
+
+    #[test]
+    fn fault_stream_seed_is_a_pure_function_of_the_id() {
+        let a = fault_stream_seed(1, "amdahl-n9-c4-direct-nolzo-search-mtbf600");
+        let b = fault_stream_seed(1, "amdahl-n9-c4-direct-nolzo-search-mtbf600");
+        let c = fault_stream_seed(1, "amdahl-n9-c2-direct-nolzo-search-mtbf600");
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(fault_stream_seed(2, "x"), fault_stream_seed(1, "x"));
+    }
+}

@@ -1,0 +1,242 @@
+//! Crash orchestration and NameNode-driven block re-replication.
+//!
+//! A crash is handled in four strictly ordered steps, all inside one
+//! engine batch (a single simulated instant, one rate solve):
+//!
+//! 1. mark the node dead (fault state + NameNode blacklist), so every
+//!    subsequent placement / replica pick avoids it;
+//! 2. run the registered protocol failover handlers (in-flight HDFS
+//!    writes rebuild their pipeline over the survivors, reads re-point
+//!    at a surviving replica, the job scheduler blacklists the
+//!    TaskTracker and re-queues its work);
+//! 3. cancel every remaining flow touching the dead node's resources —
+//!    the kill-switch for work no handler claimed (tasks running *on*
+//!    the node, shuffle fetches served by it);
+//! 4. start re-replication transfers for every block that lost a
+//!    replica, sourced from the first surviving copy (deterministic) to
+//!    a live non-holder target.
+//!
+//! Recovery transfers carry `recovery:*` usage classes so the energy
+//! layer can attribute their joules separately
+//! ([`crate::energy::EnergyReport::recovery_joules`]).
+//!
+//! Simplification: a transfer whose source or target dies mid-copy is
+//! cancelled by that crash's kill-switch; the next scan retries from
+//! the survivors (the one leaked disk-stream count on the surviving
+//! endpoint only matters for the HDD seek model and only after a
+//! double crash).
+
+use crate::cluster::NodeId;
+use crate::hdfs::WorldHandle;
+use crate::sim::{Engine, FlowSpec};
+
+use super::dispatch_crash;
+
+/// Process a node-crash fault event end to end. Idempotent: a second
+/// crash of the same node is a no-op.
+pub fn handle_crash(engine: &mut Engine, world: &WorldHandle, node: NodeId) {
+    {
+        let mut w = world.borrow_mut();
+        if !w.faults.set_down(node) {
+            return;
+        }
+        w.faults.stats.crashes += 1;
+        w.namenode.mark_dead(node);
+    }
+    let world2 = world.clone();
+    engine.batch(move |engine| {
+        dispatch_crash(engine, &world2, node);
+        let resources = {
+            let w = world2.borrow();
+            w.cluster.node_resources(node)
+        };
+        for r in resources {
+            engine.cancel_flows_on(r);
+        }
+        start_rereplication(engine, &world2, node);
+    });
+}
+
+/// Process a straggler fault event: the node's CPU drops to `factor`
+/// of nominal capacity (dead nodes are skipped).
+pub fn handle_straggle(engine: &mut Engine, world: &WorldHandle, node: NodeId, factor: f64) {
+    let cpu = {
+        let mut w = world.borrow_mut();
+        if !w.faults.is_up(node) {
+            return;
+        }
+        w.faults.stats.stragglers += 1;
+        w.cluster.node(node).cpu
+    };
+    let cap = engine.resource(cpu).capacity;
+    engine.set_capacity(cpu, cap * factor.clamp(0.01, 1.0));
+}
+
+/// Process a disk-degrade fault event (dead nodes are skipped).
+pub fn handle_disk_degrade(engine: &mut Engine, world: &WorldHandle, node: NodeId, factor: f64) {
+    let mut w = world.borrow_mut();
+    if !w.faults.is_up(node) {
+        return;
+    }
+    w.faults.stats.disk_degrades += 1;
+    let f = factor.clamp(0.01, 1.0);
+    w.cluster.set_disk_degrade(engine, node, f);
+}
+
+/// Scan the namespace for blocks that lost a replica on `dead` and
+/// start one transfer per recoverable block; blocks whose last replica
+/// died are counted lost.
+fn start_rereplication(engine: &mut Engine, world: &WorldHandle, dead: NodeId) {
+    let tasks = {
+        let mut w = world.borrow_mut();
+        w.namenode.purge_node(dead)
+    };
+    for t in &tasks {
+        if let Some(target) = pick_target(engine, world, t.block_id, &t.holders) {
+            let file = t.file.clone();
+            let block_idx = t.block_idx;
+            start_transfer(engine, world, t.source, target, t.bytes, move |_engine, w| {
+                // Commit only if the target survived the copy; a dead
+                // target is retried by the next crash's scan.
+                if w.faults.is_up(target) {
+                    w.namenode.add_replica(&file, block_idx, target);
+                    w.faults.stats.rereplications_done += 1;
+                }
+            });
+        }
+        // else: no live non-holder left (tiny cluster) — the block
+        // stays under-replicated.
+    }
+    let mut w = world.borrow_mut();
+    let lost = w
+        .namenode
+        .files()
+        .flat_map(|(_, f)| f.blocks.iter())
+        .filter(|b| b.replicas.is_empty())
+        .count();
+    if lost > w.faults.stats.blocks_lost {
+        w.faults.stats.blocks_lost = lost;
+    }
+}
+
+/// Deterministically choose a live DataNode that does not already hold
+/// the block: shuffle the candidates on a block-id-keyed RNG stream.
+fn pick_target(
+    engine: &mut Engine,
+    world: &WorldHandle,
+    block_id: u64,
+    holders: &[NodeId],
+) -> Option<NodeId> {
+    let mut cands: Vec<NodeId> = {
+        let w = world.borrow();
+        w.namenode
+            .live_datanodes()
+            .into_iter()
+            .filter(|n| !holders.contains(n))
+            .collect()
+    };
+    if cands.is_empty() {
+        return None;
+    }
+    let mut rng = engine.rng.fork(0x4EC0 ^ block_id);
+    rng.shuffle(&mut cands);
+    cands.pop()
+}
+
+/// Restore a freshly committed block to the replication factor after a
+/// mid-block pipeline failover shrank its pipeline (called by the HDFS
+/// client right after the commit). Like the crash-scan path, the new
+/// replica is committed only when its transfer completes with the
+/// target still alive — a copy cut short by a later crash must not
+/// leave a phantom replica in the metadata.
+pub fn top_up_block(
+    engine: &mut Engine,
+    world: &WorldHandle,
+    file: &str,
+    block_idx: usize,
+    replication: usize,
+) {
+    // Targets chosen in this call, so repeated shortfalls pick distinct
+    // nodes even though nothing is committed until the copies land.
+    let mut planned: Vec<NodeId> = Vec::new();
+    loop {
+        let task = {
+            let w = world.borrow();
+            let Some(meta) = w.namenode.get_file(file) else { return };
+            let Some(b) = meta.blocks.get(block_idx) else { return };
+            let live = w.namenode.live_datanodes().len();
+            if b.replicas.is_empty()
+                || b.replicas.len() + planned.len() >= replication.min(live)
+            {
+                return;
+            }
+            (b.id, b.stored_size, b.replicas[0], b.replicas.clone())
+        };
+        let (block_id, bytes, source, mut holders) = task;
+        holders.extend_from_slice(&planned);
+        let Some(target) = pick_target(engine, world, block_id, &holders) else { return };
+        planned.push(target);
+        let file2 = file.to_string();
+        start_transfer(engine, world, source, target, bytes, move |_engine, w| {
+            if w.faults.is_up(target) {
+                w.namenode.add_replica(&file2, block_idx, target);
+                w.faults.stats.rereplications_done += 1;
+            }
+        });
+    }
+}
+
+/// Stream `bytes` of one block `source` → `target` (the NameNode repair
+/// path: DataNode-to-DataNode, no client in the loop) and run `commit`
+/// on completion with the world borrowed mutably.
+fn start_transfer(
+    engine: &mut Engine,
+    world: &WorldHandle,
+    source: NodeId,
+    target: NodeId,
+    bytes: f64,
+    commit: impl FnOnce(&mut Engine, &mut crate::hdfs::World) + 'static,
+) {
+    let bytes = bytes.max(1.0);
+    let spec = {
+        let mut w = world.borrow_mut();
+        w.faults.stats.rereplications_started += 1;
+        w.faults.stats.recovery_bytes += bytes;
+        w.cluster.disk_stream_start(engine, source, true);
+        w.cluster.disk_stream_start(engine, target, false);
+        let cluster = &w.cluster;
+        let s = cluster.node(source);
+        let d = cluster.node(target);
+        let scosts = s.spec.cpu.costs.clone();
+        let dcosts = d.spec.cpu.costs.clone();
+        let c_xfer = engine.class("recovery:xfer");
+        let c_send = engine.class("recovery:net-send");
+        let c_recv = engine.class("recovery:net-recv");
+        let c_write = engine.class("recovery:write-user");
+        // Source: disk read + stream stack + socket send. Target: socket
+        // receive + checksum verify + buffered write. One xceiver thread
+        // per side.
+        let src_cost = scosts.buffered_read + scosts.hadoop_stream + scosts.net_send_remote;
+        let dst_cost = dcosts.net_recv_remote
+            + dcosts.crc32
+            + dcosts.hadoop_stream
+            + dcosts.buffered_write_user;
+        FlowSpec::with_capacity(bytes, format!("recovery:blk n{}->n{}", source.0, target.0), 8)
+            .demand(s.disk, 1.0 / s.spec.data_disk.read_bps, c_xfer)
+            .demand(s.cpu, src_cost, c_send)
+            .demand(s.nic_tx, 1.0, c_send)
+            .demand(d.nic_rx, 1.0, c_recv)
+            .demand(d.cpu, dst_cost, c_recv)
+            .demand(d.disk, 1.0 / d.spec.data_disk.write_bps, c_write)
+            .demand(d.membus, 1.0, c_xfer)
+            .cap(1.0 / src_cost)
+            .cap(1.0 / dst_cost)
+    };
+    let world2 = world.clone();
+    engine.start_flow(spec, move |engine| {
+        let mut w = world2.borrow_mut();
+        w.cluster.disk_stream_end(engine, source, true);
+        w.cluster.disk_stream_end(engine, target, false);
+        commit(engine, &mut w);
+    });
+}

@@ -4,6 +4,28 @@
 //! DFSClient (one pipeline at a time per writer). Reads stream block by
 //! block from the chosen replica, preferring the client's own copy
 //! (MapReduce locality, §3.3).
+//!
+//! # Fault behaviour
+//!
+//! When fault injection is armed ([`crate::faults`]), every in-flight
+//! file operation registers a crash guard with the world's
+//! [`crate::faults::FaultState`]:
+//!
+//! * **Write-pipeline failover mid-block** — if a DataNode in the
+//!   current pipeline dies, the flow is cancelled at the instant of the
+//!   crash, progress is kept, and a new pipeline over the *surviving*
+//!   replicas streams the remaining bytes (stock v0.20 recovery). The
+//!   committed block is then topped back up to the replication factor
+//!   by an immediate re-replication transfer.
+//! * **Read failover** — if the serving replica dies mid-block, the
+//!   remaining bytes re-stream from a surviving replica. A block with
+//!   no surviving replica is counted lost and skipped.
+//! * A dead *client* abandons the whole operation (the crash
+//!   kill-switch already cancelled its flows).
+//!
+//! With no faults armed, none of this machinery is touched and the
+//! behaviour (including every RNG draw) is identical to the fault-free
+//! implementation.
 
 use std::cell::RefCell;
 use std::rc::Rc;
@@ -13,7 +35,7 @@ use super::pipeline::{account_block_write, write_block_flow};
 use super::WorldHandle;
 use crate::cluster::NodeId;
 use crate::conf::HadoopConf;
-use crate::sim::{Engine, FlowSpec, SerialStage};
+use crate::sim::{Engine, FlowId, FlowSpec, SerialStage};
 
 /// Options for [`read_file`].
 #[derive(Debug, Clone, Default)]
@@ -32,6 +54,14 @@ struct WriteCtx {
     conf: HadoopConf,
     task: String,
     on_done: Option<Box<dyn FnOnce(&mut Engine)>>,
+    /// In-flight pipeline state (for the mid-block failover guard).
+    cur_flow: Option<FlowId>,
+    cur_replicas: Vec<NodeId>,
+    cur_size: f64,
+    /// False once the chain finished or was abandoned.
+    active: bool,
+    /// The crash guard is registered at most once per file write.
+    registered: bool,
 }
 
 /// Write `bytes` to HDFS as `name` from `client`, then call `on_done`.
@@ -67,73 +97,194 @@ pub fn write_file(
         conf: conf.clone(),
         task: task.to_string(),
         on_done: Some(Box::new(on_done)),
+        cur_flow: None,
+        cur_replicas: Vec::new(),
+        cur_size: 0.0,
+        active: true,
+        registered: false,
     }));
     write_next(engine, ctx);
 }
 
 fn write_next(engine: &mut Engine, ctx: Rc<RefCell<WriteCtx>>) {
-    let (spec, replicas, size) = {
-        let c = ctx.borrow();
+    {
+        let mut c = ctx.borrow_mut();
         if c.idx == c.sizes.len() {
+            c.active = false;
+            let cb = c.on_done.take();
             drop(c);
-            let cb = ctx.borrow_mut().on_done.take();
             if let Some(cb) = cb {
                 cb(engine);
             }
             return;
         }
-        let size = c.sizes[c.idx];
-        let mut w = c.world.borrow_mut();
-        let mut rng = engine.rng.fork(c.idx as u64);
-        let replicas = w.namenode.place_replicas(&mut rng, c.client, c.conf.dfs_replication);
-        account_block_write(&mut w.counters, c.client, &replicas, size, &c.conf, &c.task);
-        let spec = write_block_flow(engine, &w.cluster, c.client, &replicas, size, &c.conf, &c.task);
-        (spec, replicas, size)
+    }
+    let (world, client, size, conf, task, idx) = {
+        let c = ctx.borrow();
+        (c.world.clone(), c.client, c.sizes[c.idx], c.conf.clone(), c.task.clone(), c.idx)
     };
+    let mut rng = engine.rng.fork(idx as u64);
+    let spec = {
+        let mut w = world.borrow_mut();
+        let replicas = w.namenode.place_replicas(&mut rng, client, conf.dfs_replication);
+        account_block_write(&mut w.counters, client, &replicas, size, &conf, &task);
+        let spec = write_block_flow(engine, &w.cluster, client, &replicas, size, &conf, &task);
+        let mut c = ctx.borrow_mut();
+        c.cur_replicas = replicas;
+        c.cur_size = size;
+        spec
+    };
+    // Arm the mid-block failover guard (once per file write). The guard
+    // holds only a Weak handle: once the chain completes and drops its
+    // context, the guard self-deregisters at the next crash instead of
+    // keeping the World alive through an Rc cycle.
+    let faults_on = world.borrow().faults.active;
+    if faults_on && !ctx.borrow().registered {
+        ctx.borrow_mut().registered = true;
+        let hctx = Rc::downgrade(&ctx);
+        world.borrow_mut().faults.register(Box::new(move |engine, dead| {
+            match hctx.upgrade() {
+                Some(c) => write_failover(engine, &c, dead),
+                None => false,
+            }
+        }));
+    }
     // Register disk streams on every replica for the HDD seek model and
     // start the pipeline in one solve (r capacity adjustments + the new
     // flow would otherwise each re-solve the component).
     let ctx2 = ctx.clone();
     engine.batch(move |engine| {
+        let replicas = ctx2.borrow().cur_replicas.clone();
         {
-            let c = ctx.borrow();
-            let mut w = c.world.borrow_mut();
+            let mut w = world.borrow_mut();
             for &r in &replicas {
                 w.cluster.disk_stream_start(engine, r, false);
             }
         }
-        engine.start_flow(spec, move |engine| {
-            engine.batch(|engine| {
-                {
-                    let c = ctx2.borrow();
-                    let mut w = c.world.borrow_mut();
-                    for &r in &replicas {
-                        w.cluster.disk_stream_end(engine, r, false);
-                    }
-                    let lambda = if c.conf.lzo_output { c.conf.lzo_ratio } else { 1.0 };
-                    let id = w.namenode.alloc_block();
-                    let name = c.name.clone();
-                    w.namenode.commit_block(
-                        &name,
-                        BlockMeta { id, size, stored_size: size * lambda, replicas: replicas.clone() },
-                    );
-                }
-                ctx2.borrow_mut().idx += 1;
-                write_next(engine, ctx2.clone());
-            });
-        });
+        let ctx3 = ctx2.clone();
+        let fid = engine.start_flow(spec, move |engine| write_block_done(engine, ctx3));
+        ctx2.borrow_mut().cur_flow = Some(fid);
     });
 }
 
-/// Build the read flow for one block: the DataNode's serialized
-/// disk-read-then-socket-send (§3.3) plus client-side checksum
-/// verification and optional LZO decompression.
+/// Completion of one block pipeline (original or rebuilt after a
+/// failover): settle stream accounting, commit the block with whatever
+/// replica set actually finished it, top the replication factor back up
+/// if a failover shrank the pipeline, and move to the next block.
+fn write_block_done(engine: &mut Engine, ctx: Rc<RefCell<WriteCtx>>) {
+    engine.batch(move |engine| {
+        let (world, replicas, size, name, conf) = {
+            let c = ctx.borrow();
+            (c.world.clone(), c.cur_replicas.clone(), c.cur_size, c.name.clone(), c.conf.clone())
+        };
+        let lambda = if conf.lzo_output { conf.lzo_ratio } else { 1.0 };
+        let (block_idx, under_replicated) = {
+            let mut w = world.borrow_mut();
+            for &r in &replicas {
+                w.cluster.disk_stream_end(engine, r, false);
+            }
+            let id = w.namenode.alloc_block();
+            w.namenode.commit_block(
+                &name,
+                BlockMeta { id, size, stored_size: size * lambda, replicas: replicas.clone() },
+            );
+            let bidx = w.namenode.get_file(&name).map(|f| f.blocks.len() - 1).unwrap_or(0);
+            (bidx, w.faults.active && replicas.len() < conf.dfs_replication)
+        };
+        if under_replicated {
+            crate::faults::recovery::top_up_block(
+                engine,
+                &world,
+                &name,
+                block_idx,
+                conf.dfs_replication,
+            );
+        }
+        {
+            let mut c = ctx.borrow_mut();
+            c.idx += 1;
+            c.cur_flow = None;
+        }
+        write_next(engine, ctx.clone());
+    });
+}
+
+/// Crash guard for an in-flight file write. Returns false to deregister.
+fn write_failover(engine: &mut Engine, ctx: &Rc<RefCell<WriteCtx>>, dead: NodeId) -> bool {
+    let (world, client, active, replicas, flow) = {
+        let c = ctx.borrow();
+        (c.world.clone(), c.client, c.active, c.cur_replicas.clone(), c.cur_flow)
+    };
+    if !active {
+        return false;
+    }
+    if client == dead {
+        // The writer itself died: abandon the file. Its flows are torn
+        // down by the crash kill-switch; release the replica streams.
+        {
+            let mut w = world.borrow_mut();
+            for &r in &replicas {
+                w.cluster.disk_stream_end(engine, r, false);
+            }
+            w.faults.stats.writes_aborted += 1;
+        }
+        ctx.borrow_mut().active = false;
+        return false;
+    }
+    if !replicas.contains(&dead) {
+        return true; // this crash does not touch the current pipeline
+    }
+    let remaining = match flow.and_then(|f| engine.flow_remaining(f)) {
+        Some(r) => r.max(1.0),
+        None => return true, // block completed at this very instant
+    };
+    engine.cancel_flow(flow.expect("flow id present when remaining is"));
+    let survivors: Vec<NodeId> = replicas.iter().copied().filter(|&r| r != dead).collect();
+    {
+        let mut w = world.borrow_mut();
+        for &r in &replicas {
+            w.cluster.disk_stream_end(engine, r, false);
+        }
+    }
+    if survivors.is_empty() {
+        ctx.borrow_mut().active = false;
+        world.borrow_mut().faults.stats.writes_aborted += 1;
+        return false;
+    }
+    // Rebuild the pipeline over the survivors for the remaining bytes
+    // (v0.20 recovery: the in-flight block continues with fewer
+    // replicas; the commit path tops it back up afterwards).
+    let spec = {
+        let c = ctx.borrow();
+        let w = world.borrow();
+        write_block_flow(engine, &w.cluster, client, &survivors, remaining, &c.conf, &c.task)
+    };
+    {
+        let mut w = world.borrow_mut();
+        for &r in &survivors {
+            w.cluster.disk_stream_start(engine, r, false);
+        }
+        w.faults.stats.pipeline_failovers += 1;
+    }
+    ctx.borrow_mut().cur_replicas = survivors;
+    let cctx = ctx.clone();
+    let fid = engine.start_flow(spec, move |engine| write_block_done(engine, cctx));
+    ctx.borrow_mut().cur_flow = Some(fid);
+    true
+}
+
+/// Build the read flow for `bytes` logical bytes of one block: the
+/// DataNode's serialized disk-read-then-socket-send (§3.3) plus
+/// client-side checksum verification and optional LZO decompression.
+/// (`bytes` is the whole block normally; less after a mid-block
+/// failover resume.)
 fn read_block_flow(
     engine: &mut Engine,
     world: &WorldHandle,
     client: NodeId,
     src: NodeId,
     block: &BlockMeta,
+    bytes: f64,
     conf: &HadoopConf,
     task: &str,
 ) -> FlowSpec {
@@ -153,7 +304,7 @@ fn read_block_flow(
 
     let c_stream = engine.class(&format!("{task}:stream"));
     // Flow total = logical bytes; device demands scale by λ.
-    let mut f = FlowSpec::with_capacity(block.size, format!("{task}:read blk{}", block.id), 12)
+    let mut f = FlowSpec::with_capacity(bytes, format!("{task}:read blk{}", block.id), 12)
         .demand_staged(n.disk, lambda / n.spec.data_disk.read_bps, c_read, disk_stage)
         .demand(n.cpu, costs.buffered_read * lambda, c_read)
         .demand(n.cpu, costs.hadoop_stream * lambda, c_stream)
@@ -199,6 +350,11 @@ struct ReadCtx {
     opts: ReadOpts,
     task: String,
     on_done: Option<Box<dyn FnOnce(&mut Engine)>>,
+    /// In-flight block-read state (for the failover guard).
+    cur_flow: Option<FlowId>,
+    cur_src: Option<NodeId>,
+    active: bool,
+    registered: bool,
 }
 
 /// Read the whole of `name` from HDFS at `client`, then call `on_done`.
@@ -259,65 +415,186 @@ fn read_blocks_opts(
         opts,
         task: task.to_string(),
         on_done: Some(Box::new(on_done)),
+        cur_flow: None,
+        cur_src: None,
+        active: true,
+        registered: false,
     }));
     read_next(engine, ctx);
 }
 
 fn read_next(engine: &mut Engine, ctx: Rc<RefCell<ReadCtx>>) {
-    let (spec, src) = {
-        let c = ctx.borrow();
-        if c.idx == c.blocks.len() {
-            drop(c);
-            let cb = ctx.borrow_mut().on_done.take();
-            if let Some(cb) = cb {
-                cb(engine);
+    loop {
+        {
+            let mut c = ctx.borrow_mut();
+            if c.idx == c.blocks.len() {
+                c.active = false;
+                let cb = c.on_done.take();
+                drop(c);
+                if let Some(cb) = cb {
+                    cb(engine);
+                }
+                return;
             }
-            return;
         }
-        let block = &c.blocks[c.idx];
-        let mut rng = engine.rng.fork(0xBEEF ^ c.idx as u64);
+        let (world, client, idx, force_remote) = {
+            let c = ctx.borrow();
+            (c.world.clone(), c.client, c.idx, c.opts.force_remote)
+        };
+        let block = ctx.borrow().blocks[idx].clone();
+        let mut rng = engine.rng.fork(0xBEEF ^ idx as u64);
         let src = {
-            let w = c.world.borrow();
-            if c.opts.force_remote {
-                // Pick any replica that is not the client.
-                let remote: Vec<_> =
-                    block.replicas.iter().copied().filter(|&r| r != c.client).collect();
+            let w = world.borrow();
+            if force_remote {
+                // Pick any live replica that is not the client.
+                let remote: Vec<NodeId> = block
+                    .replicas
+                    .iter()
+                    .copied()
+                    .filter(|&r| r != client && !w.namenode.is_dead(r))
+                    .collect();
                 if remote.is_empty() {
-                    block.replicas[0]
+                    w.namenode.pick_replica(&mut rng, &block, client)
                 } else {
-                    remote[rng.below(remote.len() as u64) as usize]
+                    Some(remote[rng.below(remote.len() as u64) as usize])
                 }
             } else {
-                w.namenode.pick_replica(&mut rng, block, c.client)
+                w.namenode.pick_replica(&mut rng, &block, client)
             }
         };
+        let Some(src) = src else {
+            // Every replica is gone: the block is lost. Count the
+            // failed read, skip it, and keep streaming the rest.
+            {
+                let mut w = world.borrow_mut();
+                w.faults.stats.lost_block_reads += 1;
+            }
+            ctx.borrow_mut().idx += 1;
+            continue;
+        };
         {
-            let mut w = c.world.borrow_mut();
-            w.counters.add_disk(&c.task, block.stored_size);
-            w.counters.add_net(&c.task, 2.0 * block.stored_size);
+            let mut w = world.borrow_mut();
+            w.counters.add_disk(&ctx.borrow().task, block.stored_size);
+            w.counters.add_net(&ctx.borrow().task, 2.0 * block.stored_size);
         }
-        let spec = read_block_flow(engine, &c.world, c.client, src, block, &c.conf, &c.task);
-        (spec, src)
-    };
-    let ctx2 = ctx.clone();
-    engine.batch(move |engine| {
-        {
+        let spec = {
             let c = ctx.borrow();
-            let mut w = c.world.borrow_mut();
-            w.cluster.disk_stream_start(engine, src, true);
-        }
-        engine.start_flow(spec, move |engine| {
-            engine.batch(|engine| {
-                {
-                    let c = ctx2.borrow();
-                    let mut w = c.world.borrow_mut();
-                    w.cluster.disk_stream_end(engine, src, true);
+            read_block_flow(engine, &world, client, src, &block, block.size, &c.conf, &c.task)
+        };
+        // Arm the read failover guard (once per read chain; Weak so a
+        // finished chain is collectable — see the write guard).
+        let faults_on = world.borrow().faults.active;
+        if faults_on && !ctx.borrow().registered {
+            ctx.borrow_mut().registered = true;
+            let hctx = Rc::downgrade(&ctx);
+            world.borrow_mut().faults.register(Box::new(move |engine, dead| {
+                match hctx.upgrade() {
+                    Some(c) => read_failover(engine, &c, dead),
+                    None => false,
                 }
-                ctx2.borrow_mut().idx += 1;
-                read_next(engine, ctx2.clone());
-            });
+            }));
+        }
+        let ctx2 = ctx.clone();
+        engine.batch(move |engine| {
+            {
+                let mut w = world.borrow_mut();
+                w.cluster.disk_stream_start(engine, src, true);
+            }
+            let ctx3 = ctx2.clone();
+            let fid = engine.start_flow(spec, move |engine| read_block_done(engine, ctx3));
+            let mut c = ctx2.borrow_mut();
+            c.cur_flow = Some(fid);
+            c.cur_src = Some(src);
         });
+        return;
+    }
+}
+
+fn read_block_done(engine: &mut Engine, ctx: Rc<RefCell<ReadCtx>>) {
+    engine.batch(move |engine| {
+        let (world, src) = {
+            let c = ctx.borrow();
+            (c.world.clone(), c.cur_src)
+        };
+        if let Some(src) = src {
+            let mut w = world.borrow_mut();
+            w.cluster.disk_stream_end(engine, src, true);
+        }
+        {
+            let mut c = ctx.borrow_mut();
+            c.idx += 1;
+            c.cur_flow = None;
+            c.cur_src = None;
+        }
+        read_next(engine, ctx.clone());
     });
+}
+
+/// Crash guard for an in-flight read chain. Returns false to deregister.
+fn read_failover(engine: &mut Engine, ctx: &Rc<RefCell<ReadCtx>>, dead: NodeId) -> bool {
+    let (world, client, active, src, flow, idx) = {
+        let c = ctx.borrow();
+        (c.world.clone(), c.client, c.active, c.cur_src, c.cur_flow, c.idx)
+    };
+    if !active {
+        return false;
+    }
+    if client == dead {
+        // The reader died: release the source stream and stop.
+        if let Some(src) = src {
+            let mut w = world.borrow_mut();
+            w.cluster.disk_stream_end(engine, src, true);
+        }
+        ctx.borrow_mut().active = false;
+        return false;
+    }
+    if src != Some(dead) {
+        return true;
+    }
+    let remaining = match flow.and_then(|f| engine.flow_remaining(f)) {
+        Some(r) => r.max(1.0),
+        None => return true, // block completed at this very instant
+    };
+    engine.cancel_flow(flow.expect("flow id present when remaining is"));
+    {
+        let mut w = world.borrow_mut();
+        w.cluster.disk_stream_end(engine, dead, true);
+    }
+    let block = ctx.borrow().blocks[idx].clone();
+    let mut rng = engine.rng.fork(0xFA11 ^ idx as u64);
+    let new_src = { world.borrow().namenode.pick_replica(&mut rng, &block, client) };
+    let Some(new_src) = new_src else {
+        // Remaining replicas all dead: the block is lost mid-read.
+        {
+            let mut w = world.borrow_mut();
+            w.faults.stats.lost_block_reads += 1;
+        }
+        {
+            let mut c = ctx.borrow_mut();
+            c.idx += 1;
+            c.cur_flow = None;
+            c.cur_src = None;
+        }
+        read_next(engine, ctx.clone());
+        return true;
+    };
+    let spec = {
+        let c = ctx.borrow();
+        read_block_flow(engine, &world, client, new_src, &block, remaining, &c.conf, &c.task)
+    };
+    {
+        let mut w = world.borrow_mut();
+        w.cluster.disk_stream_start(engine, new_src, true);
+        w.faults.stats.read_failovers += 1;
+    }
+    let cctx = ctx.clone();
+    let fid = engine.start_flow(spec, move |engine| read_block_done(engine, cctx));
+    {
+        let mut c = ctx.borrow_mut();
+        c.cur_flow = Some(fid);
+        c.cur_src = Some(new_src);
+    }
+    true
 }
 
 #[cfg(test)]

@@ -27,19 +27,22 @@ pub mod pipeline;
 pub mod testdfsio;
 
 pub use client::{read_file, write_file, ReadOpts};
-pub use namenode::{BlockMeta, FileMeta, NameNode};
+pub use namenode::{BlockMeta, FileMeta, NameNode, ReplTask};
 
 use crate::amdahl::Counters;
 use crate::cluster::Cluster;
+use crate::faults::FaultState;
 use crate::sim::engine::Shared;
 
 /// Shared simulation world: the cluster plus HDFS metadata plus the I/O
-/// accounting the Amdahl analysis reads. Engine callbacks capture a
-/// `Shared<World>`.
+/// accounting the Amdahl analysis reads, plus the fault-injection state
+/// (inert unless an [`crate::faults::InjectionPlan`] was installed).
+/// Engine callbacks capture a `Shared<World>`.
 pub struct World {
     pub cluster: Cluster,
     pub namenode: NameNode,
     pub counters: Counters,
+    pub faults: FaultState,
 }
 
 /// Handle type captured by engine callbacks.
@@ -51,6 +54,7 @@ impl World {
             cluster,
             namenode: NameNode::new(),
             counters: Counters::new(),
+            faults: FaultState::new(),
         }
     }
 }

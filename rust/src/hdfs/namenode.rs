@@ -42,6 +42,25 @@ pub struct NameNode {
     next_block: u64,
     /// DataNode ids (everything but the master).
     datanodes: Vec<NodeId>,
+    /// DataNodes declared dead by fault injection. They stay in
+    /// `datanodes` (the scheduler handles TaskTracker blacklisting
+    /// itself) but are excluded from placement and replica selection.
+    dead: Vec<NodeId>,
+}
+
+/// One block that lost a replica and must be re-replicated from a
+/// surviving copy (produced by [`NameNode::purge_node`]).
+#[derive(Debug, Clone)]
+pub struct ReplTask {
+    pub file: String,
+    pub block_idx: usize,
+    pub block_id: u64,
+    /// Wire/disk bytes to move (the stored, possibly compressed size).
+    pub bytes: f64,
+    /// Source replica to copy from (first survivor, deterministic).
+    pub source: NodeId,
+    /// All surviving holders (targets must avoid these).
+    pub holders: Vec<NodeId>,
 }
 
 impl NameNode {
@@ -62,26 +81,98 @@ impl NameNode {
         self.datanodes.contains(&n)
     }
 
+    /// Is `n` a registered DataNode that has not been declared dead?
+    pub fn is_live(&self, n: NodeId) -> bool {
+        self.is_datanode(n) && !self.dead.contains(&n)
+    }
+
+    /// Has `n` been declared dead by fault injection?
+    pub fn is_dead(&self, n: NodeId) -> bool {
+        self.dead.contains(&n)
+    }
+
+    /// DataNodes currently alive, in registration order.
+    pub fn live_datanodes(&self) -> Vec<NodeId> {
+        self.datanodes.iter().copied().filter(|n| !self.dead.contains(n)).collect()
+    }
+
+    /// Declare `n` dead: exclude it from placement and replica picks.
+    pub fn mark_dead(&mut self, n: NodeId) {
+        if !self.dead.contains(&n) {
+            self.dead.push(n);
+        }
+    }
+
+    /// Remove `dead` from every block's replica list and return one
+    /// [`ReplTask`] per block that still has a surviving copy (blocks
+    /// with no survivors are unrecoverable and are just emptied —
+    /// callers count them as lost). File iteration is sorted by name so
+    /// the task list is deterministic despite the HashMap namespace.
+    pub fn purge_node(&mut self, dead: NodeId) -> Vec<ReplTask> {
+        let mut names: Vec<String> = self.files.keys().cloned().collect();
+        names.sort_unstable();
+        let mut tasks = Vec::new();
+        for name in names {
+            let meta = self.files.get_mut(&name).expect("file vanished during purge");
+            for (i, b) in meta.blocks.iter_mut().enumerate() {
+                if !b.replicas.contains(&dead) {
+                    continue;
+                }
+                b.replicas.retain(|&r| r != dead);
+                if let Some(&source) = b.replicas.first() {
+                    tasks.push(ReplTask {
+                        file: name.clone(),
+                        block_idx: i,
+                        block_id: b.id,
+                        bytes: b.stored_size,
+                        source,
+                        holders: b.replicas.clone(),
+                    });
+                }
+            }
+        }
+        tasks
+    }
+
+    /// Append a freshly re-replicated copy to a block's replica list.
+    pub fn add_replica(&mut self, file: &str, block_idx: usize, node: NodeId) {
+        if let Some(meta) = self.files.get_mut(file) {
+            if let Some(b) = meta.blocks.get_mut(block_idx) {
+                if !b.replicas.contains(&node) {
+                    b.replicas.push(node);
+                }
+            }
+        }
+    }
+
     /// Allocate a block id.
     pub fn alloc_block(&mut self) -> u64 {
         self.next_block += 1;
         self.next_block
     }
 
-    /// v0.20 placement: client-local first (if the client is a DataNode),
-    /// then distinct random DataNodes.
+    /// v0.20 placement: client-local first (if the client is a live
+    /// DataNode), then distinct random live DataNodes. Dead nodes are
+    /// never chosen; with no declared deaths this is exactly the
+    /// historical policy (same pool, same RNG draws, and no extra
+    /// allocation on the per-block hot path).
     pub fn place_replicas(&mut self, rng: &mut Rng, client: NodeId, replication: usize) -> Vec<NodeId> {
-        assert!(!self.datanodes.is_empty(), "no datanodes registered");
-        let r = replication.min(self.datanodes.len());
+        let live_len = if self.dead.is_empty() {
+            self.datanodes.len()
+        } else {
+            self.datanodes.iter().filter(|n| !self.dead.contains(n)).count()
+        };
+        assert!(live_len > 0, "no live datanodes registered");
+        let r = replication.min(live_len);
         let mut chosen: Vec<NodeId> = Vec::with_capacity(r);
-        if self.is_datanode(client) {
+        if self.is_live(client) {
             chosen.push(client);
         }
         let mut pool: Vec<NodeId> = self
             .datanodes
             .iter()
             .copied()
-            .filter(|n| !chosen.contains(n))
+            .filter(|n| !chosen.contains(n) && !self.dead.contains(n))
             .collect();
         rng.shuffle(&mut pool);
         while chosen.len() < r {
@@ -115,11 +206,29 @@ impl NameNode {
 
     /// Pick the replica to read: the client's own copy when present
     /// (MapReduce locality, §3.3), otherwise a deterministic-random one.
-    pub fn pick_replica(&self, rng: &mut Rng, block: &BlockMeta, client: NodeId) -> NodeId {
-        if block.replicas.contains(&client) {
-            client
+    /// Dead holders are skipped; returns None only when every replica is
+    /// gone (the block is lost). The no-deaths fast path is the exact
+    /// historical logic — same RNG draws, zero allocation.
+    pub fn pick_replica(&self, rng: &mut Rng, block: &BlockMeta, client: NodeId) -> Option<NodeId> {
+        if self.dead.is_empty() {
+            if block.replicas.is_empty() {
+                return None;
+            }
+            return if block.replicas.contains(&client) {
+                Some(client)
+            } else {
+                Some(block.replicas[rng.below(block.replicas.len() as u64) as usize])
+            };
+        }
+        let live: Vec<NodeId> =
+            block.replicas.iter().copied().filter(|r| !self.dead.contains(r)).collect();
+        if live.is_empty() {
+            return None;
+        }
+        if live.contains(&client) {
+            Some(client)
         } else {
-            block.replicas[rng.below(block.replicas.len() as u64) as usize]
+            Some(live[rng.below(live.len() as u64) as usize])
         }
     }
 
@@ -215,9 +324,71 @@ mod tests {
             stored_size: 1.0,
             replicas: vec![NodeId(2), NodeId(3)],
         };
-        assert_eq!(n.pick_replica(&mut rng, &b, NodeId(3)), NodeId(3));
-        let far = n.pick_replica(&mut rng, &b, NodeId(1));
+        assert_eq!(n.pick_replica(&mut rng, &b, NodeId(3)), Some(NodeId(3)));
+        let far = n.pick_replica(&mut rng, &b, NodeId(1)).unwrap();
         assert!(b.replicas.contains(&far));
+    }
+
+    #[test]
+    fn dead_nodes_excluded_from_placement_and_picks() {
+        let mut n = nn(4);
+        n.mark_dead(NodeId(2));
+        assert!(!n.is_live(NodeId(2)) && n.is_live(NodeId(1)));
+        assert_eq!(n.live_datanodes(), vec![NodeId(1), NodeId(3), NodeId(4)]);
+        let mut rng = Rng::new(9);
+        for _ in 0..50 {
+            let reps = n.place_replicas(&mut rng, NodeId(1), 3);
+            assert!(!reps.contains(&NodeId(2)), "dead node placed: {reps:?}");
+            assert_eq!(reps.len(), 3);
+        }
+        let b = BlockMeta {
+            id: 1,
+            size: 1.0,
+            stored_size: 1.0,
+            replicas: vec![NodeId(2), NodeId(3)],
+        };
+        // The client's own dead copy is skipped; only node 3 survives.
+        assert_eq!(n.pick_replica(&mut rng, &b, NodeId(2)), Some(NodeId(3)));
+        let lost = BlockMeta { id: 2, size: 1.0, stored_size: 1.0, replicas: vec![NodeId(2)] };
+        assert_eq!(n.pick_replica(&mut rng, &lost, NodeId(1)), None);
+    }
+
+    #[test]
+    fn purge_node_lists_rereplication_work() {
+        let mut n = nn(4);
+        n.put_file(
+            "f",
+            FileMeta {
+                blocks: vec![
+                    BlockMeta {
+                        id: 1,
+                        size: 10.0,
+                        stored_size: 4.0,
+                        replicas: vec![NodeId(1), NodeId(2), NodeId(3)],
+                    },
+                    BlockMeta {
+                        id: 2,
+                        size: 10.0,
+                        stored_size: 10.0,
+                        replicas: vec![NodeId(3), NodeId(4)],
+                    },
+                ],
+            },
+        );
+        n.mark_dead(NodeId(2));
+        let tasks = n.purge_node(NodeId(2));
+        assert_eq!(tasks.len(), 1);
+        assert_eq!(tasks[0].block_id, 1);
+        assert_eq!(tasks[0].source, NodeId(1));
+        assert_eq!(tasks[0].holders, vec![NodeId(1), NodeId(3)]);
+        assert!((tasks[0].bytes - 4.0).abs() < 1e-12, "stored (wire) size");
+        // The dead replica is gone from the metadata.
+        assert_eq!(n.get_file("f").unwrap().blocks[0].replicas, vec![NodeId(1), NodeId(3)]);
+        // Re-replication completion restores the factor.
+        n.add_replica("f", 0, NodeId(4));
+        assert_eq!(n.get_file("f").unwrap().blocks[0].replicas.len(), 3);
+        n.add_replica("f", 0, NodeId(4)); // idempotent
+        assert_eq!(n.get_file("f").unwrap().blocks[0].replicas.len(), 3);
     }
 
     #[test]

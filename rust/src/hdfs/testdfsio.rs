@@ -12,6 +12,7 @@ use super::{World, WorldHandle};
 use crate::cluster::{Cluster, NodeId};
 use crate::conf::{ClusterPreset, HadoopConf};
 use crate::energy::EnergyReport;
+use crate::faults::{FaultSchedule, FaultStats};
 use crate::hw::MIB;
 use crate::sim::engine::shared;
 use crate::sim::{Engine, EngineStats, Rng, SimConfig, UsageSnapshot};
@@ -40,6 +41,8 @@ pub struct DfsioRun {
     pub usage: Vec<UsageSnapshot>,
     /// Engine perf counters for the whole run (solver work, heap churn).
     pub stats: EngineStats,
+    /// What fault injection did to the run (all zeros when inactive).
+    pub faults: FaultStats,
 }
 
 fn utilization(engine: &Engine) -> Vec<(String, f64)> {
@@ -53,7 +56,7 @@ fn utilization(engine: &Engine) -> Vec<(String, f64)> {
 
 fn build_world(preset: ClusterPreset, sim: SimConfig, conf: &HadoopConf) -> (Engine, WorldHandle) {
     let mut engine = Engine::from_config(sim);
-    let spec = preset.node_spec(conf.data_disk);
+    let spec = preset.node_spec_for(conf);
     let n = preset.node_count();
     let cluster = Cluster::build(&mut engine, &spec, n);
     let mut world = World::new(cluster);
@@ -66,7 +69,13 @@ fn finish(engine: &Engine, world: &WorldHandle, result: DfsioResult) -> DfsioRun
         let w = world.borrow();
         crate::energy::measure(engine, &w.cluster, result.makespan)
     };
-    DfsioRun { result, energy, usage: engine.usage_snapshot(), stats: engine.stats() }
+    DfsioRun {
+        result,
+        energy,
+        usage: engine.usage_snapshot(),
+        stats: engine.stats(),
+        faults: world.borrow().faults.stats.clone(),
+    }
 }
 
 /// TestDFSIO write (Fig 2(a)) on the paper's nine-blade Amdahl cluster.
@@ -89,7 +98,29 @@ pub fn write_test_on(
     bytes_per_writer: f64,
     conf: &HadoopConf,
 ) -> DfsioRun {
+    write_test_faulted(
+        preset,
+        sim.into(),
+        writers_per_node,
+        bytes_per_writer,
+        conf,
+        &FaultSchedule::default(),
+    )
+}
+
+/// TestDFSIO write with a fault schedule armed before the workload
+/// starts. An empty schedule installs nothing — byte-identical to
+/// [`write_test_on`].
+pub fn write_test_faulted(
+    preset: ClusterPreset,
+    sim: impl Into<SimConfig>,
+    writers_per_node: usize,
+    bytes_per_writer: f64,
+    conf: &HadoopConf,
+    schedule: &FaultSchedule,
+) -> DfsioRun {
     let (mut engine, world) = build_world(preset, sim.into(), conf);
+    crate::faults::install(&mut engine, &world, schedule);
     let n = preset.node_count();
     let done_times = shared(Vec::<f64>::new());
     // One solve for the whole worker fan-out instead of one per writer.
@@ -181,7 +212,32 @@ pub fn read_test_on(
     conf: &HadoopConf,
     force_remote: bool,
 ) -> DfsioRun {
+    read_test_faulted(
+        preset,
+        sim.into(),
+        readers_per_node,
+        bytes_per_reader,
+        conf,
+        force_remote,
+        &FaultSchedule::default(),
+    )
+}
+
+/// TestDFSIO read with a fault schedule armed before the workload
+/// starts. An empty schedule installs nothing — byte-identical to
+/// [`read_test_on`].
+#[allow(clippy::too_many_arguments)]
+pub fn read_test_faulted(
+    preset: ClusterPreset,
+    sim: impl Into<SimConfig>,
+    readers_per_node: usize,
+    bytes_per_reader: f64,
+    conf: &HadoopConf,
+    force_remote: bool,
+    schedule: &FaultSchedule,
+) -> DfsioRun {
     let (mut engine, world) = build_world(preset, sim.into(), conf);
+    crate::faults::install(&mut engine, &world, schedule);
     let n = preset.node_count();
     let mut rng = engine.rng.fork(0xD5F10);
     for node in 1..n {

@@ -28,19 +28,32 @@
 //! * [`runtime`] — PJRT runtime loading the AOT-compiled JAX/Pallas pair
 //!   kernels from `artifacts/` (the hot compute path).
 //! * [`amdahl`] — instruction accounting → the paper's Table 4 numbers.
-//! * [`energy`] — power integration → the paper's §3.6 efficiency ratios.
-//! * [`report`] — regenerates every figure and table in the paper.
+//! * [`energy`] — power integration → the paper's §3.6 efficiency
+//!   ratios, with recovery joules attributed separately under faults.
+//! * [`faults`] — seeded fault injection & recovery: datanode crashes
+//!   with NameNode dead-node detection, block re-replication from
+//!   surviving copies, mid-block write-pipeline failover, TaskTracker
+//!   blacklisting with re-execution of lost map outputs, CPU stragglers
+//!   and 0.20-style speculative execution (`amdahl-hadoop faults`).
+//!   With an empty [`faults::InjectionPlan`] nothing is installed and
+//!   every output — including `BENCH_sweep.json` — is byte-identical
+//!   to a fault-free build.
+//! * [`report`] — regenerates every figure and table in the paper,
+//!   plus the degraded-mode table and the 2-D core × memory-bus
+//!   frontier.
 //! * [`sweep`] — parallel scenario-sweep engine: Cartesian design-space
-//!   grids (cores × write path × LZO × workload), a multithreaded
-//!   work-queue runner (one `sim::Engine` per thread), and the
-//!   core-count frontier analysis generalizing the paper's §5 four-core
-//!   conclusion (`amdahl-hadoop sweep`).
+//!   grids (cores × write path × LZO × workload × memory bus × fault
+//!   axes: `mtbf`, `straggler_frac`, speculation on/off), a
+//!   multithreaded work-queue runner (one `sim::Engine` per thread),
+//!   and the core-count frontier analysis generalizing the paper's §5
+//!   four-core conclusion (`amdahl-hadoop sweep`).
 
 pub mod amdahl;
 pub mod cluster;
 pub mod compress;
 pub mod conf;
 pub mod energy;
+pub mod faults;
 pub mod hdfs;
 pub mod hw;
 pub mod mapreduce;

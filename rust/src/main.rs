@@ -11,7 +11,12 @@
 //! amdahl-hadoop sweep  [--cores 1..8] [--nodes 9] [--family amdahl|occ|both]
 //!                      [--threads N] [--gb 0.125] [--workers 4]
 //!                      [--solver incremental|whole-set]
+//!                      [--membus 1300,2600] [--mtbf 600] [--stragglers 0.25]
+//!                      [--slowdown 0.4] [--spec]
 //!                      [--baseline old.json] [--out BENCH_sweep.json] [--quiet]
+//! amdahl-hadoop faults [--workload search|stat|dfsio-write|dfsio-read]
+//!                      [--mtbf 600] [--stragglers 0.25] [--slowdown 0.4]
+//!                      [--spec] [--nodes 9] [--cores 2] [--threads N]
 //! ```
 //!
 //! `sweep` expands the design-space grid (cores × write path × LZO ×
@@ -20,7 +25,16 @@
 //! solver perf counters), and prints the §5 core-count frontier table
 //! with the balanced-core estimate. `--baseline old.json` diffs the run
 //! against an earlier `BENCH_sweep.json` and exits nonzero when any
-//! scenario's throughput regressed more than 5%.
+//! scenario's throughput regressed more than 5%. `--membus` (MiB/s
+//! values, comma-separated) adds memory-bus tiers and prints the 2-D
+//! core × bus frontier; `--mtbf` / `--stragglers` / `--spec` add
+//! degraded-mode scenarios next to their fault-free twins and print the
+//! degraded-mode table. With none of those flags the output is
+//! byte-identical to a fault-free build.
+//!
+//! `faults` runs one workload fault-free and under a seeded injection
+//! plan (crashes by MTBF, CPU stragglers, optional speculative
+//! execution) and prints the degraded-mode comparison.
 //!
 //! Common options: `--seed N` (default 42), `--scale F` (fraction of the
 //! paper's 25 GB dataset, default 0.002), `--kernels` (load the AOT
@@ -136,11 +150,38 @@ fn main() -> anyhow::Result<()> {
                 Some(s) => SolverMode::parse(s)
                     .ok_or_else(|| anyhow::anyhow!("unknown --solver {s} (incremental|whole-set)"))?,
             };
+            // Optional memory-bus tiers (MiB/s, comma-separated) next to
+            // the preset bus, and degraded-mode axes next to fault-free.
+            if let Some(list) = args.get("membus") {
+                let mut v = vec![None];
+                for tok in list.split(',') {
+                    let mibps: f64 = tok.trim().parse()?;
+                    anyhow::ensure!(mibps > 0.0, "--membus values must be positive MiB/s");
+                    v.push(Some(mibps * MIB));
+                }
+                grid.membus = v;
+            }
+            if let Some(m) = args.get("mtbf") {
+                let mtbf: f64 = m.parse()?;
+                anyhow::ensure!(mtbf > 0.0, "--mtbf must be positive seconds");
+                grid.mtbf = vec![None, Some(mtbf)];
+            }
+            if let Some(f) = args.get("stragglers") {
+                let frac: f64 = f.parse()?;
+                anyhow::ensure!((0.0..=1.0).contains(&frac), "--stragglers is a fraction");
+                if frac > 0.0 {
+                    grid.stragglers = vec![0.0, frac];
+                }
+            }
+            if args.flag("spec") {
+                grid.speculation = vec![false, true];
+            }
             let opts = amdahl_hadoop::sweep::SweepOptions {
                 threads: args.get_usize("threads", 0)?,
                 scale: args.get_f64("scale", 0.0008)?,
                 dfsio_bytes_per_worker: args.get_f64("gb", 0.125)? * 1024.0 * MIB,
                 dfsio_workers: args.get_usize("workers", 4)?,
+                straggler_slowdown: args.get_f64("slowdown", 0.4)?,
                 solver,
                 progress: !args.flag("quiet"),
                 ..Default::default()
@@ -165,6 +206,13 @@ fn main() -> anyhow::Result<()> {
             std::fs::write(out_path, results.to_json())?;
             eprintln!("[sweep] wrote {} records to {out_path}", results.records.len());
             print!("{}", report::render_frontier(&results.frontier()));
+            if grid.membus.len() > 1 {
+                print!("{}", report::render_bus_frontier(&results.bus_frontier()));
+            }
+            let degraded = results.degraded_rows();
+            if !degraded.is_empty() {
+                print!("{}", report::render_degraded(&degraded));
+            }
             if let Some(text) = baseline_text {
                 let cmp = amdahl_hadoop::sweep::compare_baseline(
                     &results,
@@ -174,6 +222,77 @@ fn main() -> anyhow::Result<()> {
                 eprint!("{}", cmp.render());
                 if cmp.has_regressions() {
                     std::process::exit(2);
+                }
+            }
+        }
+        "faults" => {
+            use amdahl_hadoop::sweep::{SweepGrid, SweepOptions, Workload, WritePath};
+            let workload = match args.get("workload").unwrap_or("search") {
+                "search" => Workload::Search,
+                "stat" => Workload::Stat,
+                "dfsio-write" => Workload::DfsioWrite,
+                "dfsio-read" => Workload::DfsioRead,
+                other => anyhow::bail!(
+                    "unknown --workload {other} (search|stat|dfsio-write|dfsio-read)"
+                ),
+            };
+            let nodes = args.get_usize("nodes", 9)?;
+            anyhow::ensure!(nodes >= 3, "--nodes must leave survivors after a crash (>= 3)");
+            let cores = args.get_usize("cores", 2)?;
+            let mtbf = args.get_f64("mtbf", 600.0)?;
+            let stragglers = args.get_f64("stragglers", 0.0)?;
+            // One fault-free twin per faulted scenario: the degraded
+            // table needs both sides.
+            let mut grid = SweepGrid::paper_default(seed, cores, cores);
+            grid.nodes = vec![nodes];
+            grid.write_paths = vec![WritePath::DirectIo];
+            grid.lzo = vec![false];
+            grid.workloads = vec![workload];
+            grid.mtbf = vec![None, Some(mtbf)];
+            if stragglers > 0.0 {
+                grid.stragglers = vec![0.0, stragglers];
+            }
+            if args.flag("spec") {
+                grid.speculation = vec![false, true];
+            }
+            let opts = SweepOptions {
+                threads: args.get_usize("threads", 0)?,
+                scale: args.get_f64("scale", 0.0008)?,
+                dfsio_bytes_per_worker: args.get_f64("gb", 0.125)? * 1024.0 * MIB,
+                dfsio_workers: args.get_usize("workers", 4)?,
+                straggler_slowdown: args.get_f64("slowdown", 0.4)?,
+                progress: !args.flag("quiet"),
+                ..Default::default()
+            };
+            eprintln!(
+                "[faults] {} scenarios ({} workload, mtbf {mtbf}s, stragglers {stragglers}, \
+                 speculation {}), seed {seed}",
+                grid.len(),
+                workload.key(),
+                args.flag("spec")
+            );
+            let results = amdahl_hadoop::sweep::run_sweep(&grid, &opts);
+            print!("{}", report::render_degraded(&results.degraded_rows()));
+            for r in &results.records {
+                if let Some(f) = &r.faults {
+                    println!(
+                        "{}: {} crash(es), {} straggler(s), {} re-replication(s) \
+                         ({:.1} MB recovered, {:.0} J), {} pipeline failover(s), \
+                         {} read failover(s), {} map(s) re-queued, {} map output(s) lost, \
+                         {} reduce(s) re-queued, {} block(s) lost",
+                        r.id,
+                        f.crashes,
+                        f.stragglers,
+                        f.rereplications_done,
+                        f.recovery_bytes / MIB,
+                        r.recovery_joules,
+                        f.pipeline_failovers,
+                        f.read_failovers,
+                        f.maps_requeued,
+                        f.map_outputs_lost,
+                        f.reduces_requeued,
+                        f.blocks_lost
+                    );
                 }
             }
         }

@@ -13,14 +13,20 @@
 //! invoke the AOT-compiled Pallas pair kernel through
 //! [`crate::runtime`]) and reports its HDFS output volume.
 //!
+//! Fault behaviour (armed via [`crate::faults`]): dead TaskTrackers are
+//! blacklisted (their slots vanish), attempts running on them are
+//! re-queued, completed map outputs hosted on them are re-executed, and
+//! straggling maps are hedged with Hadoop-0.20-style speculative
+//! duplicates (progress-rate threshold, kill-loser semantics). With no
+//! faults armed none of this machinery runs.
+//!
 //! Simplifications vs stock Hadoop, documented per DESIGN.md: reducers
-//! launch when the map phase completes (no slow-start overlap), there is
-//! no speculative execution (the simulator has no stragglers to hedge),
-//! and the combiner is folded into [`MapFn`] output modeling.
+//! launch when the map phase completes (no slow-start overlap), and the
+//! combiner is folded into [`MapFn`] output modeling.
 
 pub mod scheduler;
 pub mod sortspill;
 pub mod tasks;
 
 pub use scheduler::{run_job, JobResult, JobSpec};
-pub use tasks::{MapFn, MapOutput, ReduceFn, ReduceOutput, SplitMeta};
+pub use tasks::{MapFn, MapOutput, PhaseFlag, ReduceFn, ReduceOutput, SplitMeta, TaskToken};

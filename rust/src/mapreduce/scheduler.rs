@@ -5,20 +5,46 @@
 //! map slots and `mapred.tasktracker.reduce.tasks.maximum` reduce slots
 //! (paper Table 1: 3 map slots; 2 reduce slots for Neighbor Searching —
 //! the DataNode needs CPU — and 3 for Neighbor Statistics).
+//!
+//! # Fault handling (armed via [`crate::faults`])
+//!
+//! When a TaskTracker dies the JobTracker **blacklists** it (its slots
+//! vanish), kills the attempts running on it (their split/reducer goes
+//! back to the pending queue), and **re-executes lost map outputs**:
+//! completed maps whose output lived on the dead node rejoin the
+//! pending queue, and reducers still shuffling from that host are
+//! killed and re-queued (they recompute their fetch set when they
+//! relaunch). Reducers that already finished their shuffle keep going —
+//! they hold the data.
+//!
+//! **Speculative execution** (0.20 semantics, maps only): a poll runs
+//! every [`SPECULATION_POLL_S`] simulated seconds once the pending
+//! queue is empty; any sole attempt whose elapsed time exceeds
+//! [`SPECULATION_LAG`] × the mean completed-map duration gets a
+//! duplicate on another tracker with a free slot. First finisher wins;
+//! the loser is killed at its next phase boundary and its runtime is
+//! counted as wasted speculative work.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
 
-#[cfg(test)]
-use super::tasks::ReduceOutput;
 use super::tasks::{
-    run_map_task, run_reduce_task, MapFn, MapOutput, ReduceFn, ReduceInput, SplitMeta,
+    run_map_task, run_reduce_task, MapFn, MapOutput, PhaseFlag, ReduceFn, ReduceInput,
+    ReduceOutput, SplitMeta, TaskToken,
 };
 use crate::cluster::NodeId;
 use crate::conf::HadoopConf;
 use crate::hdfs::WorldHandle;
 use crate::sim::Engine;
+
+/// Seconds between speculative-execution polls (the 0.20 JobTracker
+/// reacted on TaskTracker heartbeats at this order of magnitude).
+pub const SPECULATION_POLL_S: f64 = 3.0;
+/// A sole attempt running longer than this multiple of the mean
+/// completed-map duration is a straggler candidate (the 0.20
+/// progress-rate threshold, expressed in completion-time terms).
+pub const SPECULATION_LAG: f64 = 1.5;
 
 /// A MapReduce job description.
 pub struct JobSpec {
@@ -65,6 +91,28 @@ pub struct JobResult {
     pub map_locality: f64,
 }
 
+/// One live map attempt (original or speculative duplicate).
+struct MapAttempt {
+    split_idx: usize,
+    node: NodeId,
+    start: f64,
+    token: TaskToken,
+    speculative: bool,
+}
+
+/// One live reduce attempt.
+struct ReduceAttempt {
+    reducer: usize,
+    node: NodeId,
+    start: f64,
+    token: TaskToken,
+    /// Raised once every shuffle fetch has landed (after that, a dead
+    /// map host no longer matters to this attempt).
+    shuffle_done: PhaseFlag,
+    /// Map hosts this attempt fetches from.
+    sources: Vec<NodeId>,
+}
+
 struct JobState {
     spec: JobSpec,
     world: WorldHandle,
@@ -84,6 +132,13 @@ struct JobState {
     t_maps_done: f64,
     reduce_started: bool,
     on_done: Option<Box<dyn FnOnce(&mut Engine, JobResult)>>,
+    // ---- fault / speculation machinery (inert on fault-free runs) ----
+    map_attempts: Vec<MapAttempt>,
+    reduce_attempts: Vec<ReduceAttempt>,
+    /// Completed-map duration statistics (speculation threshold input).
+    map_done_duration_sum: f64,
+    map_done_count: usize,
+    speculation: bool,
 }
 
 /// Build splits (one per block) from the job's input files.
@@ -119,9 +174,18 @@ pub fn run_job(
 ) {
     let splits = plan_splits(world, &spec.input_files);
     assert!(!splits.is_empty(), "job {} has no input splits", spec.name);
-    let slaves: Vec<NodeId> = {
+    let (slaves, faults_active, speculation) = {
         let w = world.borrow();
-        w.namenode.datanodes().to_vec()
+        // Only live trackers get slots: a job submitted after a crash
+        // must not schedule onto the dead node.
+        let slaves: Vec<NodeId> = w
+            .namenode
+            .datanodes()
+            .iter()
+            .copied()
+            .filter(|&n| w.faults.is_up(n))
+            .collect();
+        (slaves, w.faults.active, w.faults.speculation)
     };
     let mut free_map_slots = HashMap::new();
     let mut free_reduce_slots = HashMap::new();
@@ -150,7 +214,29 @@ pub fn run_job(
         t_maps_done: 0.0,
         reduce_started: false,
         on_done: Some(Box::new(on_done)),
+        map_attempts: Vec::new(),
+        reduce_attempts: Vec::new(),
+        map_done_duration_sum: 0.0,
+        map_done_count: 0,
+        speculation: faults_active && speculation,
     }));
+    if faults_active {
+        // TaskTracker-death reaction (blacklist + re-queue + lost-output
+        // re-execution). Holds only a Weak handle so a completed job's
+        // state (and the World it references) can drop; the guard
+        // self-deregisters at the next crash.
+        let hstate = Rc::downgrade(&state);
+        world.borrow_mut().faults.register(Box::new(move |engine, dead| {
+            match hstate.upgrade() {
+                Some(s) => on_node_crash(engine, &s, dead),
+                None => false,
+            }
+        }));
+        if state.borrow().speculation {
+            let pstate = state.clone();
+            engine.after(SPECULATION_POLL_S, move |e| spec_poll(e, pstate));
+        }
+    }
     pump(engine, state);
 }
 
@@ -163,7 +249,7 @@ fn pump(engine: &mut Engine, state: Rc<RefCell<JobState>>) {
         let action = next_action(&state.borrow());
         match action {
             Action::StartMap { split_idx, node, local } => {
-                start_map(engine, state.clone(), split_idx, node, local)
+                start_map(engine, state.clone(), split_idx, node, local, false)
             }
             Action::StartReduce { reducer, node } => {
                 start_reduce(engine, state.clone(), reducer, node)
@@ -180,6 +266,12 @@ enum Action {
 }
 
 fn next_action(s: &JobState) -> Action {
+    // A finished job schedules nothing more (lost-output re-execution
+    // may leave re-queued splits behind when the last reducer already
+    // held all its data — don't run them into a dead job).
+    if s.on_done.is_none() {
+        return Action::Wait;
+    }
     // Map phase.
     if !s.pending_maps.is_empty() {
         // Locality first: find (node with free slot, split with replica).
@@ -216,15 +308,26 @@ fn start_map(
     split_idx: usize,
     node: NodeId,
     local: bool,
+    speculative: bool,
 ) {
+    let token = TaskToken::new();
     let (split, map_fn, conf, class, world) = {
         let mut s = state.borrow_mut();
-        s.pending_maps.retain(|&i| i != split_idx);
+        if !speculative {
+            s.pending_maps.retain(|&i| i != split_idx);
+        }
         *s.free_map_slots.get_mut(&node).unwrap() -= 1;
         s.running_maps += 1;
-        if local {
+        if local && !speculative {
             s.local_maps += 1;
         }
+        s.map_attempts.push(MapAttempt {
+            split_idx,
+            node,
+            start: engine.now(),
+            token: token.clone(),
+            speculative,
+        });
         (
             s.splits[split_idx].clone(),
             s.spec.map.clone(),
@@ -234,23 +337,86 @@ fn start_map(
         )
     };
     let state2 = state.clone();
-    run_map_task(engine, &world, node, split, map_fn, &conf, &class, move |engine, out| {
-        {
-            let mut s = state2.borrow_mut();
-            s.map_outputs[split_idx] = Some((node, out));
-            s.maps_done += 1;
-            s.running_maps -= 1;
-            *s.free_map_slots.get_mut(&node).unwrap() += 1;
-            if s.maps_done == s.splits.len() {
-                s.t_maps_done = engine.now();
-                s.reduce_started = true;
-            }
-        }
-        pump(engine, state2.clone());
+    let token2 = token.clone();
+    run_map_task(engine, &world, node, split, map_fn, &conf, &class, token, move |engine, out| {
+        map_attempt_done(engine, state2.clone(), split_idx, node, token2.clone(), out);
     });
 }
 
+/// A map attempt ran to completion (its token was live at every phase
+/// boundary — a cancelled attempt never reaches this).
+fn map_attempt_done(
+    engine: &mut Engine,
+    state: Rc<RefCell<JobState>>,
+    split_idx: usize,
+    node: NodeId,
+    token: TaskToken,
+    out: MapOutput,
+) {
+    let now = engine.now();
+    let (world, spec_wins, spec_wasted, wasted_s) = {
+        let mut s = state.borrow_mut();
+        let world = s.world.clone();
+        let me = match s.map_attempts.iter().position(|a| a.token.same(&token)) {
+            Some(p) => s.map_attempts.remove(p),
+            None => return, // attempt was killed at this very instant
+        };
+        s.running_maps -= 1;
+        if let Some(v) = s.free_map_slots.get_mut(&node) {
+            *v += 1;
+        }
+        let mut wins = 0usize;
+        let mut wasted = 0usize;
+        let mut wasted_s = 0.0f64;
+        if s.map_outputs[split_idx].is_none() {
+            s.map_outputs[split_idx] = Some((node, out));
+            s.maps_done += 1;
+            s.map_done_duration_sum += now - me.start;
+            s.map_done_count += 1;
+            s.pending_maps.retain(|&i| i != split_idx);
+            // Kill-loser: cancel every other attempt of this split.
+            let mut k = 0;
+            while k < s.map_attempts.len() {
+                if s.map_attempts[k].split_idx == split_idx {
+                    let loser = s.map_attempts.remove(k);
+                    loser.token.cancel();
+                    s.running_maps -= 1;
+                    if let Some(v) = s.free_map_slots.get_mut(&loser.node) {
+                        *v += 1;
+                    }
+                    wasted += 1;
+                    wasted_s += now - loser.start;
+                } else {
+                    k += 1;
+                }
+            }
+            if me.speculative && wasted > 0 {
+                wins += 1;
+            }
+            if s.maps_done == s.splits.len() {
+                s.t_maps_done = now;
+                s.reduce_started = true;
+            }
+        } else {
+            // The split committed concurrently (defensive: losers are
+            // normally cancelled at win time). Count this run as waste.
+            wasted += 1;
+            wasted_s += now - me.start;
+        }
+        (world, wins, wasted, wasted_s)
+    };
+    if spec_wins > 0 || spec_wasted > 0 {
+        let mut w = world.borrow_mut();
+        w.faults.stats.spec_wins += spec_wins;
+        w.faults.stats.spec_wasted += spec_wasted;
+        w.faults.stats.wasted_task_seconds += wasted_s;
+    }
+    pump(engine, state);
+}
+
 fn start_reduce(engine: &mut Engine, state: Rc<RefCell<JobState>>, reducer: usize, node: NodeId) {
+    let token = TaskToken::new();
+    let shuffle_done = PhaseFlag::new();
     let (sources, input, reduce_fn, conf, class, world, output_name) = {
         let mut s = state.borrow_mut();
         s.pending_reduces.retain(|&r| r != reducer);
@@ -275,6 +441,14 @@ fn start_reduce(engine: &mut Engine, state: Rc<RefCell<JobState>>, reducer: usiz
             bytes: total,
             records: total * s.spec.reduce_records_per_byte,
         };
+        s.reduce_attempts.push(ReduceAttempt {
+            reducer,
+            node,
+            start: engine.now(),
+            token: token.clone(),
+            shuffle_done: shuffle_done.clone(),
+            sources: sources.iter().map(|(n, _)| *n).collect(),
+        });
         (
             sources,
             input,
@@ -286,6 +460,7 @@ fn start_reduce(engine: &mut Engine, state: Rc<RefCell<JobState>>, reducer: usiz
         )
     };
     let state2 = state.clone();
+    let token2 = token.clone();
     run_reduce_task(
         engine,
         &world,
@@ -296,30 +471,196 @@ fn start_reduce(engine: &mut Engine, state: Rc<RefCell<JobState>>, reducer: usiz
         &conf,
         &class,
         output_name,
+        token,
+        shuffle_done,
         move |engine, out| {
-            let finished = {
-                let mut s = state2.borrow_mut();
-                s.reduces_done += 1;
-                s.running_reduces -= 1;
-                s.hdfs_output_bytes += out.hdfs_bytes;
-                *s.free_reduce_slots.get_mut(&node).unwrap() += 1;
-                s.reduces_done == s.spec.n_reducers
-            };
-            if finished {
-                finish(engine, &state2);
-            } else {
-                pump(engine, state2.clone());
-            }
+            reduce_attempt_done(engine, state2.clone(), node, token2.clone(), out);
         },
     );
+}
+
+fn reduce_attempt_done(
+    engine: &mut Engine,
+    state: Rc<RefCell<JobState>>,
+    node: NodeId,
+    token: TaskToken,
+    out: ReduceOutput,
+) {
+    let finished = {
+        let mut s = state.borrow_mut();
+        match s.reduce_attempts.iter().position(|a| a.token.same(&token)) {
+            Some(p) => {
+                s.reduce_attempts.remove(p);
+            }
+            None => return, // killed at this very instant
+        }
+        s.reduces_done += 1;
+        s.running_reduces -= 1;
+        s.hdfs_output_bytes += out.hdfs_bytes;
+        if let Some(v) = s.free_reduce_slots.get_mut(&node) {
+            *v += 1;
+        }
+        s.reduces_done == s.spec.n_reducers
+    };
+    if finished {
+        finish(engine, &state);
+    } else {
+        pump(engine, state);
+    }
+}
+
+/// Crash reaction: blacklist the tracker, kill its attempts, re-queue
+/// their work, and re-execute map outputs lost with the host. Returns
+/// false (deregister) once the job has completed.
+fn on_node_crash(engine: &mut Engine, state: &Rc<RefCell<JobState>>, dead: NodeId) -> bool {
+    let now = engine.now();
+    let world;
+    let mut maps_requeued = 0usize;
+    let mut reduces_requeued = 0usize;
+    let mut outputs_lost = 0usize;
+    let mut wasted_s = 0.0f64;
+    {
+        let mut s = state.borrow_mut();
+        if s.on_done.is_none() {
+            return false;
+        }
+        world = s.world.clone();
+        // TaskTracker blacklist: the dead node's slots vanish.
+        s.free_map_slots.remove(&dead);
+        s.free_reduce_slots.remove(&dead);
+        // Kill map attempts running on the dead node.
+        let mut i = 0;
+        while i < s.map_attempts.len() {
+            if s.map_attempts[i].node == dead {
+                let a = s.map_attempts.remove(i);
+                a.token.cancel();
+                s.running_maps -= 1;
+                wasted_s += now - a.start;
+                let covered = s.map_outputs[a.split_idx].is_some()
+                    || s.map_attempts.iter().any(|b| b.split_idx == a.split_idx);
+                if !covered && !s.pending_maps.contains(&a.split_idx) {
+                    s.pending_maps.push(a.split_idx);
+                    maps_requeued += 1;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        // Re-execute completed map outputs hosted on the dead node.
+        for si in 0..s.map_outputs.len() {
+            let lost = matches!(&s.map_outputs[si], Some((h, _)) if *h == dead);
+            if lost {
+                s.map_outputs[si] = None;
+                s.maps_done -= 1;
+                if !s.pending_maps.contains(&si)
+                    && !s.map_attempts.iter().any(|b| b.split_idx == si)
+                {
+                    s.pending_maps.push(si);
+                }
+                outputs_lost += 1;
+            }
+        }
+        // Kill reduce attempts on the dead node, plus attempts still
+        // shuffling from it (their fetch set includes lost outputs).
+        let mut j = 0;
+        while j < s.reduce_attempts.len() {
+            let kill = {
+                let a = &s.reduce_attempts[j];
+                a.node == dead || (!a.shuffle_done.is_set() && a.sources.contains(&dead))
+            };
+            if kill {
+                let a = s.reduce_attempts.remove(j);
+                a.token.cancel();
+                s.running_reduces -= 1;
+                wasted_s += now - a.start;
+                if a.node != dead {
+                    if let Some(v) = s.free_reduce_slots.get_mut(&a.node) {
+                        *v += 1;
+                    }
+                }
+                if !s.pending_reduces.contains(&a.reducer) {
+                    s.pending_reduces.push(a.reducer);
+                }
+                reduces_requeued += 1;
+            } else {
+                j += 1;
+            }
+        }
+    }
+    {
+        let mut w = world.borrow_mut();
+        w.faults.stats.maps_requeued += maps_requeued;
+        w.faults.stats.reduces_requeued += reduces_requeued;
+        w.faults.stats.map_outputs_lost += outputs_lost;
+        w.faults.stats.wasted_task_seconds += wasted_s;
+    }
+    pump(engine, state.clone());
+    true
+}
+
+/// Speculative-execution poll (maps only): hedge sole straggling
+/// attempts with a duplicate on another tracker. Re-arms itself until
+/// the job completes.
+fn spec_poll(engine: &mut Engine, state: Rc<RefCell<JobState>>) {
+    let now = engine.now();
+    let launches: Vec<(usize, NodeId)> = {
+        let s = state.borrow();
+        if s.on_done.is_none() {
+            return; // job finished: let the poll chain die
+        }
+        let mut out = Vec::new();
+        if s.pending_maps.is_empty() && !s.map_attempts.is_empty() && s.map_done_count > 0 {
+            let mean = s.map_done_duration_sum / s.map_done_count as f64;
+            let mut free: Vec<(NodeId, usize)> =
+                s.free_map_slots.iter().map(|(n, c)| (*n, *c)).collect();
+            free.sort_by_key(|(n, _)| n.0);
+            for a in &s.map_attempts {
+                if a.speculative {
+                    continue;
+                }
+                let has_twin = s
+                    .map_attempts
+                    .iter()
+                    .any(|b| b.split_idx == a.split_idx && !b.token.same(&a.token));
+                if has_twin || now - a.start <= SPECULATION_LAG * mean {
+                    continue;
+                }
+                // Deterministic: the smallest live tracker with a free
+                // slot that is not the straggler itself.
+                for f in free.iter_mut() {
+                    if f.1 > 0 && f.0 != a.node {
+                        f.1 -= 1;
+                        out.push((a.split_idx, f.0));
+                        break;
+                    }
+                }
+            }
+        }
+        out
+    };
+    if !launches.is_empty() {
+        let world = state.borrow().world.clone();
+        world.borrow_mut().faults.stats.spec_launched += launches.len();
+        let state2 = state.clone();
+        engine.batch(move |engine| {
+            for (si, node) in launches {
+                start_map(engine, state2.clone(), si, node, false, true);
+            }
+        });
+    }
+    let state3 = state.clone();
+    engine.after(SPECULATION_POLL_S, move |e| spec_poll(e, state3));
 }
 
 fn finish(engine: &mut Engine, state: &Rc<RefCell<JobState>>) {
     let (result, cb) = {
         let mut s = state.borrow_mut();
         let input_bytes: f64 = s.splits.iter().map(|sp| sp.bytes).sum();
+        // A late crash can null out a lost output while the surviving
+        // reducers (which already fetched it) run to completion — sum
+        // whatever is present rather than unwrap.
         let map_output_bytes: f64 =
-            s.map_outputs.iter().map(|m| m.as_ref().unwrap().1.bytes).sum();
+            s.map_outputs.iter().filter_map(|m| m.as_ref()).map(|(_, o)| o.bytes).sum();
         let result = JobResult {
             duration: engine.now() - s.t_start,
             map_phase: s.t_maps_done - s.t_start,

@@ -6,7 +6,7 @@
 //! → reduce function (the Zones apps do real pair computation here via
 //! the PJRT kernel) → HDFS output through the §3.4-configurable pipeline.
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::rc::Rc;
 
 use super::sortspill;
@@ -15,6 +15,55 @@ use crate::conf::HadoopConf;
 use crate::hdfs::{self, WorldHandle};
 use crate::sim::engine::shared;
 use crate::sim::{Engine, FlowSpec};
+
+/// Cancellation token for one task *attempt* (fault injection /
+/// speculative execution). Cancelling stops the attempt's phase chain
+/// at the next phase boundary: flows already in flight on healthy
+/// nodes run out (counted as wasted work by the canceller), while
+/// flows touching a dead node are torn down by the crash kill-switch.
+/// A cancelled attempt never invokes its completion callback — the
+/// canceller owns all scheduler bookkeeping.
+#[derive(Clone, Default)]
+pub struct TaskToken(Rc<Cell<bool>>);
+
+impl TaskToken {
+    pub fn new() -> TaskToken {
+        TaskToken::default()
+    }
+
+    pub fn cancel(&self) {
+        self.0.set(true);
+    }
+
+    pub fn cancelled(&self) -> bool {
+        self.0.get()
+    }
+
+    /// Identity comparison (the scheduler keys attempts by token).
+    pub fn same(&self, other: &TaskToken) -> bool {
+        Rc::ptr_eq(&self.0, &other.0)
+    }
+}
+
+/// Shared one-way flag raised when a task attempt passes a phase
+/// boundary (the scheduler's crash handler reads "has this reducer
+/// finished its shuffle?" through one of these).
+#[derive(Clone, Default)]
+pub struct PhaseFlag(Rc<Cell<bool>>);
+
+impl PhaseFlag {
+    pub fn new() -> PhaseFlag {
+        PhaseFlag::default()
+    }
+
+    pub fn set(&self) {
+        self.0.set(true);
+    }
+
+    pub fn is_set(&self) -> bool {
+        self.0.get()
+    }
+}
 
 /// One input split (= one HDFS block, as in stock Hadoop).
 #[derive(Debug, Clone)]
@@ -92,7 +141,10 @@ fn split_block(world: &WorldHandle, split: &SplitMeta) -> crate::hdfs::BlockMeta
     f.blocks[split.block_idx].clone()
 }
 
-/// Run a full map task on `node`; calls `on_done` with the output record.
+/// Run a full map task on `node`; calls `on_done` with the output
+/// record — unless `token` is cancelled, in which case the chain stops
+/// at the next phase boundary and `on_done` never runs.
+#[allow(clippy::too_many_arguments)]
 pub fn run_map_task(
     engine: &mut Engine,
     world: &WorldHandle,
@@ -101,6 +153,7 @@ pub fn run_map_task(
     map_fn: Rc<dyn MapFn>,
     conf: &HadoopConf,
     class: &str,
+    token: TaskToken,
     on_done: impl FnOnce(&mut Engine, MapOutput) + 'static,
 ) {
     let conf = conf.clone();
@@ -111,6 +164,9 @@ pub fn run_map_task(
     let class_in = class.clone();
     // Phase 1: read the split from HDFS.
     read_split(engine, world, node, &split, &conf_in, &class_in, move |engine| {
+        if token.cancelled() {
+            return;
+        }
         let out = map_fn.run(&split2);
         // Phase 2: map function compute (record decode + app logic).
         let (spec, sort_then) = {
@@ -123,7 +179,12 @@ pub fn run_map_task(
         };
         let world3 = world2.clone();
         let class3 = class.clone();
+        let token3 = token.clone();
         engine.start_flow(spec, move |engine| {
+            if token3.cancelled() {
+                return;
+            }
+            let token = token3;
             // Phase 3: sort + spill to local disk.
             let plan = sortspill::plan(&conf, sort_then.bytes, sort_then.records);
             let spill = {
@@ -153,6 +214,9 @@ pub fn run_map_task(
                     let mut w = world4.borrow_mut();
                     w.cluster.disk_stream_end(engine, node, false);
                 }
+                if token.cancelled() {
+                    return;
+                }
                 // Phase 4: merge pass when more than one spill.
                 if plan.merge_bytes > 0.0 {
                     let spec = {
@@ -174,6 +238,9 @@ pub fn run_map_task(
                             let mut w = world5.borrow_mut();
                             w.cluster.disk_stream_end(engine, node, false);
                         }
+                        if token.cancelled() {
+                            return;
+                        }
                         on_done(engine, sort_then);
                     });
                 } else {
@@ -189,7 +256,10 @@ pub fn run_map_task(
 /// `sources` lists (map host, bytes to fetch from that host). `input`
 /// describes the merged reduce input; `reduce_fn` runs the real
 /// application logic (kernel calls happen here); output goes to HDFS
-/// under `output_name`.
+/// under `output_name`. A cancelled `token` stops the chain at the next
+/// phase boundary (`on_done` never runs); `shuffle_flag` is raised when
+/// every fetch has landed, so the scheduler's crash handler can tell
+/// whether a dead map host still matters to this attempt.
 #[allow(clippy::too_many_arguments)]
 pub fn run_reduce_task(
     engine: &mut Engine,
@@ -201,6 +271,8 @@ pub fn run_reduce_task(
     conf: &HadoopConf,
     class: &str,
     output_name: String,
+    token: TaskToken,
+    shuffle_flag: PhaseFlag,
     on_done: impl FnOnce(&mut Engine, ReduceOutput) + 'static,
 ) {
     let conf = conf.clone();
@@ -211,7 +283,10 @@ pub fn run_reduce_task(
     let live: Vec<(NodeId, f64)> = sources.into_iter().filter(|(_, b)| *b > 0.0).collect();
     let fetch_count = live.len();
     let done_ctr = shared(0usize);
+    let token_sh = token.clone();
     let after_shuffle = Rc::new(RefCell::new(Some(Box::new(move |engine: &mut Engine| {
+        shuffle_flag.set();
+        let token = token_sh;
         // Phase 2: merge (disk round trip when input exceeds ~70% of the
         // child heap, as the in-memory merger overflows).
         let heap = conf.child_heap_mb as f64 * crate::hw::MIB;
@@ -222,7 +297,11 @@ pub fn run_reduce_task(
         let reduce_fn3 = reduce_fn.clone();
         let output_name3 = output_name.clone();
         let input3 = input.clone();
+        let token_r = token.clone();
         let run_reduce = move |engine: &mut Engine| {
+            if token_r.cancelled() {
+                return;
+            }
             // Phase 3: the reduce function itself (real compute).
             let out = reduce_fn3.borrow_mut().run(&input3);
             let spec = {
@@ -235,7 +314,11 @@ pub fn run_reduce_task(
             let world4 = world3.clone();
             let class4 = class3.clone();
             let conf4 = conf3.clone();
+            let token_w = token_r.clone();
             engine.start_flow(spec, move |engine| {
+                if token_w.cancelled() {
+                    return;
+                }
                 // Phase 4: write output to HDFS (the §3.4 battleground).
                 if out.hdfs_bytes > 0.0 {
                     let out2 = out.clone();
@@ -285,6 +368,35 @@ pub fn run_reduce_task(
         cb(engine);
         return;
     }
+    // Fault guard: a crash of the reducer's own node kills every
+    // in-flight fetch flow (they all demand its NIC/CPU) without
+    // running their completion callbacks — which would leak the +1
+    // read-stream count on each healthy map host. Track live fetches
+    // and release their source streams when this tracker dies. Weak
+    // world handle so a finished shuffle is collectable.
+    let faults_on = world.borrow().faults.active;
+    let in_flight = shared(Vec::<NodeId>::new());
+    if faults_on {
+        let wworld = Rc::downgrade(world);
+        let inf = in_flight.clone();
+        world.borrow_mut().faults.register(Box::new(move |engine, dead| {
+            let Some(world) = wworld.upgrade() else { return false };
+            if inf.borrow().is_empty() {
+                return false; // shuffle finished: guard retired
+            }
+            if dead != node {
+                return true;
+            }
+            let srcs: Vec<NodeId> = inf.borrow_mut().drain(..).collect();
+            let mut w = world.borrow_mut();
+            for s in srcs {
+                if w.faults.is_up(s) {
+                    w.cluster.disk_stream_end(engine, s, true);
+                }
+            }
+            false
+        }));
+    }
     // All fetches start at the same instant; batch them into one solve.
     engine.batch(|engine| {
         for (src, bytes) in live {
@@ -319,14 +431,23 @@ pub fn run_reduce_task(
             }
             f
         };
+        if faults_on {
+            in_flight.borrow_mut().push(src);
+        }
         let world_f = world.clone();
         let ctr = done_ctr.clone();
         let after = after_shuffle.clone();
+        let token_f = token.clone();
+        let inf_f = in_flight.clone();
         engine.start_flow(spec, move |engine| {
             engine.batch(|engine| {
                 {
                     let mut w = world_f.borrow_mut();
                     w.cluster.disk_stream_end(engine, src, true);
+                }
+                inf_f.borrow_mut().retain(|&s| s != src);
+                if token_f.cancelled() {
+                    return;
                 }
                 *ctr.borrow_mut() += 1;
                 if *ctr.borrow() == fetch_count {

@@ -607,3 +607,77 @@ pub fn render_frontier(f: &crate::sweep::FrontierAnalysis) -> String {
     ));
     s
 }
+
+/// Render the 2-D core × memory-bus frontier: one row per swept bus
+/// capacity (preset first), one column per core count, each cell the
+/// per-node MB/s with its bottleneck initial. Makes the §4 caveat —
+/// "more cores alone may leave the blade memory-bound" — visible as
+/// the point where a row stops scaling while the next bus tier keeps
+/// climbing.
+pub fn render_bus_frontier(cells: &[crate::sweep::BusFrontierCell]) -> String {
+    let mut cores: Vec<usize> = cells.iter().map(|c| c.cores).collect();
+    cores.sort_unstable();
+    cores.dedup();
+    // Bus rows in the cells' (already bus-major) order.
+    let mut buses: Vec<Option<f64>> = Vec::new();
+    for c in cells {
+        if !buses.contains(&c.membus_bps) {
+            buses.push(c.membus_bps);
+        }
+    }
+    let mut s = String::from(
+        "§4 2-D frontier: MB/s/node by cores x memory bus (dfsio-write, direct I/O, no LZO)\n",
+    );
+    s.push_str(&format!("{:<16}", "bus \\ cores"));
+    for c in &cores {
+        s.push_str(&format!("{c:>10}"));
+    }
+    s.push('\n');
+    for bus in &buses {
+        let label = match bus {
+            None => "preset".to_string(),
+            Some(b) => format!("{:.0} MiB/s", b / MIB),
+        };
+        s.push_str(&format!("{label:<16}"));
+        for core in &cores {
+            match cells.iter().find(|c| c.cores == *core && c.membus_bps == *bus) {
+                Some(cell) => {
+                    let b = &cell.bottleneck[..1]; // c/d/n/m initial
+                    s.push_str(&format!("{:>8.1}/{b}", cell.per_node_mbps));
+                }
+                None => s.push_str(&format!("{:>10}", "-")),
+            }
+        }
+        s.push('\n');
+    }
+    s.push_str("cell = MB/s per node / bottleneck (c=cpu d=disk n=net m=membus)\n");
+    s
+}
+
+/// Render the degraded-mode table: every faulted sweep scenario next to
+/// its fault-free twin — runtime overhead, recovery traffic, wasted
+/// speculative work, and the energy bill of failure tolerance.
+pub fn render_degraded(rows: &[crate::sweep::DegradedRow]) -> String {
+    if rows.is_empty() {
+        return String::from("degraded-mode table: no faulted scenarios in this sweep\n");
+    }
+    let mut s = String::from(
+        "degraded-mode table (vs fault-free twin)\n\
+         scenario                                             seconds   overhead  recovery   re-rep  spec L/W   wasted-s  energy\n",
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "{:<52} {:>8.1}   {:>+7.1}%  {:>6.1}MB   {:>6}  {:>4}/{:<4} {:>8.1}  {:>+5.1}%\n",
+            r.id,
+            r.seconds,
+            r.slowdown_frac * 100.0,
+            r.recovery_mb,
+            r.rereplications,
+            r.spec_launched,
+            r.spec_wasted,
+            r.wasted_task_seconds,
+            r.energy_overhead_frac * 100.0,
+        ));
+    }
+    s
+}

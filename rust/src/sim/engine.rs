@@ -171,6 +171,16 @@ pub struct Engine {
     /// Live flow slots demanding each resource (the sharing-graph index).
     res_flows: Vec<Vec<usize>>,
     flows: Vec<Option<FlowState>>,
+    /// Last version a slot's previous occupant reached. Once any flow
+    /// has been cancelled (`cancelled_flows_guard`), a reused slot's new
+    /// flow continues from here, so a stale `FlowDone` entry left by the
+    /// previous occupant can never match the new occupant's version —
+    /// mass cancellation via [`Engine::cancel_flows_on`] leaves many
+    /// future-dated stale entries, which makes that collision practical.
+    /// Cancel-free runs keep the historical version reset (bit-identical
+    /// trajectories with pre-fault builds).
+    slot_version: Vec<u64>,
+    cancelled_flows_guard: bool,
     free_flow_slots: Vec<usize>,
     flow_done: Vec<Option<Callback>>,
     classes: ClassTable,
@@ -225,6 +235,8 @@ impl Engine {
             resources: Vec::new(),
             res_flows: Vec::new(),
             flows: Vec::new(),
+            slot_version: Vec::new(),
+            cancelled_flows_guard: false,
             free_flow_slots: Vec::new(),
             flow_done: Vec::new(),
             classes: ClassTable::default(),
@@ -382,8 +394,17 @@ impl Engine {
             self.flows.push(Some(state));
             self.flow_done.push(Some(Box::new(on_done)));
             self.flow_mark.push(0);
+            self.slot_version.push(0);
             self.flows.len() - 1
         };
+        // After any cancellation, continue the slot's version sequence
+        // across occupants so stale heap entries from a previous
+        // occupant can never match (see `slot_version`).
+        if self.cancelled_flows_guard {
+            if let Some(f) = self.flows[slot].as_mut() {
+                f.version = self.slot_version[slot];
+            }
+        }
         self.index_flow(slot);
         self.live_flow_count += 1;
         if self.live_flow_count > self.stats.peak_live_flows {
@@ -398,11 +419,38 @@ impl Engine {
     pub fn cancel_flow(&mut self, id: FlowId) {
         let alive = self.flows[id.0].as_ref().map(|f| f.alive).unwrap_or(false);
         if alive {
+            self.cancelled_flows_guard = true;
             // Attribute progress at the old rate before removal.
             self.settle_flow(id.0);
             self.remove_flow(id.0);
             self.mark_dirty();
         }
+    }
+
+    /// Cancel every live flow that places a demand on `res`; completion
+    /// callbacks never run. Returns the number of flows cancelled.
+    ///
+    /// This is the fault-injection kill switch: when a node dies, every
+    /// flow touching its CPU/disk/NIC/bus is torn down at the instant of
+    /// the crash (protocol layers re-drive surviving work through their
+    /// registered failover handlers). Progress up to `now` is settled at
+    /// the old rates first, so usage accounting stays exact.
+    pub fn cancel_flows_on(&mut self, res: ResourceId) -> usize {
+        self.cancelled_flows_guard = true;
+        let slots: Vec<usize> = self.res_flows[res.index()].clone();
+        let mut n = 0;
+        for s in slots {
+            let alive = self.flows[s].as_ref().map(|f| f.alive).unwrap_or(false);
+            if alive {
+                self.settle_flow(s);
+                self.remove_flow(s);
+                n += 1;
+            }
+        }
+        if n > 0 {
+            self.mark_dirty();
+        }
+        n
     }
 
     /// Remaining units of a live flow (None if finished/cancelled).
@@ -492,6 +540,9 @@ impl Engine {
     /// Tear down a live flow (shared by cancel and completion).
     fn remove_flow(&mut self, slot: usize) {
         self.unindex_flow(slot);
+        if let Some(f) = self.flows[slot].as_ref() {
+            self.slot_version[slot] = f.version;
+        }
         self.flows[slot] = None;
         self.flow_done[slot] = None;
         self.free_flow_slots.push(slot);
@@ -1106,6 +1157,62 @@ mod tests {
             v
         }
         assert_eq!(run(true), run(false));
+    }
+
+    #[test]
+    fn cancel_flows_on_kills_only_that_resource() {
+        let mut e = Engine::new(12);
+        let a = e.add_resource("a", 10.0);
+        let b = e.add_resource("b", 10.0);
+        let c = e.class("x");
+        e.start_flow(FlowSpec::new(100.0, "A").demand(a, 1.0, c), |_| {
+            panic!("flow on killed resource must not complete")
+        });
+        e.start_flow(FlowSpec::new(100.0, "AB").demand(a, 0.5, c).demand(b, 0.5, c), |_| {
+            panic!("flow touching killed resource must not complete")
+        });
+        let t = shared(0.0f64);
+        let tt = t.clone();
+        e.start_flow(FlowSpec::new(100.0, "B").demand(b, 1.0, c), move |e| {
+            *tt.borrow_mut() = e.now()
+        });
+        e.after(1.0, move |e| {
+            let killed = e.cancel_flows_on(a);
+            assert_eq!(killed, 2);
+        });
+        e.run();
+        // Max-min before the kill: every flow runs at 20/3 (resource a
+        // saturates at 1.5λ = 10). After t=1 B owns b: remaining
+        // 100 - 20/3 at 10/s → t = 1 + 28/3 = 31/3.
+        assert!((*t.borrow() - 31.0 / 3.0).abs() < 1e-9, "B at {}", t.borrow());
+        assert_eq!(e.live_flows(), 0);
+    }
+
+    /// A stale prediction left by a cancelled flow must never fire for
+    /// the slot's next occupant, even when the versions would collide
+    /// without the persistent per-slot version sequence.
+    #[test]
+    fn slot_reuse_ignores_stale_predictions() {
+        let mut e = Engine::new(13);
+        let link = e.add_resource("link", 10.0);
+        let c = e.class("x");
+        // A: prediction at t=10 (100 units at 10/s), version 1.
+        let fa = e.start_flow(FlowSpec::new(100.0, "A").demand(link, 1.0, c), |_| {
+            panic!("cancelled flow must not complete")
+        });
+        let t = shared(0.0f64);
+        let tt = t.clone();
+        e.after(1.0, move |e| {
+            e.cancel_flow(fa);
+            // B reuses A's slot; 300 units at 10/s → done at t=31. A's
+            // stale entry at t=10 must be skipped, not complete B early.
+            e.start_flow(FlowSpec::new(300.0, "B").demand(link, 1.0, c), move |e| {
+                *tt.borrow_mut() = e.now()
+            });
+        });
+        e.run();
+        assert!((*t.borrow() - 31.0).abs() < 1e-9, "B at {}", t.borrow());
+        assert!(e.stats().stale_events_skipped >= 1);
     }
 
     #[test]

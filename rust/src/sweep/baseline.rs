@@ -153,13 +153,13 @@ mod tests {
 
     fn synthetic_results(mbps_scale: f64) -> SweepResults {
         let g = SweepGrid {
-            base_seed: 1,
             families: vec![ClusterFamily::Amdahl],
             nodes: vec![9],
             cores: vec![1, 2],
             write_paths: vec![WritePath::DirectIo],
             lzo: vec![false],
             workloads: vec![Workload::DfsioWrite],
+            ..SweepGrid::paper_default(1, 1, 1)
         };
         let records = g
             .expand()

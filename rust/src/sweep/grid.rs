@@ -2,13 +2,21 @@
 //!
 //! A [`SweepGrid`] names the design-space axes the paper's §5 argument
 //! ranges over — cluster family, node count, Atom cores per blade, HDFS
-//! write path, LZO, workload — and expands them into concrete
-//! [`Scenario`]s with **stable ids** (pure functions of the axis values)
-//! and **deterministic per-scenario seeds** (derived from the base seed
-//! and the id, so adding or removing an axis value never perturbs the
-//! seeds of the surviving scenarios).
+//! write path, LZO, workload, memory-bus capacity, and the degraded-mode
+//! axes (`mtbf`, `straggler_frac`, speculation) — and expands them into
+//! concrete [`Scenario`]s with **stable ids** (pure functions of the
+//! axis values) and **deterministic per-scenario seeds** (derived from
+//! the base seed and the id, so adding or removing an axis value never
+//! perturbs the seeds of the surviving scenarios).
+//!
+//! Axis values at their defaults (no bus override, no faults) leave the
+//! id in its historical format, so fault-free `BENCH_sweep.json` output
+//! is byte-identical to pre-fault builds and old `--baseline` files
+//! keep lining up.
 
 use crate::conf::{ClusterPreset, HadoopConf};
+use crate::faults::InjectionPlan;
+use crate::hw::MIB;
 
 /// Cluster hardware family (the paper's two testbeds).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -119,6 +127,14 @@ pub struct Scenario {
     pub write_path: WritePath,
     pub lzo: bool,
     pub workload: Workload,
+    /// Memory-bus copy capacity override, bytes/s (None = preset value).
+    pub membus_bps: Option<f64>,
+    /// Per-node MTBF for crash injection (None = no crashes).
+    pub mtbf: Option<f64>,
+    /// Fraction of slaves that straggle (0.0 = none).
+    pub straggler_frac: f64,
+    /// Speculative execution of straggling maps.
+    pub speculation: bool,
     /// Deterministic per-scenario seed derived from the grid's base seed
     /// and the scenario id.
     pub seed: u64,
@@ -141,7 +157,25 @@ impl Scenario {
         let mut c = HadoopConf::default();
         self.write_path.apply(&mut c);
         c.lzo_output = self.lzo;
+        c.membus_copy_bps = self.membus_bps;
         c
+    }
+
+    /// The fault-injection plan these axes describe (empty at the
+    /// default axis values).
+    pub fn fault_plan(&self) -> InjectionPlan {
+        InjectionPlan {
+            mtbf_s: self.mtbf,
+            straggler_frac: self.straggler_frac,
+            speculation: self.speculation,
+            ..InjectionPlan::empty()
+        }
+    }
+
+    /// Does this scenario run with the fault subsystem armed (fault
+    /// events and/or speculative execution)?
+    pub fn has_faults(&self) -> bool {
+        self.fault_plan().active()
     }
 }
 
@@ -157,12 +191,20 @@ pub struct SweepGrid {
     pub write_paths: Vec<WritePath>,
     pub lzo: Vec<bool>,
     pub workloads: Vec<Workload>,
+    /// Memory-bus copy-capacity overrides, bytes/s (None = preset).
+    pub membus: Vec<Option<f64>>,
+    /// Per-node MTBF values for crash injection (None = fault-free).
+    pub mtbf: Vec<Option<f64>>,
+    /// Straggler fractions (0.0 = none).
+    pub stragglers: Vec<f64>,
+    /// Speculative-execution settings.
+    pub speculation: Vec<bool>,
 }
 
 impl SweepGrid {
     /// The paper-shaped default grid: the nine-blade Amdahl cluster with
     /// `core_lo..=core_hi` Atom cores, all three §3.4 write paths, LZO
-    /// on/off, all four workloads.
+    /// on/off, all four workloads — stock memory bus, no faults.
     pub fn paper_default(base_seed: u64, core_lo: usize, core_hi: usize) -> SweepGrid {
         SweepGrid {
             base_seed,
@@ -172,17 +214,38 @@ impl SweepGrid {
             write_paths: WritePath::ALL.to_vec(),
             lzo: vec![false, true],
             workloads: Workload::ALL.to_vec(),
+            membus: vec![None],
+            mtbf: vec![None],
+            stragglers: vec![0.0],
+            speculation: vec![false],
         }
     }
 
-    /// Number of scenarios `expand` will produce (axis counts multiply).
+    /// Speculation axis values applicable to `w`: speculative execution
+    /// is a MapReduce mechanism, so the dfsio workloads only ever run
+    /// with it off — expanding a `speculation: true` twin for them
+    /// would re-simulate a bit-identical run under a different id.
+    fn spec_values_for(&self, w: Workload) -> usize {
+        match w {
+            Workload::Search | Workload::Stat => self.speculation.len(),
+            Workload::DfsioWrite | Workload::DfsioRead => {
+                self.speculation.iter().filter(|s| !**s).count()
+            }
+        }
+    }
+
+    /// Number of scenarios `expand` will produce (axis counts multiply,
+    /// except that dfsio workloads skip `speculation: true`).
     pub fn len(&self) -> usize {
-        self.families.len()
+        let base = self.families.len()
             * self.nodes.len()
             * self.cores.len()
             * self.write_paths.len()
             * self.lzo.len()
-            * self.workloads.len()
+            * self.membus.len()
+            * self.mtbf.len()
+            * self.stragglers.len();
+        base * self.workloads.iter().map(|&w| self.spec_values_for(w)).sum::<usize>()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -190,7 +253,8 @@ impl SweepGrid {
     }
 
     /// Expand the Cartesian product, in a fixed axis-major order
-    /// (family, nodes, cores, write path, lzo, workload).
+    /// (family, nodes, cores, write path, lzo, workload, membus, mtbf,
+    /// stragglers, speculation).
     pub fn expand(&self) -> Vec<Scenario> {
         let mut out = Vec::with_capacity(self.len());
         for &family in &self.families {
@@ -201,18 +265,51 @@ impl SweepGrid {
                     for &write_path in &self.write_paths {
                         for &lzo in &self.lzo {
                             for &workload in &self.workloads {
-                                let id = scenario_id(family, nodes, cores, write_path, lzo, workload);
-                                let seed = derive_seed(self.base_seed, &id);
-                                out.push(Scenario {
-                                    id,
-                                    family,
-                                    nodes,
-                                    cores,
-                                    write_path,
-                                    lzo,
-                                    workload,
-                                    seed,
-                                });
+                                for &membus_bps in &self.membus {
+                                    for &mtbf in &self.mtbf {
+                                        for &straggler_frac in &self.stragglers {
+                                            for &speculation in &self.speculation {
+                                                // Speculation only applies to
+                                                // MapReduce workloads (see
+                                                // `spec_values_for`).
+                                                if speculation
+                                                    && matches!(
+                                                        workload,
+                                                        Workload::DfsioWrite
+                                                            | Workload::DfsioRead
+                                                    )
+                                                {
+                                                    continue;
+                                                }
+                                                let mut id = scenario_id(
+                                                    family, nodes, cores, write_path, lzo, workload,
+                                                );
+                                                push_axis_suffixes(
+                                                    &mut id,
+                                                    membus_bps,
+                                                    mtbf,
+                                                    straggler_frac,
+                                                    speculation,
+                                                );
+                                                let seed = derive_seed(self.base_seed, &id);
+                                                out.push(Scenario {
+                                                    id,
+                                                    family,
+                                                    nodes,
+                                                    cores,
+                                                    write_path,
+                                                    lzo,
+                                                    workload,
+                                                    membus_bps,
+                                                    mtbf,
+                                                    straggler_frac,
+                                                    speculation,
+                                                    seed,
+                                                });
+                                            }
+                                        }
+                                    }
+                                }
                             }
                         }
                     }
@@ -224,6 +321,10 @@ impl SweepGrid {
 }
 
 /// Stable scenario id, e.g. `amdahl-n9-c4-direct-nolzo-dfsio-write`.
+/// Non-default bus/fault axis values append suffixes
+/// (`-bus2600-mtbf600-strag25-spec`); at the defaults the id keeps its
+/// historical format, so old baselines and fault-free JSON stay
+/// byte-identical.
 pub fn scenario_id(
     family: ClusterFamily,
     nodes: usize,
@@ -241,6 +342,29 @@ pub fn scenario_id(
         if lzo { "lzo" } else { "nolzo" },
         workload.key()
     )
+}
+
+/// Append the non-default bus/fault axis suffixes to a scenario id.
+fn push_axis_suffixes(
+    id: &mut String,
+    membus_bps: Option<f64>,
+    mtbf: Option<f64>,
+    straggler_frac: f64,
+    speculation: bool,
+) {
+    use std::fmt::Write as _;
+    if let Some(b) = membus_bps {
+        let _ = write!(id, "-bus{}", (b / MIB).round() as u64);
+    }
+    if let Some(m) = mtbf {
+        let _ = write!(id, "-mtbf{}", m.round() as u64);
+    }
+    if straggler_frac > 0.0 {
+        let _ = write!(id, "-strag{}", (straggler_frac * 100.0).round() as u64);
+    }
+    if speculation {
+        id.push_str("-spec");
+    }
 }
 
 /// Deterministic seed for a scenario: splitmix64 over the id bytes,
@@ -344,18 +468,62 @@ mod tests {
     #[test]
     fn occ_family_honors_node_and_core_axes() {
         let g = SweepGrid {
-            base_seed: 1,
             families: vec![ClusterFamily::Occ],
             nodes: vec![6],
             cores: vec![4],
             write_paths: vec![WritePath::DirectIo],
             lzo: vec![false],
             workloads: vec![Workload::DfsioWrite],
+            ..SweepGrid::paper_default(1, 1, 1)
         };
         let sc = &g.expand()[0];
         assert_eq!(sc.preset().node_count(), 6);
         assert_eq!(sc.preset().core_count(), 4);
         assert!(sc.id.starts_with("occ-n6-c4-"), "id {}", sc.id);
+    }
+
+    #[test]
+    fn default_axes_keep_the_historical_id_format() {
+        // The empty-plan identity invariant starts here: at the default
+        // bus/fault axis values the id has no suffix, so seeds — and
+        // therefore every simulated outcome — are unchanged.
+        let g = SweepGrid::paper_default(42, 4, 4);
+        for sc in g.expand() {
+            assert!(!sc.id.contains("-bus"), "unexpected bus suffix in {}", sc.id);
+            assert!(!sc.id.contains("-mtbf"), "unexpected mtbf suffix in {}", sc.id);
+            assert!(!sc.has_faults());
+            assert!(sc.fault_plan().is_empty());
+            assert!(sc.conf().membus_copy_bps.is_none());
+        }
+    }
+
+    #[test]
+    fn bus_and_fault_axes_expand_with_suffixed_ids() {
+        let g = SweepGrid {
+            workloads: vec![Workload::Search],
+            write_paths: vec![WritePath::DirectIo],
+            lzo: vec![false],
+            membus: vec![None, Some(2600.0 * MIB)],
+            mtbf: vec![None, Some(600.0)],
+            stragglers: vec![0.0, 0.25],
+            speculation: vec![false, true],
+            ..SweepGrid::paper_default(7, 2, 2)
+        };
+        let scs = g.expand();
+        assert_eq!(scs.len(), 16);
+        let ids: Vec<&str> = scs.iter().map(|s| s.id.as_str()).collect();
+        assert!(ids.contains(&"amdahl-n9-c2-direct-nolzo-search"));
+        assert!(ids.contains(&"amdahl-n9-c2-direct-nolzo-search-bus2600-mtbf600-strag25-spec"));
+        // Every id unique, every seed distinct.
+        let mut uniq = ids.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), scs.len());
+        let faulty = scs.iter().find(|s| s.id.ends_with("-mtbf600")).unwrap();
+        assert!(faulty.has_faults());
+        assert_eq!(faulty.fault_plan().mtbf_s, Some(600.0));
+        let bussed = scs.iter().find(|s| s.id.ends_with("-bus2600")).unwrap();
+        assert_eq!(bussed.conf().membus_copy_bps, Some(2600.0 * MIB));
     }
 
     #[test]

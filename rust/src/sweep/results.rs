@@ -9,6 +9,7 @@
 //! **balanced** blade. The analytic §4 estimate (Amdahl's I/O law) is
 //! computed alongside as a cross-check; both land on four Atom cores.
 
+use crate::faults::FaultStats;
 use crate::hw::MIB;
 use crate::sim::{EngineStats, SolverMode, UsageSnapshot};
 
@@ -83,6 +84,16 @@ pub struct ScenarioRecord {
     pub net_util: f64,
     pub membus_util: f64,
     pub bottleneck: &'static str,
+    /// Memory-bus override the scenario ran with (None = preset bus).
+    pub membus_bps: Option<f64>,
+    /// Fault axes + what the fault subsystem did. None for fault-free
+    /// scenarios — and then nothing fault-related is serialized, which
+    /// keeps fault-free `BENCH_sweep.json` byte-identical to pre-fault
+    /// builds (the empty-plan identity invariant).
+    pub fault_axes: Option<(Option<f64>, f64, bool)>,
+    pub faults: Option<FaultStats>,
+    /// Recovery joules (energy attributed to re-replication transfers).
+    pub recovery_joules: f64,
     /// Engine perf counters for the scenario's run. Not part of the
     /// simulation outcome (the counters differ between solver modes by
     /// design), so they are serialized in the separate "perf" section —
@@ -125,8 +136,24 @@ impl ScenarioRecord {
             net_util: k.net,
             membus_util: k.membus,
             bottleneck: k.bottleneck(),
+            membus_bps: sc.membus_bps,
+            fault_axes: if sc.has_faults() {
+                Some((sc.mtbf, sc.straggler_frac, sc.speculation))
+            } else {
+                None
+            },
+            faults: None,
+            recovery_joules: 0.0,
             stats,
         }
+    }
+
+    /// Attach the fault outcome of a degraded-mode run (the runner calls
+    /// this only for scenarios that actually injected faults).
+    pub fn with_faults(mut self, faults: FaultStats, recovery_joules: f64) -> ScenarioRecord {
+        self.faults = Some(faults);
+        self.recovery_joules = recovery_joules;
+        self
     }
 }
 
@@ -197,6 +224,11 @@ impl SweepResults {
                     && r.workload == workload.key()
                     && r.write_path == write_path.key()
                     && !r.lzo
+                    // The frontier is a fault-free, stock-bus cut; the
+                    // degraded-mode table and the 2-D bus frontier read
+                    // the other slices.
+                    && r.fault_axes.is_none()
+                    && r.membus_bps.is_none()
             })
             .collect();
         base.sort_by_key(|r| (r.cores, r.nodes));
@@ -280,6 +312,46 @@ impl SweepResults {
             s.push_str(&format!("\"net_util\": {}, ", num(r.net_util)));
             s.push_str(&format!("\"membus_util\": {}, ", num(r.membus_util)));
             s.push_str(&format!("\"bottleneck\": \"{}\"", r.bottleneck));
+            // Bus / fault fields are emitted only for scenarios that set
+            // them, so the default grid's records — and the whole file —
+            // stay byte-identical to pre-fault builds.
+            if let Some(b) = r.membus_bps {
+                s.push_str(&format!(", \"membus_bps\": {}", num(b)));
+            }
+            if let Some((mtbf, frac, spec)) = r.fault_axes {
+                s.push_str(&format!(
+                    ", \"mtbf\": {}",
+                    mtbf.map(num).unwrap_or_else(|| "null".into())
+                ));
+                s.push_str(&format!(", \"straggler_frac\": {}", num(frac)));
+                s.push_str(&format!(", \"speculation\": {}", spec));
+            }
+            if let Some(f) = &r.faults {
+                s.push_str(&format!(
+                    ", \"crashes\": {}, \"stragglers\": {}, \"rereplications\": {}, \
+                     \"recovery_bytes\": {}, \"recovery_joules\": {}, \"blocks_lost\": {}, \
+                     \"lost_block_reads\": {}, \
+                     \"pipeline_failovers\": {}, \"maps_requeued\": {}, \
+                     \"reduces_requeued\": {}, \"map_outputs_lost\": {}, \
+                     \"spec_launched\": {}, \"spec_wins\": {}, \"spec_wasted\": {}, \
+                     \"wasted_task_seconds\": {}",
+                    f.crashes,
+                    f.stragglers,
+                    f.rereplications_done,
+                    num(f.recovery_bytes),
+                    num(r.recovery_joules),
+                    f.blocks_lost,
+                    f.lost_block_reads,
+                    f.pipeline_failovers,
+                    f.maps_requeued,
+                    f.reduces_requeued,
+                    f.map_outputs_lost,
+                    f.spec_launched,
+                    f.spec_wins,
+                    f.spec_wasted,
+                    num(f.wasted_task_seconds),
+                ));
+            }
             s.push_str(if i + 1 == self.records.len() { "}\n" } else { "},\n" });
         }
         s.push_str("  ],\n");
@@ -360,6 +432,114 @@ impl SweepResults {
         }
         s.push_str("}\n");
         s
+    }
+}
+
+/// One cell of the 2-D core × memory-bus frontier.
+#[derive(Debug, Clone)]
+pub struct BusFrontierCell {
+    pub cores: usize,
+    /// Bus override in bytes/s; None = the preset bus (1300 MiB/s on
+    /// the Amdahl blade).
+    pub membus_bps: Option<f64>,
+    pub per_node_mbps: f64,
+    pub bottleneck: &'static str,
+}
+
+/// One faulted scenario paired with its fault-free twin (same axes,
+/// fault axes at the defaults).
+#[derive(Debug, Clone)]
+pub struct DegradedRow {
+    pub id: String,
+    pub baseline_id: Option<String>,
+    pub seconds: f64,
+    pub baseline_seconds: f64,
+    /// Runtime overhead vs the fault-free twin (0.25 = 25% slower).
+    pub slowdown_frac: f64,
+    pub crashes: usize,
+    pub stragglers: usize,
+    pub rereplications: usize,
+    pub recovery_mb: f64,
+    pub recovery_joules: f64,
+    pub spec_launched: usize,
+    pub spec_wasted: usize,
+    pub wasted_task_seconds: f64,
+    /// Energy overhead vs the fault-free twin.
+    pub energy_overhead_frac: f64,
+}
+
+impl SweepResults {
+    /// The 2-D core × memory-bus frontier cut (§4's "more cores alone
+    /// may leave the blade memory-bound" argument made sweepable):
+    /// dfsio-write, tuned write path, no LZO, fault-free, every swept
+    /// (cores, bus) pair. Sorted bus-major (preset bus first), then by
+    /// cores.
+    pub fn bus_frontier(&self) -> Vec<BusFrontierCell> {
+        fn bus_key(b: Option<f64>) -> f64 {
+            b.unwrap_or(-1.0)
+        }
+        let mut cells: Vec<BusFrontierCell> = self
+            .records
+            .iter()
+            .filter(|r| {
+                r.family == "amdahl"
+                    && r.workload == "dfsio-write"
+                    && r.write_path == "direct"
+                    && !r.lzo
+                    && r.fault_axes.is_none()
+            })
+            .map(|r| BusFrontierCell {
+                cores: r.cores,
+                membus_bps: r.membus_bps,
+                per_node_mbps: r.per_node_mbps,
+                bottleneck: r.bottleneck,
+            })
+            .collect();
+        cells.sort_by(|a, b| {
+            bus_key(a.membus_bps)
+                .total_cmp(&bus_key(b.membus_bps))
+                .then(a.cores.cmp(&b.cores))
+        });
+        cells
+    }
+
+    /// Pair every faulted record with its fault-free twin: the
+    /// degraded-mode table (runtime, recovery traffic, wasted
+    /// speculative work, energy overhead).
+    pub fn degraded_rows(&self) -> Vec<DegradedRow> {
+        let mut rows = Vec::new();
+        for r in &self.records {
+            let Some(f) = &r.faults else { continue };
+            let twin = self.records.iter().find(|b| {
+                b.fault_axes.is_none()
+                    && b.family == r.family
+                    && b.nodes == r.nodes
+                    && b.cores == r.cores
+                    && b.write_path == r.write_path
+                    && b.lzo == r.lzo
+                    && b.workload == r.workload
+                    && b.membus_bps == r.membus_bps
+            });
+            let base_s = twin.map(|t| t.seconds).unwrap_or(0.0);
+            let base_j = twin.map(|t| t.joules).unwrap_or(0.0);
+            rows.push(DegradedRow {
+                id: r.id.clone(),
+                baseline_id: twin.map(|t| t.id.clone()),
+                seconds: r.seconds,
+                baseline_seconds: base_s,
+                slowdown_frac: if base_s > 0.0 { r.seconds / base_s - 1.0 } else { 0.0 },
+                crashes: f.crashes,
+                stragglers: f.stragglers,
+                rereplications: f.rereplications_done,
+                recovery_mb: f.recovery_bytes / MIB,
+                recovery_joules: r.recovery_joules,
+                spec_launched: f.spec_launched,
+                spec_wasted: f.spec_wasted,
+                wasted_task_seconds: f.wasted_task_seconds,
+                energy_overhead_frac: if base_j > 0.0 { r.joules / base_j - 1.0 } else { 0.0 },
+            });
+        }
+        rows
     }
 }
 

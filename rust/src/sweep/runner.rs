@@ -13,6 +13,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::thread;
 
+use crate::faults::{fault_stream_seed, FaultSchedule};
 use crate::hdfs::testdfsio;
 use crate::hw::MIB;
 use crate::sim::{SimConfig, SolverMode};
@@ -51,6 +52,10 @@ pub struct SweepOptions {
     /// cluster size sees the same work per node. At the default 9-node
     /// grid the factor is exactly 1, so seed results are unchanged.
     pub scale_with_nodes: bool,
+    /// CPU capacity multiplier applied to straggler nodes (not a grid
+    /// axis: like `scale`, it is held constant across the sweep so the
+    /// degraded scenarios stay comparable). Default 0.4.
+    pub straggler_slowdown: f64,
     /// Engine rate-solver mode; [`SolverMode::WholeSet`] is the
     /// pre-refactor baseline kept for benchmarks and the byte-identical
     /// regression test.
@@ -67,6 +72,7 @@ impl Default for SweepOptions {
             dfsio_bytes_per_worker: 128.0 * MIB,
             dfsio_workers: 4,
             scale_with_nodes: true,
+            straggler_slowdown: 0.4,
             solver: SolverMode::Incremental,
             progress: false,
         }
@@ -117,48 +123,74 @@ pub fn run_sweep(grid: &SweepGrid, opts: &SweepOptions) -> SweepResults {
 }
 
 /// Run one scenario to completion on the current thread.
+///
+/// Fault axes become a [`FaultSchedule`] whose RNG stream is keyed by
+/// the scenario's **stable id** (never by insertion order or worker
+/// thread), so a faulted sweep is as thread-count-independent as a
+/// fault-free one. Fault-free scenarios pass an empty schedule, which
+/// installs nothing at all.
 pub fn run_scenario(sc: &Scenario, opts: &SweepOptions) -> ScenarioRecord {
     let conf = sc.conf();
     let preset = sc.preset();
     let slaves = preset.slave_count() as f64;
     let sim = SimConfig::new(sc.seed).with_solver(opts.solver);
+    let mut plan = sc.fault_plan();
+    plan.straggler_slowdown = opts.straggler_slowdown;
+    let fault_seed = fault_stream_seed(sc.seed, &sc.id);
+    let schedule = if plan.active() {
+        FaultSchedule::generate(&plan, fault_seed, preset.node_count())
+    } else {
+        FaultSchedule::default()
+    };
     match sc.workload {
         Workload::DfsioWrite => {
-            let run = testdfsio::write_test_on(
+            let run = testdfsio::write_test_faulted(
                 preset,
                 sim,
                 opts.dfsio_workers,
                 opts.dfsio_bytes_per_worker,
                 &conf,
+                &schedule,
             );
             let bytes = opts.dfsio_workers as f64 * opts.dfsio_bytes_per_worker * slaves;
-            ScenarioRecord::new(
+            let rec = ScenarioRecord::new(
                 sc,
                 run.result.makespan,
                 bytes,
                 run.energy.total_joules,
                 &run.usage,
                 run.stats,
-            )
+            );
+            if sc.has_faults() {
+                rec.with_faults(run.faults, run.energy.recovery_joules)
+            } else {
+                rec
+            }
         }
         Workload::DfsioRead => {
-            let run = testdfsio::read_test_on(
+            let run = testdfsio::read_test_faulted(
                 preset,
                 sim,
                 opts.dfsio_workers,
                 opts.dfsio_bytes_per_worker,
                 &conf,
                 false,
+                &schedule,
             );
             let bytes = opts.dfsio_workers as f64 * opts.dfsio_bytes_per_worker * slaves;
-            ScenarioRecord::new(
+            let rec = ScenarioRecord::new(
                 sc,
                 run.result.makespan,
                 bytes,
                 run.energy.total_joules,
                 &run.usage,
                 run.stats,
-            )
+            );
+            if sc.has_faults() {
+                rec.with_faults(run.faults, run.energy.recovery_joules)
+            } else {
+                rec
+            }
         }
         Workload::Search | Workload::Stat => {
             let app = if sc.workload == Workload::Search { App::Search } else { App::Stat };
@@ -179,20 +211,27 @@ pub fn run_scenario(sc: &Scenario, opts: &SweepOptions) -> ScenarioRecord {
                 kernel_every: usize::MAX, // cost model only on the sweep path
                 kernels: None,
                 solver: opts.solver,
+                faults: plan,
+                fault_seed,
                 ..ZonesConfig::default()
             };
             let out = run_app(preset, &conf, &z, app);
             let bytes = out.job.input_bytes
                 + out.job.hdfs_output_bytes
                 + out.step2.as_ref().map(|j| j.hdfs_output_bytes).unwrap_or(0.0);
-            ScenarioRecord::new(
+            let rec = ScenarioRecord::new(
                 sc,
                 out.total_seconds,
                 bytes,
                 out.energy.total_joules,
                 &out.usage,
                 out.stats,
-            )
+            );
+            if sc.has_faults() {
+                rec.with_faults(out.faults, out.energy.recovery_joules)
+            } else {
+                rec
+            }
         }
     }
 }
@@ -204,13 +243,13 @@ mod tests {
 
     fn tiny_grid(seed: u64) -> SweepGrid {
         SweepGrid {
-            base_seed: seed,
             families: vec![ClusterFamily::Amdahl],
             nodes: vec![5],
             cores: vec![1, 2],
             write_paths: vec![WritePath::DirectIo],
             lzo: vec![false],
             workloads: vec![Workload::DfsioWrite],
+            ..SweepGrid::paper_default(seed, 1, 1)
         }
     }
 

@@ -64,6 +64,13 @@ pub struct ZonesConfig {
     /// Rate-solver mode for the simulation engine (the whole-set
     /// baseline exists for benchmarks and regression tests).
     pub solver: crate::sim::SolverMode,
+    /// Fault-injection plan (default empty: nothing is installed and
+    /// the run is byte-identical to a fault-free build).
+    pub faults: crate::faults::InjectionPlan,
+    /// RNG stream seed for fault-event sampling; 0 derives one from
+    /// `seed`. Sweeps pass [`crate::faults::fault_stream_seed`] of the
+    /// scenario's stable id so faults never depend on insertion order.
+    pub fault_seed: u64,
 }
 
 impl Default for ZonesConfig {
@@ -79,6 +86,8 @@ impl Default for ZonesConfig {
             kernel_every: usize::MAX,
             kernels: None,
             solver: crate::sim::SolverMode::Incremental,
+            faults: crate::faults::InjectionPlan::empty(),
+            fault_seed: 0,
         }
     }
 }

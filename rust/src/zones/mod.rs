@@ -45,6 +45,8 @@ pub struct RunOutcome {
     pub usage: Vec<crate::sim::UsageSnapshot>,
     /// Engine perf counters for the whole run (solver work, heap churn).
     pub stats: crate::sim::EngineStats,
+    /// What fault injection did to the run (all zeros when inactive).
+    pub faults: crate::faults::FaultStats,
 }
 
 /// Build a cluster world for `preset` and ingest the catalog.
@@ -54,7 +56,7 @@ pub fn setup_world(
     conf: &HadoopConf,
     input_bytes: f64,
 ) -> (WorldHandle, Vec<String>) {
-    let spec = preset.node_spec(conf.data_disk);
+    let spec = preset.node_spec_for(conf);
     let n = preset.node_count();
     let cluster = Cluster::build(engine, &spec, n);
     let mut world = World::new(cluster);
@@ -83,6 +85,16 @@ pub fn run_app(preset: ClusterPreset, conf: &HadoopConf, zcfg: &ZonesConfig, app
         Engine::from_config(crate::sim::SimConfig::new(zcfg.seed).with_solver(zcfg.solver));
     let cat = zcfg.catalog();
     let (world, files) = setup_world(&mut engine, preset, conf, cat.input_bytes());
+    if zcfg.faults.active() {
+        let stream = if zcfg.fault_seed != 0 {
+            zcfg.fault_seed
+        } else {
+            zcfg.seed ^ 0xFA17_FA17_FA17_FA17
+        };
+        let sched =
+            crate::faults::FaultSchedule::generate(&zcfg.faults, stream, preset.node_count());
+        crate::faults::install(&mut engine, &world, &sched);
+    }
     let cpu = preset.node_spec(conf.data_disk).cpu;
     let slaves = preset.slave_count();
     let n_reducers = slaves * conf.reduce_slots;
@@ -146,6 +158,7 @@ pub fn run_app(preset: ClusterPreset, conf: &HadoopConf, zcfg: &ZonesConfig, app
         kernel_calls: red.kernel_calls(),
         usage: engine.usage_snapshot(),
         stats: engine.stats(),
+        faults: world.borrow().faults.stats.clone(),
     }
 }
 

@@ -1,0 +1,407 @@
+//! Integration tests for the fault-injection & recovery subsystem:
+//! the empty-plan identity invariant, crash → re-replication → job
+//! completion end to end, mid-block pipeline/read failover, speculative
+//! execution, and determinism across thread counts and solver modes.
+
+use amdahl_hadoop::cluster::{Cluster, NodeId};
+use amdahl_hadoop::conf::{ClusterPreset, HadoopConf};
+use amdahl_hadoop::faults::{self, CrashSpec, FaultSchedule, InjectionPlan};
+use amdahl_hadoop::hdfs::{read_file, write_file, BlockMeta, FileMeta, ReadOpts, World, WorldHandle};
+use amdahl_hadoop::hw::{amdahl_blade, DiskKind, MIB};
+use amdahl_hadoop::sim::engine::shared;
+use amdahl_hadoop::sim::{Engine, SolverMode};
+use amdahl_hadoop::sweep::{run_sweep, ClusterFamily, SweepGrid, SweepOptions, Workload, WritePath};
+use amdahl_hadoop::zones::{run_app, App, ZonesConfig};
+
+fn world(n: usize, seed: u64) -> (Engine, WorldHandle) {
+    let mut e = Engine::new(seed);
+    let cluster = Cluster::build(&mut e, &amdahl_blade(DiskKind::Raid0), n);
+    let mut w = World::new(cluster);
+    w.namenode.set_datanodes((1..n).map(NodeId).collect());
+    (e, shared(w))
+}
+
+/// The tentpole invariant: a sweep with all fault/bus axes at their
+/// defaults emits records with the historical ids and no fault keys —
+/// the serialized bytes carry nothing from this subsystem.
+#[test]
+fn fault_free_sweep_json_carries_no_fault_fields() {
+    let g = SweepGrid {
+        families: vec![ClusterFamily::Amdahl],
+        nodes: vec![5],
+        cores: vec![1],
+        write_paths: vec![WritePath::DirectIo],
+        lzo: vec![false],
+        workloads: vec![Workload::DfsioWrite],
+        ..SweepGrid::paper_default(42, 1, 1)
+    };
+    let opts = SweepOptions {
+        threads: 2,
+        dfsio_bytes_per_worker: 32.0 * MIB,
+        dfsio_workers: 2,
+        ..SweepOptions::default()
+    };
+    let json = run_sweep(&g, &opts).to_json();
+    for key in ["mtbf", "straggler", "speculation", "recovery", "membus_bps", "crashes"] {
+        assert!(!json.contains(key), "fault-free JSON leaked key {key:?}");
+    }
+    assert!(json.contains("\"id\": \"amdahl-n5-c1-direct-nolzo-dfsio-write\""));
+}
+
+/// Crash a replica holder after a file is written: the NameNode must
+/// purge it and re-replication must restore every block to the full
+/// replication factor on the survivors.
+#[test]
+fn crash_rereplicates_blocks_back_to_full_factor() {
+    let (mut e, w) = world(9, 33);
+    let conf = HadoopConf::default();
+    write_file(&mut e, &w, NodeId(1), "f", 192.0 * MIB, &conf, "hdfs-write", |_| {});
+    e.run();
+    let victim = {
+        let wb = w.borrow();
+        wb.namenode.get_file("f").unwrap().blocks[0].replicas[1]
+    };
+    let plan = InjectionPlan {
+        crashes: vec![CrashSpec { node: victim.0, at: 1.0 }],
+        ..InjectionPlan::empty()
+    };
+    let sched = FaultSchedule::generate(&plan, 5, 9);
+    faults::install(&mut e, &w, &sched);
+    e.run();
+    let wb = w.borrow();
+    let stats = &wb.faults.stats;
+    assert_eq!(stats.crashes, 1);
+    assert!(stats.rereplications_done >= 1, "no re-replication ran");
+    assert!(stats.recovery_bytes >= 64.0 * MIB, "recovery bytes {:.0}", stats.recovery_bytes);
+    assert_eq!(stats.blocks_lost, 0);
+    for b in &wb.namenode.get_file("f").unwrap().blocks {
+        assert!(!b.replicas.contains(&victim), "dead replica still listed");
+        assert_eq!(b.replicas.len(), 3, "block {} not restored to r=3", b.id);
+        for r in &b.replicas {
+            assert!(wb.faults.is_up(*r), "replica on dead node");
+        }
+    }
+}
+
+/// Kill a DataNode in the middle of a block write: the pipeline must
+/// fail over to the survivors mid-block, commit, and top the block back
+/// up to the replication factor.
+#[test]
+fn write_pipeline_fails_over_mid_block() {
+    // Pass 1 (fault-free, same seed): discover the pipeline layout and
+    // the block-write duration. Determinism makes pass 2 identical up
+    // to the crash instant.
+    fn run(crash: Option<(usize, f64)>) -> (Engine, WorldHandle, bool) {
+        let (mut e, w) = world(9, 44);
+        if let Some((node, at)) = crash {
+            let plan = InjectionPlan {
+                crashes: vec![CrashSpec { node, at }],
+                ..InjectionPlan::empty()
+            };
+            let sched = FaultSchedule::generate(&plan, 7, 9);
+            faults::install(&mut e, &w, &sched);
+        }
+        let conf = HadoopConf::default();
+        let done = shared(false);
+        let d = done.clone();
+        write_file(&mut e, &w, NodeId(1), "f", 64.0 * MIB, &conf, "hdfs-write", move |_| {
+            *d.borrow_mut() = true;
+        });
+        e.run();
+        let ok = *done.borrow();
+        (e, w, ok)
+    }
+    let (e0, w0, ok0) = run(None);
+    assert!(ok0);
+    let duration = e0.now();
+    let victim = {
+        let wb = w0.borrow();
+        // A non-client member of the pipeline.
+        wb.namenode.get_file("f").unwrap().blocks[0].replicas[1]
+    };
+    let (_e1, w1, ok1) = run(Some((victim.0, duration * 0.4)));
+    assert!(ok1, "write did not complete after mid-block failover");
+    let wb = w1.borrow();
+    let stats = &wb.faults.stats;
+    assert_eq!(stats.pipeline_failovers, 1, "expected exactly one pipeline failover");
+    assert_eq!(stats.writes_aborted, 0);
+    let b = &wb.namenode.get_file("f").unwrap().blocks[0];
+    assert!(!b.replicas.contains(&victim));
+    assert_eq!(b.replicas.len(), 3, "commit + top-up must restore r=3");
+    for r in &b.replicas {
+        assert!(wb.faults.is_up(*r));
+    }
+}
+
+/// Kill the serving replica in the middle of a remote block read: the
+/// client must re-stream the remaining bytes from a surviving replica.
+#[test]
+fn read_fails_over_to_surviving_replica() {
+    fn run(crash: Option<(usize, f64)>) -> (Engine, WorldHandle, bool) {
+        let (mut e, w) = world(9, 55);
+        {
+            let mut wb = w.borrow_mut();
+            let id = wb.namenode.alloc_block();
+            wb.namenode.put_file(
+                "r/f",
+                FileMeta {
+                    blocks: vec![BlockMeta {
+                        id,
+                        size: 64.0 * MIB,
+                        stored_size: 64.0 * MIB,
+                        replicas: vec![NodeId(2), NodeId(3)],
+                    }],
+                },
+            );
+        }
+        if let Some((node, at)) = crash {
+            let plan = InjectionPlan {
+                crashes: vec![CrashSpec { node, at }],
+                ..InjectionPlan::empty()
+            };
+            let sched = FaultSchedule::generate(&plan, 9, 9);
+            faults::install(&mut e, &w, &sched);
+        }
+        let conf = HadoopConf::default();
+        let done = shared(false);
+        let d = done.clone();
+        read_file(&mut e, &w, NodeId(5), "r/f", &conf, ReadOpts::default(), "hdfs-read", move |_| {
+            *d.borrow_mut() = true;
+        });
+        e.run();
+        let ok = *done.borrow();
+        (e, w, ok)
+    }
+    // Pass 1: discover which replica served the read (its disk is busy).
+    let (e0, w0, ok0) = run(None);
+    assert!(ok0);
+    let duration = e0.now();
+    let src = {
+        let wb = w0.borrow();
+        let d2 = e0.busy_total(wb.cluster.node(NodeId(2)).disk);
+        let d3 = e0.busy_total(wb.cluster.node(NodeId(3)).disk);
+        assert!(d2 > 0.0 || d3 > 0.0, "no disk served the read");
+        if d2 > d3 {
+            2
+        } else {
+            3
+        }
+    };
+    // Pass 2: kill the server mid-read.
+    let (_e1, w1, ok1) = run(Some((src, duration * 0.5)));
+    assert!(ok1, "read did not complete after source death");
+    let wb = w1.borrow();
+    assert_eq!(wb.faults.stats.read_failovers, 1);
+    assert_eq!(wb.faults.stats.blocks_lost, 0);
+}
+
+/// Acceptance pin, end to end: a seeded TaskTracker/DataNode crash in
+/// the middle of a MapReduce job → blacklisting, lost-output
+/// re-execution, block re-replication — and the job still completes.
+#[test]
+fn crashed_node_job_completes_end_to_end() {
+    let conf = HadoopConf {
+        buffered_output: true,
+        direct_io_write: true,
+        ..Default::default()
+    };
+    let faulted = ZonesConfig {
+        seed: 17,
+        scale: 0.0008,
+        faults: InjectionPlan {
+            crashes: vec![CrashSpec { node: 3, at: 5.0 }],
+            ..InjectionPlan::empty()
+        },
+        ..Default::default()
+    };
+    let out = run_app(ClusterPreset::Amdahl, &conf, &faulted, App::Search);
+    assert!(out.total_seconds > 0.0, "job must complete despite the crash");
+    assert_eq!(out.faults.crashes, 1);
+    assert!(out.job.hdfs_output_bytes > 0.0);
+    // Every block in the namespace must live on survivors only.
+    // (Checked through the recovery counters: something was repaired.)
+    assert!(
+        out.faults.rereplications_done > 0 || out.faults.maps_requeued > 0,
+        "the crash must have forced recovery work: {:?}",
+        out.faults
+    );
+    // The same job fault-free is never slower.
+    let clean = ZonesConfig { seed: 17, scale: 0.0008, ..Default::default() };
+    let base = run_app(ClusterPreset::Amdahl, &conf, &clean, App::Search);
+    assert!(base.faults.crashes == 0 && base.faults.rereplications_done == 0);
+    assert!(
+        out.total_seconds >= base.total_seconds,
+        "faulted {:.1}s vs clean {:.1}s",
+        out.total_seconds,
+        base.total_seconds
+    );
+    assert!(out.energy.recovery_joules >= 0.0);
+}
+
+/// Stragglers plus 0.20-style speculation: duplicates launch, the map
+/// phase recovers most of the straggler damage.
+#[test]
+fn speculation_hedges_stragglers() {
+    let conf = HadoopConf {
+        buffered_output: true,
+        direct_io_write: true,
+        ..Default::default()
+    };
+    let plan = |spec: bool| InjectionPlan {
+        straggler_frac: 0.5,
+        straggler_slowdown: 0.15,
+        straggler_onset_s: (1.0, 2.0),
+        speculation: spec,
+        ..InjectionPlan::empty()
+    };
+    // Scale chosen so the catalog spans several blocks → several maps
+    // (speculation needs completed-map statistics to find stragglers).
+    let z = |spec: bool| ZonesConfig {
+        seed: 23,
+        scale: 0.02,
+        faults: plan(spec),
+        ..Default::default()
+    };
+    let without = run_app(ClusterPreset::Amdahl, &conf, &z(false), App::Search);
+    let with = run_app(ClusterPreset::Amdahl, &conf, &z(true), App::Search);
+    assert!(without.faults.stragglers > 0);
+    assert_eq!(without.faults.spec_launched, 0);
+    assert!(
+        with.faults.spec_launched > 0,
+        "no speculative attempts launched: {:?}",
+        with.faults
+    );
+    assert!(
+        with.job.map_phase < without.job.map_phase,
+        "speculation should shorten the straggled map phase: {:.1}s vs {:.1}s",
+        with.job.map_phase,
+        without.job.map_phase
+    );
+    assert!(
+        with.total_seconds <= without.total_seconds * 1.05,
+        "speculation made the job slower: {:.1}s vs {:.1}s",
+        with.total_seconds,
+        without.total_seconds
+    );
+}
+
+fn faulted_grid(seed: u64) -> SweepGrid {
+    SweepGrid {
+        families: vec![ClusterFamily::Amdahl],
+        nodes: vec![5],
+        cores: vec![2],
+        write_paths: vec![WritePath::DirectIo],
+        lzo: vec![false],
+        workloads: vec![Workload::DfsioWrite, Workload::DfsioRead],
+        mtbf: vec![Some(60.0)],
+        stragglers: vec![0.25],
+        speculation: vec![false],
+        ..SweepGrid::paper_default(seed, 1, 1)
+    }
+}
+
+fn faulted_opts(threads: usize, solver: SolverMode) -> SweepOptions {
+    SweepOptions {
+        threads,
+        solver,
+        dfsio_bytes_per_worker: 32.0 * MIB,
+        dfsio_workers: 2,
+        ..SweepOptions::default()
+    }
+}
+
+/// Satellite regression: fault RNG streams derive from the scenario's
+/// stable id, so a faulted sweep is byte-identical under any thread
+/// count.
+#[test]
+fn faulted_sweep_is_thread_count_independent() {
+    let g = faulted_grid(42);
+    let a = run_sweep(&g, &faulted_opts(1, SolverMode::Incremental)).to_json();
+    let b = run_sweep(&g, &faulted_opts(4, SolverMode::Incremental)).to_json();
+    assert_eq!(a, b, "faulted sweep output depends on --threads");
+    assert!(a.contains("\"mtbf\""), "faulted records must carry fault fields");
+}
+
+/// A seeded crash schedule produces byte-identical simulation outcomes
+/// under both solver modes (the incremental engine's equivalence
+/// extends to degraded-mode runs).
+#[test]
+fn faulted_sweep_is_solver_mode_identical() {
+    let g = faulted_grid(42);
+    let whole = run_sweep(&g, &faulted_opts(2, SolverMode::WholeSet));
+    let inc = run_sweep(&g, &faulted_opts(2, SolverMode::Incremental));
+    assert_eq!(
+        whole.sim_json(),
+        inc.sim_json(),
+        "solver modes diverged under fault injection"
+    );
+}
+
+/// The degraded-mode table pairs each faulted scenario with its
+/// fault-free twin and reports overheads.
+#[test]
+fn degraded_rows_pair_with_fault_free_twins() {
+    let g = SweepGrid {
+        families: vec![ClusterFamily::Amdahl],
+        nodes: vec![5],
+        cores: vec![2],
+        write_paths: vec![WritePath::DirectIo],
+        lzo: vec![false],
+        workloads: vec![Workload::DfsioWrite],
+        mtbf: vec![None, Some(30.0)],
+        ..SweepGrid::paper_default(9, 1, 1)
+    };
+    let r = run_sweep(&g, &faulted_opts(2, SolverMode::Incremental));
+    assert_eq!(r.records.len(), 2);
+    let rows = r.degraded_rows();
+    assert_eq!(rows.len(), 1);
+    let row = &rows[0];
+    assert!(row.id.ends_with("-mtbf30"), "id {}", row.id);
+    assert_eq!(
+        row.baseline_id.as_deref(),
+        Some("amdahl-n5-c2-direct-nolzo-dfsio-write")
+    );
+    assert!(row.baseline_seconds > 0.0);
+    // (No sign assertion on the slowdown: losing a node can shrink a
+    // dfsio makespan — the dead node's writers simply vanish.)
+    let report = amdahl_hadoop::report::render_degraded(&rows);
+    assert!(report.contains("degraded-mode table"));
+    assert!(report.contains(&row.id));
+}
+
+/// Satellite: the membus axis changes outcomes when the bus binds, and
+/// the 2-D frontier renders one row per bus tier.
+#[test]
+fn membus_axis_sweeps_and_renders() {
+    let g = SweepGrid {
+        families: vec![ClusterFamily::Amdahl],
+        nodes: vec![5],
+        cores: vec![2, 4],
+        write_paths: vec![WritePath::DirectIo],
+        lzo: vec![false],
+        workloads: vec![Workload::DfsioWrite],
+        membus: vec![None, Some(50.0 * MIB)],
+        ..SweepGrid::paper_default(4, 1, 1)
+    };
+    let r = run_sweep(&g, &faulted_opts(2, SolverMode::Incremental));
+    assert_eq!(r.records.len(), 4);
+    let stock2 = r.records.iter().find(|x| x.cores == 2 && x.membus_bps.is_none()).unwrap();
+    let slow2 = r.records.iter().find(|x| x.cores == 2 && x.membus_bps.is_some()).unwrap();
+    assert!(slow2.id.ends_with("-bus50"), "id {}", slow2.id);
+    assert!(
+        slow2.per_node_mbps < stock2.per_node_mbps,
+        "a 50 MiB/s bus must throttle the write path: {:.1} vs {:.1} MB/s",
+        slow2.per_node_mbps,
+        stock2.per_node_mbps
+    );
+    let cells = r.bus_frontier();
+    assert_eq!(cells.len(), 4);
+    // Bus-major order: the two preset cells first.
+    assert!(cells[0].membus_bps.is_none() && cells[1].membus_bps.is_none());
+    assert_eq!((cells[0].cores, cells[1].cores), (2, 4));
+    let rendered = amdahl_hadoop::report::render_bus_frontier(&cells);
+    assert!(rendered.contains("preset"), "{rendered}");
+    assert!(rendered.contains("50 MiB/s"), "{rendered}");
+    // The faulted sweep JSON carries the bus override.
+    assert!(r.to_json().contains("\"membus_bps\""));
+}

@@ -22,13 +22,13 @@ fn small_opts() -> SweepOptions {
 #[test]
 fn grid_axis_counts_multiply() {
     let g = SweepGrid {
-        base_seed: 1,
         families: vec![ClusterFamily::Amdahl],
         nodes: vec![5, 9],
         cores: vec![1, 2, 4],
         write_paths: vec![WritePath::OutputBuffered, WritePath::DirectIo],
         lzo: vec![false, true],
         workloads: vec![Workload::DfsioWrite, Workload::Search],
+        ..SweepGrid::paper_default(1, 1, 1)
     };
     assert_eq!(g.len(), 2 * 3 * 2 * 2 * 2);
     let scenarios = g.expand();
@@ -59,13 +59,13 @@ fn scenario_ids_and_seeds_are_stable_functions_of_the_axes() {
 #[test]
 fn two_sweeps_same_seed_are_byte_identical() {
     let g = SweepGrid {
-        base_seed: 42,
         families: vec![ClusterFamily::Amdahl],
         nodes: vec![5],
         cores: vec![1, 4],
         write_paths: vec![WritePath::DirectIo],
         lzo: vec![false],
         workloads: vec![Workload::DfsioWrite, Workload::DfsioRead],
+        ..SweepGrid::paper_default(42, 1, 1)
     };
     let a = run_sweep(&g, &small_opts());
     let b = run_sweep(&g, &small_opts());
@@ -83,13 +83,13 @@ fn two_sweeps_same_seed_are_byte_identical() {
 #[test]
 fn incremental_and_whole_set_solvers_are_byte_identical_on_the_seed_grid() {
     let g = SweepGrid {
-        base_seed: 42,
         families: vec![ClusterFamily::Amdahl, ClusterFamily::Occ],
         nodes: vec![5],
         cores: vec![1, 2],
         write_paths: vec![WritePath::DirectIo],
         lzo: vec![false, true],
         workloads: Workload::ALL.to_vec(),
+        ..SweepGrid::paper_default(42, 1, 1)
     };
     let baseline = run_sweep(&g, &SweepOptions { solver: SolverMode::WholeSet, ..small_opts() });
     let incremental =
@@ -115,13 +115,13 @@ fn incremental_and_whole_set_solvers_are_byte_identical_on_the_seed_grid() {
 #[test]
 fn perf_section_present_and_solver_tagged() {
     let g = SweepGrid {
-        base_seed: 7,
         families: vec![ClusterFamily::Amdahl],
         nodes: vec![5],
         cores: vec![1],
         write_paths: vec![WritePath::DirectIo],
         lzo: vec![false],
         workloads: vec![Workload::DfsioWrite],
+        ..SweepGrid::paper_default(7, 1, 1)
     };
     let r = run_sweep(&g, &small_opts());
     let json = r.to_json();
@@ -140,13 +140,13 @@ fn occ_family_sweeps_the_node_axis() {
     // Two OCC node counts must produce different absolute work (more
     // slaves move more bytes) — the axis used to be ignored entirely.
     let mk = |nodes: usize| SweepGrid {
-        base_seed: 11,
         families: vec![ClusterFamily::Occ],
         nodes: vec![nodes],
         cores: vec![2],
         write_paths: vec![WritePath::DirectIo],
         lzo: vec![false],
         workloads: vec![Workload::DfsioWrite],
+        ..SweepGrid::paper_default(11, 1, 1)
     };
     let small = run_sweep(&mk(3), &small_opts());
     let large = run_sweep(&mk(7), &small_opts());
@@ -163,13 +163,13 @@ fn frontier_reproduces_the_papers_four_core_estimate() {
     // The baseline cut of the §5 analysis: dfsio-write, tuned write path,
     // no LZO, nine blades, cores 1..=6.
     let g = SweepGrid {
-        base_seed: 42,
         families: vec![ClusterFamily::Amdahl],
         nodes: vec![9],
         cores: (1..=6).collect(),
         write_paths: vec![WritePath::DirectIo],
         lzo: vec![false],
         workloads: vec![Workload::DfsioWrite],
+        ..SweepGrid::paper_default(42, 1, 1)
     };
     let opts = SweepOptions {
         threads: 0,
@@ -214,13 +214,13 @@ fn lzo_and_write_path_axes_change_outcomes() {
     // JNI write path must be slower than the tuned direct-I/O path for
     // the write-heavy workload.
     let g = SweepGrid {
-        base_seed: 42,
         families: vec![ClusterFamily::Amdahl],
         nodes: vec![9],
         cores: vec![2],
         write_paths: vec![WritePath::BufferedJni, WritePath::DirectIo],
         lzo: vec![false],
         workloads: vec![Workload::Search],
+        ..SweepGrid::paper_default(42, 1, 1)
     };
     let r = run_sweep(&g, &small_opts());
     assert_eq!(r.records.len(), 2);
