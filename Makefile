@@ -2,7 +2,7 @@
 # cargo build --release`); these wrap the optional kernel-artifact
 # pipeline and the end-to-end example on top of it.
 
-.PHONY: artifacts e2e test bench-smoke
+.PHONY: artifacts e2e test bench-smoke rack-smoke rack-demo
 
 # AOT-lower the JAX/Pallas pair kernels to HLO text artifacts the Rust
 # runtime loads at startup. Requires a Python with jax installed; the
@@ -20,6 +20,32 @@ test:
 	cd rust && cargo build --release && cargo test -q
 
 # The CI bench-smoke gate: 10k-flow solver scaling + the recorded
-# stale-events / peak-heap baseline.
-bench-smoke:
+# stale-events / peak-heap baseline, plus the rack mini-sweep below.
+bench-smoke: rack-smoke
 	cd rust && timeout 300 cargo bench --bench flow_scale
+
+# 2-rack x 4:1-oversubscription mini-sweep (CLI level) asserting the
+# BENCH JSON is byte-identical across --threads, then the
+# integration_racks cross-solver pin (incremental vs whole-set) whose
+# grid also includes a whole-rack-crash scenario. CI invokes this
+# target directly so the recipe lives in exactly one place.
+rack-smoke:
+	cd rust && cargo run --release --quiet -- sweep --racks 2 --oversub 4 \
+	    --cores 1..2 --nodes 5 --gb 0.03125 --workers 1 --threads 1 \
+	    --solver incremental --quiet --out /tmp/rack_smoke_t1.json
+	cd rust && cargo run --release --quiet -- sweep --racks 2 --oversub 4 \
+	    --cores 1..2 --nodes 5 --gb 0.03125 --workers 1 --threads 4 \
+	    --solver incremental --quiet --out /tmp/rack_smoke_t4.json
+	cmp /tmp/rack_smoke_t1.json /tmp/rack_smoke_t4.json
+	cd rust && cargo test -q --release --test integration_racks \
+	    rack_sweep_is_solver_mode_identical
+
+# Whole-rack failure demo: a 3-rack cluster behind a 4:1 oversubscribed
+# fabric loses rack 2 twenty simulated seconds in — degraded-mode table,
+# recovery attribution, and the rack x oversubscription frontier.
+rack-demo:
+	cd rust && cargo run --release -- faults --workload dfsio-write \
+	    --racks 3 --oversub 4 --rack-crash 20 --gb 0.0625 --workers 2
+	cd rust && cargo run --release -- sweep --racks 1,3 --oversub 1,4 \
+	    --cores 2..4 --gb 0.03125 --workers 2 --quiet \
+	    --out /tmp/BENCH_rack_sweep.json

@@ -1,6 +1,20 @@
 //! Cluster assembly: turn [`NodeSpec`]s into engine resources and expose
 //! the primitive I/O operations (local file read/write, TCP streams) that
 //! the HDFS and MapReduce layers compose into protocols.
+//!
+//! # Rack topology
+//!
+//! A cluster can be partitioned into racks ([`Cluster::build_racked`]):
+//! nodes are assigned in contiguous chunks (node 0, the master, lives in
+//! rack 0), and every rack gets a **ToR uplink** — a pair of shared
+//! engine resources (fabric-bound and rack-bound directions) that every
+//! cross-rack byte traverses in addition to the endpoint NICs. The
+//! uplink capacity is the rack's aggregate NIC bandwidth divided by a
+//! configurable **oversubscription ratio**, so an oversubscribed fabric
+//! throttles cross-rack traffic (shuffle, remote replicas, whole-rack
+//! re-replication) exactly the way a real leaf-spine network does. With
+//! one rack no uplink resources exist at all and the cluster is
+//! byte-identical to the historical flat build.
 
 pub mod ops;
 
@@ -38,15 +52,76 @@ pub struct Node {
     pub disk_degrade: f64,
 }
 
+/// One rack's ToR uplink: the pair of shared fabric resources every
+/// cross-rack byte traverses (in addition to the endpoint NICs).
+#[derive(Debug)]
+pub struct RackUplink {
+    /// Fabric-bound direction (rack → spine), bytes/s payload.
+    pub up: ResourceId,
+    /// Rack-bound direction (spine → rack), bytes/s payload.
+    pub down: ResourceId,
+    /// Nominal capacity of each direction, bytes/s.
+    pub capacity_bps: f64,
+    /// Fault-injection multiplier (1.0 = healthy; brownouts and
+    /// whole-rack crashes lower it).
+    pub degrade: f64,
+}
+
+/// Which rack each node lives in, plus the per-rack ToR uplinks.
+/// The flat single-rack topology carries no uplinks and no per-node
+/// map — it is exactly the historical pre-rack cluster.
+#[derive(Debug)]
+pub struct RackTopology {
+    /// Number of racks (1 = flat).
+    racks: usize,
+    /// ToR oversubscription ratio the uplinks were sized with.
+    oversub: f64,
+    /// Rack index per node (index = `NodeId.0`); empty when flat.
+    rack_of: Vec<usize>,
+    /// Per-rack ToR uplink; empty when flat.
+    uplinks: Vec<RackUplink>,
+}
+
+impl RackTopology {
+    /// The paper's flat single-rack fabric (no uplink resources).
+    pub fn flat() -> RackTopology {
+        RackTopology { racks: 1, oversub: 1.0, rack_of: Vec::new(), uplinks: Vec::new() }
+    }
+}
+
 /// A set of nodes wired into one engine.
 #[derive(Debug)]
 pub struct Cluster {
     pub nodes: Vec<Node>,
+    pub topology: RackTopology,
 }
 
 impl Cluster {
-    /// Instantiate `n` identical nodes.
+    /// Instantiate `n` identical nodes on the flat single-rack fabric.
     pub fn build(engine: &mut Engine, spec: &NodeSpec, n: usize) -> Cluster {
+        Cluster::build_racked(engine, spec, n, 1, 1.0)
+    }
+
+    /// Instantiate `n` identical nodes partitioned into `racks` racks
+    /// (balanced contiguous groups via `rack_of(i) = i * racks / n`, so
+    /// every requested rack is non-empty whenever `racks <= n`; node 0
+    /// lands in rack 0). Each rack's ToR uplink capacity is its
+    /// aggregate NIC bandwidth divided by `oversub`. `racks == 1`
+    /// creates no uplink resources and is byte-identical to
+    /// [`Cluster::build`].
+    pub fn build_racked(
+        engine: &mut Engine,
+        spec: &NodeSpec,
+        n: usize,
+        racks: usize,
+        oversub: f64,
+    ) -> Cluster {
+        assert!(racks >= 1, "at least one rack");
+        assert!(
+            racks <= n.max(1),
+            "cannot partition {n} nodes into {racks} non-empty racks"
+        );
+        assert!(oversub > 0.0, "oversubscription ratio {oversub} must be positive");
         let mut nodes = Vec::with_capacity(n);
         for i in 0..n {
             let cpu = engine.add_resource(&format!("n{i}.cpu"), spec.cpu.capacity);
@@ -66,7 +141,80 @@ impl Cluster {
                 disk_degrade: 1.0,
             });
         }
-        Cluster { nodes }
+        let topology = if racks <= 1 || n <= 1 {
+            RackTopology::flat()
+        } else {
+            // Balanced contiguous partition: exactly `racks` non-empty
+            // groups (a ceil-chunked split can collapse racks — e.g. 9
+            // nodes over 4 racks would yield only 3 — which would make
+            // the recorded topology and the rack-crash target wrong).
+            let rack_of: Vec<usize> = (0..n).map(|i| i * racks / n).collect();
+            let nracks = rack_of.last().copied().unwrap_or(0) + 1;
+            let mut uplinks = Vec::with_capacity(nracks);
+            for r in 0..nracks {
+                let members = rack_of.iter().filter(|&&x| x == r).count() as f64;
+                let cap = (members * spec.net.nic_bps / oversub).max(1.0);
+                let up = engine.add_resource(&format!("rack{r}.up"), cap);
+                let down = engine.add_resource(&format!("rack{r}.down"), cap);
+                uplinks.push(RackUplink { up, down, capacity_bps: cap, degrade: 1.0 });
+            }
+            RackTopology { racks: nracks, oversub, rack_of, uplinks }
+        };
+        Cluster { nodes, topology }
+    }
+
+    /// Number of racks (1 = the flat historical topology).
+    pub fn racks(&self) -> usize {
+        self.topology.racks
+    }
+
+    /// The oversubscription ratio the uplinks were sized with.
+    pub fn oversub(&self) -> f64 {
+        self.topology.oversub
+    }
+
+    /// Rack index of `n` (0 for every node on the flat topology).
+    pub fn rack_of(&self, n: NodeId) -> usize {
+        self.topology.rack_of.get(n.0).copied().unwrap_or(0)
+    }
+
+    /// All nodes living in `rack`, in id order.
+    pub fn rack_nodes(&self, rack: usize) -> Vec<NodeId> {
+        (0..self.nodes.len())
+            .map(NodeId)
+            .filter(|&n| self.rack_of(n) == rack)
+            .collect()
+    }
+
+    /// The ToR uplink pair a cross-rack byte traverses: the source
+    /// rack's fabric-bound direction and the destination rack's
+    /// rack-bound direction. `None` for same-rack traffic and on the
+    /// flat topology (so single-rack flow specs are unchanged).
+    pub fn cross_rack(&self, src: NodeId, dst: NodeId) -> Option<(ResourceId, ResourceId)> {
+        if self.topology.uplinks.is_empty() {
+            return None;
+        }
+        let (a, b) = (self.rack_of(src), self.rack_of(dst));
+        if a == b {
+            return None;
+        }
+        Some((self.topology.uplinks[a].up, self.topology.uplinks[b].down))
+    }
+
+    /// The uplink of `rack` (None on the flat topology).
+    pub fn rack_uplink(&self, rack: usize) -> Option<&RackUplink> {
+        self.topology.uplinks.get(rack)
+    }
+
+    /// Fault injection: degrade (or restore) a rack's ToR uplink to
+    /// `factor` of nominal, both directions. No-op on the flat topology.
+    pub fn set_uplink_degrade(&mut self, engine: &mut Engine, rack: usize, factor: f64) {
+        assert!(factor > 0.0 && factor <= 1.0, "degrade factor {factor} out of (0, 1]");
+        if let Some(u) = self.topology.uplinks.get_mut(rack) {
+            u.degrade = factor;
+            engine.set_capacity(u.up, u.capacity_bps * factor);
+            engine.set_capacity(u.down, u.capacity_bps * factor);
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -189,5 +337,82 @@ mod tests {
         let spec = amdahl_blade(DiskKind::Hdd);
         let mut c = Cluster::build(&mut e, &spec, 1);
         c.disk_stream_end(&mut e, NodeId(0), true);
+    }
+
+    #[test]
+    fn flat_build_has_no_uplinks() {
+        let mut e = Engine::new(1);
+        let c = Cluster::build(&mut e, &amdahl_blade(DiskKind::Raid0), 4);
+        assert_eq!(c.racks(), 1);
+        assert!(c.rack_uplink(0).is_none());
+        assert!(c.cross_rack(NodeId(0), NodeId(3)).is_none());
+        assert_eq!(c.rack_of(NodeId(3)), 0);
+        // Exactly the 5 per-node resources, nothing more.
+        assert_eq!(e.resources().count(), 4 * 5);
+    }
+
+    #[test]
+    fn racked_build_partitions_and_sizes_uplinks() {
+        let mut e = Engine::new(1);
+        let spec = amdahl_blade(DiskKind::Raid0);
+        let c = Cluster::build_racked(&mut e, &spec, 9, 3, 4.0);
+        assert_eq!(c.racks(), 3);
+        assert_eq!(c.rack_of(NodeId(0)), 0, "master in rack 0");
+        assert_eq!(c.rack_of(NodeId(2)), 0);
+        assert_eq!(c.rack_of(NodeId(3)), 1);
+        assert_eq!(c.rack_of(NodeId(8)), 2);
+        assert_eq!(c.rack_nodes(2), vec![NodeId(6), NodeId(7), NodeId(8)]);
+        // Uplink capacity = 3 members x nic / oversub 4.
+        let u = c.rack_uplink(1).unwrap();
+        let want = 3.0 * spec.net.nic_bps / 4.0;
+        assert!((u.capacity_bps - want).abs() < 1e-6);
+        assert!((e.resource(u.up).capacity - want).abs() < 1e-6);
+        // Cross-rack pairs: src up, dst down; same rack: none.
+        let (up, down) = c.cross_rack(NodeId(1), NodeId(4)).unwrap();
+        assert_eq!(up, c.rack_uplink(0).unwrap().up);
+        assert_eq!(down, c.rack_uplink(1).unwrap().down);
+        assert!(c.cross_rack(NodeId(3), NodeId(5)).is_none());
+    }
+
+    /// Regression: a ceil-chunked partition of 9 nodes over 4 racks
+    /// collapsed to 3 racks, silently desyncing the recorded topology
+    /// (and the rack-crash target) from reality. The balanced partition
+    /// must produce exactly the requested rack count whenever it fits.
+    #[test]
+    fn requested_rack_count_is_always_realized() {
+        for (n, racks) in [(9usize, 4usize), (9, 3), (9, 2), (5, 4), (7, 5), (4, 4)] {
+            let mut e = Engine::new(1);
+            let c = Cluster::build_racked(&mut e, &amdahl_blade(DiskKind::Raid0), n, racks, 2.0);
+            assert_eq!(c.racks(), racks, "{n} nodes over {racks} racks");
+            for r in 0..racks {
+                assert!(!c.rack_nodes(r).is_empty(), "rack {r} empty ({n} nodes, {racks} racks)");
+            }
+            assert_eq!(c.rack_of(NodeId(0)), 0);
+            // Contiguous: rack index is monotone in node id.
+            for i in 1..n {
+                assert!(c.rack_of(NodeId(i)) >= c.rack_of(NodeId(i - 1)));
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn more_racks_than_nodes_panics() {
+        let mut e = Engine::new(1);
+        let _ = Cluster::build_racked(&mut e, &amdahl_blade(DiskKind::Raid0), 3, 4, 1.0);
+    }
+
+    #[test]
+    fn uplink_degrade_applies_to_both_directions() {
+        let mut e = Engine::new(1);
+        let mut c = Cluster::build_racked(&mut e, &amdahl_blade(DiskKind::Raid0), 6, 2, 1.0);
+        let (up, down) = {
+            let u = c.rack_uplink(1).unwrap();
+            (u.up, u.down)
+        };
+        let nominal = e.resource(up).capacity;
+        c.set_uplink_degrade(&mut e, 1, 0.25);
+        assert!((e.resource(up).capacity - nominal * 0.25).abs() < 1e-6);
+        assert!((e.resource(down).capacity - nominal * 0.25).abs() < 1e-6);
     }
 }

@@ -88,14 +88,19 @@ pub fn tcp_remote(
     let d = cluster.node(dst);
     let c_send = engine.class(&format!("{task}:net-send"));
     let c_recv = engine.class(&format!("{task}:net-recv"));
-    FlowSpec::with_capacity(bytes, format!("{task}:tcp n{}->n{}", src.0, dst.0), 4)
+    let mut f = FlowSpec::with_capacity(bytes, format!("{task}:tcp n{}->n{}", src.0, dst.0), 6)
         .demand(s.nic_tx, 1.0, c_send)
         .demand(d.nic_rx, 1.0, c_recv)
         .demand(s.cpu, s.spec.cpu.costs.net_send_remote, c_send)
         .demand(d.cpu, d.spec.cpu.costs.net_recv_remote, c_recv)
         // sender and receiver are each one thread:
         .cap(1.0 / s.spec.cpu.costs.net_send_remote)
-        .cap(1.0 / d.spec.cpu.costs.net_recv_remote)
+        .cap(1.0 / d.spec.cpu.costs.net_recv_remote);
+    // Cross-rack streams additionally traverse both ToR uplinks.
+    if let Some((up, down)) = cluster.cross_rack(src, dst) {
+        f = f.demand(up, 1.0, c_send).demand(down, 1.0, c_recv);
+    }
+    f
 }
 
 /// Loopback TCP between two processes on `node`: Table 2 "local".
@@ -177,6 +182,9 @@ pub fn datanode_send(
             .demand(d.cpu, d.spec.cpu.costs.net_recv_remote, c_recv)
             .cap(1.0 / (costs.buffered_read + costs.net_send_remote))
             .cap(1.0 / d.spec.cpu.costs.net_recv_remote);
+        if let Some((up, down)) = cluster.cross_rack(src, dst) {
+            f = f.demand_staged(up, 1.0, c_send, net_stage).demand(down, 1.0, c_recv);
+        }
     }
     f
 }

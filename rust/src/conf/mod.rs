@@ -61,6 +61,15 @@ pub struct HadoopConf {
     /// leave the blade memory-bound — this knob lets the sweep chart
     /// the 2-D core × bus frontier.
     pub membus_copy_bps: Option<f64>,
+    /// Rack count the cluster is partitioned into (nodes are assigned in
+    /// contiguous chunks; node 0, the master, lives in rack 0). 1 = the
+    /// paper's flat single-rack fabric, which is byte-identical to the
+    /// pre-rack code path (no ToR uplink resources exist).
+    pub racks: usize,
+    /// ToR uplink oversubscription ratio: aggregate in-rack NIC bandwidth
+    /// divided by the rack's uplink bandwidth. 1.0 = non-blocking fabric.
+    /// Only meaningful with `racks > 1`.
+    pub rack_oversub: f64,
 }
 
 impl Default for HadoopConf {
@@ -85,6 +94,8 @@ impl Default for HadoopConf {
             direct_io_write: false,
             data_disk: DiskKind::Raid0,
             membus_copy_bps: None,
+            racks: 1,
+            rack_oversub: 1.0,
         }
     }
 }
@@ -172,6 +183,8 @@ impl HadoopConf {
             "app.lzo" => self.lzo_output = value.parse()?,
             "app.direct.io" => self.direct_io_write = value.parse()?,
             "hw.membus.bps" => self.membus_copy_bps = Some(value.parse::<f64>()?),
+            "hw.racks" => self.racks = value.parse()?,
+            "hw.rack.oversub" => self.rack_oversub = value.parse()?,
             "app.data.disk" => {
                 self.data_disk = match value {
                     "hdd" => DiskKind::Hdd,

@@ -28,11 +28,19 @@ pub fn install(engine: &mut Engine, world: &WorldHandle, schedule: &FaultSchedul
     }
     for ev in &schedule.events {
         let node = NodeId(ev.node);
+        // For the rack-scoped kinds the event's `node` field carries the
+        // rack index, not a node id.
+        let rack = ev.node;
         let world = world.clone();
         match ev.kind {
             FaultKind::Crash => {
                 engine.after(ev.at, move |engine| {
                     recovery::handle_crash(engine, &world, node);
+                });
+            }
+            FaultKind::RackCrash => {
+                engine.after(ev.at, move |engine| {
+                    recovery::handle_rack_crash(engine, &world, rack);
                 });
             }
             FaultKind::Straggle { factor } => {
@@ -45,6 +53,11 @@ pub fn install(engine: &mut Engine, world: &WorldHandle, schedule: &FaultSchedul
                     recovery::handle_disk_degrade(engine, &world, node, factor);
                 });
             }
+            FaultKind::RackBrownout { factor } => {
+                engine.after(ev.at, move |engine| {
+                    recovery::handle_rack_brownout(engine, &world, rack, factor);
+                });
+            }
         }
     }
 }
@@ -53,7 +66,7 @@ pub fn install(engine: &mut Engine, world: &WorldHandle, schedule: &FaultSchedul
 mod tests {
     use super::*;
     use crate::cluster::Cluster;
-    use crate::faults::plan::{CrashSpec, FaultSchedule, InjectionPlan};
+    use crate::faults::plan::{CrashSpec, FaultSchedule, InjectionPlan, RackCrashSpec};
     use crate::hdfs::World;
     use crate::hw::{amdahl_blade, DiskKind};
     use crate::sim::engine::shared;
@@ -109,6 +122,37 @@ mod tests {
             "cpu {slowed} should be 0.4 x {nominal}"
         );
         assert_eq!(w.borrow().faults.stats.stragglers, 2);
+    }
+
+    #[test]
+    fn rack_crash_kills_members_and_uplink_but_spares_other_racks() {
+        let mut e = Engine::new(1);
+        // 6 nodes, 2 racks: rack 0 = {0,1,2}, rack 1 = {3,4,5}.
+        let cluster = Cluster::build_racked(&mut e, &amdahl_blade(DiskKind::Raid0), 6, 2, 2.0);
+        let mut w = World::new(cluster);
+        w.namenode.set_datanodes((1..6).map(NodeId).collect());
+        let w = shared(w);
+        let plan = InjectionPlan {
+            rack_crashes: vec![RackCrashSpec { rack: 1, at: 2.0 }],
+            ..InjectionPlan::empty()
+        };
+        let sched = FaultSchedule::generate(&plan, 9, 6);
+        install(&mut e, &w, &sched);
+        e.run();
+        let wb = w.borrow();
+        for n in [3usize, 4, 5] {
+            assert!(!wb.faults.is_up(NodeId(n)), "n{n} should be dead");
+            assert!(wb.namenode.is_dead(NodeId(n)));
+        }
+        assert!(wb.faults.is_up(NodeId(1)) && wb.faults.is_up(NodeId(2)));
+        assert_eq!(wb.faults.stats.rack_crashes, 1);
+        assert_eq!(wb.faults.stats.crashes, 3);
+        let u = wb.cluster.rack_uplink(1).unwrap();
+        assert!(
+            (e.resource(u.up).capacity - u.capacity_bps * 0.01).abs() < 1e-6,
+            "uplink floored after the rack died"
+        );
+        assert!((e.now() - 2.0).abs() < 1e-9);
     }
 
     #[test]

@@ -43,7 +43,10 @@ pub mod plan;
 pub mod recovery;
 
 pub use injector::install;
-pub use plan::{fault_stream_seed, CrashSpec, FaultEvent, FaultKind, FaultSchedule, InjectionPlan};
+pub use plan::{
+    fault_stream_seed, CrashSpec, FaultEvent, FaultKind, FaultSchedule, InjectionPlan,
+    RackBrownoutSpec, RackCrashSpec,
+};
 
 use crate::cluster::NodeId;
 use crate::sim::Engine;
@@ -59,6 +62,11 @@ pub type FailoverHandler = Box<dyn FnMut(&mut Engine, NodeId) -> bool>;
 pub struct FaultStats {
     /// Nodes that crashed.
     pub crashes: usize,
+    /// Whole-rack failures processed (each also counts its member
+    /// crashes in `crashes`).
+    pub rack_crashes: usize,
+    /// ToR-uplink brownouts applied.
+    pub rack_brownouts: usize,
     /// Nodes slowed by a straggler event.
     pub stragglers: usize,
     /// Nodes whose data disk degraded.

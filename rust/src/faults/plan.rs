@@ -20,6 +20,29 @@ pub struct CrashSpec {
     pub at: f64,
 }
 
+/// One fixed whole-rack failure: every node in `rack` (the master is
+/// spared) plus the rack's ToR uplink dies at `at`. Meaningful only on
+/// multi-rack topologies ([`crate::cluster::Cluster::build_racked`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RackCrashSpec {
+    /// Rack index.
+    pub rack: usize,
+    /// Simulated seconds after engine start.
+    pub at: f64,
+}
+
+/// One fixed ToR-uplink brownout: `rack`'s uplink capacity dips to
+/// `factor` of nominal at `at` (both directions).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RackBrownoutSpec {
+    /// Rack index.
+    pub rack: usize,
+    /// Simulated seconds after engine start.
+    pub at: f64,
+    /// Capacity multiplier in (0, 1].
+    pub factor: f64,
+}
+
 /// Declarative fault-injection plan. The default plan is **empty**: no
 /// events are generated, no timers are scheduled, and simulation output
 /// is byte-identical to a build without the subsystem.
@@ -27,6 +50,11 @@ pub struct CrashSpec {
 pub struct InjectionPlan {
     /// Fixed crash schedule (applied verbatim, before MTBF sampling).
     pub crashes: Vec<CrashSpec>,
+    /// Fixed whole-rack failures (every member node + the ToR uplink at
+    /// once; ignored on flat single-rack topologies).
+    pub rack_crashes: Vec<RackCrashSpec>,
+    /// Fixed ToR-uplink brownouts.
+    pub rack_brownouts: Vec<RackBrownoutSpec>,
     /// Mean time between failures per slave node, seconds. When set,
     /// each slave's first crash time is sampled exponentially; crashes
     /// landing inside `crash_horizon_s` become events, earliest-first,
@@ -57,6 +85,8 @@ impl Default for InjectionPlan {
     fn default() -> Self {
         InjectionPlan {
             crashes: Vec::new(),
+            rack_crashes: Vec::new(),
+            rack_brownouts: Vec::new(),
             mtbf_s: None,
             max_crashes: 2,
             crash_horizon_s: 600.0,
@@ -80,6 +110,8 @@ impl InjectionPlan {
     /// True when the plan generates no fault events at all.
     pub fn is_empty(&self) -> bool {
         self.crashes.is_empty()
+            && self.rack_crashes.is_empty()
+            && self.rack_brownouts.is_empty()
             && self.mtbf_s.is_none()
             && self.straggler_frac <= 0.0
             && self.disk_degrade_frac <= 0.0
@@ -100,10 +132,17 @@ impl InjectionPlan {
 pub enum FaultKind {
     /// DataNode/TaskTracker process death (the node never returns).
     Crash,
+    /// Whole-rack failure: every node in the rack (master spared) plus
+    /// the ToR uplink at once. The event's `node` field carries the
+    /// **rack index**.
+    RackCrash,
     /// CPU slowdown to `factor` of nominal capacity.
     Straggle { factor: f64 },
     /// Data-disk throughput drop to `factor` of nominal.
     DiskDegrade { factor: f64 },
+    /// ToR-uplink capacity dip to `factor` of nominal. The event's
+    /// `node` field carries the **rack index**.
+    RackBrownout { factor: f64 },
 }
 
 /// A timestamped fault on one node.
@@ -139,6 +178,20 @@ impl FaultSchedule {
             if c.node >= 1 && c.node < nodes {
                 events.push(FaultEvent { at: c.at.max(0.0), node: c.node, kind: FaultKind::Crash });
             }
+        }
+
+        // Whole-rack events, verbatim: the `node` field carries the rack
+        // index; rack validity is checked at handle time against the
+        // actual topology (the schedule does not know the rack count).
+        for c in &plan.rack_crashes {
+            events.push(FaultEvent { at: c.at.max(0.0), node: c.rack, kind: FaultKind::RackCrash });
+        }
+        for b in &plan.rack_brownouts {
+            events.push(FaultEvent {
+                at: b.at.max(0.0),
+                node: b.rack,
+                kind: FaultKind::RackBrownout { factor: b.factor.clamp(0.01, 1.0) },
+            });
         }
 
         // MTBF-sampled crashes: one exponential draw per slave, in node
@@ -232,8 +285,10 @@ impl FaultSchedule {
 fn kind_rank(k: FaultKind) -> u8 {
     match k {
         FaultKind::Crash => 0,
-        FaultKind::Straggle { .. } => 1,
-        FaultKind::DiskDegrade { .. } => 2,
+        FaultKind::RackCrash => 1,
+        FaultKind::Straggle { .. } => 2,
+        FaultKind::DiskDegrade { .. } => 3,
+        FaultKind::RackBrownout { .. } => 4,
     }
 }
 
@@ -307,6 +362,22 @@ mod tests {
         nodes.sort_unstable();
         nodes.dedup();
         assert_eq!(nodes.len(), 4);
+    }
+
+    #[test]
+    fn rack_events_pass_through_sorted() {
+        let p = InjectionPlan {
+            rack_crashes: vec![RackCrashSpec { rack: 2, at: 30.0 }],
+            rack_brownouts: vec![RackBrownoutSpec { rack: 1, at: 5.0, factor: 0.25 }],
+            ..InjectionPlan::empty()
+        };
+        assert!(!p.is_empty() && p.active());
+        let s = FaultSchedule::generate(&p, 11, 9);
+        assert_eq!(s.events.len(), 2);
+        assert_eq!(s.events[0].node, 1);
+        assert_eq!(s.events[0].kind, FaultKind::RackBrownout { factor: 0.25 });
+        assert_eq!(s.events[1].node, 2);
+        assert_eq!(s.events[1].kind, FaultKind::RackCrash);
     }
 
     #[test]

@@ -26,6 +26,8 @@
 //! endpoint only matters for the HDD seek model and only after a
 //! double crash).
 
+use std::collections::HashMap;
+
 use crate::cluster::NodeId;
 use crate::hdfs::WorldHandle;
 use crate::sim::{Engine, FlowSpec};
@@ -53,7 +55,7 @@ pub fn handle_crash(engine: &mut Engine, world: &WorldHandle, node: NodeId) {
         for r in resources {
             engine.cancel_flows_on(r);
         }
-        start_rereplication(engine, &world2, node);
+        start_rereplication(engine, &world2, &[node]);
     });
 }
 
@@ -83,16 +85,132 @@ pub fn handle_disk_degrade(engine: &mut Engine, world: &WorldHandle, node: NodeI
     w.cluster.set_disk_degrade(engine, node, f);
 }
 
-/// Scan the namespace for blocks that lost a replica on `dead` and
-/// start one transfer per recoverable block; blocks whose last replica
-/// died are counted lost.
-fn start_rereplication(engine: &mut Engine, world: &WorldHandle, dead: NodeId) {
+/// Process a whole-rack failure: every node in `rack` dies at once
+/// together with the rack's ToR uplink. The master (node 0) is spared —
+/// a master failure is a whole-job failure, out of scope for this model
+/// — and the last live DataNode is never killed (a dead cluster can
+/// neither place replicas nor finish a job).
+///
+/// Unlike a sequence of single crashes, the whole dead set is marked
+/// *before* any failover handler runs, so pipeline rebuilds, replica
+/// picks and re-replication targets already avoid the entire failure
+/// domain — which is exactly why rack-aware placement keeps every block
+/// recoverable, and why all the repair traffic crosses the (possibly
+/// oversubscribed) fabric.
+pub fn handle_rack_crash(engine: &mut Engine, world: &WorldHandle, rack: usize) {
+    let members: Vec<NodeId> = {
+        let w = world.borrow();
+        // Rack faults are meaningless on the flat single-rack topology
+        // (rack 0 would be the entire cluster) and on unknown indices.
+        if w.cluster.racks() <= 1 || rack >= w.cluster.racks() {
+            return;
+        }
+        w.cluster.rack_nodes(rack).into_iter().filter(|n| n.0 != 0).collect()
+    };
+    let mut newly_dead: Vec<NodeId> = Vec::new();
+    {
+        let mut w = world.borrow_mut();
+        w.faults.stats.rack_crashes += 1;
+        for &n in &members {
+            if !w.faults.is_up(n) {
+                continue;
+            }
+            if w.namenode.is_datanode(n) && w.namenode.live_datanodes().len() <= 1 {
+                continue; // keep the last live DataNode alive
+            }
+            let _ = w.faults.set_down(n);
+            w.namenode.mark_dead(n);
+            w.faults.stats.crashes += 1;
+            newly_dead.push(n);
+        }
+    }
+    // A member can be spared (already dead, or the last live DataNode).
+    // Only when the rack is genuinely empty of live nodes does its ToR
+    // go dark — draining the uplink under a live spared member would
+    // cancel its in-flight cross-rack flows with no failover dispatched
+    // for it, silently stranding those protocol chains.
+    let all_members_down = {
+        let w = world.borrow();
+        !members.is_empty() && members.iter().all(|&n| !w.faults.is_up(n))
+    };
+    let world2 = world.clone();
+    engine.batch(move |engine| {
+        // The ToR uplink goes dark: drain in-flight cross-rack flows and
+        // floor the capacity. With every member dead nothing can start a
+        // new flow across it; the 1% floor merely keeps rate solving
+        // well-conditioned if one ever did.
+        let uplink = {
+            let w = world2.borrow();
+            w.cluster.rack_uplink(rack).map(|u| (u.up, u.down))
+        };
+        if let Some((up, down)) = uplink.filter(|_| all_members_down) {
+            engine.cancel_flows_on(up);
+            engine.cancel_flows_on(down);
+            let mut w = world2.borrow_mut();
+            w.cluster.set_uplink_degrade(engine, rack, 0.01);
+        }
+        // Protocol failovers plus the flow kill-switch, per dead node.
+        for &n in &newly_dead {
+            dispatch_crash(engine, &world2, n);
+            let resources = {
+                let w = world2.borrow();
+                w.cluster.node_resources(n)
+            };
+            for r in resources {
+                engine.cancel_flows_on(r);
+            }
+        }
+        // Re-replicate everything the rack held in one scan (so two
+        // same-instant repairs of one block pick distinct targets);
+        // targets already exclude the whole rack, so every transfer
+        // crosses the fabric.
+        start_rereplication(engine, &world2, &newly_dead);
+    });
+}
+
+/// Process a ToR-uplink brownout: the rack's uplink capacity dips to
+/// `factor` of nominal in both directions (in-flight cross-rack flows
+/// simply re-solve at the new rate). Brownouts only ever *lower*
+/// capacity — a dip arriving after a whole-rack crash (or a deeper
+/// earlier brownout) must not revive the floored uplink. Flat
+/// topologies and unknown rack indices are no-ops.
+pub fn handle_rack_brownout(engine: &mut Engine, world: &WorldHandle, rack: usize, factor: f64) {
+    let mut w = world.borrow_mut();
+    let current = match w.cluster.rack_uplink(rack) {
+        Some(u) => u.degrade,
+        None => return,
+    };
+    w.faults.stats.rack_brownouts += 1;
+    w.cluster.set_uplink_degrade(engine, rack, factor.clamp(0.01, 1.0).min(current));
+}
+
+/// Scan the namespace for blocks that lost a replica on any of `dead`
+/// and start one transfer per recoverable lost copy; blocks whose last
+/// replica died are counted lost. All the dead nodes of one failure
+/// instant must come through a **single** call: a block that lost two
+/// replicas at once (whole-rack crash) spawns two same-instant repairs,
+/// and the second must exclude the first's in-flight target —
+/// `add_replica` dedupes, so a collision would leave the block
+/// permanently under-replicated while the stats counted two repairs.
+fn start_rereplication(engine: &mut Engine, world: &WorldHandle, dead: &[NodeId]) {
     let tasks = {
         let mut w = world.borrow_mut();
-        w.namenode.purge_node(dead)
+        let mut tasks = Vec::new();
+        for &d in dead {
+            tasks.extend(w.namenode.purge_node(d));
+        }
+        tasks
     };
+    // Targets already chosen for a block in this scan (nothing commits
+    // until the transfers land, so the metadata cannot exclude them).
+    let mut planned: HashMap<u64, Vec<NodeId>> = HashMap::new();
     for t in &tasks {
-        if let Some(target) = pick_target(engine, world, t.block_id, &t.holders) {
+        let mut exclude = t.holders.clone();
+        if let Some(p) = planned.get(&t.block_id) {
+            exclude.extend_from_slice(p);
+        }
+        if let Some(target) = pick_target(engine, world, t.block_id, &exclude) {
+            planned.entry(t.block_id).or_default().push(target);
             let file = t.file.clone();
             let block_idx = t.block_idx;
             start_transfer(engine, world, t.source, target, t.bytes, move |_engine, w| {
@@ -121,6 +239,11 @@ fn start_rereplication(engine: &mut Engine, world: &WorldHandle, dead: NodeId) {
 
 /// Deterministically choose a live DataNode that does not already hold
 /// the block: shuffle the candidates on a block-id-keyed RNG stream.
+/// On a multi-rack topology, when every surviving holder sits in one
+/// rack the target is drawn from *another* rack where possible — repair
+/// restores the rack-aware "spans two racks" invariant instead of
+/// re-concentrating the block in the surviving failure domain (and the
+/// transfer then crosses the oversubscribed fabric, as it must).
 fn pick_target(
     engine: &mut Engine,
     world: &WorldHandle,
@@ -129,11 +252,23 @@ fn pick_target(
 ) -> Option<NodeId> {
     let mut cands: Vec<NodeId> = {
         let w = world.borrow();
-        w.namenode
+        let mut cands: Vec<NodeId> = w
+            .namenode
             .live_datanodes()
             .into_iter()
             .filter(|n| !holders.contains(n))
-            .collect()
+            .collect();
+        if w.namenode.rack_aware() && !holders.is_empty() {
+            let r0 = w.namenode.rack_of(holders[0]);
+            if holders.iter().all(|h| w.namenode.rack_of(*h) == r0) {
+                let cross: Vec<NodeId> =
+                    cands.iter().copied().filter(|n| w.namenode.rack_of(*n) != r0).collect();
+                if !cross.is_empty() {
+                    cands = cross;
+                }
+            }
+        }
+        cands
     };
     if cands.is_empty() {
         return None;
@@ -221,16 +356,27 @@ fn start_transfer(
             + dcosts.crc32
             + dcosts.hadoop_stream
             + dcosts.buffered_write_user;
-        FlowSpec::with_capacity(bytes, format!("recovery:blk n{}->n{}", source.0, target.0), 8)
-            .demand(s.disk, 1.0 / s.spec.data_disk.read_bps, c_xfer)
-            .demand(s.cpu, src_cost, c_send)
-            .demand(s.nic_tx, 1.0, c_send)
-            .demand(d.nic_rx, 1.0, c_recv)
-            .demand(d.cpu, dst_cost, c_recv)
-            .demand(d.disk, 1.0 / d.spec.data_disk.write_bps, c_write)
-            .demand(d.membus, 1.0, c_xfer)
-            .cap(1.0 / src_cost)
-            .cap(1.0 / dst_cost)
+        let mut f = FlowSpec::with_capacity(
+            bytes,
+            format!("recovery:blk n{}->n{}", source.0, target.0),
+            10,
+        )
+        .demand(s.disk, 1.0 / s.spec.data_disk.read_bps, c_xfer)
+        .demand(s.cpu, src_cost, c_send)
+        .demand(s.nic_tx, 1.0, c_send)
+        .demand(d.nic_rx, 1.0, c_recv)
+        .demand(d.cpu, dst_cost, c_recv)
+        .demand(d.disk, 1.0 / d.spec.data_disk.write_bps, c_write)
+        .demand(d.membus, 1.0, c_xfer)
+        .cap(1.0 / src_cost)
+        .cap(1.0 / dst_cost);
+        // Cross-rack repair traffic traverses the (possibly
+        // oversubscribed) ToR uplinks — after a whole-rack loss every
+        // re-replication crosses the fabric.
+        if let Some((up, down)) = cluster.cross_rack(source, target) {
+            f = f.demand(up, 1.0, c_send).demand(down, 1.0, c_recv);
+        }
+        f
     };
     let world2 = world.clone();
     engine.start_flow(spec, move |engine| {

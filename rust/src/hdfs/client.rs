@@ -327,6 +327,9 @@ fn read_block_flow(
             .demand(cl.nic_rx, lambda, c_recv)
             .demand(n.cpu, costs.net_send_remote * lambda, c_send)
             .demand(cl.cpu, clcosts.net_recv_remote * lambda, c_recv);
+        if let Some((up, down)) = cluster.cross_rack(src, client) {
+            f = f.demand_staged(up, lambda, c_send, net_stage).demand(down, lambda, c_recv);
+        }
         dn_cost += costs.net_send_remote * lambda;
         client_cost += clcosts.net_recv_remote * lambda;
     }

@@ -30,7 +30,7 @@ pub use client::{read_file, write_file, ReadOpts};
 pub use namenode::{BlockMeta, FileMeta, NameNode, ReplTask};
 
 use crate::amdahl::Counters;
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, NodeId};
 use crate::faults::FaultState;
 use crate::sim::engine::Shared;
 
@@ -49,10 +49,22 @@ pub struct World {
 pub type WorldHandle = Shared<World>;
 
 impl World {
+    /// Assemble a world around `cluster`. The NameNode is armed with the
+    /// cluster's rack map here — in exactly one place — so placement and
+    /// the fabric topology can never disagree (a NameNode left flat next
+    /// to a racked cluster would happily put all three replicas of a
+    /// block inside one failure domain). On the flat topology this is a
+    /// no-op and the NameNode keeps its historical RNG-identical path.
     pub fn new(cluster: Cluster) -> World {
+        let mut namenode = NameNode::new();
+        if cluster.racks() > 1 {
+            let rack_of: Vec<usize> =
+                (0..cluster.len()).map(|i| cluster.rack_of(NodeId(i))).collect();
+            namenode.set_racks(rack_of);
+        }
         World {
             cluster,
-            namenode: NameNode::new(),
+            namenode,
             counters: Counters::new(),
             faults: FaultState::new(),
         }

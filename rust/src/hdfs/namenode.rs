@@ -1,10 +1,18 @@
 //! NameNode: file → block → replica metadata and placement policy.
 //!
-//! Hadoop v0.20 placement (paper's cluster is a single rack): first
-//! replica on the writing client if it is a DataNode, remaining replicas
-//! on distinct random DataNodes. The master (node 0) runs the NameNode
-//! and JobTracker only — it stores no blocks (paper §3.1: "one as the
-//! master, and the rest as slaves").
+//! Hadoop v0.20 placement. On the paper's flat single-rack cluster:
+//! first replica on the writing client if it is a DataNode, remaining
+//! replicas on distinct random DataNodes. On a multi-rack topology
+//! ([`NameNode::set_racks`]) the v0.20 **rack-aware** policy applies:
+//! replica 1 client-local, replica 2 on a *different* rack, replica 3 on
+//! the *same remote rack* as replica 2 — one rack failure can never take
+//! out all three copies, at the cost of exactly one cross-fabric hop per
+//! pipeline. Replica reads prefer the client's own copy, then any
+//! same-rack copy, then a random remote one. The single-rack
+//! configuration keeps the historical code path — same pool, same RNG
+//! draws, byte-identical placement. The master (node 0) runs the
+//! NameNode and JobTracker only — it stores no blocks (paper §3.1: "one
+//! as the master, and the rest as slaves").
 
 use std::collections::HashMap;
 
@@ -46,6 +54,9 @@ pub struct NameNode {
     /// `datanodes` (the scheduler handles TaskTracker blacklisting
     /// itself) but are excluded from placement and replica selection.
     dead: Vec<NodeId>,
+    /// Rack index per node id. Empty = the flat single-rack topology,
+    /// which keeps the historical (RNG-draw-identical) placement path.
+    rack_of: Vec<usize>,
 }
 
 /// One block that lost a replica and must be re-replicated from a
@@ -57,9 +68,13 @@ pub struct ReplTask {
     pub block_id: u64,
     /// Wire/disk bytes to move (the stored, possibly compressed size).
     pub bytes: f64,
-    /// Source replica to copy from (first survivor, deterministic).
+    /// Source replica to copy from: the first **live** survivor,
+    /// deterministic. (Several nodes can die in the same instant — a
+    /// whole-rack crash — so a listed survivor is not necessarily
+    /// alive; blocks with no live survivor yet produce no task and are
+    /// retried by the purge of the remaining dead holders.)
     pub source: NodeId,
-    /// All surviving holders (targets must avoid these).
+    /// All surviving holders, live or not (targets must avoid these).
     pub holders: Vec<NodeId>,
 }
 
@@ -71,6 +86,27 @@ impl NameNode {
     /// Declare which nodes run DataNodes (call once at cluster setup).
     pub fn set_datanodes(&mut self, nodes: Vec<NodeId>) {
         self.datanodes = nodes;
+    }
+
+    /// Declare the rack topology (index = node id). A map naming a
+    /// single rack is normalized to the flat representation, so the
+    /// 1-rack configuration reproduces the historical placement draws
+    /// byte-for-byte.
+    pub fn set_racks(&mut self, rack_of: Vec<usize>) {
+        let mut distinct = rack_of.clone();
+        distinct.sort_unstable();
+        distinct.dedup();
+        self.rack_of = if distinct.len() > 1 { rack_of } else { Vec::new() };
+    }
+
+    /// Is the rack-aware policy in effect?
+    pub fn rack_aware(&self) -> bool {
+        !self.rack_of.is_empty()
+    }
+
+    /// Rack index of `n` (0 on the flat topology).
+    pub fn rack_of(&self, n: NodeId) -> usize {
+        self.rack_of.get(n.0).copied().unwrap_or(0)
     }
 
     pub fn datanodes(&self) -> &[NodeId] {
@@ -119,7 +155,12 @@ impl NameNode {
                     continue;
                 }
                 b.replicas.retain(|&r| r != dead);
-                if let Some(&source) = b.replicas.first() {
+                // Copy from the first *live* survivor (a multi-node
+                // failure instant can leave dead nodes listed until
+                // their own purge runs).
+                let source =
+                    b.replicas.iter().copied().find(|r| !self.dead.contains(r));
+                if let Some(source) = source {
                     tasks.push(ReplTask {
                         file: name.clone(),
                         block_idx: i,
@@ -152,11 +193,19 @@ impl NameNode {
     }
 
     /// v0.20 placement: client-local first (if the client is a live
-    /// DataNode), then distinct random live DataNodes. Dead nodes are
-    /// never chosen; with no declared deaths this is exactly the
-    /// historical policy (same pool, same RNG draws, and no extra
-    /// allocation on the per-block hot path).
+    /// DataNode), then — flat topology — distinct random live DataNodes,
+    /// or — multi-rack topology — the rack-aware remote-rack /
+    /// same-remote-rack policy ([`NameNode::place_replicas_rack_aware`]).
+    /// Dead nodes are never chosen; with no declared deaths and one rack
+    /// this is exactly the historical policy (same pool, same RNG draws,
+    /// and no extra allocation on the per-block hot path). When the live
+    /// pool is smaller than `replication` the vector comes back short
+    /// (the real NameNode commits under-replicated blocks) instead of
+    /// panicking.
     pub fn place_replicas(&mut self, rng: &mut Rng, client: NodeId, replication: usize) -> Vec<NodeId> {
+        if !self.rack_of.is_empty() {
+            return self.place_replicas_rack_aware(rng, client, replication);
+        }
         let live_len = if self.dead.is_empty() {
             self.datanodes.len()
         } else {
@@ -176,7 +225,74 @@ impl NameNode {
             .collect();
         rng.shuffle(&mut pool);
         while chosen.len() < r {
-            chosen.push(pool.pop().expect("not enough datanodes"));
+            // Clamp instead of panicking: a shrunken reachable pool
+            // (e.g. the master writing while all but one DataNode is
+            // dead) yields a short, under-replicated vector.
+            match pool.pop() {
+                Some(n) => chosen.push(n),
+                None => break,
+            }
+        }
+        chosen
+    }
+
+    /// The v0.20 rack-aware policy: replica 1 on the client (if a live
+    /// DataNode, else a random live node), replica 2 on a **different
+    /// rack** than replica 1, replica 3 on the **same rack as replica
+    /// 2**, further replicas random — all picks from one shuffled pool
+    /// of live DataNodes, constraints relaxed when no candidate
+    /// satisfies them (tiny or half-dead clusters). Returns a short
+    /// vector when fewer live nodes than `replication` remain.
+    fn place_replicas_rack_aware(
+        &mut self,
+        rng: &mut Rng,
+        client: NodeId,
+        replication: usize,
+    ) -> Vec<NodeId> {
+        let mut chosen: Vec<NodeId> = Vec::with_capacity(replication);
+        if self.is_live(client) {
+            chosen.push(client);
+        }
+        let mut pool: Vec<NodeId> = self
+            .datanodes
+            .iter()
+            .copied()
+            .filter(|n| !chosen.contains(n) && !self.dead.contains(n))
+            .collect();
+        rng.shuffle(&mut pool);
+        if chosen.is_empty() {
+            match pool.pop() {
+                Some(n) => chosen.push(n),
+                None => panic!("no live datanodes registered"),
+            }
+        }
+        while chosen.len() < replication && !pool.is_empty() {
+            let pick = match chosen.len() {
+                1 => {
+                    // Replica 2: a rack other than replica 1's.
+                    let r0 = self.rack_of(chosen[0]);
+                    take_last_where(&mut pool, |n| self.rack_of(*n) != r0)
+                }
+                2 => {
+                    // Replica 3: replica 2's rack when it is a remote
+                    // one, else any rack other than replica 1's.
+                    let r0 = self.rack_of(chosen[0]);
+                    let r1 = self.rack_of(chosen[1]);
+                    let same_remote = if r1 != r0 {
+                        take_last_where(&mut pool, |n| self.rack_of(*n) == r1)
+                    } else {
+                        None
+                    };
+                    same_remote.or_else(|| take_last_where(&mut pool, |n| self.rack_of(*n) != r0))
+                }
+                _ => None,
+            };
+            match pick {
+                Some(n) => chosen.push(n),
+                // Constraint unsatisfiable (or replica 4+): fall back to
+                // the plain shuffled order.
+                None => chosen.push(pool.pop().expect("pool checked non-empty")),
+            }
         }
         chosen
     }
@@ -205,11 +321,53 @@ impl NameNode {
     }
 
     /// Pick the replica to read: the client's own copy when present
-    /// (MapReduce locality, §3.3), otherwise a deterministic-random one.
-    /// Dead holders are skipped; returns None only when every replica is
-    /// gone (the block is lost). The no-deaths fast path is the exact
+    /// (MapReduce locality, §3.3), otherwise — rack-aware — a random
+    /// copy in the client's rack when one exists (in-rack bandwidth is
+    /// not oversubscribed), otherwise a deterministic-random one. Dead
+    /// holders are skipped; returns None only when every replica is gone
+    /// (the block is lost). The flat no-deaths fast path is the exact
     /// historical logic — same RNG draws, zero allocation.
     pub fn pick_replica(&self, rng: &mut Rng, block: &BlockMeta, client: NodeId) -> Option<NodeId> {
+        if !self.rack_of.is_empty() {
+            // Count-then-index: like the flat fast path, no allocation
+            // on the per-block read hot path.
+            let crack = self.rack_of(client);
+            let mut live = 0usize;
+            let mut same = 0usize;
+            let mut client_live = false;
+            for r in &block.replicas {
+                if self.dead.contains(r) {
+                    continue;
+                }
+                live += 1;
+                if *r == client {
+                    client_live = true;
+                }
+                if self.rack_of(*r) == crack {
+                    same += 1;
+                }
+            }
+            if live == 0 {
+                return None;
+            }
+            if client_live {
+                return Some(client);
+            }
+            let pick = if same > 0 {
+                block
+                    .replicas
+                    .iter()
+                    .filter(|r| !self.dead.contains(r) && self.rack_of(**r) == crack)
+                    .nth(rng.below(same as u64) as usize)
+            } else {
+                block
+                    .replicas
+                    .iter()
+                    .filter(|r| !self.dead.contains(r))
+                    .nth(rng.below(live as u64) as usize)
+            };
+            return pick.copied();
+        }
         if self.dead.is_empty() {
             if block.replicas.is_empty() {
                 return None;
@@ -242,6 +400,14 @@ impl NameNode {
     }
 }
 
+/// Remove and return the element nearest the *end* of `pool` (the pop
+/// side of the shuffled order) satisfying `pred`, preserving the order
+/// of the rest.
+fn take_last_where(pool: &mut Vec<NodeId>, pred: impl Fn(&NodeId) -> bool) -> Option<NodeId> {
+    let idx = pool.iter().rposition(pred)?;
+    Some(pool.remove(idx))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -249,6 +415,16 @@ mod tests {
     fn nn(n: usize) -> NameNode {
         let mut nn = NameNode::new();
         nn.set_datanodes((1..=n).map(NodeId).collect());
+        nn
+    }
+
+    /// 1 master + `n` DataNodes partitioned into `racks` racks,
+    /// mirroring [`crate::cluster::Cluster::build_racked`]'s balanced
+    /// contiguous layout.
+    fn nn_racked(n: usize, racks: usize) -> NameNode {
+        let mut nn = nn(n);
+        let total = n + 1;
+        nn.set_racks((0..total).map(|i| i * racks / total).collect());
         nn
     }
 
@@ -389,6 +565,180 @@ mod tests {
         assert_eq!(n.get_file("f").unwrap().blocks[0].replicas.len(), 3);
         n.add_replica("f", 0, NodeId(4)); // idempotent
         assert_eq!(n.get_file("f").unwrap().blocks[0].replicas.len(), 3);
+    }
+
+    /// Regression (pre-rack code panicked via
+    /// `pool.pop().expect("not enough datanodes")` here): replication
+    /// exceeding the reachable pool must yield a short vector, not a
+    /// panic — the master writes while all but one DataNode is dead.
+    #[test]
+    fn place_replicas_clamps_to_reachable_pool() {
+        let mut n = nn(4);
+        for d in 2..=4 {
+            n.mark_dead(NodeId(d));
+        }
+        let mut rng = Rng::new(5);
+        let reps = n.place_replicas(&mut rng, NodeId(0), 3);
+        assert_eq!(reps, vec![NodeId(1)], "short, under-replicated vector");
+        // Same clamp when the client itself is the only survivor.
+        let reps = n.place_replicas(&mut rng, NodeId(1), 3);
+        assert_eq!(reps, vec![NodeId(1)]);
+        // And on the rack-aware path.
+        let mut r = nn_racked(8, 3);
+        for d in 1..=7 {
+            r.mark_dead(NodeId(d));
+        }
+        let reps = r.place_replicas(&mut rng, NodeId(0), 3);
+        assert_eq!(reps, vec![NodeId(8)]);
+    }
+
+    #[test]
+    fn rack_policy_spreads_replicas_over_two_racks() {
+        // 8 DNs + master, 3 racks of 3: r0={0,1,2} r1={3,4,5} r2={6,7,8}.
+        let mut n = nn_racked(8, 3);
+        let mut rng = Rng::new(7);
+        for _ in 0..200 {
+            let reps = n.place_replicas(&mut rng, NodeId(1), 3);
+            assert_eq!(reps.len(), 3);
+            assert_eq!(reps[0], NodeId(1), "client-local first");
+            let r0 = reps[0].0 / 3;
+            let r1 = reps[1].0 / 3;
+            let r2 = reps[2].0 / 3;
+            assert_ne!(r1, r0, "replica 2 on a remote rack: {reps:?}");
+            assert_eq!(r2, r1, "replica 3 shares replica 2's rack: {reps:?}");
+            let mut sorted = reps.clone();
+            sorted.sort();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 3, "replicas distinct: {reps:?}");
+        }
+    }
+
+    #[test]
+    fn rack_policy_non_datanode_client_still_spreads() {
+        let mut n = nn_racked(8, 3);
+        let mut rng = Rng::new(11);
+        for _ in 0..100 {
+            let reps = n.place_replicas(&mut rng, NodeId(0), 3);
+            assert_eq!(reps.len(), 3);
+            assert!(!reps.contains(&NodeId(0)));
+            assert_ne!(reps[1].0 / 3, reps[0].0 / 3);
+            assert_eq!(reps[2].0 / 3, reps[1].0 / 3);
+        }
+    }
+
+    #[test]
+    fn one_rack_topology_reproduces_flat_draws_byte_for_byte() {
+        // set_racks with a single distinct rack normalizes to the flat
+        // representation: same pool, same RNG draws, same placements.
+        let mut flat = nn(8);
+        let mut one = nn(8);
+        one.set_racks(vec![0; 9]);
+        assert!(!one.rack_aware());
+        let mut ra = Rng::new(99);
+        let mut rb = Rng::new(99);
+        for i in 0..100 {
+            let client = NodeId(1 + (i % 8));
+            assert_eq!(
+                flat.place_replicas(&mut ra, client, 3),
+                one.place_replicas(&mut rb, client, 3),
+                "draw {i} diverged"
+            );
+        }
+        let b = BlockMeta { id: 1, size: 1.0, stored_size: 1.0, replicas: vec![NodeId(2), NodeId(5)] };
+        for _ in 0..50 {
+            assert_eq!(
+                flat.pick_replica(&mut ra, &b, NodeId(3)),
+                one.pick_replica(&mut rb, &b, NodeId(3))
+            );
+        }
+    }
+
+    #[test]
+    fn rack_aware_never_places_on_dead_rack() {
+        let mut n = nn_racked(8, 3);
+        // Rack 1 = nodes 3,4,5 all dead.
+        for d in 3..=5 {
+            n.mark_dead(NodeId(d));
+        }
+        let mut rng = Rng::new(13);
+        for _ in 0..100 {
+            let reps = n.place_replicas(&mut rng, NodeId(1), 3);
+            assert_eq!(reps.len(), 3);
+            for r in &reps {
+                assert!(!(3..=5).contains(&r.0), "dead rack used: {reps:?}");
+            }
+            // Replica 2 must still leave the client's rack (rack 2 is
+            // the only live remote one).
+            assert_eq!(reps[1].0 / 3, 2);
+            assert_eq!(reps[2].0 / 3, 2);
+        }
+    }
+
+    #[test]
+    fn rack_pick_replica_prefers_same_rack_copy() {
+        let n = nn_racked(8, 3);
+        let mut rng = Rng::new(17);
+        let b = BlockMeta {
+            id: 1,
+            size: 1.0,
+            stored_size: 1.0,
+            // One copy in the client's rack (node 2 / rack 0), one
+            // remote (node 6 / rack 2).
+            replicas: vec![NodeId(6), NodeId(2)],
+        };
+        for _ in 0..50 {
+            assert_eq!(n.pick_replica(&mut rng, &b, NodeId(1)), Some(NodeId(2)));
+        }
+        // Client's own copy still wins outright.
+        assert_eq!(n.pick_replica(&mut rng, &b, NodeId(6)), Some(NodeId(6)));
+        // No same-rack copy: any live replica.
+        let far = n.pick_replica(&mut rng, &b, NodeId(4)).unwrap();
+        assert!(b.replicas.contains(&far));
+    }
+
+    /// A purge task's source must be a *live* survivor: when several
+    /// nodes die in the same instant, a listed survivor can itself be
+    /// dead until its own purge runs.
+    #[test]
+    fn purge_source_skips_dead_survivors() {
+        let mut n = nn(4);
+        n.put_file(
+            "f",
+            FileMeta {
+                blocks: vec![BlockMeta {
+                    id: 1,
+                    size: 8.0,
+                    stored_size: 8.0,
+                    replicas: vec![NodeId(2), NodeId(3), NodeId(4)],
+                }],
+            },
+        );
+        n.mark_dead(NodeId(2));
+        n.mark_dead(NodeId(3));
+        let tasks = n.purge_node(NodeId(2));
+        assert_eq!(tasks.len(), 1);
+        assert_eq!(tasks[0].source, NodeId(4), "dead survivor 3 must be skipped");
+        assert_eq!(tasks[0].holders, vec![NodeId(3), NodeId(4)]);
+        // A block with no live survivor yet yields no task...
+        let mut m = nn(4);
+        m.put_file(
+            "g",
+            FileMeta {
+                blocks: vec![BlockMeta {
+                    id: 2,
+                    size: 8.0,
+                    stored_size: 8.0,
+                    replicas: vec![NodeId(1), NodeId(2)],
+                }],
+            },
+        );
+        m.mark_dead(NodeId(1));
+        m.mark_dead(NodeId(2));
+        assert!(m.purge_node(NodeId(1)).is_empty());
+        // ...and is emptied (counted lost by the caller) once the last
+        // dead holder is purged.
+        assert!(m.purge_node(NodeId(2)).is_empty());
+        assert!(m.get_file("g").unwrap().blocks[0].replicas.is_empty());
     }
 
     #[test]

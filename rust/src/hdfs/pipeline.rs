@@ -100,6 +100,9 @@ pub fn write_block_flow(
             .demand(cn.nic_tx, lambda, c_send)
             .demand(d.nic_rx, lambda, c_recv)
             .demand(cn.cpu, ccosts.net_send_remote * lambda, c_send);
+        if let Some((up, down)) = cluster.cross_rack(client, dn1) {
+            f = f.demand(up, lambda, c_send).demand(down, lambda, c_recv);
+        }
         client_cost += ccosts.net_send_remote * lambda;
         chain_cost += lambda / cn.spec.net.nic_bps;
     }
@@ -148,6 +151,9 @@ pub fn write_block_flow(
                 .demand(n.nic_tx, lambda, c_send)
                 .demand(next.nic_rx, lambda, c_recv)
                 .demand(n.cpu, costs.net_send_remote * lambda, c_send);
+            if let Some((up, down)) = cluster.cross_rack(dn, replicas[i + 1]) {
+                f = f.demand(up, lambda, c_send).demand(down, lambda, c_recv);
+            }
             dn_cost += costs.net_send_remote * lambda;
             chain_cost += lambda / n.spec.net.nic_bps;
         }

@@ -58,7 +58,8 @@ fn build_world(preset: ClusterPreset, sim: SimConfig, conf: &HadoopConf) -> (Eng
     let mut engine = Engine::from_config(sim);
     let spec = preset.node_spec_for(conf);
     let n = preset.node_count();
-    let cluster = Cluster::build(&mut engine, &spec, n);
+    let cluster = Cluster::build_racked(&mut engine, &spec, n, conf.racks, conf.rack_oversub);
+    // World::new arms the NameNode with the cluster's rack map.
     let mut world = World::new(cluster);
     world.namenode.set_datanodes((1..n).map(NodeId).collect());
     (engine, shared(world))

@@ -16,11 +16,20 @@
 //! * [`sim`] — fluid-flow discrete-event engine (max-min fair rate sharing).
 //! * [`hw`] — calibrated device models: Atom/Opteron CPUs, HDD/SSD/RAID0,
 //!   NIC + switch, memory bus. Constants carry paper citations.
-//! * [`cluster`] — node assembly, cluster presets (Amdahl, OCC), power.
+//! * [`cluster`] — node assembly, cluster presets (Amdahl, OCC), power,
+//!   and the [`cluster::RackTopology`]: N racks × M nodes with per-rack
+//!   ToR uplinks (shared fabric resources every cross-rack byte
+//!   traverses) sized by a configurable oversubscription ratio. One
+//!   rack = the paper's flat fabric, byte-identical to the pre-rack
+//!   build.
 //! * [`hdfs`] — NameNode/DataNode, replication pipeline, checksums,
-//!   buffered vs direct I/O write paths, TestDFSIO.
+//!   buffered vs direct I/O write paths, TestDFSIO. Placement is the
+//!   v0.20 policy: flat random on one rack, **rack-aware** (client →
+//!   remote rack → same-remote-rack, rack-preferring reads) on
+//!   multi-rack topologies.
 //! * [`mapreduce`] — JobTracker/TaskTracker, splits, map-side sort/spill,
-//!   shuffle, merge, reduce; Hadoop config keys from the paper's Table 1.
+//!   shuffle, merge, reduce; Hadoop config keys from the paper's Table 1;
+//!   node-local → rack-local → remote map-assignment tiers.
 //! * [`conf`] — typed configuration (Table 1) and cluster presets.
 //! * [`zones`] — the Zones algorithm applications: synthetic sky catalog,
 //!   Neighbor Searching and Neighbor Statistics jobs.
@@ -31,19 +40,23 @@
 //! * [`energy`] — power integration → the paper's §3.6 efficiency
 //!   ratios, with recovery joules attributed separately under faults.
 //! * [`faults`] — seeded fault injection & recovery: datanode crashes
-//!   with NameNode dead-node detection, block re-replication from
-//!   surviving copies, mid-block write-pipeline failover, TaskTracker
-//!   blacklisting with re-execution of lost map outputs, CPU stragglers
-//!   and 0.20-style speculative execution (`amdahl-hadoop faults`).
-//!   With an empty [`faults::InjectionPlan`] nothing is installed and
-//!   every output — including `BENCH_sweep.json` — is byte-identical
-//!   to a fault-free build.
+//!   with NameNode dead-node detection, **whole-rack failures** (every
+//!   member node + the ToR uplink at once, with cross-fabric
+//!   re-replication that restores the two-rack spread), ToR brownouts,
+//!   block re-replication from surviving copies, mid-block
+//!   write-pipeline failover, TaskTracker blacklisting with
+//!   re-execution of lost map outputs, CPU stragglers and 0.20-style
+//!   speculative execution (`amdahl-hadoop faults`). With an empty
+//!   [`faults::InjectionPlan`] nothing is installed and every output —
+//!   including `BENCH_sweep.json` — is byte-identical to a fault-free
+//!   build.
 //! * [`report`] — regenerates every figure and table in the paper,
-//!   plus the degraded-mode table and the 2-D core × memory-bus
-//!   frontier.
+//!   plus the degraded-mode table, the 2-D core × memory-bus frontier,
+//!   and the rack × oversubscription frontier.
 //! * [`sweep`] — parallel scenario-sweep engine: Cartesian design-space
-//!   grids (cores × write path × LZO × workload × memory bus × fault
-//!   axes: `mtbf`, `straggler_frac`, speculation on/off), a
+//!   grids (cores × write path × LZO × workload × racks ×
+//!   oversubscription × memory bus × fault axes: `mtbf`,
+//!   `straggler_frac`, whole-rack crash times, speculation on/off), a
 //!   multithreaded work-queue runner (one `sim::Engine` per thread),
 //!   and the core-count frontier analysis generalizing the paper's §5
 //!   four-core conclusion (`amdahl-hadoop sweep`).

@@ -11,11 +11,13 @@
 //! amdahl-hadoop sweep  [--cores 1..8] [--nodes 9] [--family amdahl|occ|both]
 //!                      [--threads N] [--gb 0.125] [--workers 4]
 //!                      [--solver incremental|whole-set]
+//!                      [--racks 1,3] [--oversub 1,4]
 //!                      [--membus 1300,2600] [--mtbf 600] [--stragglers 0.25]
 //!                      [--slowdown 0.4] [--spec]
 //!                      [--baseline old.json] [--out BENCH_sweep.json] [--quiet]
 //! amdahl-hadoop faults [--workload search|stat|dfsio-write|dfsio-read]
 //!                      [--mtbf 600] [--stragglers 0.25] [--slowdown 0.4]
+//!                      [--racks 3] [--oversub 4] [--rack-crash 20]
 //!                      [--spec] [--nodes 9] [--cores 2] [--threads N]
 //! ```
 //!
@@ -27,14 +29,17 @@
 //! against an earlier `BENCH_sweep.json` and exits nonzero when any
 //! scenario's throughput regressed more than 5%. `--membus` (MiB/s
 //! values, comma-separated) adds memory-bus tiers and prints the 2-D
-//! core × bus frontier; `--mtbf` / `--stragglers` / `--spec` add
-//! degraded-mode scenarios next to their fault-free twins and print the
-//! degraded-mode table. With none of those flags the output is
-//! byte-identical to a fault-free build.
+//! core × bus frontier; `--racks` / `--oversub` (comma-separated rack
+//! counts and ToR oversubscription ratios) add multi-rack topologies
+//! and print the rack × oversubscription frontier; `--mtbf` /
+//! `--stragglers` / `--spec` add degraded-mode scenarios next to their
+//! fault-free twins and print the degraded-mode table. With none of
+//! those flags the output is byte-identical to a fault-free build.
 //!
 //! `faults` runs one workload fault-free and under a seeded injection
-//! plan (crashes by MTBF, CPU stragglers, optional speculative
-//! execution) and prints the degraded-mode comparison.
+//! plan (crashes by MTBF, CPU stragglers, whole-rack failures via
+//! `--racks N --rack-crash T`, optional speculative execution) and
+//! prints the degraded-mode comparison.
 //!
 //! Common options: `--seed N` (default 42), `--scale F` (fraction of the
 //! paper's 25 GB dataset, default 0.002), `--kernels` (load the AOT
@@ -150,6 +155,33 @@ fn main() -> anyhow::Result<()> {
                 Some(s) => SolverMode::parse(s)
                     .ok_or_else(|| anyhow::anyhow!("unknown --solver {s} (incremental|whole-set)"))?,
             };
+            // Optional rack-topology axes: rack counts and ToR
+            // oversubscription ratios (comma-separated). Single-rack
+            // entries keep the historical flat fabric.
+            if let Some(list) = args.get("racks") {
+                let mut v = Vec::new();
+                for tok in list.split(',') {
+                    let r: usize = tok.trim().parse()?;
+                    anyhow::ensure!(r >= 1, "--racks values must be >= 1");
+                    anyhow::ensure!(
+                        r <= nodes,
+                        "--racks {r} cannot partition {nodes} nodes into non-empty racks"
+                    );
+                    v.push(r);
+                }
+                anyhow::ensure!(!v.is_empty(), "--racks needs at least one value");
+                grid.racks = v;
+            }
+            if let Some(list) = args.get("oversub") {
+                let mut v = Vec::new();
+                for tok in list.split(',') {
+                    let o: f64 = tok.trim().parse()?;
+                    anyhow::ensure!(o >= 1.0, "--oversub ratios must be >= 1");
+                    v.push(o);
+                }
+                anyhow::ensure!(!v.is_empty(), "--oversub needs at least one value");
+                grid.oversub = v;
+            }
             // Optional memory-bus tiers (MiB/s, comma-separated) next to
             // the preset bus, and degraded-mode axes next to fault-free.
             if let Some(list) = args.get("membus") {
@@ -209,6 +241,9 @@ fn main() -> anyhow::Result<()> {
             if grid.membus.len() > 1 {
                 print!("{}", report::render_bus_frontier(&results.bus_frontier()));
             }
+            if grid.racks.iter().any(|&r| r > 1) {
+                print!("{}", report::render_rack_frontier(&results.rack_frontier()));
+            }
             let degraded = results.degraded_rows();
             if !degraded.is_empty() {
                 print!("{}", report::render_degraded(&degraded));
@@ -241,16 +276,39 @@ fn main() -> anyhow::Result<()> {
             let cores = args.get_usize("cores", 2)?;
             let mtbf = args.get_f64("mtbf", 600.0)?;
             let stragglers = args.get_f64("stragglers", 0.0)?;
+            let racks = args.get_usize("racks", 1)?;
+            anyhow::ensure!(racks >= 1, "--racks must be >= 1");
+            anyhow::ensure!(
+                racks <= nodes,
+                "--racks {racks} cannot partition {nodes} nodes into non-empty racks"
+            );
+            let oversub = args.get_f64("oversub", 1.0)?;
+            anyhow::ensure!(oversub >= 1.0, "--oversub must be >= 1");
             // One fault-free twin per faulted scenario: the degraded
             // table needs both sides.
             let mut grid = SweepGrid::paper_default(seed, cores, cores);
             grid.nodes = vec![nodes];
+            grid.racks = vec![racks];
+            grid.oversub = vec![oversub];
             grid.write_paths = vec![WritePath::DirectIo];
             grid.lzo = vec![false];
             grid.workloads = vec![workload];
             grid.mtbf = vec![None, Some(mtbf)];
             if stragglers > 0.0 {
                 grid.stragglers = vec![0.0, stragglers];
+            }
+            if let Some(t) = args.get("rack-crash") {
+                let at: f64 = t.parse()?;
+                anyhow::ensure!(racks > 1, "--rack-crash needs --racks > 1");
+                anyhow::ensure!(at >= 0.0, "--rack-crash is a simulated second >= 0");
+                // The *default* MTBF axis is dropped so the rack-crash
+                // run isolates the rack failure domain — but an MTBF
+                // the user asked for explicitly is honored (the grid
+                // then expands every node-fault × rack-fault combo).
+                if args.get("mtbf").is_none() {
+                    grid.mtbf = vec![None];
+                }
+                grid.rack_crash_at = vec![None, Some(at)];
             }
             if args.flag("spec") {
                 grid.speculation = vec![false, true];
@@ -276,12 +334,14 @@ fn main() -> anyhow::Result<()> {
             for r in &results.records {
                 if let Some(f) = &r.faults {
                     println!(
-                        "{}: {} crash(es), {} straggler(s), {} re-replication(s) \
+                        "{}: {} crash(es) ({} whole-rack), {} straggler(s), \
+                         {} re-replication(s) \
                          ({:.1} MB recovered, {:.0} J), {} pipeline failover(s), \
                          {} read failover(s), {} map(s) re-queued, {} map output(s) lost, \
                          {} reduce(s) re-queued, {} block(s) lost",
                         r.id,
                         f.crashes,
+                        f.rack_crashes,
                         f.stragglers,
                         f.rereplications_done,
                         f.recovery_bytes / MIB,

@@ -46,6 +46,18 @@ pub const SPECULATION_POLL_S: f64 = 3.0;
 /// progress-rate threshold, expressed in completion-time terms).
 pub const SPECULATION_LAG: f64 = 1.5;
 
+/// Should a sole running attempt be hedged with a duplicate?
+///
+/// The threshold is floored: when the completed maps finished in ~0
+/// simulated seconds (tiny synthetic splits) the mean is 0 and
+/// `SPECULATION_LAG * mean` would be 0 too, so *every* running attempt
+/// would be hedged the moment the poll fired — speculation is skipped
+/// entirely while `mean_done <= 0`. The comparison is strict (`>`), so
+/// an attempt sitting exactly at the threshold never speculates.
+pub(crate) fn speculation_due(elapsed: f64, mean_done: f64) -> bool {
+    mean_done > 0.0 && elapsed > SPECULATION_LAG * mean_done
+}
+
 /// A MapReduce job description.
 pub struct JobSpec {
     pub name: String,
@@ -89,6 +101,20 @@ pub struct JobResult {
     pub hdfs_output_bytes: f64,
     /// Fraction of map tasks that read their split from the local node.
     pub map_locality: f64,
+    /// Fraction of map tasks that were not node-local but ran in the
+    /// same rack as one of their split's replicas (always 0 on the flat
+    /// single-rack topology, where the tier does not exist).
+    pub map_rack_locality: f64,
+}
+
+/// How a map assignment relates to its split's replicas: on the node
+/// holding a replica, in the same rack as one (multi-rack topologies
+/// only), or neither.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Locality {
+    Node,
+    Rack,
+    Remote,
 }
 
 /// One live map attempt (original or speculative duplicate).
@@ -122,6 +148,10 @@ struct JobState {
     map_outputs: Vec<Option<(NodeId, MapOutput)>>,
     maps_done: usize,
     local_maps: usize,
+    rack_local_maps: usize,
+    /// Rack index per node id, snapshotted at job start; empty on the
+    /// flat topology (disables the rack-locality scheduling tier).
+    rack_of: Vec<usize>,
     free_map_slots: HashMap<NodeId, usize>,
     free_reduce_slots: HashMap<NodeId, usize>,
     pending_reduces: Vec<usize>,
@@ -174,7 +204,7 @@ pub fn run_job(
 ) {
     let splits = plan_splits(world, &spec.input_files);
     assert!(!splits.is_empty(), "job {} has no input splits", spec.name);
-    let (slaves, faults_active, speculation) = {
+    let (slaves, faults_active, speculation, rack_of) = {
         let w = world.borrow();
         // Only live trackers get slots: a job submitted after a crash
         // must not schedule onto the dead node.
@@ -185,7 +215,14 @@ pub fn run_job(
             .copied()
             .filter(|&n| w.faults.is_up(n))
             .collect();
-        (slaves, w.faults.active, w.faults.speculation)
+        // Rack map snapshot: arms the rack-locality tier only on
+        // multi-rack topologies.
+        let rack_of: Vec<usize> = if w.cluster.racks() > 1 {
+            (0..w.cluster.len()).map(|i| w.cluster.rack_of(NodeId(i))).collect()
+        } else {
+            Vec::new()
+        };
+        (slaves, w.faults.active, w.faults.speculation, rack_of)
     };
     let mut free_map_slots = HashMap::new();
     let mut free_reduce_slots = HashMap::new();
@@ -204,6 +241,8 @@ pub fn run_job(
         map_outputs: vec![None; n_splits],
         maps_done: 0,
         local_maps: 0,
+        rack_local_maps: 0,
+        rack_of,
         free_map_slots,
         free_reduce_slots,
         pending_reduces: (0..n_reducers).collect(),
@@ -248,8 +287,8 @@ fn pump(engine: &mut Engine, state: Rc<RefCell<JobState>>) {
     engine.batch(|engine| loop {
         let action = next_action(&state.borrow());
         match action {
-            Action::StartMap { split_idx, node, local } => {
-                start_map(engine, state.clone(), split_idx, node, local, false)
+            Action::StartMap { split_idx, node, locality } => {
+                start_map(engine, state.clone(), split_idx, node, locality, false)
             }
             Action::StartReduce { reducer, node } => {
                 start_reduce(engine, state.clone(), reducer, node)
@@ -260,7 +299,7 @@ fn pump(engine: &mut Engine, state: Rc<RefCell<JobState>>) {
 }
 
 enum Action {
-    StartMap { split_idx: usize, node: NodeId, local: bool },
+    StartMap { split_idx: usize, node: NodeId, locality: Locality },
     StartReduce { reducer: usize, node: NodeId },
     Wait,
 }
@@ -279,7 +318,28 @@ fn next_action(s: &JobState) -> Action {
             for &r in &s.splits[si].replicas {
                 if s.free_map_slots.get(&r).copied().unwrap_or(0) > 0 {
                     let _ = pos;
-                    return Action::StartMap { split_idx: si, node: r, local: true };
+                    return Action::StartMap { split_idx: si, node: r, locality: Locality::Node };
+                }
+            }
+        }
+        // Rack-locality tier (v0.20 with a multi-rack topology): a free
+        // tracker in the same rack as one of the split's replicas — the
+        // read stays inside the rack, off the oversubscribed fabric.
+        if !s.rack_of.is_empty() {
+            for &si in &s.pending_maps {
+                let cand = s
+                    .free_map_slots
+                    .iter()
+                    .filter(|(n, v)| {
+                        **v > 0
+                            && s.splits[si].replicas.iter().any(|r| {
+                                s.rack_of.get(r.0).copied() == s.rack_of.get(n.0).copied()
+                            })
+                    })
+                    .map(|(n, _)| *n)
+                    .min_by_key(|n| n.0);
+                if let Some(node) = cand {
+                    return Action::StartMap { split_idx: si, node, locality: Locality::Rack };
                 }
             }
         }
@@ -287,7 +347,7 @@ fn next_action(s: &JobState) -> Action {
         if let Some((&node, _)) = s.free_map_slots.iter().filter(|(_, &v)| v > 0).min_by_key(|(n, _)| n.0)
         {
             let si = s.pending_maps[0];
-            return Action::StartMap { split_idx: si, node, local: false };
+            return Action::StartMap { split_idx: si, node, locality: Locality::Remote };
         }
     }
     // Reduce phase (strictly after all maps).
@@ -307,7 +367,7 @@ fn start_map(
     state: Rc<RefCell<JobState>>,
     split_idx: usize,
     node: NodeId,
-    local: bool,
+    locality: Locality,
     speculative: bool,
 ) {
     let token = TaskToken::new();
@@ -315,12 +375,14 @@ fn start_map(
         let mut s = state.borrow_mut();
         if !speculative {
             s.pending_maps.retain(|&i| i != split_idx);
+            match locality {
+                Locality::Node => s.local_maps += 1,
+                Locality::Rack => s.rack_local_maps += 1,
+                Locality::Remote => {}
+            }
         }
         *s.free_map_slots.get_mut(&node).unwrap() -= 1;
         s.running_maps += 1;
-        if local && !speculative {
-            s.local_maps += 1;
-        }
         s.map_attempts.push(MapAttempt {
             split_idx,
             node,
@@ -622,7 +684,7 @@ fn spec_poll(engine: &mut Engine, state: Rc<RefCell<JobState>>) {
                     .map_attempts
                     .iter()
                     .any(|b| b.split_idx == a.split_idx && !b.token.same(&a.token));
-                if has_twin || now - a.start <= SPECULATION_LAG * mean {
+                if has_twin || !speculation_due(now - a.start, mean) {
                     continue;
                 }
                 // Deterministic: the smallest live tracker with a free
@@ -644,7 +706,7 @@ fn spec_poll(engine: &mut Engine, state: Rc<RefCell<JobState>>) {
         let state2 = state.clone();
         engine.batch(move |engine| {
             for (si, node) in launches {
-                start_map(engine, state2.clone(), si, node, false, true);
+                start_map(engine, state2.clone(), si, node, Locality::Remote, true);
             }
         });
     }
@@ -671,6 +733,7 @@ fn finish(engine: &mut Engine, state: &Rc<RefCell<JobState>>) {
             map_output_bytes,
             hdfs_output_bytes: s.hdfs_output_bytes,
             map_locality: s.local_maps as f64 / s.splits.len() as f64,
+            map_rack_locality: s.rack_local_maps as f64 / s.splits.len() as f64,
         };
         (result, s.on_done.take().unwrap())
     };
@@ -682,7 +745,7 @@ mod tests {
     use super::*;
     use crate::cluster::Cluster;
     use crate::hdfs::testdfsio::preplace_file;
-    use crate::hdfs::World;
+    use crate::hdfs::{BlockMeta, FileMeta, World};
     use crate::hw::{amdahl_blade, DiskKind, MIB};
     use crate::sim::engine::shared;
 
@@ -805,6 +868,85 @@ mod tests {
         assert!(wb.namenode.exists("out/part-00000"));
         assert!(wb.namenode.exists("out/part-00002"));
         assert!(wb.namenode.bytes_under("out/") > 0.0);
+    }
+
+    /// Regression for the zero-mean speculation storm: completed maps
+    /// finishing in ~0 simulated seconds made `SPECULATION_LAG * mean`
+    /// zero, so every sole running attempt was hedged at the first poll.
+    /// The threshold is floored (no speculation while the mean is 0) and
+    /// strict (an attempt exactly at the threshold never speculates, so
+    /// it cannot be hedged again on consecutive polls).
+    #[test]
+    fn speculation_threshold_floored_and_strict() {
+        assert!(!speculation_due(5.0, 0.0), "zero mean must never hedge");
+        assert!(!speculation_due(f64::MAX, 0.0));
+        assert!(!speculation_due(SPECULATION_LAG * 1.0, 1.0), "boundary is exclusive");
+        assert!(speculation_due(SPECULATION_LAG * 1.0 + 1e-9, 1.0));
+        assert!(!speculation_due(0.5, 1.0));
+    }
+
+    #[test]
+    fn rack_tier_schedules_overflow_maps_in_rack() {
+        // 9 nodes, 3 racks (r0={0,1,2}, r1={3,4,5}, r2={6,7,8}); every
+        // split replica pinned to node 3 (rack 1). Node 3's three map
+        // slots fill first; the overflow must land rack-locally (nodes
+        // 4/5), not on the smallest free node (node 1, rack 0).
+        let mut e = Engine::new(9);
+        let cluster = Cluster::build_racked(&mut e, &amdahl_blade(DiskKind::Raid0), 9, 3, 2.0);
+        // World::new arms the NameNode's rack map from the topology.
+        let mut world = World::new(cluster);
+        world.namenode.set_datanodes((1..9).map(NodeId).collect());
+        let w = shared(world);
+        {
+            let mut wb = w.borrow_mut();
+            for i in 0..6 {
+                let id = wb.namenode.alloc_block();
+                wb.namenode.put_file(
+                    &format!("in/p{i}"),
+                    FileMeta {
+                        blocks: vec![BlockMeta {
+                            id,
+                            size: 32.0 * MIB,
+                            stored_size: 32.0 * MIB,
+                            replicas: vec![NodeId(3)],
+                        }],
+                    },
+                );
+            }
+        }
+        let mut spec = basic_job(&w, HadoopConf::default(), 2);
+        spec.input_files = (0..6).map(|i| format!("in/p{i}")).collect();
+        let result = shared(None);
+        let r2 = result.clone();
+        run_job(&mut e, &w, spec, move |_, res| *r2.borrow_mut() = Some(res));
+        e.run();
+        let res = result.borrow().clone().unwrap();
+        assert_eq!(res.map_tasks, 6);
+        assert!(
+            (res.map_locality - 0.5).abs() < 1e-9,
+            "3 of 6 node-local, got {}",
+            res.map_locality
+        );
+        assert!(
+            (res.map_rack_locality - 0.5).abs() < 1e-9,
+            "3 of 6 rack-local, got {}",
+            res.map_rack_locality
+        );
+    }
+
+    #[test]
+    fn flat_topology_reports_zero_rack_locality() {
+        let (mut e, w) = setup(15);
+        place_input(&mut e, &w, 256.0 * MIB);
+        let files: Vec<String> = (0..4).map(|i| format!("in/data/part{i}")).collect();
+        let mut spec = basic_job(&w, HadoopConf::default(), 2);
+        spec.input_files = files;
+        let result = shared(None);
+        let r2 = result.clone();
+        run_job(&mut e, &w, spec, move |_, res| *r2.borrow_mut() = Some(res));
+        e.run();
+        let res = result.borrow().clone().unwrap();
+        assert_eq!(res.map_rack_locality, 0.0);
     }
 
     #[test]

@@ -427,7 +427,11 @@ pub fn run_reduce_task(
                     .demand(d.nic_rx, 1.0, c_recv)
                     .demand(n.cpu, costs.net_send_remote, c_send)
                     .demand(d.cpu, d.spec.cpu.costs.net_recv_remote + d.spec.cpu.costs.hadoop_stream, c_recv)
-                    .cap(1.0 / (d.spec.cpu.costs.net_recv_remote + d.spec.cpu.costs.hadoop_stream))
+                    .cap(1.0 / (d.spec.cpu.costs.net_recv_remote + d.spec.cpu.costs.hadoop_stream));
+                // Cross-rack shuffle fetches traverse both ToR uplinks.
+                if let Some((up, down)) = cluster.cross_rack(src, node) {
+                    f = f.demand(up, 1.0, c_send).demand(down, 1.0, c_recv);
+                }
             }
             f
         };

@@ -654,6 +654,56 @@ pub fn render_bus_frontier(cells: &[crate::sweep::BusFrontierCell]) -> String {
     s
 }
 
+/// Render the rack-count × oversubscription frontier: one row per
+/// swept ToR oversubscription ratio, one column per rack count, each
+/// cell the per-node MB/s with its bottleneck initial. Shows what the
+/// fabric costs as the topology leaves the paper's single rack: with a
+/// non-blocking fabric (1:1) extra racks are nearly free, while an
+/// oversubscribed uplink drags every cross-rack replica stream down
+/// until the network is the bottleneck.
+pub fn render_rack_frontier(cells: &[crate::sweep::RackFrontierCell]) -> String {
+    if cells.is_empty() {
+        return String::from(
+            "rack x oversubscription frontier: no matching scenarios in this sweep\n",
+        );
+    }
+    let cores = cells[0].cores;
+    let mut racks: Vec<usize> = cells.iter().map(|c| c.racks).collect();
+    racks.sort_unstable();
+    racks.dedup();
+    let mut oversubs: Vec<f64> = Vec::new();
+    for c in cells {
+        if !oversubs.iter().any(|o| *o == c.oversub) {
+            oversubs.push(c.oversub);
+        }
+    }
+    oversubs.sort_by(|a, b| a.total_cmp(b));
+    let mut s = format!(
+        "rack x oversubscription frontier: MB/s/node \
+         (dfsio-write, direct I/O, no LZO, {cores} cores)\n"
+    );
+    s.push_str(&format!("{:<16}", "oversub \\ racks"));
+    for r in &racks {
+        s.push_str(&format!("{r:>10}"));
+    }
+    s.push('\n');
+    for os in &oversubs {
+        s.push_str(&format!("{:<16}", format!("{os}:1")));
+        for r in &racks {
+            match cells.iter().find(|c| c.racks == *r && c.oversub == *os) {
+                Some(cell) => {
+                    let b = &cell.bottleneck[..1]; // c/d/n/m initial
+                    s.push_str(&format!("{:>8.1}/{b}", cell.per_node_mbps));
+                }
+                None => s.push_str(&format!("{:>10}", "-")),
+            }
+        }
+        s.push('\n');
+    }
+    s.push_str("cell = MB/s per node / bottleneck (c=cpu d=disk n=net m=membus)\n");
+    s
+}
+
 /// Render the degraded-mode table: every faulted sweep scenario next to
 /// its fault-free twin — runtime overhead, recovery traffic, wasted
 /// speculative work, and the energy bill of failure tolerance.

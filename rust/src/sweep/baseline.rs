@@ -42,6 +42,12 @@ pub struct BaselineComparison {
     /// Baseline ids the current sweep did not produce (shrunk grid —
     /// informational).
     pub missing_in_current: Vec<String>,
+    /// Scenarios whose baseline throughput is 0 — no drop fraction can
+    /// be computed against them, so they are exempt from the regression
+    /// check, but they are **counted and rendered** rather than
+    /// silently skipped (a corrupt or truncated baseline would
+    /// otherwise wave every scenario through).
+    pub skipped_zero_baseline: usize,
     /// Scenarios whose throughput dropped beyond the tolerance.
     pub regressions: Vec<Regression>,
     pub tolerance: f64,
@@ -65,12 +71,14 @@ impl BaselineComparison {
             ));
         }
         s.push_str(&format!(
-            "baseline: {} compared, {} regressions (tolerance {:.0}%), {} new, {} dropped\n",
+            "baseline: {} compared, {} regressions (tolerance {:.0}%), {} new, {} dropped, \
+             {} skipped_zero_baseline\n",
             self.compared,
             self.regressions.len(),
             self.tolerance * 100.0,
             self.missing_in_baseline.len(),
-            self.missing_in_current.len()
+            self.missing_in_current.len(),
+            self.skipped_zero_baseline
         ));
         s
     }
@@ -112,14 +120,29 @@ pub fn compare(current: &SweepResults, baseline_text: &str, tolerance: f64) -> B
     let baseline = parse_baseline(baseline_text);
     let mut compared = 0usize;
     let mut missing_in_baseline = Vec::new();
+    let mut skipped_zero_baseline = 0usize;
     let mut regressions = Vec::new();
     for rec in &current.records {
         match baseline.iter().find(|b| b.id == rec.id) {
             None => missing_in_baseline.push(rec.id.clone()),
             Some(b) => {
                 compared += 1;
-                if b.per_node_mbps > 0.0 && rec.per_node_mbps < b.per_node_mbps * (1.0 - tolerance)
-                {
+                if b.per_node_mbps <= 0.0 {
+                    // No drop fraction exists against a zero baseline;
+                    // count the exemption instead of silently passing.
+                    skipped_zero_baseline += 1;
+                } else if rec.per_node_mbps <= 0.0 {
+                    // A scenario that produced throughput before and
+                    // none now is a total regression, not a skip (and
+                    // the explicit branch keeps the division below from
+                    // ever seeing a degenerate current value).
+                    regressions.push(Regression {
+                        id: rec.id.clone(),
+                        baseline_mbps: b.per_node_mbps,
+                        current_mbps: rec.per_node_mbps,
+                        drop_frac: 1.0,
+                    });
+                } else if rec.per_node_mbps < b.per_node_mbps * (1.0 - tolerance) {
                     regressions.push(Regression {
                         id: rec.id.clone(),
                         baseline_mbps: b.per_node_mbps,
@@ -139,6 +162,7 @@ pub fn compare(current: &SweepResults, baseline_text: &str, tolerance: f64) -> B
         compared,
         missing_in_baseline,
         missing_in_current,
+        skipped_zero_baseline,
         regressions,
         tolerance,
     }
@@ -218,6 +242,41 @@ mod tests {
         });
         let cmp = compare(&current, &baseline, DEFAULT_TOLERANCE);
         assert_eq!(cmp.missing_in_baseline.len(), 1);
+    }
+
+    /// Regression: a zero-throughput baseline entry used to be silently
+    /// exempt from the check (`b.per_node_mbps > 0.0` guard with no
+    /// accounting) — a truncated or corrupt baseline waved every
+    /// scenario through. It is still exempt (no drop fraction exists)
+    /// but must now be counted and rendered.
+    #[test]
+    fn zero_baseline_is_counted_not_silently_exempt() {
+        let current = synthetic_results(1.0);
+        let mut zeroed = synthetic_results(1.0);
+        zeroed.records[0].per_node_mbps = 0.0;
+        let cmp = compare(&current, &zeroed.to_json(), DEFAULT_TOLERANCE);
+        assert_eq!(cmp.compared, current.records.len());
+        assert_eq!(cmp.skipped_zero_baseline, 1);
+        assert!(!cmp.has_regressions());
+        assert!(
+            cmp.render().contains("1 skipped_zero_baseline"),
+            "render must surface the exemption: {}",
+            cmp.render()
+        );
+    }
+
+    /// Regression: a current value of 0 against a nonzero baseline is a
+    /// total regression with `drop_frac = 1.0`.
+    #[test]
+    fn zero_current_against_nonzero_baseline_is_total_regression() {
+        let baseline = synthetic_results(1.0).to_json();
+        let mut dead = synthetic_results(1.0);
+        dead.records[1].per_node_mbps = 0.0;
+        let cmp = compare(&dead, &baseline, DEFAULT_TOLERANCE);
+        assert_eq!(cmp.regressions.len(), 1);
+        assert_eq!(cmp.regressions[0].id, dead.records[1].id);
+        assert!((cmp.regressions[0].drop_frac - 1.0).abs() < 1e-12);
+        assert_eq!(cmp.skipped_zero_baseline, 0);
     }
 
     #[test]

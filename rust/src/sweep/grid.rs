@@ -15,7 +15,7 @@
 //! keep lining up.
 
 use crate::conf::{ClusterPreset, HadoopConf};
-use crate::faults::InjectionPlan;
+use crate::faults::{InjectionPlan, RackCrashSpec};
 use crate::hw::MIB;
 
 /// Cluster hardware family (the paper's two testbeds).
@@ -127,6 +127,16 @@ pub struct Scenario {
     pub write_path: WritePath,
     pub lzo: bool,
     pub workload: Workload,
+    /// Rack count the cluster is partitioned into (1 = the flat paper
+    /// topology; no uplink resources, historical ids and seeds).
+    pub racks: usize,
+    /// ToR uplink oversubscription ratio (meaningful only with
+    /// `racks > 1`; normalized to 1.0 on single-rack scenarios).
+    pub oversub: f64,
+    /// Whole-rack failure axis: the highest-index rack (never the
+    /// master's rack 0) dies at this simulated second. None = no rack
+    /// fault; only expanded for `racks > 1`.
+    pub rack_crash_at: Option<f64>,
     /// Memory-bus copy capacity override, bytes/s (None = preset value).
     pub membus_bps: Option<f64>,
     /// Per-node MTBF for crash injection (None = no crashes).
@@ -158,6 +168,8 @@ impl Scenario {
         self.write_path.apply(&mut c);
         c.lzo_output = self.lzo;
         c.membus_copy_bps = self.membus_bps;
+        c.racks = self.racks;
+        c.rack_oversub = self.oversub;
         c
     }
 
@@ -168,6 +180,15 @@ impl Scenario {
             mtbf_s: self.mtbf,
             straggler_frac: self.straggler_frac,
             speculation: self.speculation,
+            rack_crashes: match self.rack_crash_at {
+                // The crashed rack is always the highest-index one: it
+                // never contains the master, and chunked assignment
+                // keeps it a pure failure domain of slaves.
+                Some(at) if self.racks > 1 => {
+                    vec![RackCrashSpec { rack: self.racks - 1, at }]
+                }
+                _ => Vec::new(),
+            },
             ..InjectionPlan::empty()
         }
     }
@@ -188,6 +209,14 @@ pub struct SweepGrid {
     /// Total node counts (master + slaves); every entry must be ≥ 2.
     pub nodes: Vec<usize>,
     pub cores: Vec<usize>,
+    /// Rack counts (1 = flat). Single-rack entries ignore the oversub
+    /// and rack-crash axes (they would be bit-identical twins).
+    pub racks: Vec<usize>,
+    /// ToR oversubscription ratios (≥ 1.0), applied to `racks > 1`.
+    pub oversub: Vec<f64>,
+    /// Whole-rack crash times (None = fault-free), applied to
+    /// `racks > 1`.
+    pub rack_crash_at: Vec<Option<f64>>,
     pub write_paths: Vec<WritePath>,
     pub lzo: Vec<bool>,
     pub workloads: Vec<Workload>,
@@ -211,6 +240,9 @@ impl SweepGrid {
             families: vec![ClusterFamily::Amdahl],
             nodes: vec![9],
             cores: (core_lo..=core_hi).collect(),
+            racks: vec![1],
+            oversub: vec![1.0],
+            rack_crash_at: vec![None],
             write_paths: WritePath::ALL.to_vec(),
             lzo: vec![false, true],
             workloads: Workload::ALL.to_vec(),
@@ -234,11 +266,23 @@ impl SweepGrid {
         }
     }
 
+    /// Topology combinations per `racks` entry: single-rack entries
+    /// collapse the oversub and rack-crash axes to one value (their
+    /// variants would be bit-identical re-simulations).
+    fn rack_combo_count(&self) -> usize {
+        self.racks
+            .iter()
+            .map(|&r| if r <= 1 { 1 } else { self.oversub.len() * self.rack_crash_at.len() })
+            .sum()
+    }
+
     /// Number of scenarios `expand` will produce (axis counts multiply,
-    /// except that dfsio workloads skip `speculation: true`).
+    /// except that dfsio workloads skip `speculation: true` and
+    /// single-rack entries skip the oversub / rack-crash variants).
     pub fn len(&self) -> usize {
         let base = self.families.len()
             * self.nodes.len()
+            * self.rack_combo_count()
             * self.cores.len()
             * self.write_paths.len()
             * self.lzo.len()
@@ -253,61 +297,104 @@ impl SweepGrid {
     }
 
     /// Expand the Cartesian product, in a fixed axis-major order
-    /// (family, nodes, cores, write path, lzo, workload, membus, mtbf,
-    /// stragglers, speculation).
+    /// (family, nodes, racks, oversub, rack crash, cores, write path,
+    /// lzo, workload, membus, mtbf, stragglers, speculation).
     pub fn expand(&self) -> Vec<Scenario> {
         let mut out = Vec::with_capacity(self.len());
         for &family in &self.families {
             for &nodes in &self.nodes {
                 assert!(nodes >= 2, "a cluster needs a master and at least one slave");
-                for &cores in &self.cores {
-                    assert!(cores >= 1, "at least one core per blade");
-                    for &write_path in &self.write_paths {
-                        for &lzo in &self.lzo {
-                            for &workload in &self.workloads {
-                                for &membus_bps in &self.membus {
-                                    for &mtbf in &self.mtbf {
-                                        for &straggler_frac in &self.stragglers {
-                                            for &speculation in &self.speculation {
-                                                // Speculation only applies to
-                                                // MapReduce workloads (see
-                                                // `spec_values_for`).
-                                                if speculation
-                                                    && matches!(
-                                                        workload,
-                                                        Workload::DfsioWrite
-                                                            | Workload::DfsioRead
-                                                    )
-                                                {
-                                                    continue;
-                                                }
-                                                let mut id = scenario_id(
-                                                    family, nodes, cores, write_path, lzo, workload,
-                                                );
-                                                push_axis_suffixes(
-                                                    &mut id,
-                                                    membus_bps,
-                                                    mtbf,
-                                                    straggler_frac,
-                                                    speculation,
-                                                );
-                                                let seed = derive_seed(self.base_seed, &id);
-                                                out.push(Scenario {
-                                                    id,
-                                                    family,
-                                                    nodes,
-                                                    cores,
-                                                    write_path,
-                                                    lzo,
-                                                    workload,
-                                                    membus_bps,
-                                                    mtbf,
-                                                    straggler_frac,
-                                                    speculation,
-                                                    seed,
-                                                });
-                                            }
+                for &racks in &self.racks {
+                    assert!(racks >= 1, "at least one rack");
+                    assert!(
+                        racks <= nodes,
+                        "cannot partition {nodes} nodes into {racks} non-empty racks"
+                    );
+                    // Single-rack entries collapse the rack-only axes.
+                    let oversubs: &[f64] = if racks <= 1 { &[1.0] } else { &self.oversub };
+                    let rack_crashes: &[Option<f64>] =
+                        if racks <= 1 { &[None] } else { &self.rack_crash_at };
+                    for &oversub in oversubs {
+                        assert!(oversub >= 1.0, "oversubscription ratio must be >= 1");
+                        for &rack_crash_at in rack_crashes {
+                            self.expand_inner(
+                                &mut out,
+                                family,
+                                nodes,
+                                racks,
+                                oversub,
+                                rack_crash_at,
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// The non-topology axes of `expand`, for one fixed topology point.
+    #[allow(clippy::too_many_arguments)]
+    fn expand_inner(
+        &self,
+        out: &mut Vec<Scenario>,
+        family: ClusterFamily,
+        nodes: usize,
+        racks: usize,
+        oversub: f64,
+        rack_crash_at: Option<f64>,
+    ) {
+        for &cores in &self.cores {
+            assert!(cores >= 1, "at least one core per blade");
+            for &write_path in &self.write_paths {
+                for &lzo in &self.lzo {
+                    for &workload in &self.workloads {
+                        for &membus_bps in &self.membus {
+                            for &mtbf in &self.mtbf {
+                                for &straggler_frac in &self.stragglers {
+                                    for &speculation in &self.speculation {
+                                        // Speculation only applies to
+                                        // MapReduce workloads (see
+                                        // `spec_values_for`).
+                                        if speculation
+                                            && matches!(
+                                                workload,
+                                                Workload::DfsioWrite | Workload::DfsioRead
+                                            )
+                                        {
+                                            continue;
                                         }
+                                        let mut id = scenario_id(
+                                            family, nodes, cores, write_path, lzo, workload,
+                                        );
+                                        push_axis_suffixes(
+                                            &mut id,
+                                            racks,
+                                            oversub,
+                                            membus_bps,
+                                            mtbf,
+                                            straggler_frac,
+                                            rack_crash_at,
+                                            speculation,
+                                        );
+                                        let seed = derive_seed(self.base_seed, &id);
+                                        out.push(Scenario {
+                                            id,
+                                            family,
+                                            nodes,
+                                            cores,
+                                            write_path,
+                                            lzo,
+                                            workload,
+                                            racks,
+                                            oversub,
+                                            rack_crash_at,
+                                            membus_bps,
+                                            mtbf,
+                                            straggler_frac,
+                                            speculation,
+                                            seed,
+                                        });
                                     }
                                 }
                             }
@@ -316,7 +403,6 @@ impl SweepGrid {
                 }
             }
         }
-        out
     }
 }
 
@@ -344,15 +430,26 @@ pub fn scenario_id(
     )
 }
 
-/// Append the non-default bus/fault axis suffixes to a scenario id.
+/// Append the non-default topology/bus/fault axis suffixes to a
+/// scenario id.
+#[allow(clippy::too_many_arguments)]
 fn push_axis_suffixes(
     id: &mut String,
+    racks: usize,
+    oversub: f64,
     membus_bps: Option<f64>,
     mtbf: Option<f64>,
     straggler_frac: f64,
+    rack_crash_at: Option<f64>,
     speculation: bool,
 ) {
     use std::fmt::Write as _;
+    if racks > 1 {
+        let _ = write!(id, "-r{racks}");
+        if oversub != 1.0 {
+            let _ = write!(id, "-os{}", fmt_axis(oversub));
+        }
+    }
     if let Some(b) = membus_bps {
         let _ = write!(id, "-bus{}", (b / MIB).round() as u64);
     }
@@ -362,8 +459,22 @@ fn push_axis_suffixes(
     if straggler_frac > 0.0 {
         let _ = write!(id, "-strag{}", (straggler_frac * 100.0).round() as u64);
     }
+    if let Some(t) = rack_crash_at {
+        let _ = write!(id, "-rackdown{}", fmt_axis(t));
+    }
     if speculation {
         id.push_str("-spec");
+    }
+}
+
+/// Compact stable formatting for fractional axis values: integers print
+/// without a decimal point (`4`), everything else as the shortest
+/// round-trip float (`2.5`).
+fn fmt_axis(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
     }
 }
 
@@ -524,6 +635,69 @@ mod tests {
         assert_eq!(faulty.fault_plan().mtbf_s, Some(600.0));
         let bussed = scs.iter().find(|s| s.id.ends_with("-bus2600")).unwrap();
         assert_eq!(bussed.conf().membus_copy_bps, Some(2600.0 * MIB));
+    }
+
+    #[test]
+    fn rack_axes_expand_with_suffixed_ids() {
+        let g = SweepGrid {
+            workloads: vec![Workload::DfsioWrite],
+            write_paths: vec![WritePath::DirectIo],
+            lzo: vec![false],
+            racks: vec![1, 3],
+            oversub: vec![1.0, 4.0],
+            rack_crash_at: vec![None, Some(20.0)],
+            ..SweepGrid::paper_default(7, 2, 2)
+        };
+        // racks=1 collapses to one combo; racks=3 expands 2 oversubs x
+        // 2 crash values.
+        assert_eq!(g.len(), 1 + 4);
+        let scs = g.expand();
+        assert_eq!(scs.len(), g.len());
+        let ids: Vec<&str> = scs.iter().map(|s| s.id.as_str()).collect();
+        assert!(ids.contains(&"amdahl-n9-c2-direct-nolzo-dfsio-write"), "{ids:?}");
+        assert!(ids.contains(&"amdahl-n9-c2-direct-nolzo-dfsio-write-r3"));
+        assert!(ids.contains(&"amdahl-n9-c2-direct-nolzo-dfsio-write-r3-os4"));
+        assert!(ids.contains(&"amdahl-n9-c2-direct-nolzo-dfsio-write-r3-os4-rackdown20"));
+        let mut uniq = ids.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), scs.len(), "duplicate ids");
+        // Axis values round-trip into conf and fault plans.
+        let flat = scs.iter().find(|s| s.id.ends_with("dfsio-write")).unwrap();
+        assert_eq!(flat.conf().racks, 1);
+        assert!(!flat.has_faults());
+        let racked = scs.iter().find(|s| s.id.ends_with("-r3-os4")).unwrap();
+        assert_eq!(racked.conf().racks, 3);
+        assert_eq!(racked.conf().rack_oversub, 4.0);
+        assert!(!racked.has_faults(), "topology alone is not a fault");
+        let crashed = scs.iter().find(|s| s.id.ends_with("-rackdown20")).unwrap();
+        assert!(crashed.has_faults());
+        assert_eq!(crashed.fault_plan().rack_crashes.len(), 1);
+        assert_eq!(crashed.fault_plan().rack_crashes[0].rack, 2);
+        assert!((crashed.fault_plan().rack_crashes[0].at - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_rack_ignores_oversub_and_rack_crash_axes() {
+        // A 1-rack grid with exotic oversub / crash values expands to
+        // exactly the historical scenarios: same count, same ids.
+        let base = SweepGrid::paper_default(42, 1, 2);
+        let noisy = SweepGrid {
+            oversub: vec![4.0, 8.0],
+            rack_crash_at: vec![None, Some(10.0)],
+            ..SweepGrid::paper_default(42, 1, 2)
+        };
+        assert_eq!(base.len(), noisy.len());
+        let a: Vec<String> = base.expand().into_iter().map(|s| s.id).collect();
+        let b: Vec<String> = noisy.expand().into_iter().map(|s| s.id).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn axis_value_formatting() {
+        assert_eq!(fmt_axis(4.0), "4");
+        assert_eq!(fmt_axis(2.5), "2.5");
+        assert_eq!(fmt_axis(20.0), "20");
     }
 
     #[test]

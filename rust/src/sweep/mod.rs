@@ -19,14 +19,19 @@
 //!   per-scenario throughput regressions against an earlier sweep.
 //!
 //! Beyond the core axes the grid sweeps the memory bus
-//! (`membus_copy_bps`, rendering the 2-D core × bus frontier) and the
-//! degraded-mode axes (`mtbf`, `straggler_frac`, speculation on/off) —
-//! faulted scenarios carry recovery metrics and pair with their
-//! fault-free twins in the degraded-mode table. At the default axis
-//! values ids, seeds, and `BENCH_sweep.json` bytes are unchanged.
+//! (`membus_copy_bps`, rendering the 2-D core × bus frontier), the
+//! **rack topology** (`--racks` rack counts × `--oversub` ToR
+//! oversubscription ratios, rendering the rack × oversubscription
+//! frontier; single-rack entries keep the historical flat fabric) and
+//! the degraded-mode axes (`mtbf`, `straggler_frac`, whole-rack crash
+//! times, speculation on/off) — faulted scenarios carry recovery
+//! metrics and pair with their fault-free twins in the degraded-mode
+//! table. At the default axis values ids, seeds, and
+//! `BENCH_sweep.json` bytes are unchanged.
 //!
 //! Entry point: `amdahl-hadoop sweep --cores 1..8 [--baseline old.json]
-//! [--membus 1300,2600] [--mtbf 600] [--stragglers 0.25] [--spec]`.
+//! [--membus 1300,2600] [--racks 1,3] [--oversub 1,4] [--mtbf 600]
+//! [--stragglers 0.25] [--spec]`.
 
 pub mod baseline;
 pub mod grid;
@@ -37,6 +42,6 @@ pub use baseline::{compare as compare_baseline, BaselineComparison, DEFAULT_TOLE
 pub use grid::{parse_core_range, ClusterFamily, Scenario, SweepGrid, Workload, WritePath};
 pub use results::{
     aggregate_usage, analytic_balanced_cores, BusFrontierCell, DegradedRow, FrontierAnalysis,
-    FrontierRow, KindUtils, ScenarioRecord, SweepResults,
+    FrontierRow, KindUtils, RackFrontierCell, ScenarioRecord, SweepResults,
 };
 pub use runner::{run_scenario, run_sweep, SweepOptions, REFERENCE_SLAVES};

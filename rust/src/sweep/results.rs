@@ -41,7 +41,9 @@ impl KindUtils {
 
 /// Fold a raw per-resource snapshot into per-kind maxima. Resource names
 /// follow the `Cluster::build` convention: `n<i>.cpu`, `n<i>.disk`,
-/// `n<i>.tx`, `n<i>.rx`, `n<i>.membus`.
+/// `n<i>.tx`, `n<i>.rx`, `n<i>.membus` — plus the rack ToR uplinks
+/// `rack<r>.up` / `rack<r>.down`, which count as network (a saturated
+/// oversubscribed fabric must surface as the "net" bottleneck).
 pub fn aggregate_usage(usage: &[UsageSnapshot]) -> KindUtils {
     let mut k = KindUtils::default();
     for u in usage {
@@ -50,7 +52,7 @@ pub fn aggregate_usage(usage: &[UsageSnapshot]) -> KindUtils {
         match kind {
             "cpu" => k.cpu = k.cpu.max(v),
             "disk" => k.disk = k.disk.max(v),
-            "tx" | "rx" => k.net = k.net.max(v),
+            "tx" | "rx" | "up" | "down" => k.net = k.net.max(v),
             "membus" => k.membus = k.membus.max(v),
             _ => {}
         }
@@ -84,6 +86,14 @@ pub struct ScenarioRecord {
     pub net_util: f64,
     pub membus_util: f64,
     pub bottleneck: &'static str,
+    /// Rack count the topology was partitioned into (1 = flat; the rack
+    /// fields are serialized only for multi-rack scenarios, keeping the
+    /// default sweep's JSON byte-identical to pre-rack builds).
+    pub racks: usize,
+    /// ToR oversubscription ratio (1.0 on the flat topology).
+    pub oversub: f64,
+    /// Whole-rack crash time axis (None = no rack fault).
+    pub rack_crash_at: Option<f64>,
     /// Memory-bus override the scenario ran with (None = preset bus).
     pub membus_bps: Option<f64>,
     /// Fault axes + what the fault subsystem did. None for fault-free
@@ -136,6 +146,9 @@ impl ScenarioRecord {
             net_util: k.net,
             membus_util: k.membus,
             bottleneck: k.bottleneck(),
+            racks: sc.racks,
+            oversub: sc.oversub,
+            rack_crash_at: sc.rack_crash_at,
             membus_bps: sc.membus_bps,
             fault_axes: if sc.has_faults() {
                 Some((sc.mtbf, sc.straggler_frac, sc.speculation))
@@ -224,11 +237,12 @@ impl SweepResults {
                     && r.workload == workload.key()
                     && r.write_path == write_path.key()
                     && !r.lzo
-                    // The frontier is a fault-free, stock-bus cut; the
-                    // degraded-mode table and the 2-D bus frontier read
-                    // the other slices.
+                    // The frontier is a fault-free, stock-bus,
+                    // flat-topology cut; the degraded-mode table and the
+                    // bus / rack frontiers read the other slices.
                     && r.fault_axes.is_none()
                     && r.membus_bps.is_none()
+                    && r.racks == 1
             })
             .collect();
         base.sort_by_key(|r| (r.cores, r.nodes));
@@ -312,9 +326,15 @@ impl SweepResults {
             s.push_str(&format!("\"net_util\": {}, ", num(r.net_util)));
             s.push_str(&format!("\"membus_util\": {}, ", num(r.membus_util)));
             s.push_str(&format!("\"bottleneck\": \"{}\"", r.bottleneck));
-            // Bus / fault fields are emitted only for scenarios that set
-            // them, so the default grid's records — and the whole file —
-            // stay byte-identical to pre-fault builds.
+            // Rack / bus / fault fields are emitted only for scenarios
+            // that set them, so the default grid's records — and the
+            // whole file — stay byte-identical to pre-rack builds.
+            if r.racks > 1 {
+                s.push_str(&format!(", \"racks\": {}, \"oversub\": {}", r.racks, num(r.oversub)));
+            }
+            if let Some(t) = r.rack_crash_at {
+                s.push_str(&format!(", \"rack_crash_at\": {}", num(t)));
+            }
             if let Some(b) = r.membus_bps {
                 s.push_str(&format!(", \"membus_bps\": {}", num(b)));
             }
@@ -334,7 +354,8 @@ impl SweepResults {
                      \"pipeline_failovers\": {}, \"maps_requeued\": {}, \
                      \"reduces_requeued\": {}, \"map_outputs_lost\": {}, \
                      \"spec_launched\": {}, \"spec_wins\": {}, \"spec_wasted\": {}, \
-                     \"wasted_task_seconds\": {}",
+                     \"wasted_task_seconds\": {}, \"rack_crashes\": {}, \
+                     \"rack_brownouts\": {}",
                     f.crashes,
                     f.stragglers,
                     f.rereplications_done,
@@ -350,6 +371,8 @@ impl SweepResults {
                     f.spec_wins,
                     f.spec_wasted,
                     num(f.wasted_task_seconds),
+                    f.rack_crashes,
+                    f.rack_brownouts,
                 ));
             }
             s.push_str(if i + 1 == self.records.len() { "}\n" } else { "},\n" });
@@ -446,6 +469,18 @@ pub struct BusFrontierCell {
     pub bottleneck: &'static str,
 }
 
+/// One cell of the rack-count × oversubscription frontier.
+#[derive(Debug, Clone)]
+pub struct RackFrontierCell {
+    pub racks: usize,
+    pub oversub: f64,
+    /// Core count the cut was taken at (the largest swept one — the
+    /// most network-pressured blade).
+    pub cores: usize,
+    pub per_node_mbps: f64,
+    pub bottleneck: &'static str,
+}
+
 /// One faulted scenario paired with its fault-free twin (same axes,
 /// fault axes at the defaults).
 #[derive(Debug, Clone)]
@@ -487,6 +522,7 @@ impl SweepResults {
                     && r.write_path == "direct"
                     && !r.lzo
                     && r.fault_axes.is_none()
+                    && r.racks == 1
             })
             .map(|r| BusFrontierCell {
                 cores: r.cores,
@@ -499,6 +535,51 @@ impl SweepResults {
             bus_key(a.membus_bps)
                 .total_cmp(&bus_key(b.membus_bps))
                 .then(a.cores.cmp(&b.cores))
+        });
+        cells
+    }
+
+    /// The rack-count × oversubscription frontier: how much per-node
+    /// throughput the fabric costs as the topology spreads over more
+    /// racks and the ToR uplinks get more oversubscribed. Cut along
+    /// dfsio-write (rack-aware placement sends two replicas of every
+    /// block across the fabric), tuned write path, no LZO, fault-free,
+    /// preset bus, at the largest swept core count on the largest swept
+    /// cluster (pinning both axes keeps one cell per (racks, oversub)
+    /// point even on multi-node sweeps). Sorted oversub-major, then by
+    /// rack count.
+    pub fn rack_frontier(&self) -> Vec<RackFrontierCell> {
+        let filtered: Vec<&ScenarioRecord> = self
+            .records
+            .iter()
+            .filter(|r| {
+                r.family == "amdahl"
+                    && r.workload == "dfsio-write"
+                    && r.write_path == "direct"
+                    && !r.lzo
+                    && r.fault_axes.is_none()
+                    && r.membus_bps.is_none()
+            })
+            .collect();
+        let Some(max_cores) = filtered.iter().map(|r| r.cores).max() else {
+            return Vec::new();
+        };
+        let Some(max_nodes) = filtered.iter().map(|r| r.nodes).max() else {
+            return Vec::new();
+        };
+        let mut cells: Vec<RackFrontierCell> = filtered
+            .into_iter()
+            .filter(|r| r.cores == max_cores && r.nodes == max_nodes)
+            .map(|r| RackFrontierCell {
+                racks: r.racks,
+                oversub: r.oversub,
+                cores: r.cores,
+                per_node_mbps: r.per_node_mbps,
+                bottleneck: r.bottleneck,
+            })
+            .collect();
+        cells.sort_by(|a, b| {
+            a.oversub.total_cmp(&b.oversub).then(a.racks.cmp(&b.racks))
         });
         cells
     }
@@ -519,6 +600,8 @@ impl SweepResults {
                     && b.lzo == r.lzo
                     && b.workload == r.workload
                     && b.membus_bps == r.membus_bps
+                    && b.racks == r.racks
+                    && b.oversub == r.oversub
             });
             let base_s = twin.map(|t| t.seconds).unwrap_or(0.0);
             let base_j = twin.map(|t| t.joules).unwrap_or(0.0);

@@ -58,7 +58,8 @@ pub fn setup_world(
 ) -> (WorldHandle, Vec<String>) {
     let spec = preset.node_spec_for(conf);
     let n = preset.node_count();
-    let cluster = Cluster::build(engine, &spec, n);
+    let cluster = Cluster::build_racked(engine, &spec, n, conf.racks, conf.rack_oversub);
+    // World::new arms the NameNode with the cluster's rack map.
     let mut world = World::new(cluster);
     world.namenode.set_datanodes((1..n).map(NodeId).collect());
     let world = shared(world);

@@ -1,0 +1,366 @@
+//! Integration tests for the multi-rack topology: single-rack
+//! byte-identity, rack-aware placement end to end, whole-rack crashes
+//! with cross-fabric re-replication, oversubscription throttling, the
+//! rack × oversubscription frontier, and determinism across thread
+//! counts and solver modes.
+
+use amdahl_hadoop::cluster::{Cluster, NodeId};
+use amdahl_hadoop::conf::{ClusterPreset, HadoopConf};
+use amdahl_hadoop::faults::{self, FaultSchedule, InjectionPlan, RackCrashSpec};
+use amdahl_hadoop::hdfs::testdfsio::write_test_on;
+use amdahl_hadoop::hdfs::{write_file, BlockMeta, FileMeta, World, WorldHandle};
+use amdahl_hadoop::hw::{amdahl_blade, DiskKind, MIB};
+use amdahl_hadoop::sim::engine::shared;
+use amdahl_hadoop::sim::{Engine, SolverMode};
+use amdahl_hadoop::sweep::{run_sweep, ClusterFamily, SweepGrid, SweepOptions, Workload, WritePath};
+use amdahl_hadoop::zones::{run_app, App, ZonesConfig};
+
+/// A racked 9-node world: racks {0,1,2}/{3,4,5}/{6,7,8}, DataNodes on
+/// every node but the master (`World::new` arms the NameNode's rack
+/// map from the cluster topology).
+fn racked_world(seed: u64, racks: usize, oversub: f64) -> (Engine, WorldHandle) {
+    let mut e = Engine::new(seed);
+    let cluster =
+        Cluster::build_racked(&mut e, &amdahl_blade(DiskKind::Raid0), 9, racks, oversub);
+    let mut w = World::new(cluster);
+    w.namenode.set_datanodes((1..9).map(NodeId).collect());
+    assert!(w.namenode.rack_aware(), "World::new must arm the rack map");
+    (e, shared(w))
+}
+
+fn tiny_opts(threads: usize, solver: SolverMode) -> SweepOptions {
+    SweepOptions {
+        threads,
+        solver,
+        dfsio_bytes_per_worker: 32.0 * MIB,
+        dfsio_workers: 2,
+        ..SweepOptions::default()
+    }
+}
+
+/// The tentpole invariant: with `--racks 1` (the default) the sweep is
+/// byte-identical no matter what the other rack axes say, and the JSON
+/// carries no rack keys at all.
+#[test]
+fn single_rack_sweep_is_byte_identical_and_rack_free() {
+    let base = SweepGrid {
+        families: vec![ClusterFamily::Amdahl],
+        nodes: vec![5],
+        cores: vec![1],
+        write_paths: vec![WritePath::DirectIo],
+        lzo: vec![false],
+        workloads: vec![Workload::DfsioWrite, Workload::DfsioRead],
+        ..SweepGrid::paper_default(42, 1, 1)
+    };
+    let noisy = SweepGrid {
+        oversub: vec![4.0, 8.0],
+        rack_crash_at: vec![None, Some(10.0)],
+        ..base.clone()
+    };
+    let a = run_sweep(&base, &tiny_opts(2, SolverMode::Incremental)).to_json();
+    let b = run_sweep(&noisy, &tiny_opts(2, SolverMode::Incremental)).to_json();
+    assert_eq!(a, b, "single-rack output must ignore the rack-only axes");
+    for key in ["\"racks\"", "\"oversub\"", "rack_crash", "rack0"] {
+        assert!(!a.contains(key), "single-rack JSON leaked {key:?}");
+    }
+}
+
+/// End-to-end rack-aware placement through the real write path: every
+/// block spans exactly two racks (client rack + one remote rack holding
+/// replicas 2 and 3).
+#[test]
+fn racked_writes_span_two_racks() {
+    let (mut e, w) = racked_world(7, 3, 4.0);
+    let conf = HadoopConf { racks: 3, rack_oversub: 4.0, ..HadoopConf::default() };
+    for client in [1usize, 4, 7] {
+        write_file(
+            &mut e,
+            &w,
+            NodeId(client),
+            format!("f{client}"),
+            128.0 * MIB,
+            &conf,
+            "hdfs-write",
+            |_| {},
+        );
+    }
+    e.run();
+    let wb = w.borrow();
+    for client in [1usize, 4, 7] {
+        let f = wb.namenode.get_file(&format!("f{client}")).unwrap();
+        assert_eq!(f.blocks.len(), 2);
+        for b in &f.blocks {
+            assert_eq!(b.replicas.len(), 3);
+            assert_eq!(b.replicas[0], NodeId(client), "first replica client-local");
+            let r0 = wb.cluster.rack_of(b.replicas[0]);
+            let r1 = wb.cluster.rack_of(b.replicas[1]);
+            let r2 = wb.cluster.rack_of(b.replicas[2]);
+            assert_ne!(r1, r0, "replica 2 must leave the client rack: {:?}", b.replicas);
+            assert_eq!(r2, r1, "replica 3 shares replica 2's rack: {:?}", b.replicas);
+        }
+    }
+    // The cross-rack pipeline hop actually traversed the ToR uplinks.
+    let up_busy: f64 = (0..3)
+        .filter_map(|r| wb.cluster.rack_uplink(r))
+        .map(|u| e.busy_total(u.up) + e.busy_total(u.down))
+        .sum();
+    assert!(up_busy > 0.0, "cross-rack writes never touched the fabric");
+}
+
+/// A whole-rack crash: every member dies, the uplink goes dark, and
+/// every block the rack held is re-replicated **across the fabric**
+/// under `recovery:*` — including blocks whose survivors were all in
+/// one rack (the repair target must restore the two-rack spread).
+#[test]
+fn rack_crash_rereplicates_across_the_fabric() {
+    let (mut e, w) = racked_world(13, 3, 4.0);
+    // Hand-placed blocks so the failure geometry is exact: both blocks
+    // keep a single survivor in rack 1 after rack 2 dies.
+    {
+        let mut wb = w.borrow_mut();
+        let id1 = wb.namenode.alloc_block();
+        let id2 = wb.namenode.alloc_block();
+        wb.namenode.put_file(
+            "a",
+            FileMeta {
+                blocks: vec![BlockMeta {
+                    id: id1,
+                    size: 64.0 * MIB,
+                    stored_size: 64.0 * MIB,
+                    replicas: vec![NodeId(3), NodeId(6), NodeId(7)],
+                }],
+            },
+        );
+        wb.namenode.put_file(
+            "b",
+            FileMeta {
+                blocks: vec![BlockMeta {
+                    id: id2,
+                    size: 64.0 * MIB,
+                    stored_size: 64.0 * MIB,
+                    replicas: vec![NodeId(4), NodeId(7), NodeId(8)],
+                }],
+            },
+        );
+    }
+    let plan = InjectionPlan {
+        rack_crashes: vec![RackCrashSpec { rack: 2, at: 1.0 }],
+        ..InjectionPlan::empty()
+    };
+    let sched = FaultSchedule::generate(&plan, 21, 9);
+    faults::install(&mut e, &w, &sched);
+    e.run();
+    let wb = w.borrow();
+    let stats = &wb.faults.stats;
+    assert_eq!(stats.rack_crashes, 1);
+    assert_eq!(stats.crashes, 3, "nodes 6, 7, 8 all died");
+    assert_eq!(stats.blocks_lost, 0, "rack-aware spread keeps every block recoverable");
+    assert!(stats.rereplications_done >= 2, "both blocks must be repaired: {stats:?}");
+    assert!(stats.recovery_bytes >= 128.0 * MIB);
+    for name in ["a", "b"] {
+        let b = &wb.namenode.get_file(name).unwrap().blocks[0];
+        for r in &b.replicas {
+            assert!(r.0 < 6, "replica still on the dead rack: {:?}", b.replicas);
+            assert!(wb.faults.is_up(*r));
+        }
+        // Both lost copies are restored to *distinct* targets (the
+        // same-instant repairs share a planned-target set, so they can
+        // never collapse onto one node).
+        assert_eq!(b.replicas.len(), 3, "block not restored to r=3: {:?}", b.replicas);
+        // The two-rack spread is restored: survivors were rack-1-only,
+        // so at least one new copy must be in rack 0.
+        let racks: std::collections::HashSet<usize> =
+            b.replicas.iter().map(|r| wb.cluster.rack_of(*r)).collect();
+        assert!(racks.len() >= 2, "block re-concentrated in one rack: {:?}", b.replicas);
+    }
+    // The repair traffic crossed the fabric: rack 1 uplink (sources) and
+    // rack 0 downlink (targets) both carried bytes.
+    let u1 = wb.cluster.rack_uplink(1).unwrap();
+    let u0 = wb.cluster.rack_uplink(0).unwrap();
+    assert!(e.busy_total(u1.up) > 0.0, "recovery sources never sent across the fabric");
+    assert!(e.busy_total(u0.down) > 0.0, "recovery targets never received across the fabric");
+    // And the dead rack's uplink is floored.
+    let u2 = wb.cluster.rack_uplink(2).unwrap();
+    assert!((e.resource(u2.up).capacity - u2.capacity_bps * 0.01).abs() < 1e-6);
+}
+
+/// ToR oversubscription throttles the cross-rack replica streams the
+/// rack-aware policy mandates: the same write workload is materially
+/// slower behind a 64:1 fabric than a non-blocking one.
+#[test]
+fn oversubscription_throttles_cross_rack_writes() {
+    let preset = ClusterPreset::AmdahlSized { nodes: 9, cores: 2 };
+    let base = HadoopConf { direct_io_write: true, racks: 3, ..HadoopConf::default() };
+    let free = write_test_on(
+        preset,
+        5u64,
+        2,
+        32.0 * MIB,
+        &HadoopConf { rack_oversub: 1.0, ..base.clone() },
+    );
+    let choked = write_test_on(
+        preset,
+        5u64,
+        2,
+        32.0 * MIB,
+        &HadoopConf { rack_oversub: 64.0, ..base },
+    );
+    assert!(
+        choked.result.makespan > free.result.makespan * 1.15,
+        "64:1 oversubscription should slow cross-rack writes: {:.1}s vs {:.1}s",
+        choked.result.makespan,
+        free.result.makespan
+    );
+}
+
+/// Acceptance pin: a `--racks 3 --oversub 4` sweep with a whole-rack
+/// crash completes, attributes recovery work, loses no blocks (the
+/// rack-aware spread), and renders the rack × oversubscription
+/// frontier.
+#[test]
+fn rack_sweep_with_rack_crash_end_to_end() {
+    let g = SweepGrid {
+        families: vec![ClusterFamily::Amdahl],
+        nodes: vec![9],
+        cores: vec![2],
+        racks: vec![1, 3],
+        oversub: vec![1.0, 4.0],
+        rack_crash_at: vec![None, Some(30.0)],
+        write_paths: vec![WritePath::DirectIo],
+        lzo: vec![false],
+        workloads: vec![Workload::DfsioWrite],
+        ..SweepGrid::paper_default(42, 2, 2)
+    };
+    // racks=1 → 1 scenario; racks=3 → 2 oversubs x 2 crash values.
+    assert_eq!(g.len(), 5);
+    let r = run_sweep(&g, &tiny_opts(2, SolverMode::Incremental));
+    let crashed = r
+        .records
+        .iter()
+        .find(|x| x.id.ends_with("-r3-os4-rackdown30"))
+        .expect("rack-crash scenario missing");
+    let f = crashed.faults.as_ref().expect("rack-crash record must carry fault stats");
+    assert_eq!(f.rack_crashes, 1);
+    assert_eq!(f.crashes, 3);
+    assert_eq!(f.blocks_lost, 0, "rack-aware placement must keep all blocks recoverable");
+    assert!(f.recovery_bytes > 0.0, "no cross-fabric re-replication ran: {f:?}");
+    assert!(crashed.recovery_joules > 0.0, "recovery energy not attributed");
+    // The degraded table pairs it with its fault-free topology twin.
+    let rows = r.degraded_rows();
+    let row = rows.iter().find(|x| x.id == crashed.id).unwrap();
+    assert_eq!(
+        row.baseline_id.as_deref(),
+        Some("amdahl-n9-c2-direct-nolzo-dfsio-write-r3-os4")
+    );
+    // The frontier renders one cell per (racks, oversub) point.
+    let cells = r.rack_frontier();
+    assert_eq!(cells.len(), 3, "flat + r3/os1 + r3/os4: {cells:?}");
+    let rendered = amdahl_hadoop::report::render_rack_frontier(&cells);
+    assert!(rendered.contains("rack x oversubscription frontier"), "{rendered}");
+    assert!(rendered.contains("4:1"), "{rendered}");
+    // JSON carries the rack fields for racked scenarios only.
+    let json = r.to_json();
+    assert!(json.contains("\"racks\": 3"));
+    assert!(json.contains("\"rack_crash_at\": 30.000000"));
+    assert!(json.contains("\"rack_crashes\": 1"));
+}
+
+/// A rack-crashed MapReduce job (rack-local scheduling tier + TaskTracker
+/// blacklisting + cross-fabric re-replication) still completes.
+#[test]
+fn rack_crashed_search_job_completes() {
+    let conf = HadoopConf {
+        buffered_output: true,
+        direct_io_write: true,
+        racks: 3,
+        rack_oversub: 4.0,
+        ..HadoopConf::default()
+    };
+    let z = ZonesConfig {
+        seed: 17,
+        scale: 0.0008,
+        faults: InjectionPlan {
+            rack_crashes: vec![RackCrashSpec { rack: 2, at: 5.0 }],
+            ..InjectionPlan::empty()
+        },
+        ..Default::default()
+    };
+    let out = run_app(ClusterPreset::Amdahl, &conf, &z, App::Search);
+    assert!(out.total_seconds > 0.0, "job must complete despite losing a rack");
+    assert_eq!(out.faults.rack_crashes, 1);
+    assert_eq!(out.faults.crashes, 3);
+    assert!(out.job.hdfs_output_bytes > 0.0);
+    assert!(
+        out.faults.rereplications_started > 0
+            || out.faults.maps_requeued > 0
+            || out.faults.reduces_requeued > 0,
+        "losing a rack must force recovery work: {:?}",
+        out.faults
+    );
+}
+
+/// A ToR brownout throttles the fabric without killing anything.
+#[test]
+fn rack_brownout_degrades_uplink_only() {
+    let (mut e, w) = racked_world(31, 3, 1.0);
+    let plan = InjectionPlan {
+        rack_brownouts: vec![amdahl_hadoop::faults::RackBrownoutSpec {
+            rack: 1,
+            at: 2.0,
+            factor: 0.25,
+        }],
+        ..InjectionPlan::empty()
+    };
+    let sched = FaultSchedule::generate(&plan, 3, 9);
+    faults::install(&mut e, &w, &sched);
+    e.run();
+    let wb = w.borrow();
+    assert_eq!(wb.faults.stats.rack_brownouts, 1);
+    assert_eq!(wb.faults.stats.crashes, 0);
+    for n in 1..9 {
+        assert!(wb.faults.is_up(NodeId(n)));
+    }
+    let u = wb.cluster.rack_uplink(1).unwrap();
+    assert!((e.resource(u.up).capacity - u.capacity_bps * 0.25).abs() < 1e-6);
+    assert!((e.resource(u.down).capacity - u.capacity_bps * 0.25).abs() < 1e-6);
+}
+
+fn rack_grid(seed: u64) -> SweepGrid {
+    SweepGrid {
+        families: vec![ClusterFamily::Amdahl],
+        nodes: vec![5],
+        cores: vec![1],
+        racks: vec![2],
+        oversub: vec![1.0, 4.0],
+        rack_crash_at: vec![None, Some(10.0)],
+        write_paths: vec![WritePath::DirectIo],
+        lzo: vec![false],
+        workloads: vec![Workload::DfsioWrite],
+        ..SweepGrid::paper_default(seed, 1, 1)
+    }
+}
+
+/// CI mini-sweep pin: a 2-rack × oversub grid (with a whole-rack crash
+/// scenario in it) is byte-identical under any thread count.
+#[test]
+fn rack_sweep_is_thread_count_independent() {
+    let g = rack_grid(42);
+    let a = run_sweep(&g, &tiny_opts(1, SolverMode::Incremental)).to_json();
+    let b = run_sweep(&g, &tiny_opts(4, SolverMode::Incremental)).to_json();
+    assert_eq!(a, b, "rack sweep output depends on --threads");
+    assert!(a.contains("-r2-"), "rack ids missing from the sweep");
+}
+
+/// CI mini-sweep pin: both solver modes produce identical simulation
+/// outcomes on the racked, rack-crashed grid.
+#[test]
+fn rack_sweep_is_solver_mode_identical() {
+    let g = rack_grid(42);
+    let whole = run_sweep(&g, &tiny_opts(2, SolverMode::WholeSet));
+    let inc = run_sweep(&g, &tiny_opts(2, SolverMode::Incremental));
+    assert_eq!(
+        whole.sim_json(),
+        inc.sim_json(),
+        "solver modes diverged on the rack topology"
+    );
+}
