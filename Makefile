@@ -2,7 +2,7 @@
 # cargo build --release`); these wrap the optional kernel-artifact
 # pipeline and the end-to-end example on top of it.
 
-.PHONY: artifacts e2e test bench-smoke rack-smoke rack-demo
+.PHONY: artifacts e2e test docs bench-smoke rack-smoke rack-demo lifecycle-demo
 
 # AOT-lower the JAX/Pallas pair kernels to HLO text artifacts the Rust
 # runtime loads at startup. Requires a Python with jax installed; the
@@ -18,6 +18,11 @@ e2e:
 # Tier-1 verification.
 test:
 	cd rust && cargo build --release && cargo test -q
+
+# Documentation gate (mirrors the CI docs job): the crate warns on
+# missing docs and broken intra-doc links, -D warnings makes both fatal.
+docs:
+	cd rust && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 # The CI bench-smoke gate: 10k-flow solver scaling + the recorded
 # stale-events / peak-heap baseline, plus the rack mini-sweep below.
@@ -49,3 +54,12 @@ rack-demo:
 	cd rust && cargo run --release -- sweep --racks 1,3 --oversub 1,4 \
 	    --cores 2..4 --gb 0.03125 --workers 2 --quiet \
 	    --out /tmp/BENCH_rack_sweep.json
+
+# Node-lifecycle demo: MTBF-sampled crashes whose nodes re-join 120 s
+# later with the background balancer refilling them — degraded-mode
+# table, churn-vs-throughput frontier, recovery vs balance joules.
+lifecycle-demo:
+	cd rust && cargo run --release -- faults --workload search \
+	    --mtbf 300 --rejoin 120 --balancer-threshold 0.1
+	cd rust && cargo run --release -- faults --workload dfsio-write \
+	    --decommission 10 --rejoin 60 --gb 0.0625 --workers 2

@@ -21,8 +21,11 @@ use crate::hw::{DiskSpec, NetSpec, MIB};
 /// Inputs to the balance estimate.
 #[derive(Debug, Clone)]
 pub struct BalanceInputs {
+    /// CPU model under study.
     pub cpu: CpuSpec,
+    /// Data-disk model.
     pub disk: DiskSpec,
+    /// NIC model.
     pub net: NetSpec,
     /// Mean IPC across Hadoop task classes (paper §4: "IPC of Atom
     /// processors is about 0.5 as shown in Table 4").

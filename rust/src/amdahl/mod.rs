@@ -38,7 +38,9 @@ use crate::sim::Engine;
 /// Byte tallies per task prefix (e.g. `"hdfs-write"`, `"mapper"`).
 #[derive(Debug, Default, Clone)]
 pub struct IoTally {
+    /// Bytes that touched a disk device.
     pub disk_bytes: f64,
+    /// Bytes that crossed a socket endpoint.
     pub net_bytes: f64,
 }
 
@@ -49,22 +51,27 @@ pub struct Counters {
 }
 
 impl Counters {
+    /// Empty counters.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Account `bytes` of disk traffic to `task`.
     pub fn add_disk(&mut self, task: &str, bytes: f64) {
         self.tallies.entry(task.to_string()).or_default().disk_bytes += bytes;
     }
 
+    /// Account `bytes` of socket-endpoint traffic to `task`.
     pub fn add_net(&mut self, task: &str, bytes: f64) {
         self.tallies.entry(task.to_string()).or_default().net_bytes += bytes;
     }
 
+    /// The accumulated tally of `task` (zeros when never seen).
     pub fn tally(&self, task: &str) -> IoTally {
         self.tallies.get(task).cloned().unwrap_or_default()
     }
 
+    /// Iterate the task names that accumulated traffic.
     pub fn tasks(&self) -> impl Iterator<Item = &str> {
         self.tallies.keys().map(|s| s.as_str())
     }
@@ -73,6 +80,7 @@ impl Counters {
 /// One row of the paper's Table 4.
 #[derive(Debug, Clone)]
 pub struct AmdahlRow {
+    /// Task-class label (Table 4 row name).
     pub task: String,
     /// Observed / nominal clock.
     pub freq: f64,

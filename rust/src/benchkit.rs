@@ -16,10 +16,15 @@ use std::time::Instant;
 /// One benchmark's summary statistics, in seconds per iteration.
 #[derive(Debug, Clone)]
 pub struct BenchRecord {
+    /// Benchmark name.
     pub name: String,
+    /// Mean wall-clock seconds per sample.
     pub mean_s: f64,
+    /// Median wall-clock seconds per sample.
     pub median_s: f64,
+    /// Sample standard deviation, seconds.
     pub sd_s: f64,
+    /// Number of samples taken.
     pub samples: usize,
 }
 

@@ -28,6 +28,7 @@ pub struct NodeId(pub usize);
 /// One instantiated node: its spec plus the engine resources it owns.
 #[derive(Debug)]
 pub struct Node {
+    /// Hardware spec the node was instantiated from.
     pub spec: NodeSpec,
     /// CPU run queue; capacity in core-units ([`crate::hw::CpuSpec::capacity`]).
     pub cpu: ResourceId,
@@ -65,6 +66,10 @@ pub struct RackUplink {
     /// Fault-injection multiplier (1.0 = healthy; brownouts and
     /// whole-rack crashes lower it).
     pub degrade: f64,
+    /// True while the rack is dark after a whole-rack crash (the 1%
+    /// capacity floor). The first recommissioned member repairs the ToR
+    /// and clears this.
+    pub dark: bool,
 }
 
 /// Which rack each node lives in, plus the per-rack ToR uplinks.
@@ -92,7 +97,9 @@ impl RackTopology {
 /// A set of nodes wired into one engine.
 #[derive(Debug)]
 pub struct Cluster {
+    /// Node table, indexed by [`NodeId`].
     pub nodes: Vec<Node>,
+    /// Rack partition and ToR uplinks (flat = the paper's fabric).
     pub topology: RackTopology,
 }
 
@@ -156,7 +163,7 @@ impl Cluster {
                 let cap = (members * spec.net.nic_bps / oversub).max(1.0);
                 let up = engine.add_resource(&format!("rack{r}.up"), cap);
                 let down = engine.add_resource(&format!("rack{r}.down"), cap);
-                uplinks.push(RackUplink { up, down, capacity_bps: cap, degrade: 1.0 });
+                uplinks.push(RackUplink { up, down, capacity_bps: cap, degrade: 1.0, dark: false });
             }
             RackTopology { racks: nracks, oversub, rack_of, uplinks }
         };
@@ -217,14 +224,57 @@ impl Cluster {
         }
     }
 
+    /// Mark a rack's ToR uplink dark (whole-rack crash) or repaired.
+    /// No-op on the flat topology.
+    pub fn set_uplink_dark(&mut self, rack: usize, dark: bool) {
+        if let Some(u) = self.topology.uplinks.get_mut(rack) {
+            u.dark = dark;
+        }
+    }
+
+    /// Repair a dark ToR uplink back to nominal capacity (the first
+    /// recommissioned member of a crashed rack brings the switch with
+    /// it). No-op on the flat topology.
+    pub fn restore_uplink(&mut self, engine: &mut Engine, rack: usize) {
+        if self.topology.uplinks.get(rack).is_some() {
+            self.set_uplink_dark(rack, false);
+            self.set_uplink_degrade(engine, rack, 1.0);
+        }
+    }
+
+    /// Re-arm a recommissioned node's resources to their healthy
+    /// nominal capacities (a re-joining node boots with fresh hardware:
+    /// straggler and disk-degrade multipliers clear). With
+    /// `reset_streams` — set after a *crash*, whose flow cancellations
+    /// leaked the per-flow disk-stream accounting — the stream counters
+    /// also reset; a graceful drain leaves them accurate, so they are
+    /// kept.
+    pub fn rearm_node(&mut self, engine: &mut Engine, node: NodeId, reset_streams: bool) {
+        let n = &mut self.nodes[node.0];
+        if reset_streams {
+            n.disk_read_streams = 0;
+            n.disk_write_streams = 0;
+        }
+        n.disk_degrade = 1.0;
+        engine.set_capacity(n.cpu, n.spec.cpu.capacity);
+        engine.set_capacity(n.nic_tx, n.spec.net.nic_bps);
+        engine.set_capacity(n.nic_rx, n.spec.net.nic_bps);
+        engine.set_capacity(n.membus, n.spec.net.membus_copy_bps);
+        let eff = n.spec.data_disk.capacity_eff(n.disk_read_streams, n.disk_write_streams);
+        engine.set_capacity(n.disk, eff);
+    }
+
+    /// Number of nodes.
     pub fn len(&self) -> usize {
         self.nodes.len()
     }
 
+    /// True for a zero-node cluster.
     pub fn is_empty(&self) -> bool {
         self.nodes.is_empty()
     }
 
+    /// The node with id `id`.
     pub fn node(&self, id: NodeId) -> &Node {
         &self.nodes[id.0]
     }
@@ -400,6 +450,48 @@ mod tests {
     fn more_racks_than_nodes_panics() {
         let mut e = Engine::new(1);
         let _ = Cluster::build_racked(&mut e, &amdahl_blade(DiskKind::Raid0), 3, 4, 1.0);
+    }
+
+    #[test]
+    fn rearm_node_restores_nominal_capacities() {
+        let mut e = Engine::new(1);
+        let spec = amdahl_blade(DiskKind::Hdd);
+        let mut c = Cluster::build(&mut e, &spec, 2);
+        let n1 = NodeId(1);
+        let (cpu, disk) = (c.node(n1).cpu, c.node(n1).disk);
+        // Straggle the CPU, degrade the disk, leak a stream count.
+        e.set_capacity(cpu, spec.cpu.capacity * 0.4);
+        c.set_disk_degrade(&mut e, n1, 0.3);
+        c.disk_stream_start(&mut e, n1, true);
+        c.disk_stream_start(&mut e, n1, true);
+        c.rearm_node(&mut e, n1, true);
+        assert!((e.resource(cpu).capacity - spec.cpu.capacity).abs() < 1e-12);
+        assert!((e.resource(disk).capacity - 1.0).abs() < 1e-12, "healthy idle disk");
+        assert_eq!(c.node(n1).disk_read_streams, 0);
+        assert!((c.node(n1).disk_degrade - 1.0).abs() < 1e-12);
+        // Graceful variant keeps accurate stream counts.
+        c.disk_stream_start(&mut e, n1, true);
+        c.rearm_node(&mut e, n1, false);
+        assert_eq!(c.node(n1).disk_read_streams, 1);
+        c.disk_stream_end(&mut e, n1, true);
+    }
+
+    #[test]
+    fn dark_uplink_restores_to_nominal() {
+        let mut e = Engine::new(1);
+        let mut c = Cluster::build_racked(&mut e, &amdahl_blade(DiskKind::Raid0), 6, 2, 2.0);
+        let (up, nominal) = {
+            let u = c.rack_uplink(1).unwrap();
+            (u.up, u.capacity_bps)
+        };
+        c.set_uplink_degrade(&mut e, 1, 0.01);
+        c.set_uplink_dark(1, true);
+        assert!(c.rack_uplink(1).unwrap().dark);
+        c.restore_uplink(&mut e, 1);
+        let u = c.rack_uplink(1).unwrap();
+        assert!(!u.dark);
+        assert!((u.degrade - 1.0).abs() < 1e-12);
+        assert!((e.resource(up).capacity - nominal).abs() < 1e-6);
     }
 
     #[test]

@@ -7,9 +7,13 @@ use std::collections::HashMap;
 /// Parsed command line: subcommand, flags, options, positionals.
 #[derive(Debug, Default)]
 pub struct Args {
+    /// First non-flag token.
     pub subcommand: Option<String>,
+    /// `--key value` / `--key=value` options.
     pub options: HashMap<String, String>,
+    /// Bare `--flag` switches.
     pub flags: Vec<String>,
+    /// Non-flag tokens after the subcommand.
     pub positional: Vec<String>,
 }
 
@@ -43,14 +47,17 @@ impl Args {
         out
     }
 
+    /// Was the bare switch `--name` passed?
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// The raw value of option `--name`, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
 
+    /// Parse option `--name` as f64, falling back to `default`.
     pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
         match self.get(name) {
             Some(v) => Ok(v.parse()?),
@@ -58,6 +65,7 @@ impl Args {
         }
     }
 
+    /// Parse option `--name` as usize, falling back to `default`.
     pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
         match self.get(name) {
             Some(v) => Ok(v.parse()?),
@@ -65,6 +73,7 @@ impl Args {
         }
     }
 
+    /// Parse option `--name` as u64, falling back to `default`.
     pub fn get_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
         match self.get(name) {
             Some(v) => Ok(v.parse()?),

@@ -220,6 +220,7 @@ pub enum ClusterPreset {
 }
 
 impl ClusterPreset {
+    /// Total node count of this preset, master included.
     pub fn node_count(self) -> usize {
         match self {
             ClusterPreset::Amdahl | ClusterPreset::AmdahlNCore(_) => 9,
@@ -255,6 +256,8 @@ impl ClusterPreset {
         spec
     }
 
+    /// The per-node hardware spec of this preset with `disk` as the
+    /// data device.
     pub fn node_spec(self, disk: DiskKind) -> crate::hw::NodeSpec {
         match self {
             ClusterPreset::Amdahl => crate::hw::amdahl_blade(disk),

@@ -14,18 +14,26 @@ use crate::sim::Engine;
 /// Energy of one run on one cluster.
 #[derive(Debug, Clone)]
 pub struct EnergyReport {
+    /// Nodes in the measured cluster.
     pub nodes: usize,
+    /// Wall-clock (simulated) seconds the measurement covers.
     pub wall_seconds: f64,
     /// Paper method: nodes × full-load watts × wall time.
     pub total_joules: f64,
     /// Utilization-scaled refinement.
     pub scaled_joules: f64,
+    /// Mean CPU utilization across all nodes (diagnostic).
     pub mean_cpu_utilization: f64,
     /// Marginal joules attributable to fault recovery (re-replication
     /// transfers, `recovery:*` usage classes): busy CPU core-seconds of
     /// those classes priced at each node's (full − idle) watts per
     /// core. Zero on fault-free runs.
     pub recovery_joules: f64,
+    /// Marginal joules attributable to the background balancer
+    /// (`balance:*` usage classes), priced the same way as
+    /// `recovery_joules` — the steady-state energy bill of rebalance
+    /// traffic, separate from crash repair. Zero when no balancer ran.
+    pub balance_joules: f64,
 }
 
 /// Measure energy for a completed run.
@@ -35,6 +43,7 @@ pub fn measure(engine: &Engine, cluster: &Cluster, wall_seconds: f64) -> EnergyR
     let mut scaled = 0.0;
     let mut util_sum = 0.0;
     let mut recovery = 0.0;
+    let mut balance = 0.0;
     for node in &cluster.nodes {
         let spec = &node.spec;
         full += spec.power_full_w * wall_seconds;
@@ -43,20 +52,35 @@ pub fn measure(engine: &Engine, cluster: &Cluster, wall_seconds: f64) -> EnergyR
         util_sum += util;
         scaled += (spec.power_idle_w + (spec.power_full_w - spec.power_idle_w) * util)
             * wall_seconds;
-        // Recovery attribution: CPU seconds burned by recovery:* classes
-        // priced at the node's marginal (full − idle) watts per core.
-        // Summation order is fixed (sorted by class id) so the result is
-        // bit-stable despite the HashMap storage.
+        // Recovery / balancer attribution: CPU seconds burned by the
+        // `recovery:*` and `balance:*` classes priced at the node's
+        // marginal (full − idle) watts per core. Summation order is
+        // fixed (sorted by class id) so the result is bit-stable
+        // despite the HashMap storage.
         let mut rec: Vec<(crate::sim::UsageClass, f64)> = r
             .busy_by_class
             .iter()
-            .filter(|(c, _)| engine.class_name(**c).starts_with("recovery"))
+            .filter(|(c, _)| {
+                let name = engine.class_name(**c);
+                name.starts_with("recovery") || name.starts_with("balance")
+            })
             .map(|(c, b)| (*c, *b))
             .collect();
         rec.sort_by_key(|(c, _)| *c);
-        let rec_cpu_s: f64 = rec.iter().map(|(_, b)| b).sum();
+        let mut rec_cpu_s = 0.0;
+        let mut bal_cpu_s = 0.0;
+        for (c, b) in &rec {
+            if engine.class_name(*c).starts_with("recovery") {
+                rec_cpu_s += b;
+            } else {
+                bal_cpu_s += b;
+            }
+        }
         if rec_cpu_s > 0.0 && spec.cpu.capacity > 0.0 {
             recovery += (spec.power_full_w - spec.power_idle_w) * rec_cpu_s / spec.cpu.capacity;
+        }
+        if bal_cpu_s > 0.0 && spec.cpu.capacity > 0.0 {
+            balance += (spec.power_full_w - spec.power_idle_w) * bal_cpu_s / spec.cpu.capacity;
         }
     }
     EnergyReport {
@@ -66,6 +90,7 @@ pub fn measure(engine: &Engine, cluster: &Cluster, wall_seconds: f64) -> EnergyR
         scaled_joules: scaled,
         mean_cpu_utilization: util_sum / nodes as f64,
         recovery_joules: recovery,
+        balance_joules: balance,
     }
 }
 
@@ -92,6 +117,7 @@ mod tests {
             scaled_joules: 0.0,
             mean_cpu_utilization: 1.0,
             recovery_joules: 0.0,
+            balance_joules: 0.0,
         };
         let o = EnergyReport {
             nodes: 4,
@@ -100,6 +126,7 @@ mod tests {
             scaled_joules: 0.0,
             mean_cpu_utilization: 1.0,
             recovery_joules: 0.0,
+            balance_joules: 0.0,
         };
         let r = efficiency_ratio(&a, &o);
         assert!((r - 7.72).abs() < 0.05, "ratio {r:.2}");

@@ -1,0 +1,433 @@
+//! The v0.20-style background **rack-aware balancer**.
+//!
+//! Hadoop's balancer is an administrative daemon that iteratively moves
+//! block replicas from over- to under-utilized DataNodes until every
+//! node's utilization sits within a threshold of the cluster average,
+//! throttling each transfer to `dfs.balance.bandwidthPerSec` and never
+//! reducing the number of racks a block spans. This module reproduces
+//! that protocol as a periodic engine timer chain:
+//!
+//! * every [`BalancerConfig::interval_s`] seconds a **round** computes
+//!   per-node stored bytes (in-flight moves counted as already applied),
+//!   classifies nodes against the `mean × (1 ± threshold)` band the way
+//!   Hadoop's balancer does (over-utilized / above-average /
+//!   below-average / under-utilized), and pairs above-mean sources with
+//!   below-mean targets whenever at least one side breaches the band —
+//!   at most one move per source per round, each move strictly reducing
+//!   the pair's combined deviation from the mean (so rounds can never
+//!   oscillate);
+//! * moves ride the same DataNode-to-DataNode transfer path as crash
+//!   re-replication but carry `balance:*` usage classes, so their
+//!   energy is attributed as
+//!   [`crate::energy::EnergyReport::balance_joules`] — the steady-state
+//!   price of churn, separate from crash-repair joules;
+//! * after [`IDLE_ROUNDS_TO_PARK`] consecutive do-nothing rounds the
+//!   chain **parks** (stops re-arming, letting the engine drain);
+//!   crashes, drains, and recommissions `kick` it awake again — a
+//!   freshly re-joined (near-empty) node is precisely what the next
+//!   round refills.
+//!
+//! Determinism: rounds scan the namespace in sorted file order, node
+//! sets sort by (bytes, id), and no RNG is consumed — a balanced run is
+//! byte-identical across thread counts and
+//! [`crate::sim::SolverMode`]s. Without a [`BalancerConfig`] installed
+//! nothing here ever runs, preserving the empty-plan identity
+//! invariant.
+
+use crate::cluster::NodeId;
+use crate::hdfs::{World, WorldHandle};
+use crate::sim::Engine;
+
+use super::plan::BalancerConfig;
+use super::recovery;
+use super::PendingMove;
+
+/// Consecutive do-nothing rounds before the poll chain parks itself.
+/// Three rounds ride out the startup window where the namespace is
+/// still empty (a workload has not written anything yet).
+pub const IDLE_ROUNDS_TO_PARK: usize = 3;
+
+/// One planned replica move.
+#[derive(Debug, Clone)]
+struct Move {
+    file: String,
+    block_idx: usize,
+    block_id: u64,
+    bytes: f64,
+    source: NodeId,
+    target: NodeId,
+}
+
+/// Install the balancer for this run and schedule its first round.
+/// Called by the injector when the fault schedule carries a
+/// [`BalancerConfig`].
+pub fn install(engine: &mut Engine, world: &WorldHandle, cfg: BalancerConfig) {
+    let interval = cfg.interval_s.max(1e-3);
+    {
+        let mut w = world.borrow_mut();
+        w.faults.balancer = Some(cfg);
+        w.faults.balancer_running = true;
+        w.faults.balancer_idle_rounds = 0;
+    }
+    let world2 = world.clone();
+    engine.after(interval, move |e| poll(e, &world2));
+}
+
+/// Wake a parked balancer chain after a membership or namespace skew
+/// change (crash, drain completion, recommission). No-op when no
+/// balancer is installed or the chain is already running.
+pub(crate) fn kick(engine: &mut Engine, world: &WorldHandle) {
+    let interval = {
+        let mut w = world.borrow_mut();
+        let Some(cfg) = &w.faults.balancer else { return };
+        let interval = cfg.interval_s.max(1e-3);
+        w.faults.balancer_idle_rounds = 0;
+        if w.faults.balancer_running {
+            return;
+        }
+        w.faults.balancer_running = true;
+        interval
+    };
+    let world2 = world.clone();
+    engine.after(interval, move |e| poll(e, &world2));
+}
+
+/// One balancer round: plan moves, start them, re-arm (or park).
+fn poll(engine: &mut Engine, world: &WorldHandle) {
+    let (interval, moves) = {
+        let w = world.borrow();
+        let Some(cfg) = w.faults.balancer.clone() else { return };
+        (cfg.interval_s.max(1e-3), plan_moves(&w, &cfg))
+    };
+    if moves.is_empty() {
+        let mut w = world.borrow_mut();
+        w.faults.balancer_idle_rounds += 1;
+        if w.faults.balancer_idle_rounds >= IDLE_ROUNDS_TO_PARK {
+            w.faults.balancer_running = false;
+            return;
+        }
+    } else {
+        {
+            let mut w = world.borrow_mut();
+            w.faults.balancer_idle_rounds = 0;
+            w.faults.stats.balancer_rounds += 1;
+        }
+        let world2 = world.clone();
+        engine.batch(move |engine| {
+            for m in moves {
+                start_move(engine, &world2, m);
+            }
+        });
+    }
+    let world3 = world.clone();
+    engine.after(interval, move |e| poll(e, &world3));
+}
+
+/// Plan one round of moves over the current namespace. Pure read-only
+/// analysis; deterministic (sorted scans, no RNG).
+fn plan_moves(w: &World, cfg: &BalancerConfig) -> Vec<Move> {
+    let eligible = w.namenode.target_datanodes();
+    if eligible.len() < 2 {
+        return Vec::new();
+    }
+    let mut bytes = w.namenode.stored_bytes();
+    let max_id = eligible.iter().map(|n| n.0 + 1).max().unwrap_or(0);
+    if bytes.len() < max_id {
+        bytes.resize(max_id, 0.0);
+    }
+    // Count in-flight moves as already applied so consecutive rounds
+    // never double-plan the same imbalance.
+    for p in &w.faults.balancer_pending {
+        if p.source.0 < bytes.len() {
+            bytes[p.source.0] -= p.bytes;
+        }
+        if p.target.0 < bytes.len() {
+            bytes[p.target.0] += p.bytes;
+        }
+    }
+    let total: f64 = eligible.iter().map(|n| bytes[n.0]).sum();
+    if total <= 0.0 {
+        return Vec::new();
+    }
+    let mean = total / eligible.len() as f64;
+    let hi = mean * (1.0 + cfg.threshold);
+    let lo = mean * (1.0 - cfg.threshold);
+    // Hadoop's four-way classification: a pair is workable when the
+    // source is above the mean, the target below it, and at least one
+    // of them breaches the threshold band (over → under, over →
+    // below-average, above-average → under). Everyone inside the band
+    // with no breacher on either side = balanced.
+    if !eligible.iter().any(|n| bytes[n.0] > hi) && !eligible.iter().any(|n| bytes[n.0] < lo) {
+        return Vec::new();
+    }
+    let mut sources: Vec<NodeId> = eligible.iter().copied().filter(|n| bytes[n.0] > mean).collect();
+    let mut targets: Vec<NodeId> = eligible.iter().copied().filter(|n| bytes[n.0] < mean).collect();
+    if sources.is_empty() || targets.is_empty() {
+        return Vec::new();
+    }
+    // Most-over-utilized sources first, neediest targets first; ties by
+    // node id so the plan is deterministic.
+    sources.sort_by(|a, b| bytes[b.0].total_cmp(&bytes[a.0]).then(a.0.cmp(&b.0)));
+    targets.sort_by(|a, b| bytes[a.0].total_cmp(&bytes[b.0]).then(a.0.cmp(&b.0)));
+    // One sorted namespace scan shared by every pick in this round.
+    let mut names: Vec<&str> = w.namenode.files().map(|(n, _)| n).collect();
+    names.sort_unstable();
+    let mut moves: Vec<Move> = Vec::new();
+    let mut virt = bytes;
+    'sources: for &src in &sources {
+        if moves.len() >= cfg.max_moves_per_round.max(1) {
+            break;
+        }
+        for &dst in &targets {
+            if virt[src.0] <= mean || virt[dst.0] >= mean {
+                continue; // drifted inside by an earlier pick this round
+            }
+            if virt[src.0] <= hi && virt[dst.0] >= lo {
+                continue; // neither side breaches the band
+            }
+            if let Some(mv) = pick_move(w, &names, src, dst, &virt, mean, &moves) {
+                virt[src.0] -= mv.bytes.max(1.0);
+                virt[dst.0] += mv.bytes.max(1.0);
+                moves.push(mv);
+                continue 'sources;
+            }
+        }
+    }
+    moves
+}
+
+/// Choose the first block (sorted file order) on `src` that can legally
+/// move to `dst`: the target must not already hold it, no in-flight or
+/// same-round move may already touch it, the move must strictly shrink
+/// the pair's combined deviation from the mean (so the cluster-wide
+/// imbalance decreases monotonically — rounds can never oscillate), and
+/// the block must keep spanning at least as many racks as before (the
+/// v0.20 balancer's placement-policy preservation rule).
+#[allow(clippy::too_many_arguments)]
+fn pick_move(
+    w: &World,
+    names: &[&str],
+    src: NodeId,
+    dst: NodeId,
+    virt: &[f64],
+    mean: f64,
+    planned: &[Move],
+) -> Option<Move> {
+    let src_dev = virt[src.0] - mean;
+    let dst_dev = mean - virt[dst.0];
+    if src_dev <= 0.0 || dst_dev <= 0.0 {
+        return None;
+    }
+    for &name in names {
+        let meta = w.namenode.get_file(name)?;
+        for (i, b) in meta.blocks.iter().enumerate() {
+            if !b.replicas.contains(&src) || b.replicas.contains(&dst) {
+                continue;
+            }
+            if w.faults.balancer_pending.iter().any(|p| p.block_id == b.id)
+                || w.faults.drain_pending.iter().any(|p| p.block_id == b.id)
+                || planned.iter().any(|p| p.block_id == b.id)
+            {
+                continue;
+            }
+            let bsz = b.stored_size.max(1.0);
+            // Combined-deviation improvement: |src−b−mean| + |dst+b−mean|
+            // must be strictly smaller than the pair's deviation now.
+            if (src_dev - bsz).abs() + (dst_dev - bsz).abs() >= src_dev + dst_dev {
+                continue;
+            }
+            if !rack_spread_preserved(w, &b.replicas, src, dst) {
+                continue;
+            }
+            return Some(Move {
+                file: name.to_string(),
+                block_idx: i,
+                block_id: b.id,
+                bytes: b.stored_size,
+                source: src,
+                target: dst,
+            });
+        }
+    }
+    None
+}
+
+/// Would moving one replica `src` → `dst` keep the block spanning at
+/// least as many racks as it does now (the v0.20 balancer's rule: a
+/// move never reduces the number of racks a block spans)? Trivially
+/// true on the flat topology.
+fn rack_spread_preserved(w: &World, replicas: &[NodeId], src: NodeId, dst: NodeId) -> bool {
+    if w.cluster.racks() <= 1 {
+        return true;
+    }
+    let distinct = |nodes: &mut dyn Iterator<Item = NodeId>| {
+        let mut racks: Vec<usize> = nodes.map(|n| w.cluster.rack_of(n)).collect();
+        racks.sort_unstable();
+        racks.dedup();
+        racks.len()
+    };
+    let before = distinct(&mut replicas.iter().copied());
+    let after = distinct(
+        &mut replicas.iter().copied().filter(|r| *r != src).chain(std::iter::once(dst)),
+    );
+    after >= before
+}
+
+/// Start one planned move: a bandwidth-capped `balance:*` transfer; on
+/// completion the NameNode swaps the replica (target added, source
+/// invalidated) — unless the target died mid-copy, in which case the
+/// pending entry is simply dropped and a later round retries.
+fn start_move(engine: &mut Engine, world: &WorldHandle, m: Move) {
+    let Move { file, block_idx, block_id, bytes, source, target } = m;
+    let cap = {
+        let mut w = world.borrow_mut();
+        w.faults.stats.balancer_moves_started += 1;
+        w.faults.stats.balance_bytes += bytes.max(1.0);
+        w.faults.balancer_pending.push(PendingMove {
+            block_id,
+            source,
+            target,
+            bytes: bytes.max(1.0),
+        });
+        w.faults.balancer.as_ref().map(|c| c.bandwidth_bps)
+    };
+    recovery::start_transfer(
+        engine,
+        world,
+        source,
+        target,
+        bytes,
+        "balance",
+        cap,
+        move |_engine, w| {
+            w.faults.balancer_pending.retain(|p| p.block_id != block_id);
+            // The target must still be a real destination: landing on a
+            // node that died or started draining mid-copy would only
+            // force the block to move again immediately.
+            if w.faults.is_up(target)
+                && w.namenode.is_placement_target(target)
+                && w.namenode.move_replica(&file, block_idx, source, target)
+            {
+                w.faults.stats.balancer_moves_done += 1;
+            }
+        },
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::hdfs::{BlockMeta, FileMeta};
+    use crate::hw::{amdahl_blade, DiskKind, MIB};
+    use crate::sim::engine::shared;
+
+    fn world_with_skew(n: usize, blocks_on: &[(usize, usize)]) -> (Engine, WorldHandle) {
+        // blocks_on: (node, block_count) — every block 8 MiB, r = 1.
+        let mut e = Engine::new(1);
+        let cluster = Cluster::build(&mut e, &amdahl_blade(DiskKind::Raid0), n);
+        let mut w = World::new(cluster);
+        w.namenode.set_datanodes((1..n).map(NodeId).collect());
+        let mut id = 0u64;
+        for &(node, count) in blocks_on {
+            for k in 0..count {
+                id += 1;
+                w.namenode.put_file(
+                    &format!("f/n{node}-{k}"),
+                    FileMeta {
+                        blocks: vec![BlockMeta {
+                            id,
+                            size: 8.0 * MIB,
+                            stored_size: 8.0 * MIB,
+                            replicas: vec![NodeId(node)],
+                        }],
+                    },
+                );
+            }
+        }
+        (e, shared(w))
+    }
+
+    #[test]
+    fn balancer_levels_a_skewed_cluster() {
+        // Node 1 holds 9 blocks, nodes 2 and 3 are empty (9 blocks over
+        // 3 nodes divide evenly, so the balancer can land exactly on
+        // the mean).
+        let (mut e, w) = world_with_skew(4, &[(1, 9)]);
+        install(
+            &mut e,
+            &w,
+            BalancerConfig { bandwidth_bps: 100.0 * MIB, ..BalancerConfig::default() },
+        );
+        e.run();
+        let wb = w.borrow();
+        let bytes = wb.namenode.stored_bytes();
+        let mean = (bytes[1] + bytes[2] + bytes[3]) / 3.0;
+        for n in 1..=3usize {
+            assert!(
+                bytes[n] <= mean * 1.11 && bytes[n] >= mean * 0.89,
+                "node {n} at {:.0} vs mean {:.0} after balancing: {:?}",
+                bytes[n],
+                mean,
+                wb.faults.stats
+            );
+        }
+        assert!(wb.faults.stats.balancer_moves_done >= 4, "{:?}", wb.faults.stats);
+        assert_eq!(
+            wb.faults.stats.balancer_moves_started,
+            wb.faults.stats.balancer_moves_done
+        );
+        assert!(wb.faults.balancer_pending.is_empty());
+        assert!(!wb.faults.balancer_running, "chain must park when balanced");
+    }
+
+    #[test]
+    fn balanced_cluster_parks_without_moving() {
+        let (mut e, w) = world_with_skew(4, &[(1, 3), (2, 3), (3, 3)]);
+        install(&mut e, &w, BalancerConfig::default());
+        e.run();
+        let wb = w.borrow();
+        assert_eq!(wb.faults.stats.balancer_moves_started, 0);
+        assert!(!wb.faults.balancer_running);
+        // Parked after exactly IDLE_ROUNDS_TO_PARK polls.
+        assert!((e.now() - 30.0).abs() < 1e-6, "parked at {}", e.now());
+    }
+
+    #[test]
+    fn bandwidth_cap_throttles_moves() {
+        // An 8 MiB move at 0.125 MiB/s outlives the parked poll chain,
+        // so the slow run's makespan is the transfer, not the chain.
+        let run = |bw: f64| {
+            let (mut e, w) = world_with_skew(3, &[(1, 4)]);
+            install(&mut e, &w, BalancerConfig { bandwidth_bps: bw, ..Default::default() });
+            e.run();
+            let moved = w.borrow().faults.stats.balancer_moves_done;
+            (e.now(), moved)
+        };
+        let (slow_t, slow_moves) = run(0.125 * MIB);
+        let (fast_t, fast_moves) = run(64.0 * MIB);
+        assert!(slow_moves >= 1 && fast_moves >= 1);
+        assert!(
+            slow_t > fast_t,
+            "0.125 MiB/s cap should finish later than 64 MiB/s ({slow_t:.1} vs {fast_t:.1})"
+        );
+    }
+
+    #[test]
+    fn rack_spread_rule() {
+        let mut e = Engine::new(1);
+        // 6 nodes, 2 racks: r0={0,1,2}, r1={3,4,5}.
+        let cluster = Cluster::build_racked(&mut e, &amdahl_blade(DiskKind::Raid0), 6, 2, 1.0);
+        let mut w = World::new(cluster);
+        w.namenode.set_datanodes((1..6).map(NodeId).collect());
+        let replicas = vec![NodeId(1), NodeId(3)];
+        let w = shared(w);
+        let wb = w.borrow();
+        // Moving the rack-0 copy inside rack 0 keeps the spread...
+        assert!(rack_spread_preserved(&wb, &replicas, NodeId(1), NodeId(2)));
+        // ...moving it into rack 1 collapses the block into one rack.
+        assert!(!rack_spread_preserved(&wb, &replicas, NodeId(1), NodeId(4)));
+        // A single-replica block can go anywhere.
+        assert!(rack_spread_preserved(&wb, &[NodeId(1)], NodeId(1), NodeId(4)));
+    }
+}

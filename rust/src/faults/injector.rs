@@ -2,29 +2,33 @@
 //!
 //! Installation is the only entry point the workload drivers call:
 //! `install(engine, world, schedule)` arms the world's
-//! [`super::FaultState`], then registers one timer per fault event. An
-//! empty schedule with speculation off installs **nothing** — no
-//! timers, no state transitions — preserving the byte-identity of
-//! fault-free runs.
+//! [`super::FaultState`], starts the background balancer when the
+//! schedule carries a [`super::BalancerConfig`], then registers one
+//! timer per fault event. An empty schedule with speculation off and no
+//! balancer installs **nothing** — no timers, no state transitions —
+//! preserving the byte-identity of fault-free runs.
 
 use crate::hdfs::WorldHandle;
 use crate::sim::Engine;
 
 use super::plan::{FaultKind, FaultSchedule};
-use super::recovery;
+use super::{balancer, recovery};
 use crate::cluster::NodeId;
 
 /// Arm fault injection for this run. Call once, after the world is
 /// built and before the workload starts (all event times are relative
 /// to the current simulated time, normally 0).
 pub fn install(engine: &mut Engine, world: &WorldHandle, schedule: &FaultSchedule) {
-    if schedule.events.is_empty() && !schedule.speculation {
+    if schedule.events.is_empty() && !schedule.speculation && schedule.balancer.is_none() {
         return;
     }
     {
         let mut w = world.borrow_mut();
         let nodes = w.cluster.len();
         w.faults.arm(nodes, schedule.speculation);
+    }
+    if let Some(cfg) = &schedule.balancer {
+        balancer::install(engine, world, cfg.clone());
     }
     for ev in &schedule.events {
         let node = NodeId(ev.node);
@@ -56,6 +60,21 @@ pub fn install(engine: &mut Engine, world: &WorldHandle, schedule: &FaultSchedul
             FaultKind::RackBrownout { factor } => {
                 engine.after(ev.at, move |engine| {
                     recovery::handle_rack_brownout(engine, &world, rack, factor);
+                });
+            }
+            FaultKind::Decommission => {
+                engine.after(ev.at, move |engine| {
+                    recovery::handle_decommission(engine, &world, node);
+                });
+            }
+            FaultKind::Recommission => {
+                engine.after(ev.at, move |engine| {
+                    recovery::handle_recommission(engine, &world, node);
+                });
+            }
+            FaultKind::RackRecommission => {
+                engine.after(ev.at, move |engine| {
+                    recovery::handle_rack_recommission(engine, &world, rack);
                 });
             }
         }
@@ -153,6 +172,72 @@ mod tests {
             "uplink floored after the rack died"
         );
         assert!((e.now() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn crash_then_rejoin_round_trips_the_node() {
+        let (mut e, w) = world(4, 1);
+        let plan = InjectionPlan {
+            crashes: vec![CrashSpec { node: 2, at: 3.0 }],
+            rejoin_after_s: Some(7.0),
+            ..InjectionPlan::empty()
+        };
+        let sched = FaultSchedule::generate(&plan, 9, 4);
+        assert_eq!(sched.events.len(), 2);
+        install(&mut e, &w, &sched);
+        e.run();
+        let wb = w.borrow();
+        assert!(wb.faults.is_up(NodeId(2)), "node must be back up");
+        assert!(wb.namenode.is_live(NodeId(2)));
+        assert!(wb.namenode.is_placement_target(NodeId(2)));
+        assert_eq!(wb.faults.stats.crashes, 1);
+        assert_eq!(wb.faults.stats.recommissions, 1);
+        let cpu = wb.cluster.node(NodeId(2)).cpu;
+        let nominal = wb.cluster.node(NodeId(2)).spec.cpu.capacity;
+        assert!((e.resource(cpu).capacity - nominal).abs() < 1e-9);
+        assert!((e.now() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decommission_drains_blocks_then_goes_dead() {
+        use crate::faults::plan::DecommissionSpec;
+        use crate::hdfs::{BlockMeta, FileMeta};
+        let (mut e, w) = world(4, 1);
+        {
+            let mut wb = w.borrow_mut();
+            wb.faults.replication = 2;
+            let id = wb.namenode.alloc_block();
+            wb.namenode.put_file(
+                "f",
+                FileMeta {
+                    blocks: vec![BlockMeta {
+                        id,
+                        size: 8.0 * crate::hw::MIB,
+                        stored_size: 8.0 * crate::hw::MIB,
+                        replicas: vec![NodeId(2), NodeId(3)],
+                    }],
+                },
+            );
+        }
+        let plan = InjectionPlan {
+            decommissions: vec![DecommissionSpec { node: 2, at: 1.0 }],
+            ..InjectionPlan::empty()
+        };
+        let sched = FaultSchedule::generate(&plan, 9, 4);
+        install(&mut e, &w, &sched);
+        e.run();
+        let wb = w.borrow();
+        assert_eq!(wb.faults.stats.decommissions, 1);
+        assert!(!wb.faults.is_up(NodeId(2)), "drained node ends dead");
+        assert!(wb.namenode.is_dead(NodeId(2)));
+        assert!(!wb.namenode.is_decommissioning(NodeId(2)));
+        // The block kept its factor without ever being lost: the copy
+        // moved off the draining node before it left.
+        let b = &wb.namenode.get_file("f").unwrap().blocks[0];
+        assert_eq!(b.replicas.len(), 2, "{:?}", b.replicas);
+        assert!(!b.replicas.contains(&NodeId(2)));
+        assert_eq!(wb.faults.stats.rereplications_done, 1);
+        assert_eq!(wb.faults.stats.blocks_lost, 0);
     }
 
     #[test]

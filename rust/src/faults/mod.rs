@@ -16,9 +16,16 @@
 //!   stable id, so faults are identical across thread counts and
 //!   [`crate::sim::SolverMode`]s);
 //! * [`injector`] — schedules the fault events as engine timers;
-//! * [`recovery`] — crash orchestration: mark the node dead, run the
-//!   registered protocol failover handlers, kill every remaining flow
-//!   touching the node, and re-replicate under-replicated blocks.
+//! * [`recovery`] — crash and lifecycle orchestration: mark the node
+//!   dead, run the registered protocol failover handlers, kill every
+//!   remaining flow touching the node, re-replicate under-replicated
+//!   blocks — plus the full **node lifecycle**: graceful decommission
+//!   (drain → administratively dead) and recommission (block report,
+//!   TaskTracker re-registration, resource re-arm);
+//! * [`balancer`] — the v0.20-style background **rack-aware balancer**:
+//!   threshold-based, bandwidth-capped replica moves from over- to
+//!   under-utilized DataNodes, rack-spread-preserving, attributed as
+//!   `balance:*` usage classes ([`crate::energy::EnergyReport::balance_joules`]).
 //!
 //! **Identity invariant:** with an empty plan nothing is installed — no
 //! timers, no RNG draws, no extra state transitions — so fault-free
@@ -27,8 +34,11 @@
 //!
 //! Modeling conventions (documented simplifications):
 //!
-//! * Crashed nodes never return; re-replication restores the replica
-//!   count on the survivors (Hadoop's NameNode repair path).
+//! * Crashed nodes stay dead unless the plan schedules a recommission
+//!   (`rejoin_after_s` or fixed [`RecommissionSpec`] entries);
+//!   re-replication restores the replica count on the survivors either
+//!   way (Hadoop's NameNode repair path), and a re-joining node's
+//!   now-redundant copies are invalidated by its block report.
 //! * A v0.20 pipeline that loses a DataNode continues on the surviving
 //!   replicas for the in-flight block (stock recovery semantics); the
 //!   committed block is topped back up to the replication factor by an
@@ -38,14 +48,15 @@
 //!   as wasted work), while flows touching the dead node are cancelled
 //!   at the instant of the crash.
 
+pub mod balancer;
 pub mod injector;
 pub mod plan;
 pub mod recovery;
 
 pub use injector::install;
 pub use plan::{
-    fault_stream_seed, CrashSpec, FaultEvent, FaultKind, FaultSchedule, InjectionPlan,
-    RackBrownoutSpec, RackCrashSpec,
+    fault_stream_seed, BalancerConfig, CrashSpec, DecommissionSpec, FaultEvent, FaultKind,
+    FaultSchedule, InjectionPlan, RackBrownoutSpec, RackCrashSpec, RecommissionSpec,
 };
 
 use crate::cluster::NodeId;
@@ -73,6 +84,7 @@ pub struct FaultStats {
     pub disk_degrades: usize,
     /// Block re-replication transfers started / completed.
     pub rereplications_started: usize,
+    /// Block re-replication transfers completed and committed.
     pub rereplications_done: usize,
     /// Bytes moved by re-replication (wire bytes, stored size).
     pub recovery_bytes: f64,
@@ -90,31 +102,96 @@ pub struct FaultStats {
     pub writes_aborted: usize,
     /// Map / reduce attempts re-queued after a TaskTracker death.
     pub maps_requeued: usize,
+    /// Reduce attempts re-queued after a TaskTracker death.
     pub reduces_requeued: usize,
     /// Completed map outputs lost with their host and re-executed.
     pub map_outputs_lost: usize,
-    /// Speculative map attempts launched / won / wasted.
+    /// Speculative map attempts launched.
     pub spec_launched: usize,
+    /// Speculative attempts that beat the original.
     pub spec_wins: usize,
+    /// Speculative attempts killed as losers.
     pub spec_wasted: usize,
     /// Simulated seconds of task work thrown away (killed attempts).
     pub wasted_task_seconds: f64,
+    /// Graceful decommissions started.
+    pub decommissions: usize,
+    /// Nodes that re-joined the cluster (including cancelled
+    /// decommissions of still-live nodes).
+    pub recommissions: usize,
+    /// TaskTrackers re-registered with a live job on re-join.
+    pub trackers_rejoined: usize,
+    /// Replicas re-registered by a re-join block report (blocks still on
+    /// the returning node's intact disk that the namespace was missing).
+    pub blocks_restored_on_rejoin: usize,
+    /// Excess replicas invalidated (block-report copies made redundant
+    /// by crash-time re-replication, plus over-replication scans).
+    pub excess_replicas_dropped: usize,
+    /// Balancer iterations that started at least one move.
+    pub balancer_rounds: usize,
+    /// Balancer block moves started / committed.
+    pub balancer_moves_started: usize,
+    /// Balancer block moves that completed and committed.
+    pub balancer_moves_done: usize,
+    /// Bytes moved by the balancer (wire bytes, stored size).
+    pub balance_bytes: f64,
+}
+
+/// One in-flight balancer move, tracked so a later balancer round never
+/// double-plans the same block and can account the bytes as already
+/// moved when computing utilization.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct PendingMove {
+    /// Block being moved.
+    pub block_id: u64,
+    /// Replica being vacated.
+    pub source: NodeId,
+    /// Node receiving the new copy.
+    pub target: NodeId,
+    /// Stored (wire) bytes of the block.
+    pub bytes: f64,
 }
 
 /// Per-run fault state, owned by [`crate::hdfs::World`]. For fault-free
-/// runs it stays inert: `active` is false, the handler list is empty,
+/// runs it stays inert: `active` is false, the handler lists are empty,
 /// and no code path consults anything else.
 pub struct FaultState {
     /// Per-node liveness (index = node id). Empty until the injector
     /// installs a schedule; [`FaultState::is_up`] treats missing entries
     /// as up, so fault-free runs never allocate.
     node_up: Vec<bool>,
+    /// Per-node "last death was a crash" flag: a crash cancels the
+    /// node's flows, so its disk-stream counters are garbage and must be
+    /// reset on re-join; a graceful drain leaves them accurate.
+    hard_down: Vec<bool>,
     /// True once a non-empty schedule was installed.
     pub active: bool,
     /// Speculative execution enabled (scheduler consults this).
     pub speculation: bool,
+    /// Replication factor the recovery / re-join scans restore toward
+    /// (`dfs.replication`; set by the world builders).
+    pub replication: usize,
     /// Registered crash reactions, run in registration order.
     pub(crate) handlers: Vec<FailoverHandler>,
+    /// Registered re-join reactions (TaskTracker re-registration).
+    pub(crate) rejoin_handlers: Vec<FailoverHandler>,
+    /// Registered decommission-drain reactions (stop scheduling onto the
+    /// node; running attempts finish).
+    pub(crate) drain_handlers: Vec<FailoverHandler>,
+    /// Background balancer configuration; None = not installed.
+    pub balancer: Option<plan::BalancerConfig>,
+    /// Is the balancer poll chain currently scheduled? (It parks itself
+    /// after a few idle rounds and is re-kicked by membership changes.)
+    pub(crate) balancer_running: bool,
+    /// Consecutive balancer polls that found nothing to move.
+    pub(crate) balancer_idle_rounds: usize,
+    /// In-flight balancer moves (started, not yet committed).
+    pub(crate) balancer_pending: Vec<PendingMove>,
+    /// In-flight decommission-drain copies (`source` = the draining
+    /// node), so drain re-scans never double-copy a block and a crash
+    /// that kills a copy's endpoint can restart the stalled drain.
+    pub(crate) drain_pending: Vec<PendingMove>,
+    /// Counters describing everything the subsystem did.
     pub stats: FaultStats,
 }
 
@@ -125,12 +202,22 @@ impl Default for FaultState {
 }
 
 impl FaultState {
+    /// Fresh, inert state (what fault-free runs keep forever).
     pub fn new() -> FaultState {
         FaultState {
             node_up: Vec::new(),
+            hard_down: Vec::new(),
             active: false,
             speculation: false,
+            replication: 3,
             handlers: Vec::new(),
+            rejoin_handlers: Vec::new(),
+            drain_handlers: Vec::new(),
+            balancer: None,
+            balancer_running: false,
+            balancer_idle_rounds: 0,
+            balancer_pending: Vec::new(),
+            drain_pending: Vec::new(),
             stats: FaultStats::default(),
         }
     }
@@ -159,24 +246,96 @@ impl FaultState {
         was_up
     }
 
+    /// Mark `node` alive again; returns false if it already was.
+    pub(crate) fn set_up(&mut self, node: NodeId) -> bool {
+        if self.node_up.len() <= node.0 {
+            return false; // never armed → always considered up
+        }
+        let was_down = !self.node_up[node.0];
+        self.node_up[node.0] = true;
+        was_down
+    }
+
+    /// Record that `node`'s death was a crash (flows cancelled).
+    pub(crate) fn mark_hard(&mut self, node: NodeId) {
+        if self.hard_down.len() <= node.0 {
+            self.hard_down.resize(node.0 + 1, false);
+        }
+        self.hard_down[node.0] = true;
+    }
+
+    /// Consume the hard-crash flag for `node` (re-join reads it once).
+    pub(crate) fn take_hard(&mut self, node: NodeId) -> bool {
+        match self.hard_down.get_mut(node.0) {
+            Some(h) => std::mem::take(h),
+            None => false,
+        }
+    }
+
     /// Register a crash reaction. Handlers self-deregister by returning
     /// false (e.g. when the protocol operation they guard has finished).
     pub fn register(&mut self, h: FailoverHandler) {
         self.handlers.push(h);
     }
+
+    /// Register a re-join reaction (run once per recommissioned node).
+    pub fn register_rejoin(&mut self, h: FailoverHandler) {
+        self.rejoin_handlers.push(h);
+    }
+
+    /// Register a decommission-drain reaction (run when a node enters
+    /// the decommissioning state).
+    pub fn register_drain(&mut self, h: FailoverHandler) {
+        self.drain_handlers.push(h);
+    }
+
+    /// Purge in-flight balancer moves and drain copies touching any of
+    /// `dead` (their flows die with the nodes, so their completion
+    /// callbacks never run) and return the draining sources whose copy
+    /// just lost its target — those drains must be restarted. Shared by
+    /// the single-node and whole-rack crash paths.
+    pub(crate) fn purge_pending_for_dead(&mut self, dead: &[NodeId]) -> Vec<NodeId> {
+        let stalled: Vec<NodeId> = self
+            .drain_pending
+            .iter()
+            .filter(|p| dead.contains(&p.target) && !dead.contains(&p.source))
+            .map(|p| p.source)
+            .collect();
+        self.balancer_pending
+            .retain(|p| !dead.contains(&p.source) && !dead.contains(&p.target));
+        self.drain_pending
+            .retain(|p| !dead.contains(&p.source) && !dead.contains(&p.target));
+        stalled
+    }
 }
 
-/// Run every registered failover handler for a crash of `node`.
+/// Which handler list a lifecycle dispatch runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum HandlerKind {
+    Crash,
+    Rejoin,
+    Drain,
+}
+
+/// Run every registered handler of `kind` for `node`.
 ///
 /// Handlers may borrow the world and may register *new* handlers while
 /// running (a rebuilt pipeline re-arms its guard), so the list is taken
 /// out of the world for the duration and merged back afterwards.
-pub fn dispatch_crash(
+fn dispatch_kind(
     engine: &mut Engine,
     world: &crate::hdfs::WorldHandle,
     node: NodeId,
+    kind: HandlerKind,
 ) {
-    let mut handlers = std::mem::take(&mut world.borrow_mut().faults.handlers);
+    fn list(f: &mut FaultState, kind: HandlerKind) -> &mut Vec<FailoverHandler> {
+        match kind {
+            HandlerKind::Crash => &mut f.handlers,
+            HandlerKind::Rejoin => &mut f.rejoin_handlers,
+            HandlerKind::Drain => &mut f.drain_handlers,
+        }
+    }
+    let mut handlers = std::mem::take(list(&mut world.borrow_mut().faults, kind));
     let mut kept: Vec<FailoverHandler> = Vec::with_capacity(handlers.len());
     for mut h in handlers.drain(..) {
         if h(engine, node) {
@@ -187,9 +346,25 @@ pub fn dispatch_crash(
     // Handlers registered during dispatch landed in the (emptied) world
     // list; keep them after the surviving originals so registration
     // order stays chronological.
-    let new = std::mem::take(&mut w.faults.handlers);
-    w.faults.handlers = kept;
-    w.faults.handlers.extend(new);
+    let new = std::mem::take(list(&mut w.faults, kind));
+    let slot = list(&mut w.faults, kind);
+    *slot = kept;
+    slot.extend(new);
+}
+
+/// Run every registered failover handler for a crash of `node`.
+pub fn dispatch_crash(engine: &mut Engine, world: &crate::hdfs::WorldHandle, node: NodeId) {
+    dispatch_kind(engine, world, node, HandlerKind::Crash);
+}
+
+/// Run every registered re-join handler for a recommission of `node`.
+pub fn dispatch_rejoin(engine: &mut Engine, world: &crate::hdfs::WorldHandle, node: NodeId) {
+    dispatch_kind(engine, world, node, HandlerKind::Rejoin);
+}
+
+/// Run every registered drain handler for a decommission of `node`.
+pub fn dispatch_drain(engine: &mut Engine, world: &crate::hdfs::WorldHandle, node: NodeId) {
+    dispatch_kind(engine, world, node, HandlerKind::Drain);
 }
 
 #[cfg(test)]
@@ -216,5 +391,21 @@ mod tests {
         assert!(!s.is_up(NodeId(3)));
         assert!(!s.set_down(NodeId(3)), "second down is a no-op");
         assert!(s.is_up(NodeId(1)));
+    }
+
+    #[test]
+    fn up_down_round_trip_and_hard_flag() {
+        let mut s = FaultState::new();
+        s.arm(4, false);
+        assert!(s.set_down(NodeId(2)));
+        s.mark_hard(NodeId(2));
+        assert!(s.set_up(NodeId(2)), "set_up reports the transition");
+        assert!(s.is_up(NodeId(2)));
+        assert!(!s.set_up(NodeId(2)), "second up is a no-op");
+        assert!(s.take_hard(NodeId(2)), "hard flag readable once");
+        assert!(!s.take_hard(NodeId(2)), "and consumed");
+        // A node the injector never saw cannot 'come back'.
+        assert!(!s.set_up(NodeId(99)));
+        assert!(s.is_up(NodeId(99)));
     }
 }

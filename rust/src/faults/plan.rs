@@ -1,13 +1,16 @@
 //! Fault injection plans and their expansion into concrete schedules.
 //!
 //! An [`InjectionPlan`] is declarative: fixed crash entries, an optional
-//! per-node MTBF, straggler and disk-degrade distributions, and the
-//! speculative-execution switch. [`FaultSchedule::generate`] expands it
-//! into a sorted list of timestamped [`FaultEvent`]s using a dedicated
-//! RNG stream, so the *same plan + same stream seed* always produces the
-//! same faults — independent of thread count, solver mode, or the order
-//! scenarios were inserted into a sweep grid.
+//! per-node MTBF, straggler and disk-degrade distributions, the node
+//! **lifecycle** entries (graceful decommissions, timed recommissions,
+//! and the crash → re-join delay), the background [`BalancerConfig`],
+//! and the speculative-execution switch. [`FaultSchedule::generate`]
+//! expands it into a sorted list of timestamped [`FaultEvent`]s using a
+//! dedicated RNG stream, so the *same plan + same stream seed* always
+//! produces the same faults — independent of thread count, solver mode,
+//! or the order scenarios were inserted into a sweep grid.
 
+use crate::hw::MIB;
 use crate::sim::Rng;
 
 /// One fixed crash entry: node `node` dies at simulated time `at`.
@@ -43,9 +46,92 @@ pub struct RackBrownoutSpec {
     pub factor: f64,
 }
 
+/// One graceful decommission: node `node` enters the *decommissioning*
+/// state at `at` — it stops receiving new replicas and tasks, drains
+/// every block it holds onto other live DataNodes (sourced from itself,
+/// the whole point of a graceful exit), and goes administratively dead
+/// once the drain completes. Running task attempts are allowed to
+/// finish; no flows are cancelled.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DecommissionSpec {
+    /// Node index (must be a slave; the master never leaves).
+    pub node: usize,
+    /// Simulated seconds after engine start.
+    pub at: f64,
+}
+
+/// One timed recommission: node `node` re-joins the cluster at `at`.
+/// A dead node comes back with healthy hardware, sends its **block
+/// report** (blocks still on its intact disk re-register; copies made
+/// redundant by crash-time re-replication are invalidated), re-registers
+/// its TaskTracker with the JobTracker, and becomes a placement /
+/// balancer target again. Recommissioning a node that is still *up* and
+/// decommissioning cancels the decommission (Hadoop's remove-from-
+/// excludes semantics); recommissioning a healthy node is a no-op.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RecommissionSpec {
+    /// Node index.
+    pub node: usize,
+    /// Simulated seconds after engine start.
+    pub at: f64,
+}
+
+/// Configuration of the v0.20-style background **rack-aware balancer**:
+/// a periodic protocol that moves block replicas from over- to
+/// under-utilized DataNodes until every node's stored bytes sit within
+/// `threshold` of the cluster mean, never reducing the number of racks
+/// a block spans, with each transfer capped at `bandwidth_bps` (the
+/// `dfs.balance.bandwidthPerSec` knob). Balancer traffic carries
+/// `balance:*` usage classes so its energy is attributed as
+/// [`crate::energy::EnergyReport::balance_joules`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct BalancerConfig {
+    /// Allowed utilization band as a fraction of the cluster-mean
+    /// stored bytes (Hadoop's balancer threshold; 0.1 = ±10%).
+    pub threshold: f64,
+    /// Per-transfer rate cap in bytes/s (`dfs.balance.bandwidthPerSec`;
+    /// Hadoop's default is 1 MB/s — rebalancing is deliberately gentle).
+    pub bandwidth_bps: f64,
+    /// Seconds between balancer iterations.
+    pub interval_s: f64,
+    /// Moves started per iteration at most (one per over-utilized node).
+    pub max_moves_per_round: usize,
+}
+
+impl Default for BalancerConfig {
+    fn default() -> Self {
+        BalancerConfig {
+            threshold: 0.1,
+            bandwidth_bps: 1.0 * MIB,
+            interval_s: 10.0,
+            max_moves_per_round: 4,
+        }
+    }
+}
+
 /// Declarative fault-injection plan. The default plan is **empty**: no
 /// events are generated, no timers are scheduled, and simulation output
 /// is byte-identical to a build without the subsystem.
+///
+/// Plans are built with struct-update syntax over [`InjectionPlan::empty`]:
+///
+/// ```
+/// use amdahl_hadoop::faults::{BalancerConfig, CrashSpec, InjectionPlan};
+///
+/// // Node 3 crashes 10 s in, re-joins 60 s after the crash, and the
+/// // background balancer refills it within a ±10% utilization band.
+/// let plan = InjectionPlan {
+///     crashes: vec![CrashSpec { node: 3, at: 10.0 }],
+///     rejoin_after_s: Some(60.0),
+///     balancer: Some(BalancerConfig::default()),
+///     ..InjectionPlan::empty()
+/// };
+/// assert!(!plan.is_empty() && plan.active());
+///
+/// // The identity plan installs nothing at all.
+/// assert!(InjectionPlan::empty().is_empty());
+/// assert!(!InjectionPlan::empty().active());
+/// ```
 #[derive(Debug, Clone)]
 pub struct InjectionPlan {
     /// Fixed crash schedule (applied verbatim, before MTBF sampling).
@@ -55,6 +141,20 @@ pub struct InjectionPlan {
     pub rack_crashes: Vec<RackCrashSpec>,
     /// Fixed ToR-uplink brownouts.
     pub rack_brownouts: Vec<RackBrownoutSpec>,
+    /// Fixed graceful decommissions (decommission → drain → dead).
+    pub decommissions: Vec<DecommissionSpec>,
+    /// Fixed recommissions (dead nodes re-joining at a set time; also
+    /// cancels an in-progress decommission of a still-live node).
+    pub recommissions: Vec<RecommissionSpec>,
+    /// When set, every scheduled death — fixed or MTBF-sampled crashes,
+    /// whole-rack failures, decommissions — is followed by a
+    /// recommission of the same node (or rack) this many seconds later:
+    /// the churn axis (`sweep --rejoin`).
+    pub rejoin_after_s: Option<f64>,
+    /// Background rack-aware balancer; None = not installed. A plan
+    /// with only a balancer is *active* (timers run) but generates no
+    /// fault events.
+    pub balancer: Option<BalancerConfig>,
     /// Mean time between failures per slave node, seconds. When set,
     /// each slave's first crash time is sampled exponentially; crashes
     /// landing inside `crash_horizon_s` become events, earliest-first,
@@ -87,6 +187,10 @@ impl Default for InjectionPlan {
             crashes: Vec::new(),
             rack_crashes: Vec::new(),
             rack_brownouts: Vec::new(),
+            decommissions: Vec::new(),
+            recommissions: Vec::new(),
+            rejoin_after_s: None,
+            balancer: None,
             mtbf_s: None,
             max_crashes: 2,
             crash_horizon_s: 600.0,
@@ -108,10 +212,14 @@ impl InjectionPlan {
     }
 
     /// True when the plan generates no fault events at all.
+    /// (`rejoin_after_s` alone does not count: with nothing scheduled
+    /// to die, there is nothing to re-join.)
     pub fn is_empty(&self) -> bool {
         self.crashes.is_empty()
             && self.rack_crashes.is_empty()
             && self.rack_brownouts.is_empty()
+            && self.decommissions.is_empty()
+            && self.recommissions.is_empty()
             && self.mtbf_s.is_none()
             && self.straggler_frac <= 0.0
             && self.disk_degrade_frac <= 0.0
@@ -120,10 +228,12 @@ impl InjectionPlan {
     /// Should this plan be installed at all? Speculation counts:
     /// Hadoop hedges naturally slow maps on healthy clusters too, so
     /// `speculation: true` with no fault events is still a distinct,
-    /// meaningful scenario (the scheduler's poll runs). Only an inert
-    /// plan (`!active()`) preserves the byte-identity invariant.
+    /// meaningful scenario (the scheduler's poll runs). The balancer
+    /// counts for the same reason — steady-state rebalance traffic
+    /// needs no fault to exist. Only an inert plan (`!active()`)
+    /// preserves the byte-identity invariant.
     pub fn active(&self) -> bool {
-        !self.is_empty() || self.speculation
+        !self.is_empty() || self.speculation || self.balancer.is_some()
     }
 }
 
@@ -143,21 +253,40 @@ pub enum FaultKind {
     /// ToR-uplink capacity dip to `factor` of nominal. The event's
     /// `node` field carries the **rack index**.
     RackBrownout { factor: f64 },
+    /// Graceful decommission: the node drains its blocks, then goes
+    /// administratively dead (no flows are cancelled).
+    Decommission,
+    /// A dead node re-joins (or an in-progress decommission is
+    /// cancelled): block report, TaskTracker re-registration, resources
+    /// re-armed.
+    Recommission,
+    /// Every dead member of a crashed rack re-joins, and the rack's ToR
+    /// uplink is repaired. The event's `node` field carries the **rack
+    /// index**.
+    RackRecommission,
 }
 
 /// A timestamped fault on one node.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FaultEvent {
+    /// Simulated seconds after engine start.
     pub at: f64,
+    /// Node index (rack index for the rack-scoped kinds).
     pub node: usize,
+    /// What happens.
     pub kind: FaultKind,
 }
 
-/// An expanded, sorted fault schedule plus the speculation switch.
+/// An expanded, sorted fault schedule plus the run-scoped switches that
+/// ride along with it (speculation, the background balancer).
 #[derive(Debug, Clone, Default)]
 pub struct FaultSchedule {
+    /// Timestamped fault events, sorted by time / node / kind.
     pub events: Vec<FaultEvent>,
+    /// Speculative execution of straggling maps.
     pub speculation: bool,
+    /// Background rack-aware balancer (None = not installed).
+    pub balancer: Option<BalancerConfig>,
 }
 
 impl FaultSchedule {
@@ -168,7 +297,11 @@ impl FaultSchedule {
     pub fn generate(plan: &InjectionPlan, stream_seed: u64, nodes: usize) -> FaultSchedule {
         let mut events = Vec::new();
         if plan.is_empty() || nodes < 2 {
-            return FaultSchedule { events, speculation: plan.speculation };
+            return FaultSchedule {
+                events,
+                speculation: plan.speculation,
+                balancer: plan.balancer.clone(),
+            };
         }
         let mut rng = Rng::new(stream_seed);
         let slaves: Vec<usize> = (1..nodes).collect();
@@ -177,6 +310,26 @@ impl FaultSchedule {
         for c in &plan.crashes {
             if c.node >= 1 && c.node < nodes {
                 events.push(FaultEvent { at: c.at.max(0.0), node: c.node, kind: FaultKind::Crash });
+            }
+        }
+
+        // Fixed lifecycle entries, verbatim (clamped to slave nodes).
+        for d in &plan.decommissions {
+            if d.node >= 1 && d.node < nodes {
+                events.push(FaultEvent {
+                    at: d.at.max(0.0),
+                    node: d.node,
+                    kind: FaultKind::Decommission,
+                });
+            }
+        }
+        for r in &plan.recommissions {
+            if r.node >= 1 && r.node < nodes {
+                events.push(FaultEvent {
+                    at: r.at.max(0.0),
+                    node: r.node,
+                    kind: FaultKind::Recommission,
+                });
             }
         }
 
@@ -258,28 +411,53 @@ impl FaultSchedule {
         }
 
         // Deterministic order: by time, then node, then kind rank.
-        events.sort_by(|a, b| {
-            a.at.total_cmp(&b.at).then(a.node.cmp(&b.node)).then(kind_rank(a.kind).cmp(&kind_rank(b.kind)))
-        });
+        events.sort_by(schedule_order);
         // Never kill the whole slave set: a dead cluster can neither
         // place replicas nor finish a job (the engine would panic or
-        // idle forever). Keep the earliest `slaves - 1` crashes, drop
-        // the rest — fixed schedules included.
-        let crash_cap = slaves.len().saturating_sub(1);
-        let mut crashed: Vec<usize> = Vec::new();
+        // idle forever). Keep the earliest `slaves - 1` scheduled
+        // deaths — crashes *and* decommissions both remove a node, so
+        // both consume cap slots — and at most one death per node; drop
+        // the rest, fixed schedules included. (Whole-rack crashes are
+        // capped at handle time instead, where the real member set is
+        // known.)
+        let death_cap = slaves.len().saturating_sub(1);
+        let mut dying: Vec<usize> = Vec::new();
         events.retain(|e| {
-            if e.kind != FaultKind::Crash {
+            if !matches!(e.kind, FaultKind::Crash | FaultKind::Decommission) {
                 return true;
             }
-            if crashed.len() < crash_cap && !crashed.contains(&e.node) {
-                crashed.push(e.node);
+            if dying.len() < death_cap && !dying.contains(&e.node) {
+                dying.push(e.node);
                 true
             } else {
                 false
             }
         });
-        FaultSchedule { events, speculation: plan.speculation }
+        // Churn: every scheduled death that survived validation is
+        // followed by a re-join `rejoin_after_s` later. Derived after
+        // the crash cap so a dropped crash never spawns a phantom
+        // recommission.
+        if let Some(d) = plan.rejoin_after_s {
+            if d >= 0.0 {
+                let mut rejoins = Vec::new();
+                for e in &events {
+                    let kind = match e.kind {
+                        FaultKind::Crash | FaultKind::Decommission => FaultKind::Recommission,
+                        FaultKind::RackCrash => FaultKind::RackRecommission,
+                        _ => continue,
+                    };
+                    rejoins.push(FaultEvent { at: e.at + d, node: e.node, kind });
+                }
+                events.extend(rejoins);
+                events.sort_by(schedule_order);
+            }
+        }
+        FaultSchedule { events, speculation: plan.speculation, balancer: plan.balancer.clone() }
     }
+}
+
+fn schedule_order(a: &FaultEvent, b: &FaultEvent) -> std::cmp::Ordering {
+    a.at.total_cmp(&b.at).then(a.node.cmp(&b.node)).then(kind_rank(a.kind).cmp(&kind_rank(b.kind)))
 }
 
 fn kind_rank(k: FaultKind) -> u8 {
@@ -289,6 +467,11 @@ fn kind_rank(k: FaultKind) -> u8 {
         FaultKind::Straggle { .. } => 2,
         FaultKind::DiskDegrade { .. } => 3,
         FaultKind::RackBrownout { .. } => 4,
+        // A death always precedes a same-instant re-join of the same
+        // node, so a zero-delay churn cycle still round-trips.
+        FaultKind::Decommission => 5,
+        FaultKind::Recommission => 6,
+        FaultKind::RackRecommission => 7,
     }
 }
 
@@ -378,6 +561,92 @@ mod tests {
         assert_eq!(s.events[0].kind, FaultKind::RackBrownout { factor: 0.25 });
         assert_eq!(s.events[1].node, 2);
         assert_eq!(s.events[1].kind, FaultKind::RackCrash);
+    }
+
+    #[test]
+    fn rejoin_delay_schedules_recommissions_after_each_death() {
+        let p = InjectionPlan {
+            crashes: vec![CrashSpec { node: 2, at: 5.0 }],
+            decommissions: vec![DecommissionSpec { node: 3, at: 8.0 }],
+            rack_crashes: vec![RackCrashSpec { rack: 1, at: 10.0 }],
+            rejoin_after_s: Some(20.0),
+            ..InjectionPlan::empty()
+        };
+        let s = FaultSchedule::generate(&p, 3, 9);
+        assert_eq!(s.events.len(), 6, "{:?}", s.events);
+        let rejoins: Vec<&FaultEvent> = s
+            .events
+            .iter()
+            .filter(|e| {
+                matches!(e.kind, FaultKind::Recommission | FaultKind::RackRecommission)
+            })
+            .collect();
+        assert_eq!(rejoins.len(), 3);
+        assert!(rejoins.iter().any(|e| e.node == 2 && (e.at - 25.0).abs() < 1e-9));
+        assert!(rejoins.iter().any(|e| e.node == 3 && (e.at - 28.0).abs() < 1e-9));
+        assert!(rejoins.iter().any(|e| {
+            e.node == 1 && (e.at - 30.0).abs() < 1e-9 && e.kind == FaultKind::RackRecommission
+        }));
+        for w in s.events.windows(2) {
+            assert!(w[0].at <= w[1].at, "events must stay time-sorted");
+        }
+    }
+
+    #[test]
+    fn fixed_lifecycle_entries_clamp_to_slaves() {
+        let p = InjectionPlan {
+            decommissions: vec![
+                DecommissionSpec { node: 0, at: 1.0 },
+                DecommissionSpec { node: 4, at: 2.0 },
+            ],
+            recommissions: vec![
+                RecommissionSpec { node: 99, at: 3.0 },
+                RecommissionSpec { node: 4, at: 9.0 },
+            ],
+            ..InjectionPlan::empty()
+        };
+        assert!(!p.is_empty() && p.active());
+        let s = FaultSchedule::generate(&p, 1, 9);
+        assert_eq!(s.events.len(), 2, "{:?}", s.events);
+        assert_eq!(s.events[0].kind, FaultKind::Decommission);
+        assert_eq!(s.events[0].node, 4);
+        assert_eq!(s.events[1].kind, FaultKind::Recommission);
+        assert_eq!(s.events[1].node, 4);
+    }
+
+    /// Regression: the whole-slave-set survival cap must count
+    /// decommissions as deaths too — a drain plus enough crashes could
+    /// otherwise kill every slave (leaving placement to panic).
+    #[test]
+    fn death_cap_counts_decommissions_and_crashes_together() {
+        let p = InjectionPlan {
+            decommissions: vec![DecommissionSpec { node: 3, at: 1.0 }],
+            crashes: vec![CrashSpec { node: 1, at: 2.0 }, CrashSpec { node: 2, at: 3.0 }],
+            ..InjectionPlan::empty()
+        };
+        // 4 nodes = 3 slaves → at most 2 scheduled deaths survive.
+        let s = FaultSchedule::generate(&p, 3, 4);
+        let deaths = s
+            .events
+            .iter()
+            .filter(|e| matches!(e.kind, FaultKind::Crash | FaultKind::Decommission))
+            .count();
+        assert_eq!(deaths, 2, "{:?}", s.events);
+        // Earliest-first: the decommission (t=1) and the first crash
+        // (t=2) survive; the crash that would empty the cluster drops.
+        assert!(s.events.iter().any(|e| e.kind == FaultKind::Decommission && e.node == 3));
+        assert!(s.events.iter().any(|e| e.kind == FaultKind::Crash && e.node == 1));
+        assert!(!s.events.iter().any(|e| e.node == 2));
+    }
+
+    #[test]
+    fn balancer_only_plan_is_active_but_eventless() {
+        let p = InjectionPlan { balancer: Some(BalancerConfig::default()), ..InjectionPlan::empty() };
+        assert!(p.is_empty(), "a balancer is not a fault event");
+        assert!(p.active(), "but the protocol must install");
+        let s = FaultSchedule::generate(&p, 1, 9);
+        assert!(s.events.is_empty());
+        assert_eq!(s.balancer, Some(BalancerConfig::default()));
     }
 
     #[test]

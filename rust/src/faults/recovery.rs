@@ -1,4 +1,5 @@
-//! Crash orchestration and NameNode-driven block re-replication.
+//! Crash and lifecycle orchestration, plus NameNode-driven block
+//! re-replication.
 //!
 //! A crash is handled in four strictly ordered steps, all inside one
 //! engine batch (a single simulated instant, one rate solve):
@@ -16,35 +17,58 @@
 //!    replica, sourced from the first surviving copy (deterministic) to
 //!    a live non-holder target.
 //!
+//! The **node lifecycle** handlers live here too:
+//!
+//! * [`handle_decommission`] — graceful exit: the node stops receiving
+//!   new replicas and tasks, *drains* every block that would fall under
+//!   the replication factor (sourced from itself), and goes
+//!   administratively dead when the drain lands. No flows are
+//!   cancelled; running attempts finish.
+//! * [`handle_recommission`] — a dead node re-joins: resources re-arm
+//!   to nominal, a dark ToR uplink is repaired, the **block report**
+//!   replays (intact copies re-register, redundant ones are
+//!   invalidated), remaining under-replicated blocks repair onto the
+//!   returning capacity, and the TaskTracker re-registers with the
+//!   JobTracker. Recommissioning a still-live decommissioning node
+//!   cancels the drain instead.
+//!
 //! Recovery transfers carry `recovery:*` usage classes so the energy
 //! layer can attribute their joules separately
-//! ([`crate::energy::EnergyReport::recovery_joules`]).
+//! ([`crate::energy::EnergyReport::recovery_joules`]); balancer moves
+//! ride the same transfer path under `balance:*`
+//! ([`crate::energy::EnergyReport::balance_joules`]).
 //!
 //! Simplification: a transfer whose source or target dies mid-copy is
 //! cancelled by that crash's kill-switch; the next scan retries from
 //! the survivors (the one leaked disk-stream count on the surviving
 //! endpoint only matters for the HDD seek model and only after a
-//! double crash).
+//! double crash, and is cleared if the node ever re-joins).
 
 use std::collections::HashMap;
 
 use crate::cluster::NodeId;
-use crate::hdfs::WorldHandle;
+use crate::hdfs::{ReplTask, WorldHandle};
 use crate::sim::{Engine, FlowSpec};
 
-use super::dispatch_crash;
+use super::{balancer, dispatch_crash, dispatch_drain, dispatch_rejoin};
 
 /// Process a node-crash fault event end to end. Idempotent: a second
 /// crash of the same node is a no-op.
 pub fn handle_crash(engine: &mut Engine, world: &WorldHandle, node: NodeId) {
-    {
+    let stalled_drains = {
         let mut w = world.borrow_mut();
         if !w.faults.set_down(node) {
             return;
         }
         w.faults.stats.crashes += 1;
+        w.faults.mark_hard(node);
         w.namenode.mark_dead(node);
-    }
+        // In-flight balancer moves and drain copies touching the node
+        // die with its flows; forget them so later rounds can re-plan
+        // those blocks, and restart any drain whose copy just died
+        // with its target.
+        w.faults.purge_pending_for_dead(&[node])
+    };
     let world2 = world.clone();
     engine.batch(move |engine| {
         dispatch_crash(engine, &world2, node);
@@ -57,6 +81,20 @@ pub fn handle_crash(engine: &mut Engine, world: &WorldHandle, node: NodeId) {
         }
         start_rereplication(engine, &world2, &[node]);
     });
+    restart_stalled_drains(engine, world, stalled_drains);
+    // The namespace just re-skewed; wake a parked balancer.
+    balancer::kick(engine, world);
+}
+
+/// Restart drain loops whose in-flight copy died with a crashed
+/// endpoint (deduplicated; draining nodes that meanwhile died or
+/// cancelled are skipped by `drain_round`'s own guard).
+fn restart_stalled_drains(engine: &mut Engine, world: &WorldHandle, mut stalled: Vec<NodeId>) {
+    stalled.sort_unstable();
+    stalled.dedup();
+    for s in stalled {
+        drain_round(engine, world, s);
+    }
 }
 
 /// Process a straggler fault event: the node's CPU drops to `factor`
@@ -108,22 +146,28 @@ pub fn handle_rack_crash(engine: &mut Engine, world: &WorldHandle, rack: usize) 
         w.cluster.rack_nodes(rack).into_iter().filter(|n| n.0 != 0).collect()
     };
     let mut newly_dead: Vec<NodeId> = Vec::new();
-    {
+    let stalled_drains = {
         let mut w = world.borrow_mut();
         w.faults.stats.rack_crashes += 1;
         for &n in &members {
             if !w.faults.is_up(n) {
                 continue;
             }
-            if w.namenode.is_datanode(n) && w.namenode.live_datanodes().len() <= 1 {
-                continue; // keep the last live DataNode alive
+            // Keep the last placement-eligible DataNode alive: counting
+            // merely-live nodes here would let the crash spare only a
+            // *draining* node, whose own drain completion would then
+            // leave the cluster with zero placement targets.
+            if w.namenode.is_datanode(n) && w.namenode.target_datanodes().len() <= 1 {
+                continue;
             }
             let _ = w.faults.set_down(n);
+            w.faults.mark_hard(n);
             w.namenode.mark_dead(n);
             w.faults.stats.crashes += 1;
             newly_dead.push(n);
         }
-    }
+        w.faults.purge_pending_for_dead(&newly_dead)
+    };
     // A member can be spared (already dead, or the last live DataNode).
     // Only when the rack is genuinely empty of live nodes does its ToR
     // go dark — draining the uplink under a live spared member would
@@ -148,6 +192,7 @@ pub fn handle_rack_crash(engine: &mut Engine, world: &WorldHandle, rack: usize) 
             engine.cancel_flows_on(down);
             let mut w = world2.borrow_mut();
             w.cluster.set_uplink_degrade(engine, rack, 0.01);
+            w.cluster.set_uplink_dark(rack, true);
         }
         // Protocol failovers plus the flow kill-switch, per dead node.
         for &n in &newly_dead {
@@ -166,6 +211,8 @@ pub fn handle_rack_crash(engine: &mut Engine, world: &WorldHandle, rack: usize) 
         // crosses the fabric.
         start_rereplication(engine, &world2, &newly_dead);
     });
+    restart_stalled_drains(engine, world, stalled_drains);
+    balancer::kick(engine, world);
 }
 
 /// Process a ToR-uplink brownout: the rack's uplink capacity dips to
@@ -182,6 +229,294 @@ pub fn handle_rack_brownout(engine: &mut Engine, world: &WorldHandle, rack: usiz
     };
     w.faults.stats.rack_brownouts += 1;
     w.cluster.set_uplink_degrade(engine, rack, factor.clamp(0.01, 1.0).min(current));
+}
+
+/// Process a graceful decommission: mark the node *decommissioning*
+/// (placement and scheduling stop immediately; reads keep working),
+/// drain every block that would fall below the replication factor once
+/// the node leaves — sourced from the node itself — and declare the
+/// node administratively dead when the last drain transfer lands.
+/// Unlike a crash, nothing is cancelled: running task attempts and
+/// in-flight reads complete normally.
+pub fn handle_decommission(engine: &mut Engine, world: &WorldHandle, node: NodeId) {
+    {
+        let mut w = world.borrow_mut();
+        if !w.faults.is_up(node)
+            || !w.namenode.is_datanode(node)
+            || w.namenode.is_decommissioning(node)
+        {
+            return;
+        }
+        // Never drain the last eligible target: its blocks would have
+        // nowhere to go and the cluster would end with no DataNode.
+        if w.namenode.target_datanodes().len() <= 1 {
+            return;
+        }
+        w.faults.stats.decommissions += 1;
+        w.namenode.mark_decommissioning(node);
+    }
+    // The JobTracker stops assigning work to the draining tracker.
+    dispatch_drain(engine, world, node);
+    drain_round(engine, world, node);
+}
+
+/// One drain iteration: scan for blocks whose live replica count would
+/// fall below the factor once `node` leaves (skipping blocks whose
+/// drain copy is already in flight), copy each off the node, and
+/// **re-scan** after every landed copy: a pipeline that was already
+/// streaming toward the node when the drain started commits its block
+/// afterwards, and that block must drain too. The node only goes dead
+/// on a clean scan with nothing in flight (Hadoop's "decommission ends
+/// when all blocks are sufficiently replicated elsewhere"). In-flight
+/// copies are tracked in `FaultState::drain_pending`, so a crash that
+/// cancels one (its completion callback never runs) is repaired by
+/// [`handle_crash`], which purges the dead endpoint's entries and
+/// restarts the stalled drain.
+pub(crate) fn drain_round(engine: &mut Engine, world: &WorldHandle, node: NodeId) {
+    let replication = {
+        let w = world.borrow();
+        // A crash or cancellation mid-drain ends the loop.
+        if !w.faults.is_up(node) || !w.namenode.is_decommissioning(node) {
+            return;
+        }
+        w.faults.replication
+    };
+    // Drain plan: one copy per block whose live replica count (without
+    // this node) is short of the factor. Sorted file scan, deterministic.
+    let (tasks, has_pending) = {
+        let w = world.borrow();
+        let pending: Vec<u64> = w
+            .faults
+            .drain_pending
+            .iter()
+            .filter(|p| p.source == node)
+            .map(|p| p.block_id)
+            .collect();
+        // Borrowed names, sorted once; only blocks that actually need a
+        // copy pay for a string clone (re-scans run per landed copy).
+        let mut names: Vec<&str> = w.namenode.files().map(|(n, _)| n).collect();
+        names.sort_unstable();
+        let mut tasks = Vec::new();
+        for name in names {
+            let meta = w.namenode.get_file(name).expect("file vanished during drain scan");
+            for (i, b) in meta.blocks.iter().enumerate() {
+                if !b.replicas.contains(&node) || pending.contains(&b.id) {
+                    continue;
+                }
+                let survivors = b
+                    .replicas
+                    .iter()
+                    .filter(|r| **r != node && !w.namenode.is_dead(**r))
+                    .count();
+                if survivors >= replication {
+                    continue;
+                }
+                tasks.push(ReplTask {
+                    file: name.to_string(),
+                    block_idx: i,
+                    block_id: b.id,
+                    bytes: b.stored_size,
+                    source: node,
+                    holders: b.replicas.clone(),
+                });
+            }
+        }
+        (tasks, !pending.is_empty())
+    };
+    if tasks.is_empty() {
+        // Nothing left to copy: done when nothing is in flight either;
+        // otherwise the in-flight completions re-scan.
+        if !has_pending {
+            finish_drain(engine, world, node);
+        }
+        return;
+    }
+    let world2 = world.clone();
+    let started = engine.batch(|engine| {
+        let mut planned: HashMap<u64, Vec<NodeId>> = HashMap::new();
+        let mut started = 0usize;
+        for t in &tasks {
+            let block_id = t.block_id;
+            let wfin = world2.clone();
+            let target = plan_and_start(engine, &world2, t, &mut planned, move |engine, w| {
+                w.faults
+                    .drain_pending
+                    .retain(|p| !(p.block_id == block_id && p.source == node));
+                // The world is borrowed here; re-scan on a same-instant
+                // timer instead.
+                let wfin = wfin.clone();
+                engine.after(0.0, move |e| drain_round(e, &wfin, node));
+            });
+            // No eligible target (tiny or half-dead cluster): the block
+            // keeps its copy only until the node leaves.
+            let Some(target) = target else { continue };
+            started += 1;
+            world2.borrow_mut().faults.drain_pending.push(super::PendingMove {
+                block_id,
+                source: node,
+                target,
+                bytes: t.bytes.max(1.0),
+            });
+        }
+        started
+    });
+    if started == 0 && !has_pending {
+        // Every task was target-less and nothing is in flight:
+        // re-scanning would find the same dead end, so the drain
+        // completes under-replicated.
+        finish_drain(engine, world, node);
+    }
+}
+
+/// Complete a drain: the decommissioning node goes administratively
+/// dead — out of placement, reads, and the balancer — without touching
+/// its in-flight flows. Skipped if the node crashed mid-drain (the
+/// crash path already handled it) or the decommission was cancelled.
+fn finish_drain(engine: &mut Engine, world: &WorldHandle, node: NodeId) {
+    {
+        let mut w = world.borrow_mut();
+        if !w.faults.is_up(node) || !w.namenode.is_decommissioning(node) {
+            return;
+        }
+        let _ = w.faults.set_down(node);
+        w.namenode.mark_dead(node);
+        // Strip the node's replicas (the purge also records the block
+        // report a recommission replays). The returned repair tasks are
+        // dropped on purpose: post-drain counts already satisfy the
+        // factor wherever a target existed.
+        let _ = w.namenode.purge_node(node);
+        // A drain that ran out of targets (crashes killed them mid-way)
+        // can empty a sole-replica block — count it lost like the crash
+        // path does, instead of reporting clean data loss.
+        let lost = w
+            .namenode
+            .files()
+            .flat_map(|(_, f)| f.blocks.iter())
+            .filter(|b| b.replicas.is_empty())
+            .count();
+        if lost > w.faults.stats.blocks_lost {
+            w.faults.stats.blocks_lost = lost;
+        }
+    }
+    balancer::kick(engine, world);
+}
+
+/// Process a recommission: a dead node re-joins the cluster — or, if
+/// the node is still alive and draining, the decommission is cancelled
+/// (Hadoop's remove-from-excludes refresh). See the module docs for the
+/// full re-join sequence.
+pub fn handle_recommission(engine: &mut Engine, world: &WorldHandle, node: NodeId) {
+    enum Action {
+        Skip,
+        CancelDrain,
+        Rejoin,
+    }
+    let action = {
+        let w = world.borrow();
+        if w.faults.is_up(node) {
+            if w.namenode.is_decommissioning(node) {
+                Action::CancelDrain
+            } else {
+                Action::Skip
+            }
+        } else if !w.namenode.is_datanode(node) {
+            Action::Skip
+        } else {
+            Action::Rejoin
+        }
+    };
+    match action {
+        Action::Skip => {}
+        Action::CancelDrain => {
+            {
+                let mut w = world.borrow_mut();
+                w.faults.stats.recommissions += 1;
+                w.namenode.cancel_decommission(node);
+                // Drain copies that already landed are surplus now that
+                // the original holder is staying; shed them. (In-flight
+                // copies self-cancel: their commit sees the block is no
+                // longer short and refuses.)
+                let cap = w.faults.replication;
+                w.faults.stats.excess_replicas_dropped +=
+                    w.namenode.scan_over_replicated(cap);
+            }
+            // The tracker never died; give it its slots back.
+            dispatch_rejoin(engine, world, node);
+            balancer::kick(engine, world);
+        }
+        Action::Rejoin => {
+            let replication = {
+                let mut w = world.borrow_mut();
+                w.faults.stats.recommissions += 1;
+                let _ = w.faults.set_up(node);
+                let hard = w.faults.take_hard(node);
+                // Fresh hardware: nominal CPU/NIC/bus/disk capacities;
+                // crash-leaked stream counts reset.
+                w.cluster.rearm_node(engine, node, hard);
+                // The first member back repairs a dark ToR uplink.
+                let rack = w.cluster.rack_of(node);
+                if w.cluster.rack_uplink(rack).map(|u| u.dark).unwrap_or(false) {
+                    w.cluster.restore_uplink(engine, rack);
+                }
+                // Block report: intact copies re-register where the
+                // namespace is short; redundant ones are invalidated.
+                let replication = w.faults.replication;
+                let (restored, excess) = w.namenode.recommission(node, replication);
+                w.faults.stats.blocks_restored_on_rejoin += restored;
+                w.faults.stats.excess_replicas_dropped += excess;
+                // Over-replication scan: repairs that landed while the
+                // report was being replayed can overshoot the factor.
+                w.faults.stats.excess_replicas_dropped +=
+                    w.namenode.scan_over_replicated(replication);
+                replication
+            };
+            // Under-replication scan: blocks that could not repair while
+            // the cluster was short of targets can now use the returning
+            // capacity (this is also what resurrects a lost block whose
+            // only copy came back with the node). Blocks with a drain or
+            // balancer copy already in flight are skipped — the landing
+            // commit would refuse the duplicate anyway, but not before a
+            // full block of wire traffic was wasted and counted.
+            let tasks = {
+                let w = world.borrow();
+                let mut tasks = w.namenode.scan_under_replicated(replication);
+                tasks.retain(|t| {
+                    !w.faults.drain_pending.iter().any(|p| p.block_id == t.block_id)
+                        && !w.faults.balancer_pending.iter().any(|p| p.block_id == t.block_id)
+                });
+                tasks
+            };
+            if !tasks.is_empty() {
+                let world2 = world.clone();
+                engine.batch(move |engine| {
+                    start_repl_tasks(engine, &world2, tasks);
+                });
+            }
+            // TaskTracker re-registration with every live job.
+            dispatch_rejoin(engine, world, node);
+            // The empty node is the balancer's next target.
+            balancer::kick(engine, world);
+        }
+    }
+}
+
+/// Process a whole-rack recommission: every dead member re-joins (the
+/// ToR uplink is repaired by the first one). Flat topologies and
+/// unknown rack indices are no-ops.
+pub fn handle_rack_recommission(engine: &mut Engine, world: &WorldHandle, rack: usize) {
+    let members: Vec<NodeId> = {
+        let w = world.borrow();
+        if w.cluster.racks() <= 1 || rack >= w.cluster.racks() {
+            return;
+        }
+        w.cluster.rack_nodes(rack).into_iter().filter(|n| n.0 != 0).collect()
+    };
+    for n in members {
+        let down = !world.borrow().faults.is_up(n);
+        if down {
+            handle_recommission(engine, world, n);
+        }
+    }
 }
 
 /// Scan the namespace for blocks that lost a replica on any of `dead`
@@ -201,30 +536,7 @@ fn start_rereplication(engine: &mut Engine, world: &WorldHandle, dead: &[NodeId]
         }
         tasks
     };
-    // Targets already chosen for a block in this scan (nothing commits
-    // until the transfers land, so the metadata cannot exclude them).
-    let mut planned: HashMap<u64, Vec<NodeId>> = HashMap::new();
-    for t in &tasks {
-        let mut exclude = t.holders.clone();
-        if let Some(p) = planned.get(&t.block_id) {
-            exclude.extend_from_slice(p);
-        }
-        if let Some(target) = pick_target(engine, world, t.block_id, &exclude) {
-            planned.entry(t.block_id).or_default().push(target);
-            let file = t.file.clone();
-            let block_idx = t.block_idx;
-            start_transfer(engine, world, t.source, target, t.bytes, move |_engine, w| {
-                // Commit only if the target survived the copy; a dead
-                // target is retried by the next crash's scan.
-                if w.faults.is_up(target) {
-                    w.namenode.add_replica(&file, block_idx, target);
-                    w.faults.stats.rereplications_done += 1;
-                }
-            });
-        }
-        // else: no live non-holder left (tiny cluster) — the block
-        // stays under-replicated.
-    }
+    start_repl_tasks(engine, world, tasks);
     let mut w = world.borrow_mut();
     let lost = w
         .namenode
@@ -237,14 +549,102 @@ fn start_rereplication(engine: &mut Engine, world: &WorldHandle, dead: &[NodeId]
     }
 }
 
-/// Deterministically choose a live DataNode that does not already hold
-/// the block: shuffle the candidates on a block-id-keyed RNG stream.
+/// Commit one landed repair/drain copy: register `target` as a replica
+/// of the block — unless the target died mid-copy (a dead target is
+/// retried by the next scan) or the block meanwhile reached the
+/// replication factor without it (a recommissioned holder's block
+/// report can race an in-flight repair; committing anyway would leave
+/// the block permanently over-replicated, since no later scan runs).
+/// "Reached the factor" counts only *effective* copies — live and not
+/// draining — so a drain copy still commits while the departing node's
+/// own replica pads the raw list. Returns whether the replica was
+/// registered.
+fn commit_replica(
+    w: &mut crate::hdfs::World,
+    file: &str,
+    block_idx: usize,
+    target: NodeId,
+) -> bool {
+    if !w.faults.is_up(target) {
+        return false;
+    }
+    let cap = w.faults.replication;
+    let short = match w.namenode.get_file(file).and_then(|m| m.blocks.get(block_idx)) {
+        Some(b) => {
+            let effective = b
+                .replicas
+                .iter()
+                .filter(|r| {
+                    w.namenode.is_live(**r) && !w.namenode.is_decommissioning(**r)
+                })
+                .count();
+            !b.replicas.contains(&target) && effective < cap
+        }
+        None => false,
+    };
+    if short {
+        w.namenode.add_replica(file, block_idx, target);
+        w.faults.stats.rereplications_done += 1;
+    }
+    short
+}
+
+/// Plan a target for one [`ReplTask`] (excluding same-batch picks for
+/// the same block via `planned`), account the recovery stats, and start
+/// the `recovery:*` transfer; the landing commit runs
+/// [`commit_replica`] followed by `epilogue` (world still borrowed).
+/// Returns the chosen target, or None when no eligible non-holder is
+/// left (tiny or half-dead cluster) — the block then stays
+/// under-replicated. Shared by the crash scan, the re-join
+/// under-replication scan, and the decommission drain.
+fn plan_and_start(
+    engine: &mut Engine,
+    world: &WorldHandle,
+    t: &ReplTask,
+    planned: &mut HashMap<u64, Vec<NodeId>>,
+    epilogue: impl FnOnce(&mut Engine, &mut crate::hdfs::World) + 'static,
+) -> Option<NodeId> {
+    let mut exclude = t.holders.clone();
+    if let Some(p) = planned.get(&t.block_id) {
+        exclude.extend_from_slice(p);
+    }
+    let target = pick_target(engine, world, t.block_id, &exclude)?;
+    planned.entry(t.block_id).or_default().push(target);
+    {
+        let mut w = world.borrow_mut();
+        w.faults.stats.rereplications_started += 1;
+        w.faults.stats.recovery_bytes += t.bytes.max(1.0);
+    }
+    let file = t.file.clone();
+    let block_idx = t.block_idx;
+    start_transfer(engine, world, t.source, target, t.bytes, "recovery", None, move |engine, w| {
+        commit_replica(w, &file, block_idx, target);
+        epilogue(engine, w);
+    });
+    Some(target)
+}
+
+/// Start one `recovery:*` transfer per [`ReplTask`], each toward a live
+/// non-holder target. Targets already chosen for a block in this batch
+/// are excluded from later picks of the same block (nothing commits
+/// until the transfers land, so the metadata cannot exclude them).
+/// Shared by the crash scan and the re-join under-replication scan.
+pub(crate) fn start_repl_tasks(engine: &mut Engine, world: &WorldHandle, tasks: Vec<ReplTask>) {
+    let mut planned: HashMap<u64, Vec<NodeId>> = HashMap::new();
+    for t in &tasks {
+        let _ = plan_and_start(engine, world, t, &mut planned, |_, _| {});
+    }
+}
+
+/// Deterministically choose an eligible DataNode (live, not draining)
+/// that does not already hold the block: shuffle the candidates on a
+/// block-id-keyed RNG stream.
 /// On a multi-rack topology, when every surviving holder sits in one
 /// rack the target is drawn from *another* rack where possible — repair
 /// restores the rack-aware "spans two racks" invariant instead of
 /// re-concentrating the block in the surviving failure domain (and the
 /// transfer then crosses the oversubscribed fabric, as it must).
-fn pick_target(
+pub(crate) fn pick_target(
     engine: &mut Engine,
     world: &WorldHandle,
     block_id: u64,
@@ -254,7 +654,7 @@ fn pick_target(
         let w = world.borrow();
         let mut cands: Vec<NodeId> = w
             .namenode
-            .live_datanodes()
+            .target_datanodes()
             .into_iter()
             .filter(|n| !holders.contains(n))
             .collect();
@@ -311,43 +711,49 @@ pub fn top_up_block(
         holders.extend_from_slice(&planned);
         let Some(target) = pick_target(engine, world, block_id, &holders) else { return };
         planned.push(target);
+        {
+            let mut w = world.borrow_mut();
+            w.faults.stats.rereplications_started += 1;
+            w.faults.stats.recovery_bytes += bytes.max(1.0);
+        }
         let file2 = file.to_string();
-        start_transfer(engine, world, source, target, bytes, move |_engine, w| {
-            if w.faults.is_up(target) {
-                w.namenode.add_replica(&file2, block_idx, target);
-                w.faults.stats.rereplications_done += 1;
-            }
+        start_transfer(engine, world, source, target, bytes, "recovery", None, move |_engine, w| {
+            commit_replica(w, &file2, block_idx, target);
         });
     }
 }
 
 /// Stream `bytes` of one block `source` → `target` (the NameNode repair
 /// path: DataNode-to-DataNode, no client in the loop) and run `commit`
-/// on completion with the world borrowed mutably.
-fn start_transfer(
+/// on completion with the world borrowed mutably. `class_prefix` names
+/// the usage classes (`"recovery"` for repair, `"balance"` for balancer
+/// moves) so the energy layer can attribute each separately;
+/// `rate_cap_bps` throttles the transfer (the balancer's
+/// `dfs.balance.bandwidthPerSec` cap). Callers account their own stats.
+pub(crate) fn start_transfer(
     engine: &mut Engine,
     world: &WorldHandle,
     source: NodeId,
     target: NodeId,
     bytes: f64,
+    class_prefix: &str,
+    rate_cap_bps: Option<f64>,
     commit: impl FnOnce(&mut Engine, &mut crate::hdfs::World) + 'static,
 ) {
     let bytes = bytes.max(1.0);
     let spec = {
         let mut w = world.borrow_mut();
-        w.faults.stats.rereplications_started += 1;
-        w.faults.stats.recovery_bytes += bytes;
         w.cluster.disk_stream_start(engine, source, true);
         w.cluster.disk_stream_start(engine, target, false);
+        let c_xfer = engine.class(&format!("{class_prefix}:xfer"));
+        let c_send = engine.class(&format!("{class_prefix}:net-send"));
+        let c_recv = engine.class(&format!("{class_prefix}:net-recv"));
+        let c_write = engine.class(&format!("{class_prefix}:write-user"));
         let cluster = &w.cluster;
         let s = cluster.node(source);
         let d = cluster.node(target);
         let scosts = s.spec.cpu.costs.clone();
         let dcosts = d.spec.cpu.costs.clone();
-        let c_xfer = engine.class("recovery:xfer");
-        let c_send = engine.class("recovery:net-send");
-        let c_recv = engine.class("recovery:net-recv");
-        let c_write = engine.class("recovery:write-user");
         // Source: disk read + stream stack + socket send. Target: socket
         // receive + checksum verify + buffered write. One xceiver thread
         // per side.
@@ -358,7 +764,7 @@ fn start_transfer(
             + dcosts.buffered_write_user;
         let mut f = FlowSpec::with_capacity(
             bytes,
-            format!("recovery:blk n{}->n{}", source.0, target.0),
+            format!("{class_prefix}:blk n{}->n{}", source.0, target.0),
             10,
         )
         .demand(s.disk, 1.0 / s.spec.data_disk.read_bps, c_xfer)
@@ -370,6 +776,9 @@ fn start_transfer(
         .demand(d.membus, 1.0, c_xfer)
         .cap(1.0 / src_cost)
         .cap(1.0 / dst_cost);
+        if let Some(cap) = rate_cap_bps {
+            f = f.cap(cap);
+        }
         // Cross-rack repair traffic traverses the (possibly
         // oversubscribed) ToR uplinks — after a whole-rack loss every
         // re-replication crosses the fabric.

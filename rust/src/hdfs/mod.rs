@@ -39,9 +39,13 @@ use crate::sim::engine::Shared;
 /// (inert unless an [`crate::faults::InjectionPlan`] was installed).
 /// Engine callbacks capture a `Shared<World>`.
 pub struct World {
+    /// The simulated cluster and its engine resources.
     pub cluster: Cluster,
+    /// HDFS namespace, placement policy, node lifecycle states.
     pub namenode: NameNode,
+    /// Byte counters feeding the Amdahl analysis.
     pub counters: Counters,
+    /// Fault-injection and lifecycle state (inert when no plan armed).
     pub faults: FaultState,
 }
 

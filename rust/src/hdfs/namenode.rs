@@ -22,6 +22,7 @@ use crate::sim::Rng;
 /// One HDFS block.
 #[derive(Debug, Clone)]
 pub struct BlockMeta {
+    /// Cluster-unique block id.
     pub id: u64,
     /// Logical (uncompressed) size in bytes.
     pub size: f64,
@@ -34,16 +35,20 @@ pub struct BlockMeta {
 /// One HDFS file.
 #[derive(Debug, Clone, Default)]
 pub struct FileMeta {
+    /// Blocks in file order.
     pub blocks: Vec<BlockMeta>,
 }
 
 impl FileMeta {
+    /// Total logical size, bytes.
     pub fn size(&self) -> f64 {
         self.blocks.iter().map(|b| b.size).sum()
     }
 }
 
-/// The NameNode's namespace plus the placement policy.
+/// The NameNode's namespace plus the placement policy and the node
+/// lifecycle state machine (`live → decommissioning → dead →
+/// recommissioned-live`).
 #[derive(Debug, Default)]
 pub struct NameNode {
     files: HashMap<String, FileMeta>,
@@ -54,6 +59,16 @@ pub struct NameNode {
     /// `datanodes` (the scheduler handles TaskTracker blacklisting
     /// itself) but are excluded from placement and replica selection.
     dead: Vec<NodeId>,
+    /// DataNodes gracefully draining (Hadoop's *decommissioning* state):
+    /// they still serve reads and source transfers, but receive no new
+    /// replicas. Empty on every run that never decommissions, keeping
+    /// the historical placement draws byte-identical.
+    decommissioning: Vec<NodeId>,
+    /// Blocks each dead node still holds on its intact disk, recorded at
+    /// purge time (file name, block index). A recommission replays this
+    /// as the node's **block report**: copies the namespace still needs
+    /// re-register instantly, redundant ones are invalidated.
+    offline: HashMap<usize, Vec<(String, usize)>>,
     /// Rack index per node id. Empty = the flat single-rack topology,
     /// which keeps the historical (RNG-draw-identical) placement path.
     rack_of: Vec<usize>,
@@ -63,8 +78,11 @@ pub struct NameNode {
 /// surviving copy (produced by [`NameNode::purge_node`]).
 #[derive(Debug, Clone)]
 pub struct ReplTask {
+    /// File the block belongs to.
     pub file: String,
+    /// Block index inside the file.
     pub block_idx: usize,
+    /// Cluster-unique block id.
     pub block_id: u64,
     /// Wire/disk bytes to move (the stored, possibly compressed size).
     pub bytes: f64,
@@ -79,6 +97,7 @@ pub struct ReplTask {
 }
 
 impl NameNode {
+    /// An empty namespace with no registered DataNodes.
     pub fn new() -> NameNode {
         NameNode::default()
     }
@@ -109,10 +128,12 @@ impl NameNode {
         self.rack_of.get(n.0).copied().unwrap_or(0)
     }
 
+    /// All registered DataNodes, dead or alive.
     pub fn datanodes(&self) -> &[NodeId] {
         &self.datanodes
     }
 
+    /// Is `n` a registered DataNode?
     pub fn is_datanode(&self, n: NodeId) -> bool {
         self.datanodes.contains(&n)
     }
@@ -127,9 +148,31 @@ impl NameNode {
         self.dead.contains(&n)
     }
 
-    /// DataNodes currently alive, in registration order.
+    /// Is `n` gracefully draining (decommissioning)?
+    pub fn is_decommissioning(&self, n: NodeId) -> bool {
+        self.decommissioning.contains(&n)
+    }
+
+    /// DataNodes currently alive, in registration order (decommissioning
+    /// nodes count: they still serve reads and source transfers).
     pub fn live_datanodes(&self) -> Vec<NodeId> {
         self.datanodes.iter().copied().filter(|n| !self.dead.contains(n)).collect()
+    }
+
+    /// DataNodes eligible to *receive* new replicas: live and not
+    /// draining. This is the pool placement, re-replication targets and
+    /// the balancer draw from.
+    pub fn target_datanodes(&self) -> Vec<NodeId> {
+        self.datanodes
+            .iter()
+            .copied()
+            .filter(|n| !self.dead.contains(n) && !self.decommissioning.contains(n))
+            .collect()
+    }
+
+    /// Is `n` a valid placement target (live, registered, not draining)?
+    pub fn is_placement_target(&self, n: NodeId) -> bool {
+        self.is_datanode(n) && !self.dead.contains(&n) && !self.decommissioning.contains(&n)
     }
 
     /// Declare `n` dead: exclude it from placement and replica picks.
@@ -137,23 +180,42 @@ impl NameNode {
         if !self.dead.contains(&n) {
             self.dead.push(n);
         }
+        self.decommissioning.retain(|&x| x != n);
+    }
+
+    /// Move `n` into the *decommissioning* state: no new replicas land
+    /// on it, but it keeps serving reads and sourcing drain transfers.
+    pub fn mark_decommissioning(&mut self, n: NodeId) {
+        if self.is_datanode(n) && !self.dead.contains(&n) && !self.decommissioning.contains(&n) {
+            self.decommissioning.push(n);
+        }
+    }
+
+    /// Cancel an in-progress decommission (Hadoop's remove-from-excludes
+    /// refresh): the node immediately becomes a placement target again.
+    pub fn cancel_decommission(&mut self, n: NodeId) {
+        self.decommissioning.retain(|&x| x != n);
     }
 
     /// Remove `dead` from every block's replica list and return one
     /// [`ReplTask`] per block that still has a surviving copy (blocks
     /// with no survivors are unrecoverable and are just emptied —
-    /// callers count them as lost). File iteration is sorted by name so
+    /// callers count them as lost). The purged set is remembered as the
+    /// node's prospective **block report** (its disk is intact; a later
+    /// recommission replays it). File iteration is sorted by name so
     /// the task list is deterministic despite the HashMap namespace.
     pub fn purge_node(&mut self, dead: NodeId) -> Vec<ReplTask> {
         let mut names: Vec<String> = self.files.keys().cloned().collect();
         names.sort_unstable();
         let mut tasks = Vec::new();
+        let mut retained: Vec<(String, usize)> = Vec::new();
         for name in names {
             let meta = self.files.get_mut(&name).expect("file vanished during purge");
             for (i, b) in meta.blocks.iter_mut().enumerate() {
                 if !b.replicas.contains(&dead) {
                     continue;
                 }
+                retained.push((name.clone(), i));
                 b.replicas.retain(|&r| r != dead);
                 // Copy from the first *live* survivor (a multi-node
                 // failure instant can leave dead nodes listed until
@@ -172,7 +234,168 @@ impl NameNode {
                 }
             }
         }
+        if retained.is_empty() {
+            self.offline.remove(&dead.0);
+        } else {
+            self.offline.insert(dead.0, retained);
+        }
         tasks
+    }
+
+    /// Re-admit a dead (or draining) node and replay its block report:
+    /// every block still on its intact disk re-registers **instantly**
+    /// when the namespace is short of `replication` *effective* copies
+    /// (live and not draining — a copy on a decommissioning peer is
+    /// about to leave, so it must not make the returning one look
+    /// redundant), and is invalidated when crash-time re-replication
+    /// already made it redundant. Returns
+    /// `(replicas_restored, excess_invalidated)`.
+    pub fn recommission(&mut self, n: NodeId, replication: usize) -> (usize, usize) {
+        self.dead.retain(|&x| x != n);
+        self.decommissioning.retain(|&x| x != n);
+        let retained = self.offline.remove(&n.0).unwrap_or_default();
+        let mut restored = 0usize;
+        let mut excess = 0usize;
+        for (file, idx) in retained {
+            let Some(meta) = self.files.get_mut(&file) else { continue };
+            let Some(b) = meta.blocks.get_mut(idx) else { continue };
+            if b.replicas.contains(&n) {
+                continue;
+            }
+            let effective = b
+                .replicas
+                .iter()
+                .filter(|r| {
+                    !self.dead.contains(r) && !self.decommissioning.contains(r)
+                })
+                .count();
+            if effective < replication {
+                b.replicas.push(n);
+                restored += 1;
+            } else {
+                excess += 1;
+            }
+        }
+        (restored, excess)
+    }
+
+    /// Over/under-replication scan, under side: one [`ReplTask`] per
+    /// missing copy of every block below `replication` that still has a
+    /// live source (repeated tasks for the same block let the caller's
+    /// planned-target map pick distinct targets). Sorted by file name
+    /// for determinism.
+    pub fn scan_under_replicated(&self, replication: usize) -> Vec<ReplTask> {
+        let mut names: Vec<&String> = self.files.keys().collect();
+        names.sort_unstable();
+        let mut tasks = Vec::new();
+        for name in names {
+            let meta = &self.files[name];
+            for (i, b) in meta.blocks.iter().enumerate() {
+                if b.replicas.is_empty() || b.replicas.len() >= replication {
+                    continue;
+                }
+                let source = b.replicas.iter().copied().find(|r| !self.dead.contains(r));
+                let Some(source) = source else { continue };
+                for _ in b.replicas.len()..replication {
+                    tasks.push(ReplTask {
+                        file: name.to_string(),
+                        block_idx: i,
+                        block_id: b.id,
+                        bytes: b.stored_size,
+                        source,
+                        holders: b.replicas.clone(),
+                    });
+                }
+            }
+        }
+        tasks
+    }
+
+    /// Over/under-replication scan, over side: drop excess replicas of
+    /// every block above `replication`, preferring drops that keep the
+    /// block spanning at least two racks (the v0.20 invariant repair
+    /// restores). Returns the number of replicas invalidated.
+    pub fn scan_over_replicated(&mut self, replication: usize) -> usize {
+        let mut names: Vec<String> = self.files.keys().cloned().collect();
+        names.sort_unstable();
+        let mut dropped = 0usize;
+        let rack_aware = !self.rack_of.is_empty();
+        for name in names {
+            let meta = self.files.get_mut(&name).expect("file vanished during scan");
+            for b in &mut meta.blocks {
+                while b.replicas.len() > replication.max(1) {
+                    // Drop from the end of the list (latest addition)
+                    // unless that would collapse the rack spread.
+                    let mut drop_idx = b.replicas.len() - 1;
+                    if rack_aware {
+                        let distinct = |reps: &[NodeId], skip: usize| {
+                            let mut racks: Vec<usize> = reps
+                                .iter()
+                                .enumerate()
+                                .filter(|(j, _)| *j != skip)
+                                .map(|(_, r)| self.rack_of.get(r.0).copied().unwrap_or(0))
+                                .collect();
+                            racks.sort_unstable();
+                            racks.dedup();
+                            racks.len()
+                        };
+                        let full = distinct(&b.replicas, b.replicas.len());
+                        let keep_spread = full.min(2);
+                        for j in (0..b.replicas.len()).rev() {
+                            if distinct(&b.replicas, j) >= keep_spread {
+                                drop_idx = j;
+                                break;
+                            }
+                        }
+                    }
+                    b.replicas.remove(drop_idx);
+                    dropped += 1;
+                }
+            }
+        }
+        dropped
+    }
+
+    /// Balancer commit: `to` now holds the block, `from`'s copy is
+    /// invalidated. The swap happens **only when it is still a swap**:
+    /// `from` must still hold the block (a drain or crash purge that
+    /// vacated the source mid-transfer would otherwise turn the move
+    /// into a pure add, over-replicating the block) and `to` must not
+    /// already hold it (an in-flight repair or drain copy landing there
+    /// first would otherwise make the retain shrink the replica set
+    /// below the factor). Any raced move degrades to a no-op. Returns
+    /// whether the swap happened.
+    pub fn move_replica(&mut self, file: &str, block_idx: usize, from: NodeId, to: NodeId) -> bool {
+        if let Some(meta) = self.files.get_mut(file) {
+            if let Some(b) = meta.blocks.get_mut(block_idx) {
+                if from != to && b.replicas.contains(&from) && !b.replicas.contains(&to) {
+                    b.replicas.push(to);
+                    b.replicas.retain(|&r| r != from);
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// Stored (on-disk) bytes per node id, index = `NodeId.0`, sized to
+    /// hold the highest registered DataNode. Accumulated over sorted
+    /// file names so the floating-point sums are bit-stable.
+    pub fn stored_bytes(&self) -> Vec<f64> {
+        let len = self.datanodes.iter().map(|n| n.0 + 1).max().unwrap_or(0);
+        let mut bytes = vec![0.0f64; len];
+        let mut names: Vec<&String> = self.files.keys().collect();
+        names.sort_unstable();
+        for name in names {
+            for b in &self.files[name].blocks {
+                for r in &b.replicas {
+                    if r.0 < bytes.len() {
+                        bytes[r.0] += b.stored_size;
+                    }
+                }
+            }
+        }
+        bytes
     }
 
     /// Append a freshly re-replicated copy to a block's replica list.
@@ -192,36 +415,36 @@ impl NameNode {
         self.next_block
     }
 
-    /// v0.20 placement: client-local first (if the client is a live
-    /// DataNode), then — flat topology — distinct random live DataNodes,
-    /// or — multi-rack topology — the rack-aware remote-rack /
-    /// same-remote-rack policy ([`NameNode::place_replicas_rack_aware`]).
-    /// Dead nodes are never chosen; with no declared deaths and one rack
-    /// this is exactly the historical policy (same pool, same RNG draws,
-    /// and no extra allocation on the per-block hot path). When the live
-    /// pool is smaller than `replication` the vector comes back short
-    /// (the real NameNode commits under-replicated blocks) instead of
-    /// panicking.
+    /// v0.20 placement: client-local first (if the client is an
+    /// eligible DataNode), then — flat topology — distinct random live
+    /// DataNodes, or — multi-rack topology — the rack-aware remote-rack /
+    /// same-remote-rack policy (`NameNode::place_replicas_rack_aware`).
+    /// Dead and decommissioning nodes are never chosen; with no declared
+    /// deaths or drains and one rack this is exactly the historical
+    /// policy (same pool, same RNG draws, and no extra allocation on the
+    /// per-block hot path). When the eligible pool is smaller than
+    /// `replication` the vector comes back short (the real NameNode
+    /// commits under-replicated blocks) instead of panicking.
     pub fn place_replicas(&mut self, rng: &mut Rng, client: NodeId, replication: usize) -> Vec<NodeId> {
         if !self.rack_of.is_empty() {
             return self.place_replicas_rack_aware(rng, client, replication);
         }
-        let live_len = if self.dead.is_empty() {
+        let live_len = if self.dead.is_empty() && self.decommissioning.is_empty() {
             self.datanodes.len()
         } else {
-            self.datanodes.iter().filter(|n| !self.dead.contains(n)).count()
+            self.datanodes.iter().filter(|n| self.is_placement_target(**n)).count()
         };
         assert!(live_len > 0, "no live datanodes registered");
         let r = replication.min(live_len);
         let mut chosen: Vec<NodeId> = Vec::with_capacity(r);
-        if self.is_live(client) {
+        if self.is_placement_target(client) {
             chosen.push(client);
         }
         let mut pool: Vec<NodeId> = self
             .datanodes
             .iter()
             .copied()
-            .filter(|n| !chosen.contains(n) && !self.dead.contains(n))
+            .filter(|n| !chosen.contains(n) && self.is_placement_target(*n))
             .collect();
         rng.shuffle(&mut pool);
         while chosen.len() < r {
@@ -250,14 +473,14 @@ impl NameNode {
         replication: usize,
     ) -> Vec<NodeId> {
         let mut chosen: Vec<NodeId> = Vec::with_capacity(replication);
-        if self.is_live(client) {
+        if self.is_placement_target(client) {
             chosen.push(client);
         }
         let mut pool: Vec<NodeId> = self
             .datanodes
             .iter()
             .copied()
-            .filter(|n| !chosen.contains(n) && !self.dead.contains(n))
+            .filter(|n| !chosen.contains(n) && self.is_placement_target(*n))
             .collect();
         rng.shuffle(&mut pool);
         if chosen.is_empty() {
@@ -308,14 +531,17 @@ impl NameNode {
         self.files.insert(name.to_string(), meta);
     }
 
+    /// Look up a file's metadata.
     pub fn get_file(&self, name: &str) -> Option<&FileMeta> {
         self.files.get(name)
     }
 
+    /// Does `name` exist in the namespace?
     pub fn exists(&self, name: &str) -> bool {
         self.files.contains_key(name)
     }
 
+    /// Iterate the namespace (unordered; sort for determinism).
     pub fn files(&self) -> impl Iterator<Item = (&str, &FileMeta)> {
         self.files.iter().map(|(k, v)| (k.as_str(), v))
     }
@@ -739,6 +965,156 @@ mod tests {
         // dead holder is purged.
         assert!(m.purge_node(NodeId(2)).is_empty());
         assert!(m.get_file("g").unwrap().blocks[0].replicas.is_empty());
+    }
+
+    #[test]
+    fn decommissioning_excluded_from_placement_but_still_serves_reads() {
+        let mut n = nn(4);
+        n.mark_decommissioning(NodeId(2));
+        assert!(n.is_decommissioning(NodeId(2)));
+        assert!(n.is_live(NodeId(2)), "draining nodes are alive");
+        assert!(!n.is_placement_target(NodeId(2)));
+        assert_eq!(n.target_datanodes(), vec![NodeId(1), NodeId(3), NodeId(4)]);
+        let mut rng = Rng::new(21);
+        for _ in 0..50 {
+            let reps = n.place_replicas(&mut rng, NodeId(2), 3);
+            assert!(!reps.contains(&NodeId(2)), "draining node placed: {reps:?}");
+            assert_eq!(reps.len(), 3);
+        }
+        // Reads still hit the draining copy.
+        let b = BlockMeta { id: 1, size: 1.0, stored_size: 1.0, replicas: vec![NodeId(2)] };
+        assert_eq!(n.pick_replica(&mut rng, &b, NodeId(1)), Some(NodeId(2)));
+        // Cancelling restores target eligibility.
+        n.cancel_decommission(NodeId(2));
+        assert!(n.is_placement_target(NodeId(2)));
+        // Death clears the draining state.
+        n.mark_decommissioning(NodeId(3));
+        n.mark_dead(NodeId(3));
+        assert!(!n.is_decommissioning(NodeId(3)) && n.is_dead(NodeId(3)));
+    }
+
+    #[test]
+    fn recommission_replays_the_block_report() {
+        let mut n = nn(4);
+        n.put_file(
+            "f",
+            FileMeta {
+                blocks: vec![
+                    BlockMeta {
+                        id: 1,
+                        size: 8.0,
+                        stored_size: 8.0,
+                        replicas: vec![NodeId(1), NodeId(2), NodeId(3)],
+                    },
+                    BlockMeta {
+                        id: 2,
+                        size: 8.0,
+                        stored_size: 8.0,
+                        replicas: vec![NodeId(2)],
+                    },
+                ],
+            },
+        );
+        n.mark_dead(NodeId(2));
+        let _ = n.purge_node(NodeId(2));
+        // Block 2 lost its only copy; block 1 still has two.
+        assert!(n.get_file("f").unwrap().blocks[1].replicas.is_empty());
+        // Simulate crash-time repair restoring block 1 to r=3.
+        n.add_replica("f", 0, NodeId(4));
+        let (restored, excess) = n.recommission(NodeId(2), 3);
+        assert!(n.is_live(NodeId(2)));
+        // Block 2 comes back from the intact disk; block 1 is already
+        // full, so the returning copy is invalidated.
+        assert_eq!((restored, excess), (1, 1));
+        assert_eq!(n.get_file("f").unwrap().blocks[1].replicas, vec![NodeId(2)]);
+        assert_eq!(n.get_file("f").unwrap().blocks[0].replicas.len(), 3);
+        assert!(!n.get_file("f").unwrap().blocks[0].replicas.contains(&NodeId(2)));
+        // The report is consumed: a second recommission is a no-op.
+        assert_eq!(n.recommission(NodeId(2), 3), (0, 0));
+    }
+
+    #[test]
+    fn under_and_over_replication_scans() {
+        let mut n = nn(4);
+        n.put_file(
+            "f",
+            FileMeta {
+                blocks: vec![
+                    BlockMeta { id: 1, size: 4.0, stored_size: 4.0, replicas: vec![NodeId(1)] },
+                    BlockMeta {
+                        id: 2,
+                        size: 4.0,
+                        stored_size: 4.0,
+                        replicas: vec![NodeId(1), NodeId(2), NodeId(3), NodeId(4)],
+                    },
+                ],
+            },
+        );
+        let under = n.scan_under_replicated(3);
+        // Block 1 is short two copies → two tasks, same source.
+        assert_eq!(under.len(), 2);
+        assert!(under.iter().all(|t| t.block_id == 1 && t.source == NodeId(1)));
+        assert_eq!(n.scan_over_replicated(3), 1, "block 2 sheds one excess copy");
+        assert_eq!(n.get_file("f").unwrap().blocks[1].replicas.len(), 3);
+    }
+
+    #[test]
+    fn over_replication_scan_preserves_rack_spread() {
+        // 3 racks of 3: r0={0,1,2} r1={3,4,5} r2={6,7,8}.
+        let mut n = nn_racked(8, 3);
+        n.put_file(
+            "f",
+            FileMeta {
+                blocks: vec![BlockMeta {
+                    id: 1,
+                    size: 4.0,
+                    stored_size: 4.0,
+                    // Three copies in rack 0, one in rack 2: the naive
+                    // drop-last would collapse the block into one rack.
+                    replicas: vec![NodeId(1), NodeId(2), NodeId(7)],
+                }],
+            },
+        );
+        assert_eq!(n.scan_over_replicated(2), 1);
+        let reps = &n.get_file("f").unwrap().blocks[0].replicas;
+        assert!(reps.contains(&NodeId(7)), "cross-rack copy must survive: {reps:?}");
+        assert_eq!(reps.len(), 2);
+    }
+
+    #[test]
+    fn move_replica_and_stored_bytes() {
+        let mut n = nn(3);
+        n.put_file(
+            "f",
+            FileMeta {
+                blocks: vec![BlockMeta {
+                    id: 1,
+                    size: 10.0,
+                    stored_size: 6.0,
+                    replicas: vec![NodeId(1), NodeId(2)],
+                }],
+            },
+        );
+        let bytes = n.stored_bytes();
+        assert_eq!(bytes.len(), 4);
+        assert!((bytes[1] - 6.0).abs() < 1e-12 && (bytes[2] - 6.0).abs() < 1e-12);
+        assert_eq!(bytes[3], 0.0);
+        assert!(n.move_replica("f", 0, NodeId(1), NodeId(3)));
+        assert_eq!(n.get_file("f").unwrap().blocks[0].replicas, vec![NodeId(2), NodeId(3)]);
+        let bytes = n.stored_bytes();
+        assert_eq!(bytes[1], 0.0);
+        assert!((bytes[3] - 6.0).abs() < 1e-12);
+        // A raced move (target already holds the block) must degrade to
+        // a no-op instead of silently dropping the source copy.
+        assert!(!n.move_replica("f", 0, NodeId(2), NodeId(3)));
+        assert_eq!(n.get_file("f").unwrap().blocks[0].replicas, vec![NodeId(2), NodeId(3)]);
+        // So must a move whose source was vacated mid-transfer (a drain
+        // purge): committing it would over-replicate the block. Node 1
+        // no longer holds the block, so moving "its" copy is refused
+        // even toward a fresh target.
+        assert!(!n.move_replica("f", 0, NodeId(1), NodeId(4)));
+        assert_eq!(n.get_file("f").unwrap().blocks[0].replicas, vec![NodeId(2), NodeId(3)]);
+        assert!(!n.move_replica("nope", 0, NodeId(2), NodeId(3)));
     }
 
     #[test]

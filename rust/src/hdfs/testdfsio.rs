@@ -36,8 +36,11 @@ pub struct DfsioResult {
 /// consumes (energy, raw per-resource usage, solver perf counters).
 #[derive(Debug, Clone)]
 pub struct DfsioRun {
+    /// Throughput summary.
     pub result: DfsioResult,
+    /// Energy accounting for the run.
     pub energy: EnergyReport,
+    /// Per-resource usage snapshot.
     pub usage: Vec<UsageSnapshot>,
     /// Engine perf counters for the whole run (solver work, heap churn).
     pub stats: EngineStats,
@@ -62,6 +65,8 @@ fn build_world(preset: ClusterPreset, sim: SimConfig, conf: &HadoopConf) -> (Eng
     // World::new arms the NameNode with the cluster's rack map.
     let mut world = World::new(cluster);
     world.namenode.set_datanodes((1..n).map(NodeId).collect());
+    // The recovery / re-join scans restore toward dfs.replication.
+    world.faults.replication = conf.dfs_replication;
     (engine, shared(world))
 }
 

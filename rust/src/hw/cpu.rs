@@ -21,15 +21,22 @@ use super::MIB;
 /// Task classes used for instruction accounting (paper Table 4 rows).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum TaskClass {
+    /// HDFS block reads.
     HdfsRead,
+    /// HDFS block writes.
     HdfsWrite,
+    /// Map tasks.
     Mapper,
+    /// Neighbor Statistics reducers.
     ReducerStat,
+    /// Neighbor Searching reducers.
     ReducerSearch,
+    /// Everything else.
     Other,
 }
 
 impl TaskClass {
+    /// Human-readable task-class label (Table 4 row names).
     pub fn name(self) -> &'static str {
         match self {
             TaskClass::HdfsRead => "HDFS read",
@@ -92,7 +99,9 @@ pub struct IoCosts {
 /// A CPU: core count, clock, and its I/O cost table.
 #[derive(Debug, Clone)]
 pub struct CpuSpec {
+    /// Model name.
     pub name: String,
+    /// Physical cores.
     pub cores: usize,
     /// Nominal clock in Hz.
     pub freq_hz: f64,
@@ -100,24 +109,34 @@ pub struct CpuSpec {
     /// Hyperthreading on Atom 330 adds ~25% throughput (4 hw threads on
     /// 2 cores), so capacity = 2.5; the Opteron 2212 has no SMT.
     pub capacity: f64,
+    /// Calibrated per-byte CPU costs of the I/O primitives.
     pub costs: IoCosts,
     /// Instructions-per-cycle per core by task class (paper Table 4 "IPC"
     /// column for Atom; used to convert cpu-seconds → instructions).
     pub ipc_hdfs_read: f64,
+    /// Measured IPC of HDFS writes.
     pub ipc_hdfs_write: f64,
+    /// Measured IPC of map tasks.
     pub ipc_mapper: f64,
+    /// Measured IPC of Neighbor Statistics reducers.
     pub ipc_reducer_stat: f64,
+    /// Measured IPC of Neighbor Searching reducers.
     pub ipc_reducer_search: f64,
     /// DVFS governor model: observed freq / nominal freq by class (paper
     /// Table 4 "Freq" column; ondemand drops the clock on I/O waits).
     pub freq_ratio_hdfs_read: f64,
+    /// Busy-frequency ratio of HDFS writes.
     pub freq_ratio_hdfs_write: f64,
+    /// Busy-frequency ratio of map tasks.
     pub freq_ratio_mapper: f64,
+    /// Busy-frequency ratio of Neighbor Statistics reducers.
     pub freq_ratio_reducer_stat: f64,
+    /// Busy-frequency ratio of Neighbor Searching reducers.
     pub freq_ratio_reducer_search: f64,
 }
 
 impl CpuSpec {
+    /// Measured IPC of `class` (paper Table 4).
     pub fn ipc(&self, class: TaskClass) -> f64 {
         match class {
             TaskClass::HdfsRead => self.ipc_hdfs_read,
@@ -129,6 +148,7 @@ impl CpuSpec {
         }
     }
 
+    /// Busy-frequency ratio of `class` (paper Table 4).
     pub fn freq_ratio(&self, class: TaskClass) -> f64 {
         match class {
             TaskClass::HdfsRead => self.freq_ratio_hdfs_read,

@@ -27,6 +27,7 @@ pub enum DiskKind {
 }
 
 impl DiskKind {
+    /// Human-readable device label.
     pub fn name(self) -> &'static str {
         match self {
             DiskKind::Hdd => "one hard drive",
@@ -40,6 +41,7 @@ impl DiskKind {
 /// A disk's calibrated parameters.
 #[derive(Debug, Clone)]
 pub struct DiskSpec {
+    /// Device family this spec models.
     pub kind: DiskKind,
     /// Sequential media read rate, bytes/s (empty-disk / outer zones for
     /// the Amdahl blades — paper §3.5: "the disks on the Amdahl blades are

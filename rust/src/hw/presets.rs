@@ -7,10 +7,13 @@ use super::net::{amdahl_net, occ_net, NetSpec};
 /// Everything needed to instantiate one cluster node in the simulator.
 #[derive(Debug, Clone)]
 pub struct NodeSpec {
+    /// Preset name.
     pub name: String,
+    /// CPU model.
     pub cpu: CpuSpec,
     /// The disk HDFS data dirs live on (Fig 1/2 vary this).
     pub data_disk: DiskSpec,
+    /// NIC / memory-bus model.
     pub net: NetSpec,
     /// Memory in bytes (Amdahl 4 GB, OCC 12 GB). Bounds the page cache
     /// and the map-side sort buffers the conf layer hands out.

@@ -39,27 +39,39 @@
 //! * [`amdahl`] — instruction accounting → the paper's Table 4 numbers.
 //! * [`energy`] — power integration → the paper's §3.6 efficiency
 //!   ratios, with recovery joules attributed separately under faults.
-//! * [`faults`] — seeded fault injection & recovery: datanode crashes
-//!   with NameNode dead-node detection, **whole-rack failures** (every
-//!   member node + the ToR uplink at once, with cross-fabric
-//!   re-replication that restores the two-rack spread), ToR brownouts,
-//!   block re-replication from surviving copies, mid-block
-//!   write-pipeline failover, TaskTracker blacklisting with
-//!   re-execution of lost map outputs, CPU stragglers and 0.20-style
-//!   speculative execution (`amdahl-hadoop faults`). With an empty
+//! * [`faults`] — seeded fault injection, recovery, and the **node
+//!   lifecycle**: datanode crashes with NameNode dead-node detection,
+//!   **whole-rack failures** (every member node + the ToR uplink at
+//!   once, with cross-fabric re-replication that restores the two-rack
+//!   spread), ToR brownouts, block re-replication from surviving
+//!   copies, mid-block write-pipeline failover, TaskTracker
+//!   blacklisting with re-execution of lost map outputs, CPU stragglers
+//!   and 0.20-style speculative execution, graceful **decommission →
+//!   drain → dead** exits, **recommission / re-join** (block report,
+//!   TaskTracker re-registration, resource re-arm), and the background
+//!   **rack-aware balancer** (`amdahl-hadoop faults`). With an empty
 //!   [`faults::InjectionPlan`] nothing is installed and every output —
 //!   including `BENCH_sweep.json` — is byte-identical to a fault-free
 //!   build.
 //! * [`report`] — regenerates every figure and table in the paper,
 //!   plus the degraded-mode table, the 2-D core × memory-bus frontier,
-//!   and the rack × oversubscription frontier.
+//!   the rack × oversubscription frontier, and the churn-vs-throughput
+//!   frontier.
 //! * [`sweep`] — parallel scenario-sweep engine: Cartesian design-space
 //!   grids (cores × write path × LZO × workload × racks ×
-//!   oversubscription × memory bus × fault axes: `mtbf`,
-//!   `straggler_frac`, whole-rack crash times, speculation on/off), a
-//!   multithreaded work-queue runner (one `sim::Engine` per thread),
-//!   and the core-count frontier analysis generalizing the paper's §5
+//!   oversubscription × memory bus × fault/lifecycle axes: `mtbf`,
+//!   `straggler_frac`, whole-rack crash times, decommissions, re-join
+//!   delays, balancer thresholds, speculation on/off), a multithreaded
+//!   work-queue runner (one `sim::Engine` per thread), and the
+//!   core-count frontier analysis generalizing the paper's §5
 //!   four-core conclusion (`amdahl-hadoop sweep`).
+//!
+//! `ARCHITECTURE.md` at the repository root maps these subsystems, the
+//! node-lifecycle state machine, and the determinism contract every PR
+//! must preserve.
+
+#![warn(missing_docs)]
+#![warn(rustdoc::broken_intra_doc_links)]
 
 pub mod amdahl;
 pub mod cluster;

@@ -14,10 +14,14 @@
 //!                      [--racks 1,3] [--oversub 1,4]
 //!                      [--membus 1300,2600] [--mtbf 600] [--stragglers 0.25]
 //!                      [--slowdown 0.4] [--spec]
+//!                      [--rejoin 120] [--decommission 30]
+//!                      [--balancer-threshold 0.1] [--balancer-bandwidth 1]
 //!                      [--baseline old.json] [--out BENCH_sweep.json] [--quiet]
 //! amdahl-hadoop faults [--workload search|stat|dfsio-write|dfsio-read]
 //!                      [--mtbf 600] [--stragglers 0.25] [--slowdown 0.4]
 //!                      [--racks 3] [--oversub 4] [--rack-crash 20]
+//!                      [--rejoin 120] [--decommission 30]
+//!                      [--balancer-threshold 0.1] [--balancer-bandwidth 1]
 //!                      [--spec] [--nodes 9] [--cores 2] [--threads N]
 //! ```
 //!
@@ -33,13 +37,19 @@
 //! counts and ToR oversubscription ratios) add multi-rack topologies
 //! and print the rack × oversubscription frontier; `--mtbf` /
 //! `--stragglers` / `--spec` add degraded-mode scenarios next to their
-//! fault-free twins and print the degraded-mode table. With none of
-//! those flags the output is byte-identical to a fault-free build.
+//! fault-free twins and print the degraded-mode table; `--rejoin` /
+//! `--decommission` / `--balancer-threshold` add the node-lifecycle
+//! axes (crash → re-join churn, graceful drains, steady-state
+//! rebalancing) and print the churn-vs-throughput frontier. With none
+//! of those flags the output is byte-identical to a fault-free build.
 //!
 //! `faults` runs one workload fault-free and under a seeded injection
 //! plan (crashes by MTBF, CPU stragglers, whole-rack failures via
-//! `--racks N --rack-crash T`, optional speculative execution) and
-//! prints the degraded-mode comparison.
+//! `--racks N --rack-crash T`, graceful decommissions via
+//! `--decommission T`, re-joins via `--rejoin D`, the background
+//! balancer via `--balancer-threshold F`, optional speculative
+//! execution) and prints the degraded-mode comparison plus the churn
+//! frontier.
 //!
 //! Common options: `--seed N` (default 42), `--scale F` (fraction of the
 //! paper's 25 GB dataset, default 0.002), `--kernels` (load the AOT
@@ -205,6 +215,31 @@ fn main() -> anyhow::Result<()> {
                     grid.stragglers = vec![0.0, frac];
                 }
             }
+            // Lifecycle axes: crash → re-join delay and the background
+            // balancer threshold. Each expands next to its default so
+            // every churn scenario has a twin.
+            if let Some(d) = args.get("rejoin") {
+                let delay: f64 = d.parse()?;
+                anyhow::ensure!(delay >= 0.0, "--rejoin is a delay in seconds >= 0");
+                anyhow::ensure!(
+                    args.get("mtbf").is_some() || args.get("decommission").is_some(),
+                    "--rejoin needs a death axis (--mtbf or --decommission)"
+                );
+                grid.rejoin = vec![None, Some(delay)];
+            }
+            if let Some(t) = args.get("decommission") {
+                let at: f64 = t.parse()?;
+                anyhow::ensure!(at >= 0.0, "--decommission is a simulated second >= 0");
+                grid.decommission_at = vec![None, Some(at)];
+            }
+            if let Some(t) = args.get("balancer-threshold") {
+                let thr: f64 = t.parse()?;
+                anyhow::ensure!(
+                    thr > 0.0 && thr < 1.0,
+                    "--balancer-threshold is a fraction in (0, 1)"
+                );
+                grid.balancer = vec![None, Some(thr)];
+            }
             if args.flag("spec") {
                 grid.speculation = vec![false, true];
             }
@@ -214,6 +249,7 @@ fn main() -> anyhow::Result<()> {
                 dfsio_bytes_per_worker: args.get_f64("gb", 0.125)? * 1024.0 * MIB,
                 dfsio_workers: args.get_usize("workers", 4)?,
                 straggler_slowdown: args.get_f64("slowdown", 0.4)?,
+                balancer_bandwidth_bps: args.get_f64("balancer-bandwidth", 1.0)? * MIB,
                 solver,
                 progress: !args.flag("quiet"),
                 ..Default::default()
@@ -247,6 +283,10 @@ fn main() -> anyhow::Result<()> {
             let degraded = results.degraded_rows();
             if !degraded.is_empty() {
                 print!("{}", report::render_degraded(&degraded));
+            }
+            let churn = results.churn_frontier();
+            if !churn.is_empty() {
+                print!("{}", report::render_churn(&churn));
             }
             if let Some(text) = baseline_text {
                 let cmp = amdahl_hadoop::sweep::compare_baseline(
@@ -310,6 +350,32 @@ fn main() -> anyhow::Result<()> {
                 }
                 grid.rack_crash_at = vec![None, Some(at)];
             }
+            // Lifecycle: graceful decommission of the highest slave,
+            // crash/decommission → re-join churn, and the background
+            // rack-aware balancer.
+            if let Some(t) = args.get("decommission") {
+                let at: f64 = t.parse()?;
+                anyhow::ensure!(at >= 0.0, "--decommission is a simulated second >= 0");
+                // Like --rack-crash: an explicit --mtbf is honored, the
+                // default axis is dropped to isolate the drain.
+                if args.get("mtbf").is_none() && args.get("rack-crash").is_none() {
+                    grid.mtbf = vec![None];
+                }
+                grid.decommission_at = vec![None, Some(at)];
+            }
+            if let Some(d) = args.get("rejoin") {
+                let delay: f64 = d.parse()?;
+                anyhow::ensure!(delay >= 0.0, "--rejoin is a delay in seconds >= 0");
+                grid.rejoin = vec![None, Some(delay)];
+            }
+            if let Some(t) = args.get("balancer-threshold") {
+                let thr: f64 = t.parse()?;
+                anyhow::ensure!(
+                    thr > 0.0 && thr < 1.0,
+                    "--balancer-threshold is a fraction in (0, 1)"
+                );
+                grid.balancer = vec![None, Some(thr)];
+            }
             if args.flag("spec") {
                 grid.speculation = vec![false, true];
             }
@@ -319,6 +385,7 @@ fn main() -> anyhow::Result<()> {
                 dfsio_bytes_per_worker: args.get_f64("gb", 0.125)? * 1024.0 * MIB,
                 dfsio_workers: args.get_usize("workers", 4)?,
                 straggler_slowdown: args.get_f64("slowdown", 0.4)?,
+                balancer_bandwidth_bps: args.get_f64("balancer-bandwidth", 1.0)? * MIB,
                 progress: !args.flag("quiet"),
                 ..Default::default()
             };
@@ -331,6 +398,10 @@ fn main() -> anyhow::Result<()> {
             );
             let results = amdahl_hadoop::sweep::run_sweep(&grid, &opts);
             print!("{}", report::render_degraded(&results.degraded_rows()));
+            let churn = results.churn_frontier();
+            if !churn.is_empty() {
+                print!("{}", report::render_churn(&churn));
+            }
             for r in &results.records {
                 if let Some(f) = &r.faults {
                     println!(
@@ -353,6 +424,24 @@ fn main() -> anyhow::Result<()> {
                         f.reduces_requeued,
                         f.blocks_lost
                     );
+                    if f.decommissions > 0 || f.recommissions > 0 || f.balancer_moves_started > 0
+                    {
+                        println!(
+                            "{}: {} decommission(s), {} recommission(s) \
+                             ({} tracker(s) re-registered, {} block(s) restored by report, \
+                             {} excess cop(ies) dropped), {} balancer move(s) \
+                             ({:.1} MB rebalanced, {:.0} J)",
+                            r.id,
+                            f.decommissions,
+                            f.recommissions,
+                            f.trackers_rejoined,
+                            f.blocks_restored_on_rejoin,
+                            f.excess_replicas_dropped,
+                            f.balancer_moves_done,
+                            f.balance_bytes / MIB,
+                            r.balance_joules
+                        );
+                    }
                 }
             }
         }

@@ -60,12 +60,17 @@ pub(crate) fn speculation_due(elapsed: f64, mean_done: f64) -> bool {
 
 /// A MapReduce job description.
 pub struct JobSpec {
+    /// Job name (diagnostics only).
     pub name: String,
     /// HDFS input files; each block becomes one split.
     pub input_files: Vec<String>,
+    /// The map function's byte/CPU cost model.
     pub map: Rc<dyn MapFn>,
+    /// The reduce function's byte/CPU cost model.
     pub reduce: Rc<RefCell<dyn ReduceFn>>,
+    /// Number of reduce tasks.
     pub n_reducers: usize,
+    /// Hadoop configuration the job runs under.
     pub conf: HadoopConf,
     /// Usage-class prefix for map tasks (`"mapper"`).
     pub map_class: String,
@@ -91,13 +96,21 @@ impl JobSpec {
 /// Completed-job statistics.
 #[derive(Debug, Clone)]
 pub struct JobResult {
+    /// Total job wall time, simulated seconds.
     pub duration: f64,
+    /// Map-phase wall time, simulated seconds.
     pub map_phase: f64,
+    /// Reduce-phase wall time, simulated seconds.
     pub reduce_phase: f64,
+    /// Map tasks run.
     pub map_tasks: usize,
+    /// Reduce tasks run.
     pub reduce_tasks: usize,
+    /// Logical input bytes read.
     pub input_bytes: f64,
+    /// Intermediate (map-output) bytes produced.
     pub map_output_bytes: f64,
+    /// Bytes written to HDFS by the reducers.
     pub hdfs_output_bytes: f64,
     /// Fraction of map tasks that read their split from the local node.
     pub map_locality: f64,
@@ -268,6 +281,23 @@ pub fn run_job(
         world.borrow_mut().faults.register(Box::new(move |engine, dead| {
             match hstate.upgrade() {
                 Some(s) => on_node_crash(engine, &s, dead),
+                None => false,
+            }
+        }));
+        // TaskTracker re-registration on node re-join (un-blacklisting),
+        // and the graceful-drain reaction (stop scheduling; running
+        // attempts finish). Same Weak-handle lifetime rules.
+        let rstate = Rc::downgrade(&state);
+        world.borrow_mut().faults.register_rejoin(Box::new(move |engine, node| {
+            match rstate.upgrade() {
+                Some(s) => on_node_rejoin(engine, &s, node),
+                None => false,
+            }
+        }));
+        let dstate = Rc::downgrade(&state);
+        world.borrow_mut().faults.register_drain(Box::new(move |engine, node| {
+            match dstate.upgrade() {
+                Some(s) => on_node_drain(engine, &s, node),
                 None => false,
             }
         }));
@@ -657,6 +687,47 @@ fn on_node_crash(engine: &mut Engine, state: &Rc<RefCell<JobState>>, dead: NodeI
         w.faults.stats.wasted_task_seconds += wasted_s;
     }
     pump(engine, state.clone());
+    true
+}
+
+/// Re-join reaction: the recommissioned node's TaskTracker re-registers
+/// with the JobTracker and its slots come back (un-blacklisting). Slot
+/// counts discount attempts still running there — relevant when a
+/// cancelled decommission re-admits a tracker whose attempts never
+/// stopped. Returns false (deregister) once the job has completed.
+fn on_node_rejoin(engine: &mut Engine, state: &Rc<RefCell<JobState>>, node: NodeId) -> bool {
+    let world = {
+        let mut s = state.borrow_mut();
+        if s.on_done.is_none() {
+            return false;
+        }
+        if s.free_map_slots.contains_key(&node) {
+            return true; // already registered (e.g. cancelled drain)
+        }
+        let running_maps = s.map_attempts.iter().filter(|a| a.node == node).count();
+        let running_reduces = s.reduce_attempts.iter().filter(|a| a.node == node).count();
+        let map_slots = s.spec.conf.map_slots.saturating_sub(running_maps);
+        let reduce_slots = s.spec.conf.reduce_slots.saturating_sub(running_reduces);
+        s.free_map_slots.insert(node, map_slots);
+        s.free_reduce_slots.insert(node, reduce_slots);
+        s.world.clone()
+    };
+    world.borrow_mut().faults.stats.trackers_rejoined += 1;
+    pump(engine, state.clone());
+    true
+}
+
+/// Drain reaction (graceful decommission): the tracker's free slots
+/// vanish so nothing new schedules onto it, but — unlike a crash —
+/// running attempts keep going and commit normally. Returns false
+/// (deregister) once the job has completed.
+fn on_node_drain(_engine: &mut Engine, state: &Rc<RefCell<JobState>>, node: NodeId) -> bool {
+    let mut s = state.borrow_mut();
+    if s.on_done.is_none() {
+        return false;
+    }
+    s.free_map_slots.remove(&node);
+    s.free_reduce_slots.remove(&node);
     true
 }
 

@@ -27,14 +27,17 @@ use crate::sim::{Engine, FlowSpec};
 pub struct TaskToken(Rc<Cell<bool>>);
 
 impl TaskToken {
+    /// A fresh, live token.
     pub fn new() -> TaskToken {
         TaskToken::default()
     }
 
+    /// Kill the attempt at its next phase boundary.
     pub fn cancel(&self) {
         self.0.set(true);
     }
 
+    /// Has the attempt been killed?
     pub fn cancelled(&self) -> bool {
         self.0.get()
     }
@@ -52,14 +55,17 @@ impl TaskToken {
 pub struct PhaseFlag(Rc<Cell<bool>>);
 
 impl PhaseFlag {
+    /// A fresh, unset flag.
     pub fn new() -> PhaseFlag {
         PhaseFlag::default()
     }
 
+    /// Raise the flag.
     pub fn set(&self) {
         self.0.set(true);
     }
 
+    /// Has the flag been raised?
     pub fn is_set(&self) -> bool {
         self.0.get()
     }
@@ -68,9 +74,13 @@ impl PhaseFlag {
 /// One input split (= one HDFS block, as in stock Hadoop).
 #[derive(Debug, Clone)]
 pub struct SplitMeta {
+    /// HDFS input file the split reads.
     pub file: String,
+    /// Block index inside the file.
     pub block_idx: usize,
+    /// Split size, bytes.
     pub bytes: f64,
+    /// Estimated input records.
     pub records: f64,
     /// Replica locations (for locality-aware scheduling).
     pub replicas: Vec<NodeId>,
@@ -81,6 +91,7 @@ pub struct SplitMeta {
 pub struct MapOutput {
     /// Serialized map-output bytes (key+value).
     pub bytes: f64,
+    /// Output records.
     pub records: f64,
     /// Application CPU beyond the framework costs, core-seconds.
     pub app_cpu: f64,
@@ -88,14 +99,18 @@ pub struct MapOutput {
 
 /// Application map logic: split metadata → output volume + app CPU.
 pub trait MapFn {
+    /// Produce the split's output volume and application CPU cost.
     fn run(&self, split: &SplitMeta) -> MapOutput;
 }
 
 /// What one reducer receives.
 #[derive(Debug, Clone)]
 pub struct ReduceInput {
+    /// Reducer index.
     pub reducer: usize,
+    /// Total shuffled bytes this reducer consumes.
     pub bytes: f64,
+    /// Estimated input records.
     pub records: f64,
 }
 
@@ -103,12 +118,15 @@ pub struct ReduceInput {
 /// real kernel execution).
 #[derive(Debug, Clone)]
 pub struct ReduceOutput {
+    /// Bytes the reducer writes to HDFS.
     pub hdfs_bytes: f64,
+    /// Application CPU beyond the framework costs, core-seconds.
     pub app_cpu: f64,
 }
 
 /// Application reduce logic.
 pub trait ReduceFn {
+    /// Consume one reducer's input and report output volume + CPU.
     fn run(&mut self, input: &ReduceInput) -> ReduceOutput;
 }
 

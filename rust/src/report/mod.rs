@@ -23,9 +23,13 @@ use crate::zones::{run_app, App, RunOutcome, ZonesConfig};
 /// One bar of Fig 1: a single-threaded 100×64 MB file read or write.
 #[derive(Debug, Clone)]
 pub struct Fig1Row {
+    /// Device under test.
     pub disk: DiskKind,
+    /// Write (vs read) benchmark.
     pub write: bool,
+    /// Direct I/O (vs page-cache buffered).
     pub direct: bool,
+    /// Measured throughput, MB/s.
     pub mbps: f64,
     /// CPU of the user thread, % of one core (paper convention).
     pub cpu_user_pct: f64,
@@ -71,6 +75,7 @@ pub fn fig1(seed: u64) -> Vec<Fig1Row> {
     rows
 }
 
+/// Render Fig 1 as the paper lays it out.
 pub fn render_fig1(rows: &[Fig1Row]) -> String {
     let mut s = String::from(
         "Fig 1: disk I/O performance and CPU utilization (one blade)\n\
@@ -93,10 +98,15 @@ pub fn render_fig1(rows: &[Fig1Row]) -> String {
 // -------------------------------------------------------------- Table 2
 
 #[derive(Debug, Clone)]
+/// One row of Table 2 (local vs remote TCP).
 pub struct Table2Row {
+    /// "local" or "remote".
     pub traffic: &'static str,
+    /// Measured throughput, MB/s.
     pub mbps: f64,
+    /// Sender-side CPU, % of one core.
     pub cpu_send_pct: f64,
+    /// Receiver-side CPU, % of one core.
     pub cpu_recv_pct: f64,
 }
 
@@ -141,6 +151,7 @@ pub fn table2(seed: u64) -> Vec<Table2Row> {
     vec![local, remote]
 }
 
+/// Render Table 2 as the paper lays it out.
 pub fn render_table2(rows: &[Table2Row]) -> String {
     let mut s = String::from(
         "Table 2: network I/O on the Amdahl blades\n\
@@ -158,11 +169,15 @@ pub fn render_table2(rows: &[Table2Row]) -> String {
 // ---------------------------------------------------------------- Fig 2
 
 #[derive(Debug, Clone)]
+/// One bar of Fig 2 (TestDFSIO throughput per node).
 pub struct Fig2Row {
+    /// Device under test.
     pub disk: DiskKind,
+    /// Concurrent workers per node.
     pub workers: usize,
     /// Write: direct I/O? Read: local reads?
     pub variant: bool,
+    /// Measured per-node throughput, MB/s.
     pub per_node_mbps: f64,
 }
 
@@ -197,6 +212,7 @@ pub fn fig2b(seed: u64, bytes_per_reader: f64) -> Vec<Fig2Row> {
     rows
 }
 
+/// Render Fig 2(a) (`write`) or Fig 2(b) as the paper lays it out.
 pub fn render_fig2(rows: &[Fig2Row], write: bool) -> String {
     let mut s = if write {
         String::from("Fig 2(a): HDFS write MB/s per node (TestDFSIO, r=3)\ndisk              mode    1 mapper  2 mappers  3 mappers\n")
@@ -235,9 +251,13 @@ pub fn render_fig2(rows: &[Fig2Row], write: bool) -> String {
 // ---------------------------------------------------------------- Fig 3
 
 #[derive(Debug, Clone)]
+/// One bar of Fig 3 (Neighbor Searching under the §3.4 fixes).
 pub struct Fig3Row {
+    /// Configuration label.
     pub label: &'static str,
+    /// `dfs.replication` of the run.
     pub replication: usize,
+    /// End-to-end runtime, simulated seconds.
     pub seconds: f64,
 }
 
@@ -285,6 +305,7 @@ pub fn fig3(seed: u64, scale: f64) -> Vec<Fig3Row> {
     rows
 }
 
+/// Render Fig 3 as the paper lays it out.
 pub fn render_fig3(rows: &[Fig3Row]) -> String {
     let mut s = String::from(
         "Fig 3: Neighbor Searching improvements (simulated seconds, scaled dataset)\n\
@@ -305,6 +326,7 @@ pub fn render_fig3(rows: &[Fig3Row]) -> String {
 
 // -------------------------------------------------------------- Table 3
 
+/// Table 3: end-to-end runtimes on both testbeds.
 #[derive(Debug, Clone)]
 pub struct Table3 {
     /// Seconds for [θ=60, θ=30, θ=15, stat] on the Amdahl cluster.
@@ -312,7 +334,9 @@ pub struct Table3 {
     /// Seconds for [θ=30, θ=15, stat] on the OCC cluster (θ=60 does not
     /// fit its disks — N/A in the paper too).
     pub occ: [f64; 3],
+    /// Full outcomes behind the Amdahl cells.
     pub outcomes_amdahl: Vec<RunOutcome>,
+    /// Full outcomes behind the OCC cells.
     pub outcomes_occ: Vec<RunOutcome>,
 }
 
@@ -363,6 +387,7 @@ pub fn table3(seed: u64, scale: f64, kernels: Option<Rc<crate::runtime::PairKern
     }
 }
 
+/// Render Table 3 as the paper lays it out.
 pub fn render_table3(t: &Table3) -> String {
     format!(
         "Table 3: running time in seconds (simulated, scaled dataset)\n\
@@ -504,6 +529,7 @@ fn run_app_with_stats(conf: &HadoopConf, zcfg: &ZonesConfig, app: App) -> AppSta
     }
 }
 
+/// Render Table 4 as the paper lays it out.
 pub fn render_table4(rows: &[AmdahlRow]) -> String {
     let mut s = String::from(
         "Table 4: Amdahl numbers for Hadoop tasks\n\
@@ -526,6 +552,7 @@ pub fn render_table4(rows: &[AmdahlRow]) -> String {
 // ------------------------------------------------------------ §3.6 energy
 
 #[derive(Debug, Clone)]
+/// The §3.6 energy-efficiency headline ratios.
 pub struct EnergyComparison {
     /// OCC/Amdahl energy ratio, data-intensive (θ=30″; paper: 7.7×).
     pub search_ratio: f64,
@@ -545,6 +572,7 @@ pub fn energy(t3: &Table3) -> EnergyComparison {
     }
 }
 
+/// Render the §3.6 comparison.
 pub fn render_energy(e: &EnergyComparison) -> String {
     format!(
         "§3.6 energy efficiency (OCC energy / Amdahl energy, same work)\n\
@@ -701,6 +729,35 @@ pub fn render_rack_frontier(cells: &[crate::sweep::RackFrontierCell]) -> String 
         s.push('\n');
     }
     s.push_str("cell = MB/s per node / bottleneck (c=cpu d=disk n=net m=membus)\n");
+    s
+}
+
+/// Render the churn-vs-throughput frontier: every scenario that cycled
+/// nodes (crash / decommission → re-join) or ran the balancer, next to
+/// its fault-free twin — how much throughput a churn regime retains and
+/// what the repair + rebalance traffic costs in joules.
+pub fn render_churn(rows: &[crate::sweep::ChurnRow]) -> String {
+    if rows.is_empty() {
+        return String::from("churn frontier: no churning scenarios in this sweep\n");
+    }
+    let mut s = String::from(
+        "churn-vs-throughput frontier (vs fault-free twin)\n\
+         scenario                                               crash  drain  rejoin  moves   MB/s/node  retention  recov-J  bal-J\n",
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "{:<54} {:>5}  {:>5}  {:>6}  {:>5}   {:>9.1}  {:>8.1}%  {:>7.0}  {:>5.0}\n",
+            r.id,
+            r.crashes,
+            r.decommissions,
+            r.recommissions,
+            r.balancer_moves,
+            r.per_node_mbps,
+            r.retention * 100.0,
+            r.recovery_joules,
+            r.balance_joules,
+        ));
+    }
     s
 }
 

@@ -8,6 +8,10 @@
 //! `PairKernels::load`. Every caller in the crate already handles that
 //! path (`--kernels` is opt-in; tests skip when artifacts are missing).
 
+// The stub mirrors an external crate's API one-to-one; per-item docs
+// would only restate the real `xla` crate's documentation.
+#![allow(missing_docs)]
+
 /// Error type standing in for `xla::Error`.
 #[derive(Debug)]
 pub struct Error(String);

@@ -10,7 +10,7 @@
 //! graph; only flows inside one component can influence each other's
 //! max-min rates. The engine maintains a per-resource index of live flows
 //! (`res_flows`) and, on every flow-set or capacity change, marks the
-//! changed flows/resources *dirty*. The next [`Engine::reschedule`] walks
+//! changed flows/resources *dirty*. The next `Engine::reschedule` walks
 //! the sharing graph from the dirty seeds, re-solves exactly the affected
 //! component(s), and re-pushes predicted-completion events only for flows
 //! whose rate actually moved — untouched components keep their rates,
@@ -85,15 +85,19 @@ impl SolverMode {
 /// working: `write_test_on(preset, 42, ...)`.
 #[derive(Debug, Clone, Copy)]
 pub struct SimConfig {
+    /// Engine RNG seed.
     pub seed: u64,
+    /// Rate-solver mode.
     pub solver: SolverMode,
 }
 
 impl SimConfig {
+    /// Config with `seed` and the default incremental solver.
     pub fn new(seed: u64) -> Self {
         SimConfig { seed, solver: SolverMode::Incremental }
     }
 
+    /// Override the solver mode.
     pub fn with_solver(mut self, solver: SolverMode) -> Self {
         self.solver = solver;
         self
@@ -215,6 +219,7 @@ pub struct Engine {
 }
 
 impl Engine {
+    /// Engine with `seed` and the default incremental solver.
     pub fn new(seed: u64) -> Self {
         Engine::from_config(SimConfig::new(seed))
     }
@@ -225,6 +230,7 @@ impl Engine {
         Engine::from_config(SimConfig::new(seed).with_solver(mode))
     }
 
+    /// Engine from a full [`SimConfig`].
     pub fn from_config(cfg: SimConfig) -> Self {
         Engine {
             now: 0.0,

@@ -32,8 +32,11 @@ use super::resource::{Resource, ResourceId, UsageClass};
 /// One demand entry: progressing 1 unit consumes `coeff` units of `resource`.
 #[derive(Debug, Clone, Copy)]
 pub struct Demand {
+    /// Resource the demand lands on.
     pub resource: ResourceId,
+    /// Resource units consumed per flow unit.
     pub coeff: f64,
+    /// Usage class the consumption is attributed to.
     pub class: UsageClass,
     /// Serial stage this demand belongs to (None = fully pipelined).
     pub stage: Option<SerialStage>,
@@ -58,6 +61,7 @@ pub struct FlowSpec {
 }
 
 impl FlowSpec {
+    /// A flow of `total` units with a debug label and no demands yet.
     pub fn new(total: f64, label: impl Into<String>) -> Self {
         assert!(total > 0.0, "flow total must be > 0");
         FlowSpec {

@@ -14,6 +14,7 @@ use std::collections::HashMap;
 pub struct ResourceId(pub(crate) usize);
 
 impl ResourceId {
+    /// The raw index (engine-internal resource table position).
     pub fn index(self) -> usize {
         self.0
     }
@@ -37,6 +38,7 @@ pub struct ClassTable {
 }
 
 impl ClassTable {
+    /// Intern `name`, returning its stable class id.
     pub fn intern(&mut self, name: &str) -> UsageClass {
         if let Some(&c) = self.by_name.get(name) {
             return c;
@@ -47,18 +49,22 @@ impl ClassTable {
         id
     }
 
+    /// The name a class id was interned under.
     pub fn name(&self, c: UsageClass) -> &str {
         &self.names[c.0 as usize]
     }
 
+    /// The class id of `name`, if interned.
     pub fn lookup(&self, name: &str) -> Option<UsageClass> {
         self.by_name.get(name).copied()
     }
 
+    /// Number of interned classes.
     pub fn len(&self) -> usize {
         self.names.len()
     }
 
+    /// True when no class was interned yet.
     pub fn is_empty(&self) -> bool {
         self.names.is_empty()
     }
@@ -67,6 +73,7 @@ impl ClassTable {
 /// A registered resource: capacity plus integrated usage accounting.
 #[derive(Debug)]
 pub struct Resource {
+    /// Debug name (`n3.disk`, `rack1.up`, ...).
     pub name: String,
     /// Capacity in units/second (core-units for CPUs, bytes/s for devices).
     pub capacity: f64,
@@ -83,6 +90,7 @@ pub struct Resource {
 }
 
 impl Resource {
+    /// A resource with `capacity` units/s and zeroed accounting.
     pub fn new(name: &str, capacity: f64) -> Self {
         assert!(capacity > 0.0, "resource {name} must have capacity > 0");
         Resource {

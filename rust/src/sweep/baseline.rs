@@ -17,15 +17,20 @@ pub const DEFAULT_TOLERANCE: f64 = 0.05;
 /// One scenario's throughput as read from a baseline file.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BaselineEntry {
+    /// Stable scenario id.
     pub id: String,
+    /// Recorded per-node throughput, MB/s.
     pub per_node_mbps: f64,
 }
 
 /// One flagged regression.
 #[derive(Debug, Clone)]
 pub struct Regression {
+    /// Stable scenario id.
     pub id: String,
+    /// Throughput in the baseline file, MB/s.
     pub baseline_mbps: f64,
+    /// Throughput in the current run, MB/s.
     pub current_mbps: f64,
     /// Relative drop, e.g. 0.12 = 12% slower than baseline.
     pub drop_frac: f64,
@@ -50,10 +55,12 @@ pub struct BaselineComparison {
     pub skipped_zero_baseline: usize,
     /// Scenarios whose throughput dropped beyond the tolerance.
     pub regressions: Vec<Regression>,
+    /// Per-scenario drop fraction that counts as a regression.
     pub tolerance: f64,
 }
 
 impl BaselineComparison {
+    /// Did any scenario regress beyond the tolerance?
     pub fn has_regressions(&self) -> bool {
         !self.regressions.is_empty()
     }

@@ -15,7 +15,7 @@
 //! keep lining up.
 
 use crate::conf::{ClusterPreset, HadoopConf};
-use crate::faults::{InjectionPlan, RackCrashSpec};
+use crate::faults::{BalancerConfig, DecommissionSpec, InjectionPlan, RackCrashSpec};
 use crate::hw::MIB;
 
 /// Cluster hardware family (the paper's two testbeds).
@@ -31,8 +31,10 @@ pub enum ClusterFamily {
 }
 
 impl ClusterFamily {
+    /// Every sweepable family.
     pub const ALL: [ClusterFamily; 2] = [ClusterFamily::Amdahl, ClusterFamily::Occ];
 
+    /// Stable key used in scenario ids and JSON.
     pub fn key(self) -> &'static str {
         match self {
             ClusterFamily::Amdahl => "amdahl",
@@ -54,9 +56,11 @@ pub enum WritePath {
 }
 
 impl WritePath {
+    /// Every sweepable write path.
     pub const ALL: [WritePath; 3] =
         [WritePath::BufferedJni, WritePath::OutputBuffered, WritePath::DirectIo];
 
+    /// Stable key used in scenario ids and JSON.
     pub fn key(self) -> &'static str {
         match self {
             WritePath::BufferedJni => "jni",
@@ -101,9 +105,11 @@ pub enum Workload {
 }
 
 impl Workload {
+    /// Every sweepable workload.
     pub const ALL: [Workload; 4] =
         [Workload::DfsioWrite, Workload::DfsioRead, Workload::Search, Workload::Stat];
 
+    /// Stable key used in scenario ids and JSON.
     pub fn key(self) -> &'static str {
         match self {
             Workload::DfsioWrite => "dfsio-write",
@@ -119,13 +125,17 @@ impl Workload {
 pub struct Scenario {
     /// Stable id: a pure function of the axis values.
     pub id: String,
+    /// Cluster hardware family.
     pub family: ClusterFamily,
     /// Total node count including the master (Amdahl family only).
     pub nodes: usize,
     /// Atom cores per blade (Amdahl family only).
     pub cores: usize,
+    /// HDFS write-path variant.
     pub write_path: WritePath,
+    /// LZO compression of reducer output.
     pub lzo: bool,
+    /// Workload the scenario runs.
     pub workload: Workload,
     /// Rack count the cluster is partitioned into (1 = the flat paper
     /// topology; no uplink resources, historical ids and seeds).
@@ -143,6 +153,17 @@ pub struct Scenario {
     pub mtbf: Option<f64>,
     /// Fraction of slaves that straggle (0.0 = none).
     pub straggler_frac: f64,
+    /// Graceful-decommission axis: the highest-index slave starts
+    /// draining at this simulated second (None = no decommission).
+    pub decommission_at: Option<f64>,
+    /// Churn axis: every scheduled death (crash, rack crash,
+    /// decommission) is followed by a recommission of the same node(s)
+    /// this many seconds later. Only expanded next to a death axis.
+    pub rejoin_delay: Option<f64>,
+    /// Background rack-aware balancer threshold (fraction of the mean;
+    /// None = no balancer). Bandwidth comes from
+    /// [`crate::sweep::SweepOptions::balancer_bandwidth_bps`].
+    pub balancer_threshold: Option<f64>,
     /// Speculative execution of straggling maps.
     pub speculation: bool,
     /// Deterministic per-scenario seed derived from the grid's base seed
@@ -189,6 +210,16 @@ impl Scenario {
                 }
                 _ => Vec::new(),
             },
+            decommissions: match self.decommission_at {
+                // The drained node is the highest-index slave (never
+                // the master; disjoint from low-index workloads).
+                Some(at) => vec![DecommissionSpec { node: self.nodes - 1, at }],
+                None => Vec::new(),
+            },
+            rejoin_after_s: self.rejoin_delay,
+            balancer: self
+                .balancer_threshold
+                .map(|threshold| BalancerConfig { threshold, ..BalancerConfig::default() }),
             ..InjectionPlan::empty()
         }
     }
@@ -204,10 +235,13 @@ impl Scenario {
 /// Cartesian product.
 #[derive(Debug, Clone)]
 pub struct SweepGrid {
+    /// Base seed every per-scenario seed derives from.
     pub base_seed: u64,
+    /// Cluster families to sweep.
     pub families: Vec<ClusterFamily>,
     /// Total node counts (master + slaves); every entry must be ≥ 2.
     pub nodes: Vec<usize>,
+    /// Atom cores per blade.
     pub cores: Vec<usize>,
     /// Rack counts (1 = flat). Single-rack entries ignore the oversub
     /// and rack-crash axes (they would be bit-identical twins).
@@ -217,8 +251,11 @@ pub struct SweepGrid {
     /// Whole-rack crash times (None = fault-free), applied to
     /// `racks > 1`.
     pub rack_crash_at: Vec<Option<f64>>,
+    /// HDFS write-path variants.
     pub write_paths: Vec<WritePath>,
+    /// LZO on/off values.
     pub lzo: Vec<bool>,
+    /// Workloads to run.
     pub workloads: Vec<Workload>,
     /// Memory-bus copy-capacity overrides, bytes/s (None = preset).
     pub membus: Vec<Option<f64>>,
@@ -226,6 +263,15 @@ pub struct SweepGrid {
     pub mtbf: Vec<Option<f64>>,
     /// Straggler fractions (0.0 = none).
     pub stragglers: Vec<f64>,
+    /// Graceful-decommission times (None = no decommission).
+    pub decommission_at: Vec<Option<f64>>,
+    /// Crash → re-join delays (None = the dead stay dead). A `Some`
+    /// value only expands next to a death axis (`mtbf`,
+    /// `rack_crash_at`, or `decommission_at`) — alone it would
+    /// re-simulate bit-identical twins under different ids.
+    pub rejoin: Vec<Option<f64>>,
+    /// Balancer thresholds (None = no balancer).
+    pub balancer: Vec<Option<f64>>,
     /// Speculative-execution settings.
     pub speculation: Vec<bool>,
 }
@@ -249,6 +295,9 @@ impl SweepGrid {
             membus: vec![None],
             mtbf: vec![None],
             stragglers: vec![0.0],
+            decommission_at: vec![None],
+            rejoin: vec![None],
+            balancer: vec![None],
             speculation: vec![false],
         }
     }
@@ -266,19 +315,63 @@ impl SweepGrid {
         }
     }
 
-    /// Topology combinations per `racks` entry: single-rack entries
-    /// collapse the oversub and rack-crash axes to one value (their
-    /// variants would be bit-identical re-simulations).
+    /// Rejoin axis values applicable next to the given death axes: a
+    /// `Some` rejoin delay with nothing scheduled to die would expand a
+    /// bit-identical twin under a different id, so it is skipped.
+    fn rejoin_applicable(
+        mtbf: Option<f64>,
+        rack_crash_at: Option<f64>,
+        decommission_at: Option<f64>,
+        rejoin: Option<f64>,
+    ) -> bool {
+        rejoin.is_none()
+            || mtbf.is_some()
+            || rack_crash_at.is_some()
+            || decommission_at.is_some()
+    }
+
+    /// Valid (mtbf × decommission × rejoin) combinations for one
+    /// rack-crash axis value.
+    fn timing_combo_count(&self, rack_crash_at: Option<f64>) -> usize {
+        let mut n = 0usize;
+        for &m in &self.mtbf {
+            for &d in &self.decommission_at {
+                n += self
+                    .rejoin
+                    .iter()
+                    .filter(|&&r| Self::rejoin_applicable(m, rack_crash_at, d, r))
+                    .count();
+            }
+        }
+        n
+    }
+
+    /// Topology × death-timing combinations per `racks` entry:
+    /// single-rack entries collapse the oversub and rack-crash axes to
+    /// one value (their variants would be bit-identical re-simulations),
+    /// and the rejoin axis only expands next to a death axis.
     fn rack_combo_count(&self) -> usize {
         self.racks
             .iter()
-            .map(|&r| if r <= 1 { 1 } else { self.oversub.len() * self.rack_crash_at.len() })
+            .map(|&r| {
+                let (oversubs, rack_crashes): (usize, &[Option<f64>]) = if r <= 1 {
+                    (1, &[None])
+                } else {
+                    (self.oversub.len(), &self.rack_crash_at)
+                };
+                oversubs
+                    * rack_crashes
+                        .iter()
+                        .map(|&rc| self.timing_combo_count(rc))
+                        .sum::<usize>()
+            })
             .sum()
     }
 
     /// Number of scenarios `expand` will produce (axis counts multiply,
-    /// except that dfsio workloads skip `speculation: true` and
-    /// single-rack entries skip the oversub / rack-crash variants).
+    /// except that dfsio workloads skip `speculation: true`, single-rack
+    /// entries skip the oversub / rack-crash variants, and `Some` rejoin
+    /// values skip combinations with no death axis).
     pub fn len(&self) -> usize {
         let base = self.families.len()
             * self.nodes.len()
@@ -287,11 +380,12 @@ impl SweepGrid {
             * self.write_paths.len()
             * self.lzo.len()
             * self.membus.len()
-            * self.mtbf.len()
-            * self.stragglers.len();
+            * self.stragglers.len()
+            * self.balancer.len();
         base * self.workloads.iter().map(|&w| self.spec_values_for(w)).sum::<usize>()
     }
 
+    /// True when `expand` would produce no scenarios.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -352,49 +446,74 @@ impl SweepGrid {
                         for &membus_bps in &self.membus {
                             for &mtbf in &self.mtbf {
                                 for &straggler_frac in &self.stragglers {
-                                    for &speculation in &self.speculation {
-                                        // Speculation only applies to
-                                        // MapReduce workloads (see
-                                        // `spec_values_for`).
-                                        if speculation
-                                            && matches!(
-                                                workload,
-                                                Workload::DfsioWrite | Workload::DfsioRead
-                                            )
-                                        {
-                                            continue;
+                                    for &decommission_at in &self.decommission_at {
+                                        for &rejoin_delay in &self.rejoin {
+                                            if !Self::rejoin_applicable(
+                                                mtbf,
+                                                rack_crash_at,
+                                                decommission_at,
+                                                rejoin_delay,
+                                            ) {
+                                                continue;
+                                            }
+                                            for &balancer_threshold in &self.balancer {
+                                                for &speculation in &self.speculation {
+                                                    // Speculation only applies to
+                                                    // MapReduce workloads (see
+                                                    // `spec_values_for`).
+                                                    if speculation
+                                                        && matches!(
+                                                            workload,
+                                                            Workload::DfsioWrite
+                                                                | Workload::DfsioRead
+                                                        )
+                                                    {
+                                                        continue;
+                                                    }
+                                                    let mut id = scenario_id(
+                                                        family, nodes, cores, write_path,
+                                                        lzo, workload,
+                                                    );
+                                                    push_axis_suffixes(
+                                                        &mut id,
+                                                        &AxisSuffixes {
+                                                            racks,
+                                                            oversub,
+                                                            membus_bps,
+                                                            mtbf,
+                                                            straggler_frac,
+                                                            decommission_at,
+                                                            rejoin_delay,
+                                                            rack_crash_at,
+                                                            balancer_threshold,
+                                                            speculation,
+                                                        },
+                                                    );
+                                                    let seed =
+                                                        derive_seed(self.base_seed, &id);
+                                                    out.push(Scenario {
+                                                        id,
+                                                        family,
+                                                        nodes,
+                                                        cores,
+                                                        write_path,
+                                                        lzo,
+                                                        workload,
+                                                        racks,
+                                                        oversub,
+                                                        rack_crash_at,
+                                                        membus_bps,
+                                                        mtbf,
+                                                        straggler_frac,
+                                                        decommission_at,
+                                                        rejoin_delay,
+                                                        balancer_threshold,
+                                                        speculation,
+                                                        seed,
+                                                    });
+                                                }
+                                            }
                                         }
-                                        let mut id = scenario_id(
-                                            family, nodes, cores, write_path, lzo, workload,
-                                        );
-                                        push_axis_suffixes(
-                                            &mut id,
-                                            racks,
-                                            oversub,
-                                            membus_bps,
-                                            mtbf,
-                                            straggler_frac,
-                                            rack_crash_at,
-                                            speculation,
-                                        );
-                                        let seed = derive_seed(self.base_seed, &id);
-                                        out.push(Scenario {
-                                            id,
-                                            family,
-                                            nodes,
-                                            cores,
-                                            write_path,
-                                            lzo,
-                                            workload,
-                                            racks,
-                                            oversub,
-                                            rack_crash_at,
-                                            membus_bps,
-                                            mtbf,
-                                            straggler_frac,
-                                            speculation,
-                                            seed,
-                                        });
                                     }
                                 }
                             }
@@ -407,10 +526,26 @@ impl SweepGrid {
 }
 
 /// Stable scenario id, e.g. `amdahl-n9-c4-direct-nolzo-dfsio-write`.
-/// Non-default bus/fault axis values append suffixes
-/// (`-bus2600-mtbf600-strag25-spec`); at the defaults the id keeps its
-/// historical format, so old baselines and fault-free JSON stay
-/// byte-identical.
+/// Non-default bus/fault/lifecycle axis values append suffixes
+/// (`-bus2600-mtbf600-strag25-decomm30-rejoin120-rackdown20-bal10-spec`);
+/// at the defaults the id keeps its historical format, so old baselines
+/// and fault-free JSON stay byte-identical.
+///
+/// The id is a pure function of the axis values — no global state, no
+/// insertion order:
+///
+/// ```
+/// use amdahl_hadoop::sweep::grid::{derive_seed, scenario_id};
+/// use amdahl_hadoop::sweep::{ClusterFamily, Workload, WritePath};
+///
+/// let id = scenario_id(
+///     ClusterFamily::Amdahl, 9, 4, WritePath::DirectIo, false, Workload::DfsioWrite,
+/// );
+/// assert_eq!(id, "amdahl-n9-c4-direct-nolzo-dfsio-write");
+/// // Seeds derive from the id alone, so they survive grid reshapes.
+/// assert_eq!(derive_seed(42, &id), derive_seed(42, &id));
+/// assert_ne!(derive_seed(42, &id), derive_seed(43, &id));
+/// ```
 pub fn scenario_id(
     family: ClusterFamily,
     nodes: usize,
@@ -430,39 +565,53 @@ pub fn scenario_id(
     )
 }
 
-/// Append the non-default topology/bus/fault axis suffixes to a
-/// scenario id.
-#[allow(clippy::too_many_arguments)]
-fn push_axis_suffixes(
-    id: &mut String,
+/// Non-default axis values appended to a scenario id as suffixes.
+struct AxisSuffixes {
     racks: usize,
     oversub: f64,
     membus_bps: Option<f64>,
     mtbf: Option<f64>,
     straggler_frac: f64,
+    decommission_at: Option<f64>,
+    rejoin_delay: Option<f64>,
     rack_crash_at: Option<f64>,
+    balancer_threshold: Option<f64>,
     speculation: bool,
-) {
+}
+
+/// Append the non-default topology/bus/fault/lifecycle axis suffixes to
+/// a scenario id. At the default values nothing is appended, so the id
+/// keeps its historical format and old baselines keep lining up.
+fn push_axis_suffixes(id: &mut String, ax: &AxisSuffixes) {
     use std::fmt::Write as _;
-    if racks > 1 {
-        let _ = write!(id, "-r{racks}");
-        if oversub != 1.0 {
-            let _ = write!(id, "-os{}", fmt_axis(oversub));
+    if ax.racks > 1 {
+        let _ = write!(id, "-r{}", ax.racks);
+        if ax.oversub != 1.0 {
+            let _ = write!(id, "-os{}", fmt_axis(ax.oversub));
         }
     }
-    if let Some(b) = membus_bps {
+    if let Some(b) = ax.membus_bps {
         let _ = write!(id, "-bus{}", (b / MIB).round() as u64);
     }
-    if let Some(m) = mtbf {
+    if let Some(m) = ax.mtbf {
         let _ = write!(id, "-mtbf{}", m.round() as u64);
     }
-    if straggler_frac > 0.0 {
-        let _ = write!(id, "-strag{}", (straggler_frac * 100.0).round() as u64);
+    if ax.straggler_frac > 0.0 {
+        let _ = write!(id, "-strag{}", (ax.straggler_frac * 100.0).round() as u64);
     }
-    if let Some(t) = rack_crash_at {
+    if let Some(t) = ax.decommission_at {
+        let _ = write!(id, "-decomm{}", fmt_axis(t));
+    }
+    if let Some(d) = ax.rejoin_delay {
+        let _ = write!(id, "-rejoin{}", fmt_axis(d));
+    }
+    if let Some(t) = ax.rack_crash_at {
         let _ = write!(id, "-rackdown{}", fmt_axis(t));
     }
-    if speculation {
+    if let Some(b) = ax.balancer_threshold {
+        let _ = write!(id, "-bal{}", (b * 100.0).round() as u64);
+    }
+    if ax.speculation {
         id.push_str("-spec");
     }
 }
@@ -675,6 +824,83 @@ mod tests {
         assert_eq!(crashed.fault_plan().rack_crashes.len(), 1);
         assert_eq!(crashed.fault_plan().rack_crashes[0].rack, 2);
         assert!((crashed.fault_plan().rack_crashes[0].at - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lifecycle_axes_expand_with_suffixed_ids() {
+        let g = SweepGrid {
+            workloads: vec![Workload::Search],
+            write_paths: vec![WritePath::DirectIo],
+            lzo: vec![false],
+            mtbf: vec![None, Some(600.0)],
+            rejoin: vec![None, Some(120.0)],
+            balancer: vec![None, Some(0.1)],
+            ..SweepGrid::paper_default(7, 2, 2)
+        };
+        // (mtbf × rejoin) = 4 minus the (None, Some) skip = 3, times 2
+        // balancer values.
+        assert_eq!(g.len(), 6);
+        let scs = g.expand();
+        assert_eq!(scs.len(), g.len());
+        let ids: Vec<&str> = scs.iter().map(|s| s.id.as_str()).collect();
+        assert!(ids.contains(&"amdahl-n9-c2-direct-nolzo-search"), "{ids:?}");
+        assert!(ids.contains(&"amdahl-n9-c2-direct-nolzo-search-bal10"), "{ids:?}");
+        assert!(ids.contains(&"amdahl-n9-c2-direct-nolzo-search-mtbf600-rejoin120"));
+        assert!(ids.contains(&"amdahl-n9-c2-direct-nolzo-search-mtbf600-rejoin120-bal10"));
+        let mut uniq = ids.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), scs.len(), "duplicate ids");
+        // Axis values round-trip into the plan.
+        let churn = scs.iter().find(|s| s.id.ends_with("-rejoin120-bal10")).unwrap();
+        assert!(churn.has_faults());
+        let plan = churn.fault_plan();
+        assert_eq!(plan.rejoin_after_s, Some(120.0));
+        assert_eq!(plan.balancer.as_ref().map(|b| b.threshold), Some(0.1));
+        let bal_only = scs.iter().find(|s| s.id.ends_with("search-bal10")).unwrap();
+        assert!(bal_only.has_faults(), "a balancer-only scenario is active");
+        assert!(bal_only.fault_plan().is_empty(), "but generates no fault events");
+    }
+
+    #[test]
+    fn decommission_axis_targets_the_highest_slave() {
+        let g = SweepGrid {
+            workloads: vec![Workload::DfsioWrite],
+            write_paths: vec![WritePath::DirectIo],
+            lzo: vec![false],
+            decommission_at: vec![None, Some(30.0)],
+            rejoin: vec![None, Some(60.0)],
+            ..SweepGrid::paper_default(7, 2, 2)
+        };
+        // (decomm × rejoin) = 4 minus the (None, Some) skip = 3.
+        assert_eq!(g.len(), 3);
+        let scs = g.expand();
+        let ids: Vec<&str> = scs.iter().map(|s| s.id.as_str()).collect();
+        assert!(ids.contains(&"amdahl-n9-c2-direct-nolzo-dfsio-write-decomm30"), "{ids:?}");
+        assert!(ids.contains(&"amdahl-n9-c2-direct-nolzo-dfsio-write-decomm30-rejoin60"));
+        let d = scs.iter().find(|s| s.id.ends_with("-decomm30")).unwrap();
+        let plan = d.fault_plan();
+        assert_eq!(plan.decommissions.len(), 1);
+        assert_eq!(plan.decommissions[0].node, 8, "highest slave of a 9-node cluster");
+        assert!((plan.decommissions[0].at - 30.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lifecycle_axes_at_defaults_keep_historical_ids() {
+        let base = SweepGrid::paper_default(42, 1, 2);
+        let noisy = SweepGrid {
+            rejoin: vec![None],
+            balancer: vec![None],
+            decommission_at: vec![None],
+            ..SweepGrid::paper_default(42, 1, 2)
+        };
+        assert_eq!(base.len(), noisy.len());
+        let a: Vec<String> = base.expand().into_iter().map(|s| s.id).collect();
+        let b: Vec<String> = noisy.expand().into_iter().map(|s| s.id).collect();
+        assert_eq!(a, b);
+        for id in &a {
+            assert!(!id.contains("-rejoin") && !id.contains("-bal") && !id.contains("-decomm"));
+        }
     }
 
     #[test]

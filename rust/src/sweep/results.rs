@@ -20,9 +20,13 @@ use super::grid::{Scenario, Workload, WritePath};
 /// would dilute the bottleneck signal).
 #[derive(Debug, Clone, Default)]
 pub struct KindUtils {
+    /// Max per-node mean CPU utilization.
     pub cpu: f64,
+    /// Max per-node mean disk utilization.
     pub disk: f64,
+    /// Max per-node mean NIC / ToR-uplink utilization.
     pub net: f64,
+    /// Max per-node mean memory-bus utilization.
     pub membus: f64,
 }
 
@@ -63,13 +67,21 @@ pub fn aggregate_usage(usage: &[UsageSnapshot]) -> KindUtils {
 /// One completed scenario.
 #[derive(Debug, Clone)]
 pub struct ScenarioRecord {
+    /// Stable scenario id.
     pub id: String,
+    /// Cluster family key.
     pub family: &'static str,
+    /// Total node count, master included.
     pub nodes: usize,
+    /// Cores per blade.
     pub cores: usize,
+    /// Write-path key.
     pub write_path: &'static str,
+    /// LZO compression of reducer output.
     pub lzo: bool,
+    /// Workload key.
     pub workload: &'static str,
+    /// Per-scenario deterministic seed.
     pub seed: u64,
     /// Simulated makespan, seconds.
     pub seconds: f64,
@@ -81,10 +93,15 @@ pub struct ScenarioRecord {
     pub joules: f64,
     /// Cluster-level energy efficiency: aggregate MB/s per watt.
     pub mbps_per_watt: f64,
+    /// Max per-node mean CPU utilization.
     pub cpu_util: f64,
+    /// Max per-node mean disk utilization.
     pub disk_util: f64,
+    /// Max per-node mean network utilization.
     pub net_util: f64,
+    /// Max per-node mean memory-bus utilization.
     pub membus_util: f64,
+    /// The most-utilized device kind.
     pub bottleneck: &'static str,
     /// Rack count the topology was partitioned into (1 = flat; the rack
     /// fields are serialized only for multi-rack scenarios, keeping the
@@ -96,14 +113,23 @@ pub struct ScenarioRecord {
     pub rack_crash_at: Option<f64>,
     /// Memory-bus override the scenario ran with (None = preset bus).
     pub membus_bps: Option<f64>,
+    /// Graceful-decommission time axis (None = no decommission).
+    pub decommission_at: Option<f64>,
+    /// Crash → re-join delay axis (None = the dead stay dead).
+    pub rejoin_delay: Option<f64>,
+    /// Balancer threshold axis (None = no balancer ran).
+    pub balancer_threshold: Option<f64>,
     /// Fault axes + what the fault subsystem did. None for fault-free
     /// scenarios — and then nothing fault-related is serialized, which
     /// keeps fault-free `BENCH_sweep.json` byte-identical to pre-fault
     /// builds (the empty-plan identity invariant).
     pub fault_axes: Option<(Option<f64>, f64, bool)>,
+    /// What fault injection did (None for fault-free scenarios).
     pub faults: Option<FaultStats>,
     /// Recovery joules (energy attributed to re-replication transfers).
     pub recovery_joules: f64,
+    /// Balancer joules (energy attributed to `balance:*` moves).
+    pub balance_joules: f64,
     /// Engine perf counters for the scenario's run. Not part of the
     /// simulation outcome (the counters differ between solver modes by
     /// design), so they are serialized in the separate "perf" section —
@@ -150,6 +176,9 @@ impl ScenarioRecord {
             oversub: sc.oversub,
             rack_crash_at: sc.rack_crash_at,
             membus_bps: sc.membus_bps,
+            decommission_at: sc.decommission_at,
+            rejoin_delay: sc.rejoin_delay,
+            balancer_threshold: sc.balancer_threshold,
             fault_axes: if sc.has_faults() {
                 Some((sc.mtbf, sc.straggler_frac, sc.speculation))
             } else {
@@ -157,15 +186,22 @@ impl ScenarioRecord {
             },
             faults: None,
             recovery_joules: 0.0,
+            balance_joules: 0.0,
             stats,
         }
     }
 
     /// Attach the fault outcome of a degraded-mode run (the runner calls
-    /// this only for scenarios that actually injected faults).
-    pub fn with_faults(mut self, faults: FaultStats, recovery_joules: f64) -> ScenarioRecord {
+    /// this only for scenarios that actually armed the fault subsystem).
+    pub fn with_faults(
+        mut self,
+        faults: FaultStats,
+        recovery_joules: f64,
+        balance_joules: f64,
+    ) -> ScenarioRecord {
         self.faults = Some(faults);
         self.recovery_joules = recovery_joules;
+        self.balance_joules = balance_joules;
         self
     }
 }
@@ -173,14 +209,19 @@ impl ScenarioRecord {
 /// One core count of the frontier.
 #[derive(Debug, Clone)]
 pub struct FrontierRow {
+    /// Swept core count.
     pub cores: usize,
+    /// Per-node throughput at this core count, MB/s.
     pub per_node_mbps: f64,
     /// Throughput relative to the first (smallest) core count.
     pub speedup: f64,
     /// Relative gain over the previous core count (0 for the first row).
     pub marginal_gain: f64,
+    /// Max per-node mean CPU utilization.
     pub cpu_util: f64,
+    /// The most-utilized device kind.
     pub bottleneck: &'static str,
+    /// Cluster-level energy efficiency, MB/s per watt.
     pub mbps_per_watt: f64,
 }
 
@@ -191,6 +232,7 @@ pub struct FrontierAnalysis {
     pub workload: &'static str,
     /// Write path held fixed (the paper's tuned baseline).
     pub write_path: &'static str,
+    /// One row per swept core count.
     pub rows: Vec<FrontierRow>,
     /// Empirical balance point: smallest swept core count whose
     /// bottleneck is no longer the CPU (None if the CPU binds at every
@@ -213,9 +255,11 @@ impl FrontierAnalysis {
 /// A full sweep: every scenario record, in grid expansion order.
 #[derive(Debug, Clone)]
 pub struct SweepResults {
+    /// Base seed the grid expanded with.
     pub base_seed: u64,
     /// Engine solver mode every scenario ran with.
     pub solver: SolverMode,
+    /// Per-scenario records, in grid expansion order.
     pub records: Vec<ScenarioRecord>,
 }
 
@@ -338,6 +382,15 @@ impl SweepResults {
             if let Some(b) = r.membus_bps {
                 s.push_str(&format!(", \"membus_bps\": {}", num(b)));
             }
+            if let Some(t) = r.decommission_at {
+                s.push_str(&format!(", \"decommission_at\": {}", num(t)));
+            }
+            if let Some(d) = r.rejoin_delay {
+                s.push_str(&format!(", \"rejoin_delay\": {}", num(d)));
+            }
+            if let Some(b) = r.balancer_threshold {
+                s.push_str(&format!(", \"balancer_threshold\": {}", num(b)));
+            }
             if let Some((mtbf, frac, spec)) = r.fault_axes {
                 s.push_str(&format!(
                     ", \"mtbf\": {}",
@@ -374,6 +427,29 @@ impl SweepResults {
                     f.rack_crashes,
                     f.rack_brownouts,
                 ));
+                // Lifecycle / balancer counters, emitted only when the
+                // run actually exercised them so plain crash scenarios
+                // keep their PR-3/PR-4-era record bytes.
+                if f.decommissions > 0
+                    || f.recommissions > 0
+                    || f.balancer_moves_started > 0
+                    || r.balancer_threshold.is_some()
+                {
+                    s.push_str(&format!(
+                        ", \"decommissions\": {}, \"recommissions\": {}, \
+                         \"trackers_rejoined\": {}, \"blocks_restored\": {}, \
+                         \"excess_dropped\": {}, \"balancer_moves\": {}, \
+                         \"balance_bytes\": {}, \"balance_joules\": {}",
+                        f.decommissions,
+                        f.recommissions,
+                        f.trackers_rejoined,
+                        f.blocks_restored_on_rejoin,
+                        f.excess_replicas_dropped,
+                        f.balancer_moves_done,
+                        num(f.balance_bytes),
+                        num(r.balance_joules),
+                    ));
+                }
             }
             s.push_str(if i + 1 == self.records.len() { "}\n" } else { "},\n" });
         }
@@ -461,23 +537,30 @@ impl SweepResults {
 /// One cell of the 2-D core × memory-bus frontier.
 #[derive(Debug, Clone)]
 pub struct BusFrontierCell {
+    /// Swept core count.
     pub cores: usize,
     /// Bus override in bytes/s; None = the preset bus (1300 MiB/s on
     /// the Amdahl blade).
     pub membus_bps: Option<f64>,
+    /// Per-node throughput in this cell, MB/s.
     pub per_node_mbps: f64,
+    /// The most-utilized device kind.
     pub bottleneck: &'static str,
 }
 
 /// One cell of the rack-count × oversubscription frontier.
 #[derive(Debug, Clone)]
 pub struct RackFrontierCell {
+    /// Swept rack count.
     pub racks: usize,
+    /// Swept ToR oversubscription ratio.
     pub oversub: f64,
     /// Core count the cut was taken at (the largest swept one — the
     /// most network-pressured blade).
     pub cores: usize,
+    /// Per-node throughput in this cell, MB/s.
     pub per_node_mbps: f64,
+    /// The most-utilized device kind.
     pub bottleneck: &'static str,
 }
 
@@ -485,19 +568,31 @@ pub struct RackFrontierCell {
 /// fault axes at the defaults).
 #[derive(Debug, Clone)]
 pub struct DegradedRow {
+    /// Stable scenario id of the faulted run.
     pub id: String,
+    /// Id of the fault-free twin, when the sweep expanded one.
     pub baseline_id: Option<String>,
+    /// Faulted makespan, simulated seconds.
     pub seconds: f64,
+    /// The twin's makespan, simulated seconds (0 without one).
     pub baseline_seconds: f64,
     /// Runtime overhead vs the fault-free twin (0.25 = 25% slower).
     pub slowdown_frac: f64,
+    /// Nodes that crashed.
     pub crashes: usize,
+    /// Nodes slowed by straggler events.
     pub stragglers: usize,
+    /// Re-replication transfers completed.
     pub rereplications: usize,
+    /// Recovery traffic, MB.
     pub recovery_mb: f64,
+    /// Energy attributed to recovery transfers.
     pub recovery_joules: f64,
+    /// Speculative attempts launched.
     pub spec_launched: usize,
+    /// Speculative attempts killed as losers.
     pub spec_wasted: usize,
+    /// Simulated seconds of killed-attempt work.
     pub wasted_task_seconds: f64,
     /// Energy overhead vs the fault-free twin.
     pub energy_overhead_frac: f64,
@@ -584,6 +679,24 @@ impl SweepResults {
         cells
     }
 
+    /// The fault-free twin of a (faulted) record: same non-fault axes,
+    /// every fault/lifecycle axis at its default. None when the sweep
+    /// did not expand one.
+    pub fn find_twin(&self, r: &ScenarioRecord) -> Option<&ScenarioRecord> {
+        self.records.iter().find(|b| {
+            b.fault_axes.is_none()
+                && b.family == r.family
+                && b.nodes == r.nodes
+                && b.cores == r.cores
+                && b.write_path == r.write_path
+                && b.lzo == r.lzo
+                && b.workload == r.workload
+                && b.membus_bps == r.membus_bps
+                && b.racks == r.racks
+                && b.oversub == r.oversub
+        })
+    }
+
     /// Pair every faulted record with its fault-free twin: the
     /// degraded-mode table (runtime, recovery traffic, wasted
     /// speculative work, energy overhead).
@@ -591,18 +704,7 @@ impl SweepResults {
         let mut rows = Vec::new();
         for r in &self.records {
             let Some(f) = &r.faults else { continue };
-            let twin = self.records.iter().find(|b| {
-                b.fault_axes.is_none()
-                    && b.family == r.family
-                    && b.nodes == r.nodes
-                    && b.cores == r.cores
-                    && b.write_path == r.write_path
-                    && b.lzo == r.lzo
-                    && b.workload == r.workload
-                    && b.membus_bps == r.membus_bps
-                    && b.racks == r.racks
-                    && b.oversub == r.oversub
-            });
+            let twin = self.find_twin(r);
             let base_s = twin.map(|t| t.seconds).unwrap_or(0.0);
             let base_j = twin.map(|t| t.joules).unwrap_or(0.0);
             rows.push(DegradedRow {
@@ -624,6 +726,77 @@ impl SweepResults {
         }
         rows
     }
+
+    /// The churn-vs-throughput frontier: every scenario that exercised
+    /// node churn (crashes / decommissions with or without re-joins) or
+    /// the balancer, paired with its fault-free twin — how much
+    /// throughput survives a given churn regime, and what the recovery
+    /// and rebalance traffic cost in joules.
+    pub fn churn_frontier(&self) -> Vec<ChurnRow> {
+        let mut rows = Vec::new();
+        for r in &self.records {
+            let Some(f) = &r.faults else { continue };
+            let churny = f.crashes > 0
+                || f.decommissions > 0
+                || f.recommissions > 0
+                || r.rejoin_delay.is_some()
+                || r.balancer_threshold.is_some();
+            if !churny {
+                continue;
+            }
+            let twin = self.find_twin(r);
+            let base_mbps = twin.map(|t| t.per_node_mbps).unwrap_or(0.0);
+            rows.push(ChurnRow {
+                id: r.id.clone(),
+                mtbf: r.fault_axes.and_then(|(m, _, _)| m),
+                rejoin_delay: r.rejoin_delay,
+                balancer_threshold: r.balancer_threshold,
+                per_node_mbps: r.per_node_mbps,
+                baseline_mbps: base_mbps,
+                retention: if base_mbps > 0.0 { r.per_node_mbps / base_mbps } else { 0.0 },
+                crashes: f.crashes,
+                decommissions: f.decommissions,
+                recommissions: f.recommissions,
+                balancer_moves: f.balancer_moves_done,
+                recovery_joules: r.recovery_joules,
+                balance_joules: r.balance_joules,
+            });
+        }
+        rows
+    }
+}
+
+/// One row of the churn-vs-throughput frontier
+/// ([`SweepResults::churn_frontier`]): a churning scenario next to its
+/// fault-free twin.
+#[derive(Debug, Clone)]
+pub struct ChurnRow {
+    /// Stable scenario id.
+    pub id: String,
+    /// MTBF axis value (None = fixed-schedule churn only).
+    pub mtbf: Option<f64>,
+    /// Re-join delay axis value.
+    pub rejoin_delay: Option<f64>,
+    /// Balancer threshold axis value.
+    pub balancer_threshold: Option<f64>,
+    /// Per-node throughput under churn, MB/s.
+    pub per_node_mbps: f64,
+    /// The fault-free twin's per-node throughput, MB/s (0 without one).
+    pub baseline_mbps: f64,
+    /// Throughput retained vs the twin (1.0 = no loss; 0 without one).
+    pub retention: f64,
+    /// Nodes that crashed.
+    pub crashes: usize,
+    /// Graceful decommissions started.
+    pub decommissions: usize,
+    /// Nodes that re-joined.
+    pub recommissions: usize,
+    /// Balancer moves committed.
+    pub balancer_moves: usize,
+    /// Energy attributed to crash re-replication.
+    pub recovery_joules: f64,
+    /// Energy attributed to balancer traffic.
+    pub balance_joules: f64,
 }
 
 /// The paper's §4 analytic estimate on the baseline blade: 4 cores.

@@ -30,6 +30,16 @@ pub const REFERENCE_SLAVES: f64 = 8.0;
 
 /// Knobs that size the per-scenario workloads (not grid axes: they are
 /// held constant across the whole sweep so scenarios stay comparable).
+///
+/// Build with struct-update syntax over the defaults:
+///
+/// ```
+/// use amdahl_hadoop::sweep::SweepOptions;
+///
+/// let opts = SweepOptions { threads: 2, scale: 0.0008, ..SweepOptions::default() };
+/// assert_eq!(opts.threads, 2);
+/// assert_eq!(opts.dfsio_workers, 4, "unnamed knobs keep their defaults");
+/// ```
 #[derive(Debug, Clone)]
 pub struct SweepOptions {
     /// Worker threads; 0 = one per available CPU.
@@ -56,6 +66,11 @@ pub struct SweepOptions {
     /// axis: like `scale`, it is held constant across the sweep so the
     /// degraded scenarios stay comparable). Default 0.4.
     pub straggler_slowdown: f64,
+    /// Balancer per-transfer rate cap, bytes/s
+    /// (`dfs.balance.bandwidthPerSec`; default 1 MiB/s, Hadoop's
+    /// deliberately gentle default). Like `straggler_slowdown`, held
+    /// constant across the sweep — the grid axis is the threshold.
+    pub balancer_bandwidth_bps: f64,
     /// Engine rate-solver mode; [`SolverMode::WholeSet`] is the
     /// pre-refactor baseline kept for benchmarks and the byte-identical
     /// regression test.
@@ -73,6 +88,7 @@ impl Default for SweepOptions {
             dfsio_workers: 4,
             scale_with_nodes: true,
             straggler_slowdown: 0.4,
+            balancer_bandwidth_bps: 1.0 * MIB,
             solver: SolverMode::Incremental,
             progress: false,
         }
@@ -136,6 +152,9 @@ pub fn run_scenario(sc: &Scenario, opts: &SweepOptions) -> ScenarioRecord {
     let sim = SimConfig::new(sc.seed).with_solver(opts.solver);
     let mut plan = sc.fault_plan();
     plan.straggler_slowdown = opts.straggler_slowdown;
+    if let Some(b) = plan.balancer.as_mut() {
+        b.bandwidth_bps = opts.balancer_bandwidth_bps;
+    }
     let fault_seed = fault_stream_seed(sc.seed, &sc.id);
     let schedule = if plan.active() {
         FaultSchedule::generate(&plan, fault_seed, preset.node_count())
@@ -162,7 +181,7 @@ pub fn run_scenario(sc: &Scenario, opts: &SweepOptions) -> ScenarioRecord {
                 run.stats,
             );
             if sc.has_faults() {
-                rec.with_faults(run.faults, run.energy.recovery_joules)
+                rec.with_faults(run.faults, run.energy.recovery_joules, run.energy.balance_joules)
             } else {
                 rec
             }
@@ -187,7 +206,7 @@ pub fn run_scenario(sc: &Scenario, opts: &SweepOptions) -> ScenarioRecord {
                 run.stats,
             );
             if sc.has_faults() {
-                rec.with_faults(run.faults, run.energy.recovery_joules)
+                rec.with_faults(run.faults, run.energy.recovery_joules, run.energy.balance_joules)
             } else {
                 rec
             }
@@ -228,7 +247,7 @@ pub fn run_scenario(sc: &Scenario, opts: &SweepOptions) -> ScenarioRecord {
                 out.stats,
             );
             if sc.has_faults() {
-                rec.with_faults(out.faults, out.energy.recovery_joules)
+                rec.with_faults(out.faults, out.energy.recovery_joules, out.energy.balance_joules)
             } else {
                 rec
             }

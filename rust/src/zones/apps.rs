@@ -46,6 +46,7 @@ pub const SUBBLOCK_CELLS: f64 = 9.0;
 /// Configuration for a Zones application run.
 #[derive(Clone)]
 pub struct ZonesConfig {
+    /// Base RNG seed for catalog generation and the engine.
     pub seed: u64,
     /// Fraction of the paper's 25 GB dataset.
     pub scale: f64,
@@ -93,10 +94,12 @@ impl Default for ZonesConfig {
 }
 
 impl ZonesConfig {
+    /// The search radius in radians.
     pub fn theta_rad(&self) -> f64 {
         self.theta_arcsec * std::f64::consts::PI / 180.0 / 3600.0
     }
 
+    /// Generate the synthetic sky catalog these axes describe.
     pub fn catalog(&self) -> Catalog {
         Catalog::generate(self.seed, self.scale, self.theta_rad(), self.block_theta_mult)
     }
@@ -110,8 +113,11 @@ fn instr_to_cpu(cpu: &CpuSpec, class: crate::hw::TaskClass, instr: f64) -> f64 {
 
 /// Zones mapper: parse, assign block ids, emit + border copies (§2.1).
 pub struct ZonesMap {
+    /// The synthetic sky catalog.
     pub catalog: Catalog,
+    /// Search radius, radians.
     pub theta: f64,
+    /// CPU model (for instruction-cost conversion).
     pub cpu: CpuSpec,
     /// Partition block side in grid cells (border copies cross
     /// *partition* borders, not cell borders).
@@ -137,14 +143,19 @@ impl MapFn for ZonesMap {
 
 /// Shared state of the searching/statistics reducers.
 pub struct ZonesReduce {
+    /// Run configuration.
     pub cfg: ZonesConfig,
+    /// The synthetic sky catalog.
     pub catalog: Catalog,
+    /// CPU model (for instruction-cost conversion).
     pub cpu: CpuSpec,
+    /// Number of reducers the partition spreads over.
     pub n_reducers: usize,
     /// Statistics mode (histogram) vs searching mode (pair emission).
     pub stat_mode: bool,
     /// Accumulated science results.
     pub pairs_found: i64,
+    /// Cumulative 60-bin distance histogram (stat mode).
     pub histogram: Vec<i64>,
     /// Calibration: mean listed-neighbors per object from sampled blocks.
     sampled_rate: Option<f64>,
@@ -152,6 +163,7 @@ pub struct ZonesReduce {
 }
 
 impl ZonesReduce {
+    /// Build the reducer state for one application run.
     pub fn new(cfg: ZonesConfig, cpu: CpuSpec, n_reducers: usize, stat_mode: bool) -> Self {
         let catalog = cfg.catalog();
         ZonesReduce {
@@ -167,6 +179,7 @@ impl ZonesReduce {
         }
     }
 
+    /// Number of real kernel invocations so far.
     pub fn kernel_calls(&self) -> u64 {
         self.kernel_calls
     }
@@ -392,6 +405,7 @@ impl MapFn for StatAggregateMap {
     }
 }
 
+/// Reduce side of the Neighbor Statistics aggregation step.
 pub struct StatAggregateReduce;
 impl ReduceFn for StatAggregateReduce {
     fn run(&mut self, _input: &crate::mapreduce::tasks::ReduceInput) -> ReduceOutput {

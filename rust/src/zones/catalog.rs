@@ -35,6 +35,7 @@ pub const DENSITY: f64 = 1.7e8;
 /// block grid (the Zones algorithm's spatial partition).
 #[derive(Debug, Clone)]
 pub struct Catalog {
+    /// Seed the catalog was generated from.
     pub seed: u64,
     /// Patch side length, radians.
     pub patch: f64,
@@ -79,10 +80,12 @@ impl Catalog {
         Catalog { seed, patch, block, grid, counts, n_objects: total }
     }
 
+    /// Number of partition blocks.
     pub fn n_blocks(&self) -> usize {
         self.grid * self.grid
     }
 
+    /// Star count of grid cell `(bi, bj)`.
     pub fn count(&self, bi: usize, bj: usize) -> u32 {
         self.counts[bi * self.grid + bj]
     }

@@ -30,16 +30,20 @@ pub enum App {
 /// Everything a Table 3 cell needs.
 #[derive(Debug, Clone)]
 pub struct RunOutcome {
+    /// First (or only) MapReduce step's statistics.
     pub job: JobResult,
     /// Second-step job for Neighbor Statistics.
     pub step2: Option<JobResult>,
     /// Total wall time (both steps).
     pub total_seconds: f64,
+    /// Energy accounting for the whole run.
     pub energy: EnergyReport,
     /// Science output: pairs found (search) or the 60-bin cumulative
     /// histogram (stat). Zero/empty when kernels were disabled.
     pub pairs_found: i64,
+    /// Cumulative 60-bin distance histogram (stat; empty without kernels).
     pub histogram: Vec<i64>,
+    /// Real kernel invocations performed.
     pub kernel_calls: u64,
     /// Per-resource usage over the whole run (sweep/bottleneck analysis).
     pub usage: Vec<crate::sim::UsageSnapshot>,
@@ -62,6 +66,8 @@ pub fn setup_world(
     // World::new arms the NameNode with the cluster's rack map.
     let mut world = World::new(cluster);
     world.namenode.set_datanodes((1..n).map(NodeId).collect());
+    // The recovery / re-join scans restore toward dfs.replication.
+    world.faults.replication = conf.dfs_replication;
     let world = shared(world);
     // Ingest: pre-place the catalog across the slaves round-robin (the
     // paper's dataset was loaded before the timed runs).

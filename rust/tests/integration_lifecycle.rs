@@ -1,0 +1,373 @@
+//! Integration tests for the node lifecycle (decommission → drain →
+//! dead → recommission → re-join) and the background rack-aware
+//! balancer: the mid-job re-join acceptance pin, block-report
+//! resurrection, drain safety, churn determinism across thread counts
+//! and solver modes, and the zero-churn byte-identity invariant.
+
+use amdahl_hadoop::cluster::{Cluster, NodeId};
+use amdahl_hadoop::conf::{ClusterPreset, HadoopConf};
+use amdahl_hadoop::faults::{
+    self, BalancerConfig, CrashSpec, FaultSchedule, InjectionPlan,
+};
+use amdahl_hadoop::hdfs::{BlockMeta, FileMeta, World, WorldHandle};
+use amdahl_hadoop::hw::{amdahl_blade, DiskKind, MIB};
+use amdahl_hadoop::sim::engine::shared;
+use amdahl_hadoop::sim::{Engine, SolverMode};
+use amdahl_hadoop::sweep::{run_sweep, ClusterFamily, SweepGrid, SweepOptions, Workload, WritePath};
+use amdahl_hadoop::zones::{run_app, App, ZonesConfig};
+
+fn world(n: usize, seed: u64) -> (Engine, WorldHandle) {
+    let mut e = Engine::new(seed);
+    let cluster = Cluster::build(&mut e, &amdahl_blade(DiskKind::Raid0), n);
+    let mut w = World::new(cluster);
+    w.namenode.set_datanodes((1..n).map(NodeId).collect());
+    (e, shared(w))
+}
+
+/// Acceptance pin, end to end: a node crashes in the middle of a
+/// MapReduce job, recommissions while the job is still running,
+/// re-registers its TaskTracker, and the balancer refills it — the job
+/// completes and the rebalance traffic shows up as `balance_joules`.
+#[test]
+fn crashed_node_recommissions_mid_job_and_balancer_refills_it() {
+    let conf = HadoopConf {
+        buffered_output: true,
+        direct_io_write: true,
+        ..Default::default()
+    };
+    let z = ZonesConfig {
+        seed: 29,
+        scale: 0.01,
+        faults: InjectionPlan {
+            crashes: vec![CrashSpec { node: 3, at: 4.0 }],
+            rejoin_after_s: Some(8.0),
+            balancer: Some(BalancerConfig {
+                threshold: 0.1,
+                bandwidth_bps: 16.0 * MIB,
+                ..BalancerConfig::default()
+            }),
+            ..InjectionPlan::empty()
+        },
+        ..Default::default()
+    };
+    let out = run_app(ClusterPreset::Amdahl, &conf, &z, App::Search);
+    assert!(out.total_seconds > 0.0, "job must complete despite the churn");
+    assert!(out.job.hdfs_output_bytes > 0.0);
+    let f = &out.faults;
+    assert_eq!(f.crashes, 1, "{f:?}");
+    assert_eq!(f.recommissions, 1, "the crashed node must re-join: {f:?}");
+    assert!(
+        f.trackers_rejoined >= 1,
+        "the TaskTracker must re-register with the live job: {f:?}"
+    );
+    assert!(
+        f.balancer_moves_done >= 1,
+        "the re-joined (near-empty) node must receive balancer traffic: {f:?}"
+    );
+    assert!(f.balance_bytes > 0.0);
+    assert!(
+        out.energy.balance_joules > 0.0,
+        "rebalance traffic must be attributed as balance_joules"
+    );
+    assert!(
+        out.energy.recovery_joules > 0.0,
+        "crash repair must still be attributed separately"
+    );
+    // The same job with no churn: nothing lifecycle-related happens.
+    let clean = ZonesConfig { seed: 29, scale: 0.01, ..Default::default() };
+    let base = run_app(ClusterPreset::Amdahl, &conf, &clean, App::Search);
+    assert_eq!(base.faults.recommissions, 0);
+    assert_eq!(base.faults.balancer_moves_done, 0);
+    assert_eq!(base.energy.balance_joules, 0.0);
+}
+
+/// A re-joining node's block report resurrects data the cluster had no
+/// other way to recover: blocks that went under-replicated (no spare
+/// target) or fully lost re-register instantly from the intact disk,
+/// and the under-replication scan then repairs the rest.
+#[test]
+fn block_report_resurrects_lost_and_under_replicated_blocks() {
+    let (mut e, w) = world(3, 7);
+    {
+        let mut wb = w.borrow_mut();
+        wb.faults.replication = 2;
+        let id_a = wb.namenode.alloc_block();
+        let id_b = wb.namenode.alloc_block();
+        wb.namenode.put_file(
+            "a",
+            FileMeta {
+                blocks: vec![BlockMeta {
+                    id: id_a,
+                    size: 8.0 * MIB,
+                    stored_size: 8.0 * MIB,
+                    replicas: vec![NodeId(1), NodeId(2)],
+                }],
+            },
+        );
+        wb.namenode.put_file(
+            "b",
+            FileMeta {
+                blocks: vec![BlockMeta {
+                    id: id_b,
+                    size: 8.0 * MIB,
+                    stored_size: 8.0 * MIB,
+                    replicas: vec![NodeId(2)],
+                }],
+            },
+        );
+    }
+    let plan = InjectionPlan {
+        crashes: vec![CrashSpec { node: 2, at: 1.0 }],
+        rejoin_after_s: Some(4.0),
+        ..InjectionPlan::empty()
+    };
+    let sched = FaultSchedule::generate(&plan, 11, 3);
+    faults::install(&mut e, &w, &sched);
+    e.run();
+    let wb = w.borrow();
+    let stats = &wb.faults.stats;
+    assert_eq!(stats.crashes, 1);
+    assert_eq!(stats.recommissions, 1);
+    // Both of node 2's copies came back with it ("a" had dropped to one
+    // copy with no spare target; "b" was outright lost).
+    assert_eq!(stats.blocks_restored_on_rejoin, 2, "{stats:?}");
+    let a = &wb.namenode.get_file("a").unwrap().blocks[0];
+    assert_eq!(a.replicas.len(), 2, "{:?}", a.replicas);
+    let b = &wb.namenode.get_file("b").unwrap().blocks[0];
+    assert!(b.replicas.contains(&NodeId(2)), "lost block must be back: {:?}", b.replicas);
+    // The post-rejoin scan topped "b" back up to the factor.
+    assert_eq!(b.replicas.len(), 2, "{:?}", b.replicas);
+    assert!(wb.faults.is_up(NodeId(2)));
+    assert!(wb.namenode.is_live(NodeId(2)));
+}
+
+/// Graceful decommission under load: the draining node's in-flight
+/// writes finish (nothing is cancelled), every block it held keeps its
+/// replication factor, and nothing is ever lost.
+#[test]
+fn decommission_mid_write_loses_nothing() {
+    use amdahl_hadoop::faults::DecommissionSpec;
+    let (mut e, w) = world(9, 13);
+    let conf = HadoopConf::default();
+    // Seed the namespace, then decommission a replica holder. The
+    // pre-file is large (several blocks to drain) and the in-flight
+    // write small, so the write commits while the drain is still
+    // copying — exercising the drain's re-scan.
+    amdahl_hadoop::hdfs::write_file(
+        &mut e, &w, NodeId(1), "pre", 256.0 * MIB, &conf, "hdfs-write", |_| {},
+    );
+    e.run();
+    let victim = {
+        let wb = w.borrow();
+        wb.namenode.get_file("pre").unwrap().blocks[0].replicas[1]
+    };
+    let plan = InjectionPlan {
+        decommissions: vec![DecommissionSpec { node: victim.0, at: 0.5 }],
+        ..InjectionPlan::empty()
+    };
+    let sched = FaultSchedule::generate(&plan, 17, 9);
+    faults::install(&mut e, &w, &sched);
+    // A write already in flight when the drain starts.
+    let done = shared(false);
+    let d = done.clone();
+    amdahl_hadoop::hdfs::write_file(
+        &mut e, &w, NodeId(1), "during", 8.0 * MIB, &conf, "hdfs-write", move |_| {
+            *d.borrow_mut() = true;
+        },
+    );
+    e.run();
+    assert!(*done.borrow(), "the in-flight write must complete");
+    let wb = w.borrow();
+    let stats = &wb.faults.stats;
+    assert_eq!(stats.decommissions, 1);
+    assert_eq!(stats.blocks_lost, 0);
+    assert_eq!(stats.writes_aborted, 0);
+    assert!(!wb.faults.is_up(victim), "drained node ends administratively dead");
+    for (name, meta) in wb.namenode.files() {
+        for b in &meta.blocks {
+            assert!(
+                !b.replicas.contains(&victim),
+                "{name}: replica still on the drained node"
+            );
+            assert_eq!(b.replicas.len(), 3, "{name} under-replicated: {:?}", b.replicas);
+        }
+    }
+}
+
+/// Regression (review finding): a drain copy whose target crashes
+/// mid-transfer is cancelled by the crash kill-switch — its completion
+/// callback never runs — and the decommission used to stall forever in
+/// the *decommissioning* state. The crash path now purges the dead
+/// endpoint's in-flight drain entries and restarts the drain, which
+/// completes (under-replicated if no target is left) instead of
+/// hanging.
+#[test]
+fn drain_survives_its_target_crashing_mid_copy() {
+    use amdahl_hadoop::faults::DecommissionSpec;
+    let (mut e, w) = world(4, 3);
+    {
+        let mut wb = w.borrow_mut();
+        wb.faults.replication = 2;
+        let id = wb.namenode.alloc_block();
+        wb.namenode.put_file(
+            "f",
+            FileMeta {
+                blocks: vec![BlockMeta {
+                    id,
+                    size: 64.0 * MIB,
+                    stored_size: 64.0 * MIB,
+                    replicas: vec![NodeId(2), NodeId(3)],
+                }],
+            },
+        );
+    }
+    // Node 2 drains at t=1; its only possible drain target is node 1,
+    // which crashes shortly after the copy starts.
+    let plan = InjectionPlan {
+        decommissions: vec![DecommissionSpec { node: 2, at: 1.0 }],
+        crashes: vec![CrashSpec { node: 1, at: 1.5 }],
+        ..InjectionPlan::empty()
+    };
+    let sched = FaultSchedule::generate(&plan, 23, 4);
+    faults::install(&mut e, &w, &sched);
+    e.run();
+    let wb = w.borrow();
+    let stats = &wb.faults.stats;
+    assert_eq!(stats.decommissions, 1);
+    assert_eq!(stats.crashes, 1);
+    assert!(
+        !wb.namenode.is_decommissioning(NodeId(2)),
+        "the drain must complete, not stall: {stats:?}"
+    );
+    assert!(!wb.faults.is_up(NodeId(2)), "drained node ends dead");
+    assert!(wb.faults.is_up(NodeId(3)));
+    // Whatever the exact crash/commit interleaving, the block survives
+    // on node 3 (possibly under-replicated — both its peers are gone).
+    let b = &wb.namenode.get_file("f").unwrap().blocks[0];
+    assert!(b.replicas.contains(&NodeId(3)), "{:?}", b.replicas);
+    assert!(!b.replicas.contains(&NodeId(2)) && !b.replicas.contains(&NodeId(1)));
+}
+
+fn churn_grid(seed: u64) -> SweepGrid {
+    SweepGrid {
+        families: vec![ClusterFamily::Amdahl],
+        nodes: vec![5],
+        cores: vec![2],
+        write_paths: vec![WritePath::DirectIo],
+        lzo: vec![false],
+        workloads: vec![Workload::DfsioWrite],
+        mtbf: vec![None, Some(40.0)],
+        rejoin: vec![None, Some(30.0)],
+        balancer: vec![None, Some(0.1)],
+        ..SweepGrid::paper_default(seed, 1, 1)
+    }
+}
+
+fn churn_opts(threads: usize, solver: SolverMode) -> SweepOptions {
+    SweepOptions {
+        threads,
+        solver,
+        dfsio_bytes_per_worker: 32.0 * MIB,
+        dfsio_workers: 2,
+        balancer_bandwidth_bps: 8.0 * MIB,
+        ..SweepOptions::default()
+    }
+}
+
+/// Satellite pin: re-join + balancer runs are byte-identical across
+/// `--threads` values.
+#[test]
+fn churn_sweep_is_thread_count_independent() {
+    let g = churn_grid(42);
+    let a = run_sweep(&g, &churn_opts(1, SolverMode::Incremental)).to_json();
+    let b = run_sweep(&g, &churn_opts(4, SolverMode::Incremental)).to_json();
+    assert_eq!(a, b, "churn sweep output depends on --threads");
+    assert!(a.contains("\"rejoin_delay\""), "churn records must carry the axis");
+    assert!(a.contains("\"balancer_threshold\""));
+}
+
+/// Satellite pin: re-join + balancer runs are byte-identical across
+/// both solver modes (the incremental engine's equivalence extends to
+/// lifecycle churn).
+#[test]
+fn churn_sweep_is_solver_mode_identical() {
+    let g = churn_grid(42);
+    let whole = run_sweep(&g, &churn_opts(2, SolverMode::WholeSet));
+    let inc = run_sweep(&g, &churn_opts(2, SolverMode::Incremental));
+    assert_eq!(
+        whole.sim_json(),
+        inc.sim_json(),
+        "solver modes diverged under lifecycle churn"
+    );
+    // The churn frontier pairs every churning scenario with its twin.
+    let churn = inc.churn_frontier();
+    assert!(!churn.is_empty());
+    for row in &churn {
+        assert!(row.baseline_mbps > 0.0, "{}: no fault-free twin", row.id);
+    }
+    let rendered = amdahl_hadoop::report::render_churn(&churn);
+    assert!(rendered.contains("churn-vs-throughput frontier"));
+}
+
+/// The zero-churn invariant, end to end: a grid whose lifecycle axes
+/// sit at their defaults emits byte-identical `BENCH_sweep.json` to a
+/// grid that never heard of them, and no lifecycle key leaks into
+/// fault-free records.
+#[test]
+fn zero_churn_plan_keeps_sweep_json_byte_identical() {
+    let base = SweepGrid {
+        families: vec![ClusterFamily::Amdahl],
+        nodes: vec![5],
+        cores: vec![1],
+        write_paths: vec![WritePath::DirectIo],
+        lzo: vec![false],
+        workloads: vec![Workload::DfsioWrite],
+        ..SweepGrid::paper_default(42, 1, 1)
+    };
+    let lifecycle_defaults = SweepGrid {
+        decommission_at: vec![None],
+        rejoin: vec![None],
+        balancer: vec![None],
+        ..base.clone()
+    };
+    let opts = SweepOptions {
+        threads: 2,
+        dfsio_bytes_per_worker: 32.0 * MIB,
+        dfsio_workers: 2,
+        ..SweepOptions::default()
+    };
+    let a = run_sweep(&base, &opts).to_json();
+    let b = run_sweep(&lifecycle_defaults, &opts).to_json();
+    assert_eq!(a, b, "explicit default lifecycle axes changed the bytes");
+    for key in ["rejoin", "balancer", "decommission", "recommission", "balance_joules"] {
+        assert!(!a.contains(key), "fault-free JSON leaked key {key:?}");
+    }
+    assert!(a.contains("\"id\": \"amdahl-n5-c1-direct-nolzo-dfsio-write\""));
+}
+
+/// The decommission axis runs end to end through the sweep: the
+/// scenario drains the highest slave mid-run, serializes its axis and
+/// counters, and the fault-free twin pairs in the degraded table.
+#[test]
+fn decommission_axis_sweeps_end_to_end() {
+    let g = SweepGrid {
+        families: vec![ClusterFamily::Amdahl],
+        nodes: vec![5],
+        cores: vec![2],
+        write_paths: vec![WritePath::DirectIo],
+        lzo: vec![false],
+        workloads: vec![Workload::DfsioWrite],
+        decommission_at: vec![None, Some(2.0)],
+        ..SweepGrid::paper_default(21, 1, 1)
+    };
+    let r = run_sweep(&g, &churn_opts(2, SolverMode::Incremental));
+    assert_eq!(r.records.len(), 2);
+    let drained = r.records.iter().find(|x| x.decommission_at.is_some()).unwrap();
+    assert!(drained.id.ends_with("-decomm2"), "id {}", drained.id);
+    let f = drained.faults.as_ref().unwrap();
+    assert_eq!(f.decommissions, 1, "{f:?}");
+    assert_eq!(f.blocks_lost, 0, "graceful drains lose nothing: {f:?}");
+    let json = r.to_json();
+    assert!(json.contains("\"decommission_at\": 2.000000"));
+    assert!(json.contains("\"decommissions\": 1"));
+}
