@@ -2,7 +2,8 @@
 # cargo build --release`); these wrap the optional kernel-artifact
 # pipeline and the end-to-end example on top of it.
 
-.PHONY: artifacts e2e test docs bench-smoke rack-smoke rack-demo lifecycle-demo
+.PHONY: artifacts e2e test docs bench-smoke rack-smoke rack-demo lifecycle-demo \
+        obs-smoke obs-golden trace-demo
 
 # AOT-lower the JAX/Pallas pair kernels to HLO text artifacts the Rust
 # runtime loads at startup. Requires a Python with jax installed; the
@@ -54,6 +55,39 @@ rack-demo:
 	cd rust && cargo run --release -- sweep --racks 1,3 --oversub 1,4 \
 	    --cores 2..4 --gb 0.03125 --workers 2 --quiet \
 	    --out /tmp/BENCH_rack_sweep.json
+
+# Observability smoke (CI): run the seed dfsio scenario with the full
+# obs stack armed, then diff the metrics export against the committed
+# golden byte-for-byte — the export is pure sim-time, so it is stable
+# across machines, thread counts, and solver modes. The golden
+# bootstraps itself: a placeholder containing "bootstrap" is replaced
+# by the first real run (commit the result). The trace export rides
+# along as a CI artifact for Perfetto inspection.
+obs-smoke:
+	cd rust && cargo run --release --quiet -- dfsio --op write --workers 2 \
+	    --gb 0.0625 --seed 42 \
+	    --trace /tmp/obs_seed.trace.json --metrics-out /tmp/obs_seed.metrics.json
+	@if grep -q bootstrap rust/tests/golden/obs_metrics_seed.json; then \
+	    cp /tmp/obs_seed.metrics.json rust/tests/golden/obs_metrics_seed.json; \
+	    echo "obs-smoke: bootstrapped the golden from this run; commit it"; \
+	fi
+	cmp /tmp/obs_seed.metrics.json rust/tests/golden/obs_metrics_seed.json
+
+# Regenerate the obs metrics golden after an intentional change to the
+# instrumentation (new metric, renamed span family, ...).
+obs-golden:
+	cd rust && cargo run --release --quiet -- dfsio --op write --workers 2 \
+	    --gb 0.0625 --seed 42 --metrics-out tests/golden/obs_metrics_seed.json
+
+# Observability demo: trace a racked fault scenario (3 racks behind a
+# 4:1 fabric, rack 2 dies 20 s in) — every scenario in the mini-grid
+# writes a Perfetto-loadable trace plus its metrics registry, and the
+# run prints the per-family CPU breakdown tables.
+trace-demo:
+	cd rust && cargo run --release -- faults --workload dfsio-write \
+	    --racks 3 --oversub 4 --rack-crash 20 --gb 0.0625 --workers 2 \
+	    --trace-dir /tmp/amdahl-traces --obs-interval 2
+	@echo "traces in /tmp/amdahl-traces: load a .trace.json at https://ui.perfetto.dev"
 
 # Node-lifecycle demo: MTBF-sampled crashes whose nodes re-join 120 s
 # later with the background balancer refilling them — degraded-mode

@@ -96,6 +96,26 @@ fn main() {
          baseline at 10k flows (got {ratio:.1}x)"
     );
 
+    // Wall-clock cross-check on `EngineStats::solve_ns`: the counted
+    // work advantage must show up as real time spent in solve_rates.
+    // Strictly relative — both numbers come from this machine, this
+    // run — and skipped when the baseline finished too fast (<10 ms)
+    // for the comparison to beat timer noise.
+    if sw.solve_ns > 10_000_000 {
+        println!(
+            "solve wall-time: whole-set {:.1} ms vs incremental {:.1} ms",
+            sw.solve_ns as f64 / 1e6,
+            si.solve_ns as f64 / 1e6
+        );
+        assert!(
+            si.solve_ns <= sw.solve_ns,
+            "incremental solver spent more wall time in solve_rates than the \
+             whole-set baseline ({} ns vs {} ns)",
+            si.solve_ns,
+            sw.solve_ns
+        );
+    }
+
     check_recorded_baseline(&si);
 }
 

@@ -74,7 +74,14 @@ pub fn bench_record<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f
     times.sort_by(|a, b| a.total_cmp(b));
     let mean = times.iter().sum::<f64>() / times.len() as f64;
     let median = times[times.len() / 2];
-    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / times.len() as f64;
+    // Sample standard deviation: Bessel's correction (n-1) since these
+    // n runs are a sample of the timing distribution, not all of it.
+    // One sample has no spread to estimate — report 0, not NaN.
+    let var = if times.len() < 2 {
+        0.0
+    } else {
+        times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / (times.len() - 1) as f64
+    };
     println!(
         "{name:<44} mean {:>10}  median {:>10}  sd {:>9}  (n={samples})",
         fmt(mean),
@@ -129,6 +136,35 @@ mod tests {
         let r = super::bench_record("noop2", 0, 7, || {});
         assert_eq!(r.samples, 7);
         assert!(r.mean_s >= 0.0 && r.median_s >= 0.0 && r.sd_s >= 0.0);
+    }
+
+    #[test]
+    fn single_sample_sd_is_zero_not_nan() {
+        let r = super::bench_record("noop3", 0, 1, || {});
+        assert_eq!(r.samples, 1);
+        assert_eq!(r.sd_s, 0.0);
+    }
+
+    #[test]
+    fn sd_uses_bessel_correction() {
+        // Two samples a ≤ b: mean = (a+b)/2 and median = b, so the gap
+        // g = median − mean = (b−a)/2 recovers the spread from the
+        // record alone. Sample sd (n−1 divisor) = (b−a)/√2 = √2·g;
+        // the population formula the old code used gives exactly g.
+        let mut delay = 0u64;
+        let r = super::bench_record("spread", 0, 2, || {
+            std::thread::sleep(std::time::Duration::from_millis(delay));
+            delay += 2;
+        });
+        let g = r.median_s - r.mean_s;
+        assert!(g > 0.0, "the 2ms sleep must separate the two samples");
+        assert!(
+            (r.sd_s - (2.0f64).sqrt() * g).abs() < 1e-12 + 1e-9 * g,
+            "sd {} should be sqrt(2) * {} (sample convention), not {} (population)",
+            r.sd_s,
+            g,
+            g
+        );
     }
 
     #[test]

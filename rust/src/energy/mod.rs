@@ -100,6 +100,51 @@ pub fn efficiency_ratio(amdahl: &EnergyReport, occ: &EnergyReport) -> f64 {
     occ.total_joules / amdahl.total_joules
 }
 
+/// Attribute every node's busy CPU core-seconds (and their marginal
+/// joules, priced at (full − idle) watts per core like
+/// [`EnergyReport::recovery_joules`]) to the flow-class **families** of
+/// [`crate::obs::FAMILIES`] — the paper's §4 "where do the Atom's
+/// cycles go" decomposition generalized to every run. Returns one entry
+/// per family in the fixed [`crate::obs::FAMILIES`] order (zero-filled
+/// when a family never ran), so downstream rendering and JSON emission
+/// are deterministic. Summation order is fixed (sorted by class id per
+/// node, nodes in cluster order) so the totals are bit-stable despite
+/// the engine's HashMap class storage.
+pub fn family_breakdown(engine: &Engine, cluster: &Cluster) -> Vec<crate::obs::FamilyCpu> {
+    let mut cpu_s = [0.0f64; crate::obs::FAMILIES.len()];
+    let mut joules = [0.0f64; crate::obs::FAMILIES.len()];
+    for node in &cluster.nodes {
+        let spec = &node.spec;
+        let r = engine.resource(node.cpu);
+        let mut by_class: Vec<(crate::sim::UsageClass, f64)> =
+            r.busy_by_class.iter().map(|(c, b)| (*c, *b)).collect();
+        by_class.sort_by_key(|(c, _)| *c);
+        let marginal_w_per_core = if spec.cpu.capacity > 0.0 {
+            (spec.power_full_w - spec.power_idle_w) / spec.cpu.capacity
+        } else {
+            0.0
+        };
+        for (c, busy) in by_class {
+            let fam = crate::obs::family_of(engine.class_name(c));
+            let idx = crate::obs::FAMILIES
+                .iter()
+                .position(|f| *f == fam)
+                .expect("family_of returns a FAMILIES member");
+            cpu_s[idx] += busy;
+            joules[idx] += marginal_w_per_core * busy;
+        }
+    }
+    crate::obs::FAMILIES
+        .iter()
+        .enumerate()
+        .map(|(i, f)| crate::obs::FamilyCpu {
+            family: f,
+            cpu_core_seconds: cpu_s[i],
+            joules: joules[i],
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -149,6 +194,19 @@ mod tests {
         assert!((rep.total_joules - 9.0 * 40.0 * 100.0).abs() < 1e-6);
         // No work ran: scaled energy = idle power only.
         assert!((rep.scaled_joules - 9.0 * 28.0 * 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn family_breakdown_is_zero_filled_and_ordered() {
+        let mut e = Engine::new(1);
+        let c = Cluster::build(&mut e, &amdahl_blade(DiskKind::Raid0), 4);
+        let fams = family_breakdown(&e, &c);
+        assert_eq!(fams.len(), crate::obs::FAMILIES.len());
+        for (got, want) in fams.iter().zip(crate::obs::FAMILIES.iter()) {
+            assert_eq!(got.family, *want);
+            assert_eq!(got.cpu_core_seconds, 0.0, "no work ran");
+            assert_eq!(got.joules, 0.0);
+        }
     }
 
     #[test]

@@ -112,6 +112,12 @@ fn poll(engine: &mut Engine, world: &WorldHandle) {
             w.faults.balancer_idle_rounds = 0;
             w.faults.stats.balancer_rounds += 1;
         }
+        if engine.trace_enabled() {
+            engine.trace_instant("balance", format!("balancer round: {} moves", moves.len()), 0);
+        }
+        if engine.metrics_enabled() {
+            engine.metric_incr("balance.rounds", 1);
+        }
         let world2 = world.clone();
         engine.batch(move |engine| {
             for m in moves {

@@ -69,6 +69,12 @@ pub fn handle_crash(engine: &mut Engine, world: &WorldHandle, node: NodeId) {
         // with its target.
         w.faults.purge_pending_for_dead(&[node])
     };
+    if engine.trace_enabled() {
+        engine.trace_instant("faults", format!("crash n{}", node.0), node.0 as u32);
+    }
+    if engine.metrics_enabled() {
+        engine.metric_incr("faults.crashes", 1);
+    }
     let world2 = world.clone();
     engine.batch(move |engine| {
         dispatch_crash(engine, &world2, node);
@@ -108,6 +114,13 @@ pub fn handle_straggle(engine: &mut Engine, world: &WorldHandle, node: NodeId, f
         w.faults.stats.stragglers += 1;
         w.cluster.node(node).cpu
     };
+    if engine.trace_enabled() {
+        engine.trace_instant(
+            "faults",
+            format!("straggler n{} cpu x{:.2}", node.0, factor.clamp(0.01, 1.0)),
+            node.0 as u32,
+        );
+    }
     let cap = engine.resource(cpu).capacity;
     engine.set_capacity(cpu, cap * factor.clamp(0.01, 1.0));
 }
@@ -168,6 +181,16 @@ pub fn handle_rack_crash(engine: &mut Engine, world: &WorldHandle, rack: usize) 
         }
         w.faults.purge_pending_for_dead(&newly_dead)
     };
+    if engine.trace_enabled() {
+        engine.trace_instant(
+            "faults",
+            format!("rack {rack} crash ({} nodes down)", newly_dead.len()),
+            0,
+        );
+    }
+    if engine.metrics_enabled() {
+        engine.metric_incr("faults.rack_crashes", 1);
+    }
     // A member can be spared (already dead, or the last live DataNode).
     // Only when the rack is genuinely empty of live nodes does its ToR
     // go dark — draining the uplink under a live spared member would
@@ -229,6 +252,13 @@ pub fn handle_rack_brownout(engine: &mut Engine, world: &WorldHandle, rack: usiz
     };
     w.faults.stats.rack_brownouts += 1;
     w.cluster.set_uplink_degrade(engine, rack, factor.clamp(0.01, 1.0).min(current));
+    if engine.trace_enabled() {
+        engine.trace_instant(
+            "faults",
+            format!("rack {rack} brownout x{:.2}", factor.clamp(0.01, 1.0).min(current)),
+            0,
+        );
+    }
 }
 
 /// Process a graceful decommission: mark the node *decommissioning*
@@ -254,6 +284,9 @@ pub fn handle_decommission(engine: &mut Engine, world: &WorldHandle, node: NodeI
         }
         w.faults.stats.decommissions += 1;
         w.namenode.mark_decommissioning(node);
+    }
+    if engine.trace_enabled() {
+        engine.trace_instant("faults", format!("decommission n{}", node.0), node.0 as u32);
     }
     // The JobTracker stops assigning work to the draining tracker.
     dispatch_drain(engine, world, node);
@@ -398,6 +431,9 @@ fn finish_drain(engine: &mut Engine, world: &WorldHandle, node: NodeId) {
             w.faults.stats.blocks_lost = lost;
         }
     }
+    if engine.trace_enabled() {
+        engine.trace_instant("faults", format!("drain complete n{} (dead)", node.0), node.0 as u32);
+    }
     balancer::kick(engine, world);
 }
 
@@ -439,6 +475,13 @@ pub fn handle_recommission(engine: &mut Engine, world: &WorldHandle, node: NodeI
                 let cap = w.faults.replication;
                 w.faults.stats.excess_replicas_dropped +=
                     w.namenode.scan_over_replicated(cap);
+            }
+            if engine.trace_enabled() {
+                engine.trace_instant(
+                    "faults",
+                    format!("decommission cancelled n{}", node.0),
+                    node.0 as u32,
+                );
             }
             // The tracker never died; give it its slots back.
             dispatch_rejoin(engine, world, node);
@@ -486,6 +529,16 @@ pub fn handle_recommission(engine: &mut Engine, world: &WorldHandle, node: NodeI
                 });
                 tasks
             };
+            if engine.trace_enabled() {
+                engine.trace_instant(
+                    "faults",
+                    format!("recommission n{} ({} repairs)", node.0, tasks.len()),
+                    node.0 as u32,
+                );
+            }
+            if engine.metrics_enabled() {
+                engine.metric_incr("faults.recommissions", 1);
+            }
             if !tasks.is_empty() {
                 let world2 = world.clone();
                 engine.batch(move |engine| {
@@ -741,6 +794,20 @@ pub(crate) fn start_transfer(
     commit: impl FnOnce(&mut Engine, &mut crate::hdfs::World) + 'static,
 ) {
     let bytes = bytes.max(1.0);
+    // Static category / histogram names per transfer kind (the span and
+    // the closure must not borrow `class_prefix`).
+    let (cat, hist, ctr): (&'static str, &'static str, &'static str) =
+        if class_prefix == "balance" {
+            ("balance", "balance.transfer_s", "balance.transfers")
+        } else {
+            ("recovery", "recovery.transfer_s", "recovery.transfers")
+        };
+    let span = if engine.trace_enabled() {
+        engine.span_begin(cat, format!("{cat}:blk n{}->n{}", source.0, target.0), target.0 as u32)
+    } else {
+        crate::obs::SpanId::NONE
+    };
+    let t0 = engine.now();
     let spec = {
         let mut w = world.borrow_mut();
         w.cluster.disk_stream_start(engine, source, true);
@@ -789,6 +856,12 @@ pub(crate) fn start_transfer(
     };
     let world2 = world.clone();
     engine.start_flow(spec, move |engine| {
+        engine.span_end(span);
+        if engine.metrics_enabled() {
+            let dur = engine.now() - t0;
+            engine.metric_duration(hist, dur);
+            engine.metric_incr(ctr, 1);
+        }
         let mut w = world2.borrow_mut();
         w.cluster.disk_stream_end(engine, source, true);
         w.cluster.disk_stream_end(engine, target, false);

@@ -58,6 +58,11 @@ struct WriteCtx {
     cur_flow: Option<FlowId>,
     cur_replicas: Vec<NodeId>,
     cur_size: f64,
+    /// Trace span covering the current block (survives a failover: the
+    /// span is the block, not the pipeline instance).
+    cur_span: crate::obs::SpanId,
+    /// Sim time the current block's pipeline started (metrics).
+    cur_t0: f64,
     /// False once the chain finished or was abandoned.
     active: bool,
     /// The crash guard is registered at most once per file write.
@@ -100,6 +105,8 @@ pub fn write_file(
         cur_flow: None,
         cur_replicas: Vec::new(),
         cur_size: 0.0,
+        cur_span: crate::obs::SpanId::NONE,
+        cur_t0: 0.0,
         active: true,
         registered: false,
     }));
@@ -134,6 +141,17 @@ fn write_next(engine: &mut Engine, ctx: Rc<RefCell<WriteCtx>>) {
         c.cur_size = size;
         spec
     };
+    {
+        let span = if engine.trace_enabled() {
+            let name = ctx.borrow().name.clone();
+            engine.span_begin("hdfs", format!("write {name} blk[{idx}]"), client.0 as u32)
+        } else {
+            crate::obs::SpanId::NONE
+        };
+        let mut c = ctx.borrow_mut();
+        c.cur_span = span;
+        c.cur_t0 = engine.now();
+    }
     // Arm the mid-block failover guard (once per file write). The guard
     // holds only a Weak handle: once the chain completes and drops its
     // context, the guard self-deregisters at the next crash instead of
@@ -201,9 +219,20 @@ fn write_block_done(engine: &mut Engine, ctx: Rc<RefCell<WriteCtx>>) {
             );
         }
         {
+            let (span, t0) = {
+                let c = ctx.borrow();
+                (c.cur_span, c.cur_t0)
+            };
+            engine.span_end(span);
+            if engine.metrics_enabled() {
+                let dur = engine.now() - t0;
+                engine.metric_duration("hdfs.block_write_s", dur);
+                engine.metric_incr("hdfs.blocks_written", 1);
+            }
             let mut c = ctx.borrow_mut();
             c.idx += 1;
             c.cur_flow = None;
+            c.cur_span = crate::obs::SpanId::NONE;
         }
         write_next(engine, ctx.clone());
     });
@@ -228,6 +257,8 @@ fn write_failover(engine: &mut Engine, ctx: &Rc<RefCell<WriteCtx>>, dead: NodeId
             }
             w.faults.stats.writes_aborted += 1;
         }
+        let span = ctx.borrow().cur_span;
+        engine.span_end(span);
         ctx.borrow_mut().active = false;
         return false;
     }
@@ -247,6 +278,8 @@ fn write_failover(engine: &mut Engine, ctx: &Rc<RefCell<WriteCtx>>, dead: NodeId
         }
     }
     if survivors.is_empty() {
+        let span = ctx.borrow().cur_span;
+        engine.span_end(span);
         ctx.borrow_mut().active = false;
         world.borrow_mut().faults.stats.writes_aborted += 1;
         return false;
@@ -266,6 +299,14 @@ fn write_failover(engine: &mut Engine, ctx: &Rc<RefCell<WriteCtx>>, dead: NodeId
         }
         w.faults.stats.pipeline_failovers += 1;
     }
+    if engine.trace_enabled() {
+        engine.trace_instant(
+            "faults",
+            format!("pipeline failover (n{} died, {} survivors)", dead.0, survivors.len()),
+            client.0 as u32,
+        );
+    }
+    engine.metric_incr("hdfs.pipeline_failovers", 1);
     ctx.borrow_mut().cur_replicas = survivors;
     let cctx = ctx.clone();
     let fid = engine.start_flow(spec, move |engine| write_block_done(engine, cctx));
@@ -356,6 +397,10 @@ struct ReadCtx {
     /// In-flight block-read state (for the failover guard).
     cur_flow: Option<FlowId>,
     cur_src: Option<NodeId>,
+    /// Trace span covering the current block read (survives failover).
+    cur_span: crate::obs::SpanId,
+    /// Sim time the current block read started (metrics).
+    cur_t0: f64,
     active: bool,
     registered: bool,
 }
@@ -420,6 +465,8 @@ fn read_blocks_opts(
         on_done: Some(Box::new(on_done)),
         cur_flow: None,
         cur_src: None,
+        cur_span: crate::obs::SpanId::NONE,
+        cur_t0: 0.0,
         active: true,
         registered: false,
     }));
@@ -472,6 +519,14 @@ fn read_next(engine: &mut Engine, ctx: Rc<RefCell<ReadCtx>>) {
                 let mut w = world.borrow_mut();
                 w.faults.stats.lost_block_reads += 1;
             }
+            if engine.trace_enabled() {
+                engine.trace_instant(
+                    "faults",
+                    format!("block lost blk{} (no live replica)", block.id),
+                    client.0 as u32,
+                );
+            }
+            engine.metric_incr("hdfs.lost_block_reads", 1);
             ctx.borrow_mut().idx += 1;
             continue;
         };
@@ -484,6 +539,20 @@ fn read_next(engine: &mut Engine, ctx: Rc<RefCell<ReadCtx>>) {
             let c = ctx.borrow();
             read_block_flow(engine, &world, client, src, &block, block.size, &c.conf, &c.task)
         };
+        {
+            let span = if engine.trace_enabled() {
+                engine.span_begin(
+                    "hdfs",
+                    format!("read blk{} from n{}", block.id, src.0),
+                    client.0 as u32,
+                )
+            } else {
+                crate::obs::SpanId::NONE
+            };
+            let mut c = ctx.borrow_mut();
+            c.cur_span = span;
+            c.cur_t0 = engine.now();
+        }
         // Arm the read failover guard (once per read chain; Weak so a
         // finished chain is collectable — see the write guard).
         let faults_on = world.borrow().faults.active;
@@ -524,10 +593,21 @@ fn read_block_done(engine: &mut Engine, ctx: Rc<RefCell<ReadCtx>>) {
             w.cluster.disk_stream_end(engine, src, true);
         }
         {
+            let (span, t0) = {
+                let c = ctx.borrow();
+                (c.cur_span, c.cur_t0)
+            };
+            engine.span_end(span);
+            if engine.metrics_enabled() {
+                let dur = engine.now() - t0;
+                engine.metric_duration("hdfs.block_read_s", dur);
+                engine.metric_incr("hdfs.blocks_read", 1);
+            }
             let mut c = ctx.borrow_mut();
             c.idx += 1;
             c.cur_flow = None;
             c.cur_src = None;
+            c.cur_span = crate::obs::SpanId::NONE;
         }
         read_next(engine, ctx.clone());
     });
@@ -548,6 +628,8 @@ fn read_failover(engine: &mut Engine, ctx: &Rc<RefCell<ReadCtx>>, dead: NodeId) 
             let mut w = world.borrow_mut();
             w.cluster.disk_stream_end(engine, src, true);
         }
+        let span = ctx.borrow().cur_span;
+        engine.span_end(span);
         ctx.borrow_mut().active = false;
         return false;
     }
@@ -572,11 +654,22 @@ fn read_failover(engine: &mut Engine, ctx: &Rc<RefCell<ReadCtx>>, dead: NodeId) 
             let mut w = world.borrow_mut();
             w.faults.stats.lost_block_reads += 1;
         }
+        if engine.trace_enabled() {
+            engine.trace_instant(
+                "faults",
+                format!("block lost mid-read blk{}", block.id),
+                client.0 as u32,
+            );
+        }
+        engine.metric_incr("hdfs.lost_block_reads", 1);
         {
+            let span = ctx.borrow().cur_span;
+            engine.span_end(span);
             let mut c = ctx.borrow_mut();
             c.idx += 1;
             c.cur_flow = None;
             c.cur_src = None;
+            c.cur_span = crate::obs::SpanId::NONE;
         }
         read_next(engine, ctx.clone());
         return true;
@@ -590,6 +683,14 @@ fn read_failover(engine: &mut Engine, ctx: &Rc<RefCell<ReadCtx>>, dead: NodeId) 
         w.cluster.disk_stream_start(engine, new_src, true);
         w.faults.stats.read_failovers += 1;
     }
+    if engine.trace_enabled() {
+        engine.trace_instant(
+            "faults",
+            format!("read failover blk{} n{} -> n{}", block.id, dead.0, new_src.0),
+            client.0 as u32,
+        );
+    }
+    engine.metric_incr("hdfs.read_failovers", 1);
     let cctx = ctx.clone();
     let fid = engine.start_flow(spec, move |engine| read_block_done(engine, cctx));
     {

@@ -46,6 +46,10 @@ pub struct DfsioRun {
     pub stats: EngineStats,
     /// What fault injection did to the run (all zeros when inactive).
     pub faults: FaultStats,
+    /// Observability exports (trace JSON, metrics JSON, family CPU
+    /// breakdown); `None` when [`SimConfig`]'s obs spec left everything
+    /// off.
+    pub obs: Option<crate::obs::ObsReport>,
 }
 
 fn utilization(engine: &Engine) -> Vec<(String, f64)> {
@@ -71,9 +75,20 @@ fn build_world(preset: ClusterPreset, sim: SimConfig, conf: &HadoopConf) -> (Eng
 }
 
 fn finish(engine: &Engine, world: &WorldHandle, result: DfsioResult) -> DfsioRun {
-    let energy = {
+    let (energy, obs) = {
         let w = world.borrow();
-        crate::energy::measure(engine, &w.cluster, result.makespan)
+        let energy = crate::energy::measure(engine, &w.cluster, result.makespan);
+        let obs = if engine.obs().any_enabled() {
+            Some(crate::obs::ObsReport {
+                trace_json: engine.trace_enabled().then(|| engine.obs().export_trace("dfsio")),
+                metrics_json: (engine.metrics_enabled() || engine.obs().series.enabled())
+                    .then(|| engine.obs().metrics_json()),
+                cpu_families: crate::energy::family_breakdown(engine, &w.cluster),
+            })
+        } else {
+            None
+        };
+        (energy, obs)
     };
     DfsioRun {
         result,
@@ -81,6 +96,7 @@ fn finish(engine: &Engine, world: &WorldHandle, result: DfsioResult) -> DfsioRun
         usage: engine.usage_snapshot(),
         stats: engine.stats(),
         faults: world.borrow().faults.stats.clone(),
+        obs,
     }
 }
 

@@ -53,6 +53,12 @@
 //!   [`faults::InjectionPlan`] nothing is installed and every output —
 //!   including `BENCH_sweep.json` — is byte-identical to a fault-free
 //!   build.
+//! * [`obs`] — deterministic observability: sim-time span tracing with
+//!   a Chrome-trace (Perfetto) exporter, log-bucket percentile
+//!   histograms, per-device utilization timelines, and the flow-class →
+//!   family taxonomy behind the §4 "where do the cycles go" CPU
+//!   breakdown. Zero-cost when disabled; byte-identical output across
+//!   thread counts and solver modes.
 //! * [`report`] — regenerates every figure and table in the paper,
 //!   plus the degraded-mode table, the 2-D core × memory-bus frontier,
 //!   the rack × oversubscription frontier, and the churn-vs-throughput
@@ -82,6 +88,7 @@ pub mod faults;
 pub mod hdfs;
 pub mod hw;
 pub mod mapreduce;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod sim;

@@ -6,8 +6,11 @@
 //! ```text
 //! amdahl-hadoop table1|fig1|table2|fig2a|fig2b|fig3|table3|table4|energy|balance|all
 //! amdahl-hadoop search --theta 60 --scale 0.002 [--kernels] [--preset occ]
+//!                      [--trace FILE] [--metrics-out FILE] [--obs-interval 5]
 //! amdahl-hadoop stat   --scale 0.002 [--kernels]
+//!                      [--trace FILE] [--metrics-out FILE] [--obs-interval 5]
 //! amdahl-hadoop dfsio  --op write|read --workers 2 --gb 3
+//!                      [--trace FILE] [--metrics-out FILE] [--obs-interval 5]
 //! amdahl-hadoop sweep  [--cores 1..8] [--nodes 9] [--family amdahl|occ|both]
 //!                      [--threads N] [--gb 0.125] [--workers 4]
 //!                      [--solver incremental|whole-set]
@@ -16,12 +19,14 @@
 //!                      [--slowdown 0.4] [--spec]
 //!                      [--rejoin 120] [--decommission 30]
 //!                      [--balancer-threshold 0.1] [--balancer-bandwidth 1]
+//!                      [--trace-dir DIR] [--obs-interval 5] [--perf-wallclock]
 //!                      [--baseline old.json] [--out BENCH_sweep.json] [--quiet]
 //! amdahl-hadoop faults [--workload search|stat|dfsio-write|dfsio-read]
 //!                      [--mtbf 600] [--stragglers 0.25] [--slowdown 0.4]
 //!                      [--racks 3] [--oversub 4] [--rack-crash 20]
 //!                      [--rejoin 120] [--decommission 30]
 //!                      [--balancer-threshold 0.1] [--balancer-bandwidth 1]
+//!                      [--trace-dir DIR] [--obs-interval 5] [--perf-wallclock]
 //!                      [--spec] [--nodes 9] [--cores 2] [--threads N]
 //! ```
 //!
@@ -51,6 +56,17 @@
 //! execution) and prints the degraded-mode comparison plus the churn
 //! frontier.
 //!
+//! Observability (off by default, zero-cost when off): `--trace FILE` /
+//! `--trace-dir DIR` write Chrome-trace-event JSON recorded in simulated
+//! time — load it in Perfetto (<https://ui.perfetto.dev>) or
+//! `chrome://tracing`; `--metrics-out FILE` writes the histogram /
+//! counter / utilization-sample registry as JSON; `--obs-interval SECS`
+//! sets the utilization sampling grid (default 5 simulated seconds) and
+//! arms the stack on its own. Any obs flag also prints the per-family
+//! CPU breakdown (the paper's §4 "where do the cycles go" analysis), and
+//! `sweep --perf-wallclock` adds wall-clock solver time to the perf
+//! section of the output JSON.
+//!
 //! Common options: `--seed N` (default 42), `--scale F` (fraction of the
 //! paper's 25 GB dataset, default 0.002), `--kernels` (load the AOT
 //! Pallas kernels from `artifacts/` and compute real pair counts).
@@ -71,8 +87,43 @@ fn zcfg(args: &Args, kernels: Option<Rc<PairKernels>>) -> anyhow::Result<ZonesCo
         theta_arcsec: args.get_f64("theta", 60.0)?,
         kernel_every: args.get_usize("kernel-every", 1)?,
         kernels,
+        obs: obs_from_args(args)?,
         ..Default::default()
     })
+}
+
+/// Observability switches for the single-run subcommands: any of
+/// `--trace FILE`, `--metrics-out FILE`, or `--obs-interval SECS` arms
+/// the full obs stack (tracing + metrics + utilization sampling).
+fn obs_from_args(args: &Args) -> anyhow::Result<amdahl_hadoop::sim::ObsSpec> {
+    let on = args.get("trace").is_some()
+        || args.get("metrics-out").is_some()
+        || args.get("obs-interval").is_some();
+    Ok(if on {
+        amdahl_hadoop::sim::ObsSpec::full(args.get_f64("obs-interval", 5.0)?)
+    } else {
+        amdahl_hadoop::sim::ObsSpec::default()
+    })
+}
+
+/// Write a run's trace / metrics exports to the `--trace` /
+/// `--metrics-out` paths and print the §4 family CPU breakdown.
+fn emit_obs(
+    args: &Args,
+    title: &str,
+    obs: &Option<amdahl_hadoop::obs::ObsReport>,
+) -> anyhow::Result<()> {
+    let Some(report) = obs else { return Ok(()) };
+    if let (Some(path), Some(t)) = (args.get("trace"), &report.trace_json) {
+        std::fs::write(path, t)?;
+        eprintln!("[obs] wrote trace to {path} (load in Perfetto / chrome://tracing)");
+    }
+    if let (Some(path), Some(m)) = (args.get("metrics-out"), &report.metrics_json) {
+        std::fs::write(path, m)?;
+        eprintln!("[obs] wrote metrics to {path}");
+    }
+    print!("{}", report::render_cpu_breakdown(title, &report.cpu_families));
+    Ok(())
 }
 
 fn main() -> anyhow::Result<()> {
@@ -144,6 +195,7 @@ fn main() -> anyhow::Result<()> {
                 out.pairs_found,
                 out.kernel_calls
             );
+            emit_obs(&args, cmd, &out.obs)?;
         }
         "sweep" => {
             use amdahl_hadoop::sim::SolverMode;
@@ -243,6 +295,16 @@ fn main() -> anyhow::Result<()> {
             if args.flag("spec") {
                 grid.speculation = vec![false, true];
             }
+            // Sweep observability: --trace-dir (or an explicit
+            // --obs-interval) arms tracing + metrics + sampling on every
+            // scenario; without them the obs stack stays off and the
+            // output file keeps its historical bytes.
+            let trace_dir = args.get("trace-dir").map(str::to_string);
+            let obs = if trace_dir.is_some() || args.get("obs-interval").is_some() {
+                amdahl_hadoop::sim::ObsSpec::full(args.get_f64("obs-interval", 5.0)?)
+            } else {
+                amdahl_hadoop::sim::ObsSpec::default()
+            };
             let opts = amdahl_hadoop::sweep::SweepOptions {
                 threads: args.get_usize("threads", 0)?,
                 scale: args.get_f64("scale", 0.0008)?,
@@ -251,6 +313,9 @@ fn main() -> anyhow::Result<()> {
                 straggler_slowdown: args.get_f64("slowdown", 0.4)?,
                 balancer_bandwidth_bps: args.get_f64("balancer-bandwidth", 1.0)? * MIB,
                 solver,
+                obs,
+                trace_dir,
+                perf_wallclock: args.flag("perf-wallclock"),
                 progress: !args.flag("quiet"),
                 ..Default::default()
             };
@@ -379,6 +444,12 @@ fn main() -> anyhow::Result<()> {
             if args.flag("spec") {
                 grid.speculation = vec![false, true];
             }
+            let trace_dir = args.get("trace-dir").map(str::to_string);
+            let obs = if trace_dir.is_some() || args.get("obs-interval").is_some() {
+                amdahl_hadoop::sim::ObsSpec::full(args.get_f64("obs-interval", 5.0)?)
+            } else {
+                amdahl_hadoop::sim::ObsSpec::default()
+            };
             let opts = SweepOptions {
                 threads: args.get_usize("threads", 0)?,
                 scale: args.get_f64("scale", 0.0008)?,
@@ -386,6 +457,9 @@ fn main() -> anyhow::Result<()> {
                 dfsio_workers: args.get_usize("workers", 4)?,
                 straggler_slowdown: args.get_f64("slowdown", 0.4)?,
                 balancer_bandwidth_bps: args.get_f64("balancer-bandwidth", 1.0)? * MIB,
+                obs,
+                trace_dir,
+                perf_wallclock: args.flag("perf-wallclock"),
                 progress: !args.flag("quiet"),
                 ..Default::default()
             };
@@ -449,16 +523,30 @@ fn main() -> anyhow::Result<()> {
             let workers = args.get_usize("workers", 2)?;
             let gb = args.get_f64("gb", 3.0)?;
             let conf = HadoopConf::default();
-            let r = match args.get("op").unwrap_or("write") {
-                "read" => amdahl_hadoop::hdfs::testdfsio::read_test(
-                    seed, workers, gb * 1024.0 * MIB, &conf, args.flag("remote")),
-                _ => amdahl_hadoop::hdfs::testdfsio::write_test(
-                    seed, workers, gb * 1024.0 * MIB, &conf),
+            let sim = amdahl_hadoop::sim::SimConfig::new(seed).with_obs(obs_from_args(&args)?);
+            let run = match args.get("op").unwrap_or("write") {
+                "read" => amdahl_hadoop::hdfs::testdfsio::read_test_on(
+                    ClusterPreset::Amdahl,
+                    sim,
+                    workers,
+                    gb * 1024.0 * MIB,
+                    &conf,
+                    args.flag("remote"),
+                ),
+                _ => amdahl_hadoop::hdfs::testdfsio::write_test_on(
+                    ClusterPreset::Amdahl,
+                    sim,
+                    workers,
+                    gb * 1024.0 * MIB,
+                    &conf,
+                ),
             };
+            let r = &run.result;
             println!(
                 "TestDFSIO: {:.1} MB/s per node ({:.1} aggregate), makespan {:.1}s",
                 r.per_node_mbps, r.aggregate_mbps, r.makespan
             );
+            emit_obs(&args, "dfsio", &run.obs)?;
         }
         "all" => {
             print!("{}", report::table1());

@@ -137,6 +137,8 @@ struct MapAttempt {
     start: f64,
     token: TaskToken,
     speculative: bool,
+    /// Trace span covering the attempt (ends at commit or kill).
+    span: crate::obs::SpanId,
 }
 
 /// One live reduce attempt.
@@ -150,6 +152,8 @@ struct ReduceAttempt {
     shuffle_done: PhaseFlag,
     /// Map hosts this attempt fetches from.
     sources: Vec<NodeId>,
+    /// Trace span covering the attempt (ends at commit or kill).
+    span: crate::obs::SpanId,
 }
 
 struct JobState {
@@ -182,6 +186,9 @@ struct JobState {
     map_done_duration_sum: f64,
     map_done_count: usize,
     speculation: bool,
+    /// Trace span covering the whole job (opened at submit, closed in
+    /// [`finish`]).
+    job_span: crate::obs::SpanId,
 }
 
 /// Build splits (one per block) from the job's input files.
@@ -245,6 +252,11 @@ pub fn run_job(
     }
     let n_splits = splits.len();
     let n_reducers = spec.n_reducers;
+    let job_span = if engine.trace_enabled() {
+        engine.span_begin("job", format!("job {}", spec.name), 0)
+    } else {
+        crate::obs::SpanId::NONE
+    };
     let state = Rc::new(RefCell::new(JobState {
         spec,
         world: world.clone(),
@@ -271,6 +283,7 @@ pub fn run_job(
         map_done_duration_sum: 0.0,
         map_done_count: 0,
         speculation: faults_active && speculation,
+        job_span,
     }));
     if faults_active {
         // TaskTracker-death reaction (blacklist + re-queue + lost-output
@@ -401,6 +414,12 @@ fn start_map(
     speculative: bool,
 ) {
     let token = TaskToken::new();
+    let span = if engine.trace_enabled() {
+        let tag = if speculative { " (spec)" } else { "" };
+        engine.span_begin("mapreduce", format!("map[{split_idx}]{tag} @n{}", node.0), node.0 as u32)
+    } else {
+        crate::obs::SpanId::NONE
+    };
     let (split, map_fn, conf, class, world) = {
         let mut s = state.borrow_mut();
         if !speculative {
@@ -419,6 +438,7 @@ fn start_map(
             start: engine.now(),
             token: token.clone(),
             speculative,
+            span,
         });
         (
             s.splits[split_idx].clone(),
@@ -446,7 +466,7 @@ fn map_attempt_done(
     out: MapOutput,
 ) {
     let now = engine.now();
-    let (world, spec_wins, spec_wasted, wasted_s) = {
+    let (world, spec_wins, spec_wasted, wasted_s, ended_spans, committed_dur, phase_done) = {
         let mut s = state.borrow_mut();
         let world = s.world.clone();
         let me = match s.map_attempts.iter().position(|a| a.token.same(&token)) {
@@ -460,11 +480,15 @@ fn map_attempt_done(
         let mut wins = 0usize;
         let mut wasted = 0usize;
         let mut wasted_s = 0.0f64;
+        let mut ended_spans = vec![me.span];
+        let mut committed_dur = None;
+        let mut phase_done = false;
         if s.map_outputs[split_idx].is_none() {
             s.map_outputs[split_idx] = Some((node, out));
             s.maps_done += 1;
             s.map_done_duration_sum += now - me.start;
             s.map_done_count += 1;
+            committed_dur = Some(now - me.start);
             s.pending_maps.retain(|&i| i != split_idx);
             // Kill-loser: cancel every other attempt of this split.
             let mut k = 0;
@@ -472,6 +496,7 @@ fn map_attempt_done(
                 if s.map_attempts[k].split_idx == split_idx {
                     let loser = s.map_attempts.remove(k);
                     loser.token.cancel();
+                    ended_spans.push(loser.span);
                     s.running_maps -= 1;
                     if let Some(v) = s.free_map_slots.get_mut(&loser.node) {
                         *v += 1;
@@ -488,6 +513,7 @@ fn map_attempt_done(
             if s.maps_done == s.splits.len() {
                 s.t_maps_done = now;
                 s.reduce_started = true;
+                phase_done = true;
             }
         } else {
             // The split committed concurrently (defensive: losers are
@@ -495,8 +521,20 @@ fn map_attempt_done(
             wasted += 1;
             wasted_s += now - me.start;
         }
-        (world, wins, wasted, wasted_s)
+        (world, wins, wasted, wasted_s, ended_spans, committed_dur, phase_done)
     };
+    for sp in ended_spans {
+        engine.span_end(sp);
+    }
+    if let Some(dur) = committed_dur {
+        if engine.metrics_enabled() {
+            engine.metric_duration("mapreduce.map_attempt_s", dur);
+            engine.metric_incr("mapreduce.maps_committed", 1);
+        }
+    }
+    if phase_done && engine.trace_enabled() {
+        engine.trace_instant("job", "map phase complete".to_string(), 0);
+    }
     if spec_wins > 0 || spec_wasted > 0 {
         let mut w = world.borrow_mut();
         w.faults.stats.spec_wins += spec_wins;
@@ -509,6 +547,11 @@ fn map_attempt_done(
 fn start_reduce(engine: &mut Engine, state: Rc<RefCell<JobState>>, reducer: usize, node: NodeId) {
     let token = TaskToken::new();
     let shuffle_done = PhaseFlag::new();
+    let span = if engine.trace_enabled() {
+        engine.span_begin("mapreduce", format!("reduce[{reducer}] @n{}", node.0), node.0 as u32)
+    } else {
+        crate::obs::SpanId::NONE
+    };
     let (sources, input, reduce_fn, conf, class, world, output_name) = {
         let mut s = state.borrow_mut();
         s.pending_reduces.retain(|&r| r != reducer);
@@ -540,6 +583,7 @@ fn start_reduce(engine: &mut Engine, state: Rc<RefCell<JobState>>, reducer: usiz
             token: token.clone(),
             shuffle_done: shuffle_done.clone(),
             sources: sources.iter().map(|(n, _)| *n).collect(),
+            span,
         });
         (
             sources,
@@ -578,22 +622,25 @@ fn reduce_attempt_done(
     token: TaskToken,
     out: ReduceOutput,
 ) {
-    let finished = {
+    let (finished, span, dur) = {
         let mut s = state.borrow_mut();
-        match s.reduce_attempts.iter().position(|a| a.token.same(&token)) {
-            Some(p) => {
-                s.reduce_attempts.remove(p);
-            }
+        let me = match s.reduce_attempts.iter().position(|a| a.token.same(&token)) {
+            Some(p) => s.reduce_attempts.remove(p),
             None => return, // killed at this very instant
-        }
+        };
         s.reduces_done += 1;
         s.running_reduces -= 1;
         s.hdfs_output_bytes += out.hdfs_bytes;
         if let Some(v) = s.free_reduce_slots.get_mut(&node) {
             *v += 1;
         }
-        s.reduces_done == s.spec.n_reducers
+        (s.reduces_done == s.spec.n_reducers, me.span, engine.now() - me.start)
     };
+    engine.span_end(span);
+    if engine.metrics_enabled() {
+        engine.metric_duration("mapreduce.reduce_attempt_s", dur);
+        engine.metric_incr("mapreduce.reduces_committed", 1);
+    }
     if finished {
         finish(engine, &state);
     } else {
@@ -611,6 +658,7 @@ fn on_node_crash(engine: &mut Engine, state: &Rc<RefCell<JobState>>, dead: NodeI
     let mut reduces_requeued = 0usize;
     let mut outputs_lost = 0usize;
     let mut wasted_s = 0.0f64;
+    let mut killed_spans: Vec<crate::obs::SpanId> = Vec::new();
     {
         let mut s = state.borrow_mut();
         if s.on_done.is_none() {
@@ -626,6 +674,7 @@ fn on_node_crash(engine: &mut Engine, state: &Rc<RefCell<JobState>>, dead: NodeI
             if s.map_attempts[i].node == dead {
                 let a = s.map_attempts.remove(i);
                 a.token.cancel();
+                killed_spans.push(a.span);
                 s.running_maps -= 1;
                 wasted_s += now - a.start;
                 let covered = s.map_outputs[a.split_idx].is_some()
@@ -663,6 +712,7 @@ fn on_node_crash(engine: &mut Engine, state: &Rc<RefCell<JobState>>, dead: NodeI
             if kill {
                 let a = s.reduce_attempts.remove(j);
                 a.token.cancel();
+                killed_spans.push(a.span);
                 s.running_reduces -= 1;
                 wasted_s += now - a.start;
                 if a.node != dead {
@@ -678,6 +728,23 @@ fn on_node_crash(engine: &mut Engine, state: &Rc<RefCell<JobState>>, dead: NodeI
                 j += 1;
             }
         }
+    }
+    for sp in killed_spans {
+        engine.span_end(sp);
+    }
+    if engine.trace_enabled() {
+        engine.trace_instant(
+            "faults",
+            format!(
+                "tracker blacklisted n{} ({maps_requeued} maps, {reduces_requeued} reduces \
+                 requeued, {outputs_lost} outputs lost)",
+                dead.0
+            ),
+            dead.0 as u32,
+        );
+    }
+    if engine.metrics_enabled() {
+        engine.metric_incr("mapreduce.trackers_blacklisted", 1);
     }
     {
         let mut w = world.borrow_mut();
@@ -712,6 +779,9 @@ fn on_node_rejoin(engine: &mut Engine, state: &Rc<RefCell<JobState>>, node: Node
         s.free_reduce_slots.insert(node, reduce_slots);
         s.world.clone()
     };
+    if engine.trace_enabled() {
+        engine.trace_instant("faults", format!("tracker re-registered n{}", node.0), node.0 as u32);
+    }
     world.borrow_mut().faults.stats.trackers_rejoined += 1;
     pump(engine, state.clone());
     true
@@ -721,13 +791,18 @@ fn on_node_rejoin(engine: &mut Engine, state: &Rc<RefCell<JobState>>, node: Node
 /// vanish so nothing new schedules onto it, but — unlike a crash —
 /// running attempts keep going and commit normally. Returns false
 /// (deregister) once the job has completed.
-fn on_node_drain(_engine: &mut Engine, state: &Rc<RefCell<JobState>>, node: NodeId) -> bool {
-    let mut s = state.borrow_mut();
-    if s.on_done.is_none() {
-        return false;
+fn on_node_drain(engine: &mut Engine, state: &Rc<RefCell<JobState>>, node: NodeId) -> bool {
+    {
+        let mut s = state.borrow_mut();
+        if s.on_done.is_none() {
+            return false;
+        }
+        s.free_map_slots.remove(&node);
+        s.free_reduce_slots.remove(&node);
     }
-    s.free_map_slots.remove(&node);
-    s.free_reduce_slots.remove(&node);
+    if engine.trace_enabled() {
+        engine.trace_instant("faults", format!("tracker draining n{}", node.0), node.0 as u32);
+    }
     true
 }
 
@@ -777,6 +852,13 @@ fn spec_poll(engine: &mut Engine, state: Rc<RefCell<JobState>>) {
         let state2 = state.clone();
         engine.batch(move |engine| {
             for (si, node) in launches {
+                if engine.trace_enabled() {
+                    engine.trace_instant(
+                        "mapreduce",
+                        format!("speculate map[{si}] -> n{}", node.0),
+                        node.0 as u32,
+                    );
+                }
                 start_map(engine, state2.clone(), si, node, Locality::Remote, true);
             }
         });
@@ -786,7 +868,7 @@ fn spec_poll(engine: &mut Engine, state: Rc<RefCell<JobState>>) {
 }
 
 fn finish(engine: &mut Engine, state: &Rc<RefCell<JobState>>) {
-    let (result, cb) = {
+    let (result, cb, job_span) = {
         let mut s = state.borrow_mut();
         let input_bytes: f64 = s.splits.iter().map(|sp| sp.bytes).sum();
         // A late crash can null out a lost output while the surviving
@@ -806,8 +888,12 @@ fn finish(engine: &mut Engine, state: &Rc<RefCell<JobState>>) {
             map_locality: s.local_maps as f64 / s.splits.len() as f64,
             map_rack_locality: s.rack_local_maps as f64 / s.splits.len() as f64,
         };
-        (result, s.on_done.take().unwrap())
+        (result, s.on_done.take().unwrap(), s.job_span)
     };
+    engine.span_end(job_span);
+    if engine.metrics_enabled() {
+        engine.metric_duration("mapreduce.job_s", result.duration);
+    }
     cb(engine, result);
 }
 

@@ -300,6 +300,7 @@ pub fn run_reduce_task(
     // Phase 1: shuffle — parallel fetches from every map host.
     let live: Vec<(NodeId, f64)> = sources.into_iter().filter(|(_, b)| *b > 0.0).collect();
     let fetch_count = live.len();
+    let reducer_idx = input.reducer;
     let done_ctr = shared(0usize);
     let token_sh = token.clone();
     let after_shuffle = Rc::new(RefCell::new(Some(Box::new(move |engine: &mut Engine| {
@@ -456,6 +457,16 @@ pub fn run_reduce_task(
         if faults_on {
             in_flight.borrow_mut().push(src);
         }
+        let fetch_span = if engine.trace_enabled() {
+            engine.span_begin(
+                "shuffle",
+                format!("fetch r{reducer_idx} n{}->n{}", src.0, node.0),
+                node.0 as u32,
+            )
+        } else {
+            crate::obs::SpanId::NONE
+        };
+        let fetch_t0 = engine.now();
         let world_f = world.clone();
         let ctr = done_ctr.clone();
         let after = after_shuffle.clone();
@@ -468,6 +479,12 @@ pub fn run_reduce_task(
                     w.cluster.disk_stream_end(engine, src, true);
                 }
                 inf_f.borrow_mut().retain(|&s| s != src);
+                engine.span_end(fetch_span);
+                if engine.metrics_enabled() {
+                    let dur = engine.now() - fetch_t0;
+                    engine.metric_duration("shuffle.fetch_s", dur);
+                    engine.metric_incr("shuffle.fetches", 1);
+                }
                 if token_f.cancelled() {
                     return;
                 }

@@ -1,0 +1,327 @@
+//! Deterministic percentile metrics: log-scale-bucket histograms,
+//! monotonic counters, and last-value gauges.
+//!
+//! Every observed value is **simulated** time (or a sim-derived count),
+//! so the whole registry is bit-reproducible for a given scenario. The
+//! histogram buckets are derived from the raw IEEE-754 bits of the
+//! sample — exponent plus the top two mantissa bits, four sub-buckets
+//! per octave (~19% relative resolution) — never from `log2()`, whose
+//! libm implementation varies across platforms. Percentile readouts
+//! return the lower edge of the covering bucket clamped to the observed
+//! min/max, which keeps p50/p95/p99 exactly reproducible and
+//! insensitive to accumulation order.
+//!
+//! The registry serializes to a byte-stable JSON snapshot
+//! ([`Metrics::to_json`]): BTreeMap iteration order, fixed key order,
+//! fixed float formatting. CI diffs this snapshot against a committed
+//! golden file.
+
+use std::collections::BTreeMap;
+
+/// Number of sub-buckets per power-of-two octave (top 2 mantissa bits).
+const SUB_BUCKETS: u64 = 4;
+
+/// Log-scale-bucket histogram over non-negative `f64` samples.
+///
+/// Bucketing is pure bit arithmetic on the IEEE-754 representation:
+/// `index = biased_exponent * 4 + top_2_mantissa_bits`. Zero and
+/// subnormal samples land in the lowest buckets; non-finite samples are
+/// counted but excluded from the bucket map (they only affect `count`).
+#[derive(Debug, Clone, Default)]
+pub struct Histogram {
+    /// Samples per bucket index, sparse.
+    buckets: BTreeMap<u32, u64>,
+    /// Total samples observed (including non-finite ones).
+    count: u64,
+    /// Sum of all finite samples (for the mean).
+    sum: f64,
+    /// Smallest finite sample seen.
+    min: f64,
+    /// Largest finite sample seen.
+    max: f64,
+}
+
+/// Bucket index of a finite non-negative sample (pure bit arithmetic).
+fn bucket_index(v: f64) -> u32 {
+    let v = if v > 0.0 { v } else { 0.0 };
+    let bits = v.to_bits();
+    let exp = ((bits >> 52) & 0x7ff) as u32;
+    let sub = ((bits >> 50) & 0x3) as u32;
+    exp * SUB_BUCKETS as u32 + sub
+}
+
+/// Lower edge of a bucket: the smallest f64 whose bits map to `index`.
+fn bucket_lower_edge(index: u32) -> f64 {
+    let exp = (index / SUB_BUCKETS as u32) as u64;
+    let sub = (index % SUB_BUCKETS as u32) as u64;
+    f64::from_bits((exp << 52) | (sub << 50))
+}
+
+impl Histogram {
+    /// Record one sample.
+    pub fn record(&mut self, v: f64) {
+        self.count += 1;
+        if v.is_finite() {
+            let v = v.max(0.0);
+            *self.buckets.entry(bucket_index(v)).or_insert(0) += 1;
+            self.sum += v;
+            if self.count == 1 || v < self.min {
+                self.min = v;
+            }
+            if v > self.max {
+                self.max = v;
+            }
+        }
+    }
+
+    /// Total samples observed.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Mean of the finite samples (0 when empty).
+    pub fn mean(&self) -> f64 {
+        let finite: u64 = self.buckets.values().sum();
+        if finite == 0 {
+            0.0
+        } else {
+            self.sum / finite as f64
+        }
+    }
+
+    /// The `q`-quantile (`0.0 ..= 1.0`): lower edge of the covering
+    /// bucket, clamped to the observed `[min, max]`. 0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let finite: u64 = self.buckets.values().sum();
+        if finite == 0 {
+            return 0.0;
+        }
+        let rank = ((q * finite as f64).ceil() as u64).clamp(1, finite);
+        let mut seen = 0u64;
+        for (&idx, &n) in &self.buckets {
+            seen += n;
+            if seen >= rank {
+                return bucket_lower_edge(idx).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Smallest finite sample (0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest finite sample (0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+}
+
+/// Registry of named histograms, counters, and gauges.
+///
+/// Recording through a disabled registry is a no-op (one branch), so
+/// instrumented call sites cost nothing on the default path.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Whether recording is active.
+    pub enabled: bool,
+    histograms: BTreeMap<&'static str, Histogram>,
+    counters: BTreeMap<&'static str, u64>,
+    gauges: BTreeMap<&'static str, f64>,
+}
+
+impl Metrics {
+    /// An active registry.
+    pub fn new(enabled: bool) -> Self {
+        Metrics { enabled, ..Metrics::default() }
+    }
+
+    /// Record a duration (or any non-negative value) into histogram
+    /// `name`. No-op when disabled.
+    pub fn record(&mut self, name: &'static str, v: f64) {
+        if !self.enabled {
+            return;
+        }
+        self.histograms.entry(name).or_default().record(v);
+    }
+
+    /// Add `delta` to counter `name`. No-op when disabled.
+    pub fn incr(&mut self, name: &'static str, delta: u64) {
+        if !self.enabled {
+            return;
+        }
+        *self.counters.entry(name).or_insert(0) += delta;
+    }
+
+    /// Set gauge `name` to its latest value. No-op when disabled.
+    pub fn gauge(&mut self, name: &'static str, v: f64) {
+        if !self.enabled {
+            return;
+        }
+        self.gauges.insert(name, v);
+    }
+
+    /// Read back a histogram (None if never recorded).
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    /// Read back a counter (0 if never incremented).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Byte-stable JSON snapshot: histograms (count / mean / p50 / p95 /
+    /// p99 / min / max), counters, gauges — all in BTreeMap name order
+    /// with fixed float formatting.
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n");
+        self.write_body(&mut s);
+        s.push_str("}\n");
+        s
+    }
+
+    /// Write the histograms / counters / gauges sections (no outer
+    /// braces, no trailing section comma) so [`crate::obs::Obs`] can
+    /// compose them with the utilization summary into one document.
+    pub(crate) fn write_body(&self, s: &mut String) {
+        s.push_str("  \"histograms\": {\n");
+        let nh = self.histograms.len();
+        for (i, (name, h)) in self.histograms.iter().enumerate() {
+            s.push_str(&format!(
+                "    \"{}\": {{\"count\": {}, \"mean\": {}, \"p50\": {}, \"p95\": {}, \
+                 \"p99\": {}, \"min\": {}, \"max\": {}}}{}\n",
+                name,
+                h.count(),
+                num(h.mean()),
+                num(h.quantile(0.50)),
+                num(h.quantile(0.95)),
+                num(h.quantile(0.99)),
+                num(h.min()),
+                num(h.max()),
+                if i + 1 == nh { "" } else { "," }
+            ));
+        }
+        s.push_str("  },\n  \"counters\": {\n");
+        let nc = self.counters.len();
+        for (i, (name, v)) in self.counters.iter().enumerate() {
+            s.push_str(&format!(
+                "    \"{}\": {}{}\n",
+                name,
+                v,
+                if i + 1 == nc { "" } else { "," }
+            ));
+        }
+        s.push_str("  },\n  \"gauges\": {\n");
+        let ng = self.gauges.len();
+        for (i, (name, v)) in self.gauges.iter().enumerate() {
+            s.push_str(&format!(
+                "    \"{}\": {}{}\n",
+                name,
+                num(*v),
+                if i + 1 == ng { "" } else { "," }
+            ));
+        }
+        s.push_str("  }\n");
+    }
+}
+
+/// Deterministic float formatting shared by the obs JSON emitters:
+/// fixed six decimals, non-finite becomes `null`.
+pub(crate) fn num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.6}")
+    } else {
+        "null".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_log_scale_bit_exact() {
+        // 1.0 → exponent 1023, mantissa 0.
+        assert_eq!(bucket_index(1.0), 1023 * 4);
+        // 1.25 → second sub-bucket of the same octave.
+        assert_eq!(bucket_index(1.25), 1023 * 4 + 1);
+        // 2.0 → next octave.
+        assert_eq!(bucket_index(2.0), 1024 * 4);
+        assert_eq!(bucket_lower_edge(bucket_index(1.25)), 1.25);
+        assert_eq!(bucket_lower_edge(bucket_index(3.0)), 3.0);
+        // Negative and zero collapse to the lowest bucket.
+        assert_eq!(bucket_index(0.0), 0);
+        assert_eq!(bucket_index(-5.0), 0);
+    }
+
+    #[test]
+    fn quantiles_cover_the_distribution() {
+        let mut h = Histogram::default();
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+        // Bucket resolution is ~19%, so quantiles land within one
+        // bucket of the exact rank value.
+        let p50 = h.quantile(0.50);
+        let p95 = h.quantile(0.95);
+        let p99 = h.quantile(0.99);
+        assert!(p50 >= 40.0 && p50 <= 50.0, "p50 {p50}");
+        assert!(p95 >= 80.0 && p95 <= 95.0, "p95 {p95}");
+        assert!(p99 >= 96.0 && p99 <= 99.0, "p99 {p99}");
+        assert!(p50 <= p95 && p95 <= p99);
+        assert_eq!(h.min(), 1.0);
+        assert_eq!(h.max(), 100.0);
+        // Quantiles never escape the observed range.
+        assert!(h.quantile(0.0) >= 1.0);
+        assert!(h.quantile(1.0) <= 100.0);
+    }
+
+    #[test]
+    fn single_sample_quantiles_collapse() {
+        let mut h = Histogram::default();
+        h.record(7.25);
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), 7.25);
+        }
+    }
+
+    #[test]
+    fn disabled_registry_records_nothing() {
+        let mut m = Metrics::new(false);
+        m.record("h", 1.0);
+        m.incr("c", 1);
+        m.gauge("g", 1.0);
+        assert!(m.histogram("h").is_none());
+        assert_eq!(m.counter("c"), 0);
+    }
+
+    #[test]
+    fn json_snapshot_is_stable() {
+        let mut m = Metrics::new(true);
+        m.record("zeta", 2.0);
+        m.record("alpha", 1.0);
+        m.incr("ops", 3);
+        m.gauge("level", 0.5);
+        let a = m.to_json();
+        let b = m.to_json();
+        assert_eq!(a, b);
+        // BTreeMap order: alpha before zeta regardless of insertion.
+        let ia = a.find("\"alpha\"").unwrap();
+        let iz = a.find("\"zeta\"").unwrap();
+        assert!(ia < iz);
+        assert!(a.contains("\"ops\": 3"));
+        assert!(a.contains("\"level\": 0.500000"));
+    }
+}

@@ -1,0 +1,235 @@
+//! `obs`: deterministic observability for the simulation — sim-time
+//! tracing, percentile metrics, utilization telemetry, and per-family
+//! CPU attribution.
+//!
+//! The paper's §4 diagnosis is an *observability* result: only by
+//! attributing Atom CPU time to protocol overhead (HDFS checksums, JNI
+//! crossings, stream codecs) versus application compute could the
+//! authors see where the cycles went. This module makes that analysis
+//! reproducible in the sim:
+//!
+//! * [`trace`] — a span/event recorder over **simulated** time with a
+//!   Chrome-trace-event exporter (`--trace out.json`, loadable in
+//!   Perfetto). Spans cover job phases, map/reduce attempts, block
+//!   write/read pipelines, shuffle fetches, and every fault / recovery /
+//!   balancer action.
+//! * [`metrics`] — log-scale-bucket histograms with p50/p95/p99
+//!   readouts, plus counters and gauges, for task-attempt and block-op
+//!   duration distributions.
+//! * [`timeseries`] — per-device utilization sampling (CPU / disk /
+//!   NIC / ToR uplink) on a fixed sim-time grid, rendered as Perfetto
+//!   counter tracks and summarized in the metrics snapshot.
+//! * [`family_of`] — the flow-class → family taxonomy (`hdfs`,
+//!   `shuffle`, `compute`, `recovery`, `balance`) behind
+//!   `energy::family_breakdown` and `report::render_cpu_breakdown`.
+//!
+//! # Determinism contract
+//!
+//! Everything recorded derives from sim time and stable ids — no wall
+//! clock, no hash-map iteration, no thread identity — so any trace or
+//! metrics file is **byte-identical** across `--threads` counts and
+//! both `SolverMode`s (`tests/integration_obs.rs` enforces this). When
+//! disabled (the default) every recording call is a single branch, no
+//! allocation happens, and nothing observable changes: the default
+//! `BENCH_sweep.json` stays byte-identical with the obs layer compiled
+//! in.
+
+pub mod metrics;
+pub mod timeseries;
+pub mod trace;
+
+pub use metrics::{Histogram, Metrics};
+pub use timeseries::{SeriesSummary, TimeSeries};
+pub use trace::{SpanId, TraceSink};
+
+/// Which obs layers an engine run records. Carried inside
+/// [`crate::sim::SimConfig`]; the all-off default keeps `SimConfig`
+/// cheap to copy and the engine's hot path branch-only.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ObsSpec {
+    /// Record trace spans/instants (Chrome trace export).
+    pub trace: bool,
+    /// Record histograms/counters/gauges.
+    pub metrics: bool,
+    /// Utilization sampling interval in sim seconds; 0 disables
+    /// sampling. Sampling feeds counter tracks into the trace (when
+    /// tracing) and the `"utilization"` metrics section (when metrics).
+    pub sample_interval_s: f64,
+}
+
+impl Default for ObsSpec {
+    fn default() -> Self {
+        ObsSpec { trace: false, metrics: false, sample_interval_s: 0.0 }
+    }
+}
+
+impl ObsSpec {
+    /// Everything on: trace + metrics + sampling at `interval_s`.
+    pub fn full(interval_s: f64) -> Self {
+        ObsSpec { trace: true, metrics: true, sample_interval_s: interval_s }
+    }
+
+    /// True when any layer records anything.
+    pub fn any(&self) -> bool {
+        self.trace || self.metrics || self.sample_interval_s > 0.0
+    }
+}
+
+/// The per-engine observability state: one trace sink, one metrics
+/// registry, one utilization sampler. Owned by `sim::Engine`, which
+/// exposes thin recording wrappers so domain code never borrows the
+/// pieces directly.
+#[derive(Debug, Default)]
+pub struct Obs {
+    /// The spec this state was built from.
+    pub spec: ObsSpec,
+    /// Span/event recorder.
+    pub trace: TraceSink,
+    /// Histogram/counter/gauge registry.
+    pub metrics: Metrics,
+    /// Utilization sampler.
+    pub series: TimeSeries,
+}
+
+impl Obs {
+    /// Build the state for `spec`.
+    pub fn new(spec: ObsSpec) -> Self {
+        Obs {
+            spec,
+            trace: TraceSink::new(spec.trace),
+            metrics: Metrics::new(spec.metrics),
+            series: TimeSeries::new(spec.sample_interval_s),
+        }
+    }
+
+    /// True when any layer is recording.
+    pub fn any_enabled(&self) -> bool {
+        self.spec.any()
+    }
+
+    /// Render the Chrome trace JSON (empty-document when tracing was
+    /// off; still valid JSON so pipelines need no special case).
+    pub fn export_trace(&self, process_name: &str) -> String {
+        self.trace.export(process_name)
+    }
+
+    /// Render the combined metrics snapshot: histograms / counters /
+    /// gauges plus the `"utilization"` per-resource summary. Byte-stable.
+    pub fn metrics_json(&self) -> String {
+        let mut s = String::from("{\n");
+        self.metrics.write_body(&mut s);
+        // Splice the utilization section before the closing brace.
+        while s.ends_with('\n') {
+            s.pop();
+        }
+        s.push_str(",\n  \"utilization\": {\n");
+        self.series.write_body(&mut s);
+        s.push_str("  }\n}\n");
+        s
+    }
+}
+
+/// Portable end-of-run observability artifact: what a driver hands to
+/// callers after the engine is dropped (mirrors how `RunOutcome` keeps
+/// `usage`/`stats` snapshots).
+#[derive(Debug, Clone, Default)]
+pub struct ObsReport {
+    /// Rendered Chrome trace JSON (None when tracing was off).
+    pub trace_json: Option<String>,
+    /// Rendered metrics snapshot (None when metrics were off).
+    pub metrics_json: Option<String>,
+    /// Per-family CPU/joule attribution (always present — it reads the
+    /// usage integrals, which exist whether or not obs recorded).
+    pub cpu_families: Vec<FamilyCpu>,
+}
+
+/// CPU time and energy attributed to one flow-class family on one run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FamilyCpu {
+    /// Family key (one of [`FAMILIES`]).
+    pub family: &'static str,
+    /// Core-seconds of CPU busy time across the cluster.
+    pub cpu_core_seconds: f64,
+    /// Dynamic joules: (full − idle) power prorated by CPU share.
+    pub joules: f64,
+}
+
+/// The five attribution families, in render order: protocol I/O first
+/// (the paper's villain), then shuffle, application compute, and the
+/// two background services.
+pub const FAMILIES: [&str; 5] = ["hdfs", "shuffle", "compute", "recovery", "balance"];
+
+/// Classify a flow-class name (e.g. `"hdfs-write:checksum"`,
+/// `"reducer-search:shuffle"`, `"mapper:app"`) into its family.
+///
+/// The taxonomy layers over the existing `{task}:{kind}` interning
+/// idiom without renaming any class (renames would silently shift the
+/// prefix-summed report tables):
+///
+/// * `recovery*` → `recovery`, `balance*` → `balance` (the existing
+///   background-service prefixes);
+/// * any `*:shuffle` kind → `shuffle` (the MapReduce shuffle fetches);
+/// * `*:app`, `*:sort`, `*:merge` kinds → `compute` (application work
+///   and the map-side sort / reduce-side merge that scale with it);
+/// * everything else → `hdfs` (checksums, JNI crossings, stream codecs,
+///   compression, copies — the per-byte protocol overhead of §4).
+pub fn family_of(class: &str) -> &'static str {
+    if class.starts_with("recovery") {
+        "recovery"
+    } else if class.starts_with("balance") {
+        "balance"
+    } else if class.ends_with(":shuffle") {
+        "shuffle"
+    } else if class.ends_with(":app") || class.ends_with(":sort") || class.ends_with(":merge") {
+        "compute"
+    } else {
+        "hdfs"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_is_all_off() {
+        let s = ObsSpec::default();
+        assert!(!s.any());
+        let o = Obs::new(s);
+        assert!(!o.any_enabled());
+        assert!(!o.trace.enabled);
+        assert!(!o.metrics.enabled);
+        assert!(!o.series.enabled());
+    }
+
+    #[test]
+    fn family_taxonomy_matches_class_idiom() {
+        assert_eq!(family_of("hdfs-write:checksum"), "hdfs");
+        assert_eq!(family_of("hdfs-write:jni"), "hdfs");
+        assert_eq!(family_of("hdfs-read:datanode"), "hdfs");
+        assert_eq!(family_of("mapper:stream"), "hdfs");
+        assert_eq!(family_of("mapper:app"), "compute");
+        assert_eq!(family_of("mapper:sort"), "compute");
+        assert_eq!(family_of("reducer-stat:merge"), "compute");
+        assert_eq!(family_of("reducer-search:shuffle"), "shuffle");
+        assert_eq!(family_of("recovery:xfer"), "recovery");
+        assert_eq!(family_of("recovery:checksum"), "recovery");
+        assert_eq!(family_of("balance:xfer"), "balance");
+        assert!(FAMILIES.contains(&family_of("bench:write-user")));
+    }
+
+    #[test]
+    fn metrics_json_includes_utilization() {
+        let mut o = Obs::new(ObsSpec::full(1.0));
+        o.metrics.incr("blocks", 2);
+        let mut trace = TraceSink::new(false);
+        o.series.record(0.0, &[("n1.cpu".into(), 0.5)], &mut trace);
+        let j = o.metrics_json();
+        assert!(j.contains("\"blocks\": 2"));
+        assert!(j.contains("\"utilization\""));
+        assert!(j.contains("\"n1.cpu\": {\"samples\": 1, \"mean\": 0.500000, \"max\": 0.500000}"));
+        assert_eq!(j, o.metrics_json());
+        // Balanced braces: composition did not corrupt the document.
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+    }
+}

@@ -1,0 +1,179 @@
+//! Per-device utilization telemetry sampled on a fixed sim-time grid.
+//!
+//! The engine drains the sample grid immediately before processing each
+//! popped event: for every grid time `t_k = k * interval ≤ entry.time`
+//! it snapshots each resource's instantaneous utilization (current flow
+//! demand over capacity). Rates are piecewise-constant between processed
+//! events and bit-identical across both `SolverMode`s, and popped times
+//! are nondecreasing, so the emitted sample stream is byte-identical
+//! across solver modes and thread counts — a stale event popping in one
+//! mode but not the other merely drains the same grid points earlier,
+//! with the same rates.
+//!
+//! Each sample becomes one Chrome counter event per device group
+//! (`n3` → cpu/disk/tx/rx/membus, `rack0` → up/down) in the trace, and
+//! feeds a per-resource summary (samples / mean / max) that lands in the
+//! metrics snapshot under `"utilization"`.
+
+use std::collections::BTreeMap;
+
+use super::metrics::num;
+use super::trace::TraceSink;
+
+/// Running summary of one resource's sampled utilization.
+#[derive(Debug, Clone, Default)]
+pub struct SeriesSummary {
+    /// Samples taken.
+    pub samples: u64,
+    /// Sum of sampled utilizations (for the mean).
+    pub sum: f64,
+    /// Peak sampled utilization.
+    pub max: f64,
+}
+
+/// Fixed-interval utilization sampler.
+#[derive(Debug, Default)]
+pub struct TimeSeries {
+    /// Sampling interval in sim seconds; 0 disables sampling.
+    pub interval: f64,
+    /// Next grid time due (starts at 0 so runs get a t=0 baseline).
+    next_t: f64,
+    /// Per-resource summaries, keyed by resource name.
+    summary: BTreeMap<String, SeriesSummary>,
+}
+
+impl TimeSeries {
+    /// A sampler with the given interval (≤ 0 disables it).
+    pub fn new(interval: f64) -> Self {
+        TimeSeries { interval: interval.max(0.0), ..TimeSeries::default() }
+    }
+
+    /// True when sampling is active.
+    pub fn enabled(&self) -> bool {
+        self.interval > 0.0
+    }
+
+    /// Next grid time ≤ `upto` that still needs a sample, if any.
+    /// Callers loop: `while let Some(t) = series.due(upto) { sample at t }`.
+    pub fn due(&self, upto: f64) -> Option<f64> {
+        if self.enabled() && self.next_t <= upto {
+            Some(self.next_t)
+        } else {
+            None
+        }
+    }
+
+    /// Record one grid sample: `utils` is `(resource name, utilization)`
+    /// in resource registration order. Emits one counter event per
+    /// device group into `trace` (if tracing) and updates the summaries.
+    pub fn record(&mut self, now: f64, utils: &[(String, f64)], trace: &mut TraceSink) {
+        for (name, u) in utils {
+            let s = self.summary.entry(name.clone()).or_default();
+            s.samples += 1;
+            s.sum += u;
+            if *u > s.max {
+                s.max = *u;
+            }
+        }
+        if trace.enabled {
+            // Group `n3.cpu` under track `n3` with series key `cpu`
+            // (BTreeMap order keeps the track sequence deterministic).
+            let mut groups: BTreeMap<&str, Vec<(String, f64)>> = BTreeMap::new();
+            for (name, u) in utils {
+                let (track, key) = match name.rfind('.') {
+                    Some(i) => (&name[..i], &name[i + 1..]),
+                    None => (name.as_str(), "value"),
+                };
+                groups.entry(track).or_default().push((key.to_string(), *u));
+            }
+            for (track, series) in &groups {
+                trace.counter(now, track, series);
+            }
+        }
+        self.next_t += self.interval;
+    }
+
+    /// Per-resource summaries in name order (for reports/tests).
+    pub fn summaries(&self) -> impl Iterator<Item = (&str, &SeriesSummary)> {
+        self.summary.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// Write the `"utilization"` JSON section body (no outer braces):
+    /// one object per resource with samples / mean / max.
+    pub(crate) fn write_body(&self, s: &mut String) {
+        let n = self.summary.len();
+        for (i, (name, sm)) in self.summary.iter().enumerate() {
+            let mean = if sm.samples == 0 { 0.0 } else { sm.sum / sm.samples as f64 };
+            s.push_str(&format!(
+                "    \"{}\": {{\"samples\": {}, \"mean\": {}, \"max\": {}}}{}\n",
+                name,
+                sm.samples,
+                num(mean),
+                num(sm.max),
+                if i + 1 == n { "" } else { "," }
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_drains_in_order() {
+        let mut ts = TimeSeries::new(0.5);
+        let mut trace = TraceSink::new(false);
+        assert!(ts.enabled());
+        let mut taken = Vec::new();
+        while let Some(t) = ts.due(1.6) {
+            taken.push(t);
+            ts.record(t, &[("n1.cpu".into(), 0.5)], &mut trace);
+        }
+        assert_eq!(taken, vec![0.0, 0.5, 1.0, 1.5]);
+        // Nothing more due until sim time passes 2.0.
+        assert!(ts.due(1.9).is_none());
+        assert_eq!(ts.due(2.0), Some(2.0));
+    }
+
+    #[test]
+    fn disabled_sampler_is_never_due() {
+        let ts = TimeSeries::new(0.0);
+        assert!(!ts.enabled());
+        assert!(ts.due(1e12).is_none());
+    }
+
+    #[test]
+    fn summaries_track_mean_and_max() {
+        let mut ts = TimeSeries::new(1.0);
+        let mut trace = TraceSink::new(false);
+        ts.record(0.0, &[("n1.cpu".into(), 0.2), ("n1.disk".into(), 0.8)], &mut trace);
+        ts.record(1.0, &[("n1.cpu".into(), 0.6), ("n1.disk".into(), 0.4)], &mut trace);
+        let m: Vec<_> = ts.summaries().collect();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[0].0, "n1.cpu");
+        assert!((m[0].1.sum / m[0].1.samples as f64 - 0.4).abs() < 1e-12);
+        assert_eq!(m[0].1.max, 0.6);
+        assert_eq!(m[1].1.max, 0.8);
+    }
+
+    #[test]
+    fn trace_counters_group_by_device() {
+        let mut ts = TimeSeries::new(1.0);
+        let mut trace = TraceSink::new(true);
+        ts.record(
+            0.0,
+            &[
+                ("n1.cpu".into(), 0.25),
+                ("n1.disk".into(), 0.5),
+                ("rack0.up".into(), 0.75),
+            ],
+            &mut trace,
+        );
+        let out = trace.export("t");
+        assert!(out.contains("\"name\":\"n1\""));
+        assert!(out.contains("\"cpu\":0.250000,\"disk\":0.500000"));
+        assert!(out.contains("\"name\":\"rack0\""));
+        assert!(out.contains("\"up\":0.750000"));
+    }
+}

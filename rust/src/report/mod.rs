@@ -761,6 +761,30 @@ pub fn render_churn(rows: &[crate::sweep::ChurnRow]) -> String {
     s
 }
 
+/// Render the per-family CPU/energy breakdown — the paper's §4 "where
+/// do the cycles go" decomposition: busy CPU core-seconds (and their
+/// marginal joules) attributed to the protocol families of
+/// [`crate::obs::FAMILIES`]. On the Atom cluster the HDFS and shuffle
+/// rows dominate the compute row (the paper's thesis: the framework's
+/// per-byte protocol work saturates the weak cores); on the Opteron
+/// cluster compute holds a far larger share.
+pub fn render_cpu_breakdown(title: &str, fams: &[crate::obs::FamilyCpu]) -> String {
+    let total: f64 = fams.iter().map(|f| f.cpu_core_seconds).sum();
+    let mut s = format!(
+        "CPU breakdown by protocol family ({title})\n\
+         family         core-s   share   marginal-J\n"
+    );
+    for f in fams {
+        let share = if total > 0.0 { f.cpu_core_seconds / total * 100.0 } else { 0.0 };
+        s.push_str(&format!(
+            "{:<12} {:>8.1}  {:>5.1}%  {:>10.1}\n",
+            f.family, f.cpu_core_seconds, share, f.joules,
+        ));
+    }
+    s.push_str(&format!("{:<12} {:>8.1}\n", "total", total));
+    s
+}
+
 /// Render the degraded-mode table: every faulted sweep scenario next to
 /// its fault-free twin — runtime overhead, recovery traffic, wasted
 /// speculative work, and the energy bill of failure tolerance.

@@ -89,17 +89,26 @@ pub struct SimConfig {
     pub seed: u64,
     /// Rate-solver mode.
     pub solver: SolverMode,
+    /// Observability layers to record (all off by default; the engine's
+    /// hot path only pays a branch per recording call when off).
+    pub obs: crate::obs::ObsSpec,
 }
 
 impl SimConfig {
     /// Config with `seed` and the default incremental solver.
     pub fn new(seed: u64) -> Self {
-        SimConfig { seed, solver: SolverMode::Incremental }
+        SimConfig { seed, solver: SolverMode::Incremental, obs: crate::obs::ObsSpec::default() }
     }
 
     /// Override the solver mode.
     pub fn with_solver(mut self, solver: SolverMode) -> Self {
         self.solver = solver;
+        self
+    }
+
+    /// Override the observability spec.
+    pub fn with_obs(mut self, obs: crate::obs::ObsSpec) -> Self {
+        self.obs = obs;
         self
     }
 }
@@ -127,6 +136,10 @@ pub struct EngineStats {
     pub peak_live_flows: usize,
     /// High-water mark of the event-heap size (heap churn proxy).
     pub peak_heap: usize,
+    /// Wall-clock nanoseconds spent inside the rate solver (the only
+    /// wall-clock value in the engine; never feeds back into simulated
+    /// behaviour, only perf reporting and the bench wall-clock gate).
+    pub solve_ns: u64,
 }
 
 type Callback = Box<dyn FnOnce(&mut Engine)>;
@@ -216,6 +229,7 @@ pub struct Engine {
     scratch: SolveScratch,
     live_flow_count: usize,
     stats: EngineStats,
+    obs: crate::obs::Obs,
 }
 
 impl Engine {
@@ -262,6 +276,7 @@ impl Engine {
             scratch: SolveScratch::default(),
             live_flow_count: 0,
             stats: EngineStats::default(),
+            obs: crate::obs::Obs::new(cfg.obs),
         }
     }
 
@@ -698,6 +713,7 @@ impl Engine {
         self.comp_res.sort_unstable();
         self.stats.solves += 1;
         self.stats.flows_resolved += self.comp_flows.len() as u64;
+        let solve_t0 = std::time::Instant::now();
         solve_rates(
             &self.flows,
             &self.comp_flows,
@@ -705,6 +721,9 @@ impl Engine {
             &self.resources,
             &mut self.scratch,
         );
+        // Wall clock for perf reporting only; simulated behaviour never
+        // reads it, so determinism is untouched.
+        self.stats.solve_ns += solve_t0.elapsed().as_nanos() as u64;
         // Commit changed rates (settling progress at the OLD rate first)
         // and push new predictions only where the rate moved. Unchanged
         // flows keep their stored rate, settle point, version, and
@@ -751,6 +770,9 @@ impl Engine {
         assert_eq!(self.batch_depth, 0, "run() inside batch()");
         while let Some(entry) = self.heap.pop() {
             debug_assert!(entry.time >= self.now - 1e-9, "time went backwards");
+            if self.obs.series.enabled() {
+                self.emit_utilization_samples(entry.time);
+            }
             match entry.kind {
                 EventKind::Timer { id, cb } => {
                     if self.cancelled_timers.remove(&id.0) {
@@ -820,6 +842,91 @@ impl Engine {
     /// Total busy unit-seconds on `resource` across all classes.
     pub fn busy_total(&self, resource: ResourceId) -> f64 {
         self.resources[resource.index()].busy_integral
+    }
+
+    /// Observability state (exporters and tests read through this; the
+    /// recording wrappers below are the write path).
+    pub fn obs(&self) -> &crate::obs::Obs {
+        &self.obs
+    }
+
+    /// True when trace recording is active. Callers building span names
+    /// guard their `format!` behind this so the default path does zero
+    /// formatting work.
+    pub fn trace_enabled(&self) -> bool {
+        self.obs.trace.enabled
+    }
+
+    /// True when metrics recording is active.
+    pub fn metrics_enabled(&self) -> bool {
+        self.obs.metrics.enabled
+    }
+
+    /// Open a trace span at the current sim time (see
+    /// [`crate::obs::TraceSink::span_begin`]). Returns
+    /// [`crate::obs::SpanId::NONE`] when tracing is off.
+    pub fn span_begin(
+        &mut self,
+        cat: &'static str,
+        name: String,
+        tid: u32,
+    ) -> crate::obs::SpanId {
+        let now = self.now;
+        self.obs.trace.span_begin(now, cat, name, tid)
+    }
+
+    /// Close a trace span at the current sim time (no-op for
+    /// [`crate::obs::SpanId::NONE`]).
+    pub fn span_end(&mut self, id: crate::obs::SpanId) {
+        let now = self.now;
+        self.obs.trace.span_end(now, id);
+    }
+
+    /// Record a zero-duration trace instant at the current sim time.
+    pub fn trace_instant(&mut self, cat: &'static str, name: String, tid: u32) {
+        let now = self.now;
+        self.obs.trace.instant(now, cat, name, tid);
+    }
+
+    /// Record a duration (sim seconds) into histogram `name`.
+    pub fn metric_duration(&mut self, name: &'static str, seconds: f64) {
+        self.obs.metrics.record(name, seconds);
+    }
+
+    /// Add `delta` to metrics counter `name`.
+    pub fn metric_incr(&mut self, name: &'static str, delta: u64) {
+        self.obs.metrics.incr(name, delta);
+    }
+
+    /// Set metrics gauge `name` to `v`.
+    pub fn metric_gauge(&mut self, name: &'static str, v: f64) {
+        self.obs.metrics.gauge(name, v);
+    }
+
+    /// Drain the utilization sample grid up to `upto` (the next event's
+    /// time). Rates are piecewise-constant between processed events and
+    /// bit-identical across solver modes, so the emitted samples — taken
+    /// at fixed grid times with the current rates — are byte-identical
+    /// across `SolverMode`s and thread counts (see `obs::timeseries`).
+    fn emit_utilization_samples(&mut self, upto: f64) {
+        while let Some(t) = self.obs.series.due(upto) {
+            let mut load = vec![0.0f64; self.resources.len()];
+            for f in self.flows.iter().flatten() {
+                if !f.alive || f.rate <= 0.0 {
+                    continue;
+                }
+                for d in &f.spec.demands {
+                    load[d.resource.index()] += d.coeff * f.rate;
+                }
+            }
+            let utils: Vec<(String, f64)> = self
+                .resources
+                .iter()
+                .enumerate()
+                .map(|(i, r)| (r.name.clone(), load[i] / r.capacity))
+                .collect();
+            self.obs.series.record(t, &utils, &mut self.obs.trace);
+        }
     }
 
     /// Owned per-resource usage snapshot (name, busy time, mean

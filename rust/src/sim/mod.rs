@@ -62,6 +62,7 @@ pub mod resource;
 pub mod rng;
 
 pub use engine::{Engine, EngineStats, FlowId, SimConfig, SolverMode, TimerId};
+pub use crate::obs::ObsSpec;
 pub use flow::{FlowSpec, SerialStage};
 pub use resource::{ResourceId, UsageClass, UsageSnapshot};
 pub use rng::Rng;

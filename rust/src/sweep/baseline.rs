@@ -202,7 +202,12 @@ mod tests {
                 ScenarioRecord::new(sc, seconds, bytes, 1000.0, &[], EngineStats::default())
             })
             .collect();
-        SweepResults { base_seed: 1, solver: SolverMode::Incremental, records }
+        SweepResults {
+            base_seed: 1,
+            solver: SolverMode::Incremental,
+            perf_wallclock: false,
+            records,
+        }
     }
 
     #[test]

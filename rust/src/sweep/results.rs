@@ -135,6 +135,12 @@ pub struct ScenarioRecord {
     /// design), so they are serialized in the separate "perf" section —
     /// the "records" section stays byte-identical across modes.
     pub stats: EngineStats,
+    /// Per-family CPU attribution
+    /// ([`crate::energy::family_breakdown`]), captured only when the
+    /// sweep ran with observability on. Empty by default — and then
+    /// nothing is serialized, keeping obs-off `BENCH_sweep.json`
+    /// byte-identical to pre-obs builds.
+    pub cpu_families: Vec<crate::obs::FamilyCpu>,
 }
 
 impl ScenarioRecord {
@@ -188,6 +194,7 @@ impl ScenarioRecord {
             recovery_joules: 0.0,
             balance_joules: 0.0,
             stats,
+            cpu_families: Vec::new(),
         }
     }
 
@@ -202,6 +209,17 @@ impl ScenarioRecord {
         self.faults = Some(faults);
         self.recovery_joules = recovery_joules;
         self.balance_joules = balance_joules;
+        self
+    }
+
+    /// Attach the per-family CPU attribution of an observability-enabled
+    /// run (the runner calls this only when the sweep armed the obs
+    /// layer).
+    pub fn with_cpu_families(
+        mut self,
+        cpu_families: Vec<crate::obs::FamilyCpu>,
+    ) -> ScenarioRecord {
+        self.cpu_families = cpu_families;
         self
     }
 }
@@ -259,6 +277,10 @@ pub struct SweepResults {
     pub base_seed: u64,
     /// Engine solver mode every scenario ran with.
     pub solver: SolverMode,
+    /// Emit wall-clock solver time (`solve_ms`) in the perf section.
+    /// Off by default: wall clock is machine-dependent, and the default
+    /// `BENCH_sweep.json` must stay byte-identical across hosts.
+    pub perf_wallclock: bool,
     /// Per-scenario records, in grid expansion order.
     pub records: Vec<ScenarioRecord>,
 }
@@ -451,6 +473,21 @@ impl SweepResults {
                     ));
                 }
             }
+            // Family CPU attribution is present only on obs-enabled
+            // sweeps, so the default file again keeps its exact bytes.
+            if !r.cpu_families.is_empty() {
+                s.push_str(", \"cpu_families\": {");
+                for (j, fam) in r.cpu_families.iter().enumerate() {
+                    s.push_str(&format!(
+                        "\"{}\": {{\"core_s\": {}, \"joules\": {}}}{}",
+                        fam.family,
+                        num(fam.cpu_core_seconds),
+                        num(fam.joules),
+                        if j + 1 == r.cpu_families.len() { "" } else { ", " }
+                    ));
+                }
+                s.push('}');
+            }
             s.push_str(if i + 1 == self.records.len() { "}\n" } else { "},\n" });
         }
         s.push_str("  ],\n");
@@ -496,24 +533,38 @@ impl SweepResults {
                 t.events_processed += r.stats.events_processed;
                 t.peak_live_flows = t.peak_live_flows.max(r.stats.peak_live_flows);
                 t.peak_heap = t.peak_heap.max(r.stats.peak_heap);
+                t.solve_ns += r.stats.solve_ns;
             }
+            // Wall-clock solver time is opt-in: it varies run to run, so
+            // emitting it by default would break bench baseline diffs.
+            let t_wall = if self.perf_wallclock {
+                format!(", \"solve_ms\": {}", num(t.solve_ns as f64 / 1e6))
+            } else {
+                String::new()
+            };
             s.push_str(&format!(
                 "    \"totals\": {{\"solves\": {}, \"flows_resolved\": {}, \
                  \"stale_events_skipped\": {}, \"events\": {}, \"peak_live_flows\": {}, \
-                 \"peak_heap\": {}}},\n",
+                 \"peak_heap\": {}{}}},\n",
                 t.solves,
                 t.flows_resolved,
                 t.stale_events_skipped,
                 t.events_processed,
                 t.peak_live_flows,
-                t.peak_heap
+                t.peak_heap,
+                t_wall
             ));
             s.push_str("    \"per_scenario\": [\n");
             for (i, r) in self.records.iter().enumerate() {
+                let r_wall = if self.perf_wallclock {
+                    format!(", \"solve_ms\": {}", num(r.stats.solve_ns as f64 / 1e6))
+                } else {
+                    String::new()
+                };
                 s.push_str(&format!(
                     "      {{\"id\": \"{}\", \"solves\": {}, \"flows_resolved\": {}, \
                      \"stale_events_skipped\": {}, \"events\": {}, \"peak_live_flows\": {}, \
-                     \"peak_heap\": {}}}{}\n",
+                     \"peak_heap\": {}{}}}{}\n",
                     esc(&r.id),
                     r.stats.solves,
                     r.stats.flows_resolved,
@@ -521,6 +572,7 @@ impl SweepResults {
                     r.stats.events_processed,
                     r.stats.peak_live_flows,
                     r.stats.peak_heap,
+                    r_wall,
                     if i + 1 == self.records.len() { "" } else { "," }
                 ));
             }

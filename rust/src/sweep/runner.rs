@@ -75,6 +75,18 @@ pub struct SweepOptions {
     /// pre-refactor baseline kept for benchmarks and the byte-identical
     /// regression test.
     pub solver: SolverMode,
+    /// Observability switches applied to every scenario's engine
+    /// (tracing, metrics, utilization sampling). Default all-off, which
+    /// keeps `BENCH_sweep.json` byte-identical to pre-obs builds.
+    pub obs: crate::sim::ObsSpec,
+    /// When set, each scenario's trace / metrics exports are written to
+    /// `<dir>/<scenario-id>.trace.json` and
+    /// `<dir>/<scenario-id>.metrics.json` (the directory is created on
+    /// demand). Only meaningful with [`SweepOptions::obs`] switched on.
+    pub trace_dir: Option<String>,
+    /// Emit wall-clock solver time in the perf section
+    /// ([`SweepResults::perf_wallclock`]). Off by default.
+    pub perf_wallclock: bool,
     /// Print per-scenario progress lines to stderr.
     pub progress: bool,
 }
@@ -90,6 +102,9 @@ impl Default for SweepOptions {
             straggler_slowdown: 0.4,
             balancer_bandwidth_bps: 1.0 * MIB,
             solver: SolverMode::Incremental,
+            obs: crate::sim::ObsSpec::default(),
+            trace_dir: None,
+            perf_wallclock: false,
             progress: false,
         }
     }
@@ -135,7 +150,42 @@ pub fn run_sweep(grid: &SweepGrid, opts: &SweepOptions) -> SweepResults {
         .into_iter()
         .map(|m| m.into_inner().unwrap().expect("scenario slot never filled"))
         .collect();
-    SweepResults { base_seed: grid.base_seed, solver: opts.solver, records }
+    SweepResults {
+        base_seed: grid.base_seed,
+        solver: opts.solver,
+        perf_wallclock: opts.perf_wallclock,
+        records,
+    }
+}
+
+/// Fold a run's observability report into the record: write the trace /
+/// metrics exports into [`SweepOptions::trace_dir`] (when set) and attach
+/// the family CPU attribution. A `None` report (obs all-off) returns the
+/// record untouched, so obs-off sweeps are bit-for-bit what they were.
+fn attach_obs(
+    rec: ScenarioRecord,
+    obs: Option<crate::obs::ObsReport>,
+    opts: &SweepOptions,
+) -> ScenarioRecord {
+    let Some(report) = obs else { return rec };
+    if let Some(dir) = &opts.trace_dir {
+        if let Err(e) = std::fs::create_dir_all(dir) {
+            eprintln!("[sweep] cannot create trace dir {dir}: {e}");
+        }
+        if let Some(t) = &report.trace_json {
+            let path = format!("{dir}/{}.trace.json", rec.id);
+            if let Err(e) = std::fs::write(&path, t) {
+                eprintln!("[sweep] cannot write {path}: {e}");
+            }
+        }
+        if let Some(m) = &report.metrics_json {
+            let path = format!("{dir}/{}.metrics.json", rec.id);
+            if let Err(e) = std::fs::write(&path, m) {
+                eprintln!("[sweep] cannot write {path}: {e}");
+            }
+        }
+    }
+    rec.with_cpu_families(report.cpu_families)
 }
 
 /// Run one scenario to completion on the current thread.
@@ -149,7 +199,7 @@ pub fn run_scenario(sc: &Scenario, opts: &SweepOptions) -> ScenarioRecord {
     let conf = sc.conf();
     let preset = sc.preset();
     let slaves = preset.slave_count() as f64;
-    let sim = SimConfig::new(sc.seed).with_solver(opts.solver);
+    let sim = SimConfig::new(sc.seed).with_solver(opts.solver).with_obs(opts.obs);
     let mut plan = sc.fault_plan();
     plan.straggler_slowdown = opts.straggler_slowdown;
     if let Some(b) = plan.balancer.as_mut() {
@@ -180,11 +230,12 @@ pub fn run_scenario(sc: &Scenario, opts: &SweepOptions) -> ScenarioRecord {
                 &run.usage,
                 run.stats,
             );
-            if sc.has_faults() {
+            let rec = if sc.has_faults() {
                 rec.with_faults(run.faults, run.energy.recovery_joules, run.energy.balance_joules)
             } else {
                 rec
-            }
+            };
+            attach_obs(rec, run.obs, opts)
         }
         Workload::DfsioRead => {
             let run = testdfsio::read_test_faulted(
@@ -205,11 +256,12 @@ pub fn run_scenario(sc: &Scenario, opts: &SweepOptions) -> ScenarioRecord {
                 &run.usage,
                 run.stats,
             );
-            if sc.has_faults() {
+            let rec = if sc.has_faults() {
                 rec.with_faults(run.faults, run.energy.recovery_joules, run.energy.balance_joules)
             } else {
                 rec
-            }
+            };
+            attach_obs(rec, run.obs, opts)
         }
         Workload::Search | Workload::Stat => {
             let app = if sc.workload == Workload::Search { App::Search } else { App::Stat };
@@ -230,6 +282,7 @@ pub fn run_scenario(sc: &Scenario, opts: &SweepOptions) -> ScenarioRecord {
                 kernel_every: usize::MAX, // cost model only on the sweep path
                 kernels: None,
                 solver: opts.solver,
+                obs: opts.obs,
                 faults: plan,
                 fault_seed,
                 ..ZonesConfig::default()
@@ -246,11 +299,12 @@ pub fn run_scenario(sc: &Scenario, opts: &SweepOptions) -> ScenarioRecord {
                 &out.usage,
                 out.stats,
             );
-            if sc.has_faults() {
+            let rec = if sc.has_faults() {
                 rec.with_faults(out.faults, out.energy.recovery_joules, out.energy.balance_joules)
             } else {
                 rec
-            }
+            };
+            attach_obs(rec, out.obs, opts)
         }
     }
 }
@@ -302,6 +356,52 @@ mod tests {
         let a = run_sweep(&g, &tiny_opts(1)).to_json();
         let b = run_sweep(&g, &tiny_opts(4)).to_json();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn obs_sweep_matches_plain_sweep_and_attaches_families() {
+        let g = tiny_grid(13);
+        let plain = run_sweep(&g, &tiny_opts(1));
+        let opts = SweepOptions { obs: crate::sim::ObsSpec::full(10.0), ..tiny_opts(1) };
+        let obsed = run_sweep(&g, &opts);
+        for (a, b) in plain.records.iter().zip(obsed.records.iter()) {
+            assert_eq!(a.seconds, b.seconds, "{}: obs changed the simulation", a.id);
+            assert_eq!(a.joules, b.joules, "{}: obs changed the energy model", a.id);
+            assert!(a.cpu_families.is_empty(), "obs-off record grew attribution");
+            assert_eq!(b.cpu_families.len(), crate::obs::FAMILIES.len());
+            assert_eq!(b.cpu_families[0].family, "hdfs");
+            assert!(
+                b.cpu_families[0].cpu_core_seconds > 0.0,
+                "{}: dfsio write must burn hdfs-family CPU",
+                b.id
+            );
+        }
+    }
+
+    #[test]
+    fn trace_dir_gets_per_scenario_files() {
+        let dir =
+            std::env::temp_dir().join(format!("amdahl-obs-sweep-{}", std::process::id()));
+        let g = tiny_grid(19);
+        let opts = SweepOptions {
+            obs: crate::sim::ObsSpec::full(10.0),
+            trace_dir: Some(dir.to_string_lossy().into_owned()),
+            ..tiny_opts(2)
+        };
+        run_sweep(&g, &opts);
+        for sc in g.expand() {
+            assert!(
+                dir.join(format!("{}.trace.json", sc.id)).is_file(),
+                "{}: missing trace export",
+                sc.id
+            );
+            assert!(
+                dir.join(format!("{}.metrics.json", sc.id)).is_file(),
+                "{}: missing metrics export",
+                sc.id
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -72,6 +72,9 @@ pub struct ZonesConfig {
     /// `seed`. Sweeps pass [`crate::faults::fault_stream_seed`] of the
     /// scenario's stable id so faults never depend on insertion order.
     pub fault_seed: u64,
+    /// Observability switches (default all-off: zero-cost, and every
+    /// output byte-identical to a build without the obs layer).
+    pub obs: crate::sim::ObsSpec,
 }
 
 impl Default for ZonesConfig {
@@ -89,6 +92,7 @@ impl Default for ZonesConfig {
             solver: crate::sim::SolverMode::Incremental,
             faults: crate::faults::InjectionPlan::empty(),
             fault_seed: 0,
+            obs: crate::sim::ObsSpec::default(),
         }
     }
 }

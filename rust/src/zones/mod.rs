@@ -51,6 +51,9 @@ pub struct RunOutcome {
     pub stats: crate::sim::EngineStats,
     /// What fault injection did to the run (all zeros when inactive).
     pub faults: crate::faults::FaultStats,
+    /// Observability exports (trace JSON, metrics JSON, family CPU
+    /// breakdown); `None` when [`ZonesConfig::obs`] left everything off.
+    pub obs: Option<crate::obs::ObsReport>,
 }
 
 /// Build a cluster world for `preset` and ingest the catalog.
@@ -88,8 +91,9 @@ pub fn setup_world(
 
 /// Run one application on one cluster preset; the paper's Table 3 cells.
 pub fn run_app(preset: ClusterPreset, conf: &HadoopConf, zcfg: &ZonesConfig, app: App) -> RunOutcome {
-    let mut engine =
-        Engine::from_config(crate::sim::SimConfig::new(zcfg.seed).with_solver(zcfg.solver));
+    let mut engine = Engine::from_config(
+        crate::sim::SimConfig::new(zcfg.seed).with_solver(zcfg.solver).with_obs(zcfg.obs),
+    );
     let cat = zcfg.catalog();
     let (world, files) = setup_world(&mut engine, preset, conf, cat.input_bytes());
     if zcfg.faults.active() {
@@ -150,9 +154,26 @@ pub fn run_app(preset: ClusterPreset, conf: &HadoopConf, zcfg: &ZonesConfig, app
     };
 
     let total = job.duration + step2.as_ref().map(|j| j.duration).unwrap_or(0.0);
-    let energy = {
+    let (energy, obs) = {
         let w = world.borrow();
-        crate::energy::measure(&engine, &w.cluster, total)
+        let energy = crate::energy::measure(&engine, &w.cluster, total);
+        let obs = if engine.obs().any_enabled() {
+            let process = match app {
+                App::Search => "neighbor-search",
+                App::Stat => "neighbor-stat",
+            };
+            Some(crate::obs::ObsReport {
+                trace_json: engine
+                    .trace_enabled()
+                    .then(|| engine.obs().export_trace(process)),
+                metrics_json: (engine.metrics_enabled() || engine.obs().series.enabled())
+                    .then(|| engine.obs().metrics_json()),
+                cpu_families: crate::energy::family_breakdown(&engine, &w.cluster),
+            })
+        } else {
+            None
+        };
+        (energy, obs)
     };
     let red = reduce.borrow();
     RunOutcome {
@@ -166,6 +187,7 @@ pub fn run_app(preset: ClusterPreset, conf: &HadoopConf, zcfg: &ZonesConfig, app
         usage: engine.usage_snapshot(),
         stats: engine.stats(),
         faults: world.borrow().faults.stats.clone(),
+        obs,
     }
 }
 

@@ -1,0 +1,213 @@
+//! Integration tests for the observability subsystem: trace / metrics
+//! determinism across solver modes and thread counts, the zero-cost
+//! guarantee when obs is off, and the §4 family CPU attribution shapes
+//! (where do the Atom's cycles go).
+
+use amdahl_hadoop::conf::{ClusterPreset, HadoopConf};
+use amdahl_hadoop::hdfs::testdfsio;
+use amdahl_hadoop::hw::MIB;
+use amdahl_hadoop::obs::{ObsReport, FAMILIES};
+use amdahl_hadoop::sim::{ObsSpec, SimConfig, SolverMode};
+use amdahl_hadoop::sweep::{
+    run_sweep, ClusterFamily, SweepGrid, SweepOptions, Workload, WritePath,
+};
+use amdahl_hadoop::zones::{run_app, App, ZonesConfig};
+
+fn dfsio_obs(solver: SolverMode) -> ObsReport {
+    let conf = HadoopConf::default();
+    let sim = SimConfig::new(42).with_solver(solver).with_obs(ObsSpec::full(5.0));
+    let run = testdfsio::write_test_on(ClusterPreset::Amdahl, sim, 2, 48.0 * MIB, &conf);
+    run.obs.expect("obs was armed")
+}
+
+fn zones_obs(app: App, solver: SolverMode) -> (ObsReport, f64) {
+    let conf = HadoopConf {
+        buffered_output: true,
+        direct_io_write: true,
+        reduce_slots: if app == App::Stat { 3 } else { 2 },
+        ..Default::default()
+    };
+    let z = ZonesConfig {
+        seed: 17,
+        scale: 0.0008,
+        kernel_every: usize::MAX,
+        kernels: None,
+        solver,
+        obs: ObsSpec::full(5.0),
+        ..Default::default()
+    };
+    let out = run_app(ClusterPreset::Amdahl, &conf, &z, app);
+    (out.obs.expect("obs was armed"), out.total_seconds)
+}
+
+/// The tentpole determinism bar: the trace and metrics exports are pure
+/// functions of the scenario — byte-identical across both `SolverMode`s
+/// (rates are bit-identical by the PR-2 refactor gate, and the obs layer
+/// adds no RNG, no wall clock, and no hash-map iteration).
+#[test]
+fn trace_and_metrics_are_byte_identical_across_solver_modes() {
+    let a = dfsio_obs(SolverMode::Incremental);
+    let b = dfsio_obs(SolverMode::WholeSet);
+    assert_eq!(a.trace_json, b.trace_json, "dfsio trace diverged across solver modes");
+    assert_eq!(a.metrics_json, b.metrics_json, "dfsio metrics diverged across solver modes");
+
+    let (za, ta) = zones_obs(App::Search, SolverMode::Incremental);
+    let (zb, tb) = zones_obs(App::Search, SolverMode::WholeSet);
+    assert_eq!(ta, tb, "search outcome diverged across solver modes");
+    assert_eq!(za.trace_json, zb.trace_json, "search trace diverged across solver modes");
+    assert_eq!(za.metrics_json, zb.metrics_json, "search metrics diverged across solver modes");
+    assert_eq!(za.cpu_families, zb.cpu_families);
+}
+
+/// Per-scenario trace files written by a sweep are byte-identical across
+/// worker thread counts (each scenario's engine lives entirely inside
+/// one thread; records land in grid order).
+#[test]
+fn sweep_trace_files_are_byte_identical_across_thread_counts() {
+    let g = SweepGrid {
+        families: vec![ClusterFamily::Amdahl],
+        nodes: vec![5],
+        cores: vec![1, 2],
+        write_paths: vec![WritePath::DirectIo],
+        lzo: vec![false],
+        workloads: vec![Workload::DfsioWrite, Workload::Search],
+        ..SweepGrid::paper_default(42, 1, 1)
+    };
+    let dir = |tag: &str| {
+        std::env::temp_dir().join(format!("amdahl-obs-int-{}-{tag}", std::process::id()))
+    };
+    let opts = |threads: usize, tag: &str| SweepOptions {
+        threads,
+        dfsio_bytes_per_worker: 32.0 * MIB,
+        dfsio_workers: 2,
+        obs: ObsSpec::full(10.0),
+        trace_dir: Some(dir(tag).to_string_lossy().into_owned()),
+        ..SweepOptions::default()
+    };
+    let r1 = run_sweep(&g, &opts(1, "t1"));
+    let r4 = run_sweep(&g, &opts(4, "t4"));
+    assert_eq!(r1.to_json(), r4.to_json(), "sweep JSON diverged across thread counts");
+    for sc in g.expand() {
+        for kind in ["trace", "metrics"] {
+            let name = format!("{}.{kind}.json", sc.id);
+            let a = std::fs::read(dir("t1").join(&name)).expect("threads=1 export missing");
+            let b = std::fs::read(dir("t4").join(&name)).expect("threads=4 export missing");
+            assert_eq!(a, b, "{name} diverged across thread counts");
+        }
+    }
+    let _ = std::fs::remove_dir_all(dir("t1"));
+    let _ = std::fs::remove_dir_all(dir("t4"));
+}
+
+/// Zero-cost-when-off: an obs-off sweep carries no obs artifacts — no
+/// report, no `cpu_families` / `solve_ms` keys in the JSON — and turning
+/// obs ON changes no simulation measurement.
+#[test]
+fn disabled_obs_is_invisible_and_enabling_it_changes_nothing() {
+    let g = SweepGrid {
+        families: vec![ClusterFamily::Amdahl],
+        nodes: vec![5],
+        cores: vec![2],
+        write_paths: vec![WritePath::DirectIo],
+        lzo: vec![false],
+        workloads: vec![Workload::DfsioWrite, Workload::Search],
+        ..SweepGrid::paper_default(7, 1, 1)
+    };
+    let base = SweepOptions {
+        threads: 2,
+        dfsio_bytes_per_worker: 32.0 * MIB,
+        dfsio_workers: 2,
+        ..SweepOptions::default()
+    };
+    let off = run_sweep(&g, &base);
+    let json = off.to_json();
+    assert!(!json.contains("cpu_families"), "obs-off JSON grew an obs key");
+    assert!(!json.contains("solve_ms"), "wall clock leaked into default JSON");
+
+    let on = run_sweep(&g, &SweepOptions { obs: ObsSpec::full(5.0), ..base });
+    for (a, b) in off.records.iter().zip(on.records.iter()) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.seconds, b.seconds, "{}: obs changed simulated time", a.id);
+        assert_eq!(a.bytes_moved, b.bytes_moved);
+        assert_eq!(a.joules, b.joules, "{}: obs changed the energy model", a.id);
+        assert!(!b.cpu_families.is_empty(), "{}: obs-on record lost attribution", b.id);
+    }
+}
+
+/// `--perf-wallclock` puts `solve_ms` into the perf section (and only
+/// there — `sim_json` has no perf section at all).
+#[test]
+fn perf_wallclock_flag_gates_solve_ms() {
+    let g = SweepGrid {
+        families: vec![ClusterFamily::Amdahl],
+        nodes: vec![5],
+        cores: vec![1],
+        write_paths: vec![WritePath::DirectIo],
+        lzo: vec![false],
+        workloads: vec![Workload::DfsioWrite],
+        ..SweepGrid::paper_default(7, 1, 1)
+    };
+    let opts = SweepOptions {
+        threads: 1,
+        dfsio_bytes_per_worker: 32.0 * MIB,
+        dfsio_workers: 2,
+        perf_wallclock: true,
+        ..SweepOptions::default()
+    };
+    let r = run_sweep(&g, &opts);
+    assert!(r.to_json().contains("\"solve_ms\""), "perf_wallclock did not emit solve_ms");
+    assert!(!r.sim_json().contains("solve_ms"));
+    assert!(
+        r.records.iter().any(|x| x.stats.solve_ns > 0),
+        "solver spent no measurable wall time"
+    );
+}
+
+/// The trace export is a loadable Chrome trace document with the spans
+/// the tentpole promises: job phases, map/reduce attempts, block
+/// pipelines, shuffle fetches.
+#[test]
+fn search_trace_contains_the_promised_span_families() {
+    let (obs, _) = zones_obs(App::Search, SolverMode::Incremental);
+    let trace = obs.trace_json.expect("trace armed");
+    assert!(trace.starts_with("{\"traceEvents\":[\n"));
+    assert!(trace.ends_with("\n]}\n"));
+    assert_eq!(trace.matches('{').count(), trace.matches('}').count());
+    for needle in [
+        "\"cat\":\"job\"",       // job span + phase instants
+        "\"cat\":\"mapreduce\"", // map/reduce attempt spans
+        "\"cat\":\"hdfs\"",      // block write/read pipeline spans
+        "\"cat\":\"shuffle\"",   // reduce-side fetch spans
+        "\"ph\":\"C\"",          // utilization counter samples
+    ] {
+        assert!(trace.contains(needle), "trace missing {needle}");
+    }
+    let metrics = obs.metrics_json.expect("metrics armed");
+    for needle in ["hdfs.block_write_s", "shuffle.fetch_s", "mapreduce.map_attempt_s", "p95"] {
+        assert!(metrics.contains(needle), "metrics missing {needle}");
+    }
+}
+
+/// The §4 reproduction: on the Atom-class blade, a dfsio write burns its
+/// cycles in the HDFS protocol family, not compute; the search app adds
+/// shuffle and compute families on top.
+#[test]
+fn family_attribution_matches_the_workload_shape() {
+    let idx = |name: &str| FAMILIES.iter().position(|f| *f == name).unwrap();
+    let d = dfsio_obs(SolverMode::Incremental).cpu_families;
+    assert_eq!(d.len(), FAMILIES.len());
+    assert!(d[idx("hdfs")].cpu_core_seconds > 0.0, "dfsio write must burn hdfs CPU");
+    assert!(d[idx("hdfs")].joules > 0.0);
+    assert_eq!(d[idx("shuffle")].cpu_core_seconds, 0.0, "dfsio has no shuffle");
+    assert!(
+        d[idx("hdfs")].cpu_core_seconds > d[idx("compute")].cpu_core_seconds,
+        "dfsio: protocol overhead must dominate compute"
+    );
+
+    let (s, _) = zones_obs(App::Search, SolverMode::Incremental);
+    let s = s.cpu_families;
+    assert!(s[idx("hdfs")].cpu_core_seconds > 0.0);
+    assert!(s[idx("shuffle")].cpu_core_seconds > 0.0, "search shuffles its pairs");
+    assert!(s[idx("compute")].cpu_core_seconds > 0.0, "search maps/sorts burn compute");
+    assert_eq!(s[idx("balance")].cpu_core_seconds, 0.0, "no balancer ran");
+}
