@@ -1,29 +1,47 @@
-//! Micro-benchmark: the incremental component-partitioned solver vs the
-//! whole-set baseline at ≥10k concurrent flows.
+//! Micro-benchmark, two tiers:
 //!
-//! Scenario: 2000 disjoint "links", 5 staggered flows each — 10,000
-//! flows all concurrently live before the first completes. Every start
-//! and completion dirties exactly one 5-flow component, so the
-//! incremental solver does O(component) work per event while the
-//! whole-set baseline re-examines every live flow on every event
-//! (O(flows²) aggregate). Flows are rate-capped below their fair share,
-//! which keeps the baseline's progressive-filling loop single-round —
-//! the bench measures the *resolve counts* (the acceptance metric), not
-//! an artificially slow baseline inner loop.
+//! **10k tier** — the incremental component-partitioned solver vs the
+//! whole-set baseline at ≥10k concurrent flows. Scenario: 2000 disjoint
+//! "links", 5 staggered flows each — 10,000 flows all concurrently live
+//! before the first completes. Every start and completion dirties
+//! exactly one 5-flow component, so the incremental solver does
+//! O(component) work per event while the whole-set baseline re-examines
+//! every live flow on every event (O(flows²) aggregate). Flows are
+//! rate-capped below their fair share, which keeps the baseline's
+//! progressive-filling loop single-round — the bench measures the
+//! *resolve counts* (the acceptance metric), not an artificially slow
+//! baseline inner loop.
+//!
+//! **100k tier** — the intra-engine parallel solver at 100,000
+//! concurrent flows. Scenario: 2500 disjoint links × 40 capped flows,
+//! started in 40 batched waves (each wave dirties all 2500 components
+//! in one union) and churned by 120 batched capacity sweeps (each a
+//! pure 2500-component solve with no event re-pushes). Caps are
+//! identical across groups, so the serial union solve does the same
+//! total freeze-round work as the per-component solves — the measured
+//! speedup is threading, not partitioning. The tier runs at 1, 2 and 4
+//! solver threads, asserts bit-identical completion times and
+//! simulation counters across all three, and (when `FLOW_SCALE_PAR_GATE`
+//! is set and the host has ≥4 cores, as on CI) gates on a ≥1.5×
+//! wall-clock speedup at 4 threads.
 //!
 //! The run asserts:
 //!
-//! * both modes produce bit-identical completion times (the solver is
-//!   an optimization, not a behaviour change);
+//! * both solver modes produce bit-identical completion times (the
+//!   solver is an optimization, not a behaviour change);
 //! * the incremental solver performs ≥5× fewer flow-rate computations
-//!   (the ISSUE 2 acceptance bar — in practice it is >100×).
+//!   (the ISSUE 2 acceptance bar — in practice it is >100×);
+//! * every solver-thread count produces bit-identical outputs, and the
+//!   multi-threaded runs actually dispatch the worker pool.
 //!
-//! Exits nonzero on either failure, so the CI bench-smoke step doubles
-//! as a hot-path regression gate.
+//! Exits nonzero on any failure, so the CI bench-smoke step doubles as
+//! a hot-path regression gate.
+
+use std::time::Instant;
 
 use amdahl_hadoop::benchkit::bench;
 use amdahl_hadoop::sim::engine::shared;
-use amdahl_hadoop::sim::{Engine, EngineStats, FlowSpec, SolverMode};
+use amdahl_hadoop::sim::{Engine, EngineStats, FlowSpec, SimConfig, SolverMode};
 
 const GROUPS: usize = 2000;
 const FLOWS_PER_GROUP: usize = 5;
@@ -62,6 +80,91 @@ fn run_scenario(mode: SolverMode) -> (EngineStats, Vec<u64>) {
         "scenario must reach {TARGET_CONCURRENT} concurrent flows"
     );
     (e.stats(), times)
+}
+
+const GROUPS_100K: usize = 2500;
+/// Waves of batched starts — one flow per group per wave, so the tier
+/// ends at 2500 × 40 = 100,000 concurrent flows.
+const WAVES_100K: usize = 40;
+const FLOWS_100K: usize = GROUPS_100K * WAVES_100K;
+/// Batched capacity sweeps after the last wave: each dirties every
+/// component in one union — pure multi-component solver work.
+const CHURNS_100K: usize = 120;
+/// Per-run wall-clock budget, seconds. Generous: the 1-thread run takes
+/// a few seconds on a laptop; the budget only catches order-of-magnitude
+/// regressions (e.g. the solver going accidentally quadratic).
+const WALL_BUDGET_100K: f64 = 240.0;
+
+/// The 100k-flow tier at one solver-thread count. Returns the engine
+/// counters, the bit-exact completion-time vector, and the wall-clock
+/// seconds of the whole run.
+///
+/// Every flow is capped far below its fair share (Σ caps ≈ 88 of 1000
+/// capacity per link), so rates never move after a flow starts: zero
+/// re-pushes, zero stale events, and an analytically exact peak heap of
+/// 100,000 completion predictions + 120 pending churn timers = 100,120.
+/// The capacity toggles (1000 ↔ 1001) re-solve every component without
+/// changing any rate.
+fn run_scenario_100k(threads: usize) -> (EngineStats, Vec<u64>, f64) {
+    let wall0 = Instant::now();
+    let mut e = Engine::from_config(
+        SimConfig::new(11).with_solver(SolverMode::Incremental).with_solver_threads(threads),
+    );
+    let c = e.class("x");
+    let links: Vec<_> =
+        (0..GROUPS_100K).map(|g| e.add_resource(&format!("link{g}"), 1000.0)).collect();
+    let done = shared(Vec::<u64>::with_capacity(FLOWS_100K));
+    for j in 0..WAVES_100K {
+        let links2 = links.clone();
+        let d = done.clone();
+        // Wave j starts one flow on every link in a single batch: a
+        // 2500-component union of 2500·(j+1) flows, well above the
+        // parallel-dispatch floor. Totals put every completion after
+        // the churn window (first at t = 600).
+        e.after(2.5 * j as f64, move |e| {
+            let cap = 2.0 + j as f64 * 0.01;
+            let total = cap * (600.0 + j as f64);
+            e.batch(move |e| {
+                for &link in &links2 {
+                    let d2 = d.clone();
+                    e.start_flow(
+                        FlowSpec::new(total, "f").demand(link, 1.0, c).cap(cap),
+                        move |e| d2.borrow_mut().push(e.now().to_bits()),
+                    );
+                }
+            });
+        });
+    }
+    for i in 0..CHURNS_100K {
+        let links2 = links.clone();
+        e.after(110.0 + 2.0 * i as f64, move |e| {
+            let cap = if i % 2 == 0 { 1001.0 } else { 1000.0 };
+            e.batch(move |e| {
+                for &l in &links2 {
+                    e.set_capacity(l, cap);
+                }
+            });
+        });
+    }
+    e.run();
+    let wall = wall0.elapsed().as_secs_f64();
+    let times = done.borrow().clone();
+    assert_eq!(times.len(), FLOWS_100K);
+    let s = e.stats();
+    assert_eq!(
+        s.peak_live_flows, FLOWS_100K,
+        "scenario must reach {FLOWS_100K} concurrent flows"
+    );
+    (s, times, wall)
+}
+
+/// Zero the counters that legitimately vary with the configured thread
+/// count (and wall clock) so the rest compares exactly.
+fn canon(mut s: EngineStats) -> EngineStats {
+    s.solve_ns = 0;
+    s.parallel_solves = 0;
+    s.solver_threads = 0;
+    s
 }
 
 fn main() {
@@ -116,22 +219,82 @@ fn main() {
         );
     }
 
-    check_recorded_baseline(&si);
+    // ---- 100k-flow parallel tier ----
+    println!();
+    let mut rows: Vec<(usize, EngineStats, Vec<u64>, f64)> = Vec::new();
+    for threads in [1usize, 2, 4] {
+        let (s, t, wall) = run_scenario_100k(threads);
+        println!(
+            "flow_scale_100k/threads{threads}: {wall:.2}s wall, \
+             {} parallel dispatches, {} flow-solves, stale {}, peak heap {}",
+            s.parallel_solves, s.flows_resolved, s.stale_events_skipped, s.peak_heap
+        );
+        assert!(
+            wall < WALL_BUDGET_100K,
+            "100k tier at {threads} solver threads blew the {WALL_BUDGET_100K}s \
+             wall-clock budget ({wall:.1}s)"
+        );
+        rows.push((threads, s, t, wall));
+    }
+    let (_, s100, t100, w1) = rows[0].clone();
+    assert_eq!(s100.parallel_solves, 0, "the 1-thread run must stay on the serial path");
+    for (threads, s, t, _) in rows.iter().skip(1) {
+        assert_eq!(
+            &t100, t,
+            "completion times diverged at {threads} solver threads"
+        );
+        assert_eq!(
+            canon(s100),
+            canon(*s),
+            "simulation counters diverged at {threads} solver threads"
+        );
+        assert!(
+            s.parallel_solves > 0,
+            "the {threads}-thread run never dispatched the worker pool"
+        );
+    }
+
+    // The ≥1.5× speedup gate arms only where it can honestly be
+    // measured: FLOW_SCALE_PAR_GATE set (CI does) and ≥4 hardware
+    // threads available.
+    let w4 = rows[2].3;
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if std::env::var("FLOW_SCALE_PAR_GATE").is_ok() && cores >= 4 {
+        let speedup = w1 / w4;
+        println!(
+            "parallel gate: {speedup:.2}x wall-clock speedup at 4 solver threads \
+             (1t {w1:.2}s, 4t {w4:.2}s)"
+        );
+        assert!(
+            speedup >= 1.5,
+            "4 solver threads must run the 100k tier >=1.5x faster than 1 \
+             (got {speedup:.2}x: 1t {w1:.2}s, 4t {w4:.2}s)"
+        );
+    } else {
+        println!(
+            "parallel speedup gate skipped (FLOW_SCALE_PAR_GATE unset or <4 cores; \
+             host has {cores})"
+        );
+    }
+
+    check_recorded_baseline(&si, &s100);
 }
 
 /// Regression gate against the recorded baseline
 /// (`benches/flow_scale_baseline.json`): `stale_events_skipped` and
-/// `peak_heap` must stay within 10% of the committed values — heap
-/// churn and stale-event floods are exactly how solver regressions
-/// manifest before wall-clock does. Set `FLOW_SCALE_WRITE_BASELINE=1`
-/// to regenerate the file after an intentional change.
-fn check_recorded_baseline(si: &EngineStats) {
+/// `peak_heap` of both tiers must stay within 10% of the committed
+/// values — heap churn and stale-event floods are exactly how solver
+/// regressions manifest before wall-clock does. Set
+/// `FLOW_SCALE_WRITE_BASELINE=1` to regenerate the file after an
+/// intentional change.
+fn check_recorded_baseline(si: &EngineStats, s100: &EngineStats) {
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/benches/flow_scale_baseline.json");
     if std::env::var("FLOW_SCALE_WRITE_BASELINE").is_ok() {
         let json = format!(
-            "{{\"bench\": \"flow_scale_10k\", \"solver\": \"incremental\", \
-             \"stale_events_skipped\": {}, \"peak_heap\": {}}}\n",
-            si.stale_events_skipped, si.peak_heap
+            "{{\"bench\": \"flow_scale\", \"solver\": \"incremental\", \
+             \"stale_events_skipped\": {}, \"peak_heap\": {}, \
+             \"stale_events_skipped_100k\": {}, \"peak_heap_100k\": {}}}\n",
+            si.stale_events_skipped, si.peak_heap, s100.stale_events_skipped, s100.peak_heap
         );
         std::fs::write(path, json).expect("write baseline");
         println!("recorded new baseline to {path}");
@@ -154,8 +317,6 @@ fn check_recorded_baseline(si: &EngineStats) {
             .parse()
             .unwrap_or_else(|_| panic!("unparsable baseline {key}"))
     };
-    let base_stale = field("stale_events_skipped");
-    let base_heap = field("peak_heap");
     let within = |actual: u64, base: u64, label: &str| {
         // 10% relative, with a small absolute floor so a zero baseline
         // tolerates counting-noise-sized drift only.
@@ -167,10 +328,24 @@ fn check_recorded_baseline(si: &EngineStats) {
              (tolerance {tol:.0}); if intentional, regenerate with FLOW_SCALE_WRITE_BASELINE=1"
         );
     };
+    let base_stale = field("stale_events_skipped");
+    let base_heap = field("peak_heap");
     within(si.stale_events_skipped, base_stale, "stale_events_skipped");
-    within(si.peak_heap as u64, base_heap as u64, "peak_heap");
+    within(si.peak_heap as u64, base_heap, "peak_heap");
+    let base_stale_100k = field("stale_events_skipped_100k");
+    let base_heap_100k = field("peak_heap_100k");
+    within(s100.stale_events_skipped, base_stale_100k, "stale_events_skipped_100k");
+    within(s100.peak_heap as u64, base_heap_100k, "peak_heap_100k");
     println!(
-        "baseline gate ok: stale {} (recorded {}), peak heap {} (recorded {})",
-        si.stale_events_skipped, base_stale, si.peak_heap, base_heap
+        "baseline gate ok: 10k stale {} (recorded {}), peak heap {} (recorded {}); \
+         100k stale {} (recorded {}), peak heap {} (recorded {})",
+        si.stale_events_skipped,
+        base_stale,
+        si.peak_heap,
+        base_heap,
+        s100.stale_events_skipped,
+        base_stale_100k,
+        s100.peak_heap,
+        base_heap_100k
     );
 }

@@ -105,7 +105,10 @@ pub fn task_cpu_seconds(engine: &Engine, cluster: &Cluster, task: &str) -> f64 {
     let mut total = 0.0;
     for node in &cluster.nodes {
         let r = engine.resource(node.cpu);
-        for (&class, &busy) in &r.busy_by_class {
+        // `busy_classes` iterates in ascending class-id order, so this
+        // float sum is bit-stable run to run (the old HashMap iteration
+        // order was not).
+        for (class, busy) in r.busy_classes() {
             if engine.class_name(class).starts_with(&prefix) {
                 total += busy;
             }

@@ -54,25 +54,16 @@ pub fn measure(engine: &Engine, cluster: &Cluster, wall_seconds: f64) -> EnergyR
             * wall_seconds;
         // Recovery / balancer attribution: CPU seconds burned by the
         // `recovery:*` and `balance:*` classes priced at the node's
-        // marginal (full − idle) watts per core. Summation order is
-        // fixed (sorted by class id) so the result is bit-stable
-        // despite the HashMap storage.
-        let mut rec: Vec<(crate::sim::UsageClass, f64)> = r
-            .busy_by_class
-            .iter()
-            .filter(|(c, _)| {
-                let name = engine.class_name(**c);
-                name.starts_with("recovery") || name.starts_with("balance")
-            })
-            .map(|(c, b)| (*c, *b))
-            .collect();
-        rec.sort_by_key(|(c, _)| *c);
+        // marginal (full − idle) watts per core. `busy_classes` yields
+        // ascending class ids (the per-class arena is id-indexed), so
+        // the summation order — and hence the float result — is fixed.
         let mut rec_cpu_s = 0.0;
         let mut bal_cpu_s = 0.0;
-        for (c, b) in &rec {
-            if engine.class_name(*c).starts_with("recovery") {
+        for (c, b) in r.busy_classes() {
+            let name = engine.class_name(c);
+            if name.starts_with("recovery") {
                 rec_cpu_s += b;
-            } else {
+            } else if name.starts_with("balance") {
                 bal_cpu_s += b;
             }
         }
@@ -107,24 +98,21 @@ pub fn efficiency_ratio(amdahl: &EnergyReport, occ: &EnergyReport) -> f64 {
 /// cycles go" decomposition generalized to every run. Returns one entry
 /// per family in the fixed [`crate::obs::FAMILIES`] order (zero-filled
 /// when a family never ran), so downstream rendering and JSON emission
-/// are deterministic. Summation order is fixed (sorted by class id per
-/// node, nodes in cluster order) so the totals are bit-stable despite
-/// the engine's HashMap class storage.
+/// are deterministic. Summation order is fixed (ascending class id per
+/// node — the order the id-indexed class arena iterates natively —
+/// nodes in cluster order) so the totals are bit-stable.
 pub fn family_breakdown(engine: &Engine, cluster: &Cluster) -> Vec<crate::obs::FamilyCpu> {
     let mut cpu_s = [0.0f64; crate::obs::FAMILIES.len()];
     let mut joules = [0.0f64; crate::obs::FAMILIES.len()];
     for node in &cluster.nodes {
         let spec = &node.spec;
         let r = engine.resource(node.cpu);
-        let mut by_class: Vec<(crate::sim::UsageClass, f64)> =
-            r.busy_by_class.iter().map(|(c, b)| (*c, *b)).collect();
-        by_class.sort_by_key(|(c, _)| *c);
         let marginal_w_per_core = if spec.cpu.capacity > 0.0 {
             (spec.power_full_w - spec.power_idle_w) / spec.cpu.capacity
         } else {
             0.0
         };
-        for (c, busy) in by_class {
+        for (c, busy) in r.busy_classes() {
             let fam = crate::obs::family_of(engine.class_name(c));
             let idx = crate::obs::FAMILIES
                 .iter()

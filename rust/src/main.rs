@@ -6,13 +6,15 @@
 //! ```text
 //! amdahl-hadoop table1|fig1|table2|fig2a|fig2b|fig3|table3|table4|energy|balance|all
 //! amdahl-hadoop search --theta 60 --scale 0.002 [--kernels] [--preset occ]
+//!                      [--solver-threads N]
 //!                      [--trace FILE] [--metrics-out FILE] [--obs-interval 5]
-//! amdahl-hadoop stat   --scale 0.002 [--kernels]
+//! amdahl-hadoop stat   --scale 0.002 [--kernels] [--solver-threads N]
 //!                      [--trace FILE] [--metrics-out FILE] [--obs-interval 5]
-//! amdahl-hadoop dfsio  --op write|read --workers 2 --gb 3
+//! amdahl-hadoop dfsio  --op write|read --workers 2 --gb 3 [--solver-threads N]
 //!                      [--trace FILE] [--metrics-out FILE] [--obs-interval 5]
 //! amdahl-hadoop sweep  [--cores 1..8] [--nodes 9] [--family amdahl|occ|both]
-//!                      [--threads N] [--gb 0.125] [--workers 4]
+//!                      [--threads N] [--solver-threads N]
+//!                      [--gb 0.125] [--workers 4]
 //!                      [--solver incremental|whole-set]
 //!                      [--racks 1,3] [--oversub 1,4]
 //!                      [--membus 1300,2600] [--mtbf 600] [--stragglers 0.25]
@@ -28,7 +30,17 @@
 //!                      [--balancer-threshold 0.1] [--balancer-bandwidth 1]
 //!                      [--trace-dir DIR] [--obs-interval 5] [--perf-wallclock]
 //!                      [--spec] [--nodes 9] [--cores 2] [--threads N]
+//!                      [--solver-threads N]
 //! ```
+//!
+//! Two independent thread budgets: `--threads` (sweep/faults only) runs
+//! whole *scenarios* in parallel across OS threads — the right lever
+//! when the grid has many cells; `--solver-threads` parallelizes the
+//! rate solver *inside* each engine — the right lever for one huge
+//! scenario (or a single-run subcommand). Every output is byte-identical
+//! for every `--solver-threads` value; only wall-clock changes. When
+//! both are set, the sweep divides its scenario budget by the per-engine
+//! solver budget so the product stays at the requested concurrency.
 //!
 //! `sweep` expands the design-space grid (cores × write path × LZO ×
 //! workload), runs every scenario in parallel across OS threads, writes
@@ -87,6 +99,7 @@ fn zcfg(args: &Args, kernels: Option<Rc<PairKernels>>) -> anyhow::Result<ZonesCo
         theta_arcsec: args.get_f64("theta", 60.0)?,
         kernel_every: args.get_usize("kernel-every", 1)?,
         kernels,
+        solver_threads: args.get_usize("solver-threads", 1)?.max(1),
         obs: obs_from_args(args)?,
         ..Default::default()
     })
@@ -313,6 +326,7 @@ fn main() -> anyhow::Result<()> {
                 straggler_slowdown: args.get_f64("slowdown", 0.4)?,
                 balancer_bandwidth_bps: args.get_f64("balancer-bandwidth", 1.0)? * MIB,
                 solver,
+                solver_threads: args.get_usize("solver-threads", 1)?.max(1),
                 obs,
                 trace_dir,
                 perf_wallclock: args.flag("perf-wallclock"),
@@ -457,6 +471,7 @@ fn main() -> anyhow::Result<()> {
                 dfsio_workers: args.get_usize("workers", 4)?,
                 straggler_slowdown: args.get_f64("slowdown", 0.4)?,
                 balancer_bandwidth_bps: args.get_f64("balancer-bandwidth", 1.0)? * MIB,
+                solver_threads: args.get_usize("solver-threads", 1)?.max(1),
                 obs,
                 trace_dir,
                 perf_wallclock: args.flag("perf-wallclock"),
@@ -523,7 +538,9 @@ fn main() -> anyhow::Result<()> {
             let workers = args.get_usize("workers", 2)?;
             let gb = args.get_f64("gb", 3.0)?;
             let conf = HadoopConf::default();
-            let sim = amdahl_hadoop::sim::SimConfig::new(seed).with_obs(obs_from_args(&args)?);
+            let sim = amdahl_hadoop::sim::SimConfig::new(seed)
+                .with_solver_threads(args.get_usize("solver-threads", 1)?)
+                .with_obs(obs_from_args(&args)?);
             let run = match args.get("op").unwrap_or("write") {
                 "read" => amdahl_hadoop::hdfs::testdfsio::read_test_on(
                     ClusterPreset::Amdahl,

@@ -32,6 +32,15 @@
 //! behaviour (every change re-solves every live flow) and exists as the
 //! baseline for the solver-count benchmarks and the byte-identical
 //! regression test.
+//!
+//! # Parallel solving
+//!
+//! With [`SimConfig::solver_threads`] > 1, a reschedule whose dirty
+//! union spans several components partitions the union and solves the
+//! components on worker threads (see `sim::parallel`); the merge —
+//! rate commits, settles, prediction pushes — runs on the engine thread
+//! over the globally sorted union, so trajectories are byte-identical
+//! at every thread count and in both solver modes.
 
 use std::cell::RefCell;
 use std::cmp::Ordering;
@@ -41,6 +50,13 @@ use std::rc::Rc;
 use super::flow::{solve_rates, FlowSpec, FlowState, SolveScratch};
 use super::resource::{ClassTable, Resource, ResourceId, UsageClass};
 use super::rng::Rng;
+
+/// Minimum dirty-union size before a multi-threaded engine even tries to
+/// partition and dispatch to the worker pool. Below this the serial
+/// union solve finishes faster than threads can be handed work, and the
+/// vast majority of reschedules (single completions, k = 1 components)
+/// stay on exactly the single-threaded path.
+const PAR_MIN_FLOWS: usize = 32;
 
 /// Handle to a live flow.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -89,6 +105,12 @@ pub struct SimConfig {
     pub seed: u64,
     /// Rate-solver mode.
     pub solver: SolverMode,
+    /// Worker threads for the intra-scenario parallel solver. 1 (the
+    /// default) is exactly the historical single-threaded code path;
+    /// N > 1 solves independent dirty components on N threads (the
+    /// calling thread included) and merges deterministically, so the
+    /// simulated trajectory is byte-identical for every value.
+    pub solver_threads: usize,
     /// Observability layers to record (all off by default; the engine's
     /// hot path only pays a branch per recording call when off).
     pub obs: crate::obs::ObsSpec,
@@ -97,12 +119,23 @@ pub struct SimConfig {
 impl SimConfig {
     /// Config with `seed` and the default incremental solver.
     pub fn new(seed: u64) -> Self {
-        SimConfig { seed, solver: SolverMode::Incremental, obs: crate::obs::ObsSpec::default() }
+        SimConfig {
+            seed,
+            solver: SolverMode::Incremental,
+            solver_threads: 1,
+            obs: crate::obs::ObsSpec::default(),
+        }
     }
 
     /// Override the solver mode.
     pub fn with_solver(mut self, solver: SolverMode) -> Self {
         self.solver = solver;
+        self
+    }
+
+    /// Override the solver worker-thread count (0 is treated as 1).
+    pub fn with_solver_threads(mut self, threads: usize) -> Self {
+        self.solver_threads = threads.max(1);
         self
     }
 
@@ -140,6 +173,15 @@ pub struct EngineStats {
     /// wall-clock value in the engine; never feeds back into simulated
     /// behaviour, only perf reporting and the bench wall-clock gate).
     pub solve_ns: u64,
+    /// Solves dispatched to the parallel worker pool (multi-component
+    /// dirty unions with `solver_threads > 1`). Deterministic for a
+    /// given config, but varies *with* the configured thread count
+    /// (always 0 at 1 thread), so it is excluded from `sim_json` and
+    /// only surfaces in the perf section when `solver_threads != 1`.
+    pub parallel_solves: u64,
+    /// Solver worker-thread count the engine ran with (config echo;
+    /// 1 = the serial path). Perf-section-only, like `parallel_solves`.
+    pub solver_threads: usize,
 }
 
 type Callback = Box<dyn FnOnce(&mut Engine)>;
@@ -227,6 +269,20 @@ pub struct Engine {
     /// Per-flow unique-resource dedup buffer for (un)indexing.
     tmp_res: Vec<usize>,
     scratch: SolveScratch,
+    /// Configured solver worker threads (1 = serial path, no pool).
+    solver_threads: usize,
+    /// Worker pool, armed iff `solver_threads > 1`.
+    pool: Option<super::parallel::SolverThreads>,
+    /// Partition scratch: the dirty union regrouped by sharing-graph
+    /// component (each group ascending; groups in ascending
+    /// component-representative order). Persistent across solves.
+    part_flows: Vec<usize>,
+    part_res: Vec<usize>,
+    part_groups: Vec<super::parallel::PartGroup>,
+    /// Slot-indexed scatter target for parallel solve results; the
+    /// commit loop reads rates from here (parallel) or the scratch
+    /// (serial) so the merge walk itself is shared and identical.
+    rate_by_slot: Vec<f64>,
     live_flow_count: usize,
     stats: EngineStats,
     obs: crate::obs::Obs,
@@ -246,6 +302,7 @@ impl Engine {
 
     /// Engine from a full [`SimConfig`].
     pub fn from_config(cfg: SimConfig) -> Self {
+        let solver_threads = cfg.solver_threads.max(1);
         Engine {
             now: 0.0,
             seq: 0,
@@ -274,8 +331,18 @@ impl Engine {
             pushes: Vec::new(),
             tmp_res: Vec::new(),
             scratch: SolveScratch::default(),
+            solver_threads,
+            pool: if solver_threads > 1 {
+                Some(super::parallel::SolverThreads::new(solver_threads))
+            } else {
+                None
+            },
+            part_flows: Vec::new(),
+            part_res: Vec::new(),
+            part_groups: Vec::new(),
+            rate_by_slot: Vec::new(),
             live_flow_count: 0,
-            stats: EngineStats::default(),
+            stats: EngineStats { solver_threads, ..EngineStats::default() },
             obs: crate::obs::Obs::new(cfg.obs),
         }
     }
@@ -298,6 +365,11 @@ impl Engine {
     /// The solver mode this engine runs with.
     pub fn solver_mode(&self) -> SolverMode {
         self.mode
+    }
+
+    /// The solver worker-thread count this engine runs with (1 = serial).
+    pub fn solver_threads(&self) -> usize {
+        self.solver_threads
     }
 
     /// Currently live flows.
@@ -588,7 +660,7 @@ impl Engine {
                 let used = d.coeff * progressed;
                 let r = &mut self.resources[d.resource.index()];
                 r.busy_integral += used;
-                *r.busy_by_class.entry(d.class).or_insert(0.0) += used;
+                r.add_busy(d.class, used);
             }
         }
         f.last_update = now;
@@ -630,6 +702,65 @@ impl Engine {
                 }
             }
         }
+    }
+
+    /// Split the sorted dirty union `comp_flows` into its sharing-graph
+    /// components: `part_flows` / `part_res` receive the union regrouped
+    /// by component (each group's flows and resources sorted ascending),
+    /// `part_groups` the half-open ranges. Groups come out in ascending
+    /// component-representative order automatically — the representative
+    /// is the component's lowest flow slot, and seeds are taken from the
+    /// already-sorted union. Returns the number of components.
+    ///
+    /// Burns one mark epoch, exactly like [`Engine::expand_component`].
+    fn partition_components(&mut self) -> usize {
+        self.epoch += 1;
+        let epoch = self.epoch;
+        self.part_flows.clear();
+        self.part_res.clear();
+        self.part_groups.clear();
+        for idx in 0..self.comp_flows.len() {
+            let seed = self.comp_flows[idx];
+            if self.flow_mark[seed] == epoch {
+                continue;
+            }
+            let flo = self.part_flows.len();
+            let rlo = self.part_res.len();
+            self.flow_mark[seed] = epoch;
+            self.part_flows.push(seed);
+            let mut qi = flo;
+            while qi < self.part_flows.len() {
+                let s = self.part_flows[qi];
+                qi += 1;
+                let nd = self.flows[s].as_ref().expect("partition slot empty").spec.demands.len();
+                for di in 0..nd {
+                    let r = self.flows[s].as_ref().unwrap().spec.demands[di].resource.index();
+                    if self.res_mark[r] != epoch {
+                        self.res_mark[r] = epoch;
+                        self.part_res.push(r);
+                        for j in 0..self.res_flows[r].len() {
+                            let s2 = self.res_flows[r][j];
+                            if self.flow_mark[s2] != epoch {
+                                self.flow_mark[s2] = epoch;
+                                self.part_flows.push(s2);
+                            }
+                        }
+                    }
+                }
+            }
+            self.part_flows[flo..].sort_unstable();
+            self.part_res[rlo..].sort_unstable();
+            self.part_groups.push(super::parallel::PartGroup {
+                flo,
+                fhi: self.part_flows.len(),
+                rlo,
+                rhi: self.part_res.len(),
+            });
+        }
+        // The union is closed under sharing, so regrouping it by
+        // component is a permutation — nothing appears or disappears.
+        debug_assert_eq!(self.part_flows.len(), self.comp_flows.len());
+        self.part_groups.len()
     }
 
     /// Re-solve rates for the dirty component(s) and push fresh
@@ -714,13 +845,51 @@ impl Engine {
         self.stats.solves += 1;
         self.stats.flows_resolved += self.comp_flows.len() as u64;
         let solve_t0 = std::time::Instant::now();
-        solve_rates(
-            &self.flows,
-            &self.comp_flows,
-            &self.comp_res,
-            &self.resources,
-            &mut self.scratch,
-        );
+        // Partition-then-join parallel path: with a pool armed and a big
+        // enough union, regroup the union into its disjoint components
+        // and solve them on worker threads (the solver reads the world
+        // arenas through shared borrows and writes only per-thread
+        // scratch). Per-component rates are bitwise the rates the same
+        // flows get from the serial union solve — resource freezes never
+        // cross components — and the commit below walks the globally
+        // sorted union either way, so settle order, push sequence
+        // numbers, and all counters except `parallel_solves` are
+        // byte-identical at every thread count (ARCHITECTURE.md,
+        // "determinism contract").
+        let mut used_parallel = false;
+        if self.solver_threads > 1 && self.comp_flows.len() >= PAR_MIN_FLOWS {
+            let groups = self.partition_components();
+            if groups >= 2 {
+                if self.rate_by_slot.len() < self.flows.len() {
+                    self.rate_by_slot.resize(self.flows.len(), 0.0);
+                }
+                let pool = self.pool.as_mut().expect("solver_threads > 1 arms the pool");
+                pool.solve(
+                    &self.flows,
+                    &self.resources,
+                    &self.part_flows,
+                    &self.part_res,
+                    &self.part_groups,
+                );
+                // Scatter: the join barrier has passed, the pool's rate
+                // table is complete — publish it slot-indexed for the
+                // shared commit walk.
+                for (i, &s) in self.part_flows.iter().enumerate() {
+                    self.rate_by_slot[s] = pool.rate(i);
+                }
+                self.stats.parallel_solves += 1;
+                used_parallel = true;
+            }
+        }
+        if !used_parallel {
+            solve_rates(
+                &self.flows,
+                &self.comp_flows,
+                &self.comp_res,
+                &self.resources,
+                &mut self.scratch,
+            );
+        }
         // Wall clock for perf reporting only; simulated behaviour never
         // reads it, so determinism is untouched.
         self.stats.solve_ns += solve_t0.elapsed().as_nanos() as u64;
@@ -734,7 +903,8 @@ impl Engine {
         pushes.clear();
         for k in 0..self.comp_flows.len() {
             let s = self.comp_flows[k];
-            let new_rate = self.scratch.solved_rate(k);
+            let new_rate =
+                if used_parallel { self.rate_by_slot[s] } else { self.scratch.solved_rate(k) };
             let f = self.flows[s].as_ref().unwrap();
             let unchanged = f.version > 0 && {
                 let scale = f.rate.abs().max(new_rate.abs()).max(1e-300);
@@ -1343,5 +1513,183 @@ mod tests {
         assert!(s.solves >= 4, "solves {}", s.solves);
         assert!(s.stale_events_skipped > 0, "shared link must shed stale predictions");
         assert!(s.peak_heap >= 4);
+        assert_eq!(s.solver_threads, 1);
+        assert_eq!(s.parallel_solves, 0);
+    }
+
+    /// Multi-component churn scenario used by the parallel-path tests:
+    /// many disjoint link groups, each with one uncapped flow (whose
+    /// rate moves on every capacity change — exercising settle, version
+    /// bumps, and re-pushes through the merge) plus capped siblings,
+    /// started in one batch (a > [`PAR_MIN_FLOWS`] multi-component union)
+    /// and churned by batched capacity sweeps.
+    fn run_grouped_churn(mode: SolverMode, threads: usize) -> (EngineStats, Vec<u64>) {
+        const GROUPS: usize = 12;
+        const PER_GROUP: usize = 6; // 72-flow union, 12 components
+        let mut e =
+            Engine::from_config(SimConfig::new(21).with_solver(mode).with_solver_threads(threads));
+        let c = e.class("x");
+        let links: Vec<_> =
+            (0..GROUPS).map(|g| e.add_resource(&format!("l{g}"), 100.0)).collect();
+        let done = shared(Vec::<u64>::new());
+        e.batch(|e| {
+            for g in 0..GROUPS {
+                let link = links[g];
+                for j in 0..PER_GROUP {
+                    let d = done.clone();
+                    let spec = if j == 0 {
+                        // Uncapped: soaks up the link residual, so every
+                        // capacity toggle moves its rate.
+                        FlowSpec::new(4000.0 + g as f64 * 10.0, "u").demand(link, 1.0, c)
+                    } else {
+                        FlowSpec::new(40.0 + (g * PER_GROUP + j) as f64, "f")
+                            .demand(link, 1.0, c)
+                            .cap(2.0 + j as f64 * 0.25)
+                    };
+                    e.start_flow(spec, move |e| d.borrow_mut().push(e.now().to_bits()));
+                }
+            }
+        });
+        for i in 0..6u32 {
+            let links2 = links.clone();
+            e.after(1.0 + i as f64, move |e| {
+                let cap = if i % 2 == 0 { 90.0 } else { 100.0 };
+                e.batch(move |e| {
+                    for &l in &links2 {
+                        e.set_capacity(l, cap);
+                    }
+                });
+            });
+        }
+        e.run();
+        let times = done.borrow().clone();
+        assert_eq!(times.len(), GROUPS * PER_GROUP);
+        (e.stats(), times)
+    }
+
+    /// Zero the fields that legitimately vary with the configured thread
+    /// count (and wall clock) so the rest can be compared exactly.
+    fn canon(mut s: EngineStats) -> EngineStats {
+        s.solve_ns = 0;
+        s.parallel_solves = 0;
+        s.solver_threads = 0;
+        s
+    }
+
+    /// The tentpole bar: the parallel engine is an optimization, not a
+    /// behaviour change — completion times and every simulation counter
+    /// are bit-identical across 1/2/4 solver threads, in both solver
+    /// modes, while the multi-threaded runs actually dispatch work.
+    #[test]
+    fn parallel_solves_match_serial_bit_for_bit() {
+        for mode in [SolverMode::Incremental, SolverMode::WholeSet] {
+            let (s1, t1) = run_grouped_churn(mode, 1);
+            assert_eq!(s1.parallel_solves, 0, "{mode:?}: serial run dispatched the pool");
+            assert_eq!(s1.solver_threads, 1);
+            for threads in [2, 4] {
+                let (sn, tn) = run_grouped_churn(mode, threads);
+                assert_eq!(
+                    t1, tn,
+                    "{mode:?}: completion times diverged at {threads} solver threads"
+                );
+                assert_eq!(
+                    canon(s1),
+                    canon(sn),
+                    "{mode:?}: stats diverged at {threads} solver threads"
+                );
+                assert!(
+                    sn.parallel_solves > 0,
+                    "{mode:?}: {threads}-thread run never dispatched the pool"
+                );
+                assert_eq!(sn.solver_threads, threads);
+            }
+        }
+    }
+
+    /// Same scenario across the two solver modes at 4 threads: the
+    /// parallel path preserves the whole-set ≡ incremental equivalence.
+    #[test]
+    fn parallel_modes_agree_bit_for_bit() {
+        let (_, a) = run_grouped_churn(SolverMode::Incremental, 4);
+        let (_, b) = run_grouped_churn(SolverMode::WholeSet, 4);
+        assert_eq!(a, b, "solver modes diverged under the parallel engine");
+    }
+
+    /// Below [`PAR_MIN_FLOWS`] (or with a single dirty component) a
+    /// multi-threaded engine stays on the serial path — identical
+    /// results and zero pool dispatches.
+    #[test]
+    fn small_unions_stay_serial() {
+        fn run(threads: usize) -> (EngineStats, u64) {
+            let mut e = Engine::from_config(SimConfig::new(8).with_solver_threads(threads));
+            let a = e.add_resource("a", 10.0);
+            let b = e.add_resource("b", 10.0);
+            let c = e.class("x");
+            let t = shared(0.0f64);
+            let tt = t.clone();
+            e.batch(|e| {
+                for i in 0..4 {
+                    let tt2 = tt.clone();
+                    let r = if i % 2 == 0 { a } else { b };
+                    e.start_flow(
+                        FlowSpec::new(20.0 + i as f64, "f").demand(r, 1.0, c),
+                        move |e| *tt2.borrow_mut() = e.now(),
+                    );
+                }
+            });
+            e.run();
+            let v = t.borrow().to_bits();
+            (e.stats(), v)
+        }
+        let (s1, t1) = run(1);
+        let (s8, t8) = run(8);
+        assert_eq!(t1, t8);
+        assert_eq!(s8.parallel_solves, 0, "an 8-flow union must not reach the pool");
+        assert_eq!(canon(s1), canon(s8));
+    }
+
+    /// Partition sanity on a live engine: groups cover the union exactly,
+    /// in ascending-representative order, with ascending members.
+    #[test]
+    fn partition_groups_are_sorted_and_disjoint() {
+        let mut e = Engine::from_config(SimConfig::new(3).with_solver_threads(2));
+        let c = e.class("x");
+        let links: Vec<_> = (0..5).map(|g| e.add_resource(&format!("l{g}"), 10.0)).collect();
+        e.batch(|e| {
+            for g in 0..5 {
+                for j in 0..3 {
+                    e.start_flow(
+                        FlowSpec::new(10.0 + (g * 3 + j) as f64, "f").demand(links[g], 1.0, c),
+                        |_| {},
+                    );
+                }
+            }
+        });
+        // Rebuild the union the way reschedule does, then partition.
+        e.epoch += 1;
+        let epoch = e.epoch;
+        e.comp_flows.clear();
+        e.comp_res.clear();
+        for i in 0..e.flows.len() {
+            if e.flows[i].as_ref().map(|f| f.alive).unwrap_or(false) {
+                e.flow_mark[i] = epoch;
+                e.comp_flows.push(i);
+            }
+        }
+        e.expand_component(epoch, 0);
+        e.comp_flows.sort_unstable();
+        let groups = e.partition_components();
+        assert_eq!(groups, 5);
+        assert_eq!(e.part_flows.len(), e.comp_flows.len());
+        let mut reps = Vec::new();
+        for g in &e.part_groups {
+            let fl = &e.part_flows[g.flo..g.fhi];
+            assert_eq!(fl.len(), 3);
+            assert!(fl.windows(2).all(|w| w[0] < w[1]), "group flows not ascending");
+            assert_eq!(g.rhi - g.rlo, 1, "one link per component");
+            reps.push(fl[0]);
+        }
+        assert!(reps.windows(2).all(|w| w[0] < w[1]), "groups not in representative order");
+        e.run();
     }
 }

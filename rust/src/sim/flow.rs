@@ -203,6 +203,16 @@ impl SolveScratch {
 /// engine guarantees this by construction — `comp` is a union of
 /// connected components of the flow/resource sharing graph.
 ///
+/// ## Thread safety
+///
+/// The solver takes `flows` and `resources` by shared reference and
+/// writes only into `scratch`. The parallel engine
+/// (`sim::parallel`) relies on exactly this shape: disjoint
+/// components can be solved concurrently against the same world arenas
+/// with one private `SolveScratch` per worker, and — because resource
+/// freezes are component-local — a per-component solve produces the same
+/// bits as the same component inside a bigger union solve.
+///
 /// Runs in O(rounds × comp × demands); rounds ≤ touched + 1.
 pub(crate) fn solve_rates(
     flows: &[Option<FlowState>],

@@ -50,6 +50,15 @@
 //!    pipeline's stream registrations). This is semantically neutral —
 //!    time cannot advance inside a batch — and bounds a k-change burst to
 //!    one solve.
+//! 5. **Partition-then-join.** With [`SimConfig::solver_threads`] > 1, a
+//!    dirty union spanning several components is partitioned and the
+//!    components solve concurrently on worker threads (`sim::parallel`);
+//!    the merge back — settles, rate commits, prediction pushes — runs
+//!    on the engine thread over the globally sorted union, in ascending
+//!    slot order, exactly as the serial path walks it. Rates are
+//!    bitwise unaffected by the split (component solves are what the
+//!    union solve already computes; freezes never cross components), so
+//!    trajectories are byte-identical at every thread count.
 //!
 //! [`SolverMode::WholeSet`] retains the pre-refactor behaviour (every
 //! change re-solves every live flow) as a baseline; both modes produce
@@ -58,6 +67,7 @@
 
 pub mod engine;
 pub mod flow;
+pub(crate) mod parallel;
 pub mod resource;
 pub mod rng;
 

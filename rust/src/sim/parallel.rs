@@ -1,0 +1,136 @@
+//! Partition-then-join worker pool for the intra-scenario parallel
+//! solver.
+//!
+//! When a batch dirties more than one sharing-graph component, the
+//! engine partitions the (globally sorted) dirty union into its
+//! components and hands the groups to this pool. Workers pull groups
+//! off a shared atomic cursor, solve each one with [`solve_rates`]
+//! against the engine's world arenas (shared borrows only — the solver
+//! writes nothing but its per-thread [`SolveScratch`]), and publish the
+//! solved rates into a slot-for-slot result table. The engine then
+//! performs the merge alone: it walks the union in ascending slot order
+//! reading rates out of the table, so rate commits, settle calls, event
+//! re-pushes (and their sequence numbers), and every counter are
+//! byte-identical to the single-threaded union solve. The event heap is
+//! never touched from a worker — it stays single-owner by construction.
+//!
+//! There are deliberately no locks anywhere in this module: components
+//! are disjoint by construction, so the only shared mutable state is the
+//! group cursor and the per-group result ranges, both plain atomics.
+//! (The ReactiveRS exemplar this design follows reported that a
+//! mutex-per-structure port was *slower* than its sequential runtime —
+//! partition-then-join is the shape that actually scales.)
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use super::flow::{solve_rates, FlowState, SolveScratch};
+use super::resource::Resource;
+
+/// Half-open ranges into the partition arrays for one sharing-graph
+/// component: flows `part_flows[flo..fhi]`, resources `part_res[rlo..rhi]`.
+/// Groups are produced in ascending component-representative order (the
+/// representative is the component's lowest flow slot).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct PartGroup {
+    /// Start of the component's flow range in `part_flows`.
+    pub flo: usize,
+    /// End (exclusive) of the component's flow range.
+    pub fhi: usize,
+    /// Start of the component's resource range in `part_res`.
+    pub rlo: usize,
+    /// End (exclusive) of the component's resource range.
+    pub rhi: usize,
+}
+
+/// Worker pool state: one private [`SolveScratch`] per thread plus the
+/// published result table (`f64` rate bits, indexed like `part_flows`).
+///
+/// Threads themselves are scoped per dispatch ([`std::thread::scope`]):
+/// parallel dispatches are rare-but-large (a fan-out batch, a capacity
+/// sweep), so the ~10 µs spawn cost is noise next to the solves, and
+/// scoped threads let workers borrow the engine arenas without any
+/// `'static` gymnastics or unsafe.
+pub(crate) struct SolverThreads {
+    threads: usize,
+    scratches: Vec<SolveScratch>,
+    rates: Vec<AtomicU64>,
+}
+
+impl SolverThreads {
+    /// A pool driving `threads` workers (the calling thread counts as
+    /// one of them). Meaningful only for `threads >= 2`.
+    pub(crate) fn new(threads: usize) -> Self {
+        let threads = threads.max(2);
+        SolverThreads {
+            threads,
+            scratches: (0..threads).map(|_| SolveScratch::default()).collect(),
+            rates: Vec::new(),
+        }
+    }
+
+    /// Solve every group concurrently and publish the rates. On return
+    /// (the join barrier), `rate(i)` holds the solved rate of flow slot
+    /// `part_flows[i]` for `i < part_flows.len()`.
+    pub(crate) fn solve(
+        &mut self,
+        flows: &[Option<FlowState>],
+        resources: &[Resource],
+        part_flows: &[usize],
+        part_res: &[usize],
+        groups: &[PartGroup],
+    ) {
+        if self.rates.len() < part_flows.len() {
+            self.rates.resize_with(part_flows.len(), || AtomicU64::new(0));
+        }
+        let cursor = AtomicUsize::new(0);
+        let rates: &[AtomicU64] = &self.rates;
+        let workers = self.threads.min(groups.len()).max(1);
+        std::thread::scope(|sc| {
+            let cursor = &cursor;
+            let (first, rest) =
+                self.scratches.split_first_mut().expect("pool always has scratches");
+            for scratch in rest.iter_mut().take(workers - 1) {
+                sc.spawn(move || {
+                    drain_groups(
+                        scratch, cursor, flows, resources, part_flows, part_res, groups, rates,
+                    )
+                });
+            }
+            drain_groups(first, cursor, flows, resources, part_flows, part_res, groups, rates);
+        });
+    }
+
+    /// Rate published for `part_flows[i]` by the last [`Self::solve`].
+    pub(crate) fn rate(&self, i: usize) -> f64 {
+        f64::from_bits(self.rates[i].load(Ordering::Relaxed))
+    }
+}
+
+/// Worker body: claim groups off the cursor until none remain, solving
+/// each and storing its rates. Relaxed ordering is sufficient — the
+/// scope join gives the engine a happens-before edge over every store,
+/// and no two workers ever touch the same group's range.
+#[allow(clippy::too_many_arguments)]
+fn drain_groups(
+    scratch: &mut SolveScratch,
+    cursor: &AtomicUsize,
+    flows: &[Option<FlowState>],
+    resources: &[Resource],
+    part_flows: &[usize],
+    part_res: &[usize],
+    groups: &[PartGroup],
+    rates: &[AtomicU64],
+) {
+    loop {
+        let g = cursor.fetch_add(1, Ordering::Relaxed);
+        let Some(gr) = groups.get(g).copied() else {
+            return;
+        };
+        let comp = &part_flows[gr.flo..gr.fhi];
+        let touched = &part_res[gr.rlo..gr.rhi];
+        solve_rates(flows, comp, touched, resources, scratch);
+        for k in 0..comp.len() {
+            rates[gr.flo + k].store(scratch.solved_rate(k).to_bits(), Ordering::Relaxed);
+        }
+    }
+}

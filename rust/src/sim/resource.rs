@@ -79,8 +79,13 @@ pub struct Resource {
     pub capacity: f64,
     /// Integrated busy units (unit-seconds), total.
     pub busy_integral: f64,
-    /// Integrated busy units per usage class.
-    pub busy_by_class: HashMap<UsageClass, f64>,
+    /// Integrated busy units per usage class, arena-indexed by class id
+    /// (grown on demand, zero-filled; index = [`UsageClass`] id). Kept
+    /// index-addressed rather than hashed so the settle hot path is one
+    /// array add, the struct stays [`Sync`] for the parallel solver's
+    /// shared borrows, and read-out is naturally id-ordered — downstream
+    /// float summations are bit-stable without sorting first.
+    pub busy_by_class: Vec<f64>,
     /// Integral of capacity over time (so utilization = busy/cap integral
     /// stays correct when capacity changes dynamically, e.g. the HDD
     /// concurrent-reader seek penalty).
@@ -97,7 +102,7 @@ impl Resource {
             name: name.to_string(),
             capacity,
             busy_integral: 0.0,
-            busy_by_class: HashMap::new(),
+            busy_by_class: Vec::new(),
             capacity_integral: 0.0,
             last_settle: 0.0,
         }
@@ -114,7 +119,29 @@ impl Resource {
 
     /// Busy unit-seconds attributed to `class`.
     pub fn busy_for(&self, class: UsageClass) -> f64 {
-        self.busy_by_class.get(&class).copied().unwrap_or(0.0)
+        self.busy_by_class.get(class.0 as usize).copied().unwrap_or(0.0)
+    }
+
+    /// Add `amount` busy unit-seconds to `class`, growing the per-class
+    /// arena on demand.
+    pub(crate) fn add_busy(&mut self, class: UsageClass, amount: f64) {
+        let i = class.0 as usize;
+        if self.busy_by_class.len() <= i {
+            self.busy_by_class.resize(i + 1, 0.0);
+        }
+        self.busy_by_class[i] += amount;
+    }
+
+    /// Iterate `(class, busy unit-seconds)` pairs in ascending class-id
+    /// order, skipping classes this resource never served. The fixed
+    /// iteration order is what keeps downstream summations (energy
+    /// attribution, per-family CPU breakdowns) bit-stable run to run.
+    pub fn busy_classes(&self) -> impl Iterator<Item = (UsageClass, f64)> + '_ {
+        self.busy_by_class
+            .iter()
+            .enumerate()
+            .filter(|&(_, b)| *b != 0.0)
+            .map(|(i, b)| (UsageClass(i as u32), *b))
     }
 }
 
@@ -160,5 +187,19 @@ mod tests {
     fn utilization_zero_before_time_passes() {
         let r = Resource::new("cpu", 2.0);
         assert_eq!(r.mean_utilization(), 0.0);
+    }
+
+    #[test]
+    fn class_arena_grows_on_demand_and_iterates_in_id_order() {
+        let mut r = Resource::new("disk", 4.0);
+        assert_eq!(r.busy_for(UsageClass(3)), 0.0, "unseen class reads as zero");
+        r.add_busy(UsageClass(3), 1.5);
+        r.add_busy(UsageClass(0), 2.0);
+        r.add_busy(UsageClass(3), 0.5);
+        assert_eq!(r.busy_for(UsageClass(3)), 2.0);
+        assert_eq!(r.busy_for(UsageClass(0)), 2.0);
+        assert_eq!(r.busy_for(UsageClass(7)), 0.0, "beyond the arena reads as zero");
+        let pairs: Vec<_> = r.busy_classes().collect();
+        assert_eq!(pairs, vec![(UsageClass(0), 2.0), (UsageClass(3), 2.0)]);
     }
 }

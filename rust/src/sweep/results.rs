@@ -534,6 +534,8 @@ impl SweepResults {
                 t.peak_live_flows = t.peak_live_flows.max(r.stats.peak_live_flows);
                 t.peak_heap = t.peak_heap.max(r.stats.peak_heap);
                 t.solve_ns += r.stats.solve_ns;
+                t.parallel_solves += r.stats.parallel_solves;
+                t.solver_threads = t.solver_threads.max(r.stats.solver_threads);
             }
             // Wall-clock solver time is opt-in: it varies run to run, so
             // emitting it by default would break bench baseline diffs.
@@ -542,17 +544,29 @@ impl SweepResults {
             } else {
                 String::new()
             };
+            // Parallel-solver counters appear only when the sweep ran
+            // with solver_threads > 1, so the default (single-threaded)
+            // perf section keeps its exact historical bytes.
+            let t_par = if t.solver_threads > 1 {
+                format!(
+                    ", \"solver_threads\": {}, \"parallel_solves\": {}",
+                    t.solver_threads, t.parallel_solves
+                )
+            } else {
+                String::new()
+            };
             s.push_str(&format!(
                 "    \"totals\": {{\"solves\": {}, \"flows_resolved\": {}, \
                  \"stale_events_skipped\": {}, \"events\": {}, \"peak_live_flows\": {}, \
-                 \"peak_heap\": {}{}}},\n",
+                 \"peak_heap\": {}{}{}}},\n",
                 t.solves,
                 t.flows_resolved,
                 t.stale_events_skipped,
                 t.events_processed,
                 t.peak_live_flows,
                 t.peak_heap,
-                t_wall
+                t_wall,
+                t_par
             ));
             s.push_str("    \"per_scenario\": [\n");
             for (i, r) in self.records.iter().enumerate() {
@@ -561,10 +575,18 @@ impl SweepResults {
                 } else {
                     String::new()
                 };
+                let r_par = if r.stats.solver_threads > 1 {
+                    format!(
+                        ", \"solver_threads\": {}, \"parallel_solves\": {}",
+                        r.stats.solver_threads, r.stats.parallel_solves
+                    )
+                } else {
+                    String::new()
+                };
                 s.push_str(&format!(
                     "      {{\"id\": \"{}\", \"solves\": {}, \"flows_resolved\": {}, \
                      \"stale_events_skipped\": {}, \"events\": {}, \"peak_live_flows\": {}, \
-                     \"peak_heap\": {}{}}}{}\n",
+                     \"peak_heap\": {}{}{}}}{}\n",
                     esc(&r.id),
                     r.stats.solves,
                     r.stats.flows_resolved,
@@ -573,6 +595,7 @@ impl SweepResults {
                     r.stats.peak_live_flows,
                     r.stats.peak_heap,
                     r_wall,
+                    r_par,
                     if i + 1 == self.records.len() { "" } else { "," }
                 ));
             }

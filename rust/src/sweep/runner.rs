@@ -75,6 +75,15 @@ pub struct SweepOptions {
     /// pre-refactor baseline kept for benchmarks and the byte-identical
     /// regression test.
     pub solver: SolverMode,
+    /// Worker threads for the parallel solver *inside* each scenario's
+    /// engine (default 1 = the serial engine). The sweep divides its
+    /// scenario-thread budget by this value so `threads ×
+    /// solver_threads` never oversubscribes the machine; results are
+    /// byte-identical for every value (the parallel engine's
+    /// determinism contract). Worth raising only when a few huge
+    /// scenarios dominate the sweep — for wide grids, scenario-level
+    /// parallelism uses the same cores with zero coordination cost.
+    pub solver_threads: usize,
     /// Observability switches applied to every scenario's engine
     /// (tracing, metrics, utilization sampling). Default all-off, which
     /// keeps `BENCH_sweep.json` byte-identical to pre-obs builds.
@@ -102,6 +111,7 @@ impl Default for SweepOptions {
             straggler_slowdown: 0.4,
             balancer_bandwidth_bps: 1.0 * MIB,
             solver: SolverMode::Incremental,
+            solver_threads: 1,
             obs: crate::sim::ObsSpec::default(),
             trace_dir: None,
             perf_wallclock: false,
@@ -120,7 +130,12 @@ pub fn run_sweep(grid: &SweepGrid, opts: &SweepOptions) -> SweepResults {
     } else {
         opts.threads
     };
-    let threads = requested.min(n.max(1));
+    // Split the thread budget between scenario-level and solver-level
+    // parallelism: each scenario's engine spins up `solver_threads`
+    // workers during its parallel solves, so run `budget /
+    // solver_threads` scenarios at once (≥ 1 so progress is always
+    // possible) instead of oversubscribing the machine.
+    let threads = (requested / opts.solver_threads.max(1)).max(1).min(n.max(1));
 
     let cursor = AtomicUsize::new(0);
     let done = AtomicUsize::new(0);
@@ -199,7 +214,10 @@ pub fn run_scenario(sc: &Scenario, opts: &SweepOptions) -> ScenarioRecord {
     let conf = sc.conf();
     let preset = sc.preset();
     let slaves = preset.slave_count() as f64;
-    let sim = SimConfig::new(sc.seed).with_solver(opts.solver).with_obs(opts.obs);
+    let sim = SimConfig::new(sc.seed)
+        .with_solver(opts.solver)
+        .with_solver_threads(opts.solver_threads)
+        .with_obs(opts.obs);
     let mut plan = sc.fault_plan();
     plan.straggler_slowdown = opts.straggler_slowdown;
     if let Some(b) = plan.balancer.as_mut() {
@@ -282,6 +300,7 @@ pub fn run_scenario(sc: &Scenario, opts: &SweepOptions) -> ScenarioRecord {
                 kernel_every: usize::MAX, // cost model only on the sweep path
                 kernels: None,
                 solver: opts.solver,
+                solver_threads: opts.solver_threads,
                 obs: opts.obs,
                 faults: plan,
                 fault_seed,

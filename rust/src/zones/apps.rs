@@ -65,6 +65,11 @@ pub struct ZonesConfig {
     /// Rate-solver mode for the simulation engine (the whole-set
     /// baseline exists for benchmarks and regression tests).
     pub solver: crate::sim::SolverMode,
+    /// Engine solver-thread budget (`SimConfig::solver_threads`).
+    /// 1 (the default) runs the historical serial path; every value
+    /// produces byte-identical outputs — threads change wall-clock
+    /// only.
+    pub solver_threads: usize,
     /// Fault-injection plan (default empty: nothing is installed and
     /// the run is byte-identical to a fault-free build).
     pub faults: crate::faults::InjectionPlan,
@@ -90,6 +95,7 @@ impl Default for ZonesConfig {
             kernel_every: usize::MAX,
             kernels: None,
             solver: crate::sim::SolverMode::Incremental,
+            solver_threads: 1,
             faults: crate::faults::InjectionPlan::empty(),
             fault_seed: 0,
             obs: crate::sim::ObsSpec::default(),

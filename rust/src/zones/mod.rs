@@ -92,7 +92,10 @@ pub fn setup_world(
 /// Run one application on one cluster preset; the paper's Table 3 cells.
 pub fn run_app(preset: ClusterPreset, conf: &HadoopConf, zcfg: &ZonesConfig, app: App) -> RunOutcome {
     let mut engine = Engine::from_config(
-        crate::sim::SimConfig::new(zcfg.seed).with_solver(zcfg.solver).with_obs(zcfg.obs),
+        crate::sim::SimConfig::new(zcfg.seed)
+            .with_solver(zcfg.solver)
+            .with_solver_threads(zcfg.solver_threads)
+            .with_obs(zcfg.obs),
     );
     let cat = zcfg.catalog();
     let (world, files) = setup_world(&mut engine, preset, conf, cat.input_bytes());

@@ -1,0 +1,194 @@
+//! Integration tests for the intra-engine parallel solver: every output
+//! — sweep records, trace / metrics exports, single-run outcomes — is
+//! byte-identical across `--solver-threads` values and both solver
+//! modes, and the thread-dependent perf counters never leak into the
+//! simulation-outcome projection.
+//!
+//! The engine-level guarantees (the pool actually dispatches, partition
+//! order, serial fallback below the dispatch floor) live in the
+//! `sim::engine` unit tests; these tests exercise the full stack —
+//! racked topologies, fault injection, lifecycle churn, the balancer,
+//! HDFS pipelines, MapReduce — on top of them.
+
+use amdahl_hadoop::conf::{ClusterPreset, HadoopConf};
+use amdahl_hadoop::hdfs::testdfsio;
+use amdahl_hadoop::hw::MIB;
+use amdahl_hadoop::sim::{ObsSpec, SimConfig, SolverMode};
+use amdahl_hadoop::sweep::{
+    run_sweep, ClusterFamily, SweepGrid, SweepOptions, Workload, WritePath,
+};
+use amdahl_hadoop::zones::{run_app, App, ZonesConfig};
+
+/// A deliberately hostile grid for determinism: 3 racks with an
+/// oversubscribed fabric, an MTBF crash axis, a graceful decommission,
+/// crash → re-join churn, and the background balancer — every subsystem
+/// that re-pushes events through the settle barrier.
+fn churn_grid() -> SweepGrid {
+    SweepGrid {
+        families: vec![ClusterFamily::Amdahl],
+        nodes: vec![6],
+        cores: vec![2],
+        write_paths: vec![WritePath::DirectIo],
+        lzo: vec![false],
+        workloads: vec![Workload::DfsioWrite],
+        racks: vec![3],
+        oversub: vec![4.0],
+        mtbf: vec![None, Some(300.0)],
+        rejoin: vec![Some(60.0)],
+        decommission_at: vec![Some(40.0)],
+        balancer: vec![None, Some(0.2)],
+        ..SweepGrid::paper_default(42, 1, 1)
+    }
+}
+
+fn churn_opts(solver: SolverMode, solver_threads: usize, trace_dir: Option<String>) -> SweepOptions {
+    SweepOptions {
+        threads: 2,
+        dfsio_bytes_per_worker: 32.0 * MIB,
+        dfsio_workers: 2,
+        solver,
+        solver_threads,
+        obs: ObsSpec::full(10.0),
+        trace_dir,
+        ..SweepOptions::default()
+    }
+}
+
+/// The tentpole bar, end to end: the simulation-outcome projection of a
+/// racked, faulted, lifecycle-churning sweep is byte-identical across
+/// 1 / 2 / 4 solver threads in both solver modes — and the per-scenario
+/// trace / metrics exports are byte-identical files.
+#[test]
+fn sweep_outputs_byte_identical_across_solver_threads_and_modes() {
+    let g = churn_grid();
+    let dir = |tag: &str| {
+        std::env::temp_dir().join(format!("amdahl-par-int-{}-{tag}", std::process::id()))
+    };
+    let tagged = |tag: &str| Some(dir(tag).to_string_lossy().into_owned());
+
+    let r1 = run_sweep(&g, &churn_opts(SolverMode::Incremental, 1, tagged("t1")));
+    let r2 = run_sweep(&g, &churn_opts(SolverMode::Incremental, 2, None));
+    let r4 = run_sweep(&g, &churn_opts(SolverMode::Incremental, 4, tagged("t4")));
+    assert_eq!(r1.sim_json(), r2.sim_json(), "sim_json diverged at 2 solver threads");
+    assert_eq!(r1.sim_json(), r4.sim_json(), "sim_json diverged at 4 solver threads");
+
+    let w1 = run_sweep(&g, &churn_opts(SolverMode::WholeSet, 1, None));
+    let w4 = run_sweep(&g, &churn_opts(SolverMode::WholeSet, 4, None));
+    assert_eq!(w1.sim_json(), w4.sim_json(), "whole-set sim_json diverged at 4 threads");
+    assert_eq!(
+        r1.sim_json(),
+        w4.sim_json(),
+        "solver modes diverged under the parallel engine"
+    );
+
+    for sc in g.expand() {
+        for kind in ["trace", "metrics"] {
+            let name = format!("{}.{kind}.json", sc.id);
+            let a = std::fs::read(dir("t1").join(&name)).expect("threads=1 export missing");
+            let b = std::fs::read(dir("t4").join(&name)).expect("threads=4 export missing");
+            assert_eq!(a, b, "{name} diverged across solver-thread counts");
+        }
+    }
+    let _ = std::fs::remove_dir_all(dir("t1"));
+    let _ = std::fs::remove_dir_all(dir("t4"));
+}
+
+/// The perf-section contract: `solver_threads` / `parallel_solves`
+/// appear in `to_json` only when the sweep ran multi-threaded, and never
+/// in `sim_json` — the default output keeps its exact historical bytes.
+#[test]
+fn parallel_counters_gate_on_thread_count() {
+    let g = SweepGrid {
+        families: vec![ClusterFamily::Amdahl],
+        nodes: vec![5],
+        cores: vec![2],
+        write_paths: vec![WritePath::DirectIo],
+        lzo: vec![false],
+        workloads: vec![Workload::DfsioWrite],
+        ..SweepGrid::paper_default(7, 1, 1)
+    };
+    let opts = |solver_threads: usize| SweepOptions {
+        threads: 1,
+        dfsio_bytes_per_worker: 32.0 * MIB,
+        dfsio_workers: 2,
+        solver_threads,
+        ..SweepOptions::default()
+    };
+    let r1 = run_sweep(&g, &opts(1));
+    let j1 = r1.to_json();
+    assert!(!j1.contains("solver_threads"), "single-threaded perf JSON grew a new key");
+    assert!(!j1.contains("parallel_solves"), "single-threaded perf JSON grew a new key");
+
+    let r4 = run_sweep(&g, &opts(4));
+    let j4 = r4.to_json();
+    assert!(j4.contains("\"solver_threads\": 4"), "multi-threaded perf JSON lost the echo");
+    assert!(j4.contains("\"parallel_solves\": "), "multi-threaded perf JSON lost the counter");
+    assert!(!r4.sim_json().contains("solver_threads"), "perf counter leaked into sim_json");
+    assert_eq!(r1.sim_json(), r4.sim_json(), "thread count changed a simulation outcome");
+}
+
+/// Single-scenario dfsio path (`dfsio --solver-threads N`): replication 1
+/// across 8 workers keeps the write pipelines component-disjoint, so the
+/// batch unions span many components; results and obs exports must still
+/// be bit-identical at every thread count.
+#[test]
+fn dfsio_identical_across_solver_threads() {
+    fn run(threads: usize) -> (u64, u64, String, String) {
+        let conf = HadoopConf { dfs_replication: 1, ..Default::default() };
+        let sim = SimConfig::new(42)
+            .with_solver_threads(threads)
+            .with_obs(ObsSpec::full(5.0));
+        let run = testdfsio::write_test_on(ClusterPreset::Amdahl, sim, 8, 16.0 * MIB, &conf);
+        let obs = run.obs.expect("obs was armed");
+        (
+            run.result.makespan.to_bits(),
+            run.result.per_node_mbps.to_bits(),
+            obs.trace_json.expect("trace armed"),
+            obs.metrics_json.expect("metrics armed"),
+        )
+    }
+    let base = run(1);
+    for threads in [2, 4] {
+        let r = run(threads);
+        assert_eq!(base.0, r.0, "dfsio makespan diverged at {threads} solver threads");
+        assert_eq!(base.1, r.1, "dfsio throughput diverged at {threads} solver threads");
+        assert_eq!(base.2, r.2, "dfsio trace diverged at {threads} solver threads");
+        assert_eq!(base.3, r.3, "dfsio metrics diverged at {threads} solver threads");
+    }
+}
+
+/// Single-scenario application path (`search --solver-threads N`): the
+/// full MapReduce pipeline — ingest, map, shuffle, reduce, HDFS output —
+/// lands on identical outcomes and identical energy at every thread
+/// count.
+#[test]
+fn search_app_identical_across_solver_threads() {
+    fn run(threads: usize) -> (u64, u64, u64) {
+        let conf = HadoopConf {
+            buffered_output: true,
+            direct_io_write: true,
+            ..Default::default()
+        };
+        let z = ZonesConfig {
+            seed: 17,
+            scale: 0.0008,
+            kernel_every: usize::MAX,
+            kernels: None,
+            solver_threads: threads,
+            ..Default::default()
+        };
+        let out = run_app(ClusterPreset::Amdahl, &conf, &z, App::Search);
+        (
+            out.total_seconds.to_bits(),
+            out.energy.total_joules.to_bits(),
+            out.job.map_locality.to_bits(),
+        )
+    }
+    let base = run(1);
+    for threads in [2, 4] {
+        let r = run(threads);
+        assert_eq!(base.0, r.0, "search makespan diverged at {threads} solver threads");
+        assert_eq!(base.1, r.1, "search energy diverged at {threads} solver threads");
+        assert_eq!(base.2, r.2, "search locality diverged at {threads} solver threads");
+    }
+}
