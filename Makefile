@@ -3,7 +3,7 @@
 # pipeline and the end-to-end example on top of it.
 
 .PHONY: artifacts e2e test docs bench-smoke rack-smoke rack-demo lifecycle-demo \
-        obs-smoke obs-golden trace-demo
+        obs-smoke obs-golden trace-demo profile-demo critpath-smoke critpath-golden
 
 # AOT-lower the JAX/Pallas pair kernels to HLO text artifacts the Rust
 # runtime loads at startup. Requires a Python with jax installed; the
@@ -88,6 +88,34 @@ trace-demo:
 	    --racks 3 --oversub 4 --rack-crash 20 --gb 0.0625 --workers 2 \
 	    --trace-dir /tmp/amdahl-traces --obs-interval 2
 	@echo "traces in /tmp/amdahl-traces: load a .trace.json at https://ui.perfetto.dev"
+
+# Critical-path profiler demo: the paper's seed TestDFSIO scenario with
+# the bottleneck attribution printed — per-device-class critical-path
+# seconds, saturation, and the §4 balance re-derivation (the
+# four-Atom-core estimate, computed generically from this run).
+profile-demo:
+	cd rust && cargo run --release -- profile --workers 2 --gb 0.0625 --seed 42
+
+# Critical-path smoke (CI): profile the seed scenario, diff the
+# machine-readable BottleneckReport against the committed golden
+# byte-for-byte (the report is pure sim-time — stable across machines,
+# solver threads, and solver modes). Self-bootstrapping like obs-smoke:
+# a placeholder golden containing "bootstrap" is replaced by the first
+# real run (commit the result).
+critpath-smoke:
+	cd rust && cargo run --release --quiet -- profile --workers 2 \
+	    --gb 0.0625 --seed 42 --json /tmp/critpath_seed.json
+	@if grep -q bootstrap rust/tests/golden/critpath_seed.json; then \
+	    cp /tmp/critpath_seed.json rust/tests/golden/critpath_seed.json; \
+	    echo "critpath-smoke: bootstrapped the golden from this run; commit it"; \
+	fi
+	cmp /tmp/critpath_seed.json rust/tests/golden/critpath_seed.json
+
+# Regenerate the critpath golden after an intentional change to the
+# attribution (new device class, changed blame rule, ...).
+critpath-golden:
+	cd rust && cargo run --release --quiet -- profile --workers 2 \
+	    --gb 0.0625 --seed 42 --json tests/golden/critpath_seed.json
 
 # Node-lifecycle demo: MTBF-sampled crashes whose nodes re-join 120 s
 # later with the background balancer refilling them — degraded-mode

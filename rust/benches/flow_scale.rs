@@ -39,7 +39,7 @@
 
 use std::time::Instant;
 
-use amdahl_hadoop::benchkit::bench;
+use amdahl_hadoop::benchkit::{append_history, bench, git_rev, HistoryRecord};
 use amdahl_hadoop::sim::engine::shared;
 use amdahl_hadoop::sim::{Engine, EngineStats, FlowSpec, SimConfig, SolverMode};
 
@@ -171,7 +171,7 @@ fn main() {
     let inc = shared((EngineStats::default(), Vec::new()));
     let whole = shared((EngineStats::default(), Vec::new()));
     let (i2, w2) = (inc.clone(), whole.clone());
-    bench("flow_scale_10k/incremental", 0, 3, move || {
+    let mean_inc = bench("flow_scale_10k/incremental", 0, 3, move || {
         *i2.borrow_mut() = run_scenario(SolverMode::Incremental);
     });
     bench("flow_scale_10k/whole_set_baseline", 0, 1, move || {
@@ -278,6 +278,33 @@ fn main() {
     }
 
     check_recorded_baseline(&si, &s100);
+
+    // Append the per-run perf trail (`BENCH_history.jsonl`, or
+    // `$BENCH_HISTORY`): one line per tier with the commit it ran on and
+    // the engine's own counters, so the solver's wall-time trajectory is
+    // plottable across PRs without re-running old revisions.
+    let rev = git_rev();
+    let mut history = vec![HistoryRecord {
+        name: "flow_scale_10k/incremental".into(),
+        git_rev: rev.clone(),
+        mean_s: mean_inc,
+        solve_ns: si.solve_ns,
+        parallel_solves: si.parallel_solves,
+        events_processed: si.events_processed,
+        flows_resolved: si.flows_resolved,
+    }];
+    for (threads, s, _, wall) in &rows {
+        history.push(HistoryRecord {
+            name: format!("flow_scale_100k/threads{threads}"),
+            git_rev: rev.clone(),
+            mean_s: *wall,
+            solve_ns: s.solve_ns,
+            parallel_solves: s.parallel_solves,
+            events_processed: s.events_processed,
+            flows_resolved: s.flows_resolved,
+        });
+    }
+    append_history(&history);
 }
 
 /// Regression gate against the recorded baseline

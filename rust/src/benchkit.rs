@@ -111,6 +111,96 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, f: F) -> f64
     bench_record(name, warmup, samples, f).mean_s
 }
 
+/// One per-run line of the append-only perf history
+/// (`BENCH_history.jsonl`): which commit ran, what the benchmark
+/// measured, and the engine's own perf counters — enough to plot the
+/// solver's wall-time trajectory across PRs without re-running old
+/// revisions.
+#[derive(Debug, Clone)]
+pub struct HistoryRecord {
+    /// Benchmark name (same namespace as [`BenchRecord::name`]).
+    pub name: String,
+    /// Abbreviated git revision the binary was built from ("unknown"
+    /// outside a work tree).
+    pub git_rev: String,
+    /// Mean wall-clock seconds per sample.
+    pub mean_s: f64,
+    /// Wall-clock nanoseconds the engine spent inside the rate solver.
+    pub solve_ns: u64,
+    /// Solves that took the parallel path.
+    pub parallel_solves: u64,
+    /// Timer + flow-completion events the engine processed.
+    pub events_processed: u64,
+    /// Total flow-rate computations over the run.
+    pub flows_resolved: u64,
+}
+
+impl HistoryRecord {
+    /// One-line JSON object with fixed key order (the jsonl sibling of
+    /// [`BenchRecord::to_json_line`], plus provenance and counters).
+    pub fn to_json_line(&self) -> String {
+        format!(
+            "{{\"bench\": \"{}\", \"git_rev\": \"{}\", \"mean_s\": {:.9}, \
+             \"solve_ns\": {}, \"parallel_solves\": {}, \"events_processed\": {}, \
+             \"flows_resolved\": {}}}",
+            esc_json(&self.name),
+            esc_json(&self.git_rev),
+            self.mean_s,
+            self.solve_ns,
+            self.parallel_solves,
+            self.events_processed,
+            self.flows_resolved,
+        )
+    }
+}
+
+fn esc_json(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' | '\\' => vec!['\\', c],
+            c if (c as u32) < 0x20 => vec![' '],
+            c => vec![c],
+        })
+        .collect()
+}
+
+/// The abbreviated revision of the current work tree, or "unknown" when
+/// git (or a repository) is unavailable — history lines must never fail
+/// a bench run.
+pub fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Append history records to the perf trail: `$BENCH_HISTORY` when set
+/// (empty disables), else `BENCH_history.jsonl` in the working
+/// directory. Errors are reported, never fatal.
+pub fn append_history(records: &[HistoryRecord]) {
+    let path = match std::env::var("BENCH_HISTORY") {
+        Ok(p) if p.is_empty() => return,
+        Ok(p) => p,
+        Err(_) => "BENCH_history.jsonl".to_string(),
+    };
+    let res = std::fs::OpenOptions::new().create(true).append(true).open(&path).and_then(
+        |mut f| {
+            for r in records {
+                writeln!(f, "{}", r.to_json_line())?;
+            }
+            Ok(())
+        },
+    );
+    if let Err(e) = res {
+        eprintln!("benchkit: could not append history to {path}: {e}");
+    }
+}
+
 fn fmt(s: f64) -> String {
     if s < 1e-6 {
         format!("{:.1}ns", s * 1e9)
@@ -165,6 +255,30 @@ mod tests {
             g,
             g
         );
+    }
+
+    #[test]
+    fn history_line_shape_and_escaping() {
+        let h = super::HistoryRecord {
+            name: "flow\"scale".into(),
+            git_rev: "abc1234".into(),
+            mean_s: 1.25,
+            solve_ns: 42,
+            parallel_solves: 3,
+            events_processed: 1000,
+            flows_resolved: 10,
+        };
+        let j = h.to_json_line();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\"git_rev\": \"abc1234\""));
+        assert!(j.contains("\"solve_ns\": 42"));
+        assert!(j.contains("flow\\\"scale"), "quote must be backslash-escaped: {j}");
+    }
+
+    #[test]
+    fn git_rev_never_panics() {
+        let r = super::git_rev();
+        assert!(!r.is_empty());
     }
 
     #[test]

@@ -191,6 +191,10 @@ pub struct FaultState {
     /// node), so drain re-scans never double-copy a block and a crash
     /// that kills a copy's endpoint can restart the stalled drain.
     pub(crate) drain_pending: Vec<PendingMove>,
+    /// Open `"lifecycle"` drain spans by node: begun at decommission,
+    /// ended when the drain completes or is cancelled (span coverage
+    /// for lifecycle transitions — instants alone don't show duration).
+    pub(crate) drain_spans: Vec<(NodeId, crate::obs::SpanId)>,
     /// Counters describing everything the subsystem did.
     pub stats: FaultStats,
 }
@@ -218,6 +222,7 @@ impl FaultState {
             balancer_idle_rounds: 0,
             balancer_pending: Vec::new(),
             drain_pending: Vec::new(),
+            drain_spans: Vec::new(),
             stats: FaultStats::default(),
         }
     }

@@ -75,6 +75,8 @@ pub fn handle_crash(engine: &mut Engine, world: &WorldHandle, node: NodeId) {
     if engine.metrics_enabled() {
         engine.metric_incr("faults.crashes", 1);
     }
+    // A crash mid-drain ends the drain; close its lifecycle span.
+    end_drain_span(engine, world, node);
     let world2 = world.clone();
     engine.batch(move |engine| {
         dispatch_crash(engine, &world2, node);
@@ -288,6 +290,13 @@ pub fn handle_decommission(engine: &mut Engine, world: &WorldHandle, node: NodeI
     if engine.trace_enabled() {
         engine.trace_instant("faults", format!("decommission n{}", node.0), node.0 as u32);
     }
+    // The drain is a *duration*: open a lifecycle span that closes when
+    // the node goes dead, the decommission is cancelled, or the node
+    // crashes mid-drain.
+    if engine.spans_enabled() {
+        let span = engine.span_begin("lifecycle", format!("drain n{}", node.0), node.0 as u32);
+        world.borrow_mut().faults.drain_spans.push((node, span));
+    }
     // The JobTracker stops assigning work to the draining tracker.
     dispatch_drain(engine, world, node);
     drain_round(engine, world, node);
@@ -434,7 +443,21 @@ fn finish_drain(engine: &mut Engine, world: &WorldHandle, node: NodeId) {
     if engine.trace_enabled() {
         engine.trace_instant("faults", format!("drain complete n{} (dead)", node.0), node.0 as u32);
     }
+    end_drain_span(engine, world, node);
     balancer::kick(engine, world);
+}
+
+/// Close the open `"lifecycle"` drain span for `node`, if any. No-op
+/// when span recording is off (no span was stored) or no drain is open.
+fn end_drain_span(engine: &mut Engine, world: &WorldHandle, node: NodeId) {
+    let span = {
+        let mut w = world.borrow_mut();
+        match w.faults.drain_spans.iter().position(|(n, _)| *n == node) {
+            Some(i) => w.faults.drain_spans.swap_remove(i).1,
+            None => return,
+        }
+    };
+    engine.span_end(span);
 }
 
 /// Process a recommission: a dead node re-joins the cluster — or, if
@@ -483,6 +506,7 @@ pub fn handle_recommission(engine: &mut Engine, world: &WorldHandle, node: NodeI
                     node.0 as u32,
                 );
             }
+            end_drain_span(engine, world, node);
             // The tracker never died; give it its slots back.
             dispatch_rejoin(engine, world, node);
             balancer::kick(engine, world);
@@ -535,6 +559,17 @@ pub fn handle_recommission(engine: &mut Engine, world: &WorldHandle, node: NodeI
                     format!("recommission n{} ({} repairs)", node.0, tasks.len()),
                     node.0 as u32,
                 );
+            }
+            // The re-join itself is instantaneous in the model; record
+            // it as a zero-duration lifecycle span so span-graph
+            // consumers see the transition alongside the drains.
+            if engine.spans_enabled() {
+                let span = engine.span_begin(
+                    "lifecycle",
+                    format!("rejoin n{} ({} repairs)", node.0, tasks.len()),
+                    node.0 as u32,
+                );
+                engine.span_end(span);
             }
             if engine.metrics_enabled() {
                 engine.metric_incr("faults.recommissions", 1);
@@ -802,7 +837,7 @@ pub(crate) fn start_transfer(
         } else {
             ("recovery", "recovery.transfer_s", "recovery.transfers")
         };
-    let span = if engine.trace_enabled() {
+    let span = if engine.spans_enabled() {
         engine.span_begin(cat, format!("{cat}:blk n{}->n{}", source.0, target.0), target.0 as u32)
     } else {
         crate::obs::SpanId::NONE

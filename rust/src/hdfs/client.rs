@@ -142,7 +142,7 @@ fn write_next(engine: &mut Engine, ctx: Rc<RefCell<WriteCtx>>) {
         spec
     };
     {
-        let span = if engine.trace_enabled() {
+        let span = if engine.spans_enabled() {
             let name = ctx.borrow().name.clone();
             engine.span_begin("hdfs", format!("write {name} blk[{idx}]"), client.0 as u32)
         } else {
@@ -540,7 +540,7 @@ fn read_next(engine: &mut Engine, ctx: Rc<RefCell<ReadCtx>>) {
             read_block_flow(engine, &world, client, src, &block, block.size, &c.conf, &c.task)
         };
         {
-            let span = if engine.trace_enabled() {
+            let span = if engine.spans_enabled() {
                 engine.span_begin(
                     "hdfs",
                     format!("read blk{} from n{}", block.id, src.0),

@@ -74,16 +74,32 @@ fn build_world(preset: ClusterPreset, sim: SimConfig, conf: &HadoopConf) -> (Eng
     (engine, shared(world))
 }
 
-fn finish(engine: &Engine, world: &WorldHandle, result: DfsioResult) -> DfsioRun {
+fn finish(engine: &Engine, world: &WorldHandle, preset: ClusterPreset, result: DfsioResult) -> DfsioRun {
+    let usage = engine.usage_snapshot();
     let (energy, obs) = {
         let w = world.borrow();
         let energy = crate::energy::measure(engine, &w.cluster, result.makespan);
         let obs = if engine.obs().any_enabled() {
+            let bottleneck = engine.obs().crit.enabled.then(|| {
+                crate::obs::bottleneck::analyze(
+                    &engine.obs().crit,
+                    &usage,
+                    preset.core_count(),
+                    result.makespan,
+                )
+            });
+            let job_latency = engine
+                .obs()
+                .metrics
+                .histogram("dfsio.worker_s")
+                .and_then(crate::obs::LatencySummary::from_histogram);
             Some(crate::obs::ObsReport {
                 trace_json: engine.trace_enabled().then(|| engine.obs().export_trace("dfsio")),
                 metrics_json: (engine.metrics_enabled() || engine.obs().series.enabled())
                     .then(|| engine.obs().metrics_json()),
                 cpu_families: crate::energy::family_breakdown(engine, &w.cluster),
+                bottleneck,
+                job_latency,
             })
         } else {
             None
@@ -93,7 +109,7 @@ fn finish(engine: &Engine, world: &WorldHandle, result: DfsioResult) -> DfsioRun
     DfsioRun {
         result,
         energy,
-        usage: engine.usage_snapshot(),
+        usage,
         stats: engine.stats(),
         faults: world.borrow().faults.stats.clone(),
         obs,
@@ -158,7 +174,15 @@ pub fn write_test_faulted(
                     bytes_per_writer,
                     conf,
                     "hdfs-write",
-                    move |e| dt.borrow_mut().push(e.now()),
+                    move |e| {
+                        // Writers start at t=0, so the completion time
+                        // *is* the per-worker latency.
+                        if e.metrics_enabled() {
+                            let now = e.now();
+                            e.metric_duration("dfsio.worker_s", now);
+                        }
+                        dt.borrow_mut().push(e.now());
+                    },
                 );
             }
         }
@@ -172,7 +196,7 @@ pub fn write_test_faulted(
         preset.slave_count(),
         utilization(&engine),
     );
-    finish(&engine, &world, result)
+    finish(&engine, &world, preset, result)
 }
 
 /// Pre-place a file of `bytes` whose blocks all have a replica on
@@ -288,7 +312,14 @@ pub fn read_test_faulted(
                     conf,
                     ReadOpts { force_remote },
                     "hdfs-read",
-                    move |e| dt.borrow_mut().push(e.now()),
+                    move |e| {
+                        // Readers start at t=0: completion time = latency.
+                        if e.metrics_enabled() {
+                            let now = e.now();
+                            e.metric_duration("dfsio.worker_s", now);
+                        }
+                        dt.borrow_mut().push(e.now());
+                    },
                 );
             }
         }
@@ -302,7 +333,7 @@ pub fn read_test_faulted(
         preset.slave_count(),
         utilization(&engine),
     );
-    finish(&engine, &world, result)
+    finish(&engine, &world, preset, result)
 }
 
 fn summarize(

@@ -12,6 +12,8 @@
 //!                      [--trace FILE] [--metrics-out FILE] [--obs-interval 5]
 //! amdahl-hadoop dfsio  --op write|read --workers 2 --gb 3 [--solver-threads N]
 //!                      [--trace FILE] [--metrics-out FILE] [--obs-interval 5]
+//! amdahl-hadoop profile [--op write|read] [--workers 2] [--gb 0.0625]
+//!                      [--solver-threads N] [--obs-interval 5] [--json FILE]
 //! amdahl-hadoop sweep  [--cores 1..8] [--nodes 9] [--family amdahl|occ|both]
 //!                      [--threads N] [--solver-threads N]
 //!                      [--gb 0.125] [--workers 4]
@@ -78,6 +80,16 @@
 //! CPU breakdown (the paper's §4 "where do the cycles go" analysis), and
 //! `sweep --perf-wallclock` adds wall-clock solver time to the perf
 //! section of the output JSON.
+//!
+//! `profile` runs the paper's seed TestDFSIO scenario on the Amdahl
+//! cluster with the critical-path collector armed and prints the full
+//! bottleneck decomposition: per-device-class critical-path seconds,
+//! phase split, per-resource saturation, and the generic §4 balance
+//! re-derivation (`balanced cores/node: 4` on the stock blade).
+//! `--json FILE` additionally writes the machine-readable
+//! [`BottleneckReport`](amdahl_hadoop::obs::BottleneckReport) — the
+//! report is byte-identical for every `--solver-threads` value and
+//! both solver modes.
 //!
 //! Common options: `--seed N` (default 42), `--scale F` (fraction of the
 //! paper's 25 GB dataset, default 0.002), `--kernels` (load the AOT
@@ -367,6 +379,12 @@ fn main() -> anyhow::Result<()> {
             if !churn.is_empty() {
                 print!("{}", report::render_churn(&churn));
             }
+            // Only obs-enabled sweeps carry critical-path reports, so the
+            // default run prints nothing extra here.
+            let bottleneck_rows = results.bottleneck_frontier();
+            if !bottleneck_rows.is_empty() {
+                print!("{}", report::render_bottleneck(&bottleneck_rows));
+            }
             if let Some(text) = baseline_text {
                 let cmp = amdahl_hadoop::sweep::compare_baseline(
                     &results,
@@ -564,6 +582,62 @@ fn main() -> anyhow::Result<()> {
                 r.per_node_mbps, r.aggregate_mbps, r.makespan
             );
             emit_obs(&args, "dfsio", &run.obs)?;
+        }
+        "profile" => {
+            // The paper's seed scenario: TestDFSIO on the stock Amdahl
+            // blades, with the critical-path collector (and the metrics
+            // registry, for completion latencies) armed. No tracing —
+            // attribution needs only the structured span graph.
+            let workers = args.get_usize("workers", 2)?;
+            let gb = args.get_f64("gb", 0.0625)?;
+            let conf = HadoopConf { direct_io_write: true, ..Default::default() };
+            let obs = amdahl_hadoop::sim::ObsSpec {
+                metrics: true,
+                critpath: true,
+                sample_interval_s: args.get_f64("obs-interval", 0.0)?,
+                ..Default::default()
+            };
+            let sim = amdahl_hadoop::sim::SimConfig::new(seed)
+                .with_solver_threads(args.get_usize("solver-threads", 1)?)
+                .with_obs(obs);
+            let op = args.get("op").unwrap_or("write");
+            let run = match op {
+                "read" => amdahl_hadoop::hdfs::testdfsio::read_test_on(
+                    ClusterPreset::Amdahl,
+                    sim,
+                    workers,
+                    gb * 1024.0 * MIB,
+                    &conf,
+                    args.flag("remote"),
+                ),
+                _ => amdahl_hadoop::hdfs::testdfsio::write_test_on(
+                    ClusterPreset::Amdahl,
+                    sim,
+                    workers,
+                    gb * 1024.0 * MIB,
+                    &conf,
+                ),
+            };
+            let r = &run.result;
+            println!(
+                "TestDFSIO {op}: {:.1} MB/s per node ({:.1} aggregate), makespan {:.1}s",
+                r.per_node_mbps, r.aggregate_mbps, r.makespan
+            );
+            let obs_report = run.obs.as_ref().expect("profile arms the obs stack");
+            let b = obs_report.bottleneck.as_ref().expect("profile arms critpath");
+            let title = format!("dfsio-{op} on Amdahl, {workers} workers/node");
+            print!("{}", report::render_profile(&title, b));
+            if let Some(l) = &obs_report.job_latency {
+                println!(
+                    "\nworker completion latency: n={} mean={:.2}s \
+                     p50={:.2}s p95={:.2}s p99={:.2}s",
+                    l.count, l.mean_s, l.p50_s, l.p95_s, l.p99_s
+                );
+            }
+            if let Some(path) = args.get("json") {
+                std::fs::write(path, b.to_json())?;
+                eprintln!("[profile] wrote bottleneck report to {path}");
+            }
         }
         "all" => {
             print!("{}", report::table1());

@@ -252,7 +252,7 @@ pub fn run_job(
     }
     let n_splits = splits.len();
     let n_reducers = spec.n_reducers;
-    let job_span = if engine.trace_enabled() {
+    let job_span = if engine.spans_enabled() {
         engine.span_begin("job", format!("job {}", spec.name), 0)
     } else {
         crate::obs::SpanId::NONE
@@ -414,7 +414,7 @@ fn start_map(
     speculative: bool,
 ) {
     let token = TaskToken::new();
-    let span = if engine.trace_enabled() {
+    let span = if engine.spans_enabled() {
         let tag = if speculative { " (spec)" } else { "" };
         engine.span_begin("mapreduce", format!("map[{split_idx}]{tag} @n{}", node.0), node.0 as u32)
     } else {
@@ -547,7 +547,7 @@ fn map_attempt_done(
 fn start_reduce(engine: &mut Engine, state: Rc<RefCell<JobState>>, reducer: usize, node: NodeId) {
     let token = TaskToken::new();
     let shuffle_done = PhaseFlag::new();
-    let span = if engine.trace_enabled() {
+    let span = if engine.spans_enabled() {
         engine.span_begin("mapreduce", format!("reduce[{reducer}] @n{}", node.0), node.0 as u32)
     } else {
         crate::obs::SpanId::NONE

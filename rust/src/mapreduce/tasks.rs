@@ -457,7 +457,7 @@ pub fn run_reduce_task(
         if faults_on {
             in_flight.borrow_mut().push(src);
         }
-        let fetch_span = if engine.trace_enabled() {
+        let fetch_span = if engine.spans_enabled() {
             engine.span_begin(
                 "shuffle",
                 format!("fetch r{reducer_idx} n{}->n{}", src.0, node.0),

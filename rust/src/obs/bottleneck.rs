@@ -1,0 +1,432 @@
+//! Critical-path reconstruction and bottleneck attribution — the
+//! paper's §5 Amdahl's-law analysis, automated for every scenario.
+//!
+//! [`analyze`] consumes the structured span graph and per-kind
+//! utilization samples collected by [`super::critpath::CritPath`] plus
+//! the end-of-run usage integrals, and produces a
+//! [`BottleneckReport`]:
+//!
+//! 1. **Critical path** — the run's makespan is cut at every span
+//!    begin/end into elementary intervals; each interval is assigned to
+//!    the *deepest* span active across it (leaf block/shuffle/recovery
+//!    spans over phase spans over the job span), or to `sched-wait`
+//!    when no span is open (or nothing is flowing).
+//! 2. **Blame** — each occupied interval is attributed to the device
+//!    kind (cpu / disk / nic / ToR uplink / membus) with the highest
+//!    sampled utilization across the interval, falling back to the
+//!    latest sample at or before it.
+//! 3. **Saturation** — per kind, the fraction of samples where some
+//!    device of that kind sits ≥ 95% busy.
+//! 4. **Balance** — the paper's estimate, generically: with `u_cpu` the
+//!    busiest CPU's mean utilization and `u_next` the busiest non-CPU
+//!    device's, `balanced_cores = ceil(cores × u_cpu / u_next)` (four
+//!    Atom cores for the paper's blade). Dually,
+//!    `balanced_disk_bw_factor` and `balanced_nic_mbps` give the
+//!    disk/NIC bandwidth that would match the busiest device.
+//!
+//! # Determinism
+//!
+//! Inputs (span order, sample grid, usage integrals) are byte-identical
+//! across `--threads` / `--solver-threads` / `SolverMode`; the sweep
+//! uses only total-order float comparisons and fixed tie-breaks, and
+//! [`BottleneckReport::to_json`] uses the obs layer's fixed float
+//! formatting — so the rendered report is byte-identical too
+//! (`tests/integration_obs.rs` enforces this).
+
+use super::critpath::{CritPath, CritSpan, KINDS, KIND_NAMES};
+use super::metrics::num;
+use crate::sim::UsageSnapshot;
+
+/// Attribution classes: the five device kinds plus scheduler-wait.
+pub const CLASSES: usize = KINDS + 1;
+
+/// Class names, in render order (index [`KINDS`] is `sched-wait`).
+pub const CLASS_NAMES: [&str; CLASSES] = ["cpu", "disk", "nic", "uplink", "membus", "sched-wait"];
+
+/// Span categories bucketed for the per-phase decomposition, in render
+/// order; unknown categories fall into `other`.
+pub const CAT_NAMES: [&str; 8] =
+    ["job", "lifecycle", "mapreduce", "hdfs", "shuffle", "recovery", "balance", "other"];
+
+/// Nesting rank of a span category: the critical-path sweep blames each
+/// interval on the deepest active span. Container spans (whole job,
+/// lifecycle drains) rank 0, phase spans 1, leaf work spans 2.
+fn rank(cat: &str) -> u8 {
+    match cat {
+        "job" | "lifecycle" => 0,
+        "mapreduce" => 1,
+        _ => 2,
+    }
+}
+
+fn cat_slot(cat: &str) -> usize {
+    CAT_NAMES.iter().position(|c| *c == cat).unwrap_or(CAT_NAMES.len() - 1)
+}
+
+/// End-of-run bottleneck attribution for one scenario. Carried by
+/// `RunOutcome` / `DfsioRun` inside [`super::ObsReport`]; rendered by
+/// [`BottleneckReport::to_json`] (pretty, for `amdahl-hadoop profile
+/// --json` and the CI golden) and
+/// [`BottleneckReport::to_json_inline`] (compact, for the sweep's
+/// `"bottleneck"` block).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BottleneckReport {
+    /// Run makespan, sim seconds.
+    pub makespan_s: f64,
+    /// Physical cores per node the scenario ran with.
+    pub cores: usize,
+    /// Critical-path seconds per class, indexed by [`CLASS_NAMES`].
+    pub class_seconds: [f64; CLASSES],
+    /// The class owning the largest critical-path share.
+    pub dominant: &'static str,
+    /// Occupied critical-path seconds per span category, indexed by
+    /// [`CAT_NAMES`].
+    pub phase_seconds: [f64; 8],
+    /// Fraction of samples each device kind sits ≥ 95% busy, indexed by
+    /// [`KIND_NAMES`].
+    pub saturation: [f64; KINDS],
+    /// Busiest device's mean utilization per kind, indexed by
+    /// [`KIND_NAMES`] (from the usage integrals).
+    pub utilization: [f64; KINDS],
+    /// Cores per node that would balance the CPU against the busiest
+    /// non-CPU device (the paper's four-Atom-core estimate).
+    pub balanced_cores: usize,
+    /// Disk bandwidth, as a factor of the current disk, that would
+    /// match the busiest device (< 1 ⇒ a slower disk loses nothing).
+    pub balanced_disk_bw_factor: f64,
+    /// NIC bandwidth (Mbit/s) that would match the busiest device.
+    pub balanced_nic_mbps: f64,
+}
+
+impl BottleneckReport {
+    /// Critical-path share of class `i` (seconds / makespan).
+    pub fn share(&self, i: usize) -> f64 {
+        if self.makespan_s > 0.0 {
+            self.class_seconds[i] / self.makespan_s
+        } else {
+            0.0
+        }
+    }
+
+    fn write_fields(&self, s: &mut String, pad: &str, sep: &str) {
+        s.push_str(&format!("{pad}\"makespan_s\": {},{sep}", num(self.makespan_s)));
+        s.push_str(&format!("{pad}\"cores\": {},{sep}", self.cores));
+        s.push_str(&format!("{pad}\"dominant\": \"{}\",{sep}", self.dominant));
+        s.push_str(&format!("{pad}\"critical_path\": {{{sep}"));
+        for (i, name) in CLASS_NAMES.iter().enumerate() {
+            let comma = if i + 1 < CLASSES { "," } else { "" };
+            s.push_str(&format!(
+                "{pad}  \"{name}\": {{\"seconds\": {}, \"share\": {}}}{comma}{sep}",
+                num(self.class_seconds[i]),
+                num(self.share(i))
+            ));
+        }
+        s.push_str(&format!("{pad}}},{sep}"));
+        s.push_str(&format!("{pad}\"phases\": {{"));
+        for (i, name) in CAT_NAMES.iter().enumerate() {
+            let comma = if i + 1 < CAT_NAMES.len() { ", " } else { "" };
+            s.push_str(&format!("\"{name}\": {}{comma}", num(self.phase_seconds[i])));
+        }
+        s.push_str(&format!("}},{sep}"));
+        s.push_str(&format!("{pad}\"saturation\": {{"));
+        for (k, name) in KIND_NAMES.iter().enumerate() {
+            let comma = if k + 1 < KINDS { ", " } else { "" };
+            s.push_str(&format!("\"{name}\": {}{comma}", num(self.saturation[k])));
+        }
+        s.push_str(&format!("}},{sep}"));
+        s.push_str(&format!("{pad}\"utilization\": {{"));
+        for (k, name) in KIND_NAMES.iter().enumerate() {
+            let comma = if k + 1 < KINDS { ", " } else { "" };
+            s.push_str(&format!("\"{name}\": {}{comma}", num(self.utilization[k])));
+        }
+        s.push_str(&format!("}},{sep}"));
+        s.push_str(&format!("{pad}\"balanced_cores\": {},{sep}", self.balanced_cores));
+        s.push_str(&format!(
+            "{pad}\"balanced_disk_bw_factor\": {},{sep}",
+            num(self.balanced_disk_bw_factor)
+        ));
+        s.push_str(&format!("{pad}\"balanced_nic_mbps\": {}{sep}", num(self.balanced_nic_mbps)));
+    }
+
+    /// Pretty byte-stable JSON document (trailing newline) — the
+    /// `profile --json` output and the CI critpath-smoke golden.
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n");
+        self.write_fields(&mut s, "  ", "\n");
+        s.push_str("}\n");
+        s
+    }
+
+    /// Compact single-line JSON object — embedded as the sweep record's
+    /// `"bottleneck"` value.
+    pub fn to_json_inline(&self) -> String {
+        let mut s = String::from("{");
+        self.write_fields(&mut s, "", " ");
+        while s.ends_with(' ') {
+            s.pop();
+        }
+        s.push('}');
+        s
+    }
+}
+
+/// Reconstruct the critical path and attribute it (module docs walk the
+/// pipeline). `usage` is `Engine::usage_snapshot()`, `cores` the
+/// physical per-node core count, `makespan` the final sim time.
+pub fn analyze(
+    crit: &CritPath,
+    usage: &[UsageSnapshot],
+    cores: usize,
+    makespan: f64,
+) -> BottleneckReport {
+    // Clip spans to [0, makespan]; open spans end at the makespan.
+    let spans: Vec<CritSpan> = crit
+        .spans()
+        .iter()
+        .filter(|s| s.begin < makespan)
+        .map(|s| CritSpan { cat: s.cat, begin: s.begin.max(0.0), end: s.end.min(makespan) })
+        .collect();
+
+    // Elementary-interval boundaries: every span edge plus the run ends.
+    let mut bounds: Vec<f64> = Vec::with_capacity(spans.len() * 2 + 2);
+    bounds.push(0.0);
+    bounds.push(makespan);
+    for s in &spans {
+        bounds.push(s.begin);
+        bounds.push(s.end);
+    }
+    bounds.sort_by(f64::total_cmp);
+    bounds.dedup_by(|a, b| a == b);
+
+    let samples = crit.samples();
+    // Mean per-kind utilization over the run — the no-sample fallback.
+    let mut usage_util = [0.0f64; KINDS];
+    for u in usage {
+        if let Some(k) = super::critpath::kind_of(&u.name) {
+            if u.mean_utilization > usage_util[k] {
+                usage_util[k] = u.mean_utilization;
+            }
+        }
+    }
+
+    let mut class_seconds = [0.0f64; CLASSES];
+    let mut phase_seconds = [0.0f64; 8];
+    let mut cursor = 0usize; // samples are time-ordered; sweep once.
+    for w in bounds.windows(2) {
+        let (a, b) = (w[0], w[1]);
+        if b <= a {
+            continue;
+        }
+        // Deepest active span: max (rank, begin, id) — all deterministic.
+        let mut best: Option<(u8, u64, usize)> = None;
+        for (id, s) in spans.iter().enumerate() {
+            if s.begin <= a && s.end >= b {
+                let key = (rank(s.cat), s.begin.to_bits(), id);
+                if best.map_or(true, |k| key > k) {
+                    best = Some(key);
+                }
+            }
+        }
+        let dur = b - a;
+        let Some((_, _, id)) = best else {
+            class_seconds[KINDS] += dur; // no span open: scheduler-wait
+            continue;
+        };
+        // Mean per-kind utilization over samples in [a, b), else the
+        // latest sample at or before a, else the run-wide usage means.
+        while cursor < samples.len() && samples[cursor].t < a {
+            cursor += 1;
+        }
+        let mut util = [0.0f64; KINDS];
+        let mut n = 0usize;
+        let mut j = cursor;
+        while j < samples.len() && samples[j].t < b {
+            for k in 0..KINDS {
+                util[k] += samples[j].util[k];
+            }
+            n += 1;
+            j += 1;
+        }
+        if n > 0 {
+            for u in &mut util {
+                *u /= n as f64;
+            }
+        } else if cursor > 0 {
+            util = samples[cursor - 1].util;
+        } else {
+            util = usage_util;
+        }
+        let mut k_best = 0usize;
+        for k in 1..KINDS {
+            if util[k] > util[k_best] {
+                k_best = k;
+            }
+        }
+        if util[k_best] < 1e-9 {
+            class_seconds[KINDS] += dur; // span open but nothing flowing
+        } else {
+            class_seconds[k_best] += dur;
+        }
+        phase_seconds[cat_slot(spans[id].cat)] += dur;
+    }
+
+    // Saturation: fraction of samples with some device of the kind
+    // >= 95% busy.
+    let mut saturation = [0.0f64; KINDS];
+    if !samples.is_empty() {
+        for s in samples {
+            for k in 0..KINDS {
+                if s.util[k] >= 0.95 {
+                    saturation[k] += 1.0;
+                }
+            }
+        }
+        for v in &mut saturation {
+            *v /= samples.len() as f64;
+        }
+    }
+
+    // Balance estimates from the usage integrals (exact means, not the
+    // sampled grid).
+    let u = usage_util;
+    let u_max = u.iter().copied().fold(0.0f64, f64::max);
+    let u_next = u[1..].iter().copied().fold(0.0f64, f64::max);
+    let balanced_cores = if u_next > 1e-9 {
+        ((cores as f64 * u[0] / u_next) - 1e-9).ceil().max(1.0) as usize
+    } else {
+        cores.max(1)
+    };
+    let balanced_disk_bw_factor = if u_max > 1e-9 { u[1] / u_max } else { 1.0 };
+    let nic_cap_bytes = usage
+        .iter()
+        .filter(|r| super::critpath::kind_of(&r.name) == Some(2))
+        .map(|r| r.capacity)
+        .fold(0.0f64, f64::max);
+    let balanced_nic_mbps =
+        if u_max > 1e-9 { nic_cap_bytes * 8.0 / 1e6 * u[2] / u_max } else { 0.0 };
+
+    let mut dominant = 0usize;
+    for i in 1..CLASSES {
+        if class_seconds[i] > class_seconds[dominant] {
+            dominant = i;
+        }
+    }
+
+    BottleneckReport {
+        makespan_s: makespan,
+        cores,
+        class_seconds,
+        dominant: CLASS_NAMES[dominant],
+        phase_seconds,
+        saturation,
+        utilization: u,
+        balanced_cores,
+        balanced_disk_bw_factor,
+        balanced_nic_mbps,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::critpath::CritPath;
+
+    fn snap(name: &str, cap: f64, mean: f64) -> UsageSnapshot {
+        UsageSnapshot {
+            name: name.into(),
+            capacity: cap,
+            busy_unit_seconds: mean * cap * 100.0,
+            mean_utilization: mean,
+        }
+    }
+
+    #[test]
+    fn intervals_blame_busiest_kind_and_gaps_are_sched_wait() {
+        let mut c = CritPath::new(true);
+        // One hdfs span [0, 4), cpu-hot; a gap [4, 6); one shuffle span
+        // [6, 10), nic-hot.
+        let a = c.span_begin(0.0, "hdfs");
+        c.span_end(4.0, a);
+        let b = c.span_begin(6.0, "shuffle");
+        c.span_end(10.0, b);
+        c.sample(0.0, &[("n0.cpu".into(), 0.9), ("n0.disk".into(), 0.4)]);
+        c.sample(5.0, &[("n0.cpu".into(), 0.0)]);
+        c.sample(6.0, &[("n0.tx".into(), 0.8), ("n0.cpu".into(), 0.2)]);
+        let usage = [snap("n0.cpu", 2.5, 0.5), snap("n0.disk", 1.0, 0.2), snap("n0.tx", 1e8, 0.3)];
+        let r = analyze(&c, &usage, 2, 10.0);
+        assert_eq!(r.class_seconds[0], 4.0, "hdfs span is cpu-bound");
+        assert_eq!(r.class_seconds[2], 4.0, "shuffle span is nic-bound");
+        assert_eq!(r.class_seconds[KINDS], 2.0, "gap is sched-wait");
+        assert_eq!(r.dominant, "cpu"); // 4.0 ties break to first class
+        assert_eq!(r.phase_seconds[cat_slot("hdfs")], 4.0);
+        assert_eq!(r.phase_seconds[cat_slot("shuffle")], 4.0);
+    }
+
+    #[test]
+    fn deepest_span_wins_and_open_spans_clip_to_makespan() {
+        let mut c = CritPath::new(true);
+        let job = c.span_begin(0.0, "job");
+        let map = c.span_begin(1.0, "mapreduce");
+        let blk = c.span_begin(2.0, "hdfs");
+        c.span_end(3.0, blk);
+        c.span_end(4.0, map);
+        // job never closed: clips to makespan 5.
+        let _ = job;
+        c.sample(0.0, &[("n0.cpu".into(), 0.9)]);
+        let usage = [snap("n0.cpu", 2.5, 0.9)];
+        let r = analyze(&c, &usage, 2, 5.0);
+        // All 5 seconds occupied (job covers the whole run) and cpu-blamed.
+        assert_eq!(r.class_seconds[0], 5.0);
+        assert_eq!(r.class_seconds[KINDS], 0.0);
+        // Phase split: hdfs leaf 1s, mapreduce 2s, job the rest.
+        assert_eq!(r.phase_seconds[cat_slot("hdfs")], 1.0);
+        assert_eq!(r.phase_seconds[cat_slot("mapreduce")], 2.0);
+        assert_eq!(r.phase_seconds[cat_slot("job")], 2.0);
+    }
+
+    #[test]
+    fn balance_estimates_reproduce_the_paper_shape() {
+        // CPU twice as busy as disk on a 2-core blade → 4 balanced cores.
+        let c = CritPath::new(true);
+        let usage = [
+            snap("n0.cpu", 2.5, 0.9),
+            snap("n0.disk", 1.0, 0.45),
+            snap("n0.tx", 117.5e6 / 8.0 * 8.0, 0.1), // 117.5 Mbit/s NIC
+        ];
+        let r = analyze(&c, &usage, 2, 0.0);
+        assert_eq!(r.balanced_cores, 4);
+        assert!((r.balanced_disk_bw_factor - 0.5).abs() < 1e-9);
+        assert!(r.balanced_nic_mbps > 0.0);
+        assert_eq!(r.utilization[0], 0.9);
+    }
+
+    #[test]
+    fn json_renders_are_byte_stable_and_balanced() {
+        let mut c = CritPath::new(true);
+        let a = c.span_begin(0.0, "hdfs");
+        c.span_end(2.0, a);
+        c.sample(0.0, &[("n0.cpu".into(), 0.99)]);
+        let usage = [snap("n0.cpu", 2.5, 0.9), snap("n0.disk", 1.0, 0.45)];
+        let r = analyze(&c, &usage, 2, 2.0);
+        let j = r.to_json();
+        assert_eq!(j, r.to_json());
+        assert!(j.contains("\"dominant\": \"cpu\""));
+        assert!(j.contains("\"balanced_cores\": 4"));
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        let inline = r.to_json_inline();
+        assert!(!inline.contains('\n'));
+        assert_eq!(inline.matches('{').count(), inline.matches('}').count());
+    }
+
+    #[test]
+    fn saturation_counts_pinned_samples() {
+        let mut c = CritPath::new(true);
+        c.sample(0.0, &[("n0.cpu".into(), 0.99)]);
+        c.sample(1.0, &[("n0.cpu".into(), 0.96)]);
+        c.sample(2.0, &[("n0.cpu".into(), 0.5)]);
+        c.sample(3.0, &[("n0.disk".into(), 1.0)]);
+        let r = analyze(&c, &[snap("n0.cpu", 2.5, 0.8)], 2, 3.0);
+        assert!((r.saturation[0] - 0.5).abs() < 1e-9);
+        assert!((r.saturation[1] - 0.25).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,208 @@
+//! Critical-path span collector: the structured twin of [`super::trace`].
+//!
+//! The Chrome-trace sink stores pre-rendered JSON strings, which is
+//! perfect for Perfetto and useless for analysis. When the `critpath`
+//! obs layer is armed the engine mirrors every span begin/end into this
+//! collector as *structured* records — category plus begin/end sim
+//! times — and folds every fixed-grid utilization sample into a compact
+//! per-device-kind vector. [`super::bottleneck::analyze`] consumes both
+//! at end of run to reconstruct the critical path and attribute each
+//! interval to a device class.
+//!
+//! # Span-id lockstep
+//!
+//! `Engine::span_begin` calls [`TraceSink::span_begin`] and
+//! [`CritPath::span_begin`] back-to-back; both allocate
+//! `id = len() as u32`, so when both layers are armed the ids are equal
+//! and one [`SpanId`] closes both. When only one layer is armed the
+//! other returns [`SpanId::NONE`] / no-ops, exactly like the other obs
+//! hooks.
+//!
+//! # Determinism
+//!
+//! Everything recorded derives from sim time, the deterministic span
+//! emission order, and resource names — byte-identical across
+//! `--threads`, `--solver-threads`, and both `SolverMode`s.
+//!
+//! [`TraceSink::span_begin`]: super::trace::TraceSink::span_begin
+
+use super::trace::SpanId;
+
+/// Number of device kinds tracked per utilization sample (see
+/// [`KIND_NAMES`]).
+pub const KINDS: usize = 5;
+
+/// Device-kind names, in sample-vector order: every per-resource
+/// utilization is folded into one of these by name suffix
+/// (`n3.cpu` → `cpu`, `rack1.up` → `uplink`, …).
+pub const KIND_NAMES: [&str; KINDS] = ["cpu", "disk", "nic", "uplink", "membus"];
+
+/// Map a resource name to its device-kind slot, by the naming
+/// convention `cluster::build` uses (`n<i>.cpu`, `n<i>.disk`,
+/// `n<i>.tx` / `n<i>.rx`, `rack<r>.up` / `rack<r>.down`,
+/// `n<i>.membus`). Unknown names return `None` and are ignored.
+pub fn kind_of(resource_name: &str) -> Option<usize> {
+    let suffix = resource_name.rsplit('.').next()?;
+    match suffix {
+        "cpu" => Some(0),
+        "disk" => Some(1),
+        "tx" | "rx" => Some(2),
+        "up" | "down" => Some(3),
+        "membus" => Some(4),
+        _ => None,
+    }
+}
+
+/// One structured span: category plus begin/end sim times. `end` is
+/// `f64::INFINITY` while the span is open; [`analyze`] clips open spans
+/// to the makespan.
+///
+/// [`analyze`]: super::bottleneck::analyze
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CritSpan {
+    /// Span category (`"job"`, `"mapreduce"`, `"hdfs"`, `"shuffle"`,
+    /// `"recovery"`, `"balance"`, `"lifecycle"`).
+    pub cat: &'static str,
+    /// Begin sim time, seconds.
+    pub begin: f64,
+    /// End sim time, seconds (`INFINITY` while open).
+    pub end: f64,
+}
+
+/// One fixed-grid utilization sample folded per device kind: for each
+/// kind, the **maximum** utilization across all resources of that kind
+/// at the sample instant (critical-path work lands on the busiest
+/// instance, and saturation asks whether *any* device of a kind is
+/// pinned).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CritSample {
+    /// Sample sim time, seconds.
+    pub t: f64,
+    /// Per-kind max utilization, indexed by [`KIND_NAMES`].
+    pub util: [f64; KINDS],
+}
+
+/// The critical-path collector. Owned by [`super::Obs`]; all-off by
+/// default, every call a single branch when disabled.
+#[derive(Debug, Default)]
+pub struct CritPath {
+    /// Whether collection is active.
+    pub enabled: bool,
+    spans: Vec<CritSpan>,
+    samples: Vec<CritSample>,
+}
+
+impl CritPath {
+    /// A collector, armed or not.
+    pub fn new(enabled: bool) -> Self {
+        CritPath { enabled, ..CritPath::default() }
+    }
+
+    /// Record a span open. Allocates ids in lockstep with
+    /// [`super::trace::TraceSink::span_begin`] (both are `len()` at the
+    /// time of the call). Returns [`SpanId::NONE`] when disabled.
+    pub fn span_begin(&mut self, now: f64, cat: &'static str) -> SpanId {
+        if !self.enabled {
+            return SpanId::NONE;
+        }
+        let id = self.spans.len() as u32;
+        self.spans.push(CritSpan { cat, begin: now, end: f64::INFINITY });
+        SpanId(id)
+    }
+
+    /// Record a span close. No-op for [`SpanId::NONE`], unknown ids, or
+    /// when disabled.
+    pub fn span_end(&mut self, now: f64, id: SpanId) {
+        if !self.enabled || id == SpanId::NONE {
+            return;
+        }
+        if let Some(s) = self.spans.get_mut(id.0 as usize) {
+            s.end = now;
+        }
+    }
+
+    /// Fold one fixed-grid utilization sample (the same `(name, util)`
+    /// slice the timeseries layer records) into per-kind maxima.
+    pub fn sample(&mut self, t: f64, utils: &[(String, f64)]) {
+        if !self.enabled {
+            return;
+        }
+        let mut util = [0.0f64; KINDS];
+        for (name, u) in utils {
+            if let Some(k) = kind_of(name) {
+                if *u > util[k] {
+                    util[k] = *u;
+                }
+            }
+        }
+        self.samples.push(CritSample { t, util });
+    }
+
+    /// Recorded spans, in emission order.
+    pub fn spans(&self) -> &[CritSpan] {
+        &self.spans
+    }
+
+    /// Recorded samples, in time order.
+    pub fn samples(&self) -> &[CritSample] {
+        &self.samples
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_collector_records_nothing() {
+        let mut c = CritPath::new(false);
+        let id = c.span_begin(1.0, "job");
+        assert_eq!(id, SpanId::NONE);
+        c.span_end(2.0, id);
+        c.sample(0.0, &[("n1.cpu".into(), 0.9)]);
+        assert!(c.spans().is_empty());
+        assert!(c.samples().is_empty());
+    }
+
+    #[test]
+    fn spans_allocate_sequential_ids_and_close() {
+        let mut c = CritPath::new(true);
+        let a = c.span_begin(0.0, "job");
+        let b = c.span_begin(1.0, "mapreduce");
+        assert_eq!((a, b), (SpanId(0), SpanId(1)));
+        c.span_end(5.0, a);
+        assert_eq!(c.spans()[0].end, 5.0);
+        assert!(c.spans()[1].end.is_infinite());
+    }
+
+    #[test]
+    fn samples_fold_to_per_kind_maxima() {
+        let mut c = CritPath::new(true);
+        c.sample(
+            10.0,
+            &[
+                ("n0.cpu".into(), 0.5),
+                ("n1.cpu".into(), 0.9),
+                ("n0.disk".into(), 0.3),
+                ("n0.tx".into(), 0.2),
+                ("n0.rx".into(), 0.6),
+                ("rack0.up".into(), 0.1),
+                ("n0.membus".into(), 0.05),
+            ],
+        );
+        let s = c.samples()[0];
+        assert_eq!(s.util, [0.9, 0.3, 0.6, 0.1, 0.05]);
+    }
+
+    #[test]
+    fn kind_mapping_covers_cluster_naming() {
+        assert_eq!(kind_of("n12.cpu"), Some(0));
+        assert_eq!(kind_of("n0.disk"), Some(1));
+        assert_eq!(kind_of("n3.tx"), Some(2));
+        assert_eq!(kind_of("n3.rx"), Some(2));
+        assert_eq!(kind_of("rack2.up"), Some(3));
+        assert_eq!(kind_of("rack2.down"), Some(3));
+        assert_eq!(kind_of("n1.membus"), Some(4));
+        assert_eq!(kind_of("link17"), None);
+    }
+}

@@ -22,6 +22,10 @@
 //! * [`family_of`] — the flow-class → family taxonomy (`hdfs`,
 //!   `shuffle`, `compute`, `recovery`, `balance`) behind
 //!   `energy::family_breakdown` and `report::render_cpu_breakdown`.
+//! * [`critpath`] + [`bottleneck`] — structured span/sample collection
+//!   and the automated §5 bottleneck diagnosis: per-run critical-path
+//!   decomposition by device class, saturation intervals, and the
+//!   generic `balanced_cores` estimate (`amdahl-hadoop profile`).
 //!
 //! # Determinism contract
 //!
@@ -34,10 +38,14 @@
 //! `BENCH_sweep.json` stays byte-identical with the obs layer compiled
 //! in.
 
+pub mod bottleneck;
+pub mod critpath;
 pub mod metrics;
 pub mod timeseries;
 pub mod trace;
 
+pub use bottleneck::BottleneckReport;
+pub use critpath::CritPath;
 pub use metrics::{Histogram, Metrics};
 pub use timeseries::{SeriesSummary, TimeSeries};
 pub use trace::{SpanId, TraceSink};
@@ -55,23 +63,44 @@ pub struct ObsSpec {
     /// sampling. Sampling feeds counter tracks into the trace (when
     /// tracing) and the `"utilization"` metrics section (when metrics).
     pub sample_interval_s: f64,
+    /// Collect structured spans + per-kind utilization samples for
+    /// critical-path / bottleneck attribution ([`critpath`],
+    /// [`bottleneck`]). Arms utilization sampling (at
+    /// [`ObsSpec::DEFAULT_CRITPATH_INTERVAL_S`] if `sample_interval_s`
+    /// is 0) since attribution needs the sample grid.
+    pub critpath: bool,
 }
 
 impl Default for ObsSpec {
     fn default() -> Self {
-        ObsSpec { trace: false, metrics: false, sample_interval_s: 0.0 }
+        ObsSpec { trace: false, metrics: false, sample_interval_s: 0.0, critpath: false }
     }
 }
 
 impl ObsSpec {
-    /// Everything on: trace + metrics + sampling at `interval_s`.
+    /// Sampling interval armed implicitly by `critpath` when the caller
+    /// did not pick one.
+    pub const DEFAULT_CRITPATH_INTERVAL_S: f64 = 5.0;
+
+    /// Everything on: trace + metrics + sampling at `interval_s` +
+    /// critical-path collection.
     pub fn full(interval_s: f64) -> Self {
-        ObsSpec { trace: true, metrics: true, sample_interval_s: interval_s }
+        ObsSpec { trace: true, metrics: true, sample_interval_s: interval_s, critpath: true }
     }
 
     /// True when any layer records anything.
     pub fn any(&self) -> bool {
-        self.trace || self.metrics || self.sample_interval_s > 0.0
+        self.trace || self.metrics || self.sample_interval_s > 0.0 || self.critpath
+    }
+
+    /// The effective sampling interval: explicit, or the critpath
+    /// default when critpath is on without one.
+    pub fn effective_interval(&self) -> f64 {
+        if self.critpath && self.sample_interval_s <= 0.0 {
+            Self::DEFAULT_CRITPATH_INTERVAL_S
+        } else {
+            self.sample_interval_s
+        }
     }
 }
 
@@ -89,16 +118,21 @@ pub struct Obs {
     pub metrics: Metrics,
     /// Utilization sampler.
     pub series: TimeSeries,
+    /// Structured critical-path collector (spans + per-kind samples).
+    pub crit: CritPath,
 }
 
 impl Obs {
-    /// Build the state for `spec`.
+    /// Build the state for `spec`. When `critpath` is armed the
+    /// utilization sampler is armed too (attribution needs the grid),
+    /// at the explicit interval or the critpath default.
     pub fn new(spec: ObsSpec) -> Self {
         Obs {
             spec,
             trace: TraceSink::new(spec.trace),
             metrics: Metrics::new(spec.metrics),
-            series: TimeSeries::new(spec.sample_interval_s),
+            series: TimeSeries::new(spec.effective_interval()),
+            crit: CritPath::new(spec.critpath),
         }
     }
 
@@ -141,6 +175,59 @@ pub struct ObsReport {
     /// Per-family CPU/joule attribution (always present — it reads the
     /// usage integrals, which exist whether or not obs recorded).
     pub cpu_families: Vec<FamilyCpu>,
+    /// Critical-path bottleneck attribution (None when the `critpath`
+    /// layer was off).
+    pub bottleneck: Option<BottleneckReport>,
+    /// Completion-latency percentiles (None when metrics were off or no
+    /// completion histogram was recorded).
+    pub job_latency: Option<LatencySummary>,
+}
+
+/// Completion-latency percentiles distilled from a log-bucket
+/// [`Histogram`] — p50/p95/p99 job (or dfsio-worker) completion times,
+/// emitted in the sweep JSON (ROADMAP item 1 groundwork).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencySummary {
+    /// Number of recorded completions.
+    pub count: u64,
+    /// Mean completion latency, sim seconds.
+    pub mean_s: f64,
+    /// Median completion latency, sim seconds.
+    pub p50_s: f64,
+    /// 95th-percentile completion latency, sim seconds.
+    pub p95_s: f64,
+    /// 99th-percentile completion latency, sim seconds.
+    pub p99_s: f64,
+}
+
+impl LatencySummary {
+    /// Distill a recorded histogram; None when it is empty.
+    pub fn from_histogram(h: &Histogram) -> Option<Self> {
+        if h.count() == 0 {
+            return None;
+        }
+        Some(LatencySummary {
+            count: h.count(),
+            mean_s: h.mean(),
+            p50_s: h.quantile(0.50),
+            p95_s: h.quantile(0.95),
+            p99_s: h.quantile(0.99),
+        })
+    }
+
+    /// Compact single-line JSON object — embedded as the sweep record's
+    /// `"job_latency"` value.
+    pub fn to_json_inline(&self) -> String {
+        use metrics::num;
+        format!(
+            "{{\"count\": {}, \"mean_s\": {}, \"p50_s\": {}, \"p95_s\": {}, \"p99_s\": {}}}",
+            self.count,
+            num(self.mean_s),
+            num(self.p50_s),
+            num(self.p95_s),
+            num(self.p99_s)
+        )
+    }
 }
 
 /// CPU time and energy attributed to one flow-class family on one run.
@@ -200,6 +287,21 @@ mod tests {
         assert!(!o.trace.enabled);
         assert!(!o.metrics.enabled);
         assert!(!o.series.enabled());
+        assert!(!o.crit.enabled);
+    }
+
+    #[test]
+    fn critpath_arms_sampling_at_default_interval() {
+        let spec = ObsSpec { critpath: true, ..ObsSpec::default() };
+        assert!(spec.any());
+        assert_eq!(spec.effective_interval(), ObsSpec::DEFAULT_CRITPATH_INTERVAL_S);
+        let o = Obs::new(spec);
+        assert!(o.crit.enabled);
+        assert!(o.series.enabled());
+        assert!(!o.trace.enabled);
+        // An explicit interval wins over the default.
+        let spec = ObsSpec { critpath: true, sample_interval_s: 2.0, ..ObsSpec::default() };
+        assert_eq!(spec.effective_interval(), 2.0);
     }
 
     #[test]

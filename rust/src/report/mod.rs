@@ -785,6 +785,85 @@ pub fn render_cpu_breakdown(title: &str, fams: &[crate::obs::FamilyCpu]) -> Stri
     s
 }
 
+/// Render the critical-path bottleneck frontier: one row per swept core
+/// count, showing how the critical path's time splits across device
+/// classes and where the generic balance re-derivation lands. This is
+/// the paper's §4 Amdahl's-law argument automated: as cores grow, the
+/// CPU share of the critical path shrinks until another device takes
+/// over as the dominant class.
+pub fn render_bottleneck(rows: &[crate::sweep::BottleneckFrontierRow]) -> String {
+    if rows.is_empty() {
+        return String::from(
+            "critical-path bottleneck frontier: no critpath-enabled scenarios in this sweep\n",
+        );
+    }
+    let mut s = String::from(
+        "critical-path bottleneck frontier (dfsio-write, direct I/O, no LZO)\n\
+         cores   dominant     cpu%   disk%    nic%   wait%   cpu-sat%   balanced-cores\n",
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "{:>5}   {:<9}  {:>5.1}   {:>5.1}   {:>5.1}   {:>5.1}   {:>7.1}   {:>14}\n",
+            r.cores,
+            r.dominant,
+            r.cpu_share * 100.0,
+            r.disk_share * 100.0,
+            r.nic_share * 100.0,
+            r.wait_share * 100.0,
+            r.cpu_saturation * 100.0,
+            r.balanced_cores,
+        ));
+    }
+    s
+}
+
+/// Render one run's full bottleneck decomposition — the `profile`
+/// subcommand's output: critical-path seconds per device class, phase
+/// split, per-resource saturation and utilization, and the generic
+/// balance estimates that re-derive the paper's §4 numbers.
+pub fn render_profile(title: &str, b: &crate::obs::BottleneckReport) -> String {
+    use crate::obs::bottleneck::{CAT_NAMES, CLASSES, CLASS_NAMES};
+    use crate::obs::critpath::{KINDS, KIND_NAMES};
+    let mut s = format!(
+        "critical-path profile ({title})\n\
+         makespan: {:.3}s on {} cores/node — dominant class: {}\n\n\
+         critical-path attribution\n\
+         class        seconds   share\n",
+        b.makespan_s, b.cores, b.dominant,
+    );
+    for i in 0..CLASSES {
+        s.push_str(&format!(
+            "{:<11} {:>8.2}  {:>5.1}%\n",
+            CLASS_NAMES[i],
+            b.class_seconds[i],
+            b.share(i) * 100.0,
+        ));
+    }
+    s.push_str("\nphase split (deepest span on the critical path)\nphase        seconds\n");
+    for (i, cat) in CAT_NAMES.iter().enumerate() {
+        if b.phase_seconds[i] > 0.0 {
+            s.push_str(&format!("{:<11} {:>8.2}\n", cat, b.phase_seconds[i]));
+        }
+    }
+    s.push_str("\nresource pressure\nkind        mean-util   sat(>=95%)\n");
+    for i in 0..KINDS {
+        s.push_str(&format!(
+            "{:<11} {:>8.1}%   {:>9.1}%\n",
+            KIND_NAMES[i],
+            b.utilization[i] * 100.0,
+            b.saturation[i] * 100.0,
+        ));
+    }
+    s.push_str(&format!(
+        "\nbalance re-derivation (paper §4)\n\
+         balanced cores/node:       {} (paper: 4 Atom cores)\n\
+         balanced disk bandwidth:   {:.2}x current\n\
+         balanced NIC speed:        {:.0} Mbps\n",
+        b.balanced_cores, b.balanced_disk_bw_factor, b.balanced_nic_mbps,
+    ));
+    s
+}
+
 /// Render the degraded-mode table: every faulted sweep scenario next to
 /// its fault-free twin — runtime overhead, recovery traffic, wasted
 /// speculative work, and the energy bill of failure tolerance.

@@ -1032,9 +1032,19 @@ impl Engine {
         self.obs.metrics.enabled
     }
 
-    /// Open a trace span at the current sim time (see
-    /// [`crate::obs::TraceSink::span_begin`]). Returns
-    /// [`crate::obs::SpanId::NONE`] when tracing is off.
+    /// True when span recording is active on *any* layer — the trace
+    /// sink or the critical-path collector. Span call-sites guard their
+    /// `format!` work behind this (not [`Engine::trace_enabled`]) so
+    /// `critpath`-only runs still collect the span graph.
+    pub fn spans_enabled(&self) -> bool {
+        self.obs.trace.enabled || self.obs.crit.enabled
+    }
+
+    /// Open a span at the current sim time on every armed span layer
+    /// (see [`crate::obs::TraceSink::span_begin`] and
+    /// [`crate::obs::CritPath::span_begin`]; both allocate ids in
+    /// lockstep, so one id closes both). Returns
+    /// [`crate::obs::SpanId::NONE`] when no span layer is armed.
     pub fn span_begin(
         &mut self,
         cat: &'static str,
@@ -1042,14 +1052,21 @@ impl Engine {
         tid: u32,
     ) -> crate::obs::SpanId {
         let now = self.now;
-        self.obs.trace.span_begin(now, cat, name, tid)
+        let crit_id = self.obs.crit.span_begin(now, cat);
+        let trace_id = self.obs.trace.span_begin(now, cat, name, tid);
+        if trace_id == crate::obs::SpanId::NONE {
+            crit_id
+        } else {
+            trace_id
+        }
     }
 
-    /// Close a trace span at the current sim time (no-op for
-    /// [`crate::obs::SpanId::NONE`]).
+    /// Close a span at the current sim time on every armed span layer
+    /// (no-op for [`crate::obs::SpanId::NONE`]).
     pub fn span_end(&mut self, id: crate::obs::SpanId) {
         let now = self.now;
         self.obs.trace.span_end(now, id);
+        self.obs.crit.span_end(now, id);
     }
 
     /// Record a zero-duration trace instant at the current sim time.
@@ -1095,6 +1112,7 @@ impl Engine {
                 .enumerate()
                 .map(|(i, r)| (r.name.clone(), load[i] / r.capacity))
                 .collect();
+            self.obs.crit.sample(t, &utils);
             self.obs.series.record(t, &utils, &mut self.obs.trace);
         }
     }

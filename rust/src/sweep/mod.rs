@@ -41,7 +41,8 @@ pub mod runner;
 pub use baseline::{compare as compare_baseline, BaselineComparison, DEFAULT_TOLERANCE};
 pub use grid::{parse_core_range, ClusterFamily, Scenario, SweepGrid, Workload, WritePath};
 pub use results::{
-    aggregate_usage, analytic_balanced_cores, BusFrontierCell, ChurnRow, DegradedRow,
-    FrontierAnalysis, FrontierRow, KindUtils, RackFrontierCell, ScenarioRecord, SweepResults,
+    aggregate_usage, analytic_balanced_cores, BottleneckFrontierRow, BusFrontierCell, ChurnRow,
+    DegradedRow, FrontierAnalysis, FrontierRow, KindUtils, RackFrontierCell, ScenarioRecord,
+    SweepResults,
 };
 pub use runner::{run_scenario, run_sweep, SweepOptions, REFERENCE_SLAVES};

@@ -141,6 +141,15 @@ pub struct ScenarioRecord {
     /// nothing is serialized, keeping obs-off `BENCH_sweep.json`
     /// byte-identical to pre-obs builds.
     pub cpu_families: Vec<crate::obs::FamilyCpu>,
+    /// Critical-path bottleneck attribution, captured only when the
+    /// sweep armed the obs `critpath` layer. None by default — then the
+    /// `"bottleneck_report"` block is not serialized and the obs-off
+    /// `BENCH_sweep.json` keeps its exact bytes.
+    pub critpath: Option<crate::obs::BottleneckReport>,
+    /// Completion-latency percentiles (dfsio worker / job completion),
+    /// captured only when the sweep armed obs metrics. None by default
+    /// — same conditional-emission rule as `critpath`.
+    pub job_latency: Option<crate::obs::LatencySummary>,
 }
 
 impl ScenarioRecord {
@@ -195,6 +204,8 @@ impl ScenarioRecord {
             balance_joules: 0.0,
             stats,
             cpu_families: Vec::new(),
+            critpath: None,
+            job_latency: None,
         }
     }
 
@@ -220,6 +231,26 @@ impl ScenarioRecord {
         cpu_families: Vec<crate::obs::FamilyCpu>,
     ) -> ScenarioRecord {
         self.cpu_families = cpu_families;
+        self
+    }
+
+    /// Attach the critical-path bottleneck report of a critpath-enabled
+    /// run (the runner calls this only when the obs `critpath` layer
+    /// was armed).
+    pub fn with_bottleneck_report(
+        mut self,
+        report: Option<crate::obs::BottleneckReport>,
+    ) -> ScenarioRecord {
+        self.critpath = report;
+        self
+    }
+
+    /// Attach completion-latency percentiles of a metrics-enabled run.
+    pub fn with_job_latency(
+        mut self,
+        latency: Option<crate::obs::LatencySummary>,
+    ) -> ScenarioRecord {
+        self.job_latency = latency;
         self
     }
 }
@@ -268,6 +299,28 @@ impl FrontierAnalysis {
     pub fn balanced_cores(&self) -> usize {
         self.empirical_cores.unwrap_or(self.analytic_cores)
     }
+}
+
+/// One core count of the critical-path bottleneck frontier
+/// ([`SweepResults::bottleneck_frontier`]).
+#[derive(Debug, Clone)]
+pub struct BottleneckFrontierRow {
+    /// Swept core count.
+    pub cores: usize,
+    /// Device class owning the largest critical-path share.
+    pub dominant: &'static str,
+    /// Critical-path share attributed to CPU.
+    pub cpu_share: f64,
+    /// Critical-path share attributed to disk.
+    pub disk_share: f64,
+    /// Critical-path share attributed to host NICs.
+    pub nic_share: f64,
+    /// Critical-path share spent waiting on the scheduler.
+    pub wait_share: f64,
+    /// Fraction of sim-time the busiest CPU sat >= 95% busy.
+    pub cpu_saturation: f64,
+    /// The record's generic re-derivation of the paper's §4 estimate.
+    pub balanced_cores: usize,
 }
 
 /// A full sweep: every scenario record, in grid expansion order.
@@ -346,6 +399,46 @@ impl SweepResults {
             efficiency_cores: efficiency,
             analytic_cores: analytic_balanced_cores(),
         }
+    }
+
+    /// Critical-path bottleneck frontier: one row per swept core count
+    /// along the paper's baseline cut (Amdahl family, dfsio-write,
+    /// direct I/O, fault-free, flat topology), carrying each record's
+    /// [`crate::obs::BottleneckReport`]. Empty unless the sweep ran with
+    /// the obs `critpath` layer armed — the attribution frontier is a
+    /// pure read of what the records already captured.
+    pub fn bottleneck_frontier(&self) -> Vec<BottleneckFrontierRow> {
+        let mut base: Vec<&ScenarioRecord> = self
+            .records
+            .iter()
+            .filter(|r| {
+                r.critpath.is_some()
+                    && r.family == "amdahl"
+                    && r.workload == Workload::DfsioWrite.key()
+                    && r.write_path == WritePath::DirectIo.key()
+                    && !r.lzo
+                    && r.fault_axes.is_none()
+                    && r.membus_bps.is_none()
+                    && r.racks == 1
+            })
+            .collect();
+        base.sort_by_key(|r| (r.cores, r.nodes));
+        base.dedup_by_key(|r| r.cores);
+        base.iter()
+            .map(|r| {
+                let b = r.critpath.as_ref().expect("filtered on critpath.is_some()");
+                BottleneckFrontierRow {
+                    cores: r.cores,
+                    dominant: b.dominant,
+                    cpu_share: b.share(0),
+                    disk_share: b.share(1),
+                    nic_share: b.share(2),
+                    wait_share: b.share(crate::obs::bottleneck::CLASSES - 1),
+                    cpu_saturation: b.saturation[0],
+                    balanced_cores: b.balanced_cores,
+                }
+            })
+            .collect()
     }
 
     /// Serialize everything (records + frontier + solver perf counters)
@@ -487,6 +580,15 @@ impl SweepResults {
                     ));
                 }
                 s.push('}');
+            }
+            // Critical-path attribution and latency percentiles ride the
+            // same conditional-emission rule: present only on obs-enabled
+            // sweeps, absent (and byte-invisible) by default.
+            if let Some(b) = &r.critpath {
+                s.push_str(&format!(", \"bottleneck_report\": {}", b.to_json_inline()));
+            }
+            if let Some(l) = &r.job_latency {
+                s.push_str(&format!(", \"job_latency\": {}", l.to_json_inline()));
             }
             s.push_str(if i + 1 == self.records.len() { "}\n" } else { "},\n" });
         }

@@ -201,6 +201,8 @@ fn attach_obs(
         }
     }
     rec.with_cpu_families(report.cpu_families)
+        .with_bottleneck_report(report.bottleneck)
+        .with_job_latency(report.job_latency)
 }
 
 /// Run one scenario to completion on the current thread.

@@ -157,6 +157,7 @@ pub fn run_app(preset: ClusterPreset, conf: &HadoopConf, zcfg: &ZonesConfig, app
     };
 
     let total = job.duration + step2.as_ref().map(|j| j.duration).unwrap_or(0.0);
+    let usage = engine.usage_snapshot();
     let (energy, obs) = {
         let w = world.borrow();
         let energy = crate::energy::measure(&engine, &w.cluster, total);
@@ -165,6 +166,19 @@ pub fn run_app(preset: ClusterPreset, conf: &HadoopConf, zcfg: &ZonesConfig, app
                 App::Search => "neighbor-search",
                 App::Stat => "neighbor-stat",
             };
+            let bottleneck = engine.obs().crit.enabled.then(|| {
+                crate::obs::bottleneck::analyze(
+                    &engine.obs().crit,
+                    &usage,
+                    preset.core_count(),
+                    engine.now(),
+                )
+            });
+            let job_latency = engine
+                .obs()
+                .metrics
+                .histogram("mapreduce.job_s")
+                .and_then(crate::obs::LatencySummary::from_histogram);
             Some(crate::obs::ObsReport {
                 trace_json: engine
                     .trace_enabled()
@@ -172,6 +186,8 @@ pub fn run_app(preset: ClusterPreset, conf: &HadoopConf, zcfg: &ZonesConfig, app
                 metrics_json: (engine.metrics_enabled() || engine.obs().series.enabled())
                     .then(|| engine.obs().metrics_json()),
                 cpu_families: crate::energy::family_breakdown(&engine, &w.cluster),
+                bottleneck,
+                job_latency,
             })
         } else {
             None
@@ -187,7 +203,7 @@ pub fn run_app(preset: ClusterPreset, conf: &HadoopConf, zcfg: &ZonesConfig, app
         pairs_found: red.pairs_found,
         histogram: red.histogram.clone(),
         kernel_calls: red.kernel_calls(),
-        usage: engine.usage_snapshot(),
+        usage,
         stats: engine.stats(),
         faults: world.borrow().faults.stats.clone(),
         obs,

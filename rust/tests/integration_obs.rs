@@ -4,9 +4,10 @@
 //! (where do the Atom's cycles go).
 
 use amdahl_hadoop::conf::{ClusterPreset, HadoopConf};
+use amdahl_hadoop::faults::{FaultEvent, FaultKind, FaultSchedule};
 use amdahl_hadoop::hdfs::testdfsio;
-use amdahl_hadoop::hw::MIB;
-use amdahl_hadoop::obs::{ObsReport, FAMILIES};
+use amdahl_hadoop::hw::{DiskKind, MIB};
+use amdahl_hadoop::obs::{BottleneckReport, ObsReport, FAMILIES};
 use amdahl_hadoop::sim::{ObsSpec, SimConfig, SolverMode};
 use amdahl_hadoop::sweep::{
     run_sweep, ClusterFamily, SweepGrid, SweepOptions, Workload, WritePath,
@@ -186,6 +187,162 @@ fn search_trace_contains_the_promised_span_families() {
     for needle in ["hdfs.block_write_s", "shuffle.fetch_s", "mapreduce.map_attempt_s", "p95"] {
         assert!(metrics.contains(needle), "metrics missing {needle}");
     }
+}
+
+/// Critpath-only spec for the attribution tests: structured spans +
+/// sampling + metrics, no Chrome trace.
+fn critpath_spec() -> ObsSpec {
+    ObsSpec { metrics: true, critpath: true, ..Default::default() }
+}
+
+/// Run the racked + faulted profile scenario and return its report.
+/// Three racks at 4:1 oversubscription, a mid-run decommission and a
+/// crash — the nastiest deterministic setting the profiler must stay
+/// byte-stable under.
+fn racked_faulted_report(solver: SolverMode, solver_threads: usize) -> BottleneckReport {
+    let conf = HadoopConf { racks: 3, rack_oversub: 4.0, ..Default::default() };
+    let schedule = FaultSchedule {
+        events: vec![
+            FaultEvent { at: 0.3, node: 3, kind: FaultKind::Decommission },
+            FaultEvent { at: 0.5, node: 5, kind: FaultKind::Crash },
+        ],
+        ..Default::default()
+    };
+    let sim = SimConfig::new(42)
+        .with_solver(solver)
+        .with_solver_threads(solver_threads)
+        .with_obs(critpath_spec());
+    let run = testdfsio::write_test_faulted(ClusterPreset::Amdahl, sim, 2, 32.0 * MIB, &conf, &schedule);
+    run.obs.expect("obs armed").bottleneck.expect("critpath armed")
+}
+
+/// The tentpole determinism bar for the profiler: the rendered
+/// `BottleneckReport` is byte-identical across 1/2/4 solver threads and
+/// both solver modes, even on a racked, faulted grid.
+#[test]
+fn bottleneck_report_is_byte_identical_across_threads_and_modes() {
+    let reference = racked_faulted_report(SolverMode::Incremental, 1).to_json();
+    assert!(!reference.is_empty());
+    for mode in [SolverMode::Incremental, SolverMode::WholeSet] {
+        for threads in [1usize, 2, 4] {
+            let got = racked_faulted_report(mode, threads).to_json();
+            assert_eq!(
+                reference, got,
+                "BottleneckReport diverged at {mode:?} / {threads} solver threads"
+            );
+        }
+    }
+}
+
+/// Known-answer: the paper's seed scenario (stock 2-core Atom blade,
+/// direct-I/O dfsio write) is CPU-bound, and the generic balance
+/// re-derivation lands on the paper's four-Atom-core estimate (±1).
+#[test]
+fn seed_scenario_attributes_the_critical_path_to_cpu() {
+    let conf = HadoopConf { direct_io_write: true, ..Default::default() };
+    let sim = SimConfig::new(42).with_obs(critpath_spec());
+    let run = testdfsio::write_test_on(ClusterPreset::Amdahl, sim, 2, 64.0 * MIB, &conf);
+    let b = run.obs.expect("obs armed").bottleneck.expect("critpath armed");
+    assert_eq!(b.dominant, "cpu", "seed dfsio write must be CPU-bound: {b:?}");
+    assert!(
+        b.share(0) > 0.5,
+        "CPU must own the majority of the critical path (got {:.2})",
+        b.share(0)
+    );
+    assert!(b.makespan_s > 0.0 && b.cores == 2);
+    assert!(
+        (3..=5).contains(&b.balanced_cores),
+        "balance re-derivation must land on the paper's 4 cores +/-1 (got {})",
+        b.balanced_cores
+    );
+}
+
+/// Known-answer: LZO compression piles compute onto the write path, so
+/// the CPU attribution only grows.
+#[test]
+fn lzo_write_is_cpu_dominated() {
+    let conf = HadoopConf {
+        buffered_output: true,
+        direct_io_write: true,
+        lzo_output: true,
+        ..Default::default()
+    };
+    let sim = SimConfig::new(42).with_obs(critpath_spec());
+    let run = testdfsio::write_test_on(ClusterPreset::Amdahl, sim, 2, 64.0 * MIB, &conf);
+    let b = run.obs.expect("obs armed").bottleneck.expect("critpath armed");
+    assert_eq!(b.dominant, "cpu", "LZO write must be CPU-bound: {b:?}");
+}
+
+/// Known-answer: give the blade cores to spare (8) and the slowest
+/// device (a single HDD), and the attribution follows the bottleneck to
+/// the disk.
+#[test]
+fn disk_bound_write_attributes_to_disk() {
+    let conf =
+        HadoopConf { data_disk: DiskKind::Hdd, direct_io_write: true, ..Default::default() };
+    let sim = SimConfig::new(42).with_obs(critpath_spec());
+    let run =
+        testdfsio::write_test_on(ClusterPreset::AmdahlNCore(8), sim, 2, 64.0 * MIB, &conf);
+    let b = run.obs.expect("obs armed").bottleneck.expect("critpath armed");
+    assert_eq!(b.dominant, "disk", "8 cores + one HDD must be disk-bound: {b:?}");
+    assert!(
+        b.class_seconds[1] > b.class_seconds[0],
+        "disk must out-own cpu on the critical path: {b:?}"
+    );
+}
+
+/// A critpath-armed run perturbs nothing: same throughput, makespan and
+/// utilization as the plain run (the collector only observes).
+#[test]
+fn critpath_collection_does_not_perturb_the_simulation() {
+    let conf = HadoopConf { direct_io_write: true, ..Default::default() };
+    let plain =
+        testdfsio::write_test_on(ClusterPreset::Amdahl, SimConfig::new(42), 2, 48.0 * MIB, &conf);
+    let sim = SimConfig::new(42).with_obs(critpath_spec());
+    let armed = testdfsio::write_test_on(ClusterPreset::Amdahl, sim, 2, 48.0 * MIB, &conf);
+    assert_eq!(plain.result.makespan, armed.result.makespan);
+    assert_eq!(plain.result.per_node_mbps, armed.result.per_node_mbps);
+    assert_eq!(plain.result.utilization, armed.result.utilization);
+    assert!(plain.obs.is_none(), "obs-off run must carry no report");
+}
+
+/// Completion-latency percentiles ride the metrics registry: the
+/// summary is present, ordered (p50 <= p95 <= p99), and counts every
+/// worker.
+#[test]
+fn job_latency_summary_counts_every_worker() {
+    let conf = HadoopConf { direct_io_write: true, ..Default::default() };
+    let sim = SimConfig::new(42).with_obs(critpath_spec());
+    let run = testdfsio::write_test_on(ClusterPreset::Amdahl, sim, 2, 48.0 * MIB, &conf);
+    let l = run.obs.expect("obs armed").job_latency.expect("metrics armed");
+    // 8 slaves x 2 workers on the Amdahl preset.
+    assert_eq!(l.count, 16, "one latency sample per dfsio worker");
+    assert!(l.p50_s > 0.0 && l.p50_s <= l.p95_s && l.p95_s <= l.p99_s);
+    assert!(l.mean_s > 0.0);
+}
+
+/// The decommission drain and the re-join are visible as `"lifecycle"`
+/// spans in the trace export (regression: they used to be instants only,
+/// invisible to span-graph consumers).
+#[test]
+fn lifecycle_spans_cover_drain_and_rejoin() {
+    let conf = HadoopConf::default();
+    let schedule = FaultSchedule {
+        events: vec![
+            FaultEvent { at: 0.3, node: 3, kind: FaultKind::Decommission },
+            // Recommissioned long after the drain finished: the node is
+            // administratively dead, so this is a full re-join.
+            FaultEvent { at: 900.0, node: 3, kind: FaultKind::Recommission },
+        ],
+        ..Default::default()
+    };
+    let sim = SimConfig::new(42).with_obs(ObsSpec::full(5.0));
+    let run =
+        testdfsio::write_test_faulted(ClusterPreset::Amdahl, sim, 2, 32.0 * MIB, &conf, &schedule);
+    let trace = run.obs.expect("obs armed").trace_json.expect("trace armed");
+    assert!(trace.contains("\"cat\":\"lifecycle\""), "no lifecycle spans in the trace");
+    assert!(trace.contains("drain n3"), "decommission drain span missing");
+    assert!(trace.contains("rejoin n3"), "re-join span missing");
 }
 
 /// The §4 reproduction: on the Atom-class blade, a dfsio write burns its
