@@ -3,7 +3,8 @@
 # pipeline and the end-to-end example on top of it.
 
 .PHONY: artifacts e2e test docs bench-smoke rack-smoke rack-demo lifecycle-demo \
-        obs-smoke obs-golden trace-demo profile-demo critpath-smoke critpath-golden
+        obs-smoke obs-golden trace-demo profile-demo critpath-smoke critpath-golden \
+        lint clippy simsan
 
 # AOT-lower the JAX/Pallas pair kernels to HLO text artifacts the Rust
 # runtime loads at startup. Requires a Python with jax installed; the
@@ -24,6 +25,40 @@ test:
 # missing docs and broken intra-doc links, -D warnings makes both fatal.
 docs:
 	cd rust && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+# simlint determinism static-analysis pass (CI): scan rust/src for
+# determinism hazards (unordered hash iteration, wall-clock reads,
+# non-seeded randomness, float accumulation in unordered loops, unsafe)
+# and fail on any finding not in the committed baseline. The baseline
+# bootstraps itself like the obs/critpath goldens: a placeholder
+# containing "bootstrap" is replaced by the first real run (commit it).
+lint:
+	cd rust && cargo run --release --quiet -- lint --src src \
+	    --out /tmp/simlint_report.json
+	@if grep -q bootstrap rust/tests/golden/simlint_baseline.json; then \
+	    cp /tmp/simlint_report.json rust/tests/golden/simlint_baseline.json; \
+	    echo "lint: bootstrapped the baseline from this run; commit it"; \
+	fi
+	cd rust && cargo run --release --quiet -- lint --src src \
+	    --baseline tests/golden/simlint_baseline.json
+
+# Clippy baseline (CI): the whole crate, all targets, warnings fatal.
+clippy:
+	cd rust && cargo clippy --all-targets -- -D warnings
+
+# simsan runtime invariant sanitizer (CI): build with the sanitizer
+# armed by default and run the armed integration grid — racked +
+# faulted + lifecycle + balancer across solver threads and modes —
+# expecting zero violations and unchanged bytes.
+simsan:
+	cd rust && cargo test -q --release --features simsan --test integration_sanitizer
+	cd rust && cargo run --release --quiet --features simsan -- sweep \
+	    --cores 1..2 --nodes 5 --gb 0.03125 --workers 1 --threads 1 \
+	    --sanitize panic --quiet --out /tmp/simsan_sweep.json
+	cd rust && cargo run --release --quiet -- sweep \
+	    --cores 1..2 --nodes 5 --gb 0.03125 --workers 1 --threads 1 \
+	    --quiet --out /tmp/simsan_off_sweep.json
+	cmp /tmp/simsan_sweep.json /tmp/simsan_off_sweep.json
 
 # The CI bench-smoke gate: 10k-flow solver scaling + the recorded
 # stale-events / peak-heap baseline, plus the rack mini-sweep below.

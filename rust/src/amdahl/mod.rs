@@ -29,7 +29,7 @@
 
 pub mod balance;
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::cluster::Cluster;
 use crate::hw::cpu::{CpuSpec, TaskClass};
@@ -47,7 +47,9 @@ pub struct IoTally {
 /// Global I/O accounting, fed by the HDFS and MapReduce layers.
 #[derive(Debug, Default)]
 pub struct Counters {
-    tallies: HashMap<String, IoTally>,
+    // BTreeMap so `tasks()` iterates in name order — report tables built
+    // from this iterator are reproducible without a caller-side sort.
+    tallies: BTreeMap<String, IoTally>,
 }
 
 impl Counters {

@@ -1,0 +1,232 @@
+//! Comment- and string-aware line splitter for the simlint pass.
+//!
+//! The rule scanner must never fire on prose: doc comments in this
+//! crate routinely *discuss* hazards ("HashMap iteration", "unsafe")
+//! and string literals carry the rule patterns themselves. This module
+//! runs a small lexer over a source file and hands back, per physical
+//! line, the **code** with comments removed and string/char-literal
+//! contents blanked (delimiting quotes survive so token shapes hold),
+//! plus the **comment** text separately so suppression markers
+//! (`simlint: allow(<rule>)`) can still be read.
+//!
+//! The lexer understands line comments, nested block comments, cooked
+//! strings with escapes, raw strings (`r"…"`, `r#"…"#`, any hash
+//! count), and char literals vs lifetimes (`'a'` vs `'a`). It is a
+//! lexer, not a parser: pathological macro token soup may confuse it,
+//! but the crate's own style (rustfmt-shaped, no proc macros) lexes
+//! exactly.
+
+/// One physical source line, split into scannable code and comment text.
+#[derive(Debug, Clone)]
+pub struct CodeLine {
+    /// 1-based line number in the original file.
+    pub number: usize,
+    /// Code with comments removed and literal contents blanked.
+    pub code: String,
+    /// Concatenated comment text (line and block) landing on this line.
+    pub comment: String,
+}
+
+/// Lexer state that can span a newline.
+#[derive(Clone, Copy)]
+enum State {
+    /// Plain code.
+    Normal,
+    /// Inside a block comment, with nesting depth.
+    Block(u32),
+    /// Inside a cooked string literal.
+    Str,
+    /// Inside a raw string literal opened with this many `#`s.
+    RawStr(usize),
+}
+
+fn prev_is_ident(code: &str) -> bool {
+    code.chars().next_back().is_some_and(|c| c.is_alphanumeric() || c == '_')
+}
+
+/// Split `source` into [`CodeLine`]s with comments and literal
+/// contents removed from the code channel.
+pub fn strip(source: &str) -> Vec<CodeLine> {
+    let chars: Vec<char> = source.chars().collect();
+    let mut out = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut number = 1usize;
+    let mut st = State::Normal;
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            out.push(CodeLine {
+                number,
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+            });
+            number += 1;
+            i += 1;
+            continue;
+        }
+        match st {
+            State::Normal => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    // Line comment: consume to end of line.
+                    i += 2;
+                    while i < chars.len() && chars[i] != '\n' {
+                        comment.push(chars[i]);
+                        i += 1;
+                    }
+                } else if c == '/' && next == Some('*') {
+                    st = State::Block(1);
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    st = State::Str;
+                    i += 1;
+                } else if c == 'r' && !prev_is_ident(&code) {
+                    // Possible raw string: r"…" or r#"…"# (any hashes).
+                    let mut j = i + 1;
+                    let mut hashes = 0usize;
+                    while chars.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if chars.get(j) == Some(&'"') {
+                        code.push('r');
+                        code.push('"');
+                        st = State::RawStr(hashes);
+                        i = j + 1;
+                    } else {
+                        code.push('r');
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    if next == Some('\\') {
+                        // Escaped char literal: consume to the closing quote.
+                        code.push('\'');
+                        code.push('\'');
+                        i += 2;
+                        while i < chars.len() && chars[i] != '\'' {
+                            if chars[i] == '\\' {
+                                i += 1;
+                            }
+                            i += 1;
+                        }
+                        i += 1; // closing quote (or EOF)
+                    } else if next.is_some() && chars.get(i + 2) == Some(&'\'') {
+                        // Plain char literal like 'a' (covers '"', '{').
+                        code.push('\'');
+                        code.push('\'');
+                        i += 3;
+                    } else {
+                        // Lifetime or loop label: keep the tick as code.
+                        code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            State::Block(d) => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    st = State::Block(d + 1);
+                    comment.push_str("/*");
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    if d == 1 {
+                        st = State::Normal;
+                    } else {
+                        st = State::Block(d - 1);
+                        comment.push_str("*/");
+                    }
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    // Skip the escaped char (contents are blanked anyway),
+                    // but let a line-continuation newline reach the top.
+                    if chars.get(i + 1) == Some(&'\n') {
+                        i += 1;
+                    } else {
+                        i += 2;
+                    }
+                } else if c == '"' {
+                    code.push('"');
+                    st = State::Normal;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            State::RawStr(h) => {
+                if c == '"' && (0..h).all(|k| chars.get(i + 1 + k) == Some(&'#')) {
+                    code.push('"');
+                    st = State::Normal;
+                    i += 1 + h;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        out.push(CodeLine { number, code, comment });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_comments_split_off() {
+        let ls = strip("let x = 1; // trailing note\n");
+        assert_eq!(ls[0].code, "let x = 1; ");
+        assert_eq!(ls[0].comment, " trailing note");
+    }
+
+    #[test]
+    fn string_contents_blank_but_quotes_survive() {
+        let ls = strip("let s = \"Instant::now() // not a comment\";\n");
+        assert_eq!(ls[0].code, "let s = \"\";");
+        assert!(ls[0].comment.is_empty());
+    }
+
+    #[test]
+    fn raw_strings_and_escapes() {
+        let ls = strip("let r = r#\"has \"quotes\" inside\"#; let t = \"a\\\"b\";\n");
+        assert_eq!(ls[0].code, "let r = r\"\"; let t = \"\";");
+    }
+
+    #[test]
+    fn char_literal_vs_lifetime() {
+        let ls = strip("fn f<'a>(x: &'a str) -> char { '{' }\n");
+        // The lifetime ticks stay; the '{' literal is blanked so brace
+        // counting in the rules never sees it.
+        assert_eq!(ls[0].code, "fn f<'a>(x: &'a str) -> char { '' }");
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let ls = strip("a /* one /* two */ still */ b\n");
+        assert_eq!(ls[0].code, "a  b");
+        assert_eq!(ls[0].comment, " one /* two */ still ");
+    }
+
+    #[test]
+    fn multiline_block_comment_spans_lines() {
+        let ls = strip("x /* first\nsecond */ y\n");
+        assert_eq!(ls[0].code, "x ");
+        assert_eq!(ls[0].comment, " first");
+        assert_eq!(ls[1].code, " y");
+        assert_eq!(ls[1].comment, "second ");
+        assert_eq!(ls[1].number, 2);
+    }
+}

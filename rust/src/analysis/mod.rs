@@ -1,0 +1,219 @@
+//! simlint: a dependency-free determinism static-analysis pass.
+//!
+//! The simulator's headline guarantee — byte-identical output for a
+//! given seed, at every thread count, in both solver modes — is only
+//! as strong as the code's discipline about iteration order, time,
+//! and randomness. ARCHITECTURE.md states that contract in prose;
+//! this module *enforces* the mechanically-checkable clauses by
+//! scanning the crate's own sources (`amdahl-hadoop lint`):
+//!
+//! 1. [`lexer`] strips comments and blanks string/char-literal
+//!    contents so rules only ever match real code;
+//! 2. [`rules`] runs the hazard checks (`hash-iter`, `wall-clock`,
+//!    `rng-entropy`, `float-accum`, `unsafe-block`) with inline
+//!    `// simlint: allow(<rule>) — <reason>` suppressions;
+//! 3. [`report`] emits a byte-stable JSON findings report and diffs
+//!    it against the committed baseline
+//!    (`rust/tests/golden/simlint_baseline.json`), so CI fails on
+//!    *new* findings while legacy ones stay visible but tolerated.
+//!
+//! The pass has no dependencies beyond `anyhow` and runs in
+//! milliseconds; `make lint` wires it into the default workflow. The
+//! runtime half of the story is the `simsan` sanitizer
+//! ([`crate::sim::Sanitize`]), which checks at run time what this
+//! pass cannot prove statically.
+
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+pub use report::{Finding, LintReport};
+
+use std::path::{Path, PathBuf};
+
+/// Lint one file's source text; `file` is the path label carried on
+/// the findings.
+pub fn lint_source(file: &str, source: &str) -> Vec<Finding> {
+    let lines = lexer::strip(source);
+    rules::scan(file, &lines)
+}
+
+/// Lint every `*.rs` file under `root` (recursively); findings come
+/// back sorted by `(file, line, rule)` with `/`-separated paths
+/// relative to `root`, so the report is byte-stable across platforms
+/// and directory-walk orders.
+pub fn lint_dir(root: &Path) -> anyhow::Result<LintReport> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    for path in &files {
+        let label =
+            path.strip_prefix(root).unwrap_or(path).to_string_lossy().replace('\\', "/");
+        let source = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        findings.extend(lint_source(&label, &source));
+    }
+    findings.sort_by(|a, b| (&a.file, a.line, &a.rule).cmp(&(&b.file, b.line, &b.rule)));
+    Ok(LintReport { findings })
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> anyhow::Result<()> {
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("reading directory {}: {e}", dir.display()))?;
+    for entry in entries {
+        let path = entry.map_err(|e| anyhow::anyhow!("walking {}: {e}", dir.display()))?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rule_ids(src: &str) -> Vec<String> {
+        lint_source("fixture.rs", src).into_iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn flags_for_loop_over_hash_map() {
+        let src = "fn f() {\n\
+                   let mut m: HashMap<String, u32> = HashMap::new();\n\
+                   for (k, v) in &m {\n\
+                   do_thing(k, v);\n\
+                   }\n\
+                   }\n";
+        assert_eq!(rule_ids(src), vec!["hash-iter"]);
+    }
+
+    #[test]
+    fn flags_hash_method_iteration() {
+        let src = "struct S { seen: HashSet<u64> }\n\
+                   fn g(s: &S) -> u64 {\n\
+                   s.seen.iter().sum()\n\
+                   }\n";
+        assert_eq!(rule_ids(src), vec!["hash-iter"]);
+        let src2 = "fn h(m: &HashMap<u32, f64>) -> Vec<u32> {\n\
+                    m.keys().copied().collect()\n\
+                    }\n";
+        assert_eq!(rule_ids(src2), vec!["hash-iter"]);
+    }
+
+    #[test]
+    fn keyed_hash_access_is_fine() {
+        let src = "fn f(m: &mut HashMap<String, u32>) {\n\
+                   m.insert(k(), 1);\n\
+                   let _ = m.get(\"x\");\n\
+                   m.remove(\"y\");\n\
+                   }\n";
+        assert!(rule_ids(src).is_empty());
+    }
+
+    #[test]
+    fn ordered_containers_are_fine() {
+        let src = "fn f(m: &BTreeMap<String, u32>) -> u32 {\n\
+                   let mut t = 0;\n\
+                   for v in m.values() { t += v; }\n\
+                   t\n\
+                   }\n";
+        assert!(rule_ids(src).is_empty());
+    }
+
+    #[test]
+    fn flags_float_accumulation_inside_hash_loop() {
+        let src = "fn f(m: &HashMap<u32, f64>) -> f64 {\n\
+                   let mut total = 0.0;\n\
+                   for v in m.values() {\n\
+                   total += v;\n\
+                   }\n\
+                   total\n\
+                   }\n";
+        let ids = rule_ids(src);
+        assert!(ids.contains(&"hash-iter".to_string()), "{ids:?}");
+        assert!(ids.contains(&"float-accum".to_string()), "{ids:?}");
+        // Accumulation *after* the loop closes is not flagged.
+        let src2 = "fn f(m: &HashMap<u32, f64>) -> f64 {\n\
+                    let mut total = 0.0;\n\
+                    for v in m.values() {\n\
+                    stage(v);\n\
+                    }\n\
+                    total += 1.0;\n\
+                    total\n\
+                    }\n";
+        assert_eq!(rule_ids(src2), vec!["hash-iter"]);
+    }
+
+    #[test]
+    fn flags_wall_clock_outside_allowlist() {
+        let src = "fn f() { let t0 = std::time::Instant::now(); }\n";
+        assert_eq!(rule_ids(src), vec!["wall-clock"]);
+        // The bench harness is allowlisted by file name.
+        assert!(lint_source("benchkit.rs", src).is_empty());
+    }
+
+    #[test]
+    fn flags_entropy_rng_and_unsafe() {
+        let src = "fn f() -> u64 {\n\
+                   let mut r = rand::thread_rng();\n\
+                   unsafe { hint() };\n\
+                   r.gen()\n\
+                   }\n";
+        let ids = rule_ids(src);
+        assert!(ids.contains(&"rng-entropy".to_string()), "{ids:?}");
+        assert!(ids.contains(&"unsafe-block".to_string()), "{ids:?}");
+    }
+
+    #[test]
+    fn suppression_same_line_and_line_above() {
+        let above = "fn f() {\n\
+                     // simlint: allow(wall-clock) — perf counter only\n\
+                     let t0 = std::time::Instant::now();\n\
+                     }\n";
+        assert!(rule_ids(above).is_empty(), "comment-above suppression");
+        let same = "fn f() {\n\
+                    let t0 = std::time::Instant::now(); // simlint: allow(wall-clock) — ok\n\
+                    }\n";
+        assert!(rule_ids(same).is_empty(), "same-line suppression");
+        // A suppression for a different rule does not mask the finding.
+        let wrong = "fn f() {\n\
+                     // simlint: allow(hash-iter) — wrong rule\n\
+                     let t0 = std::time::Instant::now();\n\
+                     }\n";
+        assert_eq!(rule_ids(wrong), vec!["wall-clock"]);
+    }
+
+    #[test]
+    fn comments_and_strings_never_fire() {
+        let src = "// HashMap iteration and Instant::now() discussed in prose\n\
+                   /* thread_rng() in a block comment, even unsafe */\n\
+                   fn f() -> &'static str {\n\
+                   \"Instant::now() inside a string literal\"\n\
+                   }\n";
+        assert!(rule_ids(src).is_empty());
+    }
+
+    #[test]
+    fn findings_carry_location_and_sorted_order() {
+        let src = "fn f(m: &HashMap<u32, u32>) {\n\
+                   let t0 = std::time::Instant::now();\n\
+                   for k in m.keys() { use_it(k); }\n\
+                   }\n";
+        let fs = lint_source("fixture.rs", src);
+        assert_eq!(fs.len(), 2);
+        assert_eq!((fs[0].line, fs[0].rule.as_str()), (2, "wall-clock"));
+        assert_eq!((fs[1].line, fs[1].rule.as_str()), (3, "hash-iter"));
+    }
+
+    #[test]
+    fn rule_table_matches_emitted_ids() {
+        let ids: Vec<&str> = rules::RULES.iter().map(|(id, _)| *id).collect();
+        for id in ["hash-iter", "wall-clock", "rng-entropy", "float-accum", "unsafe-block"] {
+            assert!(ids.contains(&id), "missing rule {id}");
+        }
+    }
+}

@@ -1,0 +1,210 @@
+//! Byte-stable simlint findings report and baseline comparison.
+//!
+//! The JSON emitted by [`LintReport::to_json`] is hand-assembled with
+//! a fixed field order and fixed formatting (the crate-wide idiom —
+//! see `sweep::results`), so the same findings always produce the
+//! same bytes and the committed baseline diffs cleanly in git.
+//!
+//! Baseline identity is `(file, rule, message)` — deliberately **not**
+//! the line number, so unrelated edits that shift a legacy finding a
+//! few lines do not read as new regressions.
+
+use std::collections::BTreeSet;
+
+/// One determinism hazard found by the simlint pass.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Path relative to the linted root, `/`-separated.
+    pub file: String,
+    /// 1-based source line.
+    pub line: usize,
+    /// Rule id (see [`super::rules::RULES`]).
+    pub rule: String,
+    /// Human-readable detail; part of the baseline identity.
+    pub message: String,
+}
+
+impl Finding {
+    /// Baseline identity: file + rule + message (line numbers drift).
+    pub fn key(&self) -> (String, String, String) {
+        (self.file.clone(), self.rule.clone(), self.message.clone())
+    }
+}
+
+/// A full simlint run: findings sorted by `(file, line, rule)`.
+#[derive(Debug, Clone, Default)]
+pub struct LintReport {
+    /// Sorted findings.
+    pub findings: Vec<Finding>,
+}
+
+impl LintReport {
+    /// Byte-stable JSON: same findings, same bytes, every run.
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n  \"tool\": \"simlint\",\n");
+        s.push_str(&format!("  \"count\": {},\n", self.findings.len()));
+        s.push_str("  \"findings\": [\n");
+        for (i, f) in self.findings.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \"message\": \"{}\"}}{}\n",
+                esc(&f.file),
+                f.line,
+                esc(&f.rule),
+                esc(&f.message),
+                if i + 1 == self.findings.len() { "" } else { "," }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Parse a report produced by [`LintReport::to_json`].
+    ///
+    /// Tolerant by design: any line carrying a `"file":` field is read
+    /// as one finding, everything else is ignored. A bootstrap
+    /// placeholder (no findings lines at all) therefore parses as an
+    /// empty baseline.
+    pub fn parse(text: &str) -> LintReport {
+        let mut findings = Vec::new();
+        for line in text.lines() {
+            let Some(file) = field_str(line, "file") else { continue };
+            let Some(rule) = field_str(line, "rule") else { continue };
+            findings.push(Finding {
+                file,
+                line: field_usize(line, "line").unwrap_or(0),
+                rule,
+                message: field_str(line, "message").unwrap_or_default(),
+            });
+        }
+        LintReport { findings }
+    }
+
+    /// Findings absent from `baseline`, in report order.
+    pub fn new_findings(&self, baseline: &LintReport) -> Vec<Finding> {
+        let known: BTreeSet<_> = baseline.findings.iter().map(Finding::key).collect();
+        self.findings.iter().filter(|f| !known.contains(&f.key())).cloned().collect()
+    }
+
+    /// Terminal rendering; `fresh` marks the findings new vs baseline.
+    pub fn render(&self, fresh: &[Finding]) -> String {
+        if self.findings.is_empty() {
+            return "simlint: clean (0 findings)\n".to_string();
+        }
+        let mut s = format!(
+            "simlint: {} finding(s), {} new vs baseline\n",
+            self.findings.len(),
+            fresh.len()
+        );
+        for f in &self.findings {
+            let mark = if fresh.contains(f) { "  NEW " } else { "      " };
+            s.push_str(&format!("{mark}{}:{} [{}] {}\n", f.file, f.line, f.rule, f.message));
+        }
+        s
+    }
+}
+
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Extract the string value of `"key": "…"` from one report line,
+/// unescaping `\"` and `\\`.
+fn field_str(line: &str, key: &str) -> Option<String> {
+    let tag = format!("\"{key}\": \"");
+    let p = line.find(&tag)?;
+    let mut out = String::new();
+    let mut chars = line[p + tag.len()..].chars();
+    while let Some(c) = chars.next() {
+        match c {
+            '\\' => {
+                if let Some(n) = chars.next() {
+                    out.push(n);
+                }
+            }
+            '"' => return Some(out),
+            _ => out.push(c),
+        }
+    }
+    None
+}
+
+/// Extract the integer value of `"key": N` from one report line.
+fn field_usize(line: &str, key: &str) -> Option<usize> {
+    let tag = format!("\"{key}\": ");
+    let p = line.find(&tag)?;
+    let digits: String =
+        line[p + tag.len()..].chars().take_while(char::is_ascii_digit).collect();
+    digits.parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> LintReport {
+        LintReport {
+            findings: vec![
+                Finding {
+                    file: "sim/engine.rs".into(),
+                    line: 42,
+                    rule: "wall-clock".into(),
+                    message: "wall-clock read `Instant::now` in simulation code".into(),
+                },
+                Finding {
+                    file: "zones/apps.rs".into(),
+                    line: 7,
+                    rule: "hash-iter".into(),
+                    message: "unordered iteration over hash container `m` via `.keys`".into(),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let r = sample();
+        let parsed = LintReport::parse(&r.to_json());
+        assert_eq!(parsed.findings, r.findings);
+        // Byte stability: re-emission is identical.
+        assert_eq!(parsed.to_json(), r.to_json());
+    }
+
+    #[test]
+    fn baseline_masks_known_findings() {
+        let r = sample();
+        let mut baseline = LintReport { findings: vec![r.findings[0].clone()] };
+        // Line drift in the baseline must not resurface the finding.
+        baseline.findings[0].line = 999;
+        let fresh = r.new_findings(&baseline);
+        assert_eq!(fresh.len(), 1);
+        assert_eq!(fresh[0].rule, "hash-iter");
+    }
+
+    #[test]
+    fn bootstrap_placeholder_parses_empty() {
+        let b = LintReport::parse("{\"simlint-bootstrap\": true}\n");
+        assert!(b.findings.is_empty());
+    }
+
+    #[test]
+    fn escaped_fields_survive() {
+        let r = LintReport {
+            findings: vec![Finding {
+                file: "a.rs".into(),
+                line: 1,
+                rule: "hash-iter".into(),
+                message: "quote \" and backslash \\ in message".into(),
+            }],
+        };
+        let parsed = LintReport::parse(&r.to_json());
+        assert_eq!(parsed.findings, r.findings);
+    }
+
+    #[test]
+    fn empty_report_renders_clean() {
+        let r = LintReport::default();
+        assert_eq!(r.render(&[]), "simlint: clean (0 findings)\n");
+        assert_eq!(LintReport::parse(&r.to_json()).findings.len(), 0);
+    }
+}

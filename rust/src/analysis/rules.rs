@@ -1,0 +1,306 @@
+//! The simlint rule set: lexical/AST-lite determinism hazard checks.
+//!
+//! Each rule encodes one clause of ARCHITECTURE.md's determinism
+//! contract as a scan over [`CodeLine`]s (comments and literal
+//! contents already removed by [`super::lexer`]):
+//!
+//! | rule id       | hazard |
+//! |---------------|--------|
+//! | `hash-iter`   | iterating a `HashMap`/`HashSet` (`.iter()`, `.keys()`, `.values()`, `.drain()`, `for … in &map`) — order varies run to run |
+//! | `wall-clock`  | `Instant::now` / `SystemTime` reads outside the bench allowlist — host time leaking into simulation |
+//! | `rng-entropy` | `thread_rng` / `from_entropy` / `OsRng` — randomness not derived from the scenario seed |
+//! | `float-accum` | `+=` / `-=` accumulation inside an unordered hash loop — float sums are order-dependent |
+//! | `unsafe-block`| any `unsafe` code — the crate forbids it outright |
+//!
+//! Suppress a finding with an inline marker on the same line or on a
+//! comment line directly above it:
+//!
+//! ```text
+//! // simlint: allow(wall-clock) — solve_ns is a perf counter
+//! let t0 = std::time::Instant::now();
+//! ```
+//!
+//! The `hash-iter` tracker is AST-lite, not a type checker: it learns
+//! which names are hash containers from bindings and struct fields in
+//! the *same file* (`let m: HashMap<…>`, `m = HashSet::new()`,
+//! `field: HashMap<…>`) and then flags iteration over those names.
+//! Keyed access (`get`, `insert`, `remove`, `contains_key`) is always
+//! fine and never flagged.
+
+use std::collections::BTreeSet;
+
+use super::lexer::CodeLine;
+use super::report::Finding;
+
+/// Rule id: unordered iteration over a hash container.
+pub const HASH_ITER: &str = "hash-iter";
+/// Rule id: wall-clock read outside the bench allowlist.
+pub const WALL_CLOCK: &str = "wall-clock";
+/// Rule id: randomness not derived from the scenario seed.
+pub const RNG_ENTROPY: &str = "rng-entropy";
+/// Rule id: float accumulation inside unordered iteration.
+pub const FLOAT_ACCUM: &str = "float-accum";
+/// Rule id: `unsafe` code.
+pub const UNSAFE_BLOCK: &str = "unsafe-block";
+
+/// Every rule with its one-line contract, for docs and reports.
+pub const RULES: &[(&str, &str)] = &[
+    (HASH_ITER, "unordered HashMap/HashSet iteration is nondeterministic"),
+    (WALL_CLOCK, "wall-clock reads leak host time into the simulation"),
+    (RNG_ENTROPY, "entropy-seeded randomness breaks seeded reproducibility"),
+    (FLOAT_ACCUM, "float accumulation in unordered loops is order-dependent"),
+    (UNSAFE_BLOCK, "unsafe code is forbidden in the simulator crate"),
+];
+
+/// Path suffixes allowed to read the wall clock: the bench harness
+/// measures real elapsed time by design and never feeds it back into
+/// simulated behaviour.
+const WALL_CLOCK_ALLOW: &[&str] = &["benchkit.rs"];
+
+/// Iteration methods whose order follows the hasher, not the data.
+const ITER_METHODS: &[&str] = &[
+    ".iter()",
+    ".iter_mut()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".into_iter()",
+    ".into_keys()",
+    ".into_values()",
+    ".drain(",
+    ".retain(",
+];
+
+const WALL_CLOCK_PATTERNS: &[&str] =
+    &["Instant::now(", "SystemTime::now(", "SystemTime::UNIX_EPOCH"];
+
+const RNG_PATTERNS: &[&str] = &["thread_rng(", "from_entropy(", "OsRng", "getrandom("];
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// The identifier (possibly empty) ending at the end of `s`.
+fn trailing_ident(s: &str) -> String {
+    let tail: Vec<char> = s.chars().rev().take_while(|&c| is_ident_char(c)).collect();
+    tail.into_iter().rev().collect()
+}
+
+/// The identifier (possibly empty) starting at the beginning of `s`.
+fn leading_ident(s: &str) -> String {
+    s.chars().take_while(|&c| is_ident_char(c)).collect()
+}
+
+/// Find `word` in `code` with non-identifier characters on both sides.
+fn find_word(code: &str, word: &str) -> Option<usize> {
+    let mut start = 0;
+    while let Some(p) = code[start..].find(word) {
+        let abs = start + p;
+        let before_ok = abs == 0 || !is_ident_char(code[..abs].chars().next_back().unwrap());
+        let after_ok = !code[abs + word.len()..].chars().next().is_some_and(is_ident_char);
+        if before_ok && after_ok {
+            return Some(abs);
+        }
+        start = abs + word.len();
+    }
+    None
+}
+
+/// Names bound to `HashMap`/`HashSet` anywhere in this file: let
+/// bindings, struct fields, and fn params, by type ascription or
+/// `= HashMap::new()`-style construction.
+fn hash_names(lines: &[CodeLine]) -> BTreeSet<String> {
+    let mut names = BTreeSet::new();
+    for line in lines {
+        for ty in ["HashMap", "HashSet"] {
+            let mut start = 0;
+            while let Some(p) = line.code[start..].find(ty) {
+                let abs = start + p;
+                let before_ok =
+                    abs == 0 || !is_ident_char(line.code[..abs].chars().next_back().unwrap());
+                let after_ok =
+                    !line.code[abs + ty.len()..].chars().next().is_some_and(is_ident_char);
+                if before_ok && after_ok {
+                    if let Some(n) = binding_name(&line.code[..abs]) {
+                        names.insert(n);
+                    }
+                }
+                start = abs + ty.len();
+            }
+        }
+    }
+    names
+}
+
+/// Given the code preceding a `HashMap`/`HashSet` token, recover the
+/// name being bound to it (`m: HashMap<…>`, `m = HashMap::new()`,
+/// `m: &mut HashMap<…>`), or `None` when the token is not a binding
+/// (a path like `std::collections::HashMap`, a return type, …).
+fn binding_name(prefix: &str) -> Option<String> {
+    let mut t = prefix.trim_end();
+    loop {
+        if let Some(s) = t.strip_suffix("mut") {
+            if s.chars().next_back().is_some_and(char::is_whitespace) {
+                t = s.trim_end();
+                continue;
+            }
+        }
+        if let Some(s) = t.strip_suffix('&') {
+            t = s.trim_end();
+            continue;
+        }
+        break;
+    }
+    let t = if let Some(s) = t.strip_suffix(':') {
+        if s.ends_with(':') {
+            return None; // path segment `…::HashMap`
+        }
+        s
+    } else if let Some(s) = t.strip_suffix('=') {
+        s
+    } else {
+        return None;
+    };
+    let name = trailing_ident(t.trim_end());
+    if name.is_empty() || name == "mut" || name == "let" || name == "pub" {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+/// Rules suppressed for line `idx`: markers on the line itself plus
+/// any run of comment-only lines directly above it.
+fn allowed_rules(lines: &[CodeLine], idx: usize) -> BTreeSet<String> {
+    let mut set = BTreeSet::new();
+    collect_allows(&lines[idx].comment, &mut set);
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let l = &lines[j];
+        if l.code.trim().is_empty() && !l.comment.trim().is_empty() {
+            collect_allows(&l.comment, &mut set);
+        } else {
+            break;
+        }
+    }
+    set
+}
+
+fn collect_allows(comment: &str, set: &mut BTreeSet<String>) {
+    let marker = "simlint: allow(";
+    let mut rest = comment;
+    while let Some(p) = rest.find(marker) {
+        let after = &rest[p + marker.len()..];
+        match after.find(')') {
+            Some(end) => {
+                set.insert(after[..end].trim().to_string());
+                rest = &after[end..];
+            }
+            None => break,
+        }
+    }
+}
+
+/// Scan one lexed file; `file` is the path label carried on findings.
+pub fn scan(file: &str, lines: &[CodeLine]) -> Vec<Finding> {
+    let hashes = hash_names(lines);
+    let mut out = Vec::new();
+    let mut depth: i32 = 0;
+    // Brace depths of the bodies of currently-open hash-iteration
+    // loops; non-empty means "inside unordered iteration".
+    let mut hash_loops: Vec<i32> = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        let code = line.code.as_str();
+        let allowed = allowed_rules(lines, idx);
+        let mut push = |rule: &str, message: String, out: &mut Vec<Finding>| {
+            if !allowed.contains(rule) {
+                out.push(Finding {
+                    file: file.to_string(),
+                    line: line.number,
+                    rule: rule.to_string(),
+                    message,
+                });
+            }
+        };
+
+        if !WALL_CLOCK_ALLOW.iter().any(|s| file.ends_with(s)) {
+            for pat in WALL_CLOCK_PATTERNS {
+                if code.contains(pat) {
+                    let what = pat.trim_end_matches('(');
+                    push(WALL_CLOCK, format!("wall-clock read `{what}` in simulation code"), &mut out);
+                }
+            }
+        }
+        for pat in RNG_PATTERNS {
+            if code.contains(pat) {
+                let what = pat.trim_end_matches('(');
+                push(RNG_ENTROPY, format!("non-seeded randomness `{what}`"), &mut out);
+            }
+        }
+        if find_word(code, "unsafe").is_some() {
+            push(UNSAFE_BLOCK, "`unsafe` code in the simulator crate".to_string(), &mut out);
+        }
+
+        // hash-iter, method form: `m.keys()`, `self.m.drain(…)`, …
+        let mut line_iterates_hash = false;
+        for m in ITER_METHODS {
+            let mut start = 0;
+            while let Some(p) = code[start..].find(m) {
+                let abs = start + p;
+                let recv = trailing_ident(&code[..abs]);
+                if !recv.is_empty() && hashes.contains(&recv) {
+                    line_iterates_hash = true;
+                    let what = m.trim_end_matches('(');
+                    push(
+                        HASH_ITER,
+                        format!("unordered iteration over hash container `{recv}` via `{what}`"),
+                        &mut out,
+                    );
+                }
+                start = abs + m.len();
+            }
+        }
+        // hash-iter, for form: `for x in &m {` (the method form above
+        // already covers `for x in m.keys() {`).
+        if let Some(fp) = find_word(code, "for") {
+            if let Some(ip) = code[fp..].find(" in ") {
+                let expr = code[fp + ip + 4..].trim_start();
+                let expr = expr.strip_prefix('&').unwrap_or(expr);
+                let expr = expr.strip_prefix("mut ").unwrap_or(expr).trim_start();
+                let expr = expr.strip_prefix("self.").unwrap_or(expr);
+                let name = leading_ident(expr);
+                let rest = expr[name.len()..].trim_start();
+                if !name.is_empty() && hashes.contains(&name) && !rest.starts_with('.') {
+                    line_iterates_hash = true;
+                    push(
+                        HASH_ITER,
+                        format!("unordered iteration over hash container `{name}` via `for .. in`"),
+                        &mut out,
+                    );
+                }
+            }
+        }
+        // float-accum: accumulation while inside any unordered loop.
+        if !hash_loops.is_empty() && (code.contains("+=") || code.contains("-=")) {
+            push(
+                FLOAT_ACCUM,
+                "accumulation inside unordered iteration is order-dependent".to_string(),
+                &mut out,
+            );
+        }
+
+        // Brace tracking (literal contents are blanked, so every brace
+        // seen here is structural).
+        let opens = code.chars().filter(|&c| c == '{').count() as i32;
+        let closes = code.chars().filter(|&c| c == '}').count() as i32;
+        depth += opens - closes;
+        if line_iterates_hash && find_word(code, "for").is_some() {
+            hash_loops.push(depth);
+        }
+        while hash_loops.last().is_some_and(|&d| depth < d) {
+            hash_loops.pop();
+        }
+    }
+    out
+}

@@ -133,6 +133,50 @@ pub fn family_breakdown(engine: &Engine, cluster: &Cluster) -> Vec<crate::obs::F
         .collect()
 }
 
+/// simsan energy-conservation check: the per-family CPU/joule
+/// decomposition of [`family_breakdown`] must reconcile with the
+/// quantities it decomposes — Σ family CPU core-seconds equals the
+/// cluster's total CPU `busy_integral`, and Σ family marginal joules
+/// equals the same integral priced at each node's (full − idle) watts
+/// per core. Both sides sum the same addends in different orders, so
+/// they agree to float-reordering tolerance; a divergence means class
+/// accounting lost or double-counted usage. Reports through
+/// [`crate::sim::Engine::san_violation`]; a no-op (one branch) when the
+/// sanitizer is off.
+pub fn sanitize_energy(engine: &Engine, cluster: &Cluster) {
+    if !engine.sanitize().armed() {
+        return;
+    }
+    let fams = family_breakdown(engine, cluster);
+    let fam_cpu: f64 = fams.iter().map(|f| f.cpu_core_seconds).sum();
+    let fam_joules: f64 = fams.iter().map(|f| f.joules).sum();
+    let mut cpu = 0.0f64;
+    let mut joules = 0.0f64;
+    for node in &cluster.nodes {
+        let r = engine.resource(node.cpu);
+        cpu += r.busy_integral;
+        if node.spec.cpu.capacity > 0.0 {
+            joules += (node.spec.power_full_w - node.spec.power_idle_w)
+                / node.spec.cpu.capacity
+                * r.busy_integral;
+        }
+    }
+    let cpu_scale = fam_cpu.abs().max(cpu.abs()).max(1.0);
+    if (fam_cpu - cpu).abs() > 1e-6 * cpu_scale {
+        engine.san_violation(
+            "energy-conserve",
+            format!("family CPU seconds {fam_cpu:.9} != cluster busy integral {cpu:.9}"),
+        );
+    }
+    let j_scale = fam_joules.abs().max(joules.abs()).max(1.0);
+    if (fam_joules - joules).abs() > 1e-6 * j_scale {
+        engine.san_violation(
+            "energy-conserve",
+            format!("family joules {fam_joules:.9} != marginal CPU joules {joules:.9}"),
+        );
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

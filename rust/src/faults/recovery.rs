@@ -44,7 +44,7 @@
 //! endpoint only matters for the HDD seek model and only after a
 //! double crash, and is cleared if the node ever re-joins).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::cluster::NodeId;
 use crate::hdfs::{ReplTask, WorldHandle};
@@ -375,7 +375,7 @@ pub(crate) fn drain_round(engine: &mut Engine, world: &WorldHandle, node: NodeId
     }
     let world2 = world.clone();
     let started = engine.batch(|engine| {
-        let mut planned: HashMap<u64, Vec<NodeId>> = HashMap::new();
+        let mut planned: BTreeMap<u64, Vec<NodeId>> = BTreeMap::new();
         let mut started = 0usize;
         for t in &tasks {
             let block_id = t.block_id;
@@ -689,7 +689,7 @@ fn plan_and_start(
     engine: &mut Engine,
     world: &WorldHandle,
     t: &ReplTask,
-    planned: &mut HashMap<u64, Vec<NodeId>>,
+    planned: &mut BTreeMap<u64, Vec<NodeId>>,
     epilogue: impl FnOnce(&mut Engine, &mut crate::hdfs::World) + 'static,
 ) -> Option<NodeId> {
     let mut exclude = t.holders.clone();
@@ -718,7 +718,7 @@ fn plan_and_start(
 /// until the transfers land, so the metadata cannot exclude them).
 /// Shared by the crash scan and the re-join under-replication scan.
 pub(crate) fn start_repl_tasks(engine: &mut Engine, world: &WorldHandle, tasks: Vec<ReplTask>) {
-    let mut planned: HashMap<u64, Vec<NodeId>> = HashMap::new();
+    let mut planned: BTreeMap<u64, Vec<NodeId>> = BTreeMap::new();
     for t in &tasks {
         let _ = plan_and_start(engine, world, t, &mut planned, |_, _| {});
     }

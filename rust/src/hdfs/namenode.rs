@@ -14,7 +14,7 @@
 //! NameNode and JobTracker only — it stores no blocks (paper §3.1: "one
 //! as the master, and the rest as slaves").
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::cluster::NodeId;
 use crate::sim::Rng;
@@ -51,7 +51,10 @@ impl FileMeta {
 /// recommissioned-live`).
 #[derive(Debug, Default)]
 pub struct NameNode {
-    files: HashMap<String, FileMeta>,
+    // BTreeMap: every namespace walk — purge scans, drain scans,
+    // balancer rounds, `files()` — iterates in name order natively, so
+    // no consumer can forget the sort the determinism contract demands.
+    files: BTreeMap<String, FileMeta>,
     next_block: u64,
     /// DataNode ids (everything but the master).
     datanodes: Vec<NodeId>,
@@ -68,7 +71,7 @@ pub struct NameNode {
     /// purge time (file name, block index). A recommission replays this
     /// as the node's **block report**: copies the namespace still needs
     /// re-register instantly, redundant ones are invalidated.
-    offline: HashMap<usize, Vec<(String, usize)>>,
+    offline: BTreeMap<usize, Vec<(String, usize)>>,
     /// Rack index per node id. Empty = the flat single-rack topology,
     /// which keeps the historical (RNG-draw-identical) placement path.
     rack_of: Vec<usize>,
@@ -202,11 +205,10 @@ impl NameNode {
     /// with no survivors are unrecoverable and are just emptied —
     /// callers count them as lost). The purged set is remembered as the
     /// node's prospective **block report** (its disk is intact; a later
-    /// recommission replays it). File iteration is sorted by name so
-    /// the task list is deterministic despite the HashMap namespace.
+    /// recommission replays it). File iteration is in name order (the
+    /// namespace is a `BTreeMap`), so the task list is deterministic.
     pub fn purge_node(&mut self, dead: NodeId) -> Vec<ReplTask> {
-        let mut names: Vec<String> = self.files.keys().cloned().collect();
-        names.sort_unstable();
+        let names: Vec<String> = self.files.keys().cloned().collect();
         let mut tasks = Vec::new();
         let mut retained: Vec<(String, usize)> = Vec::new();
         for name in names {
@@ -282,14 +284,11 @@ impl NameNode {
     /// Over/under-replication scan, under side: one [`ReplTask`] per
     /// missing copy of every block below `replication` that still has a
     /// live source (repeated tasks for the same block let the caller's
-    /// planned-target map pick distinct targets). Sorted by file name
-    /// for determinism.
+    /// planned-target map pick distinct targets). Iterates in file-name
+    /// order for determinism.
     pub fn scan_under_replicated(&self, replication: usize) -> Vec<ReplTask> {
-        let mut names: Vec<&String> = self.files.keys().collect();
-        names.sort_unstable();
         let mut tasks = Vec::new();
-        for name in names {
-            let meta = &self.files[name];
+        for (name, meta) in self.files.iter() {
             for (i, b) in meta.blocks.iter().enumerate() {
                 if b.replicas.is_empty() || b.replicas.len() >= replication {
                     continue;
@@ -316,8 +315,7 @@ impl NameNode {
     /// block spanning at least two racks (the v0.20 invariant repair
     /// restores). Returns the number of replicas invalidated.
     pub fn scan_over_replicated(&mut self, replication: usize) -> usize {
-        let mut names: Vec<String> = self.files.keys().cloned().collect();
-        names.sort_unstable();
+        let names: Vec<String> = self.files.keys().cloned().collect();
         let mut dropped = 0usize;
         let rack_aware = !self.rack_of.is_empty();
         for name in names {
@@ -379,15 +377,13 @@ impl NameNode {
     }
 
     /// Stored (on-disk) bytes per node id, index = `NodeId.0`, sized to
-    /// hold the highest registered DataNode. Accumulated over sorted
-    /// file names so the floating-point sums are bit-stable.
+    /// hold the highest registered DataNode. Accumulated in file-name
+    /// order so the floating-point sums are bit-stable.
     pub fn stored_bytes(&self) -> Vec<f64> {
         let len = self.datanodes.iter().map(|n| n.0 + 1).max().unwrap_or(0);
         let mut bytes = vec![0.0f64; len];
-        let mut names: Vec<&String> = self.files.keys().collect();
-        names.sort_unstable();
-        for name in names {
-            for b in &self.files[name].blocks {
+        for meta in self.files.values() {
+            for b in &meta.blocks {
                 for r in &b.replicas {
                     if r.0 < bytes.len() {
                         bytes[r.0] += b.stored_size;
@@ -541,7 +537,8 @@ impl NameNode {
         self.files.contains_key(name)
     }
 
-    /// Iterate the namespace (unordered; sort for determinism).
+    /// Iterate the namespace in file-name order (the namespace is a
+    /// `BTreeMap`, so this order is deterministic by construction).
     pub fn files(&self) -> impl Iterator<Item = (&str, &FileMeta)> {
         self.files.iter().map(|(k, v)| (k.as_str(), v))
     }

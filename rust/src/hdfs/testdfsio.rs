@@ -79,6 +79,7 @@ fn finish(engine: &Engine, world: &WorldHandle, preset: ClusterPreset, result: D
     let (energy, obs) = {
         let w = world.borrow();
         let energy = crate::energy::measure(engine, &w.cluster, result.makespan);
+        crate::energy::sanitize_energy(engine, &w.cluster);
         let obs = if engine.obs().any_enabled() {
             let bottleneck = engine.obs().crit.enabled.then(|| {
                 crate::obs::bottleneck::analyze(

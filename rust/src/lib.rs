@@ -72,14 +72,23 @@
 //!   core-count frontier analysis generalizing the paper's §5
 //!   four-core conclusion (`amdahl-hadoop sweep`).
 //!
+//! * [`analysis`] — **simlint**, the determinism static-analysis pass
+//!   that enforces the contract's mechanically-checkable clauses over
+//!   this crate's own sources (`amdahl-hadoop lint`); its runtime twin
+//!   is the **simsan** invariant sanitizer ([`sim::Sanitize`]).
+//!
 //! `ARCHITECTURE.md` at the repository root maps these subsystems, the
 //! node-lifecycle state machine, and the determinism contract every PR
-//! must preserve.
+//! must preserve — and its "Enforced determinism contract" table maps
+//! each contract clause to the simlint rule and simsan check that
+//! guards it.
 
+#![forbid(unsafe_code)]
 #![warn(missing_docs)]
 #![warn(rustdoc::broken_intra_doc_links)]
 
 pub mod amdahl;
+pub mod analysis;
 pub mod cluster;
 pub mod compress;
 pub mod conf;

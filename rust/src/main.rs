@@ -33,6 +33,8 @@
 //!                      [--trace-dir DIR] [--obs-interval 5] [--perf-wallclock]
 //!                      [--spec] [--nodes 9] [--cores 2] [--threads N]
 //!                      [--solver-threads N]
+//! amdahl-hadoop lint   [--src src] [--baseline tests/golden/simlint_baseline.json]
+//!                      [--out simlint_report.json]
 //! ```
 //!
 //! Two independent thread budgets: `--threads` (sweep/faults only) runs
@@ -91,9 +93,21 @@
 //! report is byte-identical for every `--solver-threads` value and
 //! both solver modes.
 //!
+//! `lint` runs the simlint determinism static-analysis pass over the
+//! crate's own sources (see `amdahl_hadoop::analysis`): it flags
+//! unordered hash-container iteration, wall-clock reads, non-seeded
+//! randomness, float accumulation inside unordered loops, and `unsafe`
+//! blocks. `--baseline FILE` suppresses the committed baseline and
+//! exits nonzero only on *new* findings; `--out FILE` writes the
+//! byte-stable JSON report. Suppress a finding in source with
+//! `// simlint: allow(<rule>) — <reason>`.
+//!
 //! Common options: `--seed N` (default 42), `--scale F` (fraction of the
 //! paper's 25 GB dataset, default 0.002), `--kernels` (load the AOT
-//! Pallas kernels from `artifacts/` and compute real pair counts).
+//! Pallas kernels from `artifacts/` and compute real pair counts),
+//! `--sanitize off|count|panic` (the simsan runtime invariant sanitizer;
+//! default `off`, or `count` when the crate is built with the `simsan`
+//! feature — see ARCHITECTURE.md's determinism contract).
 
 use std::rc::Rc;
 
@@ -113,7 +127,18 @@ fn zcfg(args: &Args, kernels: Option<Rc<PairKernels>>) -> anyhow::Result<ZonesCo
         kernels,
         solver_threads: args.get_usize("solver-threads", 1)?.max(1),
         obs: obs_from_args(args)?,
+        sanitize: san_from_args(args)?,
         ..Default::default()
+    })
+}
+
+/// `--sanitize off|count|panic` for every run subcommand; the default
+/// follows the build (`count` under the `simsan` feature, else `off`).
+fn san_from_args(args: &Args) -> anyhow::Result<amdahl_hadoop::sim::Sanitize> {
+    Ok(match args.get("sanitize") {
+        None => amdahl_hadoop::sim::Sanitize::default(),
+        Some(s) => amdahl_hadoop::sim::Sanitize::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("unknown --sanitize {s} (off|count|panic)"))?,
     })
 }
 
@@ -340,6 +365,7 @@ fn main() -> anyhow::Result<()> {
                 solver,
                 solver_threads: args.get_usize("solver-threads", 1)?.max(1),
                 obs,
+                sanitize: san_from_args(&args)?,
                 trace_dir,
                 perf_wallclock: args.flag("perf-wallclock"),
                 progress: !args.flag("quiet"),
@@ -491,6 +517,7 @@ fn main() -> anyhow::Result<()> {
                 balancer_bandwidth_bps: args.get_f64("balancer-bandwidth", 1.0)? * MIB,
                 solver_threads: args.get_usize("solver-threads", 1)?.max(1),
                 obs,
+                sanitize: san_from_args(&args)?,
                 trace_dir,
                 perf_wallclock: args.flag("perf-wallclock"),
                 progress: !args.flag("quiet"),
@@ -558,7 +585,8 @@ fn main() -> anyhow::Result<()> {
             let conf = HadoopConf::default();
             let sim = amdahl_hadoop::sim::SimConfig::new(seed)
                 .with_solver_threads(args.get_usize("solver-threads", 1)?)
-                .with_obs(obs_from_args(&args)?);
+                .with_obs(obs_from_args(&args)?)
+                .with_sanitize(san_from_args(&args)?);
             let run = match args.get("op").unwrap_or("write") {
                 "read" => amdahl_hadoop::hdfs::testdfsio::read_test_on(
                     ClusterPreset::Amdahl,
@@ -599,7 +627,8 @@ fn main() -> anyhow::Result<()> {
             };
             let sim = amdahl_hadoop::sim::SimConfig::new(seed)
                 .with_solver_threads(args.get_usize("solver-threads", 1)?)
-                .with_obs(obs);
+                .with_obs(obs)
+                .with_sanitize(san_from_args(&args)?);
             let op = args.get("op").unwrap_or("write");
             let run = match op {
                 "read" => amdahl_hadoop::hdfs::testdfsio::read_test_on(
@@ -637,6 +666,24 @@ fn main() -> anyhow::Result<()> {
             if let Some(path) = args.get("json") {
                 std::fs::write(path, b.to_json())?;
                 eprintln!("[profile] wrote bottleneck report to {path}");
+            }
+        }
+        "lint" => {
+            use amdahl_hadoop::analysis;
+            let root = args.get("src").unwrap_or("src");
+            let report = analysis::lint_dir(std::path::Path::new(root))?;
+            if let Some(path) = args.get("out") {
+                std::fs::write(path, report.to_json())?;
+                eprintln!("[lint] wrote report to {path}");
+            }
+            let baseline = match args.get("baseline") {
+                Some(p) => analysis::LintReport::parse(&std::fs::read_to_string(p)?),
+                None => analysis::LintReport::default(),
+            };
+            let fresh = report.new_findings(&baseline);
+            print!("{}", report.render(&fresh));
+            if !fresh.is_empty() {
+                std::process::exit(3);
             }
         }
         "all" => {

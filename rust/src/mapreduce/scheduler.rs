@@ -26,7 +26,7 @@
 //! counted as wasted speculative work.
 
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::rc::Rc;
 
 use super::tasks::{
@@ -169,8 +169,10 @@ struct JobState {
     /// Rack index per node id, snapshotted at job start; empty on the
     /// flat topology (disables the rack-locality scheduling tier).
     rack_of: Vec<usize>,
-    free_map_slots: HashMap<NodeId, usize>,
-    free_reduce_slots: HashMap<NodeId, usize>,
+    // BTreeMap keyed by NodeId: slot scans iterate in ascending node id
+    // natively, making the locality tiers' tie-breaks order-independent.
+    free_map_slots: BTreeMap<NodeId, usize>,
+    free_reduce_slots: BTreeMap<NodeId, usize>,
     pending_reduces: Vec<usize>,
     running_reduces: usize,
     reduces_done: usize,
@@ -244,8 +246,8 @@ pub fn run_job(
         };
         (slaves, w.faults.active, w.faults.speculation, rack_of)
     };
-    let mut free_map_slots = HashMap::new();
-    let mut free_reduce_slots = HashMap::new();
+    let mut free_map_slots = BTreeMap::new();
+    let mut free_reduce_slots = BTreeMap::new();
     for &s in &slaves {
         free_map_slots.insert(s, spec.conf.map_slots);
         free_reduce_slots.insert(s, spec.conf.reduce_slots);
@@ -558,7 +560,7 @@ fn start_reduce(engine: &mut Engine, state: Rc<RefCell<JobState>>, reducer: usiz
         *s.free_reduce_slots.get_mut(&node).unwrap() -= 1;
         s.running_reduces += 1;
         // Aggregate shuffle bytes per map host.
-        let mut per_host: HashMap<NodeId, f64> = HashMap::new();
+        let mut per_host: BTreeMap<NodeId, f64> = BTreeMap::new();
         let mut total = 0.0;
         for (si, slot) in s.map_outputs.iter().enumerate() {
             let (host, out) = slot.as_ref().expect("map output missing");

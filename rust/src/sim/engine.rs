@@ -50,6 +50,7 @@ use std::rc::Rc;
 use super::flow::{solve_rates, FlowSpec, FlowState, SolveScratch};
 use super::resource::{ClassTable, Resource, ResourceId, UsageClass};
 use super::rng::Rng;
+use super::sanitize::Sanitize;
 
 /// Minimum dirty-union size before a multi-threaded engine even tries to
 /// partition and dispatch to the worker pool. Below this the serial
@@ -114,6 +115,10 @@ pub struct SimConfig {
     /// Observability layers to record (all off by default; the engine's
     /// hot path only pays a branch per recording call when off).
     pub obs: crate::obs::ObsSpec,
+    /// Runtime invariant sanitizer mode (see [`Sanitize`]; `Off` by
+    /// default — or `Count` under the `simsan` cargo feature — and a
+    /// single branch per check site when off).
+    pub sanitize: Sanitize,
 }
 
 impl SimConfig {
@@ -124,6 +129,7 @@ impl SimConfig {
             solver: SolverMode::Incremental,
             solver_threads: 1,
             obs: crate::obs::ObsSpec::default(),
+            sanitize: Sanitize::default(),
         }
     }
 
@@ -142,6 +148,12 @@ impl SimConfig {
     /// Override the observability spec.
     pub fn with_obs(mut self, obs: crate::obs::ObsSpec) -> Self {
         self.obs = obs;
+        self
+    }
+
+    /// Override the runtime sanitizer mode.
+    pub fn with_sanitize(mut self, sanitize: Sanitize) -> Self {
+        self.sanitize = sanitize;
         self
     }
 }
@@ -182,6 +194,11 @@ pub struct EngineStats {
     /// Solver worker-thread count the engine ran with (config echo;
     /// 1 = the serial path). Perf-section-only, like `parallel_solves`.
     pub solver_threads: usize,
+    /// Invariant violations recorded by the runtime sanitizer (always 0
+    /// when [`SimConfig::sanitize`] is `Off` or `Panic` — the former
+    /// never checks, the latter aborts on the first). Perf-section-only,
+    /// and emitted only when non-zero so default output keeps its bytes.
+    pub san_violations: u64,
 }
 
 type Callback = Box<dyn FnOnce(&mut Engine)>;
@@ -286,6 +303,18 @@ pub struct Engine {
     live_flow_count: usize,
     stats: EngineStats,
     obs: crate::obs::Obs,
+    /// Sanitizer mode (copied from [`SimConfig::sanitize`]).
+    sanitize: Sanitize,
+    /// Context string for sanitizer diagnostics (`seed-N` by default;
+    /// drivers that know a richer id override it via
+    /// [`Engine::set_sanitize_label`]).
+    san_label: String,
+    /// Violation tally behind a `Cell` so check sites with only `&self`
+    /// (e.g. the energy-conservation check after the run) can record;
+    /// [`Engine::stats`] folds it into `san_violations`.
+    san_count: std::cell::Cell<u64>,
+    /// `(time, seq)` of the last heap pop, for the ordering check.
+    san_last_pop: (f64, u64),
 }
 
 impl Engine {
@@ -344,6 +373,10 @@ impl Engine {
             live_flow_count: 0,
             stats: EngineStats { solver_threads, ..EngineStats::default() },
             obs: crate::obs::Obs::new(cfg.obs),
+            sanitize: cfg.sanitize,
+            san_label: format!("seed-{}", cfg.seed),
+            san_count: std::cell::Cell::new(0),
+            san_last_pop: (f64::NEG_INFINITY, 0),
         }
     }
 
@@ -357,9 +390,113 @@ impl Engine {
         self.stats.events_processed
     }
 
-    /// Solver performance counters.
+    /// Solver performance counters (with the sanitizer's violation tally
+    /// folded in).
     pub fn stats(&self) -> EngineStats {
-        self.stats
+        let mut s = self.stats;
+        s.san_violations = self.san_count.get();
+        s
+    }
+
+    /// The runtime sanitizer mode this engine runs with.
+    pub fn sanitize(&self) -> Sanitize {
+        self.sanitize
+    }
+
+    /// Set the context string sanitizer diagnostics carry (e.g. the
+    /// sweep scenario id). Defaults to `seed-<seed>`.
+    pub fn set_sanitize_label(&mut self, label: impl Into<String>) {
+        self.san_label = label.into();
+    }
+
+    /// Record one sanitizer violation: panic with context under
+    /// [`Sanitize::Panic`], tally under [`Sanitize::Count`], no-op when
+    /// off. Public so out-of-engine checks (the energy-conservation
+    /// reconciliation in [`crate::energy::sanitize_energy`]) report
+    /// through the same channel; `&self` because post-run check sites
+    /// only hold a shared borrow.
+    #[cold]
+    pub fn san_violation(&self, check: &'static str, detail: String) {
+        match self.sanitize {
+            Sanitize::Off => {}
+            Sanitize::Count => self.san_count.set(self.san_count.get() + 1),
+            Sanitize::Panic => panic!(
+                "simsan[{check}] {}: {detail} (sim t={:.6})",
+                self.san_label, self.now
+            ),
+        }
+    }
+
+    /// Heap-pop ordering check: event times never precede the clock, and
+    /// pops come out in strictly increasing `(time, seq)` — which also
+    /// proves seq uniqueness among coexisting entries.
+    fn san_check_pop(&mut self, time: f64, seq: u64) {
+        if time < self.now - 1e-9 {
+            self.san_violation(
+                "heap-monotonic",
+                format!("event time {time:.9} precedes clock {:.9}", self.now),
+            );
+        }
+        let (lt, ls) = self.san_last_pop;
+        if time < lt || (time == lt && seq <= ls) {
+            self.san_violation(
+                "heap-order",
+                format!("pop (t={time:.9}, seq={seq}) after (t={lt:.9}, seq={ls})"),
+            );
+        }
+        self.san_last_pop = (time, seq);
+    }
+
+    /// Parallel-partition check: the component groups must tile
+    /// `part_flows` contiguously and the regrouped union must be a
+    /// permutation of the sorted dirty union (disjoint and covering).
+    fn san_check_partition(&self) {
+        let mut prev_end = 0usize;
+        for g in &self.part_groups {
+            if g.flo != prev_end {
+                self.san_violation(
+                    "partition-cover",
+                    format!("group starts at {} where previous ended at {prev_end}", g.flo),
+                );
+            }
+            prev_end = g.fhi;
+        }
+        if prev_end != self.part_flows.len() {
+            self.san_violation(
+                "partition-cover",
+                format!("groups end at {prev_end} of {} slots", self.part_flows.len()),
+            );
+        }
+        let mut sorted = self.part_flows.clone();
+        sorted.sort_unstable();
+        if sorted != self.comp_flows {
+            self.san_violation(
+                "partition-disjoint",
+                format!(
+                    "regrouped union ({} slots) is not a permutation of the dirty union ({} slots)",
+                    self.part_flows.len(),
+                    self.comp_flows.len()
+                ),
+            );
+        }
+    }
+
+    /// Per-resource class-accounting reconciliation: the id-indexed
+    /// per-class busy arena must sum back to `busy_integral`.
+    fn san_check_resources(&self) {
+        for r in &self.resources {
+            let by_class: f64 = r.busy_by_class.iter().sum();
+            let scale = r.busy_integral.abs().max(by_class.abs()).max(1.0);
+            if (by_class - r.busy_integral).abs() > 1e-6 * scale {
+                self.san_violation(
+                    "class-conserve",
+                    format!(
+                        "{}: per-class busy {by_class:.9} != busy_integral {:.9}",
+                        r.name, r.busy_integral
+                    ),
+                );
+            }
+        }
     }
 
     /// The solver mode this engine runs with.
@@ -844,6 +981,7 @@ impl Engine {
         self.comp_res.sort_unstable();
         self.stats.solves += 1;
         self.stats.flows_resolved += self.comp_flows.len() as u64;
+        // simlint: allow(wall-clock) — solve_ns is a perf counter; sim behaviour never reads it
         let solve_t0 = std::time::Instant::now();
         // Partition-then-join parallel path: with a pool armed and a big
         // enough union, regroup the union into its disjoint components
@@ -877,6 +1015,9 @@ impl Engine {
                 for (i, &s) in self.part_flows.iter().enumerate() {
                     self.rate_by_slot[s] = pool.rate(i);
                 }
+                if self.sanitize.armed() {
+                    self.san_check_partition();
+                }
                 self.stats.parallel_solves += 1;
                 used_parallel = true;
             }
@@ -905,6 +1046,9 @@ impl Engine {
             let s = self.comp_flows[k];
             let new_rate =
                 if used_parallel { self.rate_by_slot[s] } else { self.scratch.solved_rate(k) };
+            if self.sanitize.armed() && (!new_rate.is_finite() || new_rate < 0.0) {
+                self.san_violation("rate-finite", format!("flow slot {s} solved rate {new_rate}"));
+            }
             let f = self.flows[s].as_ref().unwrap();
             let unchanged = f.version > 0 && {
                 let scale = f.rate.abs().max(new_rate.abs()).max(1e-300);
@@ -940,6 +1084,9 @@ impl Engine {
         assert_eq!(self.batch_depth, 0, "run() inside batch()");
         while let Some(entry) = self.heap.pop() {
             debug_assert!(entry.time >= self.now - 1e-9, "time went backwards");
+            if self.sanitize.armed() {
+                self.san_check_pop(entry.time, entry.seq);
+            }
             if self.obs.series.enabled() {
                 self.emit_utilization_samples(entry.time);
             }
@@ -997,6 +1144,9 @@ impl Engine {
             }
         }
         self.finalize_integrals();
+        if self.sanitize.armed() {
+            self.san_check_resources();
+        }
         assert_eq!(
             self.live_flow_count, 0,
             "simulation ended with {} stalled flows",

@@ -70,9 +70,11 @@ pub mod flow;
 pub(crate) mod parallel;
 pub mod resource;
 pub mod rng;
+pub mod sanitize;
 
 pub use engine::{Engine, EngineStats, FlowId, SimConfig, SolverMode, TimerId};
 pub use crate::obs::ObsSpec;
 pub use flow::{FlowSpec, SerialStage};
 pub use resource::{ResourceId, UsageClass, UsageSnapshot};
 pub use rng::Rng;
+pub use sanitize::Sanitize;

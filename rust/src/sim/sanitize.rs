@@ -1,0 +1,106 @@
+//! simsan: the engine's runtime invariant sanitizer.
+//!
+//! A debug-time companion to the `simlint` static pass (see
+//! `crate::analysis`): while the lint proves determinism hazards absent
+//! at the source level, the sanitizer checks the engine's *conservation
+//! invariants* while a simulation runs — the properties every
+//! byte-identity regression test implicitly relies on:
+//!
+//! * **heap-monotonic / heap-order** — popped event times never precede
+//!   the clock, and pops come out in strictly increasing `(time, seq)`
+//!   order (which also proves `seq` uniqueness among coexisting
+//!   entries);
+//! * **rate-finite** — the max-min solver never commits a NaN, negative,
+//!   or infinite flow rate;
+//! * **partition-cover / partition-disjoint** — the parallel solver's
+//!   component groups tile the dirty union exactly: contiguous,
+//!   non-overlapping, and a permutation of the serial union;
+//! * **class-conserve** — every resource's per-class busy arena sums
+//!   back to its `busy_integral` (no usage is lost or double-counted by
+//!   class accounting);
+//! * **energy-conserve** — [`crate::energy::family_breakdown`] totals
+//!   reconcile with the per-node CPU busy integrals they decompose
+//!   (checked by [`crate::energy::sanitize_energy`]).
+//!
+//! The mode rides in [`crate::sim::SimConfig::sanitize`]. `Off` (the
+//! default without the `simsan` cargo feature) costs a single branch per
+//! check site — the diagnostic `format!` work only runs once a check has
+//! already failed. `Panic` aborts with scenario/sim-time context (what
+//! the armed integration grid uses); `Count` tallies violations into
+//! [`crate::sim::EngineStats::san_violations`] so a long sweep reports
+//! them instead of dying on the first. Building with `--features simsan`
+//! flips the default to `Count`, arming every engine in the build.
+
+/// Runtime sanitizer mode (see the module docs for the check catalogue).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Sanitize {
+    /// No checks (one branch per check site; the production default).
+    Off,
+    /// Check and count violations into
+    /// [`crate::sim::EngineStats::san_violations`]; the run continues.
+    Count,
+    /// Panic on the first violation with scenario/sim-time context (what
+    /// tests want: the backtrace points at the event that broke the
+    /// invariant).
+    Panic,
+}
+
+impl Default for Sanitize {
+    /// `Off` normally; `Count` when the crate is built with the `simsan`
+    /// feature, so a sanitizer build arms every engine without touching
+    /// call sites.
+    fn default() -> Self {
+        if cfg!(feature = "simsan") {
+            Sanitize::Count
+        } else {
+            Sanitize::Off
+        }
+    }
+}
+
+impl Sanitize {
+    /// True when any checking is enabled (the per-site guard branch).
+    #[inline]
+    pub fn armed(self) -> bool {
+        !matches!(self, Sanitize::Off)
+    }
+
+    /// Stable key for JSON / CLI use.
+    pub fn key(self) -> &'static str {
+        match self {
+            Sanitize::Off => "off",
+            Sanitize::Count => "count",
+            Sanitize::Panic => "panic",
+        }
+    }
+
+    /// Parse a CLI key (`"off"` / `"count"` / `"panic"`).
+    pub fn parse(s: &str) -> Option<Sanitize> {
+        match s {
+            "off" => Some(Sanitize::Off),
+            "count" => Some(Sanitize::Count),
+            "panic" => Some(Sanitize::Panic),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keys_round_trip() {
+        for m in [Sanitize::Off, Sanitize::Count, Sanitize::Panic] {
+            assert_eq!(Sanitize::parse(m.key()), Some(m));
+        }
+        assert_eq!(Sanitize::parse("nope"), None);
+    }
+
+    #[test]
+    fn armed_matches_mode() {
+        assert!(!Sanitize::Off.armed());
+        assert!(Sanitize::Count.armed());
+        assert!(Sanitize::Panic.armed());
+    }
+}

@@ -638,6 +638,7 @@ impl SweepResults {
                 t.solve_ns += r.stats.solve_ns;
                 t.parallel_solves += r.stats.parallel_solves;
                 t.solver_threads = t.solver_threads.max(r.stats.solver_threads);
+                t.san_violations += r.stats.san_violations;
             }
             // Wall-clock solver time is opt-in: it varies run to run, so
             // emitting it by default would break bench baseline diffs.
@@ -657,10 +658,17 @@ impl SweepResults {
             } else {
                 String::new()
             };
+            // Sanitizer violations follow the same rule: a clean (or
+            // unarmed) run emits nothing, so default bytes are stable.
+            let t_san = if t.san_violations > 0 {
+                format!(", \"san_violations\": {}", t.san_violations)
+            } else {
+                String::new()
+            };
             s.push_str(&format!(
                 "    \"totals\": {{\"solves\": {}, \"flows_resolved\": {}, \
                  \"stale_events_skipped\": {}, \"events\": {}, \"peak_live_flows\": {}, \
-                 \"peak_heap\": {}{}{}}},\n",
+                 \"peak_heap\": {}{}{}{}}},\n",
                 t.solves,
                 t.flows_resolved,
                 t.stale_events_skipped,
@@ -668,7 +676,8 @@ impl SweepResults {
                 t.peak_live_flows,
                 t.peak_heap,
                 t_wall,
-                t_par
+                t_par,
+                t_san
             ));
             s.push_str("    \"per_scenario\": [\n");
             for (i, r) in self.records.iter().enumerate() {
@@ -685,10 +694,15 @@ impl SweepResults {
                 } else {
                     String::new()
                 };
+                let r_san = if r.stats.san_violations > 0 {
+                    format!(", \"san_violations\": {}", r.stats.san_violations)
+                } else {
+                    String::new()
+                };
                 s.push_str(&format!(
                     "      {{\"id\": \"{}\", \"solves\": {}, \"flows_resolved\": {}, \
                      \"stale_events_skipped\": {}, \"events\": {}, \"peak_live_flows\": {}, \
-                     \"peak_heap\": {}{}{}}}{}\n",
+                     \"peak_heap\": {}{}{}{}}}{}\n",
                     esc(&r.id),
                     r.stats.solves,
                     r.stats.flows_resolved,
@@ -698,6 +712,7 @@ impl SweepResults {
                     r.stats.peak_heap,
                     r_wall,
                     r_par,
+                    r_san,
                     if i + 1 == self.records.len() { "" } else { "," }
                 ));
             }

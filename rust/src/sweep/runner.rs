@@ -93,6 +93,11 @@ pub struct SweepOptions {
     /// `<dir>/<scenario-id>.metrics.json` (the directory is created on
     /// demand). Only meaningful with [`SweepOptions::obs`] switched on.
     pub trace_dir: Option<String>,
+    /// Runtime invariant sanitizer mode applied to every scenario's
+    /// engine (see [`crate::sim::Sanitize`]). Default off (or `Count`
+    /// under the `simsan` cargo feature); any violations surface in the
+    /// perf section's `san_violations` counter.
+    pub sanitize: crate::sim::Sanitize,
     /// Emit wall-clock solver time in the perf section
     /// ([`SweepResults::perf_wallclock`]). Off by default.
     pub perf_wallclock: bool,
@@ -114,6 +119,7 @@ impl Default for SweepOptions {
             solver_threads: 1,
             obs: crate::sim::ObsSpec::default(),
             trace_dir: None,
+            sanitize: crate::sim::Sanitize::default(),
             perf_wallclock: false,
             progress: false,
         }
@@ -219,7 +225,8 @@ pub fn run_scenario(sc: &Scenario, opts: &SweepOptions) -> ScenarioRecord {
     let sim = SimConfig::new(sc.seed)
         .with_solver(opts.solver)
         .with_solver_threads(opts.solver_threads)
-        .with_obs(opts.obs);
+        .with_obs(opts.obs)
+        .with_sanitize(opts.sanitize);
     let mut plan = sc.fault_plan();
     plan.straggler_slowdown = opts.straggler_slowdown;
     if let Some(b) = plan.balancer.as_mut() {
@@ -304,6 +311,7 @@ pub fn run_scenario(sc: &Scenario, opts: &SweepOptions) -> ScenarioRecord {
                 solver: opts.solver,
                 solver_threads: opts.solver_threads,
                 obs: opts.obs,
+                sanitize: opts.sanitize,
                 faults: plan,
                 fault_seed,
                 ..ZonesConfig::default()

@@ -80,6 +80,9 @@ pub struct ZonesConfig {
     /// Observability switches (default all-off: zero-cost, and every
     /// output byte-identical to a build without the obs layer).
     pub obs: crate::sim::ObsSpec,
+    /// Runtime invariant sanitizer mode for the engine
+    /// ([`crate::sim::SimConfig::sanitize`]).
+    pub sanitize: crate::sim::Sanitize,
 }
 
 impl Default for ZonesConfig {
@@ -99,6 +102,7 @@ impl Default for ZonesConfig {
             faults: crate::faults::InjectionPlan::empty(),
             fault_seed: 0,
             obs: crate::sim::ObsSpec::default(),
+            sanitize: crate::sim::Sanitize::default(),
         }
     }
 }

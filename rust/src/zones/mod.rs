@@ -95,7 +95,8 @@ pub fn run_app(preset: ClusterPreset, conf: &HadoopConf, zcfg: &ZonesConfig, app
         crate::sim::SimConfig::new(zcfg.seed)
             .with_solver(zcfg.solver)
             .with_solver_threads(zcfg.solver_threads)
-            .with_obs(zcfg.obs),
+            .with_obs(zcfg.obs)
+            .with_sanitize(zcfg.sanitize),
     );
     let cat = zcfg.catalog();
     let (world, files) = setup_world(&mut engine, preset, conf, cat.input_bytes());
@@ -161,6 +162,7 @@ pub fn run_app(preset: ClusterPreset, conf: &HadoopConf, zcfg: &ZonesConfig, app
     let (energy, obs) = {
         let w = world.borrow();
         let energy = crate::energy::measure(&engine, &w.cluster, total);
+        crate::energy::sanitize_energy(&engine, &w.cluster);
         let obs = if engine.obs().any_enabled() {
             let process = match app {
                 App::Search => "neighbor-search",

@@ -1,0 +1,169 @@
+//! Integration tests for the simsan runtime invariant sanitizer.
+//!
+//! The contract under test: arming the sanitizer (`Count` or `Panic`)
+//! on a hostile grid — racked topology, fault injection, lifecycle
+//! churn, the background balancer — finds **zero** invariant
+//! violations, changes **zero** output bytes, and the `Panic` mode
+//! actually fires (with scenario context) when a violation is
+//! reported. The engine-level check implementations live next to the
+//! engine; these tests exercise the full stack.
+
+use amdahl_hadoop::conf::{ClusterPreset, HadoopConf};
+use amdahl_hadoop::hdfs::testdfsio;
+use amdahl_hadoop::hw::MIB;
+use amdahl_hadoop::sim::{Engine, Sanitize, SimConfig, SolverMode};
+use amdahl_hadoop::sweep::{
+    run_sweep, ClusterFamily, SweepGrid, SweepOptions, Workload, WritePath,
+};
+use amdahl_hadoop::zones::{run_app, App, ZonesConfig};
+
+/// The determinism-hostile grid from the parallel-solver tests: 3
+/// oversubscribed racks, an MTBF crash axis, a decommission, re-join
+/// churn, and the balancer — every subsystem that stresses the
+/// settle/commit boundaries the sanitizer checks.
+fn churn_grid() -> SweepGrid {
+    SweepGrid {
+        families: vec![ClusterFamily::Amdahl],
+        nodes: vec![6],
+        cores: vec![2],
+        write_paths: vec![WritePath::DirectIo],
+        lzo: vec![false],
+        workloads: vec![Workload::DfsioWrite],
+        racks: vec![3],
+        oversub: vec![4.0],
+        mtbf: vec![None, Some(300.0)],
+        rejoin: vec![Some(60.0)],
+        decommission_at: vec![Some(40.0)],
+        balancer: vec![None, Some(0.2)],
+        ..SweepGrid::paper_default(42, 1, 1)
+    }
+}
+
+fn opts(solver: SolverMode, solver_threads: usize, sanitize: Sanitize) -> SweepOptions {
+    SweepOptions {
+        threads: 2,
+        dfsio_bytes_per_worker: 32.0 * MIB,
+        dfsio_workers: 2,
+        solver,
+        solver_threads,
+        sanitize,
+        ..SweepOptions::default()
+    }
+}
+
+/// The acceptance bar: the panic-armed sanitizer stays silent across
+/// 1 / 2 / 4 solver threads and both solver modes on the churn grid,
+/// and the simulation-outcome projection is byte-identical to the
+/// unarmed run.
+#[test]
+fn armed_churn_grid_is_clean_and_byte_identical() {
+    let g = churn_grid();
+    let off = run_sweep(&g, &opts(SolverMode::Incremental, 1, Sanitize::Off));
+    for threads in [1, 2, 4] {
+        let armed = run_sweep(&g, &opts(SolverMode::Incremental, threads, Sanitize::Panic));
+        assert_eq!(
+            off.sim_json(),
+            armed.sim_json(),
+            "panic-armed sanitizer changed sim bytes at {threads} solver threads"
+        );
+    }
+    let ws = run_sweep(&g, &opts(SolverMode::WholeSet, 4, Sanitize::Panic));
+    assert_eq!(off.sim_json(), ws.sim_json(), "whole-set armed run changed sim bytes");
+}
+
+/// Count mode on a clean run: zero tallied violations, no
+/// `san_violations` key in the perf JSON, and the full `to_json`
+/// output (perf section included) keeps the unarmed bytes.
+#[test]
+fn clean_count_mode_emits_no_counter_and_same_bytes() {
+    let g = SweepGrid {
+        families: vec![ClusterFamily::Amdahl],
+        nodes: vec![5],
+        cores: vec![2],
+        write_paths: vec![WritePath::DirectIo],
+        lzo: vec![false],
+        workloads: vec![Workload::DfsioWrite],
+        ..SweepGrid::paper_default(7, 1, 1)
+    };
+    let off = run_sweep(&g, &opts(SolverMode::Incremental, 1, Sanitize::Off));
+    let counted = run_sweep(&g, &opts(SolverMode::Incremental, 1, Sanitize::Count));
+    for r in &counted.records {
+        assert_eq!(r.stats.san_violations, 0, "{}: sanitizer tallied a violation", r.id);
+    }
+    assert!(
+        !counted.to_json().contains("san_violations"),
+        "clean run leaked the san_violations key"
+    );
+    assert_eq!(off.to_json(), counted.to_json(), "count mode changed output bytes");
+}
+
+/// Single-run TestDFSIO path: armed vs unarmed runs land on identical
+/// outcomes (the energy-conservation check runs at finish either way).
+#[test]
+fn dfsio_clean_under_panic_sanitizer() {
+    let conf = HadoopConf::default();
+    let run = |san: Sanitize| {
+        let sim = SimConfig::new(42).with_sanitize(san);
+        testdfsio::write_test_on(ClusterPreset::Amdahl, sim, 2, 16.0 * MIB, &conf)
+    };
+    let off = run(Sanitize::Off);
+    let armed = run(Sanitize::Panic);
+    assert_eq!(off.result.makespan.to_bits(), armed.result.makespan.to_bits());
+    assert_eq!(off.result.per_node_mbps.to_bits(), armed.result.per_node_mbps.to_bits());
+    assert_eq!(armed.stats.san_violations, 0);
+}
+
+/// Both Zones applications (the two-step Stat pipeline included) run
+/// clean under the panic-armed sanitizer.
+#[test]
+fn apps_clean_under_panic_sanitizer() {
+    let conf = HadoopConf { reduce_slots: 3, ..Default::default() };
+    for app in [App::Search, App::Stat] {
+        let z = ZonesConfig {
+            seed: 17,
+            scale: 0.0008,
+            kernel_every: usize::MAX,
+            sanitize: Sanitize::Panic,
+            ..Default::default()
+        };
+        let out = run_app(ClusterPreset::Amdahl, &conf, &z, app);
+        assert!(out.total_seconds > 0.0);
+        assert_eq!(out.stats.san_violations, 0);
+    }
+}
+
+/// Count mode tallies reported violations into `EngineStats`.
+#[test]
+fn count_mode_tallies_violations() {
+    let e = Engine::from_config(SimConfig::new(1).with_sanitize(Sanitize::Count));
+    e.san_violation("test-check", "first".to_string());
+    e.san_violation("test-check", "second".to_string());
+    assert_eq!(e.stats().san_violations, 2);
+}
+
+/// Off mode is inert even when a violation is reported.
+#[test]
+fn off_mode_ignores_reports() {
+    let e = Engine::from_config(SimConfig::new(1).with_sanitize(Sanitize::Off));
+    e.san_violation("test-check", "ignored".to_string());
+    assert_eq!(e.stats().san_violations, 0);
+}
+
+/// Panic mode aborts with the check name and scenario label.
+#[test]
+#[should_panic(expected = "simsan[test-check]")]
+fn panic_mode_panics_with_context() {
+    let mut e = Engine::from_config(SimConfig::new(1).with_sanitize(Sanitize::Panic));
+    e.set_sanitize_label("sanity-fixture");
+    e.san_violation("test-check", "deliberate".to_string());
+}
+
+/// The `simsan` cargo feature flips the default from `Off` to `Count`.
+#[test]
+fn sanitize_default_follows_feature() {
+    if cfg!(feature = "simsan") {
+        assert_eq!(Sanitize::default(), Sanitize::Count);
+    } else {
+        assert_eq!(Sanitize::default(), Sanitize::Off);
+    }
+}
