@@ -4,7 +4,7 @@
 
 .PHONY: artifacts e2e test docs bench-smoke rack-smoke rack-demo lifecycle-demo \
         obs-smoke obs-golden trace-demo profile-demo critpath-smoke critpath-golden \
-        lint clippy simsan
+        lint clippy simsan stream-demo stream-smoke stream-golden
 
 # AOT-lower the JAX/Pallas pair kernels to HLO text artifacts the Rust
 # runtime loads at startup. Requires a Python with jax installed; the
@@ -151,6 +151,41 @@ critpath-smoke:
 critpath-golden:
 	cd rust && cargo run --release --quiet -- profile --workers 2 \
 	    --gb 0.0625 --seed 42 --json tests/golden/critpath_seed.json
+
+# Multi-tenant workload-stream demo: a light interactive tenant and a
+# heavy batch tenant offered 10 jobs/min for five simulated minutes,
+# under FIFO and then fair-share admission — compare the light tenant's
+# p99 row between the two tables.
+stream-demo:
+	cd rust && cargo run --release -- stream --arrival 10 --sched fifo
+	cd rust && cargo run --release -- stream --arrival 10 --sched fair
+
+# Stream smoke (CI): run the seed two-tenant stream and diff its
+# byte-stable JSON latency summary against the committed golden (pure
+# sim-time — machine-, thread-, and solver-mode-independent), then
+# re-run under whole-set solving with 4 solver threads and require the
+# same bytes. Self-bootstrapping like obs-smoke: a placeholder golden
+# containing "bootstrap" is replaced by the first real run (commit it).
+stream-smoke:
+	cd rust && cargo run --release --quiet -- stream --arrival 6 --tenants 2 \
+	    --sched fifo --horizon 120 --scale 0.002 --seed 42 \
+	    --out /tmp/stream_seed.json
+	@if grep -q bootstrap rust/tests/golden/stream_seed.json; then \
+	    cp /tmp/stream_seed.json rust/tests/golden/stream_seed.json; \
+	    echo "stream-smoke: bootstrapped the golden from this run; commit it"; \
+	fi
+	cmp /tmp/stream_seed.json rust/tests/golden/stream_seed.json
+	cd rust && cargo run --release --quiet -- stream --arrival 6 --tenants 2 \
+	    --sched fifo --horizon 120 --scale 0.002 --seed 42 \
+	    --solver whole-set --solver-threads 4 --out /tmp/stream_seed_t4.json
+	cmp /tmp/stream_seed.json /tmp/stream_seed_t4.json
+
+# Regenerate the stream golden after an intentional change to the
+# arrival process, scheduler, or summary format.
+stream-golden:
+	cd rust && cargo run --release --quiet -- stream --arrival 6 --tenants 2 \
+	    --sched fifo --horizon 120 --scale 0.002 --seed 42 \
+	    --out tests/golden/stream_seed.json
 
 # Node-lifecycle demo: MTBF-sampled crashes whose nodes re-join 120 s
 # later with the background balancer refilling them — degraded-mode

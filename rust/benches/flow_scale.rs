@@ -1,4 +1,4 @@
-//! Micro-benchmark, two tiers:
+//! Micro-benchmark, three tiers:
 //!
 //! **10k tier** — the incremental component-partitioned solver vs the
 //! whole-set baseline at ≥10k concurrent flows. Scenario: 2000 disjoint
@@ -25,6 +25,18 @@
 //! is set and the host has ≥4 cores, as on CI) gates on a ≥1.5×
 //! wall-clock speedup at 4 threads.
 //!
+//! **stream tier** — the multi-tenant admission path at ~10k jobs: a
+//! seeded arrival schedule (offered load far above capacity, so
+//! generation hits the `max_jobs = 10,000` cap) replayed through the
+//! fair-share `StreamScheduler` over a 64-slot pool, each admitted
+//! job a capped flow on its tenant's link. The tier checks the two
+//! memory-shaped counters the MapReduce-level stream harness cannot
+//! isolate: `peak_live_flows` must stay bounded by the slot pool
+//! (admission, not arrival rate, controls engine memory) while
+//! `peak_heap` carries the full pre-scheduled backlog, and both — plus
+//! the bit-exact completion times — must be identical across solver
+//! modes.
+//!
 //! The run asserts:
 //!
 //! * both solver modes produce bit-identical completion times (the
@@ -37,11 +49,18 @@
 //! Exits nonzero on any failure, so the CI bench-smoke step doubles as
 //! a hot-path regression gate.
 
+use std::cell::RefCell;
+use std::rc::Rc;
 use std::time::Instant;
 
 use amdahl_hadoop::benchkit::{append_history, bench, git_rev, HistoryRecord};
 use amdahl_hadoop::sim::engine::shared;
-use amdahl_hadoop::sim::{Engine, EngineStats, FlowSpec, SimConfig, SolverMode};
+use amdahl_hadoop::sim::{
+    Engine, EngineStats, FlowSpec, ResourceId, SimConfig, SolverMode, UsageClass,
+};
+use amdahl_hadoop::stream::{
+    ArrivalConfig, ArrivalSchedule, JobClass, QueuedJob, SchedPolicy, StreamScheduler, TenantSet,
+};
 
 const GROUPS: usize = 2000;
 const FLOWS_PER_GROUP: usize = 5;
@@ -156,6 +175,123 @@ fn run_scenario_100k(threads: usize) -> (EngineStats, Vec<u64>, f64) {
         "scenario must reach {FLOWS_100K} concurrent flows"
     );
     (s, times, wall)
+}
+
+/// Jobs in the stream tier — the arrival schedule's `max_jobs` cap,
+/// which the offered load is sized to saturate.
+const STREAM_JOBS: usize = 10_000;
+const STREAM_TENANTS: usize = 4;
+/// Admission-pool slots; the hard bound the tier asserts on
+/// `peak_live_flows`.
+const STREAM_SLOTS: usize = 64;
+
+/// Shared state threaded through the stream tier's engine callbacks.
+struct StreamCtx {
+    sched: RefCell<StreamScheduler>,
+    links: Vec<ResourceId>,
+    class: UsageClass,
+    done: RefCell<Vec<u64>>,
+}
+
+/// Admit everything the fair scheduler allows and start one capped flow
+/// per admitted job; re-entered from every arrival and completion.
+fn stream_pump(e: &mut Engine, ctx: &Rc<StreamCtx>) {
+    let admitted = ctx.sched.borrow_mut().admit();
+    for q in admitted {
+        // Service shape varies deterministically with the sequence
+        // number; caps sum far below link capacity, so rates never move
+        // after a flow starts (zero re-pushes, exact predictions).
+        let cap = 2.0 + (q.seq % 5) as f64 * 0.5;
+        let total = cap * (2.0 + (q.seq % 9) as f64 * 0.5);
+        let link = ctx.links[q.tenant];
+        let ctx2 = ctx.clone();
+        e.start_flow(
+            FlowSpec::new(total, "job").demand(link, 1.0, ctx.class).cap(cap),
+            move |e| {
+                ctx2.done.borrow_mut().push(e.now().to_bits());
+                ctx2.sched.borrow_mut().complete(q.tenant, q.demand);
+                stream_pump(e, &ctx2);
+            },
+        );
+    }
+}
+
+/// The ~10k-job stream tier: seeded arrivals → fair-share admission →
+/// one capped flow per admitted job. Returns the engine counters and
+/// the bit-exact completion-time vector.
+fn run_scenario_stream(mode: SolverMode) -> (EngineStats, Vec<u64>) {
+    let mut e = Engine::with_mode(13, mode);
+    let class = e.class("x");
+    let links: Vec<ResourceId> = (0..STREAM_TENANTS)
+        .map(|t| e.add_resource(&format!("tenant{t}"), 1000.0))
+        .collect();
+
+    // Offered load far above what the 64-slot pool drains, so
+    // generation hits the max_jobs cap well inside the horizon and the
+    // tier always runs exactly STREAM_JOBS jobs.
+    let schedule = ArrivalSchedule::generate(
+        &ArrivalConfig {
+            rate_per_min: 4000.0,
+            horizon_s: 600.0,
+            max_jobs: STREAM_JOBS,
+            ..Default::default()
+        },
+        &TenantSet::generate(STREAM_TENANTS),
+        0x57EA,
+    );
+    assert_eq!(
+        schedule.arrivals.len(),
+        STREAM_JOBS,
+        "offered load must saturate the max_jobs cap"
+    );
+
+    let ctx = Rc::new(StreamCtx {
+        sched: RefCell::new(StreamScheduler::new(
+            SchedPolicy::Fair,
+            STREAM_SLOTS,
+            vec![STREAM_SLOTS / STREAM_TENANTS; STREAM_TENANTS],
+        )),
+        links,
+        class,
+        done: RefCell::new(Vec::with_capacity(STREAM_JOBS)),
+    });
+    for a in &schedule.arrivals {
+        // Slot demand: the light tenant (index 0) runs 1-slot queries;
+        // heavy tenants take 2 (search) or 3 (statistics) slots.
+        let demand = if a.tenant == 0 {
+            1
+        } else if a.class == JobClass::Search {
+            2
+        } else {
+            3
+        };
+        let (seq, tenant, at) = (a.seq, a.tenant, a.at);
+        let ctx2 = ctx.clone();
+        e.after(at, move |e| {
+            ctx2.sched.borrow_mut().enqueue(QueuedJob { seq, tenant, demand, enqueued_at: at });
+            stream_pump(e, &ctx2);
+        });
+    }
+    e.run();
+
+    let times = ctx.done.borrow().clone();
+    assert_eq!(times.len(), STREAM_JOBS, "every arrived job must complete");
+    let sched = ctx.sched.borrow();
+    assert_eq!(sched.pending_total(), 0, "the admission queue must drain");
+    assert_eq!(sched.free_slots(), STREAM_SLOTS, "every slot must return to the pool");
+    let s = e.stats();
+    assert!(
+        s.peak_live_flows <= STREAM_SLOTS,
+        "admission must bound live flows to the slot pool ({} > {STREAM_SLOTS})",
+        s.peak_live_flows
+    );
+    assert!(
+        s.peak_heap >= STREAM_JOBS,
+        "the pre-scheduled arrival timers must show in the heap high-water mark \
+         ({} < {STREAM_JOBS})",
+        s.peak_heap
+    );
+    (s, times)
 }
 
 /// Zero the counters that legitimately vary with the configured thread
@@ -279,10 +415,36 @@ fn main() {
 
     check_recorded_baseline(&si, &s100);
 
+    // ---- ~10k-job multi-tenant stream tier ----
+    println!();
+    let stream = shared((EngineStats::default(), Vec::new()));
+    let st2 = stream.clone();
+    let mean_stream = bench("flow_scale_stream/10k_jobs_fair", 0, 1, move || {
+        *st2.borrow_mut() = run_scenario_stream(SolverMode::Incremental);
+    });
+    let (ss, ts) = stream.borrow().clone();
+    let (ssw, tsw) = run_scenario_stream(SolverMode::WholeSet);
+    assert_eq!(ts, tsw, "stream tier completion times diverged between solver modes");
+    assert_eq!(
+        (ss.peak_live_flows, ss.peak_heap),
+        (ssw.peak_live_flows, ssw.peak_heap),
+        "stream tier memory high-water marks diverged between solver modes"
+    );
+    println!(
+        "flow_scale_stream/10k_jobs_fair: {} jobs, peak live flows {} \
+         (pool {STREAM_SLOTS} slots), peak heap {}, {} flow-solves",
+        ts.len(),
+        ss.peak_live_flows,
+        ss.peak_heap,
+        ss.flows_resolved
+    );
+
     // Append the per-run perf trail (`BENCH_history.jsonl`, or
     // `$BENCH_HISTORY`): one line per tier with the commit it ran on and
-    // the engine's own counters, so the solver's wall-time trajectory is
-    // plottable across PRs without re-running old revisions.
+    // the engine's own counters — including the memory high-water marks
+    // `peak_live_flows` / `peak_heap` — so the solver's wall-time and
+    // memory trajectories are plottable across PRs without re-running
+    // old revisions.
     let rev = git_rev();
     let mut history = vec![HistoryRecord {
         name: "flow_scale_10k/incremental".into(),
@@ -292,6 +454,8 @@ fn main() {
         parallel_solves: si.parallel_solves,
         events_processed: si.events_processed,
         flows_resolved: si.flows_resolved,
+        peak_live_flows: si.peak_live_flows as u64,
+        peak_heap: si.peak_heap as u64,
     }];
     for (threads, s, _, wall) in &rows {
         history.push(HistoryRecord {
@@ -302,8 +466,21 @@ fn main() {
             parallel_solves: s.parallel_solves,
             events_processed: s.events_processed,
             flows_resolved: s.flows_resolved,
+            peak_live_flows: s.peak_live_flows as u64,
+            peak_heap: s.peak_heap as u64,
         });
     }
+    history.push(HistoryRecord {
+        name: "flow_scale_stream/10k_jobs_fair".into(),
+        git_rev: rev,
+        mean_s: mean_stream,
+        solve_ns: ss.solve_ns,
+        parallel_solves: ss.parallel_solves,
+        events_processed: ss.events_processed,
+        flows_resolved: ss.flows_resolved,
+        peak_live_flows: ss.peak_live_flows as u64,
+        peak_heap: ss.peak_heap as u64,
+    });
     append_history(&history);
 }
 

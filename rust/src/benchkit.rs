@@ -133,6 +133,10 @@ pub struct HistoryRecord {
     pub events_processed: u64,
     /// Total flow-rate computations over the run.
     pub flows_resolved: u64,
+    /// High-water mark of concurrently live flows.
+    pub peak_live_flows: u64,
+    /// High-water mark of the event-heap size (heap churn proxy).
+    pub peak_heap: u64,
 }
 
 impl HistoryRecord {
@@ -142,7 +146,7 @@ impl HistoryRecord {
         format!(
             "{{\"bench\": \"{}\", \"git_rev\": \"{}\", \"mean_s\": {:.9}, \
              \"solve_ns\": {}, \"parallel_solves\": {}, \"events_processed\": {}, \
-             \"flows_resolved\": {}}}",
+             \"flows_resolved\": {}, \"peak_live_flows\": {}, \"peak_heap\": {}}}",
             esc_json(&self.name),
             esc_json(&self.git_rev),
             self.mean_s,
@@ -150,6 +154,8 @@ impl HistoryRecord {
             self.parallel_solves,
             self.events_processed,
             self.flows_resolved,
+            self.peak_live_flows,
+            self.peak_heap,
         )
     }
 }
@@ -267,11 +273,15 @@ mod tests {
             parallel_solves: 3,
             events_processed: 1000,
             flows_resolved: 10,
+            peak_live_flows: 64,
+            peak_heap: 10_120,
         };
         let j = h.to_json_line();
         assert!(j.starts_with('{') && j.ends_with('}'));
         assert!(j.contains("\"git_rev\": \"abc1234\""));
         assert!(j.contains("\"solve_ns\": 42"));
+        assert!(j.contains("\"peak_live_flows\": 64"));
+        assert!(j.contains("\"peak_heap\": 10120"));
         assert!(j.contains("flow\\\"scale"), "quote must be backslash-escaped: {j}");
     }
 

@@ -72,6 +72,12 @@
 //!   core-count frontier analysis generalizing the paper's §5
 //!   four-core conclusion (`amdahl-hadoop sweep`).
 //!
+//! * [`stream`] — multi-tenant workload streams: seeded Poisson job
+//!   arrivals with a diurnal envelope (dedicated RNG stream keyed by
+//!   the scenario's stable id), FIFO vs fair-share admission with
+//!   per-tenant slot quotas and preemption-free lending, and per-job
+//!   completion-latency percentiles feeding the tenants × offered-load
+//!   frontier and saturation-knee analysis (`amdahl-hadoop stream`).
 //! * [`analysis`] — **simlint**, the determinism static-analysis pass
 //!   that enforces the contract's mechanically-checkable clauses over
 //!   this crate's own sources (`amdahl-hadoop lint`); its runtime twin
@@ -101,6 +107,7 @@ pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod sim;
+pub mod stream;
 pub mod sweep;
 pub mod zones;
 

@@ -41,6 +41,13 @@ use crate::sim::Engine;
 /// Seconds between speculative-execution polls (the 0.20 JobTracker
 /// reacted on TaskTracker heartbeats at this order of magnitude).
 pub const SPECULATION_POLL_S: f64 = 3.0;
+/// Per-job TaskTracker failure threshold (`mapred.max.tracker.failures`,
+/// Hadoop default 4): a tracker that has crashed this many times *within
+/// one job* is refused re-registration for that job — but only for that
+/// job. Future jobs start a fresh counter, so under a long stream a
+/// single flaky node degrades the jobs it actually failed instead of
+/// poisoning every subsequent submission.
+pub const MAX_TRACKER_FAILURES: usize = 4;
 /// A sole attempt running longer than this multiple of the mean
 /// completed-map duration is a straggler candidate (the 0.20
 /// progress-rate threshold, expressed in completion-time terms).
@@ -173,6 +180,10 @@ struct JobState {
     // natively, making the locality tiers' tie-breaks order-independent.
     free_map_slots: BTreeMap<NodeId, usize>,
     free_reduce_slots: BTreeMap<NodeId, usize>,
+    /// Crashes each tracker inflicted on *this job*; at
+    /// [`MAX_TRACKER_FAILURES`] the tracker is refused re-registration
+    /// for the rest of the job (Hadoop's per-job blacklist).
+    tracker_failures: BTreeMap<NodeId, usize>,
     pending_reduces: Vec<usize>,
     running_reduces: usize,
     reduces_done: usize,
@@ -272,6 +283,7 @@ pub fn run_job(
         rack_of,
         free_map_slots,
         free_reduce_slots,
+        tracker_failures: BTreeMap::new(),
         pending_reduces: (0..n_reducers).collect(),
         running_reduces: 0,
         reduces_done: 0,
@@ -667,9 +679,12 @@ fn on_node_crash(engine: &mut Engine, state: &Rc<RefCell<JobState>>, dead: NodeI
             return false;
         }
         world = s.world.clone();
-        // TaskTracker blacklist: the dead node's slots vanish.
+        // TaskTracker blacklist: the dead node's slots vanish, and the
+        // per-job failure counter advances toward the re-registration
+        // threshold.
         s.free_map_slots.remove(&dead);
         s.free_reduce_slots.remove(&dead);
+        *s.tracker_failures.entry(dead).or_insert(0) += 1;
         // Kill map attempts running on the dead node.
         let mut i = 0;
         while i < s.map_attempts.len() {
@@ -760,8 +775,11 @@ fn on_node_crash(engine: &mut Engine, state: &Rc<RefCell<JobState>>, dead: NodeI
 }
 
 /// Re-join reaction: the recommissioned node's TaskTracker re-registers
-/// with the JobTracker and its slots come back (un-blacklisting). Slot
-/// counts discount attempts still running there — relevant when a
+/// with the JobTracker and its slots come back (un-blacklisting) —
+/// unless the tracker has already failed this job
+/// [`MAX_TRACKER_FAILURES`] times, in which case the job keeps it
+/// blacklisted (the counter is per job, so later jobs start clean).
+/// Slot counts discount attempts still running there — relevant when a
 /// cancelled decommission re-admits a tracker whose attempts never
 /// stopped. Returns false (deregister) once the job has completed.
 fn on_node_rejoin(engine: &mut Engine, state: &Rc<RefCell<JobState>>, node: NodeId) -> bool {
@@ -772,6 +790,16 @@ fn on_node_rejoin(engine: &mut Engine, state: &Rc<RefCell<JobState>>, node: Node
         }
         if s.free_map_slots.contains_key(&node) {
             return true; // already registered (e.g. cancelled drain)
+        }
+        if s.tracker_failures.get(&node).copied().unwrap_or(0) >= MAX_TRACKER_FAILURES {
+            if engine.trace_enabled() {
+                engine.trace_instant(
+                    "faults",
+                    format!("tracker n{} refused: {MAX_TRACKER_FAILURES} failures this job", node.0),
+                    node.0 as u32,
+                );
+            }
+            return true; // stays blacklisted for this job only
         }
         let running_maps = s.map_attempts.iter().filter(|a| a.node == node).count();
         let running_reduces = s.reduce_attempts.iter().filter(|a| a.node == node).count();
@@ -1106,6 +1134,58 @@ mod tests {
         e.run();
         let res = result.borrow().clone().unwrap();
         assert_eq!(res.map_rack_locality, 0.0);
+    }
+
+    /// Regression: a flaky tracker must be blacklisted per job with a
+    /// failure threshold, not forever. Within one job, crash→re-join
+    /// cycles re-register the tracker until [`MAX_TRACKER_FAILURES`] is
+    /// reached, after which *this* job refuses it — but a subsequent job
+    /// starts a fresh counter and uses the node again, so one flaky node
+    /// no longer poisons every later submission in a long stream.
+    #[test]
+    fn flaky_tracker_blacklist_is_per_job_with_threshold() {
+        let (mut e, w) = setup(21);
+        place_input(&mut e, &w, 512.0 * MIB);
+        w.borrow_mut().faults.arm(9, false);
+        let files: Vec<String> = (0..8).map(|i| format!("in/data/part{i}")).collect();
+        let mut spec = basic_job(&w, HadoopConf::default(), 2);
+        spec.input_files = files.clone();
+        let result = shared(None);
+        let r2 = result.clone();
+        run_job(&mut e, &w, spec, move |_, res| *r2.borrow_mut() = Some(res));
+        // Flaky node 3: repeated crash→re-join cycles while the job is
+        // live. Re-registration succeeds until the threshold, then the
+        // job keeps the tracker blacklisted.
+        for _ in 0..MAX_TRACKER_FAILURES + 2 {
+            crate::faults::dispatch_crash(&mut e, &w, NodeId(3));
+            crate::faults::dispatch_rejoin(&mut e, &w, NodeId(3));
+        }
+        assert_eq!(
+            w.borrow().faults.stats.trackers_rejoined,
+            MAX_TRACKER_FAILURES - 1,
+            "re-registration must stop at the per-job failure threshold"
+        );
+        e.run();
+        assert!(result.borrow().is_some(), "job survives the flaky tracker");
+
+        // A new job on the same world starts a fresh counter: node 3
+        // re-registers again after a single crash.
+        let mut spec2 = basic_job(&w, HadoopConf::default(), 2);
+        spec2.input_files = files;
+        spec2.output_prefix = "out2".into();
+        let result2 = shared(None);
+        let r2 = result2.clone();
+        run_job(&mut e, &w, spec2, move |_, res| *r2.borrow_mut() = Some(res));
+        let rejoined_before = w.borrow().faults.stats.trackers_rejoined;
+        crate::faults::dispatch_crash(&mut e, &w, NodeId(3));
+        crate::faults::dispatch_rejoin(&mut e, &w, NodeId(3));
+        assert_eq!(
+            w.borrow().faults.stats.trackers_rejoined,
+            rejoined_before + 1,
+            "a fresh job must accept the tracker again"
+        );
+        e.run();
+        assert!(result2.borrow().is_some());
     }
 
     #[test]

@@ -761,6 +761,85 @@ pub fn render_churn(rows: &[crate::sweep::ChurnRow]) -> String {
     s
 }
 
+/// Latency percentile cells shared by the stream renders ("-" when the
+/// slice recorded no completions).
+fn stream_lat_cells(l: &Option<crate::obs::LatencySummary>) -> String {
+    match l {
+        Some(l) => {
+            format!("{:>10.2} {:>10.2} {:>10.2} {:>10.2}", l.p50_s, l.p95_s, l.p99_s, l.mean_s)
+        }
+        None => format!("{:>10} {:>10} {:>10} {:>10}", "-", "-", "-", "-"),
+    }
+}
+
+/// Render one multi-tenant stream run (`amdahl-hadoop stream`): the
+/// offered-load vs goodput headline plus per-tenant completion-latency
+/// percentiles.
+pub fn render_stream_outcome(out: &crate::stream::StreamOutcome) -> String {
+    let mut s = format!(
+        "multi-tenant stream: {} submitted, {} completed, makespan {:.1} sim-s\n\
+         offered {:.2} jobs/min, goodput {:.2} jobs/min\n\
+         tenant      jobs   done      p50 s      p95 s      p99 s     mean s\n",
+        out.submitted,
+        out.completed,
+        out.makespan_s,
+        out.offered_jobs_per_min,
+        out.goodput_jobs_per_min,
+    );
+    for t in &out.tenants {
+        s.push_str(&format!(
+            "{:<10} {:>5}  {:>5} {}\n",
+            t.name,
+            t.submitted,
+            t.completed,
+            stream_lat_cells(&t.latency),
+        ));
+    }
+    s.push_str(&format!(
+        "{:<10} {:>5}  {:>5} {}\n",
+        "all",
+        out.submitted,
+        out.completed,
+        stream_lat_cells(&out.latency),
+    ));
+    s
+}
+
+/// Render the tenants × offered-load stream frontier: one block per
+/// (cluster family, tenant count, admission policy) group, one row per
+/// swept arrival rate, closing with the group's saturation knee — the
+/// largest offered load whose goodput keeps up
+/// ([`crate::sweep::STREAM_KNEE_RATIO`]).
+pub fn render_stream(fronts: &[crate::sweep::StreamFrontier]) -> String {
+    if fronts.is_empty() {
+        return String::from("stream frontier: no stream scenarios in this sweep\n");
+    }
+    let mut s = String::from("tenants x offered-load stream frontier\n");
+    for f in fronts {
+        s.push_str(&format!(
+            "[{} family, {} tenants, {} admission]\n\
+             arrival/min    offered    goodput      p50 s      p95 s      p99 s     mean s\n",
+            f.family, f.tenants, f.sched
+        ));
+        for r in &f.rows {
+            s.push_str(&format!(
+                "{:>11.1}   {:>8.2}   {:>8.2} {}\n",
+                r.arrival_per_min,
+                r.offered_jobs_per_min,
+                r.goodput_jobs_per_min,
+                stream_lat_cells(&r.latency),
+            ));
+        }
+        s.push_str(&format!(
+            "saturation knee: {}\n",
+            f.knee_offered
+                .map(|k| format!("{k:.2} jobs/min offered"))
+                .unwrap_or_else(|| "below the smallest swept load".into())
+        ));
+    }
+    s
+}
+
 /// Render the per-family CPU/energy breakdown — the paper's §4 "where
 /// do the cycles go" decomposition: busy CPU core-seconds (and their
 /// marginal joules) attributed to the protocol families of

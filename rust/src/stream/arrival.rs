@@ -1,0 +1,209 @@
+//! Seeded Poisson job arrivals with a diurnal rate envelope.
+//!
+//! The arrival process is drawn on a **dedicated RNG stream** keyed by
+//! the scenario's stable id, mirroring the [`crate::faults::fault_stream_seed`]
+//! discipline: the same `(base seed, scenario id)` pair always produces
+//! the same arrival sequence regardless of sweep insertion order, thread
+//! count, or which other axes are active.
+//!
+//! Non-homogeneous Poisson sampling uses **thinning**: exponential gaps
+//! at the peak rate `λ_max = rate × (1 + amplitude)`, each candidate
+//! accepted with probability `λ(t) / λ_max`. The diurnal envelope
+//! `λ(t)` is a piecewise-linear triangle wave — pure arithmetic, no
+//! `sin()` — so every byte of the schedule is identical across libm
+//! implementations and platforms.
+
+use super::tenants::{JobClass, TenantSet};
+use crate::sim::Rng;
+
+/// XOR'd into the base seed before deriving the arrival stream, so the
+/// arrival RNG can never collide with the engine stream (raw seed) or
+/// the fault stream (`0xFA17…`). Mnemonic: "57EA(m)".
+pub const STREAM_SEED_XOR: u64 = 0x57EA_57EA_57EA_57EA;
+
+/// Derive the arrival-stream seed for one scenario, keyed by its stable
+/// id (same discipline as [`crate::faults::fault_stream_seed`]).
+pub fn arrival_stream_seed(scenario_seed: u64, scenario_id: &str) -> u64 {
+    crate::sweep::grid::derive_seed(scenario_seed ^ STREAM_SEED_XOR, scenario_id)
+}
+
+/// Shape of the offered-load process.
+#[derive(Debug, Clone)]
+pub struct ArrivalConfig {
+    /// Mean offered load, jobs per minute (time-averaged over one
+    /// diurnal period).
+    pub rate_per_min: f64,
+    /// Submission window, sim seconds. Arrivals stop here; the sim runs
+    /// on until every admitted job completes.
+    pub horizon_s: f64,
+    /// Diurnal swing as a fraction of the mean rate: `λ(t)` ranges over
+    /// `rate × [1 − a, 1 + a]`. 0 = homogeneous Poisson.
+    pub diurnal_amplitude: f64,
+    /// Period of the diurnal envelope, sim seconds (a compressed "day").
+    pub diurnal_period_s: f64,
+    /// Hard cap on generated arrivals (guards runaway rate × horizon
+    /// combinations; the bench stream tier leans on this).
+    pub max_jobs: usize,
+}
+
+impl Default for ArrivalConfig {
+    /// A 5-minute window at 6 jobs/min with a ±50% swing over a
+    /// 10-minute "day" — busy enough to queue, small enough for CI.
+    fn default() -> Self {
+        ArrivalConfig {
+            rate_per_min: 6.0,
+            horizon_s: 300.0,
+            diurnal_amplitude: 0.5,
+            diurnal_period_s: 600.0,
+            max_jobs: 10_000,
+        }
+    }
+}
+
+impl ArrivalConfig {
+    /// Instantaneous rate multiplier at sim time `t`: a triangle wave in
+    /// `[1 − a, 1 + a]` with trough at phase 0 and peak at phase ½.
+    pub fn envelope(&self, t: f64) -> f64 {
+        if self.diurnal_amplitude == 0.0 || self.diurnal_period_s <= 0.0 {
+            return 1.0;
+        }
+        let phase = (t / self.diurnal_period_s).fract();
+        let tri = if phase < 0.5 { 4.0 * phase - 1.0 } else { 3.0 - 4.0 * phase };
+        1.0 + self.diurnal_amplitude * tri
+    }
+}
+
+/// One job submission: when, by whom, and which job class.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Arrival {
+    /// Submission time, sim seconds from stream start.
+    pub at: f64,
+    /// Submitting tenant index into the [`TenantSet`].
+    pub tenant: usize,
+    /// Job class the tenant drew for this submission.
+    pub class: JobClass,
+    /// Arrival sequence number (0-based, schedule order).
+    pub seq: usize,
+}
+
+/// The fully pre-expanded arrival schedule — generated up front (like
+/// [`crate::faults::FaultSchedule`]) so the event-loop phase never
+/// touches the arrival RNG.
+#[derive(Debug, Clone, Default)]
+pub struct ArrivalSchedule {
+    /// Arrivals in non-decreasing time order.
+    pub arrivals: Vec<Arrival>,
+}
+
+impl ArrivalSchedule {
+    /// Sample the whole schedule from `(config, tenants, stream seed)`.
+    /// Deterministic: the same triple always yields the same arrivals.
+    pub fn generate(cfg: &ArrivalConfig, tenants: &TenantSet, stream_seed: u64) -> Self {
+        let mut arrivals = Vec::new();
+        if cfg.rate_per_min <= 0.0 || cfg.horizon_s <= 0.0 || cfg.max_jobs == 0 {
+            return ArrivalSchedule { arrivals };
+        }
+        let mut gap_rng = Rng::new(stream_seed);
+        // Tenant/class draws ride a forked stream so adding a thinning
+        // rejection never shifts which tenant an accepted job lands on.
+        let mut mix_rng = gap_rng.fork(0x7E4A47);
+        let peak_per_s = cfg.rate_per_min * (1.0 + cfg.diurnal_amplitude) / 60.0;
+        let mut t = 0.0;
+        while arrivals.len() < cfg.max_jobs {
+            t += gap_rng.exp(1.0 / peak_per_s);
+            if t >= cfg.horizon_s {
+                break;
+            }
+            // Thinning: accept with probability λ(t) / λ_max.
+            let accept = cfg.envelope(t) / (1.0 + cfg.diurnal_amplitude);
+            if gap_rng.f64() < accept {
+                let tenant = tenants.draw_tenant(&mut mix_rng);
+                let class = tenants.spec(tenant).draw_class(&mut mix_rng);
+                let seq = arrivals.len();
+                arrivals.push(Arrival { at: t, tenant, class, seq });
+            }
+        }
+        ArrivalSchedule { arrivals }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_tenants() -> TenantSet {
+        TenantSet::generate(2)
+    }
+
+    #[test]
+    fn schedule_is_reproducible_from_seed_and_id() {
+        let cfg = ArrivalConfig::default();
+        let seed = arrival_stream_seed(42, "amdahl-n9-c2-direct-nolzo-search");
+        let a = ArrivalSchedule::generate(&cfg, &two_tenants(), seed);
+        let b = ArrivalSchedule::generate(&cfg, &two_tenants(), seed);
+        assert!(!a.arrivals.is_empty());
+        assert_eq!(a.arrivals, b.arrivals);
+    }
+
+    #[test]
+    fn different_ids_decorrelate_streams() {
+        let cfg = ArrivalConfig::default();
+        let a = ArrivalSchedule::generate(&cfg, &two_tenants(), arrival_stream_seed(42, "id-a"));
+        let b = ArrivalSchedule::generate(&cfg, &two_tenants(), arrival_stream_seed(42, "id-b"));
+        assert_ne!(a.arrivals, b.arrivals);
+    }
+
+    #[test]
+    fn arrival_stream_is_distinct_from_fault_stream() {
+        let id = "amdahl-n9-c2-direct-nolzo-search";
+        assert_ne!(arrival_stream_seed(42, id), crate::faults::fault_stream_seed(42, id));
+    }
+
+    #[test]
+    fn arrivals_ordered_and_within_horizon() {
+        let cfg = ArrivalConfig { rate_per_min: 30.0, ..Default::default() };
+        let s = ArrivalSchedule::generate(&cfg, &two_tenants(), 7);
+        assert!(s.arrivals.len() > 50);
+        for w in s.arrivals.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+        for (i, a) in s.arrivals.iter().enumerate() {
+            assert_eq!(a.seq, i);
+            assert!(a.at >= 0.0 && a.at < cfg.horizon_s);
+            assert!(a.tenant < 2);
+        }
+    }
+
+    #[test]
+    fn envelope_is_triangle_in_band() {
+        let cfg = ArrivalConfig { diurnal_amplitude: 0.5, diurnal_period_s: 100.0, ..Default::default() };
+        assert!((cfg.envelope(0.0) - 0.5).abs() < 1e-12, "trough at phase 0");
+        assert!((cfg.envelope(50.0) - 1.5).abs() < 1e-12, "peak at phase 1/2");
+        assert!((cfg.envelope(25.0) - 1.0).abs() < 1e-12, "mean at phase 1/4");
+        assert!((cfg.envelope(100.0) - 0.5).abs() < 1e-12, "periodic");
+        let flat = ArrivalConfig { diurnal_amplitude: 0.0, ..Default::default() };
+        assert_eq!(flat.envelope(123.0), 1.0);
+    }
+
+    #[test]
+    fn mean_rate_close_to_nominal() {
+        // Long homogeneous window: empirical rate within 10% of nominal.
+        let cfg = ArrivalConfig {
+            rate_per_min: 60.0,
+            horizon_s: 3600.0,
+            diurnal_amplitude: 0.5,
+            diurnal_period_s: 600.0,
+            max_jobs: 100_000,
+        };
+        let s = ArrivalSchedule::generate(&cfg, &two_tenants(), 99);
+        let got = s.arrivals.len() as f64 / (cfg.horizon_s / 60.0);
+        assert!((got - 60.0).abs() < 6.0, "empirical rate {got} vs nominal 60");
+    }
+
+    #[test]
+    fn max_jobs_caps_generation() {
+        let cfg = ArrivalConfig { rate_per_min: 600.0, max_jobs: 17, ..Default::default() };
+        let s = ArrivalSchedule::generate(&cfg, &two_tenants(), 5);
+        assert_eq!(s.arrivals.len(), 17);
+    }
+}

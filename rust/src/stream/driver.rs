@@ -1,0 +1,457 @@
+//! The stream driver: pre-generated arrivals → admission scheduling →
+//! concurrent MapReduce jobs on one engine → per-job latency capture.
+//!
+//! Shape mirrors [`crate::zones::run_app`]: build the engine, ingest
+//! the shared catalog once, optionally install faults, then replay the
+//! pre-expanded [`ArrivalSchedule`] as engine timers. Each arrival
+//! enqueues into the [`StreamScheduler`]; admitted jobs run through the
+//! ordinary [`crate::mapreduce::run_job`] JobTracker (so streams
+//! exercise multi-job event interleaving in the one event loop), and
+//! each completion records queue-wait + run latency into driver-owned
+//! [`Histogram`]s plus the engine metrics registry when observability
+//! is armed.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use super::arrival::{ArrivalConfig, ArrivalSchedule, STREAM_SEED_XOR};
+use super::scheduler::{QueuedJob, SchedPolicy, StreamScheduler};
+use super::tenants::{JobClass, TenantSet};
+use crate::conf::{ClusterPreset, HadoopConf};
+use crate::energy::EnergyReport;
+use crate::hdfs::WorldHandle;
+use crate::hw::cpu::CpuSpec;
+use crate::hw::MIB;
+use crate::mapreduce::{run_job, JobSpec};
+use crate::obs::{Histogram, LatencySummary};
+use crate::sim::Engine;
+use crate::zones::{apps, ZonesConfig};
+
+/// Everything one stream run needs beyond the cluster preset and
+/// Hadoop configuration.
+#[derive(Debug, Clone)]
+pub struct StreamConfig {
+    /// Base RNG seed (engine + catalog; arrival stream derives from it
+    /// unless [`StreamConfig::stream_seed`] pins one).
+    pub seed: u64,
+    /// Offered-load process.
+    pub arrival: ArrivalConfig,
+    /// Tenant count (population shape per [`TenantSet::generate`]).
+    pub tenants: usize,
+    /// Admission policy.
+    pub sched: SchedPolicy,
+    /// Catalog scale of the heavy (full-catalog) job class, as a
+    /// fraction of the paper's 25 GB dataset.
+    pub scale: f64,
+    /// Arrival RNG stream seed; 0 derives `seed ^` [`STREAM_SEED_XOR`].
+    /// Sweeps pass [`super::arrival_stream_seed`] of the scenario's
+    /// stable id so arrivals never depend on insertion order.
+    pub stream_seed: u64,
+    /// Rate-solver mode for the engine.
+    pub solver: crate::sim::SolverMode,
+    /// Engine solver-thread budget (wall-clock only, never bytes).
+    pub solver_threads: usize,
+    /// Fault-injection plan (empty = nothing installed).
+    pub faults: crate::faults::InjectionPlan,
+    /// Fault RNG stream seed; 0 derives one from `seed`.
+    pub fault_seed: u64,
+    /// Observability switches.
+    pub obs: crate::sim::ObsSpec,
+    /// Runtime invariant sanitizer mode.
+    pub sanitize: crate::sim::Sanitize,
+}
+
+impl Default for StreamConfig {
+    /// Seed-blade defaults: two tenants, FIFO, default arrival process,
+    /// heavy class at 0.4% of the paper's catalog.
+    fn default() -> Self {
+        StreamConfig {
+            seed: 42,
+            arrival: ArrivalConfig::default(),
+            tenants: 2,
+            sched: SchedPolicy::Fifo,
+            scale: 0.004,
+            stream_seed: 0,
+            solver: crate::sim::SolverMode::Incremental,
+            solver_threads: 1,
+            faults: crate::faults::InjectionPlan::empty(),
+            fault_seed: 0,
+            obs: crate::sim::ObsSpec::default(),
+            sanitize: crate::sim::Sanitize::default(),
+        }
+    }
+}
+
+/// Per-tenant stream results.
+#[derive(Debug, Clone)]
+pub struct TenantOutcome {
+    /// Tenant display name (`t0`, `t1`, …).
+    pub name: String,
+    /// Jobs this tenant submitted.
+    pub submitted: usize,
+    /// Jobs that completed.
+    pub completed: usize,
+    /// Completion-latency percentiles (submission → job done);
+    /// `None` when the tenant submitted nothing.
+    pub latency: Option<LatencySummary>,
+}
+
+/// Everything a stream run produces.
+#[derive(Debug, Clone)]
+pub struct StreamOutcome {
+    /// Jobs submitted inside the arrival horizon.
+    pub submitted: usize,
+    /// Jobs that ran to completion (the driver runs the sim until the
+    /// queue drains, so this equals `submitted`).
+    pub completed: usize,
+    /// Offered load: submissions per minute of arrival horizon.
+    pub offered_jobs_per_min: f64,
+    /// Goodput: completions per minute of actual makespan. Tracks the
+    /// offered load while the cluster keeps up and collapses below it
+    /// past the saturation knee.
+    pub goodput_jobs_per_min: f64,
+    /// Sim time when the last job finished.
+    pub makespan_s: f64,
+    /// Aggregate completion-latency percentiles across all tenants.
+    pub latency: Option<LatencySummary>,
+    /// Per-tenant breakdown, tenant index order.
+    pub tenants: Vec<TenantOutcome>,
+    /// Energy accounting over the whole stream.
+    pub energy: EnergyReport,
+    /// Per-resource usage (sweep/bottleneck analysis).
+    pub usage: Vec<crate::sim::UsageSnapshot>,
+    /// Engine perf counters.
+    pub stats: crate::sim::EngineStats,
+    /// Fault-injection outcome (all zeros when inactive).
+    pub faults: crate::faults::FaultStats,
+    /// Observability exports; `None` when obs was off.
+    pub obs: Option<crate::obs::ObsReport>,
+}
+
+/// One admittable job shape: which Zones job to build and how many
+/// slots it occupies while running.
+struct ClassTemplate {
+    class: JobClass,
+    zcfg: ZonesConfig,
+    files: Vec<String>,
+    n_reducers: usize,
+    demand: usize,
+}
+
+/// Shared driver state threaded through the engine callbacks.
+struct Ctx {
+    world: WorldHandle,
+    cpu: CpuSpec,
+    conf: HadoopConf,
+    templates: Vec<ClassTemplate>,
+    st: RefCell<St>,
+}
+
+struct St {
+    sched: StreamScheduler,
+    /// Per arrival seq: (tenant, template index, arrival time).
+    jobs: Vec<(usize, usize, f64)>,
+    agg: Histogram,
+    per_tenant: Vec<TenantStats>,
+    completed: usize,
+}
+
+#[derive(Default)]
+struct TenantStats {
+    submitted: usize,
+    completed: usize,
+    latency: Histogram,
+}
+
+/// Template index for one (tenant, class) submission: the light tenant
+/// always runs the small search; heavy tenants run full-catalog search
+/// or statistics.
+fn template_for(tenant_scale_mult: f64, class: JobClass) -> usize {
+    if tenant_scale_mult < 1.0 {
+        0
+    } else if class == JobClass::Search {
+        1
+    } else {
+        2
+    }
+}
+
+/// Admit everything the policy allows and launch each admitted job on
+/// the JobTracker; re-entered from every arrival and completion.
+fn pump(e: &mut Engine, ctx: &Rc<Ctx>) {
+    let admitted = ctx.st.borrow_mut().sched.admit();
+    for q in admitted {
+        launch(e, ctx, q);
+    }
+}
+
+fn launch(e: &mut Engine, ctx: &Rc<Ctx>, q: QueuedJob) {
+    let (tenant, tpl_idx, at) = ctx.st.borrow().jobs[q.seq];
+    let tpl = &ctx.templates[tpl_idx];
+    let (mut spec, _reduce): (JobSpec, _) = match tpl.class {
+        JobClass::Search => apps::neighbor_search_job(
+            &tpl.zcfg,
+            &ctx.cpu,
+            &ctx.conf,
+            tpl.files.clone(),
+            tpl.n_reducers,
+        ),
+        JobClass::Stat => apps::neighbor_stat_job(
+            &tpl.zcfg,
+            &ctx.cpu,
+            &ctx.conf,
+            tpl.files.clone(),
+            tpl.n_reducers,
+        ),
+    };
+    // Per-job identity: unique name + output namespace so concurrent
+    // jobs never collide in the NameNode.
+    spec.name = format!("stream-t{}-j{:04}-{}", tenant, q.seq, tpl.class.key());
+    spec.output_prefix = format!("stream/t{}/j{:04}", tenant, q.seq);
+    let demand = q.demand;
+    let ctx2 = ctx.clone();
+    run_job(e, &ctx.world, spec, move |e, _res| {
+        let latency = e.now() - at;
+        {
+            let mut s = ctx2.st.borrow_mut();
+            s.agg.record(latency);
+            let ts = &mut s.per_tenant[tenant];
+            ts.latency.record(latency);
+            ts.completed += 1;
+            s.completed += 1;
+            s.sched.complete(tenant, demand);
+        }
+        if e.metrics_enabled() {
+            e.metric_duration("stream.job_latency_s", latency);
+            e.metric_incr("stream.jobs_completed", 1);
+        }
+        pump(e, &ctx2);
+    });
+}
+
+/// Run one multi-tenant stream on one cluster preset.
+pub fn run_stream(preset: ClusterPreset, conf: &HadoopConf, cfg: &StreamConfig) -> StreamOutcome {
+    // Stream datasets are many small files (interactive queries), so
+    // cap the block size: a full-catalog job then spans enough splits
+    // to contend for the admission pool instead of fitting in one slot.
+    let mut conf = conf.clone();
+    conf.dfs_block_size = conf.dfs_block_size.min(8.0 * MIB);
+
+    let mut engine = Engine::from_config(
+        crate::sim::SimConfig::new(cfg.seed)
+            .with_solver(cfg.solver)
+            .with_solver_threads(cfg.solver_threads)
+            .with_obs(cfg.obs)
+            .with_sanitize(cfg.sanitize),
+    );
+
+    let heavy_zcfg = ZonesConfig { seed: cfg.seed, scale: cfg.scale, ..Default::default() };
+    let light_zcfg =
+        ZonesConfig { seed: cfg.seed, scale: cfg.scale * 0.4, ..Default::default() };
+    let (world, files) =
+        crate::zones::setup_world(&mut engine, preset, &conf, heavy_zcfg.catalog().input_bytes());
+    if cfg.faults.active() {
+        let stream = if cfg.fault_seed != 0 {
+            cfg.fault_seed
+        } else {
+            cfg.seed ^ 0xFA17_FA17_FA17_FA17
+        };
+        let sched = crate::faults::FaultSchedule::generate(&cfg.faults, stream, preset.node_count());
+        crate::faults::install(&mut engine, &world, &sched);
+    }
+    let cpu = preset.node_spec(conf.data_disk).cpu;
+    let slaves = preset.slave_count();
+    let capacity = slaves * conf.map_slots;
+
+    let tenant_set = TenantSet::generate(cfg.tenants);
+    let quotas: Vec<usize> = tenant_set
+        .tenants
+        .iter()
+        .map(|t| ((t.quota_frac * capacity as f64).floor() as usize).max(1))
+        .collect();
+
+    // The light class reads a prefix of the shared catalog (an
+    // interactive query over a smaller partition).
+    let n_light = ((files.len() as f64 * 0.4).ceil() as usize).clamp(1, files.len());
+    let light_files = files[..n_light].to_vec();
+    let demand_of = |n_files: usize| n_files.clamp(1, capacity);
+    let templates = vec![
+        ClassTemplate {
+            class: JobClass::Search,
+            zcfg: light_zcfg,
+            demand: demand_of(light_files.len()),
+            files: light_files,
+            n_reducers: 2,
+        },
+        ClassTemplate {
+            class: JobClass::Search,
+            zcfg: heavy_zcfg.clone(),
+            demand: demand_of(files.len()),
+            files: files.clone(),
+            n_reducers: slaves,
+        },
+        ClassTemplate {
+            class: JobClass::Stat,
+            zcfg: heavy_zcfg,
+            demand: demand_of(files.len()),
+            files,
+            n_reducers: slaves,
+        },
+    ];
+
+    let stream_seed =
+        if cfg.stream_seed != 0 { cfg.stream_seed } else { cfg.seed ^ STREAM_SEED_XOR };
+    let schedule = ArrivalSchedule::generate(&cfg.arrival, &tenant_set, stream_seed);
+    let submitted = schedule.arrivals.len();
+
+    let jobs: Vec<(usize, usize, f64)> = schedule
+        .arrivals
+        .iter()
+        .map(|a| (a.tenant, template_for(tenant_set.spec(a.tenant).scale_mult, a.class), a.at))
+        .collect();
+    let mut per_tenant: Vec<TenantStats> = (0..cfg.tenants).map(|_| TenantStats::default()).collect();
+    for a in &schedule.arrivals {
+        per_tenant[a.tenant].submitted += 1;
+    }
+
+    let ctx = Rc::new(Ctx {
+        world: world.clone(),
+        cpu,
+        conf: conf.clone(),
+        st: RefCell::new(St {
+            sched: StreamScheduler::new(cfg.sched, capacity, quotas),
+            jobs,
+            agg: Histogram::default(),
+            per_tenant,
+            completed: 0,
+        }),
+        templates,
+    });
+
+    for a in &schedule.arrivals {
+        let ctx2 = ctx.clone();
+        let (seq, tenant, at) = (a.seq, a.tenant, a.at);
+        let demand = ctx.templates[ctx.st.borrow().jobs[seq].1].demand;
+        engine.after(at, move |e| {
+            ctx2.st.borrow_mut().sched.enqueue(QueuedJob {
+                seq,
+                tenant,
+                demand,
+                enqueued_at: at,
+            });
+            if e.metrics_enabled() {
+                e.metric_incr("stream.jobs_submitted", 1);
+            }
+            pump(e, &ctx2);
+        });
+    }
+
+    engine.run();
+
+    let makespan = engine.now();
+    let usage = engine.usage_snapshot();
+    let (energy, obs) = {
+        let w = world.borrow();
+        let energy = crate::energy::measure(&engine, &w.cluster, makespan);
+        crate::energy::sanitize_energy(&engine, &w.cluster);
+        let obs = if engine.obs().any_enabled() {
+            let bottleneck = engine.obs().crit.enabled.then(|| {
+                crate::obs::bottleneck::analyze(
+                    &engine.obs().crit,
+                    &usage,
+                    preset.core_count(),
+                    engine.now(),
+                )
+            });
+            let job_latency = engine
+                .obs()
+                .metrics
+                .histogram("mapreduce.job_s")
+                .and_then(LatencySummary::from_histogram);
+            Some(crate::obs::ObsReport {
+                trace_json: engine.trace_enabled().then(|| engine.obs().export_trace("stream")),
+                metrics_json: (engine.metrics_enabled() || engine.obs().series.enabled())
+                    .then(|| engine.obs().metrics_json()),
+                cpu_families: crate::energy::family_breakdown(&engine, &w.cluster),
+                bottleneck,
+                job_latency,
+            })
+        } else {
+            None
+        };
+        (energy, obs)
+    };
+
+    let st = ctx.st.borrow();
+    assert_eq!(st.completed, submitted, "every submitted stream job must complete");
+    let tenants = tenant_set
+        .tenants
+        .iter()
+        .zip(&st.per_tenant)
+        .map(|(spec, ts)| TenantOutcome {
+            name: spec.name.clone(),
+            submitted: ts.submitted,
+            completed: ts.completed,
+            latency: LatencySummary::from_histogram(&ts.latency),
+        })
+        .collect();
+    let offered = submitted as f64 / (cfg.arrival.horizon_s / 60.0);
+    let goodput = st.completed as f64 / (makespan.max(cfg.arrival.horizon_s) / 60.0);
+    StreamOutcome {
+        submitted,
+        completed: st.completed,
+        offered_jobs_per_min: offered,
+        goodput_jobs_per_min: goodput,
+        makespan_s: makespan,
+        latency: LatencySummary::from_histogram(&st.agg),
+        tenants,
+        energy,
+        usage,
+        stats: engine.stats(),
+        faults: world.borrow().faults.stats.clone(),
+        obs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg(sched: SchedPolicy) -> StreamConfig {
+        StreamConfig {
+            arrival: ArrivalConfig { rate_per_min: 4.0, horizon_s: 120.0, ..Default::default() },
+            scale: 0.002,
+            sched,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn seed_stream_completes_every_job() {
+        let conf = HadoopConf::default();
+        let out = run_stream(ClusterPreset::Amdahl, &conf, &quick_cfg(SchedPolicy::Fifo));
+        assert!(out.submitted > 0, "horizon must produce arrivals");
+        assert_eq!(out.completed, out.submitted);
+        let lat = out.latency.expect("latency populated");
+        assert_eq!(lat.count as usize, out.submitted);
+        assert!(lat.p50_s > 0.0 && lat.p99_s >= lat.p50_s);
+        assert!(out.makespan_s >= 0.0 && out.goodput_jobs_per_min > 0.0);
+        assert_eq!(out.tenants.len(), 2);
+        assert_eq!(
+            out.tenants.iter().map(|t| t.submitted).sum::<usize>(),
+            out.submitted
+        );
+    }
+
+    #[test]
+    fn fair_and_fifo_share_the_same_arrivals() {
+        let conf = HadoopConf::default();
+        let a = run_stream(ClusterPreset::Amdahl, &conf, &quick_cfg(SchedPolicy::Fifo));
+        let b = run_stream(ClusterPreset::Amdahl, &conf, &quick_cfg(SchedPolicy::Fair));
+        assert_eq!(a.submitted, b.submitted, "policy must not change the arrival process");
+        assert_eq!(
+            a.tenants.iter().map(|t| t.submitted).collect::<Vec<_>>(),
+            b.tenants.iter().map(|t| t.submitted).collect::<Vec<_>>()
+        );
+    }
+}

@@ -1,0 +1,39 @@
+//! Multi-tenant workload streams: seeded job arrivals, admission
+//! scheduling, and completion-latency percentiles.
+//!
+//! Every other harness in this crate runs **one job on an idle
+//! cluster**; the paper's energy-efficiency claims, though, only matter
+//! under sustained traffic. This subsystem closes that gap:
+//!
+//! * [`arrival`] — a seeded Poisson process with a diurnal (triangle-
+//!   wave) rate envelope, drawn on a dedicated RNG stream keyed by the
+//!   scenario's stable id (the [`crate::faults::fault_stream_seed`]
+//!   discipline), pre-expanded into an [`ArrivalSchedule`] before the
+//!   event loop starts.
+//! * [`tenants`] — the deterministic tenant population: a light
+//!   interactive tenant plus heavy batch tenants mixing data-intensive
+//!   search and compute-intensive statistics jobs.
+//! * [`scheduler`] — the admission layer over the per-job JobTracker:
+//!   FIFO (head-of-line blocking) vs fair-share/capacity queues with
+//!   per-tenant slot quotas and preemption-free slot lending.
+//! * [`driver`] — replays the schedule on one [`crate::sim::Engine`],
+//!   runs admitted jobs concurrently through [`crate::mapreduce`], and
+//!   distills per-tenant p50/p95/p99 completion latency, offered load
+//!   vs goodput, and the usual energy/usage/fault accounting.
+//!
+//! Determinism: the arrival stream is a pure function of `(seed,
+//! scenario id)`; the admission policies are pure functions of the
+//! submission sequence; job latencies are sim-time — so stream output
+//! is byte-identical across `--threads`, `--solver-threads`, and both
+//! solver modes, and a build without stream axes emits byte-identical
+//! `BENCH_sweep.json`.
+
+pub mod arrival;
+pub mod driver;
+pub mod scheduler;
+pub mod tenants;
+
+pub use arrival::{arrival_stream_seed, Arrival, ArrivalConfig, ArrivalSchedule, STREAM_SEED_XOR};
+pub use driver::{run_stream, StreamConfig, StreamOutcome, TenantOutcome};
+pub use scheduler::{QueuedJob, SchedPolicy, StreamScheduler};
+pub use tenants::{JobClass, TenantSet, TenantSpec};

@@ -1,0 +1,176 @@
+//! Tenant population: who submits jobs, how often, how big, and what
+//! share of the cluster each tenant is entitled to.
+//!
+//! The generated population is a deterministic pure function of the
+//! tenant count: tenant 0 is the **light interactive** tenant (small
+//! data-intensive queries only), every other tenant is a **heavy batch**
+//! tenant (full-catalog scans, half of them the compute-intensive
+//! statistics class). This shape is what makes the FIFO-vs-fair
+//! comparison meaningful — under FIFO the light tenant's small jobs
+//! queue behind heavy full-catalog scans, while fair-share gives its
+//! queue a protected slot quota.
+
+use crate::sim::Rng;
+
+/// Which Zones application class a submitted job runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobClass {
+    /// Neighbor Searching — data-intensive scan (paper §2.1).
+    Search,
+    /// Neighbor Statistics step 1 — compute-intensive histogram (§2.2).
+    Stat,
+}
+
+impl JobClass {
+    /// Short key used in job names.
+    pub fn key(self) -> &'static str {
+        match self {
+            JobClass::Search => "search",
+            JobClass::Stat => "stat",
+        }
+    }
+}
+
+/// One tenant's workload shape and entitlement.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    /// Display name (`t0`, `t1`, …).
+    pub name: String,
+    /// Relative arrival share (weights are normalized across the set).
+    pub weight: f64,
+    /// Fraction of the admission slot pool this tenant is entitled to
+    /// under fair-share (normalized across the set).
+    pub quota_frac: f64,
+    /// Probability a submission is the compute-heavy [`JobClass::Stat`].
+    pub stat_frac: f64,
+    /// Catalog-scale multiplier relative to the stream's base scale
+    /// (< 1 = smaller interactive queries).
+    pub scale_mult: f64,
+}
+
+impl TenantSpec {
+    /// Draw this submission's job class on the tenant mix stream.
+    pub fn draw_class(&self, rng: &mut Rng) -> JobClass {
+        if rng.f64() < self.stat_frac {
+            JobClass::Stat
+        } else {
+            JobClass::Search
+        }
+    }
+}
+
+/// The whole tenant population for one stream run.
+#[derive(Debug, Clone)]
+pub struct TenantSet {
+    /// Tenants in index order; index is the tenant id everywhere.
+    pub tenants: Vec<TenantSpec>,
+}
+
+impl TenantSet {
+    /// Deterministically build the canonical `n`-tenant population:
+    /// tenant 0 light (weight 1, search-only, 40% scale), tenants 1..n
+    /// heavy (weight 2, half stat jobs, full scale). Quota fractions are
+    /// proportional to weight.
+    pub fn generate(n: usize) -> Self {
+        assert!(n >= 1, "a stream needs at least one tenant");
+        let mut tenants = Vec::with_capacity(n);
+        let total_weight = if n == 1 { 1.0 } else { 1.0 + 2.0 * (n - 1) as f64 };
+        for i in 0..n {
+            let (weight, stat_frac, scale_mult) =
+                if i == 0 { (1.0, 0.0, 0.4) } else { (2.0, 0.5, 1.0) };
+            tenants.push(TenantSpec {
+                name: format!("t{i}"),
+                weight,
+                quota_frac: weight / total_weight,
+                stat_frac,
+                scale_mult,
+            });
+        }
+        TenantSet { tenants }
+    }
+
+    /// Number of tenants.
+    pub fn len(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// True when the set is empty (never, for generated sets).
+    pub fn is_empty(&self) -> bool {
+        self.tenants.is_empty()
+    }
+
+    /// The spec of tenant `i`.
+    pub fn spec(&self, i: usize) -> &TenantSpec {
+        &self.tenants[i]
+    }
+
+    /// Weighted tenant draw on the mix stream.
+    pub fn draw_tenant(&self, rng: &mut Rng) -> usize {
+        let total: f64 = self.tenants.iter().map(|t| t.weight).sum();
+        let mut x = rng.f64() * total;
+        for (i, t) in self.tenants.iter().enumerate() {
+            x -= t.weight;
+            if x < 0.0 {
+                return i;
+            }
+        }
+        self.tenants.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic_and_shaped() {
+        let a = TenantSet::generate(3);
+        let b = TenantSet::generate(3);
+        assert_eq!(a.len(), 3);
+        for (x, y) in a.tenants.iter().zip(&b.tenants) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.weight, y.weight);
+            assert_eq!(x.quota_frac, y.quota_frac);
+        }
+        assert_eq!(a.spec(0).stat_frac, 0.0, "tenant 0 is search-only");
+        assert!(a.spec(0).scale_mult < a.spec(1).scale_mult);
+        let quota_sum: f64 = a.tenants.iter().map(|t| t.quota_frac).sum();
+        assert!((quota_sum - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tenant_draw_follows_weights() {
+        let set = TenantSet::generate(2); // weights 1:2
+        let mut rng = Rng::new(11);
+        let mut counts = [0usize; 2];
+        for _ in 0..3000 {
+            counts[set.draw_tenant(&mut rng)] += 1;
+        }
+        let light_share = counts[0] as f64 / 3000.0;
+        assert!((light_share - 1.0 / 3.0).abs() < 0.05, "light share {light_share}");
+    }
+
+    #[test]
+    fn class_draw_respects_stat_frac() {
+        let set = TenantSet::generate(2);
+        let mut rng = Rng::new(13);
+        assert_eq!(set.spec(0).draw_class(&mut rng), JobClass::Search);
+        let mut stats = 0;
+        for _ in 0..2000 {
+            if set.spec(1).draw_class(&mut rng) == JobClass::Stat {
+                stats += 1;
+            }
+        }
+        let frac = stats as f64 / 2000.0;
+        assert!((frac - 0.5).abs() < 0.05, "stat fraction {frac}");
+    }
+
+    #[test]
+    fn single_tenant_set_is_valid() {
+        let set = TenantSet::generate(1);
+        assert_eq!(set.len(), 1);
+        assert!((set.spec(0).quota_frac - 1.0).abs() < 1e-12);
+        let mut rng = Rng::new(1);
+        assert_eq!(set.draw_tenant(&mut rng), 0);
+    }
+}

@@ -17,6 +17,7 @@
 use crate::conf::{ClusterPreset, HadoopConf};
 use crate::faults::{BalancerConfig, DecommissionSpec, InjectionPlan, RackCrashSpec};
 use crate::hw::MIB;
+use crate::stream::SchedPolicy;
 
 /// Cluster hardware family (the paper's two testbeds).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -166,6 +167,18 @@ pub struct Scenario {
     pub balancer_threshold: Option<f64>,
     /// Speculative execution of straggling maps.
     pub speculation: bool,
+    /// Stream axis: mean job-arrival rate, jobs/min. `None` = the
+    /// classic single-job harness; `Some` turns the scenario into a
+    /// multi-tenant workload stream (only expanded for the `Search`
+    /// workload — the stream driver mixes search and stat jobs
+    /// internally).
+    pub arrival_per_min: Option<f64>,
+    /// Tenant count for stream scenarios (carried at its default of 2
+    /// when `arrival_per_min` is `None`).
+    pub stream_tenants: usize,
+    /// Admission policy for stream scenarios (FIFO when
+    /// `arrival_per_min` is `None`).
+    pub sched: SchedPolicy,
     /// Deterministic per-scenario seed derived from the grid's base seed
     /// and the scenario id.
     pub seed: u64,
@@ -229,6 +242,11 @@ impl Scenario {
     pub fn has_faults(&self) -> bool {
         self.fault_plan().active()
     }
+
+    /// Is this a multi-tenant workload-stream scenario?
+    pub fn is_stream(&self) -> bool {
+        self.arrival_per_min.is_some()
+    }
 }
 
 /// The declarative grid: one `Vec` per axis; `expand` takes the
@@ -274,6 +292,17 @@ pub struct SweepGrid {
     pub balancer: Vec<Option<f64>>,
     /// Speculative-execution settings.
     pub speculation: Vec<bool>,
+    /// Stream axis: mean job-arrival rates, jobs/min (None = classic
+    /// single-job scenarios). `Some` values only expand for the
+    /// `Search` workload — the stream driver mixes search and stat
+    /// jobs internally, so other workloads would re-simulate the same
+    /// stream under different ids.
+    pub arrival: Vec<Option<f64>>,
+    /// Tenant counts for stream scenarios (ignored next to `None`
+    /// arrival values).
+    pub stream_tenants: Vec<usize>,
+    /// Admission policies for stream scenarios.
+    pub sched: Vec<SchedPolicy>,
 }
 
 impl SweepGrid {
@@ -299,6 +328,9 @@ impl SweepGrid {
             rejoin: vec![None],
             balancer: vec![None],
             speculation: vec![false],
+            arrival: vec![None],
+            stream_tenants: vec![2],
+            sched: vec![SchedPolicy::Fifo],
         }
     }
 
@@ -313,6 +345,22 @@ impl SweepGrid {
                 self.speculation.iter().filter(|s| !**s).count()
             }
         }
+    }
+
+    /// Stream-axis combinations applicable to `w`: a `None` arrival
+    /// expands the classic single-job scenario exactly once; `Some`
+    /// arrivals only expand for `Search` (tenants × sched each) — the
+    /// stream driver mixes search and stat jobs internally, so other
+    /// workloads would re-simulate bit-identical streams.
+    fn stream_combo_count(&self, w: Workload) -> usize {
+        self.arrival
+            .iter()
+            .map(|a| match (a, w) {
+                (None, _) => 1,
+                (Some(_), Workload::Search) => self.stream_tenants.len() * self.sched.len(),
+                (Some(_), _) => 0,
+            })
+            .sum()
     }
 
     /// Rejoin axis values applicable next to the given death axes: a
@@ -370,8 +418,9 @@ impl SweepGrid {
 
     /// Number of scenarios `expand` will produce (axis counts multiply,
     /// except that dfsio workloads skip `speculation: true`, single-rack
-    /// entries skip the oversub / rack-crash variants, and `Some` rejoin
-    /// values skip combinations with no death axis).
+    /// entries skip the oversub / rack-crash variants, `Some` rejoin
+    /// values skip combinations with no death axis, and `Some` arrival
+    /// values only expand for the `Search` workload).
     pub fn len(&self) -> usize {
         let base = self.families.len()
             * self.nodes.len()
@@ -382,7 +431,11 @@ impl SweepGrid {
             * self.membus.len()
             * self.stragglers.len()
             * self.balancer.len();
-        base * self.workloads.iter().map(|&w| self.spec_values_for(w)).sum::<usize>()
+        base * self
+            .workloads
+            .iter()
+            .map(|&w| self.spec_values_for(w) * self.stream_combo_count(w))
+            .sum::<usize>()
     }
 
     /// True when `expand` would produce no scenarios.
@@ -470,47 +523,89 @@ impl SweepGrid {
                                                     {
                                                         continue;
                                                     }
-                                                    let mut id = scenario_id(
-                                                        family, nodes, cores, write_path,
-                                                        lzo, workload,
-                                                    );
-                                                    push_axis_suffixes(
-                                                        &mut id,
-                                                        &AxisSuffixes {
-                                                            racks,
-                                                            oversub,
-                                                            membus_bps,
-                                                            mtbf,
-                                                            straggler_frac,
-                                                            decommission_at,
-                                                            rejoin_delay,
-                                                            rack_crash_at,
-                                                            balancer_threshold,
-                                                            speculation,
-                                                        },
-                                                    );
-                                                    let seed =
-                                                        derive_seed(self.base_seed, &id);
-                                                    out.push(Scenario {
-                                                        id,
-                                                        family,
-                                                        nodes,
-                                                        cores,
-                                                        write_path,
-                                                        lzo,
-                                                        workload,
-                                                        racks,
-                                                        oversub,
-                                                        rack_crash_at,
-                                                        membus_bps,
-                                                        mtbf,
-                                                        straggler_frac,
-                                                        decommission_at,
-                                                        rejoin_delay,
-                                                        balancer_threshold,
-                                                        speculation,
-                                                        seed,
-                                                    });
+                                                    for &arrival_per_min in &self.arrival {
+                                                        // Stream axes only expand for
+                                                        // Search; their defaults carry
+                                                        // through classic scenarios (see
+                                                        // `stream_combo_count`).
+                                                        let (tenant_axis, sched_axis): (
+                                                            &[usize],
+                                                            &[SchedPolicy],
+                                                        ) = match (arrival_per_min, workload)
+                                                        {
+                                                            (None, _) => {
+                                                                (&[2], &[SchedPolicy::Fifo])
+                                                            }
+                                                            (Some(r), Workload::Search) => {
+                                                                assert!(
+                                                                    r > 0.0,
+                                                                    "arrival rate must be positive"
+                                                                );
+                                                                (
+                                                                    &self.stream_tenants,
+                                                                    &self.sched,
+                                                                )
+                                                            }
+                                                            (Some(_), _) => continue,
+                                                        };
+                                                        for &stream_tenants in tenant_axis {
+                                                            assert!(
+                                                                stream_tenants >= 1,
+                                                                "at least one tenant"
+                                                            );
+                                                            for &sched in sched_axis {
+                                                                let mut id = scenario_id(
+                                                                    family, nodes, cores,
+                                                                    write_path, lzo, workload,
+                                                                );
+                                                                push_axis_suffixes(
+                                                                    &mut id,
+                                                                    &AxisSuffixes {
+                                                                        racks,
+                                                                        oversub,
+                                                                        membus_bps,
+                                                                        mtbf,
+                                                                        straggler_frac,
+                                                                        decommission_at,
+                                                                        rejoin_delay,
+                                                                        rack_crash_at,
+                                                                        balancer_threshold,
+                                                                        speculation,
+                                                                        arrival_per_min,
+                                                                        stream_tenants,
+                                                                        sched,
+                                                                    },
+                                                                );
+                                                                let seed = derive_seed(
+                                                                    self.base_seed,
+                                                                    &id,
+                                                                );
+                                                                out.push(Scenario {
+                                                                    id,
+                                                                    family,
+                                                                    nodes,
+                                                                    cores,
+                                                                    write_path,
+                                                                    lzo,
+                                                                    workload,
+                                                                    racks,
+                                                                    oversub,
+                                                                    rack_crash_at,
+                                                                    membus_bps,
+                                                                    mtbf,
+                                                                    straggler_frac,
+                                                                    decommission_at,
+                                                                    rejoin_delay,
+                                                                    balancer_threshold,
+                                                                    speculation,
+                                                                    arrival_per_min,
+                                                                    stream_tenants,
+                                                                    sched,
+                                                                    seed,
+                                                                });
+                                                            }
+                                                        }
+                                                    }
                                                 }
                                             }
                                         }
@@ -577,6 +672,9 @@ struct AxisSuffixes {
     rack_crash_at: Option<f64>,
     balancer_threshold: Option<f64>,
     speculation: bool,
+    arrival_per_min: Option<f64>,
+    stream_tenants: usize,
+    sched: SchedPolicy,
 }
 
 /// Append the non-default topology/bus/fault/lifecycle axis suffixes to
@@ -613,6 +711,12 @@ fn push_axis_suffixes(id: &mut String, ax: &AxisSuffixes) {
     }
     if ax.speculation {
         id.push_str("-spec");
+    }
+    if let Some(r) = ax.arrival_per_min {
+        let _ = write!(id, "-arr{}-ten{}", fmt_axis(r), ax.stream_tenants);
+        if ax.sched == SchedPolicy::Fair {
+            id.push_str("-fair");
+        }
     }
 }
 
@@ -917,6 +1021,59 @@ mod tests {
         let a: Vec<String> = base.expand().into_iter().map(|s| s.id).collect();
         let b: Vec<String> = noisy.expand().into_iter().map(|s| s.id).collect();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn stream_axes_expand_only_for_search() {
+        let g = SweepGrid {
+            workloads: vec![Workload::Search, Workload::Stat, Workload::DfsioWrite],
+            write_paths: vec![WritePath::DirectIo],
+            lzo: vec![false],
+            arrival: vec![None, Some(6.0)],
+            stream_tenants: vec![2, 3],
+            sched: vec![SchedPolicy::Fifo, SchedPolicy::Fair],
+            ..SweepGrid::paper_default(7, 2, 2)
+        };
+        // Search: 1 (classic) + 2 tenants × 2 scheds; stat/dfsio: classic only.
+        assert_eq!(g.len(), (1 + 4) + 1 + 1);
+        let scs = g.expand();
+        assert_eq!(scs.len(), g.len());
+        let ids: Vec<&str> = scs.iter().map(|s| s.id.as_str()).collect();
+        assert!(ids.contains(&"amdahl-n9-c2-direct-nolzo-search"), "{ids:?}");
+        assert!(ids.contains(&"amdahl-n9-c2-direct-nolzo-search-arr6-ten2"));
+        assert!(ids.contains(&"amdahl-n9-c2-direct-nolzo-search-arr6-ten2-fair"));
+        assert!(ids.contains(&"amdahl-n9-c2-direct-nolzo-search-arr6-ten3-fair"));
+        assert!(!ids.iter().any(|i| i.contains("stat-arr") || i.contains("write-arr")));
+        let mut uniq = ids.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), scs.len(), "duplicate ids");
+        // Axis values round-trip into the scenario.
+        let st = scs.iter().find(|s| s.id.ends_with("-arr6-ten3-fair")).unwrap();
+        assert!(st.is_stream());
+        assert_eq!(st.arrival_per_min, Some(6.0));
+        assert_eq!(st.stream_tenants, 3);
+        assert_eq!(st.sched, SchedPolicy::Fair);
+        let classic = scs.iter().find(|s| s.id.ends_with("nolzo-search")).unwrap();
+        assert!(!classic.is_stream());
+    }
+
+    #[test]
+    fn stream_axes_at_defaults_keep_historical_ids() {
+        let base = SweepGrid::paper_default(42, 1, 2);
+        let noisy = SweepGrid {
+            stream_tenants: vec![5],
+            sched: vec![SchedPolicy::Fair],
+            ..SweepGrid::paper_default(42, 1, 2)
+        };
+        // With arrival = [None] the tenant/sched axes are inert.
+        assert_eq!(base.len(), noisy.len());
+        let a: Vec<String> = base.expand().into_iter().map(|s| s.id).collect();
+        let b: Vec<String> = noisy.expand().into_iter().map(|s| s.id).collect();
+        assert_eq!(a, b);
+        for id in &a {
+            assert!(!id.contains("-arr") && !id.contains("-ten"));
+        }
     }
 
     #[test]

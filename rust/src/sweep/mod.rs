@@ -26,12 +26,17 @@
 //! the degraded-mode axes (`mtbf`, `straggler_frac`, whole-rack crash
 //! times, speculation on/off) — faulted scenarios carry recovery
 //! metrics and pair with their fault-free twins in the degraded-mode
-//! table. At the default axis values ids, seeds, and
-//! `BENCH_sweep.json` bytes are unchanged.
+//! table. The **stream axes** (`--arrival` jobs/min × `--tenants` ×
+//! `--sched fifo,fair`) turn `search` scenarios into multi-tenant
+//! workload streams ([`crate::stream`]): records gain a `"stream"`
+//! block (offered load, goodput, latency percentiles per tenant) and
+//! [`SweepResults::stream_frontier`] renders the tenants ×
+//! offered-load frontier with its saturation knee. At the default axis
+//! values ids, seeds, and `BENCH_sweep.json` bytes are unchanged.
 //!
 //! Entry point: `amdahl-hadoop sweep --cores 1..8 [--baseline old.json]
 //! [--membus 1300,2600] [--racks 1,3] [--oversub 1,4] [--mtbf 600]
-//! [--stragglers 0.25] [--spec]`.
+//! [--stragglers 0.25] [--spec] [--arrival 2,6 --tenants 2 --sched fifo,fair]`.
 
 pub mod baseline;
 pub mod grid;
@@ -43,6 +48,7 @@ pub use grid::{parse_core_range, ClusterFamily, Scenario, SweepGrid, Workload, W
 pub use results::{
     aggregate_usage, analytic_balanced_cores, BottleneckFrontierRow, BusFrontierCell, ChurnRow,
     DegradedRow, FrontierAnalysis, FrontierRow, KindUtils, RackFrontierCell, ScenarioRecord,
-    SweepResults,
+    StreamFrontier, StreamFrontierRow, StreamRecord, StreamTenantRecord, SweepResults,
+    STREAM_KNEE_RATIO,
 };
 pub use runner::{run_scenario, run_sweep, SweepOptions, REFERENCE_SLAVES};

@@ -150,6 +150,48 @@ pub struct ScenarioRecord {
     /// captured only when the sweep armed obs metrics. None by default
     /// — same conditional-emission rule as `critpath`.
     pub job_latency: Option<crate::obs::LatencySummary>,
+    /// Multi-tenant stream outcome, present only for scenarios expanded
+    /// from the `--arrival` axis. None by default — then the `"stream"`
+    /// block is not serialized and a stream-less `BENCH_sweep.json`
+    /// keeps its exact bytes.
+    pub stream: Option<StreamRecord>,
+}
+
+/// Stream axes plus what the stream driver measured, attached to a
+/// [`ScenarioRecord`] only for `--arrival` scenarios.
+#[derive(Debug, Clone)]
+pub struct StreamRecord {
+    /// Mean arrival-rate axis, jobs/min.
+    pub arrival_per_min: f64,
+    /// Tenant-count axis.
+    pub tenants: usize,
+    /// Admission-policy key ("fifo" | "fair").
+    pub sched: &'static str,
+    /// Jobs submitted inside the arrival horizon.
+    pub submitted: usize,
+    /// Jobs that ran to completion.
+    pub completed: usize,
+    /// Offered load: submissions per minute of arrival horizon.
+    pub offered_jobs_per_min: f64,
+    /// Goodput: completions per minute of actual makespan.
+    pub goodput_jobs_per_min: f64,
+    /// Aggregate completion-latency percentiles.
+    pub latency: Option<crate::obs::LatencySummary>,
+    /// Per-tenant breakdown, tenant index order.
+    pub per_tenant: Vec<StreamTenantRecord>,
+}
+
+/// One tenant's slice of a [`StreamRecord`].
+#[derive(Debug, Clone)]
+pub struct StreamTenantRecord {
+    /// Tenant display name (`t0`, `t1`, …).
+    pub name: String,
+    /// Jobs this tenant submitted.
+    pub submitted: usize,
+    /// Jobs that completed.
+    pub completed: usize,
+    /// This tenant's completion-latency percentiles.
+    pub latency: Option<crate::obs::LatencySummary>,
 }
 
 impl ScenarioRecord {
@@ -206,6 +248,7 @@ impl ScenarioRecord {
             cpu_families: Vec::new(),
             critpath: None,
             job_latency: None,
+            stream: None,
         }
     }
 
@@ -251,6 +294,14 @@ impl ScenarioRecord {
         latency: Option<crate::obs::LatencySummary>,
     ) -> ScenarioRecord {
         self.job_latency = latency;
+        self
+    }
+
+    /// Attach the stream outcome of an `--arrival` scenario (the runner
+    /// calls this only for stream scenarios, so stream-less sweeps keep
+    /// their exact record bytes).
+    pub fn with_stream(mut self, stream: StreamRecord) -> ScenarioRecord {
+        self.stream = Some(stream);
         self
     }
 }
@@ -590,6 +641,42 @@ impl SweepResults {
             if let Some(l) = &r.job_latency {
                 s.push_str(&format!(", \"job_latency\": {}", l.to_json_inline()));
             }
+            // The stream block is present only for `--arrival` scenarios,
+            // so stream-less sweeps keep their exact bytes.
+            if let Some(st) = &r.stream {
+                s.push_str(&format!(
+                    ", \"stream\": {{\"arrival_per_min\": {}, \"tenants\": {}, \
+                     \"sched\": \"{}\", \"submitted\": {}, \"completed\": {}, \
+                     \"offered_jobs_per_min\": {}, \"goodput_jobs_per_min\": {}, \
+                     \"latency\": {}, \"per_tenant\": [",
+                    num(st.arrival_per_min),
+                    st.tenants,
+                    st.sched,
+                    st.submitted,
+                    st.completed,
+                    num(st.offered_jobs_per_min),
+                    num(st.goodput_jobs_per_min),
+                    st.latency
+                        .as_ref()
+                        .map(|l| l.to_json_inline())
+                        .unwrap_or_else(|| "null".into()),
+                ));
+                for (j, t) in st.per_tenant.iter().enumerate() {
+                    s.push_str(&format!(
+                        "{{\"name\": \"{}\", \"submitted\": {}, \"completed\": {}, \
+                         \"latency\": {}}}{}",
+                        esc(&t.name),
+                        t.submitted,
+                        t.completed,
+                        t.latency
+                            .as_ref()
+                            .map(|l| l.to_json_inline())
+                            .unwrap_or_else(|| "null".into()),
+                        if j + 1 == st.per_tenant.len() { "" } else { ", " }
+                    ));
+                }
+                s.push_str("]}");
+            }
             s.push_str(if i + 1 == self.records.len() { "}\n" } else { "},\n" });
         }
         s.push_str("  ],\n");
@@ -875,6 +962,12 @@ impl SweepResults {
     /// every fault/lifecycle axis at its default. None when the sweep
     /// did not expand one.
     pub fn find_twin(&self, r: &ScenarioRecord) -> Option<&ScenarioRecord> {
+        // Stream axes are part of a scenario's identity: a stream
+        // record's twin must run the same arrival/tenants/sched point
+        // (bit-exact on the rate, like the other float axes).
+        fn stream_axes(r: &ScenarioRecord) -> Option<(u64, usize, &'static str)> {
+            r.stream.as_ref().map(|s| (s.arrival_per_min.to_bits(), s.tenants, s.sched))
+        }
         self.records.iter().find(|b| {
             b.fault_axes.is_none()
                 && b.family == r.family
@@ -886,6 +979,7 @@ impl SweepResults {
                 && b.membus_bps == r.membus_bps
                 && b.racks == r.racks
                 && b.oversub == r.oversub
+                && stream_axes(b) == stream_axes(r)
         })
     }
 
@@ -956,6 +1050,93 @@ impl SweepResults {
         }
         rows
     }
+
+    /// The tenants × offered-load frontier: stream records grouped by
+    /// (cluster family, tenant count, admission policy), each group's
+    /// rows sorted by offered load, with the saturation knee — the
+    /// largest offered load the cluster still absorbs (goodput ≥
+    /// [`STREAM_KNEE_RATIO`] × offered). Empty unless the sweep expanded
+    /// the `--arrival` axis. Fault-free, flat-topology cut, like the
+    /// core frontier.
+    pub fn stream_frontier(&self) -> Vec<StreamFrontier> {
+        use std::collections::BTreeMap;
+        let mut groups: BTreeMap<(&'static str, usize, &'static str), Vec<StreamFrontierRow>> =
+            BTreeMap::new();
+        for r in &self.records {
+            let Some(st) = &r.stream else { continue };
+            if r.fault_axes.is_some() || r.racks != 1 || r.membus_bps.is_some() {
+                continue;
+            }
+            groups.entry((r.family, st.tenants, st.sched)).or_default().push(
+                StreamFrontierRow {
+                    id: r.id.clone(),
+                    cores: r.cores,
+                    arrival_per_min: st.arrival_per_min,
+                    offered_jobs_per_min: st.offered_jobs_per_min,
+                    goodput_jobs_per_min: st.goodput_jobs_per_min,
+                    latency: st.latency.clone(),
+                },
+            );
+        }
+        groups
+            .into_iter()
+            .map(|((family, tenants, sched), mut rows)| {
+                rows.sort_by(|a, b| {
+                    a.offered_jobs_per_min
+                        .total_cmp(&b.offered_jobs_per_min)
+                        .then(a.cores.cmp(&b.cores))
+                });
+                let knee_offered = rows
+                    .iter()
+                    .filter(|r| {
+                        r.goodput_jobs_per_min
+                            >= STREAM_KNEE_RATIO * r.offered_jobs_per_min
+                    })
+                    .map(|r| r.offered_jobs_per_min)
+                    .last();
+                StreamFrontier { family, tenants, sched, rows, knee_offered }
+            })
+            .collect()
+    }
+}
+
+/// Goodput-to-offered ratio below which a stream point counts as past
+/// the saturation knee (the queue grows faster than it drains).
+pub const STREAM_KNEE_RATIO: f64 = 0.75;
+
+/// One (family, tenants, sched) group of the tenants × offered-load
+/// frontier ([`SweepResults::stream_frontier`]).
+#[derive(Debug, Clone)]
+pub struct StreamFrontier {
+    /// Cluster family key.
+    pub family: &'static str,
+    /// Tenant-count axis of this group.
+    pub tenants: usize,
+    /// Admission-policy key of this group.
+    pub sched: &'static str,
+    /// One row per swept arrival rate, sorted by offered load.
+    pub rows: Vec<StreamFrontierRow>,
+    /// The saturation knee: the largest swept offered load with goodput
+    /// ≥ [`STREAM_KNEE_RATIO`] × offered (None when every point is past
+    /// the knee).
+    pub knee_offered: Option<f64>,
+}
+
+/// One offered-load point of a [`StreamFrontier`].
+#[derive(Debug, Clone)]
+pub struct StreamFrontierRow {
+    /// Stable scenario id.
+    pub id: String,
+    /// Cores per blade the point ran with.
+    pub cores: usize,
+    /// Arrival-rate axis, jobs/min.
+    pub arrival_per_min: f64,
+    /// Offered load, jobs/min.
+    pub offered_jobs_per_min: f64,
+    /// Goodput, jobs/min of makespan.
+    pub goodput_jobs_per_min: f64,
+    /// Aggregate completion-latency percentiles at this point.
+    pub latency: Option<crate::obs::LatencySummary>,
 }
 
 /// One row of the churn-vs-throughput frontier
@@ -1070,5 +1251,60 @@ mod tests {
     fn esc_passthrough_and_quotes() {
         assert_eq!(esc("amdahl-n9-c4"), "amdahl-n9-c4");
         assert_eq!(esc("a\"b"), "a\\\"b");
+    }
+
+    #[test]
+    fn stream_frontier_groups_and_finds_the_knee() {
+        use super::super::grid::{SweepGrid, Workload, WritePath};
+        use crate::stream::SchedPolicy;
+        let g = SweepGrid {
+            workloads: vec![Workload::Search],
+            write_paths: vec![WritePath::DirectIo],
+            lzo: vec![false],
+            arrival: vec![Some(2.0), Some(6.0)],
+            sched: vec![SchedPolicy::Fifo],
+            ..SweepGrid::paper_default(42, 2, 2)
+        };
+        let records: Vec<ScenarioRecord> = g
+            .expand()
+            .iter()
+            .map(|sc| {
+                let rate = sc.arrival_per_min.expect("all-stream grid");
+                ScenarioRecord::new(sc, 100.0, 1.0, 1.0, &[], EngineStats::default())
+                    .with_stream(StreamRecord {
+                        arrival_per_min: rate,
+                        tenants: sc.stream_tenants,
+                        sched: sc.sched.key(),
+                        submitted: 10,
+                        completed: 10,
+                        offered_jobs_per_min: rate,
+                        // The high-rate point collapses past the knee.
+                        goodput_jobs_per_min: if rate > 4.0 { rate * 0.5 } else { rate },
+                        latency: None,
+                        per_tenant: Vec::new(),
+                    })
+            })
+            .collect();
+        let res = SweepResults {
+            base_seed: 42,
+            solver: SolverMode::Incremental,
+            perf_wallclock: false,
+            records,
+        };
+        let fr = res.stream_frontier();
+        assert_eq!(fr.len(), 1, "one (family, tenants, sched) group");
+        assert_eq!(fr[0].family, "amdahl");
+        assert_eq!(fr[0].tenants, 2);
+        assert_eq!(fr[0].sched, "fifo");
+        assert_eq!(fr[0].rows.len(), 2);
+        assert!(fr[0].rows[0].offered_jobs_per_min < fr[0].rows[1].offered_jobs_per_min);
+        assert_eq!(fr[0].knee_offered, Some(2.0), "6 jobs/min is past the knee");
+        // The stream block serializes, and twin matching respects the
+        // stream axes (a rate-6 record's twin is itself, never rate-2).
+        let json = res.to_json();
+        assert!(json.contains("\"stream\": {\"arrival_per_min\": 2.000000"));
+        assert!(json.contains("\"goodput_jobs_per_min\": 3.000000"));
+        let twin = res.find_twin(&res.records[1]).expect("self-twin");
+        assert_eq!(twin.id, res.records[1].id);
     }
 }

@@ -13,14 +13,15 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::thread;
 
-use crate::faults::{fault_stream_seed, FaultSchedule};
+use crate::faults::{fault_stream_seed, FaultSchedule, InjectionPlan};
 use crate::hdfs::testdfsio;
 use crate::hw::MIB;
 use crate::sim::{SimConfig, SolverMode};
+use crate::stream::{arrival_stream_seed, run_stream, ArrivalConfig, StreamConfig};
 use crate::zones::{run_app, App, ZonesConfig};
 
 use super::grid::{Scenario, SweepGrid, Workload};
-use super::results::{ScenarioRecord, SweepResults};
+use super::results::{ScenarioRecord, StreamRecord, StreamTenantRecord, SweepResults};
 
 /// Slave count the workload knobs are calibrated for (the paper's
 /// nine-blade testbed: one master + eight slaves). With
@@ -98,6 +99,12 @@ pub struct SweepOptions {
     /// under the `simsan` cargo feature); any violations surface in the
     /// perf section's `san_violations` counter.
     pub sanitize: crate::sim::Sanitize,
+    /// Arrival-process template for stream scenarios (the `--arrival`
+    /// axis): each scenario's rate axis overrides `rate_per_min`;
+    /// everything else (horizon, diurnal envelope, max jobs) is held
+    /// constant across the sweep — like `scale`, not a grid axis, so
+    /// stream scenarios stay comparable.
+    pub stream_arrival: ArrivalConfig,
     /// Emit wall-clock solver time in the perf section
     /// ([`SweepResults::perf_wallclock`]). Off by default.
     pub perf_wallclock: bool,
@@ -120,6 +127,7 @@ impl Default for SweepOptions {
             obs: crate::sim::ObsSpec::default(),
             trace_dir: None,
             sanitize: crate::sim::Sanitize::default(),
+            stream_arrival: ArrivalConfig::default(),
             perf_wallclock: false,
             progress: false,
         }
@@ -233,6 +241,12 @@ pub fn run_scenario(sc: &Scenario, opts: &SweepOptions) -> ScenarioRecord {
         b.bandwidth_bps = opts.balancer_bandwidth_bps;
     }
     let fault_seed = fault_stream_seed(sc.seed, &sc.id);
+    // `--arrival` scenarios run the multi-tenant stream driver instead
+    // of a single job; the driver derives its own FaultSchedule from
+    // the plan + fault_seed.
+    if let Some(rate) = sc.arrival_per_min {
+        return run_stream_scenario(sc, opts, &conf, plan, fault_seed, rate);
+    }
     let schedule = if plan.active() {
         FaultSchedule::generate(&plan, fault_seed, preset.node_count())
     } else {
@@ -338,6 +352,79 @@ pub fn run_scenario(sc: &Scenario, opts: &SweepOptions) -> ScenarioRecord {
     }
 }
 
+/// Run one `--arrival` scenario through the multi-tenant stream driver.
+///
+/// The arrival RNG stream is keyed by the scenario's **stable id**
+/// ([`arrival_stream_seed`]), same discipline as the fault stream, so a
+/// stream sweep is as thread-count-independent as any other. The record
+/// keeps `bytes_moved` at zero — stream throughput is jobs/min, carried
+/// in the attached [`StreamRecord`], not MB/s.
+fn run_stream_scenario(
+    sc: &Scenario,
+    opts: &SweepOptions,
+    conf: &crate::conf::HadoopConf,
+    plan: InjectionPlan,
+    fault_seed: u64,
+    rate: f64,
+) -> ScenarioRecord {
+    let preset = sc.preset();
+    let slaves = preset.slave_count() as f64;
+    let scale = if opts.scale_with_nodes {
+        opts.scale * slaves / REFERENCE_SLAVES
+    } else {
+        opts.scale
+    };
+    let cfg = StreamConfig {
+        seed: sc.seed,
+        arrival: ArrivalConfig { rate_per_min: rate, ..opts.stream_arrival.clone() },
+        tenants: sc.stream_tenants,
+        sched: sc.sched,
+        scale,
+        stream_seed: arrival_stream_seed(sc.seed, &sc.id),
+        solver: opts.solver,
+        solver_threads: opts.solver_threads,
+        faults: plan,
+        fault_seed,
+        obs: opts.obs,
+        sanitize: opts.sanitize,
+    };
+    let out = run_stream(preset, conf, &cfg);
+    let rec = ScenarioRecord::new(
+        sc,
+        out.makespan_s,
+        0.0,
+        out.energy.total_joules,
+        &out.usage,
+        out.stats,
+    );
+    let stream = StreamRecord {
+        arrival_per_min: rate,
+        tenants: sc.stream_tenants,
+        sched: sc.sched.key(),
+        submitted: out.submitted,
+        completed: out.completed,
+        offered_jobs_per_min: out.offered_jobs_per_min,
+        goodput_jobs_per_min: out.goodput_jobs_per_min,
+        latency: out.latency.clone(),
+        per_tenant: out
+            .tenants
+            .iter()
+            .map(|t| StreamTenantRecord {
+                name: t.name.clone(),
+                submitted: t.submitted,
+                completed: t.completed,
+                latency: t.latency.clone(),
+            })
+            .collect(),
+    };
+    let rec = if sc.has_faults() {
+        rec.with_faults(out.faults, out.energy.recovery_joules, out.energy.balance_joules)
+    } else {
+        rec
+    };
+    attach_obs(rec, out.obs, opts).with_stream(stream)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -431,6 +518,40 @@ mod tests {
             );
         }
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stream_scenarios_attach_stream_records() {
+        let g = SweepGrid {
+            workloads: vec![Workload::Search],
+            write_paths: vec![WritePath::DirectIo],
+            lzo: vec![false],
+            arrival: vec![Some(8.0)],
+            sched: vec![crate::stream::SchedPolicy::Fifo, crate::stream::SchedPolicy::Fair],
+            ..SweepGrid::paper_default(42, 1, 1)
+        };
+        let opts = SweepOptions {
+            threads: 1,
+            stream_arrival: ArrivalConfig { horizon_s: 60.0, ..ArrivalConfig::default() },
+            ..SweepOptions::default()
+        };
+        let r = run_sweep(&g, &opts);
+        assert_eq!(r.records.len(), 2);
+        for rec in &r.records {
+            let st = rec.stream.as_ref().expect("stream block attached");
+            assert!(st.submitted > 0, "{}: horizon produced no arrivals", rec.id);
+            assert_eq!(st.completed, st.submitted);
+            assert!(st.latency.is_some());
+            assert_eq!(st.per_tenant.len(), 2);
+            assert!(st.goodput_jobs_per_min > 0.0);
+        }
+        let fr = r.stream_frontier();
+        assert_eq!(fr.len(), 2, "one group per admission policy");
+        let json = r.to_json();
+        assert!(json.contains("\"stream\": {\"arrival_per_min\": 8.000000"));
+        // Stream sweeps honor the thread-count determinism contract.
+        let r4 = run_sweep(&g, &SweepOptions { threads: 4, ..opts });
+        assert_eq!(json, r4.to_json());
     }
 
     #[test]

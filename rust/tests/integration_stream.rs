@@ -1,0 +1,187 @@
+//! End-to-end pins for the multi-tenant workload-stream subsystem:
+//! seeded arrivals through admission scheduling through concurrent
+//! MapReduce jobs, per-tenant latency percentiles, the fair-share
+//! benefit for the light tenant, and the byte-determinism contract
+//! across sweep worker threads, solver threads, and solver modes.
+
+use amdahl_hadoop::conf::{ClusterPreset, HadoopConf};
+use amdahl_hadoop::obs::LatencySummary;
+use amdahl_hadoop::sim::{ObsSpec, SolverMode};
+use amdahl_hadoop::stream::{run_stream, ArrivalConfig, SchedPolicy, StreamConfig, StreamOutcome};
+
+fn lat_canon(l: &Option<LatencySummary>) -> String {
+    match l {
+        None => "-".into(),
+        Some(l) => format!(
+            "n={} mean={:.6} p50={:.6} p95={:.6} p99={:.6}",
+            l.count, l.mean_s, l.p50_s, l.p95_s, l.p99_s
+        ),
+    }
+}
+
+/// Canonical text form of everything observable in a stream outcome.
+/// Any nondeterminism across thread counts or solver modes shows up as
+/// a byte diff here.
+fn canon(out: &StreamOutcome) -> String {
+    let mut s = format!(
+        "submitted={} completed={} offered={:.6} goodput={:.6} makespan={:.6} joules={:.6}\n\
+         all: {}\n",
+        out.submitted,
+        out.completed,
+        out.offered_jobs_per_min,
+        out.goodput_jobs_per_min,
+        out.makespan_s,
+        out.energy.total_joules,
+        lat_canon(&out.latency)
+    );
+    for t in &out.tenants {
+        s.push_str(&format!(
+            "{}: submitted={} completed={} {}\n",
+            t.name, t.submitted, t.completed, lat_canon(&t.latency)
+        ));
+    }
+    s
+}
+
+/// A short light stream: enough arrivals to interleave jobs, small
+/// enough to run six times in the determinism matrix.
+fn light_cfg(sched: SchedPolicy) -> StreamConfig {
+    StreamConfig {
+        arrival: ArrivalConfig { rate_per_min: 4.0, horizon_s: 120.0, ..Default::default() },
+        scale: 0.002,
+        sched,
+        ..Default::default()
+    }
+}
+
+/// A saturating stream: heavy-class jobs demand most of the admission
+/// pool (13 of 16 slots at the default 0.4% scale), so queues form and
+/// the two policies genuinely reorder admissions.
+fn saturating_cfg(sched: SchedPolicy) -> StreamConfig {
+    StreamConfig {
+        arrival: ArrivalConfig { rate_per_min: 10.0, horizon_s: 180.0, ..Default::default() },
+        sched,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn two_tenant_stream_completes_and_reports_percentiles() {
+    let conf = HadoopConf::default();
+    let cfg = StreamConfig {
+        obs: ObsSpec { metrics: true, ..Default::default() },
+        ..light_cfg(SchedPolicy::Fifo)
+    };
+    let out = run_stream(ClusterPreset::Amdahl, &conf, &cfg);
+    assert!(out.submitted > 0, "the horizon must produce arrivals");
+    assert_eq!(out.completed, out.submitted, "every submitted job must complete");
+
+    let lat = out.latency.as_ref().expect("aggregate percentiles populated");
+    assert_eq!(lat.count as usize, out.completed);
+    assert!(lat.p50_s > 0.0);
+    assert!(lat.p95_s >= lat.p50_s && lat.p99_s >= lat.p95_s);
+
+    assert_eq!(out.tenants.len(), 2);
+    assert_eq!(out.tenants.iter().map(|t| t.submitted).sum::<usize>(), out.submitted);
+    for t in &out.tenants {
+        assert_eq!(t.completed, t.submitted, "{} must finish its jobs", t.name);
+        match &t.latency {
+            Some(l) => assert_eq!(l.count as usize, t.completed),
+            None => assert_eq!(t.submitted, 0, "{} ran jobs but has no percentiles", t.name),
+        }
+    }
+
+    // Metrics were armed, so the registry carries the stream families.
+    let obs = out.obs.as_ref().expect("obs report present when metrics armed");
+    let mj = obs.metrics_json.as_ref().expect("metrics json emitted");
+    assert!(mj.contains("stream.job_latency_s"));
+    assert!(mj.contains("stream.jobs_submitted"));
+
+    // The human-facing render names every tenant plus the aggregate.
+    let txt = amdahl_hadoop::report::render_stream_outcome(&out);
+    assert!(txt.contains("multi-tenant stream"));
+    assert!(txt.contains("t0") && txt.contains("t1") && txt.contains("all"));
+}
+
+#[test]
+fn fair_share_beats_fifo_on_light_tenant_p99() {
+    let conf = HadoopConf::default();
+    let fifo = run_stream(ClusterPreset::Amdahl, &conf, &saturating_cfg(SchedPolicy::Fifo));
+    let fair = run_stream(ClusterPreset::Amdahl, &conf, &saturating_cfg(SchedPolicy::Fair));
+
+    // The admission policy must not change the arrival process.
+    assert_eq!(fifo.submitted, fair.submitted);
+    assert_eq!(
+        fifo.tenants.iter().map(|t| t.submitted).collect::<Vec<_>>(),
+        fair.tenants.iter().map(|t| t.submitted).collect::<Vec<_>>()
+    );
+
+    // Tenant 0 is the light interactive tenant: under FIFO its small
+    // jobs queue behind the heavy tenant's full-catalog backlog, under
+    // fair-share they are admitted round-robin inside their quota.
+    let fifo_light = fifo.tenants[0].latency.as_ref().expect("light tenant ran jobs");
+    let fair_light = fair.tenants[0].latency.as_ref().expect("light tenant ran jobs");
+    assert!(
+        fair_light.p99_s < fifo_light.p99_s,
+        "fair-share must shield the light tenant's tail under saturation \
+         (fair p99 {:.2}s vs fifo p99 {:.2}s)",
+        fair_light.p99_s,
+        fifo_light.p99_s
+    );
+    assert!(
+        fair_light.mean_s <= fifo_light.mean_s,
+        "fair-share must not worsen the light tenant's mean latency \
+         (fair {:.2}s vs fifo {:.2}s)",
+        fair_light.mean_s,
+        fifo_light.mean_s
+    );
+}
+
+#[test]
+fn stream_bytes_are_invariant_across_solver_threads_and_modes() {
+    let conf = HadoopConf::default();
+    let cfg = |solver: SolverMode, solver_threads: usize| StreamConfig {
+        solver,
+        solver_threads,
+        ..light_cfg(SchedPolicy::Fair)
+    };
+    let reference = canon(&run_stream(
+        ClusterPreset::Amdahl,
+        &conf,
+        &cfg(SolverMode::Incremental, 1),
+    ));
+    assert!(reference.contains("t0:"), "canonical form lists tenants");
+    for solver in [SolverMode::Incremental, SolverMode::WholeSet] {
+        for solver_threads in [1usize, 2, 4] {
+            let got = canon(&run_stream(ClusterPreset::Amdahl, &conf, &cfg(solver, solver_threads)));
+            assert_eq!(
+                got, reference,
+                "stream outcome must be byte-identical for {solver:?} x {solver_threads} \
+                 solver threads"
+            );
+        }
+    }
+}
+
+#[test]
+fn stream_sweep_json_is_invariant_across_worker_threads() {
+    use amdahl_hadoop::sweep::{run_sweep, SweepGrid, SweepOptions, Workload, WritePath};
+    let mut g = SweepGrid::paper_default(42, 1, 1);
+    g.workloads = vec![Workload::Search];
+    g.write_paths = vec![WritePath::DirectIo];
+    g.lzo = vec![false];
+    g.arrival = vec![None, Some(6.0)];
+    g.sched = vec![SchedPolicy::Fifo, SchedPolicy::Fair];
+    let opts = |threads: usize| SweepOptions {
+        threads,
+        progress: false,
+        stream_arrival: ArrivalConfig { horizon_s: 90.0, ..Default::default() },
+        ..Default::default()
+    };
+    let j1 = run_sweep(&g, &opts(1)).to_json();
+    let j2 = run_sweep(&g, &opts(2)).to_json();
+    let j4 = run_sweep(&g, &opts(4)).to_json();
+    assert_eq!(j1, j2, "sweep bytes must not depend on worker thread count");
+    assert_eq!(j1, j4, "sweep bytes must not depend on worker thread count");
+    assert!(j1.contains("\"stream\": {"), "stream scenarios carry stream records");
+}

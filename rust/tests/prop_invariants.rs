@@ -191,3 +191,178 @@ fn hdfs_metadata_consistent_random_configs() {
         }
     }
 }
+
+/// Stream-scheduler safety: the pool is never overcommitted, and under
+/// fair-share admission no tenant exceeds its quota while every other
+/// tenant still has pending work (lending is only legal against idle
+/// queues). After each admission fixed point, no admissible head job is
+/// left waiting — the no-starvation-with-free-slots property.
+#[test]
+fn stream_scheduler_quota_and_pool_invariants_random() {
+    use amdahl_hadoop::stream::{QueuedJob, SchedPolicy, StreamScheduler};
+    use std::collections::VecDeque;
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(seed ^ 0x5EED);
+        let policy = if seed % 2 == 0 { SchedPolicy::Fair } else { SchedPolicy::Fifo };
+        let capacity = 4 + rng.below(29) as usize;
+        let n_tenants = 2 + rng.below(4) as usize;
+        let quotas: Vec<usize> =
+            (0..n_tenants).map(|_| 1 + rng.below(capacity as u64 / 2 + 1) as usize).collect();
+        let mut s = StreamScheduler::new(policy, capacity, quotas);
+        let mut seq = 0usize;
+        let mut mirror: VecDeque<QueuedJob> = VecDeque::new(); // FIFO arrival order
+        let mut running: VecDeque<QueuedJob> = VecDeque::new();
+        for _step in 0..60 {
+            // Top every queue up past the pool size: one admission batch
+            // can never drain a queue, so every admission this run is
+            // made under contention and the quota rule must bind.
+            for t in 0..n_tenants {
+                while s.pending(t) <= capacity {
+                    let job = QueuedJob {
+                        seq,
+                        tenant: t,
+                        demand: 1 + rng.below(capacity as u64) as usize,
+                        enqueued_at: 0.0,
+                    };
+                    s.enqueue(job);
+                    mirror.push_back(job);
+                    seq += 1;
+                }
+            }
+            for j in s.admit() {
+                running.push_back(j);
+            }
+            let used: usize = (0..n_tenants).map(|t| s.running_slots(t)).sum();
+            assert!(used <= s.capacity(), "seed {seed}: pool overcommitted");
+            assert_eq!(s.free_slots(), s.capacity() - used);
+            match policy {
+                SchedPolicy::Fair => {
+                    // Under contention a tenant can only exceed its
+                    // quota through the single idle-pool liveness
+                    // admission — never two tenants at once.
+                    let over: Vec<usize> =
+                        (0..n_tenants).filter(|&t| s.running_slots(t) > s.quota(t)).collect();
+                    assert!(
+                        over.len() <= 1,
+                        "seed {seed}: tenants {over:?} over quota with peers pending"
+                    );
+                    for t in 0..n_tenants {
+                        // Fixed point: a head that fits both pool and
+                        // quota must not be left waiting.
+                        if let Some(d) = s.head_demand(t) {
+                            let fits = d <= s.free_slots()
+                                && s.running_slots(t) + d <= s.quota(t);
+                            assert!(!fits, "seed {seed}: admissible head starved");
+                        }
+                    }
+                }
+                SchedPolicy::Fifo => {
+                    mirror.retain(|j| !running.iter().any(|r| r.seq == j.seq));
+                    if let Some(head) = mirror.front() {
+                        assert!(
+                            head.demand.min(capacity) > s.free_slots(),
+                            "seed {seed}: FIFO head fits but was not admitted"
+                        );
+                    }
+                }
+            }
+            // Drain roughly half the running set to churn the pool.
+            for _ in 0..(running.len() / 2) {
+                let j = running.pop_front().expect("non-empty");
+                s.complete(j.tenant, j.demand);
+            }
+        }
+    }
+}
+
+/// Stream-scheduler liveness: any finite workload fully drains under
+/// both policies — admissions plus completions always make progress,
+/// so no job is starved forever and the slot ledger returns to empty.
+#[test]
+fn stream_scheduler_drains_any_finite_workload() {
+    use amdahl_hadoop::stream::{QueuedJob, SchedPolicy, StreamScheduler};
+    use std::collections::VecDeque;
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(seed ^ 0xD7A1);
+        for policy in [SchedPolicy::Fifo, SchedPolicy::Fair] {
+            let capacity = 2 + rng.below(20) as usize;
+            let n_tenants = 1 + rng.below(5) as usize;
+            let quotas: Vec<usize> =
+                (0..n_tenants).map(|_| rng.below(capacity as u64 + 1) as usize).collect();
+            let mut s = StreamScheduler::new(policy, capacity, quotas);
+            let n_jobs = 1 + rng.below(60) as usize;
+            for seq in 0..n_jobs {
+                s.enqueue(QueuedJob {
+                    seq,
+                    tenant: rng.below(n_tenants as u64) as usize,
+                    demand: 1 + rng.below(capacity as u64 + 4) as usize,
+                    enqueued_at: 0.0,
+                });
+            }
+            let mut running: VecDeque<QueuedJob> = VecDeque::new();
+            let mut guard = 0;
+            while s.completed() < s.submitted() {
+                guard += 1;
+                assert!(guard < 10_000, "seed {seed} {policy:?}: no convergence");
+                for j in s.admit() {
+                    running.push_back(j);
+                }
+                let j = running
+                    .pop_front()
+                    .unwrap_or_else(|| panic!("seed {seed} {policy:?}: deadlock"));
+                s.complete(j.tenant, j.demand);
+            }
+            assert_eq!(s.pending_total(), 0);
+            assert_eq!(s.free_slots(), s.capacity(), "slot ledger must drain to empty");
+        }
+    }
+}
+
+/// Arrival-stream invariant: the schedule is a pure function of the
+/// `(base seed, scenario stable id)` pair — regenerating with the same
+/// pair reproduces every byte, while different ids or seeds decorrelate
+/// — and every draw respects the tenant population and horizon.
+#[test]
+fn stream_arrivals_reproducible_from_seed_and_id() {
+    use amdahl_hadoop::stream::{
+        arrival_stream_seed, ArrivalConfig, ArrivalSchedule, TenantSet,
+    };
+    let ids = [
+        "amdahl-n9-c2-direct-nolzo-search-arr6-ten2",
+        "amdahl-n9-c4-buffered-lzo-search-arr12-ten3-fair",
+        "occ-n9-c1-direct-nolzo-search-arr2-ten2",
+    ];
+    for seed in [7u64, 42, 12345] {
+        for id in ids {
+            for n in [2usize, 3, 5] {
+                let cfg =
+                    ArrivalConfig { rate_per_min: 9.0, horizon_s: 240.0, ..Default::default() };
+                let a = ArrivalSchedule::generate(
+                    &cfg,
+                    &TenantSet::generate(n),
+                    arrival_stream_seed(seed, id),
+                );
+                let b = ArrivalSchedule::generate(
+                    &cfg,
+                    &TenantSet::generate(n),
+                    arrival_stream_seed(seed, id),
+                );
+                assert_eq!(a.arrivals, b.arrivals, "same (seed, id) must reproduce");
+                for w in a.arrivals.windows(2) {
+                    assert!(w[0].at <= w[1].at);
+                }
+                for arr in &a.arrivals {
+                    assert!(arr.tenant < n && arr.at >= 0.0 && arr.at < cfg.horizon_s);
+                }
+            }
+        }
+    }
+    let cfg = ArrivalConfig::default();
+    let ts = TenantSet::generate(2);
+    let base = ArrivalSchedule::generate(&cfg, &ts, arrival_stream_seed(42, ids[0]));
+    assert!(!base.arrivals.is_empty());
+    let other_id = ArrivalSchedule::generate(&cfg, &ts, arrival_stream_seed(42, ids[1]));
+    assert_ne!(base.arrivals, other_id.arrivals, "ids must decorrelate");
+    let other_seed = ArrivalSchedule::generate(&cfg, &ts, arrival_stream_seed(43, ids[0]));
+    assert_ne!(base.arrivals, other_seed.arrivals, "seeds must decorrelate");
+}
